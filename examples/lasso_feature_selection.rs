@@ -1,0 +1,66 @@
+//! Feature selection with Lasso on wide, correlated data (the paper's
+//! Dogs-vs-Cats scenario: CNN-extracted features, #features >> #samples).
+//!
+//! ```bash
+//! cargo run --release --example lasso_feature_selection
+//! ```
+//!
+//! Demonstrates the workflow the paper's intro motivates: a planted
+//! sparse model must be recovered from many correlated columns, and
+//! duality-gap selection concentrates the update budget on the relevant
+//! features — we report support recovery and compare against random
+//! selection at an equal epoch budget.
+
+use hthc::coordinator::{HthcConfig, HthcSolver, Selection};
+use hthc::data::generator::{generate, DatasetKind, Family};
+use hthc::glm::Lasso;
+use hthc::memory::TierSim;
+
+fn f1(alpha: &[f32], truth: &[f32]) -> (f64, usize) {
+    let got: Vec<bool> = alpha.iter().map(|&a| a != 0.0).collect();
+    let want: Vec<bool> = truth.iter().map(|&a| a != 0.0).collect();
+    let tp = got.iter().zip(&want).filter(|&(&g, &w)| g && w).count();
+    let fp = got.iter().zip(&want).filter(|&(&g, &w)| g && !w).count();
+    let fnn = got.iter().zip(&want).filter(|&(&g, &w)| !g && w).count();
+    let prec = tp as f64 / (tp + fp).max(1) as f64;
+    let rec = tp as f64 / (tp + fnn).max(1) as f64;
+    (2.0 * prec * rec / (prec + rec).max(1e-12), got.iter().filter(|&&g| g).count())
+}
+
+fn main() {
+    let data = generate(DatasetKind::DvscLike, Family::Regression, 0.25, 7);
+    println!("dataset: {}", data.describe());
+    let truth = data.alpha_star.as_ref().expect("regression plants a model");
+    let planted = truth.iter().filter(|&&a| a != 0.0).count();
+    println!("planted support: {planted} of {} features\n", data.n());
+
+    let sim = TierSim::default();
+    for sel in [Selection::DualityGap, Selection::Random] {
+        let mut model = Lasso::new(12.0);
+        let solver = HthcSolver::new(HthcConfig {
+            t_a: 2,
+            t_b: 2,
+            v_b: 1,
+            batch_frac: 0.02, // small batch: selection quality matters
+            selection: sel,
+            gap_tol: 0.0,     // fixed epoch budget instead
+            max_epochs: 400,
+            eval_every: 25,
+            timeout_secs: 120.0,
+            ..Default::default()
+        });
+        let res = solver.train(&mut model, &data.matrix, &data.targets, &sim);
+        let (f1_score, support) = f1(&res.alpha, truth);
+        println!("selection = {:<12}  {}", sel.name(), res.summary());
+        println!(
+            "  -> support {} features, F1 vs planted = {:.3}\n",
+            support, f1_score
+        );
+    }
+    println!(
+        "note: with a {:.0}% batch, gap-guided selection should reach a \
+         better F1/objective at this epoch budget — the paper's Fig. 5 \
+         effect in a feature-selection setting.",
+        2.0
+    );
+}

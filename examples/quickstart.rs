@@ -1,0 +1,66 @@
+//! Quickstart: train Lasso with HTHC on a synthetic dense dataset.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Shows the minimal API surface: generate (or load) data, configure
+//! the two-task topology, train, inspect the convergence trace.
+
+use hthc::coordinator::{HthcConfig, HthcSolver};
+use hthc::data::generator::{generate, DatasetKind, Family};
+use hthc::glm::Lasso;
+use hthc::memory::TierSim;
+
+fn main() {
+    // 1. A dataset: epsilon-like (dense, samples >> features), scaled
+    //    down so the example runs in seconds.
+    let data = generate(DatasetKind::EpsilonLike, Family::Regression, 0.25, 42);
+    println!("dataset: {}", data.describe());
+
+    // 2. A model: Lasso, regularized hard enough to select features.
+    let mut model = Lasso::new(2.0);
+
+    // 3. The HTHC topology (paper §IV-F): T_A gap-refresh threads,
+    //    T_B x V_B update threads, %B of coordinates per epoch.  The
+    //    gap tolerance is relative to the problem scale.
+    let obj0 = {
+        use hthc::glm::GlmModel;
+        model.objective(&vec![0.0; data.d()], &data.targets, &vec![0.0; data.n()])
+    };
+    let solver = HthcSolver::new(HthcConfig {
+        t_a: 2,
+        t_b: 2,
+        v_b: 1,
+        batch_frac: 0.08,
+        gap_tol: 1e-5 * obj0,
+        max_epochs: 2000,
+        timeout_secs: 60.0,
+        ..Default::default()
+    });
+
+    // 4. Train.  TierSim records the DRAM/MCDRAM traffic split.
+    let sim = TierSim::default();
+    let result = solver.train(&mut model, &data.matrix, &data.targets, &sim);
+
+    // 5. Inspect.
+    println!("converged: {}", result.converged);
+    println!("{}", result.summary());
+    let support = result.alpha.iter().filter(|&&a| a != 0.0).count();
+    println!(
+        "selected {} of {} features ({:.1}%)",
+        support,
+        data.n(),
+        100.0 * support as f64 / data.n() as f64
+    );
+    println!("\nconvergence trace (objective, duality gap):");
+    for p in result.trace.points.iter().take(10) {
+        println!(
+            "  epoch {:>4}  t={:>8}  obj={:.6e}  gap={:.3e}",
+            p.epoch,
+            hthc::util::fmt_secs(p.secs),
+            p.objective,
+            p.duality_gap
+        );
+    }
+}

@@ -1,0 +1,70 @@
+"""AOT lowering: jax -> HLO *text* artifacts for the rust PJRT runtime.
+
+HLO text (NOT ``lowered.compile().serialize()`` / serialized protos) is
+the interchange format: jax >= 0.5 emits HloModuleProto with 64-bit
+instruction ids which xla_extension 0.5.1 (what the published ``xla``
+crate binds) rejects (``proto.id() <= INT_MAX``).  The text parser
+reassigns ids, so text round-trips cleanly.  See
+/opt/xla-example/gen_hlo.py and its README.
+
+Also writes ``artifacts/manifest.txt``: one line per artifact,
+``name <tab> relative-path <tab> arg-signature`` where arg-signature is a
+comma-separated list of ``dtype:dim0xdim1`` entries — parsed by
+``rust/src/runtime/manifest.rs``.
+
+Usage: cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text (ids reassigned)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def sig_of(args) -> str:
+    parts = []
+    for a in args:
+        dims = "x".join(str(d) for d in a.shape) if a.shape else "scalar"
+        parts.append(f"{a.dtype.name}:{dims}")
+    return ",".join(parts)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="substring filter on names")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = []
+    for name, fn, example_args in model.catalogue():
+        if args.only and args.only not in name:
+            continue
+        lowered = jax.jit(fn).lower(*example_args)
+        text = to_hlo_text(lowered)
+        rel = f"{name}.hlo.txt"
+        path = os.path.join(args.out_dir, rel)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest.append(f"{name}\t{rel}\t{sig_of(example_args)}")
+        print(f"  wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"manifest: {len(manifest)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,106 @@
+"""L1 Pallas kernel: tiled column-wise inner products u = D^T w.
+
+This is HTHC's compute hot spot (paper Eq. (3)/(4): every gap evaluation
+and every coordinate update is dominated by <w, d_i>).  The paper tiles
+for KNL's L2 (keep v plus two columns resident, chunk ~ 1/3 cache); on
+TPU the same insight becomes BlockSpec tiles sized for VMEM with the
+reduction over row-tiles accumulated in the revisited output block —
+one HBM pass over D per sweep.
+
+The kernel is model-independent; the per-model gap transform (cheap,
+elementwise — "negligible evaluation cost" in the paper) is fused by XLA
+in the surrounding L2 function (see ``compile/model.py``), which keeps
+lam / n / lipschitz-B as *runtime* scalars instead of baking one artifact
+per hyperparameter.
+
+interpret=True everywhere: the CPU PJRT client cannot execute Mosaic
+custom-calls; real-TPU performance is estimated structurally in
+DESIGN.md / EXPERIMENTS.md.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes: multiples of the TPU VPU lane/sublane grid (8, 128).
+# (d_tile + 2 * d_tile * n_tile / n_steps) floats must fit VMEM; with
+# f32 and (512, 256) a D tile is 512 KiB — comfortable against a 16 MiB
+# VMEM budget even double-buffered.
+D_TILE = 512
+N_TILE = 256
+
+
+def _matvec_kernel(d_ref, w_ref, o_ref, *, nsteps):
+    """Grid = (n_tiles, d_tiles); the d (reduction) axis iterates fastest.
+
+    o_ref is revisited across the reduction steps of one column tile and
+    used as the accumulator (zeroed on the first step).
+    """
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # (n_tile, d_tile) @ (d_tile,) -> (n_tile,) partial sums.
+    o_ref[...] += jnp.dot(
+        d_ref[...].T, w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("d_tile", "n_tile"))
+def dtw(d_mat, w, *, d_tile=D_TILE, n_tile=N_TILE):
+    """u = D^T w via the tiled Pallas kernel.
+
+    d_mat: (d, n) f32 with d % d_tile == 0 and n % n_tile == 0 (callers
+    pad; the rust runtime always feeds full artifact shapes).
+    """
+    d, n = d_mat.shape
+    assert d % d_tile == 0 and n % n_tile == 0, (d, n, d_tile, n_tile)
+    nsteps = d // d_tile
+    grid = (n // n_tile, nsteps)
+    return pl.pallas_call(
+        functools.partial(_matvec_kernel, nsteps=nsteps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((d_tile, n_tile), lambda i, k: (k, i)),
+            pl.BlockSpec((d_tile,), lambda i, k: (k,)),
+        ],
+        out_specs=pl.BlockSpec((n_tile,), lambda i, k: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(d_mat, w)
+
+
+def _axpy_kernel(d_ref, delta_ref, vin_ref, vout_ref):
+    """v' = v + D_batch @ delta, tiled over d.  Used by the batched-update
+    artifact: applying m coordinate deltas to the shared vector in one
+    HBM pass (the dense bulk of task B's v-maintenance)."""
+    vout_ref[...] = vin_ref[...] + jnp.dot(
+        d_ref[...], delta_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("d_tile",))
+def apply_deltas(d_batch, deltas, v, *, d_tile=D_TILE):
+    """v' = v + D_batch @ deltas via a row-tiled Pallas kernel.
+
+    d_batch: (d, m); deltas: (m,); v: (d,).
+    """
+    d, m = d_batch.shape
+    assert d % d_tile == 0, (d, d_tile)
+    grid = (d // d_tile,)
+    return pl.pallas_call(
+        _axpy_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((d_tile, m), lambda i: (i, 0)),
+            pl.BlockSpec((m,), lambda i: (0,)),
+            pl.BlockSpec((d_tile,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((d_tile,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((d,), jnp.float32),
+        interpret=True,
+    )(d_batch, deltas, v)

@@ -1,0 +1,73 @@
+"""L1 Pallas kernel: 4-bit quantized tiled inner products (paper Sec. IV-E).
+
+HTHC's quantized path (Clover-style): the data matrix D is stored as
+4-bit codes with per-group f32 scales; v / alpha stay f32.  The win is
+data movement (4x fewer bytes of D over the memory bus) at the cost of
+unpack arithmetic — exactly the trade this kernel expresses: the packed
+tile is unpacked and dequantized *in VMEM* after the (4x smaller)
+HBM->VMEM transfer, then hits the same FMA loop as the f32 kernel.
+
+Layout: codes are packed two-per-byte along the d axis (low nibble =
+even row, high nibble = odd row, bias +8), scales are (d/QGROUP, n).
+Matches ``ref.pack4`` / ``ref.gaps_quantized``.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import QGROUP
+
+D_TILE = 512  # rows of unpacked D per tile; must be % (2*QGROUP) == 0
+N_TILE = 256
+
+
+def _q4_matvec_kernel(p_ref, s_ref, w_ref, o_ref):
+    """One (d_tile, n_tile) tile: unpack nibbles, dequantize, partial dot.
+
+    Grid = (n_tiles, d_tiles), reduction axis fastest; o_ref revisited.
+    """
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    packed = p_ref[...]  # (d_tile/2, n_tile) uint8
+    lo = (packed & 0xF).astype(jnp.float32) - 8.0
+    hi = (packed >> 4).astype(jnp.float32) - 8.0
+    d2, ncols = packed.shape
+    # Interleave even/odd rows: (d/2, 2, n) -> (d, n).
+    codes = jnp.stack([lo, hi], axis=1).reshape(d2 * 2, ncols)
+    scale = jnp.repeat(s_ref[...], QGROUP, axis=0)  # (d_tile, n_tile)
+    deq = codes * scale
+    o_ref[...] += jnp.dot(
+        deq.T, w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("d_tile", "n_tile"))
+def dtw_q4(packed, scales, w, *, d_tile=D_TILE, n_tile=N_TILE):
+    """u = dequant(D)^T w over a 4-bit packed matrix.
+
+    packed: (d/2, n) uint8; scales: (d/QGROUP, n) f32; w: (d,) f32.
+    """
+    d2, n = packed.shape
+    d = d2 * 2
+    assert d % d_tile == 0 and n % n_tile == 0, (d, n)
+    assert d_tile % (2 * QGROUP) == 0
+    grid = (n // n_tile, d // d_tile)
+    return pl.pallas_call(
+        _q4_matvec_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((d_tile // 2, n_tile), lambda i, k: (k, i)),
+            pl.BlockSpec((d_tile // QGROUP, n_tile), lambda i, k: (k, i)),
+            pl.BlockSpec((d_tile,), lambda i, k: (k,)),
+        ],
+        out_specs=pl.BlockSpec((n_tile,), lambda i, k: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(packed, scales, w)

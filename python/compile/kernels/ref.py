@@ -1,0 +1,173 @@
+"""Pure-jnp correctness oracles for the HTHC kernels.
+
+Everything here is the *definition* of correct; the Pallas kernels in
+``gap.py`` / ``quantized.py`` and the jax scan in ``cd_epoch.py`` are
+tested against these functions (pytest + hypothesis in ``python/tests``).
+
+Problem setup (paper Eq. (1)):  min_alpha  f(D alpha) + sum_i g_i(alpha_i)
+with w := grad f(D alpha).  The coordinate-wise duality gap (paper Eq. (2)):
+
+    gap_i(alpha_i; w) = alpha_i <w, d_i> + g_i(alpha_i) + g_i*(-<w, d_i>)
+
+Models
+------
+lasso:    f(v) = 1/2 ||v - y||^2,  g_i(a) = lam |a|.
+          g_i* is unbounded, so we use the Lipschitzing trick of
+          Duenner et al. [23]: restrict |a| <= B, giving
+          g_i*(u) = B max(0, |u| - lam).
+svm:      dual hinge SVM.  f(v) = 1/(2 lam n^2) ||v||^2 over v = X alpha
+          (columns pre-scaled by labels), g_i(a) = -a/n + I_[0,1](a),
+          g_i*(u) = max(0, u + 1/n).
+ridge:    f(v) = 1/2 ||v - y||^2,  g_i(a) = lam/2 a^2,
+          g_i*(u) = u^2 / (2 lam).  Gap is exact (no trick needed).
+"""
+
+import jax
+import jax.numpy as jnp
+
+MODELS = ("lasso", "svm", "ridge")
+
+
+def primal_dual_w(model, v, y, lam, n):
+    """w = grad f(v) for each model (paper Sec. II-C)."""
+    if model == "lasso" or model == "ridge":
+        return v - y
+    if model == "svm":
+        return v / (lam * n * n)
+    raise ValueError(model)
+
+
+def gap_transform(model, u, alpha, lam, n, lip_b):
+    """Coordinate-wise duality gap from u_i = <w, d_i> and alpha_i.
+
+    This is the scalar function ``h`` of paper Eq. (3), vectorized.
+    """
+    if model == "lasso":
+        return alpha * u + lam * jnp.abs(alpha) + lip_b * jnp.maximum(
+            0.0, jnp.abs(u) - lam
+        )
+    if model == "svm":
+        return alpha * u - alpha / n + jnp.maximum(0.0, 1.0 / n - u)
+    if model == "ridge":
+        # (u + lam a)^2 / (2 lam), exact gap for L2 regularization.
+        t = u + lam * alpha
+        return t * t / (2.0 * lam)
+    raise ValueError(model)
+
+
+def gaps(model, d_mat, w, alpha, lam, n, lip_b):
+    """Reference for the fused gap kernel: z = h(D^T w, alpha).
+
+    d_mat: (d, n) column-major data tile; w: (d,); alpha: (n,).
+    """
+    u = d_mat.T @ w
+    return gap_transform(model, u, alpha, lam, n, lip_b)
+
+
+def cd_delta(model, u, alpha, sq_norm, lam, n):
+    """Closed-form coordinate update delta (paper Eq. (4)'s h-hat).
+
+    u = <w, d_i> with w the *current* dual-mapped vector; sq_norm = ||d_i||^2.
+    Returns delta with alpha_i+ = alpha_i + delta.
+    """
+    safe = jnp.maximum(sq_norm, 1e-12)
+    if model == "lasso":
+        # alpha+ = soft_threshold(alpha - u/||d||^2, lam/||d||^2)
+        raw = alpha - u / safe
+        thr = lam / safe
+        new = jnp.sign(raw) * jnp.maximum(jnp.abs(raw) - thr, 0.0)
+        return jnp.where(sq_norm > 0.0, new - alpha, 0.0)
+    if model == "svm":
+        # Newton step on the dual coordinate, clipped to [0, 1].
+        hess = safe / (lam * n * n)
+        new = jnp.clip(alpha - (u - 1.0 / n) / hess, 0.0, 1.0)
+        return jnp.where(sq_norm > 0.0, new - alpha, 0.0)
+    if model == "ridge":
+        # minimize along the coordinate:
+        #   d/d(delta) [ 1/2||v + delta d - y||^2 + lam/2 (a+delta)^2 ] = 0
+        #   => delta (||d||^2 + lam) = -(u + lam a)
+        delta = -(u + lam * alpha) / (safe + lam)
+        return jnp.where(sq_norm > 0.0, delta, 0.0)
+    raise ValueError(model)
+
+
+def cd_epoch(model, d_batch, v, alpha_batch, y, lam, n):
+    """Sequential (exact) coordinate descent over one batch.
+
+    d_batch: (d, m) selected columns; alpha_batch: (m,); v: (d,) = D alpha.
+    Returns (v', alpha_batch', deltas).  This is the oracle for task B with
+    T_B = 1 (async SCD with one updater is exactly sequential SCD).
+    """
+
+    def step(carry, i):
+        v_c, a_c = carry
+        col = d_batch[:, i]
+        w = primal_dual_w(model, v_c, y, lam, n)
+        u = col @ w
+        sq = col @ col
+        delta = cd_delta(model, u, a_c[i], sq, lam, n)
+        return (v_c + delta * col, a_c.at[i].add(delta)), delta
+
+    (v2, a2), deltas = jax.lax.scan(
+        step, (v, alpha_batch), jnp.arange(d_batch.shape[1])
+    )
+    return v2, a2, deltas
+
+
+# ---------------------------------------------------------------------------
+# 4-bit quantization reference (paper Sec. IV-E, Clover-style)
+# ---------------------------------------------------------------------------
+
+QGROUP = 64  # elements per scale group
+
+
+def quantize4(x):
+    """Deterministic (round-to-nearest) 4-bit quantization with per-group
+    scales. x: (d,) with d % QGROUP == 0.  Returns (codes int8 in [-7, 7],
+    scales (d/QGROUP,)).  Dequantized value = code * scale.
+    """
+    g = x.reshape(-1, QGROUP)
+    absmax = jnp.max(jnp.abs(g), axis=1)
+    scale = jnp.where(absmax > 0, absmax / 7.0, 1.0)
+    codes = jnp.clip(jnp.round(g / scale[:, None]), -8, 7).astype(jnp.int8)
+    return codes.reshape(-1), scale
+
+
+def dequantize4(codes, scales):
+    g = codes.reshape(-1, QGROUP).astype(jnp.float32)
+    return (g * scales[:, None]).reshape(-1)
+
+
+def pack4(codes):
+    """Pack int8 codes in [-8,7] into uint8 nibbles (two per byte).
+
+    Low nibble = even index, high nibble = odd index. Biased by +8.
+    """
+    b = (codes.astype(jnp.int32) + 8).astype(jnp.uint8)
+    lo = b[0::2]
+    hi = b[1::2]
+    return lo | (hi << 4)
+
+
+def unpack4(packed):
+    lo = (packed & 0xF).astype(jnp.int32) - 8
+    hi = (packed >> 4).astype(jnp.int32) - 8
+    out = jnp.stack([lo, hi], axis=1).reshape(-1)
+    return out.astype(jnp.int8)
+
+
+def gaps_quantized(model, packed, scales, w, alpha, lam, n, lip_b):
+    """Reference fused gap kernel over a 4-bit packed data tile.
+
+    packed: (d//2, n) uint8; scales: (d//QGROUP, n) f32; w: (d,).
+    """
+    d2, ncols = packed.shape
+    d = d2 * 2
+    lo = (packed & 0xF).astype(jnp.float32) - 8.0
+    hi = (packed >> 4).astype(jnp.float32) - 8.0
+    codes = jnp.zeros((d, ncols), jnp.float32)
+    codes = codes.at[0::2, :].set(lo).at[1::2, :].set(hi)
+    scale_full = jnp.repeat(scales, QGROUP, axis=0)
+    deq = codes * scale_full
+    u = deq.T @ w
+    return gap_transform(model, u, alpha, lam, n, lip_b)

@@ -1,0 +1,89 @@
+"""L1 Pallas kernel: gap inner products over ELL-padded sparse columns.
+
+HTHC's sparse path on KNL uses chunked CSC with AVX-512 gathers
+(paper §IV-D).  The TPU adaptation cannot gather efficiently from HBM,
+so the working set is re-laid-out as **ELLPACK**: every column padded to
+a fixed nnz budget `k_max`, giving dense (k_max, n) index/value tiles —
+regular enough for VPU gathers from a VMEM-resident `w`.  Padding
+entries point at row 0 with value 0, contributing nothing.
+
+This trades FLOPs-on-padding for regularity, the classic ELL trade; the
+chunk-length distribution analysis in `data::sparse` (rust side) picks
+`k_max` per working set exactly like the paper's chunk pool sizes its
+stack from the m densest columns.
+
+interpret=True as everywhere (CPU PJRT cannot run Mosaic calls).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+K_TILE = 64   # padded-nnz rows per tile
+N_TILE = 256  # columns per tile
+
+
+def _ell_matvec_kernel(idx_ref, val_ref, w_ref, o_ref):
+    """Grid = (n_tiles, k_tiles); reduction over the padded-nnz axis.
+
+    w is small enough to sit whole in VMEM (the dual-mapped vector for
+    the sparse sets is the dense v, bounded by the sample count), so the
+    BlockSpec maps the full w to every tile and the gather is VMEM-local.
+    """
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    idx = idx_ref[...]  # (k_tile, n_tile) int32 row ids
+    val = val_ref[...]  # (k_tile, n_tile) f32
+    w = w_ref[...]      # (d,) f32, full vector
+    gathered = w[idx]   # (k_tile, n_tile) VMEM gather
+    o_ref[...] += jnp.sum(gathered * val, axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("k_tile", "n_tile"))
+def ell_dtw(idx, val, w, *, k_tile=K_TILE, n_tile=N_TILE):
+    """u = D^T w where D is given in ELL form.
+
+    idx: (k_max, n) int32 (padding rows point at 0);
+    val: (k_max, n) f32 (padding value 0.0);
+    w:   (d,) f32.
+    """
+    k_max, n = idx.shape
+    assert k_max % k_tile == 0 and n % n_tile == 0, (k_max, n)
+    grid = (n // n_tile, k_max // k_tile)
+    return pl.pallas_call(
+        _ell_matvec_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((k_tile, n_tile), lambda i, k: (k, i)),
+            pl.BlockSpec((k_tile, n_tile), lambda i, k: (k, i)),
+            pl.BlockSpec(w.shape, lambda i, k: tuple(0 for _ in w.shape)),
+        ],
+        out_specs=pl.BlockSpec((n_tile,), lambda i, k: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(idx, val, w)
+
+
+def to_ell(cols, d, k_max):
+    """Pack a list of [(row, value), ...] columns into ELL arrays.
+
+    Columns longer than k_max are truncated (callers size k_max from the
+    densest column, as the rust chunk pool does).  Returns (idx, val).
+    """
+    import numpy as np
+
+    n = len(cols)
+    idx = np.zeros((k_max, n), np.int32)
+    val = np.zeros((k_max, n), np.float32)
+    for j, col in enumerate(cols):
+        for k, (r, x) in enumerate(col[:k_max]):
+            assert 0 <= r < d
+            idx[k, j] = r
+            val[k, j] = x
+    return jnp.asarray(idx), jnp.asarray(val)

@@ -1,0 +1,210 @@
+"""L2: the jax compute graphs HTHC offloads via PJRT.
+
+Three families, each jitted with fixed shapes and lowered by ``aot.py``:
+
+* ``gaps_fn``      — task A's bulk work: z = gap_transform(D^T w, alpha)
+                     with the D^T w through the L1 Pallas kernel and the
+                     per-model transform fused on top (runtime scalars
+                     lam / n / lipschitz-B, so one artifact serves all
+                     hyperparameters).
+* ``gaps_q4_fn``   — same over the 4-bit packed representation.
+* ``cd_epoch_fn``  — an exact sequential CD epoch over a selected batch
+                     (lax.scan).  This is the T_B = 1 oracle for task B
+                     and the numerics cross-check the rust integration
+                     tests run against the native implementation.
+
+All functions return tuples (lowered with return_tuple semantics — the
+rust loader unwraps with ``to_tuple1``/``to_tuple``).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import gap as gap_kernel
+from .kernels import quantized as q4_kernel
+from .kernels import ref
+from .kernels import sparse_ell
+
+
+def make_gaps_fn(model, *, d_tile=None, n_tile=None):
+    """Fused gap computation; shapes fixed at lowering time.
+
+    Signature: (D (d,n) f32, w (d,) f32, alpha (n,) f32,
+                lam f32, nn f32, lip_b f32) -> (z (n,) f32,)
+    """
+
+    def fn(d_mat, w, alpha, lam, nn, lip_b):
+        kw = {}
+        if d_tile is not None:
+            kw["d_tile"] = d_tile
+        if n_tile is not None:
+            kw["n_tile"] = n_tile
+        u = gap_kernel.dtw(d_mat, w, **kw)
+        z = ref.gap_transform(model, u, alpha, lam, nn, lip_b)
+        # Keep-alive: jax.jit prunes unused inputs from the lowered
+        # signature (e.g. nn for lasso), which would break the uniform
+        # rust calling convention.  0*x is folded by XLA but the
+        # parameter survives in the entry layout.
+        return (z + 0.0 * (lam + nn + lip_b),)
+
+    return fn
+
+
+def make_gaps_q4_fn(model, *, d_tile=None, n_tile=None):
+    """Quantized variant of ``make_gaps_fn``.
+
+    Signature: (packed (d/2,n) u8, scales (d/QGROUP,n) f32, w (d,) f32,
+                alpha (n,) f32, lam f32, nn f32, lip_b f32) -> (z,)
+    """
+
+    def fn(packed, scales, w, alpha, lam, nn, lip_b):
+        kw = {}
+        if d_tile is not None:
+            kw["d_tile"] = d_tile
+        if n_tile is not None:
+            kw["n_tile"] = n_tile
+        u = q4_kernel.dtw_q4(packed, scales, w, **kw)
+        z = ref.gap_transform(model, u, alpha, lam, nn, lip_b)
+        return (z + 0.0 * (lam + nn + lip_b),)  # keep-alive, see make_gaps_fn
+
+    return fn
+
+
+def make_gaps_ell_fn(model, *, k_tile=None, n_tile=None):
+    """Sparse (ELL-padded) gap computation — the TPU adaptation of the
+    paper's §IV-D sparse path (see kernels/sparse_ell.py).
+
+    Signature: (idx (k_max,n) i32, val (k_max,n) f32, w (d,) f32,
+                alpha (n,) f32, lam f32, nn f32, lip_b f32) -> (z,)
+    """
+
+    def fn(idx, val, w, alpha, lam, nn, lip_b):
+        kw = {}
+        if k_tile is not None:
+            kw["k_tile"] = k_tile
+        if n_tile is not None:
+            kw["n_tile"] = n_tile
+        u = sparse_ell.ell_dtw(idx, val, w, **kw)
+        z = ref.gap_transform(model, u, alpha, lam, nn, lip_b)
+        return (z + 0.0 * (lam + nn + lip_b),)  # keep-alive, see make_gaps_fn
+
+    return fn
+
+
+def make_cd_epoch_fn(model):
+    """Sequential CD epoch over a batch (task B oracle, T_B = 1).
+
+    Signature: (D_batch (d,m) f32, v (d,) f32, alpha (m,) f32, y (d,) f32,
+                lam f32, nn f32) -> (v' (d,), alpha' (m,))
+    """
+
+    def fn(d_batch, v, alpha, y, lam, nn):
+        v2, a2, _ = ref.cd_epoch(model, d_batch, v, alpha, y, lam, nn)
+        keep = 0.0 * (lam + nn + jnp.sum(y) * 0.0)  # see make_gaps_fn
+        return (v2 + keep, a2)
+
+    return fn
+
+
+def make_apply_deltas_fn(*, d_tile=None):
+    """Batched shared-vector update v' = v + D_batch @ deltas (Pallas).
+
+    Signature: (D_batch (d,m) f32, deltas (m,) f32, v (d,) f32) -> (v',)
+    """
+
+    def fn(d_batch, deltas, v):
+        kw = {"d_tile": d_tile} if d_tile is not None else {}
+        return (gap_kernel.apply_deltas(d_batch, deltas, v, **kw),)
+
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# Artifact catalogue: everything `aot.py` lowers, with shapes.
+# Names are stable — the rust runtime resolves artifacts by these names
+# via artifacts/manifest.txt.
+# ---------------------------------------------------------------------------
+
+S = jax.ShapeDtypeStruct
+F32 = jnp.float32
+U8 = jnp.uint8
+SCALAR = S((), F32)
+
+
+def catalogue():
+    """Returns list of (name, fn, example_args) to lower."""
+    out = []
+    for model in ref.MODELS:
+        for (d, n) in ((1024, 256), (4096, 512)):
+            out.append(
+                (
+                    f"gaps_{model}_{d}x{n}",
+                    make_gaps_fn(model),
+                    (
+                        S((d, n), F32),
+                        S((d,), F32),
+                        S((n,), F32),
+                        SCALAR,
+                        SCALAR,
+                        SCALAR,
+                    ),
+                )
+            )
+        d, n = 1024, 256
+        out.append(
+            (
+                f"gaps_q4_{model}_{d}x{n}",
+                make_gaps_q4_fn(model),
+                (
+                    S((d // 2, n), U8),
+                    S((d // ref.QGROUP, n), F32),
+                    S((d,), F32),
+                    S((n,), F32),
+                    SCALAR,
+                    SCALAR,
+                    SCALAR,
+                ),
+            )
+        )
+        kmax, ncols, dvec = 128, 256, 2048
+        out.append(
+            (
+                f"gaps_ell_{model}_{kmax}x{ncols}",
+                make_gaps_ell_fn(model),
+                (
+                    S((kmax, ncols), jnp.int32),
+                    S((kmax, ncols), F32),
+                    S((dvec,), F32),
+                    S((ncols,), F32),
+                    SCALAR,
+                    SCALAR,
+                    SCALAR,
+                ),
+            )
+        )
+        d, m = 1024, 64
+        out.append(
+            (
+                f"cd_epoch_{model}_{d}x{m}",
+                make_cd_epoch_fn(model),
+                (
+                    S((d, m), F32),
+                    S((d,), F32),
+                    S((m,), F32),
+                    S((d,), F32),
+                    SCALAR,
+                    SCALAR,
+                ),
+            )
+        )
+    d, m = 1024, 64
+    out.append(
+        (
+            f"apply_deltas_{d}x{m}",
+            make_apply_deltas_fn(),
+            (S((d, m), F32), S((m,), F32), S((d,), F32)),
+        )
+    )
+    return out

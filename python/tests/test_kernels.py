@@ -1,0 +1,296 @@
+"""Kernel-vs-reference correctness: the CORE numerics signal.
+
+The Pallas kernels (interpret=True) and the L2 graphs must agree with
+the pure-jnp oracles in ``compile.kernels.ref`` for every model and a
+sweep of shapes.  Hypothesis drives the shape/value sweeps in
+``test_kernels_prop.py``; this file covers the fixed artifact shapes and
+hand-picked edge cases.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import model
+from compile.kernels import gap, quantized, ref
+
+RNG = np.random.default_rng(1234)
+
+
+def randf(*shape):
+    return jnp.asarray(RNG.standard_normal(shape), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# L1: tiled matvec kernel
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "d,n,dt,nt",
+    [
+        (1024, 256, 512, 256),
+        (1024, 256, 1024, 128),
+        (2048, 512, 512, 256),
+        (512, 128, 128, 128),
+        (512, 128, 512, 128),  # single reduction step
+    ],
+)
+def test_dtw_matches_ref(d, n, dt, nt):
+    D = randf(d, n)
+    w = randf(d)
+    got = gap.dtw(D, w, d_tile=dt, n_tile=nt)
+    want = D.T @ w
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_dtw_zero_w():
+    D = randf(512, 128)
+    got = gap.dtw(D, jnp.zeros(512, jnp.float32), d_tile=128, n_tile=128)
+    np.testing.assert_array_equal(np.asarray(got), np.zeros(128, np.float32))
+
+
+def test_dtw_rejects_unaligned():
+    with pytest.raises(AssertionError):
+        gap.dtw(randf(100, 128), randf(100), d_tile=64, n_tile=128)
+
+
+def test_apply_deltas_matches_ref():
+    d, m = 1024, 64
+    D = randf(d, m)
+    dl = randf(m)
+    v = randf(d)
+    got = gap.apply_deltas(D, dl, v)
+    want = v + D @ dl
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_apply_deltas_zero_delta_is_identity():
+    d, m = 512, 32
+    v = randf(d)
+    got = gap.apply_deltas(randf(d, m), jnp.zeros(m, jnp.float32), v)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(v))
+
+
+# ---------------------------------------------------------------------------
+# L2: fused gap graphs per model
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("m", ref.MODELS)
+@pytest.mark.parametrize("lam", [1e-3, 0.1, 1.0])
+def test_gaps_fn_matches_ref(m, lam):
+    d, n = 1024, 256
+    D, w, a = randf(d, n), randf(d), randf(n)
+    z = model.make_gaps_fn(m)(
+        D, w, a, jnp.float32(lam), jnp.float32(n), jnp.float32(2.0)
+    )[0]
+    want = ref.gaps(m, D, w, a, lam, n, 2.0)
+    np.testing.assert_allclose(z, want, rtol=2e-3, atol=1e-4)
+
+
+@pytest.mark.parametrize("m", ref.MODELS)
+def test_gap_transform_nonneg_at_optimum_direction(m):
+    """At alpha = 0, w consistent, gaps must be >= 0 (duality)."""
+    n = 256
+    u = randf(n)
+    a = jnp.zeros(n, jnp.float32)
+    z = ref.gap_transform(m, u, a, 0.1, n, 1.0)
+    assert float(jnp.min(z)) >= -1e-6
+
+
+def test_lasso_gap_zero_inside_subdifferential():
+    """For alpha_i = 0 and |u_i| <= lam the lasso gap must be exactly 0."""
+    n = 8
+    u = jnp.asarray([0.05, -0.05, 0.0, 0.09, -0.09, 0.02, 0.0, 0.01])
+    a = jnp.zeros(n, jnp.float32)
+    z = ref.gap_transform("lasso", u, a, 0.1, n, 5.0)
+    np.testing.assert_allclose(np.asarray(z), 0.0, atol=1e-7)
+
+
+def test_svm_gap_zero_at_active_boundary():
+    """alpha = 0 and u >= 1/n -> gap 0 (coordinate satisfied)."""
+    n = 4
+    u = jnp.asarray([0.25, 0.3, 1.0, 0.26], jnp.float32)
+    a = jnp.zeros(n, jnp.float32)
+    z = ref.gap_transform("svm", u, a, 0.1, n, 1.0)
+    np.testing.assert_allclose(np.asarray(z), 0.0, atol=1e-7)
+
+
+def test_ridge_gap_exact_formula():
+    n = 16
+    u, a = randf(n), randf(n)
+    lam = 0.5
+    z = ref.gap_transform("ridge", u, a, lam, n, 0.0)
+    want = (np.asarray(u) + lam * np.asarray(a)) ** 2 / (2 * lam)
+    np.testing.assert_allclose(np.asarray(z), want, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# L2: coordinate updates
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("m", ref.MODELS)
+def test_cd_delta_is_stationary(m):
+    """After applying the closed-form delta, re-evaluating the update at
+    the new point must give delta ~ 0 (fixed point of h-hat)."""
+    n = 100
+    lam = 0.3
+    col = randf(64)
+    sq = float(col @ col)
+    v = randf(64)
+    y = randf(64)
+    alpha = jnp.float32(0.7)
+    w = ref.primal_dual_w(m, v, y, lam, n)
+    u = float(col @ w)
+    delta = float(ref.cd_delta(m, u, alpha, sq, lam, n))
+    # move v and alpha, recompute
+    v2 = v + delta * col
+    a2 = alpha + delta
+    w2 = ref.primal_dual_w(m, v2, y, lam, n)
+    u2 = float(col @ w2)
+    delta2 = float(ref.cd_delta(m, u2, a2, sq, lam, n))
+    assert abs(delta2) < 1e-4 * max(1.0, abs(delta))
+
+
+def test_cd_delta_zero_column_is_noop():
+    for m in ref.MODELS:
+        d = float(
+            ref.cd_delta(m, jnp.float32(1.0), jnp.float32(0.5), jnp.float32(0.0), 0.1, 10)
+        )
+        assert d == 0.0
+
+
+def test_svm_update_stays_in_box():
+    n = 50
+    for _ in range(20):
+        col = randf(32)
+        sq = float(col @ col) + 1e-3
+        alpha = float(RNG.uniform(0, 1))
+        u = float(RNG.standard_normal() * 10)
+        delta = float(ref.cd_delta("svm", u, alpha, sq, 0.01, n))
+        assert -1e-6 <= alpha + delta <= 1 + 1e-6
+
+
+@pytest.mark.parametrize("m", ref.MODELS)
+def test_cd_epoch_decreases_objective(m):
+    """One sequential epoch over a batch must not increase F(alpha)."""
+    d, n, mcols = 256, 64, 32
+    D = randf(d, n)
+    y = randf(d)
+    lam = 0.1
+    alpha = randf(n) * 0.1
+    v = D @ alpha
+
+    def objective(vv, aa):
+        if m in ("lasso", "ridge"):
+            fv = 0.5 * float(jnp.sum((vv - y) ** 2))
+        else:
+            fv = float(jnp.sum(vv * vv)) / (2 * lam * n * n)
+        if m == "lasso":
+            g = lam * float(jnp.sum(jnp.abs(aa)))
+        elif m == "ridge":
+            g = 0.5 * lam * float(jnp.sum(aa * aa))
+        else:
+            g = -float(jnp.sum(aa)) / n
+        return fv + g
+
+    if m == "svm":
+        alpha = jnp.clip(alpha, 0, 1)
+        v = D @ alpha
+    before = objective(v, alpha)
+    v2, a2, _ = ref.cd_epoch(m, D[:, :mcols], v, alpha[:mcols], y, lam, n)
+    full_a2 = alpha.at[:mcols].set(a2)
+    after = objective(v2, full_a2)
+    assert after <= before + 1e-5 * abs(before)
+
+
+def test_cd_epoch_keeps_v_consistent():
+    """v' must equal D @ alpha' exactly (within fp) after an epoch."""
+    d, n = 256, 64
+    D = randf(d, n)
+    y = randf(d)
+    alpha = randf(n) * 0.1
+    v = D @ alpha
+    v2, a2, _ = ref.cd_epoch("lasso", D, v, alpha, y, 0.1, n)
+    np.testing.assert_allclose(v2, D @ a2, rtol=1e-3, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# Quantized representation
+# ---------------------------------------------------------------------------
+
+
+def test_quantize4_roundtrip_error_bound():
+    """|x - dequant(quant(x))| <= scale/2 = absmax/14 per group."""
+    x = randf(1024)
+    codes, scales = ref.quantize4(x)
+    xq = ref.dequantize4(codes, scales)
+    err = np.abs(np.asarray(x) - np.asarray(xq)).reshape(-1, ref.QGROUP)
+    bound = np.asarray(scales)[:, None] / 2 + 1e-7
+    assert (err <= bound).all()
+
+
+def test_pack_unpack_roundtrip():
+    codes = jnp.asarray(RNG.integers(-8, 8, size=512), jnp.int8)
+    np.testing.assert_array_equal(
+        np.asarray(ref.unpack4(ref.pack4(codes))), np.asarray(codes)
+    )
+
+
+def test_quantize4_zero_vector():
+    codes, scales = ref.quantize4(jnp.zeros(128, jnp.float32))
+    assert (np.asarray(codes) == 0).all()
+    xq = ref.dequantize4(codes, scales)
+    np.testing.assert_array_equal(np.asarray(xq), 0.0)
+
+
+@pytest.mark.parametrize("m", ref.MODELS)
+def test_q4_kernel_matches_q4_ref(m):
+    d, n = 1024, 256
+    D = randf(d, n)
+    w, a = randf(d), randf(n)
+    packed_cols, scale_cols = [], []
+    for j in range(n):
+        c, s = ref.quantize4(D[:, j])
+        packed_cols.append(ref.pack4(c))
+        scale_cols.append(s)
+    packed = jnp.stack(packed_cols, axis=1)
+    scales = jnp.stack(scale_cols, axis=1)
+    got = model.make_gaps_q4_fn(m)(
+        packed, scales, w, a, jnp.float32(0.1), jnp.float32(n), jnp.float32(1.0)
+    )[0]
+    want = ref.gaps_quantized(m, packed, scales, w, a, 0.1, n, 1.0)
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+
+def test_q4_vs_fp32_gap_close():
+    """Quantized gaps approximate fp32 gaps (paper: 4 bits suffice for D)."""
+    d, n = 1024, 128
+    D = randf(d, n)
+    w = randf(d) * 0.1
+    a = randf(n) * 0.1
+    packed_cols, scale_cols = [], []
+    for j in range(n):
+        c, s = ref.quantize4(D[:, j])
+        packed_cols.append(ref.pack4(c))
+        scale_cols.append(s)
+    packed = jnp.stack(packed_cols, axis=1)
+    scales = jnp.stack(scale_cols, axis=1)
+    zq = ref.gaps_quantized("lasso", packed, scales, w, a, 0.1, n, 1.0)
+    z = ref.gaps("lasso", D, w, a, 0.1, n, 1.0)
+    # (1) inner-product noise is bounded: |u_q - u| <= sum_g |w_g|_1 * s_g/2.
+    uq = np.asarray(
+        jnp.stack([ref.dequantize4(ref.unpack4(packed[:, j]), scales[:, j]) for j in range(n)], 1).T @ w
+    )
+    u = np.asarray(D.T @ w)
+    w_groups = np.abs(np.asarray(w)).reshape(-1, ref.QGROUP).sum(1)
+    bound = (np.asarray(scales).T / 2 * w_groups[None, :]).sum(1) + 1e-4
+    assert (np.abs(uq - u) <= bound).all()
+    # (2) what HTHC actually needs from 4-bit gaps: the *selection* they
+    # induce matches fp32 — top-25% sets overlap strongly.
+    k = n // 4
+    top = set(np.argsort(-np.asarray(z))[:k])
+    topq = set(np.argsort(-np.asarray(zq))[:k])
+    assert len(top & topq) >= int(0.8 * k)

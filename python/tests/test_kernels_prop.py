@@ -1,0 +1,102 @@
+"""Hypothesis property sweeps over the Pallas kernels' shapes and values.
+
+The system prompt contract for L1: hypothesis sweeps the kernel's
+shapes/dtypes and asserts allclose against the ref oracle.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import gap, ref
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@st.composite
+def tiled_shapes(draw):
+    """(d, n, d_tile, n_tile) with d % d_tile == 0, n % n_tile == 0."""
+    d_tile = draw(st.sampled_from([64, 128, 256, 512]))
+    n_tile = draw(st.sampled_from([64, 128, 256]))
+    d = d_tile * draw(st.integers(1, 4))
+    n = n_tile * draw(st.integers(1, 3))
+    return d, n, d_tile, n_tile
+
+
+def arrays(rng, *shape, scale=1.0):
+    return jnp.asarray(rng.standard_normal(shape) * scale, jnp.float32)
+
+
+@given(shapes=tiled_shapes(), seed=st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_dtw_any_tiling(shapes, seed):
+    d, n, dt, nt = shapes
+    rng = np.random.default_rng(seed)
+    D = arrays(rng, d, n)
+    w = arrays(rng, d)
+    got = gap.dtw(D, w, d_tile=dt, n_tile=nt)
+    np.testing.assert_allclose(got, D.T @ w, rtol=3e-4, atol=3e-4)
+
+
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    m=st.sampled_from(ref.MODELS),
+    lam=st.floats(1e-4, 10.0),
+    scale=st.floats(1e-3, 100.0),
+)
+@settings(**SETTINGS)
+def test_gaps_fn_value_sweep(seed, m, lam, scale):
+    """Gap graph == oracle across magnitudes and hyperparameters."""
+    d, n = 256, 128
+    rng = np.random.default_rng(seed)
+    D = arrays(rng, d, n, scale=scale)
+    w = arrays(rng, d)
+    a = arrays(rng, n)
+    z = model.make_gaps_fn(m, d_tile=128, n_tile=128)(
+        D, w, a, jnp.float32(lam), jnp.float32(n), jnp.float32(1.0)
+    )[0]
+    want = ref.gaps(m, D, w, a, lam, n, 1.0)
+    np.testing.assert_allclose(z, want, rtol=5e-3, atol=1e-3 * scale)
+
+
+@given(seed=st.integers(0, 2**31 - 1), m=st.sampled_from(ref.MODELS))
+@settings(**SETTINGS)
+def test_cd_delta_stationary_prop(seed, m):
+    """Closed-form update is a per-coordinate fixed point, any data."""
+    rng = np.random.default_rng(seed)
+    n = 64
+    col = arrays(rng, 32)
+    sq = float(col @ col)
+    if sq < 1e-6:
+        return
+    v, y = arrays(rng, 32), arrays(rng, 32)
+    lam = 0.2
+    a0 = jnp.float32(rng.uniform(0, 1)) if m == "svm" else jnp.float32(
+        rng.standard_normal()
+    )
+    w = ref.primal_dual_w(m, v, y, lam, n)
+    u = float(col @ w)
+    delta = float(ref.cd_delta(m, u, a0, sq, lam, n))
+    v2 = v + delta * col
+    w2 = ref.primal_dual_w(m, v2, y, lam, n)
+    u2 = float(col @ w2)
+    delta2 = float(ref.cd_delta(m, u2, a0 + delta, sq, lam, n))
+    assert abs(delta2) <= 1e-3 * max(1.0, abs(delta)) + 1e-5
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_quantize_roundtrip_prop(seed):
+    rng = np.random.default_rng(seed)
+    x = arrays(rng, 256, scale=float(rng.uniform(1e-3, 1e3)))
+    codes, scales = ref.quantize4(x)
+    assert int(jnp.max(codes)) <= 7 and int(jnp.min(codes)) >= -8
+    xq = ref.dequantize4(codes, scales)
+    err = np.abs(np.asarray(x) - np.asarray(xq)).reshape(-1, ref.QGROUP)
+    bound = np.asarray(scales)[:, None] / 2 + 1e-6
+    assert (err <= bound).all()
+    # pack/unpack is lossless
+    np.testing.assert_array_equal(
+        np.asarray(ref.unpack4(ref.pack4(codes))), np.asarray(codes)
+    )

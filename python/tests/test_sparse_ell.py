@@ -1,0 +1,80 @@
+"""ELL sparse gap kernel vs reference (dense densify oracle)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref, sparse_ell
+
+RNG = np.random.default_rng(99)
+
+
+def random_cols(d, n, max_nnz):
+    cols = []
+    for _ in range(n):
+        nnz = int(RNG.integers(0, max_nnz + 1))
+        rows = RNG.choice(d, size=nnz, replace=False)
+        cols.append([(int(r), float(RNG.standard_normal())) for r in rows])
+    return cols
+
+
+def densify(cols, d):
+    n = len(cols)
+    out = np.zeros((d, n), np.float32)
+    for j, col in enumerate(cols):
+        for r, x in col:
+            out[r, j] = x
+    return out
+
+
+def test_ell_matches_dense_matvec():
+    d, n, kmax = 512, 256, 64
+    cols = random_cols(d, n, kmax)
+    idx, val = sparse_ell.to_ell(cols, d, kmax)
+    w = jnp.asarray(RNG.standard_normal(d), jnp.float32)
+    got = sparse_ell.ell_dtw(idx, val, w)
+    want = densify(cols, d).T @ np.asarray(w)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_ell_padding_contributes_nothing():
+    d, n, kmax = 128, 256, 64
+    cols = [[] for _ in range(n)]  # all padding
+    idx, val = sparse_ell.to_ell(cols, d, kmax)
+    w = jnp.asarray(RNG.standard_normal(d), jnp.float32)
+    got = sparse_ell.ell_dtw(idx, val, w)
+    np.testing.assert_array_equal(np.asarray(got), np.zeros(n, np.float32))
+
+
+@pytest.mark.parametrize("m", ref.MODELS)
+def test_gaps_ell_fn_matches_ref(m):
+    d, n, kmax = 512, 256, 128
+    cols = random_cols(d, n, kmax)
+    idx, val = sparse_ell.to_ell(cols, d, kmax)
+    w = jnp.asarray(RNG.standard_normal(d), jnp.float32)
+    alpha = jnp.asarray(RNG.standard_normal(n), jnp.float32)
+    z = model.make_gaps_ell_fn(m)(
+        idx, val, w, alpha, jnp.float32(0.2), jnp.float32(n), jnp.float32(1.5)
+    )[0]
+    dmat = jnp.asarray(densify(cols, d))
+    want = ref.gaps(m, dmat, w, alpha, 0.2, n, 1.5)
+    np.testing.assert_allclose(z, want, rtol=2e-3, atol=1e-4)
+
+
+@given(seed=st.integers(0, 2**31 - 1), kt=st.sampled_from([32, 64]))
+@settings(max_examples=15, deadline=None)
+def test_ell_any_tiling(seed, kt):
+    rng = np.random.default_rng(seed)
+    d, n, kmax = 256, 256, 128
+    cols = []
+    for _ in range(n):
+        nnz = int(rng.integers(0, 40))
+        rows = rng.choice(d, size=nnz, replace=False)
+        cols.append([(int(r), float(rng.standard_normal())) for r in rows])
+    idx, val = sparse_ell.to_ell(cols, d, kmax)
+    w = jnp.asarray(rng.standard_normal(d), jnp.float32)
+    got = sparse_ell.ell_dtw(idx, val, w, k_tile=kt, n_tile=128)
+    want = densify(cols, d).T @ np.asarray(w)
+    np.testing.assert_allclose(got, want, rtol=3e-4, atol=3e-4)

@@ -1,0 +1,113 @@
+//! Fig. 3 — Performance of task B's coordinate updates for varying
+//! vector length d, parallel updates T_B in {1,4,8,16}, and threads
+//! per vector V_B (paper §V-A).
+//!
+//! Paper shape: below d ~ 130k one thread per vector (V_B = 1) is best;
+//! for longer vectors splitting wins; more parallel updates beat more
+//! threads per vector at every length (sync overhead).  Measured rows
+//! cover what one core can host; modeled rows carry the full range.
+
+use hthc::coordinator::{task_b, PerfModel, SharedVector, WorkingSet};
+use hthc::data::Matrix;
+use hthc::glm::{GlmModel, Ridge};
+use hthc::memory::TierSim;
+use hthc::metrics::Table;
+use hthc::threadpool::WorkerPool;
+use hthc::util::timer::KNL_HZ;
+use hthc::util::Timer;
+
+fn dense_cols(d: usize, n: usize, seed: u64) -> Matrix {
+    let mut rng = hthc::util::Rng::new(seed);
+    let data: Vec<f32> = (0..d * n).map(|_| rng.normal()).collect();
+    Matrix::Dense(hthc::data::DenseMatrix::from_col_major(d, n, data))
+}
+
+fn main() {
+    println!("Fig. 3 reproduction: task B update performance\n");
+    let t_bs = [1usize, 4, 8, 16];
+    let v_bs = [1usize, 2, 4, 8];
+    let measured_ds = [10_000usize, 40_000, 130_000];
+    let batch = 48usize;
+
+    let mut table = Table::new(
+        "Fig 3 (measured): secs/update and flops/cycle of task B",
+        &["d", "T_B", "V_B", "meas us/upd", "meas f/cyc", "model us/upd"],
+    );
+    let pm = PerfModel::calibrate(
+        &[10_000, 130_000, 1_000_000, 5_000_000],
+        &[1],
+        &t_bs,
+        &v_bs,
+    );
+    let sim0 = TierSim::default();
+    let model = Ridge::new(0.5);
+    let kind = model.kind();
+
+    for &d in &measured_ds {
+        let matrix = dense_cols(d, batch, 3);
+        let y = vec![0.25f32; d];
+        for &t_b in &t_bs {
+            for &v_b in &v_bs {
+                if t_b * v_b > 16 {
+                    continue; // thread budget on this host
+                }
+                let mut ws = WorkingSet::new(&matrix, batch);
+                let sim = TierSim::default();
+                let all: Vec<usize> = (0..batch).collect();
+                ws.swap_in(&matrix, &all, &sim);
+                let v = SharedVector::new(d, 1024);
+                let alpha = SharedVector::new(batch, usize::MAX >> 1);
+                let pool = WorkerPool::with_name(t_b * v_b, "fig3-b");
+                let items = task_b::WorkItem::from_batch(&all);
+                let t = Timer::start();
+                let reps = 3;
+                for _ in 0..reps {
+                    task_b::run_epoch(
+                        &pool, &ws, &items, &v, &y, &alpha, kind, t_b, v_b, &sim,
+                    );
+                }
+                let secs = t.secs();
+                let updates = (batch * reps) as f64;
+                let per_upd = secs / updates;
+                // flops per update: dot (2d) + axpy (2d)
+                let fpc = 4.0 * d as f64 / (per_upd * KNL_HZ);
+                let modeled = pm.modeled_b_update(&sim0, d, t_b, v_b);
+                table.row(vec![
+                    d.to_string(),
+                    t_b.to_string(),
+                    v_b.to_string(),
+                    format!("{:.1}", per_upd * 1e6),
+                    format!("{:.3}", fpc),
+                    format!("{:.1}", modeled * 1e6),
+                ]);
+            }
+        }
+    }
+    table.print();
+
+    let mut mt = Table::new(
+        "Fig 3 (modeled, paper range): us per update",
+        &["d", "V_B=1", "V_B=2", "V_B=4", "V_B=8", "best"],
+    );
+    for &d in &[10_000usize, 130_000, 1_000_000, 5_000_000] {
+        let per: Vec<f64> = v_bs
+            .iter()
+            .map(|&vb| pm.modeled_b_update(&sim0, d, 4, vb))
+            .collect();
+        let best = v_bs[per
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0];
+        let mut row = vec![d.to_string()];
+        row.extend(per.iter().map(|p| format!("{:.1}", p * 1e6)));
+        row.push(format!("V_B={best}"));
+        mt.row(row);
+    }
+    mt.print();
+    println!(
+        "\nexpected shape (paper): V_B=1 best below d~130k, splitting wins \
+         for longer vectors; T_B parallelism preferable to V_B splitting."
+    );
+}

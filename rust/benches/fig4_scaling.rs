@@ -1,0 +1,48 @@
+//! Fig. 4 — Speedup of task B with T_B parallel updates over T_B = 1
+//! (best V_B per point), paper §V-A.
+//!
+//! Paper shape: strongly sublinear scaling (synchronization-bound; L2
+//! bandwidth per tile is the bottleneck, MCDRAM stays unsaturated).
+//! Modeled speedups carry the multi-core shape; measured rows document
+//! the host baseline.
+
+use hthc::coordinator::PerfModel;
+use hthc::memory::TierSim;
+use hthc::metrics::Table;
+
+fn main() {
+    println!("Fig. 4 reproduction: task B scaling over T_B\n");
+    let t_bs = [1usize, 2, 4, 8, 16, 32, 56, 68];
+    let v_bs = [1usize, 2, 4, 8];
+    let pm = PerfModel::calibrate(&[10_000, 130_000, 1_000_000], &[1], &t_bs, &v_bs);
+    let sim = TierSim::default();
+
+    let mut table = Table::new(
+        "Fig 4 (modeled): speedup of B over T_B=1 (best V_B each)",
+        &["d", "T_B=2", "4", "8", "16", "32", "56", "68"],
+    );
+    for &d in &[10_000usize, 130_000, 1_000_000] {
+        // epoch throughput scales with T_B (updates run concurrently);
+        // per-update time may also degrade slightly with contention.
+        let thr = |t_b: usize| -> f64 {
+            let best = v_bs
+                .iter()
+                .map(|&vb| pm.modeled_b_update(&sim, d, t_b, vb))
+                .fold(f64::INFINITY, f64::min);
+            t_b as f64 / best
+        };
+        let base = thr(1);
+        let mut row = vec![d.to_string()];
+        for &t_b in &t_bs[1..] {
+            row.push(format!("{:.2}x", thr(t_b) / base));
+        }
+        table.row(row);
+    }
+    table.print();
+    println!(
+        "\nexpected shape (paper): sublinear — e.g. ~10x at T_B=16 is NOT \
+         reached; sync points dominate.  Our model shows contention-limited \
+         growth; the raw update speed is unaffected by staleness (paper \
+         §V-A), which the convergence benches (fig5) capture separately."
+    );
+}

@@ -1,0 +1,188 @@
+//! Fig. 5 — Convergence (duality gap / suboptimality vs time) for
+//! Lasso and SVM on all four datasets: A+B vs ST vs ST(A+B) vs OMP vs
+//! OMP WILD (paper §V-B, the headline comparison).
+//!
+//! Paper shape to reproduce:
+//!   * Lasso dense: A+B 5-10x faster than ST to equal precision;
+//!   * SVM dvsc: ~3.5x; epsilon/news20: competitive;
+//!   * criteo-like sparse: ST *wins* (delta=0 skipping, §V-B2);
+//!   * OMP far slower than HTHC; OMP WILD fast but plateaus above the
+//!     true optimum (broken primal-dual relation).
+//!
+//! Reading the numbers on a 1-core host (DESIGN.md §5): the *measured*
+//! wall-clock serializes task A into B's timeline, which inverts the
+//! paper's premise (A runs free on spare cores).  The comparison that
+//! carries the paper's shape is therefore **B-work to convergence**
+//! (epochs x updates/epoch — identical per-update cost across solvers)
+//! and the **modeled KNL time** built from it (B-updates x t_B from the
+//! §IV-F table + working-set swap bandwidth, with A concurrent and
+//! therefore free).  Both are printed alongside the raw measurements.
+
+use hthc::bench_support::*;
+use hthc::coordinator::PerfModel;
+use hthc::data::generator::{DatasetKind, Family};
+use hthc::glm;
+use hthc::memory::TierSim;
+use hthc::metrics::{report::fmt_opt_secs, Table};
+
+fn main() {
+    println!("Fig. 5 reproduction: convergence comparison\n");
+    let rels = [1e-2, 1e-3, 1e-4];
+    let timeout = 25.0;
+    let pm = PerfModel::calibrate(&[1_000, 10_000, 100_000], &[1], &[8], &[1]);
+    let sim = TierSim::default();
+
+    let cases: Vec<(DatasetKind, &str)> = vec![
+        (DatasetKind::EpsilonLike, "lasso"),
+        (DatasetKind::EpsilonLike, "svm"),
+        (DatasetKind::DvscLike, "lasso"),
+        (DatasetKind::DvscLike, "svm"),
+        (DatasetKind::News20Like, "lasso"),
+        (DatasetKind::News20Like, "svm"),
+        (DatasetKind::CriteoLike, "lasso"),
+    ];
+
+    for (kind, model_name) in cases {
+        let family = if model_name == "svm" {
+            Family::Classification
+        } else {
+            Family::Regression
+        };
+        let g = bench_dataset(kind, family, 1000 + kind as u64);
+        let solvers: Vec<&str> = if kind == DatasetKind::CriteoLike {
+            vec!["A+B", "ST"] // paper: only these for criteo
+        } else if matches!(g.matrix, hthc::data::Matrix::Dense(_)) {
+            vec!["A+B", "ST", "ST(A+B)", "OMP", "OMP WILD"]
+        } else {
+            vec!["A+B", "ST", "ST(A+B)"] // paper: OMP runs only for dense
+        };
+
+        let probe = bench_model(model_name, g.n());
+        let o0 = obj0(probe.as_ref(), &g.matrix, &g.targets);
+        let mut table = Table::new(
+            format!(
+                "Fig 5: {} / {} ({} x {})",
+                model_name,
+                g.kind.name(),
+                g.d(),
+                g.n()
+            ),
+            &[
+                "solver",
+                "t(gap<1e-3) meas",
+                "B-upd@1e-3",
+                "KNL modeled t",
+                "final subopt",
+                "epochs",
+            ],
+        );
+        // modeled per-update cost: same for every solver (identical B
+        // inner loops), so modeled ratios reduce to update-count ratios
+        // plus A+B's swap overhead.
+        let t_b = pm.modeled_b_update(&sim, g.d(), 8, 1);
+        let mut best_objs: Vec<f64> = Vec::new();
+        #[allow(clippy::type_complexity)]
+        let mut rows: Vec<(String, Vec<Option<f64>>, Option<u64>, Option<f64>, f64, usize)> =
+            Vec::new();
+        let mut st_modeled: Option<f64> = None;
+        let mut ab_modeled: Option<f64> = None;
+        for solver in &solvers {
+            let mut model = bench_model(model_name, g.n());
+            let mut cfg = bench_cfg(1e-4 * o0, timeout);
+            // %B per the paper's tuned settings (Tables II/III): small
+            // batches for dense Lasso (2-8%), larger for SVM — greedy
+            // selection needs small batches to focus its advantage.
+            cfg.batch_frac = if model_name == "lasso" { 0.02 } else { 0.2 };
+            if *solver == "ST" {
+                // ST's own best-found topology: all threads on updates
+                cfg.t_b = 4;
+                cfg.v_b = 1;
+            }
+            let res = run_solver(solver, model.as_mut(), &g.matrix, &g.targets, &cfg);
+            let times = times_to(&res, o0, &rels);
+            let obj = res.trace.best_objective().unwrap_or(f64::NAN);
+            best_objs.push(obj);
+            // work accounting at the 1e-3 threshold
+            let upd_per_epoch = match *solver {
+                "ST" | "ST(A+B)" | "PASSCoDe-atomic" | "PASSCoDe-wild" => g.n() as u64,
+                _ => cfg.batch_size(g.n()) as u64,
+            };
+            let epochs_cross = res.trace.epoch_to_gap(1e-3 * o0);
+            let b_upd = epochs_cross.map(|e| e as u64 * upd_per_epoch);
+            let modeled = b_upd.map(|u| {
+                let e = epochs_cross.unwrap() as f64;
+                let overhead = match *solver {
+                    "A+B" => {
+                        // per-epoch working-set swap traffic, fast tier
+                        // (task A itself is concurrent on spare cores: free)
+                        let bytes = cfg.batch_size(g.n()) as u64 * g.d() as u64 * 4;
+                        e * sim.modeled_secs(hthc::memory::Tier::Fast, bytes, 8)
+                    }
+                    // OMP recomputes ALL n gaps serially each epoch —
+                    // unlike A+B's concurrent task A, that phase is on
+                    // the critical path and must be charged.
+                    "OMP" | "OMP WILD" => {
+                        // n updates spread over a 24-thread parallel-for
+                        e * g.n() as f64 * pm.modeled_a_update(&sim, g.d(), 24) / 24.0
+                    }
+                    _ => 0.0,
+                };
+                u as f64 * t_b + overhead
+            });
+            if *solver == "ST" {
+                st_modeled = modeled;
+            }
+            if *solver == "A+B" {
+                ab_modeled = modeled;
+            }
+            rows.push((solver.to_string(), times, b_upd, modeled, obj, res.epochs));
+        }
+        let opt = best_objs.iter().cloned().fold(f64::INFINITY, f64::min);
+        for (name, times, b_upd, modeled, obj, epochs) in rows {
+            table.row(vec![
+                name,
+                fmt_opt_secs(times[1]),
+                b_upd.map(|u| u.to_string()).unwrap_or_else(|| "--".into()),
+                fmt_opt_secs(modeled),
+                format!("{:.3e}", obj - opt),
+                epochs.to_string(),
+            ]);
+        }
+        table.print();
+        if let (Some(st), Some(ab)) = (st_modeled, ab_modeled) {
+            println!(
+                "modeled KNL speedup A+B over ST at gap<1e-3: {:.1}x  (paper: 5-10x dense lasso, ~1x dense svm, <1x sparse)",
+                st / ab
+            );
+        }
+        println!();
+    }
+
+    // guard for the OMP-WILD plateau claim: its final suboptimality must
+    // exceed OMP-atomic's on at least one dense case (broken v = D alpha).
+    let g = bench_dataset(DatasetKind::EpsilonLike, Family::Regression, 7);
+    let o0v = obj0(&*bench_model("lasso", g.n()), &g.matrix, &g.targets);
+    let run = |s: &str| {
+        let mut m = bench_model("lasso", g.n());
+        let cfg = bench_cfg(1e-5 * o0v, 15.0);
+        let r = run_solver(s, m.as_mut(), &g.matrix, &g.targets, &cfg);
+        // true suboptimality against a consistent v (recomputed)
+        let v2 = g.matrix.matvec_alpha(&r.alpha);
+        let mut fresh = hthc::glm::Lasso::new(0.3);
+        use hthc::glm::GlmModel;
+        fresh.epoch_refresh(&r.alpha);
+        let obj = fresh.objective(&v2, &g.targets, &r.alpha);
+        let gap = glm::total_gap(&fresh, g.matrix.as_ops(), &v2, &g.targets, &r.alpha);
+        (obj, gap)
+    };
+    let (obj_atomic, gap_atomic) = run("OMP");
+    let (obj_wild, gap_wild) = run("OMP WILD");
+    println!(
+        "OMP plateau check: atomic obj {obj_atomic:.6e} (true gap {gap_atomic:.3e}) vs \
+         wild obj {obj_wild:.6e} (true gap {gap_wild:.3e})"
+    );
+    println!(
+        "expected: wild's *true* gap stays above atomic's when races occur \
+         (single-core hosts may serialize races away)."
+    );
+}

@@ -1,0 +1,121 @@
+//! Fig. 7 — Sensitivity to the number of task-A updates per epoch
+//! (paper §V-D): run HTHC with A performing a *fixed* number of gap
+//! refreshes per epoch and measure convergence.
+//!
+//! Paper shape: ~10% of n updates per epoch already achieves the best
+//! wall-clock; fewer updates need more epochs but the epochs are
+//! cheaper, so there is a sweet spot well below 100%.
+
+use hthc::bench_support::*;
+use hthc::coordinator::{task_a, task_b, GapMemory, Selection, SharedVector, WorkingSet};
+use hthc::data::generator::{DatasetKind, Family};
+use hthc::glm::{self};
+use hthc::memory::TierSim;
+use hthc::metrics::{report::fmt_opt_secs, Table};
+use hthc::threadpool::WorkerPool;
+use hthc::util::{Rng, Timer};
+
+/// HTHC epoch loop with a fixed A-update budget per epoch (the paper's
+/// Fig. 7 protocol; T_A = 10 there, scaled-down topology here).
+fn run_fixed_a(
+    g: &hthc::data::GeneratedDataset,
+    model_name: &str,
+    a_frac: f64,
+    target_gap: f64,
+    timeout: f64,
+) -> (Option<f64>, usize) {
+    let mut model = bench_model(model_name, g.n());
+    let (d, n) = (g.d(), g.n());
+    let m_batch = (n / 12).max(1);
+    let pool_a = WorkerPool::with_name(2, "fig7-a");
+    let pool_b = WorkerPool::with_name(2, "fig7-b");
+    let v = SharedVector::new(d, 1024);
+    let alpha = SharedVector::new(n, usize::MAX >> 1);
+    let gaps = GapMemory::new(n);
+    let mut ws = WorkingSet::new(&g.matrix, m_batch);
+    let sim = TierSim::default();
+    let mut rng = Rng::new(99);
+    let timer = Timer::start();
+    let a_budget = ((n as f64 * a_frac) as usize).max(1);
+
+    for epoch in 1..=100_000u32 {
+        let alpha_snap = alpha.snapshot();
+        model.epoch_refresh(&alpha_snap);
+        let kind = model.kind();
+        let v_snap = v.snapshot();
+        let mut w = vec![0.0f32; d];
+        for r in 0..d {
+            w[r] = kind.w_of(v_snap[r], g.targets[r]);
+        }
+        let sel = if epoch == 1 { Selection::Random } else { Selection::DualityGap };
+        let batch = sel.select(&gaps.values(), m_batch, &mut rng);
+        ws.swap_in(&g.matrix, &batch, &sim);
+
+        // A: exactly a_budget random refreshes, then B (sequentialized —
+        // the budget, not the overlap, is what Fig. 7 varies)
+        let coords: Vec<usize> = (0..a_budget).map(|_| rng.below(n)).collect();
+        let snap = task_a::ASnapshot { w: &w, alpha: &alpha_snap, kind, epoch };
+        task_a::run_fixed(&pool_a, &g.matrix, &snap, &gaps, &coords, &sim);
+
+        let items = task_b::WorkItem::from_batch(&batch);
+        task_b::run_epoch(&pool_b, &ws, &items, &v, &g.targets, &alpha, kind, 2, 1, &sim);
+        for &j in &batch {
+            gaps.mark_processed(j, 0.0, epoch);
+        }
+
+        if epoch % 5 == 0 {
+            let a_now = alpha.snapshot();
+            let v_now = g.matrix.matvec_alpha(&a_now);
+            v.store_all(&v_now);
+            let gap = glm::total_gap(
+                model.as_ref(), g.matrix.as_ops(), &v_now, &g.targets, &a_now,
+            );
+            if gap <= target_gap {
+                return (Some(timer.secs()), epoch as usize);
+            }
+        }
+        if timer.secs() > timeout {
+            return (None, epoch as usize);
+        }
+    }
+    (None, 100_000)
+}
+
+fn main() {
+    println!("Fig. 7 reproduction: sensitivity to A updates per epoch\n");
+    let timeout = 15.0;
+    for (kind, model_name) in [
+        (DatasetKind::EpsilonLike, "lasso"),
+        (DatasetKind::DvscLike, "svm"),
+    ] {
+        let family = if model_name == "svm" {
+            Family::Classification
+        } else {
+            Family::Regression
+        };
+        let g = bench_dataset(kind, family, 8000);
+        let probe = bench_model(model_name, g.n());
+        let o0 = obj0(probe.as_ref(), &g.matrix, &g.targets);
+        let target = 1e-3 * o0;
+        let mut table = Table::new(
+            format!("Fig 7: {} / {}", model_name, g.kind.name()),
+            &["A updates/epoch", "% of n", "t(converge)", "epochs"],
+        );
+        for frac in [0.01f64, 0.05, 0.10, 0.25, 0.50, 1.00] {
+            let (t, epochs) = run_fixed_a(&g, model_name, frac, target, timeout);
+            table.row(vec![
+                ((g.n() as f64 * frac) as usize).to_string(),
+                format!("{:.0}%", frac * 100.0),
+                fmt_opt_secs(t),
+                epochs.to_string(),
+            ]);
+        }
+        table.print();
+        println!();
+    }
+    println!(
+        "expected shape (paper Fig. 7): ~10% A-updates/epoch already gives \
+         the best time; more updates cost epoch time without helping, fewer \
+         need more epochs."
+    );
+}

@@ -1,0 +1,224 @@
+//! §Perf — hot-path microbenchmarks for the optimization pass.
+//!
+//! Profiles every inner loop the end-to-end runs spend time in:
+//! dense/sparse/quantized dots, locked axpy across lock granularities,
+//! top-m selection, barrier crossings, PJRT gap-batch latency vs the
+//! native loop.  Before/after numbers from this harness are recorded in
+//! EXPERIMENTS.md §Perf.
+
+use hthc::coordinator::{selection, SharedVector};
+use hthc::data::dense::dot_f32;
+use hthc::data::{ColumnOps, DenseMatrix, QuantizedMatrix, SparseMatrix};
+use hthc::metrics::Table;
+use hthc::threadpool::SpinBarrier;
+use hthc::util::timer::{bench_median, KNL_HZ};
+use hthc::util::{Rng, Timer};
+
+fn main() {
+    println!("§Perf hot-path microbenchmarks\n");
+    let mut rng = Rng::new(424242);
+
+    // ---- dense dot -----------------------------------------------------
+    let mut t = Table::new(
+        "dense dot_f32 (task A/B inner product)",
+        &["d", "GB/s", "flops/cycle@1.5GHz", "ns/call"],
+    );
+    for &d in &[1_000usize, 10_000, 100_000, 1_000_000] {
+        let a: Vec<f32> = (0..d).map(|_| rng.normal()).collect();
+        let b: Vec<f32> = (0..d).map(|_| rng.normal()).collect();
+        let mut acc = 0.0f32;
+        let (med, _) = bench_median(|| acc += dot_f32(&a, &b), 0.15, 10_000);
+        std::hint::black_box(acc);
+        t.row(vec![
+            d.to_string(),
+            format!("{:.2}", (d * 8) as f64 / med / 1e9),
+            format!("{:.2}", 2.0 * d as f64 / (med * KNL_HZ)),
+            format!("{:.0}", med * 1e9),
+        ]);
+    }
+    t.print();
+
+    // ---- fused stale dot (task B's actual read path) --------------------
+    let mut t = Table::new(
+        "fused dot_mapped_range over SharedVector (atomic reads)",
+        &["d", "GB/s", "vs plain dot", "ns/call"],
+    );
+    for &d in &[10_000usize, 100_000] {
+        let col: Vec<f32> = (0..d).map(|_| rng.normal()).collect();
+        let y: Vec<f32> = (0..d).map(|_| rng.normal()).collect();
+        let plain: Vec<f32> = (0..d).map(|_| rng.normal()).collect();
+        let v = SharedVector::from_slice(&plain, 1024);
+        let mut acc = 0.0f32;
+        let (med_fused, _) = bench_median(
+            || acc += v.dot_mapped_range(&col, &y, |vj, yj| vj - yj, 0, d),
+            0.15,
+            10_000,
+        );
+        let mut acc2 = 0.0f32;
+        let (med_plain, _) = bench_median(|| acc2 += dot_f32(&col, &plain), 0.1, 10_000);
+        std::hint::black_box((acc, acc2));
+        t.row(vec![
+            d.to_string(),
+            format!("{:.2}", (d * 12) as f64 / med_fused / 1e9),
+            format!("{:.2}x slower", med_fused / med_plain),
+            format!("{:.0}", med_fused * 1e9),
+        ]);
+    }
+    t.print();
+
+    // ---- locked axpy across lock granularities --------------------------
+    let mut t = Table::new(
+        "axpy_dense_locked (single thread): lock-chunk sweep, d = 100k",
+        &["lock chunk", "GB/s", "ns/call", "locks taken"],
+    );
+    let d = 100_000;
+    let col: Vec<f32> = (0..d).map(|_| rng.normal()).collect();
+    for &chunk in &[64usize, 256, 1024, 4096, 16384] {
+        let v = SharedVector::new(d, chunk);
+        let (med, _) = bench_median(|| v.axpy_dense_locked(&col, 1e-6, 0, d), 0.15, 5_000);
+        t.row(vec![
+            chunk.to_string(),
+            format!("{:.2}", (d * 12) as f64 / med / 1e9),
+            format!("{:.0}", med * 1e9),
+            d.div_ceil(chunk).to_string(),
+        ]);
+    }
+    t.print();
+
+    // ---- sparse + quantized dots ----------------------------------------
+    let mut t = Table::new("sparse & quantized column dots", &["repr", "nnz/d", "ns/col", "GB/s"]);
+    {
+        let d = 100_000;
+        let nnz = 2_000;
+        let idx = rng.sample_distinct(d, nnz);
+        let cols = vec![idx.iter().map(|&r| (r as u32, rng.normal())).collect::<Vec<_>>()];
+        let sm = SparseMatrix::from_columns(d, cols);
+        let w: Vec<f32> = (0..d).map(|_| rng.normal()).collect();
+        let mut acc = 0.0f32;
+        let (med, _) = bench_median(|| acc += sm.dot(0, &w), 0.1, 20_000);
+        t.row(vec![
+            "sparse CSC".into(),
+            format!("{nnz}/{d}"),
+            format!("{:.0}", med * 1e9),
+            format!("{:.2}", (nnz * 8) as f64 / med / 1e9),
+        ]);
+
+        let dq = 65_536;
+        let data: Vec<f32> = (0..dq).map(|_| rng.normal()).collect();
+        let dm = DenseMatrix::from_col_major(dq, 1, data);
+        let qm = QuantizedMatrix::from_dense(&dm);
+        let wq: Vec<f32> = (0..dq).map(|_| rng.normal()).collect();
+        let mut acc2 = 0.0f32;
+        let (medq, _) = bench_median(|| acc2 += qm.dot(0, &wq), 0.1, 20_000);
+        let mut acc3 = 0.0f32;
+        let (medd, _) = bench_median(|| acc3 += dm.dot(0, &wq), 0.1, 20_000);
+        std::hint::black_box((acc, acc2, acc3));
+        t.row(vec![
+            "quantized 4-bit".into(),
+            format!("{dq}/{dq}"),
+            format!("{:.0}", medq * 1e9),
+            format!("{:.2} ({}x fewer bytes, {:.2}x time vs fp32)",
+                qm.col_bytes(0) as f64 / medq / 1e9,
+                (dm.col_bytes(0) / qm.col_bytes(0)),
+                medq / medd),
+        ]);
+    }
+    t.print();
+
+    // ---- selection ------------------------------------------------------
+    let mut t = Table::new("top-m selection (epoch boundary)", &["n", "m", "us/call"]);
+    for &(n, m) in &[(100_000usize, 1_000usize), (1_000_000, 10_000)] {
+        let z: Vec<f32> = (0..n).map(|_| rng.f32()).collect();
+        let mut out = 0usize;
+        let (med, _) = bench_median(|| out += selection::top_m(&z, m).len(), 0.2, 200);
+        std::hint::black_box(out);
+        t.row(vec![n.to_string(), m.to_string(), format!("{:.0}", med * 1e6)]);
+    }
+    t.print();
+
+    // ---- barriers ---------------------------------------------------------
+    {
+        let mut t = Table::new("barrier crossings (V_B sync cost)", &["kind", "threads", "ns/crossing"]);
+        for &threads in &[2usize, 4] {
+            let b = SpinBarrier::new(threads);
+            let rounds = 5_000;
+            let timer = Timer::start();
+            std::thread::scope(|s| {
+                for _ in 0..threads {
+                    s.spawn(|| {
+                        for _ in 0..rounds {
+                            b.wait();
+                        }
+                    });
+                }
+            });
+            t.row(vec![
+                "spin".into(),
+                threads.to_string(),
+                format!("{:.0}", timer.secs() / rounds as f64 * 1e9),
+            ]);
+        }
+        t.print();
+    }
+
+    // ---- PJRT gap batch vs native ----------------------------------------
+    let dir = hthc::runtime::default_artifacts_dir();
+    if dir.join("manifest.txt").exists() {
+        use hthc::coordinator::hthc::GapBackend;
+        use hthc::glm::GlmModel;
+        let rt = hthc::runtime::XlaRuntime::start(&dir).expect("runtime");
+        let service = hthc::runtime::GapService::new(&rt);
+        let g = hthc::data::generator::generate(
+            hthc::data::generator::DatasetKind::EpsilonLike,
+            hthc::data::generator::Family::Regression,
+            0.2,
+            31,
+        );
+        let (d, n) = (g.d(), g.n());
+        let w: Vec<f32> = (0..d).map(|_| rng.normal()).collect();
+        let alpha: Vec<f32> = (0..n).map(|_| rng.normal() * 0.1).collect();
+        let kind = hthc::glm::Lasso::new(0.05).kind();
+        let coords: Vec<usize> = (0..service.block_len().min(n)).collect();
+        // warm once (compile)
+        let _ = service.batch_gaps(&g.matrix, &coords, &w, &alpha, kind);
+        let (med_pjrt, _) = bench_median(
+            || {
+                std::hint::black_box(
+                    service.batch_gaps(&g.matrix, &coords, &w, &alpha, kind),
+                );
+            },
+            0.3,
+            200,
+        );
+        let ops = g.matrix.as_ops();
+        let (med_native, _) = bench_median(
+            || {
+                let mut s = 0.0f32;
+                for &j in &coords {
+                    s += kind.gap(ops.dot(j, &w), alpha[j]);
+                }
+                std::hint::black_box(s);
+            },
+            0.2,
+            2_000,
+        );
+        let mut t = Table::new(
+            "task A gap batch: native loop vs PJRT artifact (CPU)",
+            &["path", "us/block(256 coords)", "ratio"],
+        );
+        t.row(vec!["native".into(), format!("{:.0}", med_native * 1e6), "1.0x".into()]);
+        t.row(vec![
+            "pjrt (interpret-mode pallas on CPU)".into(),
+            format!("{:.0}", med_pjrt * 1e6),
+            format!("{:.1}x", med_pjrt / med_native),
+        ]);
+        t.print();
+        println!(
+            "note: the PJRT path pays per-call literal packing + CPU \
+             interpret overhead; on a TPU backend the same artifact is the \
+             fast path.  Structural (VMEM/roofline) analysis in DESIGN.md."
+        );
+    } else {
+        println!("(artifacts not built; skipping PJRT microbench)");
+    }
+}

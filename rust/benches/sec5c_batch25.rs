@@ -1,0 +1,77 @@
+//! §V-C (GPU-system comparison) — HTHC with the batch size forced to
+//! 25% (the largest that fit the GPU RAM of the reference
+//! heterogeneous system, Duenner et al. [10]) versus HTHC at its best
+//! batch size.
+//!
+//! Paper numbers: DvsC Lasso 29 s @25% -> 20 s @best; SVM 84 s -> 41 s.
+//! Shape to reproduce: the forced-25% configuration is substantially
+//! slower than the tuned one — the advantage HTHC's *standalone*
+//! adaptivity has over an accelerator-bound split.
+
+use hthc::bench_support::*;
+use hthc::data::generator::{DatasetKind, Family};
+use hthc::metrics::{report::fmt_opt_secs, Table};
+
+fn main() {
+    println!("§V-C reproduction: forced 25% batch vs tuned batch (dvsc-like)\n");
+    let timeout = 25.0;
+    let mut table = Table::new(
+        "HTHC batch-size adaptivity (dvsc-like)",
+        &["model", "%B", "t(converge)", "epochs", "refresh/epoch"],
+    );
+    for model_name in ["lasso", "svm"] {
+        let family = if model_name == "svm" {
+            Family::Classification
+        } else {
+            Family::Regression
+        };
+        let g = bench_dataset(DatasetKind::DvscLike, family, 9000);
+        let probe = bench_model(model_name, g.n());
+        let o0 = obj0(probe.as_ref(), &g.matrix, &g.targets);
+        let target = 1e-3 * o0;
+
+        // tuned: small search over batch fracs
+        let mut best: Option<(f64, f64, usize, f64)> = None;
+        for &frac in &[0.02f64, 0.05, 0.10, 0.25] {
+            let mut cfg = bench_cfg(target, timeout);
+            cfg.batch_frac = frac;
+            let mut model = bench_model(model_name, g.n());
+            let res = run_solver("A+B", model.as_mut(), &g.matrix, &g.targets, &cfg);
+            if let Some(t) = res.trace.time_to_gap(target) {
+                if best.map_or(true, |b| t < b.0) {
+                    best = Some((t, frac, res.epochs, res.mean_refresh_frac));
+                }
+            }
+            if (frac - 0.25).abs() < 1e-12 {
+                table.row(vec![
+                    model_name.into(),
+                    "25% (forced, GPU-RAM analogue)".into(),
+                    fmt_opt_secs(res.trace.time_to_gap(target)),
+                    res.epochs.to_string(),
+                    format!("{:.0}%", res.mean_refresh_frac * 100.0),
+                ]);
+            }
+        }
+        match best {
+            Some((t, frac, epochs, refresh)) => table.row(vec![
+                model_name.into(),
+                format!("{:.0}% (best found)", frac * 100.0),
+                fmt_opt_secs(Some(t)),
+                epochs.to_string(),
+                format!("{:.0}%", refresh * 100.0),
+            ]),
+            None => table.row(vec![
+                model_name.into(),
+                "best (none converged)".into(),
+                "--".into(),
+                "--".into(),
+                "--".into(),
+            ]),
+        };
+    }
+    table.print();
+    println!(
+        "\nexpected shape (paper §V-C): tuned %B converges substantially \
+         faster than the forced 25% (paper: 29->20 s Lasso, 84->41 s SVM)."
+    );
+}

@@ -1,0 +1,114 @@
+//! Table IV — SVM time-to-accuracy: A+B and ST vs PASSCoDe-atomic and
+//! PASSCoDe-wild (paper §V-C).
+//!
+//! Paper shape: HTHC ~2x faster on epsilon-like, 2.4-5x on dvsc-like;
+//! PASSCoDe clearly faster on news20-like sparse (HTHC's chunk locks
+//! are wasteful for sparse data — the paper's own finding).
+
+use hthc::baselines::{train_passcode, PasscodeMode};
+use hthc::bench_support::*;
+use hthc::coordinator::HthcSolver;
+use hthc::data::generator::{DatasetKind, Family};
+use hthc::glm::SvmDual;
+use hthc::memory::TierSim;
+use hthc::metrics::{report::fmt_opt_secs, Table};
+use hthc::util::Timer;
+
+/// Train until accuracy target, returning seconds (None on timeout).
+fn time_to_accuracy(
+    solver: &str,
+    g: &hthc::data::GeneratedDataset,
+    target: f64,
+    timeout: f64,
+) -> Option<f64> {
+    let n = g.n();
+    let lam = 1e-3f32;
+    let sim = TierSim::default();
+    let acc_of = |v: &[f32]| {
+        let ops = g.matrix.as_ops();
+        (0..n).filter(|&j| ops.dot(j, v) > 0.0).count() as f64 / n as f64
+    };
+    match solver {
+        "PASSCoDe-atomic" | "PASSCoDe-wild" => {
+            let mode = if solver.ends_with("wild") {
+                PasscodeMode::Wild
+            } else {
+                PasscodeMode::Atomic
+            };
+            let mut cfg = bench_cfg(0.0, timeout);
+            cfg.eval_every = 1;
+            let mut model = SvmDual::new(lam, n);
+            let mut hit: Option<f64> = None;
+            let _ = train_passcode(
+                &mut model, &g.matrix, &g.targets, &cfg, &sim, mode,
+                |_, secs, v_now, _| {
+                    if acc_of(v_now) >= target {
+                        hit = Some(secs);
+                        true
+                    } else {
+                        false
+                    }
+                },
+            );
+            hit
+        }
+        name => {
+            // The generic solvers have no mid-run accuracy hook; probe
+            // with geometrically growing (cold-start, same-seed) epoch
+            // budgets and report the wall time of the first run that
+            // reaches the target — an upper bound within 2x of the true
+            // time-to-accuracy.
+            let outer = Timer::start();
+            let mut budget = 1usize;
+            while outer.secs() < timeout {
+                let mut cfg = bench_cfg(0.0, timeout - outer.secs());
+                cfg.eval_every = usize::MAX >> 1; // skip gap evals: pure speed
+                cfg.max_epochs = budget;
+                let mut model = SvmDual::new(lam, n);
+                let res = match name {
+                    "A+B" => {
+                        let s = HthcSolver::new(cfg);
+                        s.train(&mut model, &g.matrix, &g.targets, &sim)
+                    }
+                    _ => run_solver(name, &mut model, &g.matrix, &g.targets, &cfg),
+                };
+                if acc_of(&res.v) >= target {
+                    return Some(res.wall_secs);
+                }
+                if res.epochs < budget {
+                    break; // hit the timeout inside the run
+                }
+                budget *= 2;
+            }
+            None
+        }
+    }
+}
+
+fn main() {
+    println!("Table IV reproduction: SVM time-to-accuracy\n");
+    let cases = [
+        (DatasetKind::EpsilonLike, 0.85, "85%"),
+        (DatasetKind::DvscLike, 0.95, "95%"),
+        (DatasetKind::News20Like, 0.99, "99%"),
+    ];
+    let timeout = 20.0;
+    let mut table = Table::new(
+        "Table IV: SVM time to accuracy",
+        &["dataset", "accuracy", "A+B", "ST", "PASSCoDe-atomic", "PASSCoDe-wild"],
+    );
+    for (kind, target, label) in cases {
+        let g = bench_dataset(kind, Family::Classification, 4000 + kind as u64);
+        let mut row = vec![g.kind.name().to_string(), label.to_string()];
+        for solver in ["A+B", "ST", "PASSCoDe-atomic", "PASSCoDe-wild"] {
+            let t = time_to_accuracy(solver, &g, target, timeout);
+            row.push(fmt_opt_secs(t));
+        }
+        table.row(row);
+    }
+    table.print();
+    println!(
+        "\nexpected shape (paper Table IV): A+B fastest on the dense sets; \
+         PASSCoDe fastest on news20-like sparse (locking overhead)."
+    );
+}

@@ -1,0 +1,79 @@
+//! Table V — Lasso time-to-squared-error: A+B and ST vs a Vowpal-Wabbit
+//! style SGD (paper §V-C).
+//!
+//! Paper shape: HTHC wins clearly on the dense sets (epsilon: 0.56 s vs
+//! VW's 12.19 s; dvsc: 5.91 vs 47.29) and *loses* on news20-like sparse
+//! (VW 0.02 s) — CD + chunk locks are overkill for tiny sparse columns.
+
+use hthc::baselines::{sgd::RowCache, train_sgd};
+use hthc::bench_support::*;
+use hthc::data::generator::{DatasetKind, Family};
+use hthc::metrics::{report::fmt_opt_secs, Table};
+
+fn main() {
+    println!("Table V reproduction: Lasso time-to-squared-error vs SGD\n");
+    let timeout = 20.0;
+    let mut table = Table::new(
+        "Table V: time to reach the target mean squared error",
+        &["dataset", "target MSE", "A+B", "ST", "SGD (VW-style)"],
+    );
+
+    for kind in [
+        DatasetKind::EpsilonLike,
+        DatasetKind::DvscLike,
+        DatasetKind::News20Like,
+    ] {
+        let g = bench_dataset(kind, Family::Regression, 5000 + kind as u64);
+        let cache = RowCache::build(&g.matrix);
+        // target: the MSE a converged lasso reaches, padded 10% — every
+        // solver can achieve it, the question is how fast.
+        let target = {
+            let mut model = bench_model("lasso", g.n());
+            let o0 = obj0(model.as_ref(), &g.matrix, &g.targets);
+            let cfg = bench_cfg(1e-4 * o0, timeout);
+            let res = run_solver("A+B", model.as_mut(), &g.matrix, &g.targets, &cfg);
+            let beta = res.alpha.clone();
+            cache.mean_squared_error(&beta, &g.targets) * 1.1 + 1e-6
+        };
+
+        let mut row = vec![g.kind.name().to_string(), format!("{target:.4}")];
+        // A+B and ST: time until their iterate's MSE crosses the target,
+        // probed by geometric restarts (same protocol as Table IV).
+        for solver in ["A+B", "ST"] {
+            let mut budget = 1usize;
+            let mut hit = None;
+            let outer = hthc::util::Timer::start();
+            while outer.secs() < timeout {
+                let mut model = bench_model("lasso", g.n());
+                let mut cfg = bench_cfg(0.0, timeout - outer.secs());
+                cfg.eval_every = usize::MAX >> 1;
+                cfg.max_epochs = budget;
+                let res = run_solver(solver, model.as_mut(), &g.matrix, &g.targets, &cfg);
+                if cache.mean_squared_error(&res.alpha, &g.targets) <= target {
+                    hit = Some(res.wall_secs);
+                    break;
+                }
+                if res.epochs < budget {
+                    break;
+                }
+                budget *= 2;
+            }
+            row.push(fmt_opt_secs(hit));
+        }
+        // SGD trains on rows directly, tracking MSE per epoch.
+        let cfg = bench_cfg(0.0, timeout);
+        let (trace, _beta) = train_sgd(&g.matrix, &g.targets, 1e-4, &cfg, &hthc::memory::TierSim::default(), target);
+        let sgd_time = trace
+            .points
+            .iter()
+            .find(|p| p.objective <= target)
+            .map(|p| p.secs);
+        row.push(fmt_opt_secs(sgd_time));
+        table.row(row);
+    }
+    table.print();
+    println!(
+        "\nexpected shape (paper Table V): CD solvers (A+B, ST) beat SGD on \
+         dense data; SGD wins on news20-like sparse."
+    );
+}

@@ -1,0 +1,68 @@
+//! Table VI — 32-bit vs mixed 32/4-bit representation: time to a fixed
+//! duality gap for Lasso and SVM on the dense sets (paper §V-E).
+//!
+//! Paper shape: quantization wins where data movement dominates (Lasso:
+//! 1.6 s -> 1.0 s on epsilon; 55.5 -> 32.4 on dvsc) and loses slightly
+//! where unpack ALU hurts a compute-bound loop (SVM: 5.5 -> 5.8;
+//! 38.2 -> 51.6).  We report time-to-gap, the bytes moved per sweep
+//! (the mechanism), and the achieved-gap parity.
+
+use hthc::bench_support::*;
+use hthc::data::generator::{DatasetKind, Family};
+use hthc::data::{Matrix, QuantizedMatrix};
+use hthc::metrics::{report::fmt_opt_secs, Table};
+
+fn main() {
+    println!("Table VI reproduction: 32-bit vs 32/4-bit\n");
+    let timeout = 20.0;
+    let mut table = Table::new(
+        "Table VI: time to target gap, fp32 vs quantized D",
+        &["dataset", "model", "target", "32-bit", "32/4-bit", "bytes/sweep 32b", "bytes/sweep 4b"],
+    );
+
+    for kind in [DatasetKind::EpsilonLike, DatasetKind::DvscLike] {
+        for model_name in ["lasso", "svm"] {
+            let family = if model_name == "svm" {
+                Family::Classification
+            } else {
+                Family::Regression
+            };
+            let g = bench_dataset(kind, family, 6000 + kind as u64);
+            let qmatrix = match &g.matrix {
+                Matrix::Dense(dm) => Matrix::Quantized(QuantizedMatrix::from_dense(dm)),
+                _ => unreachable!("dense kinds only"),
+            };
+            let probe = bench_model(model_name, g.n());
+            let o0 = obj0(probe.as_ref(), &g.matrix, &g.targets);
+            // quantization noise floors the gap; pick a target both
+            // representations can reach (paper uses 1e-3..1e-5 per case)
+            let target = 2e-3 * o0;
+
+            let run = |m: &Matrix| -> Option<f64> {
+                let mut model = bench_model(model_name, g.n());
+                let cfg = bench_cfg(target, timeout);
+                let res = run_solver("A+B", model.as_mut(), m, &g.targets, &cfg);
+                res.trace.time_to_gap(target)
+            };
+            let t32 = run(&g.matrix);
+            let t4 = run(&qmatrix);
+            table.row(vec![
+                g.kind.name().into(),
+                model_name.into(),
+                format!("{target:.2e}"),
+                fmt_opt_secs(t32),
+                fmt_opt_secs(t4),
+                hthc::util::fmt_bytes(g.matrix.total_bytes()),
+                hthc::util::fmt_bytes(qmatrix.total_bytes()),
+            ]);
+        }
+    }
+    table.print();
+    println!(
+        "\nexpected shape (paper Table VI): comparable times (quantized wins \
+         when bandwidth-bound — Lasso dense — at ~7x fewer bytes for D; may \
+         lose when unpack ALU dominates, e.g. SVM).  On this host the dot is \
+         compute-bound, so parity with a large byte reduction is the \
+         expected outcome; on KNL the byte reduction converts to speedup."
+    );
+}

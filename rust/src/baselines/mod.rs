@@ -1,0 +1,24 @@
+//! Reference implementations the paper benchmarks against (§V-B/C):
+//!
+//! * [`st`] — **ST**: homogeneous single-task parallel async SCD over
+//!   *all* coordinates each epoch (same low-level machinery as task B,
+//!   no duality-gap selection).
+//! * [`omp`] — **OMP** / **OMP WILD**: the "straightforward looped C
+//!   code with OpenMP directives" comparator — a flat parallel-for with
+//!   per-element atomic (or racy-wild) updates of `v`, no working set,
+//!   no thread roles, no chunk locks.
+//! * [`passcode`] — **PASSCoDe-atomic / -wild** (Hsieh et al. [16]):
+//!   asynchronous dual SCD keeping `v` in memory, per-element atomics or
+//!   lock-free writes.
+//! * [`sgd`] — a Vowpal-Wabbit-style SGD comparator for the Lasso runs
+//!   of Table V (VW does not implement CD; the paper uses its SGD).
+
+pub mod omp;
+pub mod passcode;
+pub mod sgd;
+pub mod st;
+
+pub use omp::{train_omp, OmpMode};
+pub use passcode::{train_passcode, PasscodeMode};
+pub use sgd::train_sgd;
+pub use st::train_st;

@@ -1,0 +1,117 @@
+//! HTHC run configuration (the paper's tunables: §IV-F).
+
+use super::selection::Selection;
+
+/// All knobs of one HTHC run.  Field names follow the paper:
+/// `T_A` threads for task A, `T_B` parallel updates on task B, `V_B`
+/// threads per vector operation, `%B` = `batch_frac` of coordinates
+/// updated by B per epoch.
+#[derive(Clone, Debug)]
+pub struct HthcConfig {
+    /// Threads computing gap-memory updates (paper caps at 24: DRAM
+    /// bandwidth saturation, Fig. 2).
+    pub t_a: usize,
+    /// Parallel coordinate updates on task B.
+    pub t_b: usize,
+    /// Threads per vector operation within one update (dense long
+    /// vectors only; 1 is best below d ~ 130k, Fig. 3).
+    pub v_b: usize,
+    /// Fraction of coordinates B updates per epoch (the paper's %B).
+    pub batch_frac: f64,
+    /// Coordinate selection scheme (duality-gap is the paper's).
+    pub selection: Selection,
+    /// Stop when the total duality gap falls below this.
+    pub gap_tol: f64,
+    /// Hard epoch cap.
+    pub max_epochs: usize,
+    /// Hard wall-clock cap (seconds).
+    pub timeout_secs: f64,
+    /// Shared-vector lock granularity in elements (paper: 1024).
+    pub lock_chunk: usize,
+    /// Epochs between exact convergence evaluations (gap over all
+    /// coordinates — not free, so not every epoch).
+    pub eval_every: usize,
+    /// PRNG seed (A's sampling, selection tie-breaking, shuffles).
+    pub seed: u64,
+    /// Route task A's bulk gap computation through the PJRT artifacts
+    /// (L1/L2 path) instead of the native loops, when available.
+    pub use_pjrt_gaps: bool,
+    /// Online batch-size control: adjust `m` each epoch to keep task A's
+    /// refresh fraction near this target (the §IV-F constraint r~ as a
+    /// feedback controller instead of an offline table).  None = fixed
+    /// `batch_frac`.
+    pub adaptive_r_tilde: Option<f64>,
+}
+
+impl Default for HthcConfig {
+    fn default() -> Self {
+        HthcConfig {
+            t_a: 4,
+            t_b: 2,
+            v_b: 1,
+            batch_frac: 0.08,
+            selection: Selection::DualityGap,
+            gap_tol: 1e-5,
+            max_epochs: 200,
+            timeout_secs: 120.0,
+            lock_chunk: 1024,
+            eval_every: 1,
+            seed: 42,
+            use_pjrt_gaps: false,
+            adaptive_r_tilde: None,
+        }
+    }
+}
+
+impl HthcConfig {
+    /// Batch size `m` for a problem with `n` coordinates (at least 1).
+    pub fn batch_size(&self, n: usize) -> usize {
+        ((n as f64 * self.batch_frac).round() as usize).clamp(1, n)
+    }
+
+    /// Total threads this configuration uses (paper's T_total).
+    pub fn total_threads(&self) -> usize {
+        self.t_a + self.t_b * self.v_b
+    }
+
+    /// Panic-early validation with actionable messages.
+    pub fn validate(&self) {
+        assert!(self.t_a >= 1, "t_a must be >= 1");
+        assert!(self.t_b >= 1, "t_b must be >= 1");
+        assert!(self.v_b >= 1, "v_b must be >= 1");
+        assert!(
+            self.batch_frac > 0.0 && self.batch_frac <= 1.0,
+            "batch_frac in (0, 1]"
+        );
+        assert!(self.lock_chunk >= 1, "lock_chunk must be >= 1");
+        assert!(self.eval_every >= 1, "eval_every must be >= 1");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_size_clamps() {
+        let mut c = HthcConfig::default();
+        c.batch_frac = 0.1;
+        assert_eq!(c.batch_size(100), 10);
+        c.batch_frac = 1e-9;
+        assert_eq!(c.batch_size(100), 1);
+        c.batch_frac = 1.0;
+        assert_eq!(c.batch_size(100), 100);
+    }
+
+    #[test]
+    fn total_threads_matches_paper_formula() {
+        let c = HthcConfig { t_a: 12, t_b: 8, v_b: 6, ..Default::default() };
+        assert_eq!(c.total_threads(), 12 + 48); // Table II epsilon row
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_threads_rejected() {
+        HthcConfig { t_b: 0, ..Default::default() }.validate();
+    }
+}

@@ -1,0 +1,146 @@
+//! The gap memory `z in R^n` (paper §III).
+//!
+//! Task A's threads write `z_i` concurrently (one writer per coordinate
+//! at a time in practice, but nothing enforces it — writes are atomic
+//! stores and last-writer-wins is fine for an importance *heuristic*).
+//! Staleness is tracked per-coordinate by the epoch stamp of the last
+//! refresh: the paper's convergence argument needs a sufficient fraction
+//! (~15%, §IV-F) of z refreshed every epoch, which [`GapMemory::refresh_stats`]
+//! reports and the benches assert.
+
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+
+pub struct GapMemory {
+    z: Vec<AtomicU32>,
+    /// Epoch of last refresh, per coordinate.
+    stamp: Vec<AtomicU32>,
+    /// Updates performed during the current epoch.
+    epoch_updates: AtomicU64,
+}
+
+impl GapMemory {
+    /// All-gaps-infinite start: every coordinate looks maximally
+    /// important until A has touched it once, so early selection
+    /// approximates uniform random (paper: first epoch is random).
+    pub fn new(n: usize) -> Self {
+        GapMemory {
+            z: (0..n).map(|_| AtomicU32::new(f32::INFINITY.to_bits())).collect(),
+            stamp: (0..n).map(|_| AtomicU32::new(0)).collect(),
+            epoch_updates: AtomicU64::new(0),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.z.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.z.is_empty()
+    }
+
+    /// Task A's write: refresh `z_i` in epoch `epoch`.
+    #[inline]
+    pub fn update(&self, i: usize, gap: f32, epoch: u32) {
+        self.z[i].store(gap.to_bits(), Ordering::Relaxed);
+        self.stamp[i].store(epoch, Ordering::Relaxed);
+        self.epoch_updates.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Task B's write-back after processing coordinate `i`: an exact
+    /// coordinate step drives that coordinate's own gap to ~0, so its
+    /// stale (large) z value must not keep winning selection — without
+    /// this, greedy selection re-picks already-handled coordinates and
+    /// starves the rest whenever A's refresh fraction is low.  Stamps
+    /// the entry fresh but does not count as an A update.
+    #[inline]
+    pub fn mark_processed(&self, i: usize, residual_gap: f32, epoch: u32) {
+        self.z[i].store(residual_gap.to_bits(), Ordering::Relaxed);
+        self.stamp[i].store(epoch, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn read(&self, i: usize) -> f32 {
+        f32::from_bits(self.z[i].load(Ordering::Relaxed))
+    }
+
+    pub fn values(&self) -> Vec<f32> {
+        (0..self.len()).map(|i| self.read(i)).collect()
+    }
+
+    /// (updates this epoch, fraction of distinct coords stamped this
+    /// epoch).  Called by the leader at the epoch boundary, then reset.
+    pub fn refresh_stats(&self, epoch: u32) -> (u64, f64) {
+        let updates = self.epoch_updates.load(Ordering::Relaxed);
+        let fresh = self
+            .stamp
+            .iter()
+            .filter(|s| s.load(Ordering::Relaxed) == epoch)
+            .count();
+        (updates, fresh as f64 / self.len().max(1) as f64)
+    }
+
+    pub fn reset_epoch_counter(&self) {
+        self.epoch_updates.store(0, Ordering::Relaxed);
+    }
+
+    /// Age (in epochs) of each entry at `epoch` — staleness histogram
+    /// input for the diagnostics in EXPERIMENTS.md.
+    pub fn staleness(&self, epoch: u32) -> Vec<u32> {
+        self.stamp
+            .iter()
+            .map(|s| epoch.saturating_sub(s.load(Ordering::Relaxed)))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn starts_infinite_everywhere() {
+        let g = GapMemory::new(5);
+        assert!(g.values().iter().all(|z| z.is_infinite()));
+    }
+
+    #[test]
+    fn update_and_stats() {
+        let g = GapMemory::new(10);
+        g.update(3, 0.5, 1);
+        g.update(7, 0.25, 1);
+        g.update(3, 0.6, 1); // refresh same coord
+        let (updates, frac) = g.refresh_stats(1);
+        assert_eq!(updates, 3);
+        assert!((frac - 0.2).abs() < 1e-12, "2 distinct / 10");
+        assert_eq!(g.read(3), 0.6);
+        g.reset_epoch_counter();
+        assert_eq!(g.refresh_stats(1).0, 0);
+    }
+
+    #[test]
+    fn staleness_ages() {
+        let g = GapMemory::new(3);
+        g.update(0, 1.0, 1);
+        g.update(1, 1.0, 4);
+        let s = g.staleness(5);
+        assert_eq!(s, vec![4, 1, 5]);
+    }
+
+    #[test]
+    fn concurrent_updates_all_counted() {
+        let g = GapMemory::new(100);
+        std::thread::scope(|s| {
+            for t in 0..4 {
+                let g = &g;
+                s.spawn(move || {
+                    for i in 0..100 {
+                        g.update((t * 25 + i) % 100, i as f32, 2);
+                    }
+                });
+            }
+        });
+        let (updates, frac) = g.refresh_stats(2);
+        assert_eq!(updates, 400);
+        assert_eq!(frac, 1.0);
+    }
+}

@@ -1,0 +1,499 @@
+//! The HTHC epoch loop (paper §III, Fig. 1).
+//!
+//! Per epoch, the leader:
+//!
+//! 1. refreshes iterate-dependent model constants (`epoch_refresh`),
+//! 2. snapshots `(v, alpha)` and materializes `w` for task A,
+//! 3. selects the next batch from the (stale) gap memory — first epoch
+//!    is uniform random, as all gaps start unknown,
+//! 4. swaps the batch columns into task B's fast-tier working set,
+//! 5. releases tasks A and B **concurrently** on their disjoint pools,
+//! 6. when B finishes its batch, raises A's stop flag, collects
+//!    staleness statistics, evaluates convergence, and loops.
+//!
+//! Task A's bulk gap computation can optionally be routed through the
+//! AOT-compiled JAX/Pallas artifacts (the [`GapBackend`] hook, fulfilled
+//! by `crate::runtime`); python is never involved at run time.
+
+use super::config::HthcConfig;
+use super::gap_memory::GapMemory;
+use super::selection::Selection;
+use super::shared_vec::SharedVector;
+use super::working_set::WorkingSet;
+use super::{task_a, task_b};
+use crate::data::Matrix;
+use crate::glm::{self, GlmModel};
+use crate::memory::TierSim;
+use crate::metrics::{ConvergenceTrace, PhaseTimes, StalenessHistogram};
+use crate::threadpool::WorkerPool;
+use crate::util::{Rng, Timer};
+use std::sync::atomic::{AtomicBool, Ordering};
+
+/// Offload hook for task A's batched gap evaluation (PJRT runtime).
+pub trait GapBackend: Sync {
+    /// Compute `z = gap(<w, d_j>, alpha_j)` for a coordinate block.
+    /// Returns None if this block cannot be offloaded (e.g. shape
+    /// mismatch with every compiled artifact) — caller falls back to
+    /// the native path.
+    fn batch_gaps(
+        &self,
+        data: &Matrix,
+        coords: &[usize],
+        w: &[f32],
+        alpha: &[f32],
+        kind: crate::glm::ModelKind,
+    ) -> Option<Vec<f32>>;
+
+    /// Preferred coordinate-block size (the artifact's n-tile).
+    fn block_len(&self) -> usize;
+}
+
+/// Outcome of a training run.
+pub struct TrainResult {
+    pub alpha: Vec<f32>,
+    pub v: Vec<f32>,
+    pub trace: ConvergenceTrace,
+    pub epochs: usize,
+    /// Mean fraction of gap memory refreshed per epoch (paper wants
+    /// >= ~15%; §IV-F).
+    pub mean_refresh_frac: f64,
+    pub total_a_updates: u64,
+    pub total_b_updates: u64,
+    pub total_b_zero_deltas: u64,
+    pub wall_secs: f64,
+    /// True if stopped by reaching `gap_tol`.
+    pub converged: bool,
+    /// Where epoch time went (§Perf diagnostics).
+    pub phase_times: PhaseTimes,
+    /// Gap-memory staleness at the end of the run.
+    pub staleness: StalenessHistogram,
+}
+
+impl TrainResult {
+    pub fn summary(&self) -> String {
+        format!(
+            "epochs={} wall={} gap={:.3e} obj={:.6e} refreshed/epoch={:.1}% A-updates={} B-updates={} (zero-deltas {})",
+            self.epochs,
+            crate::util::fmt_secs(self.wall_secs),
+            self.trace.final_gap().unwrap_or(f64::NAN),
+            self.trace.final_objective().unwrap_or(f64::NAN),
+            100.0 * self.mean_refresh_frac,
+            self.total_a_updates,
+            self.total_b_updates,
+            self.total_b_zero_deltas,
+        )
+    }
+}
+
+/// The solver: owns the two pinned pools for the lifetime of a run
+/// (paper §IV-B: constant thread pools, no churn across epochs).
+pub struct HthcSolver {
+    pub config: HthcConfig,
+    pool_a: WorkerPool,
+    pool_b: WorkerPool,
+}
+
+impl HthcSolver {
+    pub fn new(config: HthcConfig) -> Self {
+        config.validate();
+        let pool_a = WorkerPool::with_name(config.t_a, "hthc-a");
+        let pool_b = WorkerPool::with_name(config.t_b * config.v_b, "hthc-b");
+        HthcSolver { config, pool_a, pool_b }
+    }
+
+    /// Train with the native task-A path.
+    pub fn train(
+        &self,
+        model: &mut dyn GlmModel,
+        data: &Matrix,
+        y: &[f32],
+        sim: &TierSim,
+    ) -> TrainResult {
+        self.train_impl(model, data, y, sim, None)
+    }
+
+    /// Train with task A's gap sweeps offloaded to a PJRT backend.
+    pub fn train_with_backend(
+        &self,
+        model: &mut dyn GlmModel,
+        data: &Matrix,
+        y: &[f32],
+        sim: &TierSim,
+        backend: &dyn GapBackend,
+    ) -> TrainResult {
+        self.train_impl(model, data, y, sim, Some(backend))
+    }
+
+    fn train_impl(
+        &self,
+        model: &mut dyn GlmModel,
+        data: &Matrix,
+        y: &[f32],
+        sim: &TierSim,
+        backend: Option<&dyn GapBackend>,
+    ) -> TrainResult {
+        let cfg = &self.config;
+        let (d, n) = (data.n_rows(), data.n_cols());
+        assert_eq!(y.len(), d, "targets length must equal rows");
+        let mut m_batch = cfg.batch_size(n);
+        // headroom for the adaptive controller to grow the batch
+        let m_slots = if cfg.adaptive_r_tilde.is_some() {
+            (m_batch * 4).clamp(m_batch, n)
+        } else {
+            m_batch
+        };
+
+        let v = SharedVector::new(d, cfg.lock_chunk);
+        let alpha = SharedVector::new(n, usize::MAX >> 1);
+        let gaps = GapMemory::new(n);
+        let mut ws = WorkingSet::new(data, m_slots);
+        let mut rng = Rng::new(cfg.seed);
+        let mut trace = ConvergenceTrace::new("hthc");
+        let timer = Timer::start();
+
+        let mut total_a = 0u64;
+        let mut total_b = 0u64;
+        let mut total_zero = 0u64;
+        let mut frac_sum = 0.0f64;
+        let mut converged = false;
+        let mut epochs = 0usize;
+        let mut phases = PhaseTimes::default();
+
+        for epoch in 1..=cfg.max_epochs {
+            epochs = epoch;
+            // (1) refresh model constants from the current iterate
+            let tp = Timer::start();
+            let alpha_snap = alpha.snapshot();
+            model.epoch_refresh(&alpha_snap);
+            let kind = model.kind();
+
+            // (2) snapshot w for task A
+            let v_snap = v.snapshot();
+            let mut w_snap = vec![0.0f32; d];
+            for r in 0..d {
+                w_snap[r] = kind.w_of(v_snap[r], y[r]);
+            }
+            phases.snapshot_secs += tp.secs();
+
+            // (3) batch selection (first epoch: random — z still unknown)
+            let tp = Timer::start();
+            let sel = if epoch == 1 { Selection::Random } else { cfg.selection };
+            let batch = sel.select(&gaps.values(), m_batch, &mut rng);
+            phases.select_secs += tp.secs();
+
+            // (4) working-set swap (fast tier)
+            let tp = Timer::start();
+            ws.swap_in(data, &batch, sim);
+            phases.swap_secs += tp.secs();
+
+            // (5) release A and B concurrently
+            let tp = Timer::start();
+            gaps.reset_epoch_counter();
+            let stop = AtomicBool::new(false);
+            let snap = task_a::ASnapshot { w: &w_snap, alpha: &alpha_snap, kind, epoch: epoch as u32 };
+            let seed_a = cfg.seed ^ (epoch as u64) << 20;
+            let (b_stats, a_updates) = std::thread::scope(|s| {
+                let a_handle = s.spawn(|| match backend {
+                    None => task_a::run_epoch(
+                        &self.pool_a, data, &snap, &gaps, &stop, sim, seed_a,
+                    ),
+                    Some(be) => run_a_offload(be, data, &snap, &gaps, &stop, &mut Rng::new(seed_a)),
+                });
+                let items = task_b::WorkItem::from_batch(&batch);
+                let b_stats = task_b::run_epoch(
+                    &self.pool_b, &ws, &items, &v, y, &alpha, kind,
+                    cfg.t_b, cfg.v_b, sim,
+                );
+                stop.store(true, Ordering::Relaxed);
+                (b_stats, a_handle.join().expect("task A panicked"))
+            });
+            phases.run_secs += tp.secs();
+
+            // (6) bookkeeping + convergence.  The refresh fraction is
+            // read BEFORE B's write-back so it measures task A only.
+            let (_, frac) = gaps.refresh_stats(epoch as u32);
+            frac_sum += frac;
+
+            // B write-back: an exact coordinate step zeroes that
+            // coordinate's own gap — overwrite its stale z so greedy
+            // selection moves on (see GapMemory::mark_processed).
+            for &j in &batch {
+                gaps.mark_processed(j, 0.0, epoch as u32);
+            }
+
+            // online §IV-F balance controller
+            if let Some(r_tilde) = cfg.adaptive_r_tilde {
+                m_batch = adapt_batch(m_batch, frac, r_tilde, m_slots);
+            }
+            total_a += a_updates;
+            total_b += b_stats.updates;
+            total_zero += b_stats.zero_deltas;
+
+            if epoch % cfg.eval_every == 0 || epoch == cfg.max_epochs {
+                let tp = Timer::start();
+                let a_now: Vec<f32> = alpha.snapshot();
+                // re-anchor v = D alpha exactly: incremental fp32
+                // maintenance drifts after many axpys and floors the
+                // measurable gap (same O(nd) cost as the eval itself)
+                let v_now = data.matvec_alpha(&a_now);
+                v.store_all(&v_now);
+                let obj = model.objective(&v_now, y, &a_now);
+                let gap = glm::total_gap(model, data.as_ops(), &v_now, y, &a_now);
+                trace.push(timer.secs(), epoch, obj, gap);
+                phases.eval_secs += tp.secs();
+                if gap <= cfg.gap_tol {
+                    converged = true;
+                    break;
+                }
+            }
+            if timer.secs() > cfg.timeout_secs {
+                break;
+            }
+        }
+
+        TrainResult {
+            alpha: alpha.snapshot(),
+            v: v.snapshot(),
+            trace,
+            epochs,
+            mean_refresh_frac: frac_sum / epochs.max(1) as f64,
+            total_a_updates: total_a,
+            total_b_updates: total_b,
+            total_b_zero_deltas: total_zero,
+            wall_secs: timer.secs(),
+            converged,
+            phase_times: phases,
+            staleness: StalenessHistogram::from_ages(&gaps.staleness(epochs as u32)),
+        }
+    }
+}
+
+/// The online §IV-F balance law: if A refreshed less than `r_tilde` of
+/// the gap memory, lengthen the epoch (a bigger batch gives A more
+/// time); if it comfortably overshot, shrink toward faster epochs.
+/// Multiplicative-increase / multiplicative-decrease with a dead band
+/// `[r_tilde, 2 r_tilde]` to avoid oscillation.
+pub fn adapt_batch(m: usize, frac: f64, r_tilde: f64, m_slots: usize) -> usize {
+    if frac < r_tilde {
+        ((m as f64 * 1.25) as usize).max(m + 1).min(m_slots)
+    } else if frac > 2.0 * r_tilde {
+        ((m as f64 * 0.8) as usize).max(1)
+    } else {
+        m
+    }
+}
+
+/// Task A via the PJRT backend: stream random coordinate blocks through
+/// the compiled gap artifact until stopped.
+fn run_a_offload(
+    backend: &dyn GapBackend,
+    data: &Matrix,
+    snap: &task_a::ASnapshot<'_>,
+    gaps: &GapMemory,
+    stop: &AtomicBool,
+    rng: &mut Rng,
+) -> u64 {
+    let n = data.n_cols();
+    let block = backend.block_len().max(1);
+    let mut updates = 0u64;
+    while !stop.load(Ordering::Relaxed) {
+        let start = rng.below(n);
+        let coords: Vec<usize> = (0..block.min(n)).map(|k| (start + k) % n).collect();
+        match backend.batch_gaps(data, &coords, snap.w, snap.alpha, snap.kind) {
+            Some(z) => {
+                for (&j, &zj) in coords.iter().zip(&z) {
+                    gaps.update(j, zj, snap.epoch);
+                }
+                updates += coords.len() as u64;
+            }
+            None => {
+                // fall back to native for this block
+                let ops = data.as_ops();
+                for &j in &coords {
+                    let u = ops.dot(j, snap.w);
+                    gaps.update(j, snap.kind.gap(u, snap.alpha[j]), snap.epoch);
+                }
+                updates += coords.len() as u64;
+            }
+        }
+    }
+    updates
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::generator::{generate, DatasetKind, Family};
+    use crate::glm::{Lasso, SvmDual};
+
+    /// Relative convergence target: fp32 accumulation cannot reach
+    /// absolute 1e-6 on objectives of O(1000); the paper's thresholds
+    /// are likewise relative to each problem's scale.
+    fn rel_tol(model: &dyn crate::glm::GlmModel, g: &crate::data::GeneratedDataset, rel: f64) -> f64 {
+        let obj0 = model.objective(&vec![0.0; g.d()], &g.targets, &vec![0.0; g.n()]);
+        rel * obj0.abs().max(1.0)
+    }
+
+    fn solver(t_a: usize, t_b: usize, v_b: usize, frac: f64, gap_tol: f64) -> HthcSolver {
+        HthcSolver::new(HthcConfig {
+            t_a,
+            t_b,
+            v_b,
+            batch_frac: frac,
+            gap_tol,
+            // tiny uniform-importance problems can't exploit selection,
+            // so a small batch needs proportionally more epochs (an
+            // epoch is batch_frac of a sweep, and this conditioning
+            // needs ~600 sweeps for small gaps) — these are correctness
+            // tests, not the Fig. 5 speed comparison.
+            max_epochs: 4000,
+            timeout_secs: 30.0,
+            eval_every: 2,
+            ..Default::default()
+        })
+    }
+
+    #[test]
+    fn lasso_converges_on_dense_tiny() {
+        let g = generate(DatasetKind::Tiny, Family::Regression, 1.0, 111);
+        let mut model = Lasso::new(0.5);
+        let sim = TierSim::default();
+        let tol = rel_tol(&model, &g, 1e-4);
+        let s = solver(2, 2, 1, 0.25, tol);
+        let res = s.train(&mut model, &g.matrix, &g.targets, &sim);
+        assert!(res.converged, "{}", res.summary());
+        // v consistent with alpha at the end (locked updates lost nothing)
+        let v2 = match &g.matrix {
+            Matrix::Dense(m) => m.matvec_alpha(&res.alpha),
+            _ => unreachable!(),
+        };
+        for (a, b) in res.v.iter().zip(&v2) {
+            assert!((a - b).abs() < 1e-2 * b.abs().max(1.0));
+        }
+        assert!(res.mean_refresh_frac > 0.0);
+    }
+
+    #[test]
+    fn svm_converges_on_classification_tiny() {
+        let g = generate(DatasetKind::Tiny, Family::Classification, 1.0, 112);
+        let n = g.n();
+        let mut model = SvmDual::new(1e-3, n);
+        let sim = TierSim::default();
+        let s = solver(2, 2, 2, 0.3, 1e-5);
+        let res = s.train(&mut model, &g.matrix, &g.targets, &sim);
+        assert!(
+            res.trace.final_gap().unwrap() < 1e-3,
+            "{}", res.summary()
+        );
+        let ops = g.matrix.as_ops();
+        let acc = model.accuracy(ops, &res.v);
+        assert!(acc > 0.9, "accuracy {acc}");
+        // box respected
+        assert!(res.alpha.iter().all(|&a| (-1e-6..=1.0 + 1e-6).contains(&a)));
+    }
+
+    #[test]
+    fn sparse_dataset_trains() {
+        let g = generate(DatasetKind::News20Like, Family::Regression, 0.04, 113);
+        let mut model = Lasso::new(0.05);
+        let sim = TierSim::default();
+        let tol = rel_tol(&model, &g, 1e-4);
+        let s = solver(2, 2, 1, 0.1, tol);
+        let res = s.train(&mut model, &g.matrix, &g.targets, &sim);
+        let first = res.trace.points.first().unwrap().objective;
+        let last = res.trace.final_objective().unwrap();
+        assert!(last < first, "objective must decrease: {first} -> {last}");
+    }
+
+    #[test]
+    fn gap_selection_converges_in_fewer_epochs_than_random() {
+        // The paper's core claim, in miniature: with a small batch,
+        // duality-gap selection needs fewer epochs than random.
+        let g = generate(DatasetKind::Tiny, Family::Regression, 2.0, 114);
+        let sim = TierSim::default();
+        let tol = rel_tol(&Lasso::new(0.3), &g, 1e-4);
+        let run = |sel: Selection| {
+            let mut model = Lasso::new(0.3);
+            let s = HthcSolver::new(HthcConfig {
+                t_a: 2,
+                t_b: 1,
+                v_b: 1,
+                batch_frac: 0.1,
+                selection: sel,
+                gap_tol: tol,
+                max_epochs: 2500,
+                eval_every: 1,
+                timeout_secs: 60.0,
+                ..Default::default()
+            });
+            let r = s.train(&mut model, &g.matrix, &g.targets, &sim);
+            assert!(r.converged, "{} {}", sel.name(), r.summary());
+            r.epochs
+        };
+        let greedy = run(Selection::DualityGap);
+        let random = run(Selection::Random);
+        assert!(
+            greedy as f64 <= random as f64 * 0.9,
+            "gap selection {greedy} epochs vs random {random}"
+        );
+    }
+
+    #[test]
+    fn adapt_batch_law() {
+        // below target: grow (and always make progress), capped by slots
+        assert_eq!(adapt_batch(100, 0.05, 0.15, 1000), 125);
+        assert_eq!(adapt_batch(1, 0.05, 0.15, 1000), 2);
+        assert_eq!(adapt_batch(999, 0.05, 0.15, 1000), 1000);
+        assert_eq!(adapt_batch(1000, 0.05, 0.15, 1000), 1000);
+        // dead band: hold
+        assert_eq!(adapt_batch(100, 0.20, 0.15, 1000), 100);
+        // far above target: shrink, floored at 1
+        assert_eq!(adapt_batch(100, 0.9, 0.15, 1000), 80);
+        assert_eq!(adapt_batch(1, 0.9, 0.15, 1000), 1);
+    }
+
+    #[test]
+    fn adaptive_mode_trains_cleanly() {
+        // on a 1-core host the controller's wall-clock effect is noise;
+        // this asserts the integration is sound (no panic, convergence
+        // behaviour intact) — the law itself is unit-tested above.
+        let g = generate(DatasetKind::Tiny, Family::Regression, 2.0, 117);
+        let sim = TierSim::default();
+        let mut model = Lasso::new(0.3);
+        let s = HthcSolver::new(HthcConfig {
+            t_a: 1,
+            t_b: 2,
+            v_b: 1,
+            batch_frac: 0.05,
+            adaptive_r_tilde: Some(0.15),
+            gap_tol: 0.0,
+            max_epochs: 60,
+            eval_every: 10,
+            timeout_secs: 30.0,
+            ..Default::default()
+        });
+        let res = s.train(&mut model, &g.matrix, &g.targets, &sim);
+        assert_eq!(res.epochs, 60);
+        let first = res.trace.points.first().unwrap().objective;
+        let last = res.trace.final_objective().unwrap();
+        assert!(last < first);
+    }
+
+    #[test]
+    fn timeout_is_honoured() {
+        let g = generate(DatasetKind::Tiny, Family::Regression, 2.0, 115);
+        let mut model = Lasso::new(1e-6); // tiny lambda: slow convergence
+        let sim = TierSim::default();
+        let s = HthcSolver::new(HthcConfig {
+            gap_tol: 1e-300,
+            max_epochs: usize::MAX >> 1,
+            timeout_secs: 0.3,
+            eval_every: 1,
+            ..Default::default()
+        });
+        let t = Timer::start();
+        let res = s.train(&mut model, &g.matrix, &g.targets, &sim);
+        assert!(!res.converged);
+        assert!(t.secs() < 10.0, "timeout must bound the run");
+    }
+}

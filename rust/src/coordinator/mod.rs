@@ -1,0 +1,39 @@
+//! The HTHC coordinator (paper §III/§IV) — the system contribution.
+//!
+//! Two heterogeneous tasks run concurrently on disjoint worker pools:
+//!
+//! * **Task A** ([`task_a`]) sweeps randomly over *all* columns with the
+//!   epoch-start snapshot `(v, alpha)` and refreshes the gap memory
+//!   `z_i = gap(<w, d_i>, alpha_i)`;
+//! * **Task B** ([`task_b`]) runs asynchronous parallel SCD over the
+//!   selected batch: `T_B` concurrent coordinate updates, each optionally
+//!   split across `V_B` threads, with medium-grained locks on the shared
+//!   vector `v` (§IV-C).
+//!
+//! At each epoch boundary the leader selects the next batch from the
+//! (partially stale) gap memory, swaps B's working set in the fast
+//! memory tier, recomputes the `w` snapshot for A, and restarts both
+//! pools (§III, Fig. 1).
+//!
+//! The §IV-F performance model ([`perf_model`]) chooses
+//! `m, T_A, T_B, V_B` from a measured table of per-update times.
+
+pub mod config;
+pub mod gap_memory;
+pub mod hthc;
+pub mod perf_model;
+pub mod search;
+pub mod selection;
+pub mod shared_vec;
+pub mod task_a;
+pub mod task_b;
+pub mod working_set;
+
+pub use config::HthcConfig;
+pub use gap_memory::GapMemory;
+pub use hthc::{HthcSolver, TrainResult};
+pub use perf_model::{PerfModel, Recommendation};
+pub use search::{grid_search, near_best, SearchGrid, SearchResult};
+pub use selection::Selection;
+pub use shared_vec::SharedVector;
+pub use working_set::WorkingSet;

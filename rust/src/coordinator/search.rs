@@ -1,0 +1,215 @@
+//! Parameter search (the paper's §V-B protocol, first-class).
+//!
+//! "For each experiment ... we used exhaustive search to find the best
+//! parameter settings, i.e., percentage of data updated by B per epoch,
+//! and the thread settings T_A, T_B, V_B."  [`grid_search`] runs that
+//! protocol over a caller-supplied grid with a per-candidate time
+//! budget, returning every result ranked — which also powers the Fig. 6
+//! sensitivity analysis (all configurations within a ratio of best).
+
+use super::{HthcConfig, HthcSolver};
+use crate::data::Matrix;
+use crate::glm::GlmModel;
+use crate::memory::TierSim;
+
+/// The search grid.
+#[derive(Clone, Debug)]
+pub struct SearchGrid {
+    pub batch_fracs: Vec<f64>,
+    pub t_as: Vec<usize>,
+    pub t_bs: Vec<usize>,
+    pub v_bs: Vec<usize>,
+}
+
+impl SearchGrid {
+    /// A small host-scale default.
+    pub fn small() -> Self {
+        SearchGrid {
+            batch_fracs: vec![0.02, 0.08, 0.25],
+            t_as: vec![1, 2],
+            t_bs: vec![1, 2, 4],
+            v_bs: vec![1, 2],
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.batch_fracs.len() * self.t_as.len() * self.t_bs.len() * self.v_bs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// One evaluated configuration.
+#[derive(Clone, Debug)]
+pub struct SearchResult {
+    pub batch_frac: f64,
+    pub t_a: usize,
+    pub t_b: usize,
+    pub v_b: usize,
+    /// Seconds to reach the target gap (None = did not converge).
+    pub time_to_target: Option<f64>,
+    pub epochs: usize,
+    pub refresh_frac: f64,
+}
+
+impl SearchResult {
+    pub fn total_threads(&self) -> usize {
+        self.t_a + self.t_b * self.v_b
+    }
+}
+
+/// Run the grid; `make_model` constructs a fresh model per candidate
+/// (search must not leak state across runs).  Results come back sorted:
+/// converged candidates by time, then non-converged.
+pub fn grid_search(
+    make_model: &dyn Fn() -> Box<dyn GlmModel>,
+    data: &Matrix,
+    y: &[f32],
+    grid: &SearchGrid,
+    target_gap: f64,
+    per_candidate_secs: f64,
+    base: &HthcConfig,
+    skip_v_b_on_sparse: bool,
+) -> Vec<SearchResult> {
+    let sparse = matches!(data, Matrix::Sparse(_));
+    let mut out = Vec::new();
+    for &frac in &grid.batch_fracs {
+        for &t_a in &grid.t_as {
+            for &t_b in &grid.t_bs {
+                for &v_b in &grid.v_bs {
+                    if v_b > 1 && sparse && skip_v_b_on_sparse {
+                        continue; // §IV-D: one thread per sparse vector
+                    }
+                    let cfg = HthcConfig {
+                        t_a,
+                        t_b,
+                        v_b,
+                        batch_frac: frac,
+                        gap_tol: target_gap,
+                        timeout_secs: per_candidate_secs,
+                        ..base.clone()
+                    };
+                    let solver = HthcSolver::new(cfg);
+                    let mut model = make_model();
+                    let sim = TierSim::default();
+                    let res = solver.train(model.as_mut(), data, y, &sim);
+                    out.push(SearchResult {
+                        batch_frac: frac,
+                        t_a,
+                        t_b,
+                        v_b,
+                        time_to_target: res.trace.time_to_gap(target_gap),
+                        epochs: res.epochs,
+                        refresh_frac: res.mean_refresh_frac,
+                    });
+                }
+            }
+        }
+    }
+    out.sort_by(|a, b| match (a.time_to_target, b.time_to_target) {
+        (Some(x), Some(y)) => x.partial_cmp(&y).unwrap(),
+        (Some(_), None) => std::cmp::Ordering::Less,
+        (None, Some(_)) => std::cmp::Ordering::Greater,
+        (None, None) => a.epochs.cmp(&b.epochs),
+    });
+    out
+}
+
+/// Fig. 6 view: every converged configuration within `ratio` of the
+/// best time.
+pub fn near_best(results: &[SearchResult], ratio: f64) -> Vec<&SearchResult> {
+    let best = results
+        .iter()
+        .filter_map(|r| r.time_to_target)
+        .fold(f64::INFINITY, f64::min);
+    if !best.is_finite() {
+        return vec![];
+    }
+    results
+        .iter()
+        .filter(|r| r.time_to_target.map_or(false, |t| t <= best * ratio))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::generator::{generate, DatasetKind, Family};
+    use crate::glm::Lasso;
+
+    #[test]
+    fn search_ranks_converged_first_and_covers_grid() {
+        let g = generate(DatasetKind::Tiny, Family::Regression, 1.0, 901);
+        let model = Lasso::new(0.4);
+        let obj0 = {
+            use crate::glm::GlmModel;
+            model.objective(&vec![0.0; g.d()], &g.targets, &vec![0.0; g.n()])
+        };
+        let grid = SearchGrid {
+            batch_fracs: vec![0.25, 1.0],
+            t_as: vec![1],
+            t_bs: vec![1, 2],
+            v_bs: vec![1],
+        };
+        let base = HthcConfig { max_epochs: 3000, eval_every: 5, ..Default::default() };
+        let results = grid_search(
+            &|| Box::new(Lasso::new(0.4)),
+            &g.matrix,
+            &g.targets,
+            &grid,
+            1e-3 * obj0,
+            20.0,
+            &base,
+            true,
+        );
+        assert_eq!(results.len(), grid.len());
+        assert!(results[0].time_to_target.is_some(), "best must converge");
+        // sorted: all converged before any unconverged
+        let first_none = results.iter().position(|r| r.time_to_target.is_none());
+        if let Some(k) = first_none {
+            assert!(results[k..].iter().all(|r| r.time_to_target.is_none()));
+        }
+        // near-best contains at least the winner
+        let nb = near_best(&results, 1.1);
+        assert!(!nb.is_empty());
+    }
+
+    #[test]
+    fn sparse_grid_skips_v_b() {
+        let g = generate(DatasetKind::News20Like, Family::Regression, 0.03, 902);
+        let grid = SearchGrid {
+            batch_fracs: vec![0.5],
+            t_as: vec![1],
+            t_bs: vec![1],
+            v_bs: vec![1, 2, 4],
+        };
+        let base = HthcConfig { max_epochs: 3, eval_every: 3, ..Default::default() };
+        let results = grid_search(
+            &|| Box::new(Lasso::new(0.4)),
+            &g.matrix,
+            &g.targets,
+            &grid,
+            0.0,
+            5.0,
+            &base,
+            true,
+        );
+        assert_eq!(results.len(), 1, "v_b > 1 rows skipped for sparse");
+    }
+
+    #[test]
+    fn near_best_empty_when_nothing_converges() {
+        let r = vec![SearchResult {
+            batch_frac: 0.1,
+            t_a: 1,
+            t_b: 1,
+            v_b: 1,
+            time_to_target: None,
+            epochs: 5,
+            refresh_frac: 0.5,
+        }];
+        assert!(near_best(&r, 1.1).is_empty());
+    }
+}

@@ -1,0 +1,214 @@
+//! Coordinate selection at the epoch boundary (paper §II-B/C).
+//!
+//! The paper's scheme picks the `m` coordinates with the largest
+//! (stale) duality-gap values; random and importance-sampling selection
+//! are provided as the comparators the paper discusses ("any adaptive
+//! selection scheme could be adopted").
+
+use crate::util::Rng;
+use std::cmp::Ordering;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Selection {
+    /// Greedy top-m by gap value (the paper's choice, after [10]).
+    DualityGap,
+    /// Uniform random without replacement.
+    Random,
+    /// Importance sampling proportional to gap values
+    /// (Efraimidis–Spirakis reservoir keys), without replacement.
+    Importance,
+}
+
+impl Selection {
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "gap" | "duality-gap" => Selection::DualityGap,
+            "random" => Selection::Random,
+            "importance" => Selection::Importance,
+            _ => return None,
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Selection::DualityGap => "duality-gap",
+            Selection::Random => "random",
+            Selection::Importance => "importance",
+        }
+    }
+
+    /// Select `m` distinct coordinates from the gap values `z`.
+    ///
+    /// Coordinates task A has never measured carry `z_i = +inf`; a
+    /// deterministic top-m would keep re-picking the same lowest-index
+    /// unmeasured block forever and starve the rest.  Unmeasured
+    /// entries therefore get *randomized* priorities above every
+    /// finite gap — they are still explored first, but uniformly.
+    pub fn select(self, z: &[f32], m: usize, rng: &mut Rng) -> Vec<usize> {
+        let n = z.len();
+        let m = m.min(n);
+        match self {
+            Selection::Random => rng.sample_distinct(n, m),
+            Selection::DualityGap => {
+                if z.iter().any(|v| !v.is_finite()) {
+                    let zmax = z
+                        .iter()
+                        .copied()
+                        .filter(|v| v.is_finite())
+                        .fold(0.0f32, f32::max)
+                        .max(1.0);
+                    let adjusted: Vec<f32> = z
+                        .iter()
+                        .map(|&v| if v.is_finite() { v } else { zmax * (2.0 + rng.f32()) })
+                        .collect();
+                    top_m(&adjusted, m)
+                } else {
+                    top_m(z, m)
+                }
+            }
+            Selection::Importance => importance_sample(z, m, rng),
+        }
+    }
+}
+
+/// Indices of the `m` largest values — O(n log m) via a min-heap of the
+/// current candidates (the selection runs with both tasks paused, so it
+/// sits on the epoch-boundary critical path; see bench `perf_hotpath`).
+pub fn top_m(z: &[f32], m: usize) -> Vec<usize> {
+    use std::collections::BinaryHeap;
+
+    #[derive(PartialEq)]
+    struct Entry(f32, usize); // min-heap on value
+    impl Eq for Entry {}
+    impl PartialOrd for Entry {
+        fn partial_cmp(&self, o: &Self) -> Option<Ordering> {
+            Some(self.cmp(o))
+        }
+    }
+    impl Ord for Entry {
+        fn cmp(&self, o: &Self) -> Ordering {
+            // reversed (min-heap); NaN sorts low so it is evicted first
+            o.0.partial_cmp(&self.0)
+                .unwrap_or(Ordering::Equal)
+                .then(o.1.cmp(&self.1))
+        }
+    }
+
+    let m = m.min(z.len());
+    if m == 0 {
+        return vec![];
+    }
+    let mut heap: BinaryHeap<Entry> = BinaryHeap::with_capacity(m + 1);
+    for (i, &v) in z.iter().enumerate() {
+        let v = if v.is_nan() { f32::NEG_INFINITY } else { v };
+        if heap.len() < m {
+            heap.push(Entry(v, i));
+        } else if v > heap.peek().unwrap().0 {
+            heap.pop();
+            heap.push(Entry(v, i));
+        }
+    }
+    let mut out: Vec<usize> = heap.into_iter().map(|e| e.1).collect();
+    out.sort_unstable();
+    out
+}
+
+/// Weighted sampling without replacement (Efraimidis–Spirakis): draw
+/// key `ln(u_i) / w_i` and keep the top m.  Zero/negative weights get
+/// -inf keys (never selected unless everything is zero).
+fn importance_sample(z: &[f32], m: usize, rng: &mut Rng) -> Vec<usize> {
+    let keys: Vec<f32> = z
+        .iter()
+        .map(|&w| {
+            let w = if w.is_finite() { w.max(0.0) } else { f32::MAX };
+            if w > 0.0 {
+                (rng.f64().max(1e-300).ln() / w as f64) as f32
+            } else {
+                f32::NEG_INFINITY
+            }
+        })
+        .collect();
+    let picked = top_m(&keys, m);
+    if keys.iter().all(|&k| k == f32::NEG_INFINITY) {
+        // degenerate: all-zero gaps — fall back to uniform
+        return rng.sample_distinct(z.len(), m);
+    }
+    picked
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn top_m_exact() {
+        let z = vec![0.1, 5.0, 3.0, 0.2, 4.0];
+        assert_eq!(top_m(&z, 3), vec![1, 2, 4]);
+        assert_eq!(top_m(&z, 0), Vec::<usize>::new());
+        assert_eq!(top_m(&z, 99), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn top_m_handles_inf_and_nan() {
+        let z = vec![f32::NAN, f32::INFINITY, 1.0, f32::NEG_INFINITY];
+        assert_eq!(top_m(&z, 2), vec![1, 2]);
+    }
+
+    #[test]
+    fn selection_returns_distinct_sorted_indices() {
+        let mut rng = Rng::new(71);
+        let z: Vec<f32> = (0..100).map(|i| (i % 13) as f32).collect();
+        for sel in [Selection::DualityGap, Selection::Random, Selection::Importance] {
+            let got = sel.select(&z, 20, &mut rng);
+            assert_eq!(got.len(), 20, "{}", sel.name());
+            let set: std::collections::HashSet<_> = got.iter().collect();
+            assert_eq!(set.len(), 20);
+            assert!(got.iter().all(|&i| i < 100));
+        }
+    }
+
+    #[test]
+    fn importance_prefers_large_gaps() {
+        let mut rng = Rng::new(72);
+        // coordinate 7 has weight 1000x others: should almost always be in
+        let mut z = vec![0.001f32; 50];
+        z[7] = 1.0;
+        let mut hits = 0;
+        for _ in 0..100 {
+            if importance_sample(&z, 5, &mut rng).contains(&7) {
+                hits += 1;
+            }
+        }
+        assert!(hits > 90, "{hits}/100");
+    }
+
+    #[test]
+    fn importance_all_zero_falls_back_to_uniform() {
+        let mut rng = Rng::new(73);
+        let z = vec![0.0f32; 30];
+        let got = importance_sample(&z, 10, &mut rng);
+        assert_eq!(got.len(), 10);
+    }
+
+    #[test]
+    fn gap_selection_beats_random_on_skewed_gaps() {
+        // sanity for the paper's core premise: with skewed importance,
+        // top-m captures more total gap than random.
+        let mut rng = Rng::new(74);
+        let z: Vec<f32> = (0..1000)
+            .map(|_| if rng.f32() < 0.05 { 10.0 } else { 0.01 })
+            .collect();
+        let sum = |idx: &[usize]| idx.iter().map(|&i| z[i] as f64).sum::<f64>();
+        let greedy = sum(&Selection::DualityGap.select(&z, 50, &mut rng));
+        let random = sum(&Selection::Random.select(&z, 50, &mut rng));
+        assert!(greedy > 3.0 * random, "greedy {greedy} vs random {random}");
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for s in [Selection::DualityGap, Selection::Random, Selection::Importance] {
+            assert_eq!(Selection::parse(s.name()), Some(s));
+        }
+        assert_eq!(Selection::parse("bogus"), None);
+    }
+}

@@ -1,0 +1,312 @@
+//! The shared vector `v = D alpha` with medium-grained locking
+//! (paper §IV-C).
+//!
+//! pthreads has no atomics, so the paper locks *chunks* of 1024
+//! elements with mutexes — coarse enough to amortize lock cost over a
+//! dense column segment, fine enough to keep contention low.  We do the
+//! same: writes take chunk mutexes; reads are lock-free relaxed atomic
+//! loads (asynchronous SCD reads stale values by design — Hsieh et al.
+//! [16] give the convergence guarantees HTHC relies on, *provided*
+//! updates themselves are not lost, which the locks ensure).
+//!
+//! Storage is `AtomicU32` bit-cast to f32 so that racy reads are
+//! well-defined in rust (on x86 a relaxed load is an ordinary `mov`).
+
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::Mutex;
+
+pub struct SharedVector {
+    bits: Vec<AtomicU32>,
+    locks: Vec<Mutex<()>>,
+    chunk: usize,
+}
+
+impl SharedVector {
+    pub fn new(len: usize, lock_chunk: usize) -> Self {
+        assert!(lock_chunk >= 1);
+        let n_locks = len.div_ceil(lock_chunk).max(1);
+        SharedVector {
+            bits: (0..len).map(|_| AtomicU32::new(0)).collect(),
+            locks: (0..n_locks).map(|_| Mutex::new(())).collect(),
+            chunk: lock_chunk,
+        }
+    }
+
+    pub fn from_slice(v: &[f32], lock_chunk: usize) -> Self {
+        let s = Self::new(v.len(), lock_chunk);
+        for (slot, &x) in s.bits.iter().zip(v) {
+            slot.store(x.to_bits(), Ordering::Relaxed);
+        }
+        s
+    }
+
+    pub fn len(&self) -> usize {
+        self.bits.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.bits.is_empty()
+    }
+
+    pub fn n_locks(&self) -> usize {
+        self.locks.len()
+    }
+
+    /// Lock-free (stale-tolerant) read.
+    #[inline(always)]
+    pub fn read(&self, i: usize) -> f32 {
+        f32::from_bits(self.bits[i].load(Ordering::Relaxed))
+    }
+
+    /// Plain (unlocked) store — used for `alpha`, whose coordinates are
+    /// each owned by exactly one updater within an epoch.
+    #[inline(always)]
+    pub fn write(&self, i: usize, x: f32) {
+        self.bits[i].store(x.to_bits(), Ordering::Relaxed);
+    }
+
+    /// Copy the whole vector (epoch-boundary snapshot for task A).
+    pub fn snapshot(&self) -> Vec<f32> {
+        self.bits
+            .iter()
+            .map(|b| f32::from_bits(b.load(Ordering::Relaxed)))
+            .collect()
+    }
+
+    /// Overwrite the whole vector (initialization / tests).
+    pub fn store_all(&self, v: &[f32]) {
+        assert_eq!(v.len(), self.len());
+        for (slot, &x) in self.bits.iter().zip(v) {
+            slot.store(x.to_bits(), Ordering::Relaxed);
+        }
+    }
+
+    /// `v[rows] += delta * vals` for a sparse column segment, taking each
+    /// chunk lock once (paper: lock cost amortized over the chunk;
+    /// entries must be row-sorted, which CSC columns are).
+    pub fn axpy_sparse_locked(&self, rows: &[u32], vals: &[f32], delta: f32) {
+        let mut i = 0;
+        while i < rows.len() {
+            let chunk_id = rows[i] as usize / self.chunk;
+            let chunk_end = ((chunk_id + 1) * self.chunk) as u32;
+            let _guard = self.locks[chunk_id].lock().unwrap();
+            while i < rows.len() && rows[i] < chunk_end {
+                let r = rows[i] as usize;
+                let old = f32::from_bits(self.bits[r].load(Ordering::Relaxed));
+                self.bits[r].store((old + delta * vals[i]).to_bits(), Ordering::Relaxed);
+                i += 1;
+            }
+        }
+    }
+
+    /// `v[lo..hi] += delta * x[lo..hi]` for a dense column range under
+    /// the covering chunk locks.
+    pub fn axpy_dense_locked(&self, x: &[f32], delta: f32, lo: usize, hi: usize) {
+        debug_assert!(hi <= self.len() && x.len() >= hi);
+        let mut i = lo;
+        while i < hi {
+            let chunk_id = i / self.chunk;
+            let chunk_end = ((chunk_id + 1) * self.chunk).min(hi);
+            let _guard = self.locks[chunk_id].lock().unwrap();
+            for r in i..chunk_end {
+                let old = f32::from_bits(self.bits[r].load(Ordering::Relaxed));
+                self.bits[r].store((old + delta * x[r]).to_bits(), Ordering::Relaxed);
+            }
+            i = chunk_end;
+        }
+    }
+
+    /// Per-element atomic add via CAS — PASSCoDe-atomic / OMP `atomic`
+    /// semantics (used by the baselines, not by HTHC itself).
+    #[inline]
+    pub fn add_atomic(&self, i: usize, x: f32) {
+        let slot = &self.bits[i];
+        let mut cur = slot.load(Ordering::Relaxed);
+        loop {
+            let new = (f32::from_bits(cur) + x).to_bits();
+            match slot.compare_exchange_weak(cur, new, Ordering::Relaxed, Ordering::Relaxed) {
+                Ok(_) => return,
+                Err(actual) => cur = actual,
+            }
+        }
+    }
+
+    /// Non-atomic read-modify-write (racy; lost updates possible) — the
+    /// OMP-WILD / PASSCoDe-wild semantics.  Each access is individually
+    /// a relaxed atomic so behaviour is defined, but the composition is
+    /// deliberately not.
+    #[inline]
+    pub fn add_wild(&self, i: usize, x: f32) {
+        let old = f32::from_bits(self.bits[i].load(Ordering::Relaxed));
+        self.bits[i].store((old + x).to_bits(), Ordering::Relaxed);
+    }
+
+    /// Fused stale dot: `sum_r x[r] * w_of(v[r], y[r])` over `[lo, hi)`.
+    /// This is task B's hot read path — it must see *recent* v (not the
+    /// epoch snapshot), so it streams the live atomics.
+    ///
+    /// §Perf iteration log (EXPERIMENTS.md §Perf): a 256-element staging
+    /// buffer (copy v out of the atomics, then a vectorizable FMA loop)
+    /// measured *slower* (10.9 vs 7.8 us at d=10k) — the per-element
+    /// `w_of` map blocks SIMD either way, so staging only added traffic;
+    /// reverted.  Four independent accumulators on direct relaxed loads
+    /// is the best of the variants tried.
+    #[inline]
+    pub fn dot_mapped_range<W: Fn(f32, f32) -> f32>(
+        &self,
+        x: &[f32],
+        y: &[f32],
+        w_of: W,
+        lo: usize,
+        hi: usize,
+    ) -> f32 {
+        let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+        let mut r = lo;
+        while r + 3 < hi {
+            s0 += x[r] * w_of(self.read(r), y[r]);
+            s1 += x[r + 1] * w_of(self.read(r + 1), y[r + 1]);
+            s2 += x[r + 2] * w_of(self.read(r + 2), y[r + 2]);
+            s3 += x[r + 3] * w_of(self.read(r + 3), y[r + 3]);
+            r += 4;
+        }
+        while r < hi {
+            s0 += x[r] * w_of(self.read(r), y[r]);
+            r += 1;
+        }
+        (s0 + s1) + (s2 + s3)
+    }
+
+    /// Scaled plain dot `scale * sum_r x[r] * v[r]` over `[lo, hi)` —
+    /// the y-free fast path for models with `w = scale * v` (SVM family).
+    #[inline]
+    pub fn dot_scaled_range(&self, x: &[f32], scale: f32, lo: usize, hi: usize) -> f32 {
+        let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+        let mut r = lo;
+        while r + 3 < hi {
+            s0 += x[r] * self.read(r);
+            s1 += x[r + 1] * self.read(r + 1);
+            s2 += x[r + 2] * self.read(r + 2);
+            s3 += x[r + 3] * self.read(r + 3);
+            r += 4;
+        }
+        while r < hi {
+            s0 += x[r] * self.read(r);
+            r += 1;
+        }
+        scale * ((s0 + s1) + (s2 + s3))
+    }
+
+    /// Sparse variant of [`Self::dot_mapped_range`].
+    #[inline]
+    pub fn dot_mapped_sparse<W: Fn(f32, f32) -> f32>(
+        &self,
+        rows: &[u32],
+        vals: &[f32],
+        y: &[f32],
+        w_of: W,
+    ) -> f32 {
+        let mut s = 0.0f32;
+        for (&r, &x) in rows.iter().zip(vals) {
+            let r = r as usize;
+            s += x * w_of(self.read(r), y[r]);
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_and_snapshot() {
+        let v = SharedVector::from_slice(&[1.0, -2.5, 3.25], 2);
+        assert_eq!(v.read(1), -2.5);
+        assert_eq!(v.snapshot(), vec![1.0, -2.5, 3.25]);
+        assert_eq!(v.n_locks(), 2);
+    }
+
+    #[test]
+    fn axpy_dense_locked_basic() {
+        let v = SharedVector::from_slice(&[0.0; 10], 4);
+        let x: Vec<f32> = (0..10).map(|i| i as f32).collect();
+        v.axpy_dense_locked(&x, 2.0, 0, 10);
+        for i in 0..10 {
+            assert_eq!(v.read(i), 2.0 * i as f32);
+        }
+        // partial range
+        v.axpy_dense_locked(&x, 1.0, 3, 7);
+        assert_eq!(v.read(2), 4.0);
+        assert_eq!(v.read(3), 9.0);
+        assert_eq!(v.read(6), 18.0);
+        assert_eq!(v.read(7), 14.0);
+    }
+
+    #[test]
+    fn axpy_sparse_locked_basic() {
+        let v = SharedVector::from_slice(&[1.0; 8], 3);
+        v.axpy_sparse_locked(&[0, 2, 5, 7], &[1.0, 2.0, 3.0, 4.0], 0.5);
+        assert_eq!(v.read(0), 1.5);
+        assert_eq!(v.read(2), 2.0);
+        assert_eq!(v.read(5), 2.5);
+        assert_eq!(v.read(7), 3.0);
+        assert_eq!(v.read(1), 1.0);
+    }
+
+    #[test]
+    fn locked_axpy_loses_no_updates_under_contention() {
+        // The §IV-C invariant: with chunk locks, concurrent v updates
+        // must all land (unlike add_wild).
+        let n = 256;
+        let v = SharedVector::new(n, 64);
+        let x = vec![1.0f32; n];
+        let threads = 8;
+        let reps = 100;
+        std::thread::scope(|s| {
+            for _ in 0..threads {
+                s.spawn(|| {
+                    for _ in 0..reps {
+                        v.axpy_dense_locked(&x, 1.0, 0, n);
+                    }
+                });
+            }
+        });
+        for i in 0..n {
+            assert_eq!(v.read(i), (threads * reps) as f32);
+        }
+    }
+
+    #[test]
+    fn atomic_add_loses_no_updates() {
+        let v = SharedVector::new(4, 1024);
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                s.spawn(|| {
+                    for _ in 0..1000 {
+                        v.add_atomic(2, 1.0);
+                    }
+                });
+            }
+        });
+        assert_eq!(v.read(2), 8000.0);
+    }
+
+    #[test]
+    fn dot_mapped_range_identity_map() {
+        let v = SharedVector::from_slice(&[1.0, 2.0, 3.0, 4.0, 5.0], 1024);
+        let x = vec![1.0f32; 5];
+        let y = vec![0.0f32; 5];
+        let got = v.dot_mapped_range(&x, &y, |vj, yj| vj - yj, 0, 5);
+        assert_eq!(got, 15.0);
+        let part = v.dot_mapped_range(&x, &y, |vj, yj| vj - yj, 1, 4);
+        assert_eq!(part, 9.0);
+    }
+
+    #[test]
+    fn dot_mapped_sparse_matches() {
+        let v = SharedVector::from_slice(&[1.0, 2.0, 3.0, 4.0], 1024);
+        let y = vec![0.5f32; 4];
+        let got = v.dot_mapped_sparse(&[1, 3], &[2.0, -1.0], &y, |vj, yj| vj * yj);
+        assert_eq!(got, 2.0 * 1.0 - 1.0 * 2.0);
+    }
+}

@@ -1,0 +1,174 @@
+//! Task A: the gap-memory updater (paper §III, §IV-A2).
+//!
+//! `T_A` threads sample coordinates uniformly at random and refresh
+//! `z_i = gap(<w, d_i>, alpha_i)` using the **epoch-start snapshot** of
+//! `(v, alpha)` ("A ... computes gap_i with the most recent (i.e.,
+//! obtained in the previous epoch) parameters", §III).  Because the
+//! snapshot is immutable for the whole epoch, A needs no synchronization
+//! at all (§IV-B: "Task A does not write to shared variables") — each
+//! thread only issues atomic stores into the gap memory.
+//!
+//! A runs until task B finishes its batch and raises `stop`; one thread
+//! per `z_i` update (§IV-A2: multiple threads per update risk deadlock
+//! on the stop signal).
+
+use super::gap_memory::GapMemory;
+use crate::data::Matrix;
+use crate::glm::ModelKind;
+use crate::memory::{Tier, TierSim};
+use crate::threadpool::WorkerPool;
+use crate::util::Rng;
+use std::sync::atomic::{AtomicBool, Ordering};
+
+/// Epoch-frozen inputs for task A.
+pub struct ASnapshot<'a> {
+    /// Materialized `w = grad f(v_snapshot)` (length d).
+    pub w: &'a [f32],
+    /// alpha at epoch start (length n).
+    pub alpha: &'a [f32],
+    pub kind: ModelKind,
+    pub epoch: u32,
+}
+
+/// Run task A on `pool` until `stop` is raised.  Returns the number of
+/// gap refreshes performed (also counted inside `gaps`).
+///
+/// `check_every` bounds stop-signal latency: each thread tests `stop`
+/// between coordinates (a relaxed load — cheap even on the hot path).
+pub fn run_epoch(
+    pool: &WorkerPool,
+    data: &Matrix,
+    snap: &ASnapshot<'_>,
+    gaps: &GapMemory,
+    stop: &AtomicBool,
+    sim: &TierSim,
+    seed: u64,
+) -> u64 {
+    let n = data.n_cols();
+    let ops = data.as_ops();
+    let counter = std::sync::atomic::AtomicU64::new(0);
+    pool.run(|tid| {
+        let mut rng = Rng::new(seed ^ (0x9E37 + tid as u64 * 0x1234_5678_9ABC));
+        let mut local = 0u64;
+        let mut local_bytes = 0u64;
+        while !stop.load(Ordering::Relaxed) {
+            let j = rng.below(n);
+            let u = ops.dot(j, snap.w);
+            let z = snap.kind.gap(u, snap.alpha[j]);
+            gaps.update(j, z, snap.epoch);
+            local += 1;
+            local_bytes += ops.col_bytes(j);
+            if local_bytes > (1 << 20) {
+                // batch the tier charges to keep atomics off the hot path
+                sim.read(Tier::Slow, local_bytes);
+                local_bytes = 0;
+            }
+        }
+        sim.read(Tier::Slow, local_bytes);
+        counter.fetch_add(local, Ordering::Relaxed);
+    });
+    counter.load(Ordering::Relaxed)
+}
+
+/// Sweep task A over an explicit list of coordinates exactly once (used
+/// by Fig. 7's fixed-update-budget sensitivity runs and by the PJRT
+/// offload path, which processes tile-sized coordinate blocks).
+pub fn run_fixed(
+    pool: &WorkerPool,
+    data: &Matrix,
+    snap: &ASnapshot<'_>,
+    gaps: &GapMemory,
+    coords: &[usize],
+    sim: &TierSim,
+) {
+    let ops = data.as_ops();
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    pool.run(|_tid| {
+        let mut local_bytes = 0u64;
+        loop {
+            let k = next.fetch_add(1, Ordering::Relaxed);
+            if k >= coords.len() {
+                break;
+            }
+            let j = coords[k];
+            let u = ops.dot(j, snap.w);
+            gaps.update(j, snap.kind.gap(u, snap.alpha[j]), snap.epoch);
+            local_bytes += ops.col_bytes(j);
+        }
+        sim.read(Tier::Slow, local_bytes);
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::generator::{generate, DatasetKind, Family};
+    use crate::glm::{GlmModel, Lasso};
+
+    fn setup() -> (Matrix, Vec<f32>, Vec<f32>, ModelKind) {
+        let g = generate(DatasetKind::Tiny, Family::Regression, 1.0, 91);
+        let d = g.d();
+        let n = g.n();
+        let alpha = vec![0.1f32; n];
+        let v = match &g.matrix {
+            Matrix::Dense(m) => m.matvec_alpha(&alpha),
+            _ => unreachable!(),
+        };
+        let model = Lasso::new(0.1);
+        let kind = model.kind();
+        let w: Vec<f32> = v.iter().zip(&g.targets).map(|(&vj, &yj)| kind.w_of(vj, yj)).collect();
+        let _ = d;
+        (g.matrix, w, alpha, kind)
+    }
+
+    #[test]
+    fn refreshes_until_stopped_with_correct_values() {
+        let (m, w, alpha, kind) = setup();
+        let n = m.n_cols();
+        let gaps = GapMemory::new(n);
+        let stop = AtomicBool::new(false);
+        let sim = TierSim::default();
+        let pool = WorkerPool::with_name(2, "test-a");
+        let snap = ASnapshot { w: &w, alpha: &alpha, kind, epoch: 1 };
+
+        // stop after a short delay from another thread
+        let updates = std::thread::scope(|s| {
+            s.spawn(|| {
+                std::thread::sleep(std::time::Duration::from_millis(30));
+                stop.store(true, Ordering::Relaxed);
+            });
+            run_epoch(&pool, &m, &snap, &gaps, &stop, &sim, 7)
+        });
+        assert!(updates > 0);
+        // values in z match the direct computation wherever refreshed
+        let ops = m.as_ops();
+        let mut checked = 0;
+        for j in 0..n {
+            let z = gaps.read(j);
+            if z.is_finite() {
+                let want = kind.gap(ops.dot(j, &w), alpha[j]);
+                assert!((z - want).abs() < 1e-5, "z[{j}]");
+                checked += 1;
+            }
+        }
+        assert!(checked > 0);
+        assert!(sim.stats(Tier::Slow).read_bytes > 0, "A charges slow tier");
+    }
+
+    #[test]
+    fn run_fixed_touches_exactly_the_given_coords() {
+        let (m, w, alpha, kind) = setup();
+        let gaps = GapMemory::new(m.n_cols());
+        let sim = TierSim::default();
+        let pool = WorkerPool::with_name(3, "test-a");
+        let snap = ASnapshot { w: &w, alpha: &alpha, kind, epoch: 2 };
+        let coords = vec![1, 5, 9, 13];
+        run_fixed(&pool, &m, &snap, &gaps, &coords, &sim);
+        let (updates, frac) = gaps.refresh_stats(2);
+        assert_eq!(updates, 4);
+        assert!((frac - 4.0 / m.n_cols() as f64).abs() < 1e-9);
+        for j in 0..m.n_cols() {
+            assert_eq!(gaps.read(j).is_finite(), coords.contains(&j));
+        }
+    }
+}

@@ -1,0 +1,297 @@
+//! Task B: asynchronous parallel SCD over the selected batch
+//! (paper §III, §IV-A2, §IV-B).
+//!
+//! `T_B` updater *groups* work concurrently; each group processes one
+//! coordinate at a time, pulled from a shared queue so that "each
+//! coordinate is processed exactly once" per epoch.  Within a group,
+//! `V_B` lanes split the vector work (dot + axpy) by row ranges and
+//! synchronize with the three-barrier pattern of §IV-B:
+//!
+//! 1. barrier after resetting the shared partial sums,
+//! 2. barrier after the partial dots (leader then forms delta via the
+//!    scalar `h-hat`),
+//! 3. barrier after the locked `v += delta * d_i` so no lane races ahead
+//!    into the next coordinate's reset.
+//!
+//! The shared vector `v` is updated under medium-grained chunk locks
+//! (§IV-C) to preserve the primal-dual relation `w = grad f(D alpha)`
+//! that the PASSCoDe-atomic analysis requires.
+
+use super::shared_vec::SharedVector;
+use super::working_set::WorkingSet;
+use crate::glm::ModelKind;
+use crate::memory::{Tier, TierSim};
+use crate::threadpool::{SpinBarrier, WorkerPool};
+use std::sync::atomic::{AtomicU32, AtomicU64, AtomicUsize, Ordering};
+
+/// Per-group shared state for the V_B-lane update protocol.
+struct Group {
+    barrier: SpinBarrier,
+    partials: Vec<AtomicU32>, // f32 bits, one per lane
+    slot: AtomicUsize,        // coordinate slot being processed
+    delta: AtomicU32,         // f32 bits of the computed delta
+}
+
+/// Statistics from one epoch of task B.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct BStats {
+    pub updates: u64,
+    pub zero_deltas: u64,
+}
+
+/// One unit of task-B work: which working-set slot holds the column,
+/// and which model coordinate it belongs to.  (HTHC swaps batch entry i
+/// into slot i, so slot == queue position; ST keeps the whole matrix
+/// resident with slot == coordinate and shuffles only the processing
+/// order — the two must not be conflated.)
+#[derive(Clone, Copy, Debug)]
+pub struct WorkItem {
+    pub slot: u32,
+    pub coord: u32,
+}
+
+impl WorkItem {
+    /// HTHC layout: batch entry i was swapped into working-set slot i.
+    pub fn from_batch(batch: &[usize]) -> Vec<WorkItem> {
+        batch
+            .iter()
+            .enumerate()
+            .map(|(i, &j)| WorkItem { slot: i as u32, coord: j as u32 })
+            .collect()
+    }
+
+    /// Resident layout (ST): slot == coordinate, `order` gives the
+    /// processing sequence.
+    pub fn from_resident_order(order: &[usize]) -> Vec<WorkItem> {
+        order
+            .iter()
+            .map(|&j| WorkItem { slot: j as u32, coord: j as u32 })
+            .collect()
+    }
+}
+
+/// Run one epoch of task B over the given work items (each exactly
+/// once).  `alpha` is indexed by original coordinate id.  The pool must
+/// have exactly `t_b * v_b` workers.
+#[allow(clippy::too_many_arguments)]
+pub fn run_epoch(
+    pool: &WorkerPool,
+    ws: &WorkingSet<'_>,
+    items: &[WorkItem],
+    v: &SharedVector,
+    y: &[f32],
+    alpha: &SharedVector,
+    kind: ModelKind,
+    t_b: usize,
+    v_b: usize,
+    sim: &TierSim,
+) -> BStats {
+    assert_eq!(pool.len(), t_b * v_b, "pool size != T_B * V_B");
+    let d = ws.n_rows();
+    let groups: Vec<Group> = (0..t_b)
+        .map(|_| Group {
+            barrier: SpinBarrier::new(v_b),
+            partials: (0..v_b).map(|_| AtomicU32::new(0)).collect(),
+            slot: AtomicUsize::new(usize::MAX),
+            delta: AtomicU32::new(0),
+        })
+        .collect();
+    let queue = AtomicUsize::new(0);
+    let updates = AtomicU64::new(0);
+    let zero_deltas = AtomicU64::new(0);
+
+    pool.run(|wid| {
+        let g = wid / v_b;
+        let lane = wid % v_b;
+        let group = &groups[g];
+        // Row range for this lane (dense split; sparse uses row windows).
+        let lo = lane * d / v_b;
+        let hi = (lane + 1) * d / v_b;
+        let mut local_bytes = 0u64;
+        loop {
+            // Lane 0 pulls the next work item and publishes it.
+            if lane == 0 {
+                let k = queue.fetch_add(1, Ordering::Relaxed);
+                group
+                    .slot
+                    .store(if k < items.len() { k } else { usize::MAX }, Ordering::Release);
+                for p in &group.partials {
+                    p.store(0, Ordering::Relaxed);
+                }
+            }
+            group.barrier.wait(); // barrier 1: item + reset visible
+            let k = group.slot.load(Ordering::Acquire);
+            if k == usize::MAX {
+                break;
+            }
+            let item = items[k];
+            let (slot, coord) = (item.slot as usize, item.coord as usize);
+
+            // Partial dot over this lane's rows against live v.
+            let part = ws.dot_mapped(slot, v, y, kind, lo, hi);
+            group.partials[lane].store(part.to_bits(), Ordering::Release);
+            group.barrier.wait(); // barrier 2: partials complete
+
+            if lane == 0 {
+                let u: f32 = group
+                    .partials
+                    .iter()
+                    .map(|p| f32::from_bits(p.load(Ordering::Acquire)))
+                    .sum();
+                let a = alpha.read(coord);
+                let delta = kind.delta(u, a, ws.sq_norm(slot));
+                group.delta.store(delta.to_bits(), Ordering::Release);
+                if delta != 0.0 {
+                    alpha.write(coord, a + delta);
+                    updates.fetch_add(1, Ordering::Relaxed);
+                } else {
+                    zero_deltas.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            group.barrier.wait(); // barrier 3: delta published
+            let delta = f32::from_bits(group.delta.load(Ordering::Acquire));
+            if delta != 0.0 {
+                ws.axpy_locked(slot, v, delta, lo, hi);
+            }
+            // fast-tier traffic: col read (dot) + col read + v rw (axpy)
+            local_bytes += ((hi - lo) * 4 * 3) as u64;
+        }
+        sim.read(Tier::Fast, local_bytes);
+    });
+
+    BStats {
+        updates: updates.load(Ordering::Relaxed),
+        zero_deltas: zero_deltas.load(Ordering::Relaxed),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::generator::{generate, DatasetKind, Family};
+    use crate::data::Matrix;
+    use crate::glm::{GlmModel, Lasso, Ridge};
+
+    fn setup() -> (Matrix, Vec<f32>) {
+        let g = generate(DatasetKind::Tiny, Family::Regression, 1.0, 101);
+        (g.matrix, g.targets)
+    }
+
+    /// After an epoch, v must equal D * alpha exactly (no lost updates):
+    /// the §IV-C atomicity invariant.
+    fn check_v_consistency(m: &Matrix, v: &SharedVector, alpha: &SharedVector) {
+        let n = m.n_cols();
+        let a: Vec<f32> = (0..n).map(|j| alpha.read(j)).collect();
+        let want = match m {
+            Matrix::Dense(dm) => dm.matvec_alpha(&a),
+            Matrix::Sparse(sm) => sm.matvec_alpha(&a),
+            _ => unreachable!(),
+        };
+        for (r, &wv) in want.iter().enumerate() {
+            assert!(
+                (v.read(r) - wv).abs() < 1e-2 * wv.abs().max(1.0),
+                "v[{r}] = {} want {wv}",
+                v.read(r)
+            );
+        }
+    }
+
+    fn run_b(t_b: usize, v_b: usize, model: &dyn GlmModel, seed: u64) {
+        let (m, y) = setup();
+        let (d, n) = (m.n_rows(), m.n_cols());
+        let sim = TierSim::default();
+        let batch: Vec<usize> = (0..n / 2).map(|i| i * 2).collect();
+        let mut ws = WorkingSet::new(&m, batch.len());
+        ws.swap_in(&m, &batch, &sim);
+        let v = SharedVector::new(d, 64);
+        let alpha = SharedVector::new(n, usize::MAX >> 1);
+        let _ = seed;
+        let pool = WorkerPool::with_name(t_b * v_b, "test-b");
+        let items = WorkItem::from_batch(&batch);
+        let stats = run_epoch(
+            &pool, &ws, &items, &v, &y, &alpha, model.kind(), t_b, v_b, &sim,
+        );
+        assert_eq!(stats.updates + stats.zero_deltas, batch.len() as u64);
+        assert!(stats.updates > 0, "some coordinates must move");
+        check_v_consistency(&m, &v, &alpha);
+        // objective must drop vs alpha = 0
+        let a: Vec<f32> = (0..n).map(|j| alpha.read(j)).collect();
+        let vv: Vec<f32> = (0..d).map(|r| v.read(r)).collect();
+        let obj0 = model.objective(&vec![0.0; d], &y, &vec![0.0; n]);
+        let obj1 = model.objective(&vv, &y, &a);
+        assert!(obj1 < obj0, "{obj1} < {obj0}");
+    }
+
+    #[test]
+    fn sequential_group_single_lane() {
+        run_b(1, 1, &Lasso::new(0.05), 1);
+    }
+
+    #[test]
+    fn parallel_groups() {
+        run_b(4, 1, &Lasso::new(0.05), 2);
+    }
+
+    #[test]
+    fn split_vectors() {
+        run_b(1, 4, &Ridge::new(0.5), 3);
+    }
+
+    #[test]
+    fn groups_and_lanes_combined() {
+        run_b(3, 2, &Ridge::new(0.5), 4);
+    }
+
+    #[test]
+    fn t_b_1_matches_reference_sequential_cd() {
+        // With one group and one lane, B is exactly sequential CD over
+        // the batch — cross-check against glm::solve-style updates.
+        let (m, y) = setup();
+        let (d, n) = (m.n_rows(), m.n_cols());
+        let sim = TierSim::default();
+        let model = Lasso::new(0.05);
+        let kind = model.kind();
+        let batch: Vec<usize> = (0..8).collect();
+        let mut ws = WorkingSet::new(&m, 8);
+        ws.swap_in(&m, &batch, &sim);
+        let v = SharedVector::new(d, 1024);
+        let alpha = SharedVector::new(n, usize::MAX >> 1);
+        let pool = WorkerPool::with_name(1, "test-b");
+        run_epoch(&pool, &ws, &WorkItem::from_batch(&batch), &v, &y, &alpha, kind, 1, 1, &sim);
+
+        // manual sequential replay
+        let mut v_ref = vec![0.0f32; d];
+        let mut a_ref = vec![0.0f32; n];
+        let ops = m.as_ops();
+        for &j in &batch {
+            let w: Vec<f32> = v_ref.iter().zip(&y).map(|(&vj, &yj)| kind.w_of(vj, yj)).collect();
+            let u = ops.dot(j, &w);
+            let delta = kind.delta(u, a_ref[j], ops.sq_norm(j));
+            if delta != 0.0 {
+                a_ref[j] += delta;
+                ops.axpy(j, delta, &mut v_ref);
+            }
+        }
+        for j in 0..n {
+            assert!((alpha.read(j) - a_ref[j]).abs() < 1e-5, "alpha[{j}]");
+        }
+        for r in 0..d {
+            assert!((v.read(r) - v_ref[r]).abs() < 1e-4, "v[{r}]");
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn pool_size_mismatch_panics() {
+        let (m, y) = setup();
+        let sim = TierSim::default();
+        let batch = vec![0usize];
+        let mut ws = WorkingSet::new(&m, 1);
+        ws.swap_in(&m, &batch, &sim);
+        let v = SharedVector::new(m.n_rows(), 64);
+        let alpha = SharedVector::new(m.n_cols(), usize::MAX >> 1);
+        let pool = WorkerPool::with_name(3, "test-b"); // != 2*2
+        run_epoch(&pool, &ws, &WorkItem::from_batch(&batch), &v, &y, &alpha,
+            Lasso::new(0.1).kind(), 2, 2, &sim);
+    }
+}

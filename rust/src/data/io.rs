@@ -1,0 +1,247 @@
+//! Binary dataset / model persistence (hand-rolled; no serde offline).
+//!
+//! Format `HTHC1` (little-endian):
+//!
+//! ```text
+//! magic[5] = "HTHC1"
+//! kind: u8           1 = dense dataset, 2 = sparse dataset, 3 = model
+//! -- dense:   d u64, n u64, targets f32[d], data f32[d*n] (col-major)
+//! -- sparse:  d u64, n u64, targets f32[d],
+//!             per column: nnz u64, rows u32[nnz], vals f32[nnz]
+//! -- model:   name_len u64, name bytes, lam f32, n u64, alpha f32[n]
+//! ```
+//!
+//! Lets the bench harnesses cache generated workloads and lets trained
+//! models be exported for the `evaluate` flow.
+
+use crate::data::{ColumnOps, DenseMatrix, Matrix, SparseMatrix};
+use crate::Result;
+use anyhow::{bail, Context};
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 5] = b"HTHC1";
+
+fn w_u64<W: Write>(w: &mut W, x: u64) -> Result<()> {
+    w.write_all(&x.to_le_bytes())?;
+    Ok(())
+}
+
+fn w_f32s<W: Write>(w: &mut W, xs: &[f32]) -> Result<()> {
+    for &x in xs {
+        w.write_all(&x.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+fn r_u64<R: Read>(r: &mut R) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn r_f32s<R: Read>(r: &mut R, len: usize) -> Result<Vec<f32>> {
+    let mut bytes = vec![0u8; len * 4];
+    r.read_exact(&mut bytes)?;
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+fn r_u32s<R: Read>(r: &mut R, len: usize) -> Result<Vec<u32>> {
+    let mut bytes = vec![0u8; len * 4];
+    r.read_exact(&mut bytes)?;
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+/// Save a dataset (dense or sparse) with its targets.
+pub fn save_dataset<W: Write>(mut w: W, m: &Matrix, targets: &[f32]) -> Result<()> {
+    w.write_all(MAGIC)?;
+    match m {
+        Matrix::Dense(dm) => {
+            w.write_all(&[1u8])?;
+            w_u64(&mut w, dm.n_rows() as u64)?;
+            w_u64(&mut w, dm.n_cols() as u64)?;
+            w_f32s(&mut w, targets)?;
+            w_f32s(&mut w, dm.raw())?;
+        }
+        Matrix::Sparse(sm) => {
+            w.write_all(&[2u8])?;
+            w_u64(&mut w, sm.n_rows() as u64)?;
+            w_u64(&mut w, sm.n_cols() as u64)?;
+            w_f32s(&mut w, targets)?;
+            for j in 0..sm.n_cols() {
+                let (rows, vals) = sm.col(j);
+                w_u64(&mut w, rows.len() as u64)?;
+                for &r in rows {
+                    w.write_all(&r.to_le_bytes())?;
+                }
+                w_f32s(&mut w, vals)?;
+            }
+        }
+        Matrix::Quantized(_) => bail!("save the fp32 source, not the quantized view"),
+    }
+    Ok(())
+}
+
+/// Load a dataset saved by [`save_dataset`].
+pub fn load_dataset<R: Read>(mut r: R) -> Result<(Matrix, Vec<f32>)> {
+    let mut magic = [0u8; 5];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("not an HTHC1 file");
+    }
+    let mut kind = [0u8; 1];
+    r.read_exact(&mut kind)?;
+    let d = r_u64(&mut r)? as usize;
+    let n = r_u64(&mut r)? as usize;
+    let targets = r_f32s(&mut r, d)?;
+    match kind[0] {
+        1 => {
+            let data = r_f32s(&mut r, d * n)?;
+            Ok((Matrix::Dense(DenseMatrix::from_col_major(d, n, data)), targets))
+        }
+        2 => {
+            let mut cols = Vec::with_capacity(n);
+            for _ in 0..n {
+                let nnz = r_u64(&mut r)? as usize;
+                let rows = r_u32s(&mut r, nnz)?;
+                let vals = r_f32s(&mut r, nnz)?;
+                cols.push(rows.into_iter().zip(vals).collect());
+            }
+            Ok((Matrix::Sparse(SparseMatrix::from_columns(d, cols)), targets))
+        }
+        k => bail!("unknown dataset kind {k}"),
+    }
+}
+
+/// A trained model export: name + lambda + alpha.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SavedModel {
+    pub name: String,
+    pub lam: f32,
+    pub alpha: Vec<f32>,
+}
+
+pub fn save_model<W: Write>(mut w: W, m: &SavedModel) -> Result<()> {
+    w.write_all(MAGIC)?;
+    w.write_all(&[3u8])?;
+    w_u64(&mut w, m.name.len() as u64)?;
+    w.write_all(m.name.as_bytes())?;
+    w.write_all(&m.lam.to_le_bytes())?;
+    w_u64(&mut w, m.alpha.len() as u64)?;
+    w_f32s(&mut w, &m.alpha)?;
+    Ok(())
+}
+
+pub fn load_model<R: Read>(mut r: R) -> Result<SavedModel> {
+    let mut magic = [0u8; 5];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("not an HTHC1 file");
+    }
+    let mut kind = [0u8; 1];
+    r.read_exact(&mut kind)?;
+    if kind[0] != 3 {
+        bail!("not a model file (kind {})", kind[0]);
+    }
+    let name_len = r_u64(&mut r)? as usize;
+    let mut name = vec![0u8; name_len];
+    r.read_exact(&mut name)?;
+    let mut lam = [0u8; 4];
+    r.read_exact(&mut lam)?;
+    let n = r_u64(&mut r)? as usize;
+    let alpha = r_f32s(&mut r, n)?;
+    Ok(SavedModel {
+        name: String::from_utf8(name).context("model name utf8")?,
+        lam: f32::from_le_bytes(lam),
+        alpha,
+    })
+}
+
+/// Convenience: file-path wrappers.
+pub fn save_dataset_file(path: &Path, m: &Matrix, targets: &[f32]) -> Result<()> {
+    let f = std::fs::File::create(path).with_context(|| format!("create {path:?}"))?;
+    save_dataset(std::io::BufWriter::new(f), m, targets)
+}
+
+pub fn load_dataset_file(path: &Path) -> Result<(Matrix, Vec<f32>)> {
+    let f = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
+    load_dataset(std::io::BufReader::new(f))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::generator::{generate, DatasetKind, Family};
+    use crate::data::ColumnOps;
+
+    #[test]
+    fn dense_roundtrip() {
+        let g = generate(DatasetKind::Tiny, Family::Regression, 1.0, 501);
+        let mut buf = Vec::new();
+        save_dataset(&mut buf, &g.matrix, &g.targets).unwrap();
+        let (m2, t2) = load_dataset(buf.as_slice()).unwrap();
+        assert_eq!(t2, g.targets);
+        if let (Matrix::Dense(a), Matrix::Dense(b)) = (&g.matrix, &m2) {
+            assert_eq!(a.raw(), b.raw());
+        } else {
+            panic!("expected dense");
+        }
+    }
+
+    #[test]
+    fn sparse_roundtrip() {
+        let g = generate(DatasetKind::News20Like, Family::Regression, 0.03, 502);
+        let mut buf = Vec::new();
+        save_dataset(&mut buf, &g.matrix, &g.targets).unwrap();
+        let (m2, t2) = load_dataset(buf.as_slice()).unwrap();
+        assert_eq!(t2, g.targets);
+        if let (Matrix::Sparse(a), Matrix::Sparse(b)) = (&g.matrix, &m2) {
+            assert_eq!(a.n_rows(), b.n_rows());
+            for j in 0..a.n_cols() {
+                assert_eq!(a.col(j), b.col(j), "col {j}");
+            }
+        } else {
+            panic!("expected sparse");
+        }
+    }
+
+    #[test]
+    fn model_roundtrip() {
+        let m = SavedModel { name: "lasso".into(), lam: 0.125, alpha: vec![0.0, -1.5, 3.25] };
+        let mut buf = Vec::new();
+        save_model(&mut buf, &m).unwrap();
+        let m2 = load_model(buf.as_slice()).unwrap();
+        assert_eq!(m, m2);
+    }
+
+    #[test]
+    fn corrupt_magic_rejected() {
+        assert!(load_dataset(&b"BOGUS\x01"[..]).is_err());
+        assert!(load_model(&b"HTHC1\x01"[..]).is_err()); // dataset kind, not model
+    }
+
+    #[test]
+    fn truncated_file_errors_not_panics() {
+        let g = generate(DatasetKind::Tiny, Family::Regression, 1.0, 503);
+        let mut buf = Vec::new();
+        save_dataset(&mut buf, &g.matrix, &g.targets).unwrap();
+        buf.truncate(buf.len() / 2);
+        assert!(load_dataset(buf.as_slice()).is_err());
+    }
+
+    #[test]
+    fn quantized_save_refused() {
+        let g = generate(DatasetKind::Tiny, Family::Regression, 1.0, 504);
+        let q = match &g.matrix {
+            Matrix::Dense(dm) => Matrix::Quantized(crate::data::QuantizedMatrix::from_dense(dm)),
+            _ => unreachable!(),
+        };
+        assert!(save_dataset(Vec::new(), &q, &g.targets).is_err());
+    }
+}

@@ -1,0 +1,184 @@
+//! LIBSVM text-format I/O.
+//!
+//! The paper's real datasets ship in this format (`label idx:val ...`,
+//! 1-based indices).  The loader produces the row-major sample stream
+//! and both task orientations (see `generator::Family`): features as
+//! coordinates for Lasso, samples as coordinates for SVM.
+
+use crate::data::sparse::SparseMatrix;
+use crate::Result;
+use anyhow::{bail, Context};
+use std::io::{BufRead, BufReader, Write};
+use std::path::Path;
+
+/// One parsed sample: label + sorted (0-based feature, value) pairs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Sample {
+    pub label: f32,
+    pub features: Vec<(u32, f32)>,
+}
+
+/// Parse a LIBSVM file.
+pub fn read_file(path: &Path) -> Result<Vec<Sample>> {
+    let f = std::fs::File::open(path)
+        .with_context(|| format!("open {}", path.display()))?;
+    read(BufReader::new(f))
+}
+
+/// Parse LIBSVM lines from any reader.
+pub fn read<R: BufRead>(r: R) -> Result<Vec<Sample>> {
+    let mut out = Vec::new();
+    for (lineno, line) in r.lines().enumerate() {
+        let line = line?;
+        let line = line.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let mut toks = line.split_whitespace();
+        let label: f32 = toks
+            .next()
+            .unwrap()
+            .parse()
+            .with_context(|| format!("line {}: bad label", lineno + 1))?;
+        let mut features = Vec::new();
+        for t in toks {
+            let (i, v) = t
+                .split_once(':')
+                .with_context(|| format!("line {}: bad pair {t:?}", lineno + 1))?;
+            let i: u32 = i
+                .parse()
+                .with_context(|| format!("line {}: bad index", lineno + 1))?;
+            if i == 0 {
+                bail!("line {}: LIBSVM indices are 1-based", lineno + 1);
+            }
+            let v: f32 = v
+                .parse()
+                .with_context(|| format!("line {}: bad value", lineno + 1))?;
+            features.push((i - 1, v));
+        }
+        features.sort_unstable_by_key(|&(i, _)| i);
+        out.push(Sample { label, features });
+    }
+    Ok(out)
+}
+
+/// Write samples in LIBSVM format.
+pub fn write<W: Write>(mut w: W, samples: &[Sample]) -> Result<()> {
+    for s in samples {
+        write!(w, "{}", s.label)?;
+        for &(i, v) in &s.features {
+            write!(w, " {}:{}", i + 1, v)?;
+        }
+        writeln!(w)?;
+    }
+    Ok(())
+}
+
+/// Number of features = 1 + max index.
+pub fn n_features(samples: &[Sample]) -> usize {
+    samples
+        .iter()
+        .flat_map(|s| s.features.iter().map(|&(i, _)| i as usize + 1))
+        .max()
+        .unwrap_or(0)
+}
+
+/// Regression orientation: coordinates = features.
+/// Returns (D of shape samples x features, targets = labels).
+pub fn to_regression(samples: &[Sample]) -> (SparseMatrix, Vec<f32>) {
+    let d = samples.len();
+    let n = n_features(samples);
+    let mut cols: Vec<Vec<(u32, f32)>> = vec![Vec::new(); n];
+    for (row, s) in samples.iter().enumerate() {
+        for &(feat, v) in &s.features {
+            cols[feat as usize].push((row as u32, v));
+        }
+    }
+    let targets = samples.iter().map(|s| s.label).collect();
+    (SparseMatrix::from_columns(d, cols), targets)
+}
+
+/// Dual-SVM orientation: coordinates = samples, columns y_i * x_i.
+/// Returns (D of shape features x samples, labels per column).
+pub fn to_classification(samples: &[Sample]) -> (SparseMatrix, Vec<f32>) {
+    let d = n_features(samples);
+    let labels: Vec<f32> = samples
+        .iter()
+        .map(|s| if s.label > 0.0 { 1.0 } else { -1.0 })
+        .collect();
+    let cols = samples
+        .iter()
+        .zip(&labels)
+        .map(|(s, &y)| s.features.iter().map(|&(i, v)| (i, y * v)).collect())
+        .collect();
+    (SparseMatrix::from_columns(d, cols), labels)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::ColumnOps;
+
+    const SAMPLE: &str = "\
++1 1:0.5 3:1.5
+-1 2:2.0 # trailing comment
+
++1 1:-1.0 2:0.25 3:4.0
+";
+
+    #[test]
+    fn parse_basic() {
+        let s = read(SAMPLE.as_bytes()).unwrap();
+        assert_eq!(s.len(), 3);
+        assert_eq!(s[0].label, 1.0);
+        assert_eq!(s[0].features, vec![(0, 0.5), (2, 1.5)]);
+        assert_eq!(s[1].features, vec![(1, 2.0)]);
+        assert_eq!(n_features(&s), 3);
+    }
+
+    #[test]
+    fn zero_index_rejected() {
+        assert!(read("+1 0:1.0".as_bytes()).is_err());
+    }
+
+    #[test]
+    fn bad_pair_rejected() {
+        assert!(read("+1 abc".as_bytes()).is_err());
+        assert!(read("+1 2:xyz".as_bytes()).is_err());
+    }
+
+    #[test]
+    fn roundtrip() {
+        let s = read(SAMPLE.as_bytes()).unwrap();
+        let mut buf = Vec::new();
+        write(&mut buf, &s).unwrap();
+        let s2 = read(buf.as_slice()).unwrap();
+        assert_eq!(s, s2);
+    }
+
+    #[test]
+    fn regression_orientation() {
+        let s = read(SAMPLE.as_bytes()).unwrap();
+        let (m, targets) = to_regression(&s);
+        assert_eq!(m.n_rows(), 3); // samples
+        assert_eq!(m.n_cols(), 3); // features
+        assert_eq!(targets, vec![1.0, -1.0, 1.0]);
+        // feature 0 appears in samples 0 and 2
+        let (rows, vals) = m.col(0);
+        assert_eq!(rows, &[0, 2]);
+        assert_eq!(vals, &[0.5, -1.0]);
+    }
+
+    #[test]
+    fn classification_orientation_scales_by_label() {
+        let s = read(SAMPLE.as_bytes()).unwrap();
+        let (m, labels) = to_classification(&s);
+        assert_eq!(m.n_rows(), 3); // features
+        assert_eq!(m.n_cols(), 3); // samples
+        assert_eq!(labels, vec![1.0, -1.0, 1.0]);
+        // sample 1 has label -1, feature 1 value 2.0 -> stored -2.0
+        let (rows, vals) = m.col(1);
+        assert_eq!(rows, &[1]);
+        assert_eq!(vals, &[-2.0]);
+    }
+}

@@ -1,0 +1,99 @@
+//! Data representations and workload generation.
+//!
+//! HTHC supports three matrix representations (paper §IV-D/E):
+//! dense column-major f32, chunked compressed-sparse-column, and 4-bit
+//! quantized (Clover-style).  All expose the one access pattern the
+//! algorithm needs — *iterate a column and dot it against a dense
+//! vector* — via the [`ColumnOps`] trait, so tasks A/B and every
+//! baseline are generic over representation.
+
+pub mod dense;
+pub mod generator;
+pub mod io;
+pub mod libsvm;
+pub mod preprocess;
+pub mod quantized;
+pub mod sparse;
+
+pub use dense::DenseMatrix;
+pub use generator::{DatasetKind, GeneratedDataset};
+pub use quantized::QuantizedMatrix;
+pub use sparse::{ChunkPool, SparseMatrix};
+
+/// Column access used by the gap/update hot paths.
+///
+/// `dot` is Eq. (3)/(4)'s `<w, d_i>`; `axpy` is the shared-vector
+/// maintenance `v += delta * d_i` (the caller handles locking);
+/// `sq_norm` is `||d_i||^2`.
+pub trait ColumnOps: Sync {
+    fn n_rows(&self) -> usize;
+    fn n_cols(&self) -> usize;
+    /// `<w, d_i>`.
+    fn dot(&self, col: usize, w: &[f32]) -> f32;
+    /// Partial dot over rows `[lo, hi)` — V_B-way vector splitting.
+    fn dot_range(&self, col: usize, w: &[f32], lo: usize, hi: usize) -> f32;
+    /// `v += delta * d_i` on a raw slice (caller synchronizes).
+    fn axpy(&self, col: usize, delta: f32, v: &mut [f32]);
+    /// `||d_i||^2`.
+    fn sq_norm(&self, col: usize) -> f32;
+    /// Number of stored (non-zero) entries in the column.
+    fn nnz(&self, col: usize) -> usize;
+    /// Bytes touched when streaming this column (for TierSim charging).
+    fn col_bytes(&self, col: usize) -> u64;
+}
+
+/// Dense, sparse or quantized — run-time polymorphism for the CLI layer.
+pub enum Matrix {
+    Dense(DenseMatrix),
+    Sparse(SparseMatrix),
+    Quantized(QuantizedMatrix),
+}
+
+impl Matrix {
+    pub fn as_ops(&self) -> &dyn ColumnOps {
+        match self {
+            Matrix::Dense(m) => m,
+            Matrix::Sparse(m) => m,
+            Matrix::Quantized(m) => m,
+        }
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.as_ops().n_rows()
+    }
+
+    pub fn n_cols(&self) -> usize {
+        self.as_ops().n_cols()
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        (0..self.n_cols()).map(|j| self.as_ops().col_bytes(j)).sum()
+    }
+
+    /// `v = D * alpha` from scratch — used to periodically re-anchor the
+    /// incrementally-maintained shared vector (fp32 drift after many
+    /// `v += delta d_i` updates otherwise floors the achievable gap).
+    pub fn matvec_alpha(&self, alpha: &[f32]) -> Vec<f32> {
+        match self {
+            Matrix::Dense(m) => m.matvec_alpha(alpha),
+            Matrix::Sparse(m) => m.matvec_alpha(alpha),
+            Matrix::Quantized(m) => {
+                let mut v = vec![0.0f32; m.n_rows()];
+                for (j, &a) in alpha.iter().enumerate() {
+                    if a != 0.0 {
+                        m.axpy(j, a, &mut v);
+                    }
+                }
+                v
+            }
+        }
+    }
+
+    pub fn repr_name(&self) -> &'static str {
+        match self {
+            Matrix::Dense(_) => "dense",
+            Matrix::Sparse(_) => "sparse",
+            Matrix::Quantized(_) => "quantized-4bit",
+        }
+    }
+}

@@ -1,0 +1,159 @@
+//! Preprocessing: column normalization, target centering, row splits.
+//!
+//! The paper's datasets arrive preprocessed (epsilon is unit-normed;
+//! dvsc features are CNN activations scaled as in its source).  CD's
+//! per-coordinate step sizes are `1/||d_i||^2`, so normalizing columns
+//! equalizes progress per update and is standard practice; these
+//! helpers make that a first-class part of the pipeline.
+
+use crate::data::{ColumnOps, DenseMatrix, Matrix, SparseMatrix};
+use crate::util::Rng;
+
+/// Scale every column to unit L2 norm.  Returns (normalized matrix,
+/// per-column scales applied) — `alpha` learned on the normalized data
+/// maps back via `alpha_i / scale_i`.
+pub fn unit_norm_columns(m: &Matrix) -> (Matrix, Vec<f32>) {
+    match m {
+        Matrix::Dense(dm) => {
+            let (d, n) = (dm.n_rows(), dm.n_cols());
+            let mut data = Vec::with_capacity(d * n);
+            let mut scales = Vec::with_capacity(n);
+            for j in 0..n {
+                let col = dm.col(j);
+                let norm = dm.sq_norm(j).sqrt();
+                let s = if norm > 0.0 { 1.0 / norm } else { 1.0 };
+                scales.push(s);
+                data.extend(col.iter().map(|&x| x * s));
+            }
+            (Matrix::Dense(DenseMatrix::from_col_major(d, n, data)), scales)
+        }
+        Matrix::Sparse(sm) => {
+            let n = sm.n_cols();
+            let mut cols = Vec::with_capacity(n);
+            let mut scales = Vec::with_capacity(n);
+            for j in 0..n {
+                let (rows, vals) = sm.col(j);
+                let norm = sm.sq_norm(j).sqrt();
+                let s = if norm > 0.0 { 1.0 / norm } else { 1.0 };
+                scales.push(s);
+                cols.push(
+                    rows.iter()
+                        .zip(vals)
+                        .map(|(&r, &v)| (r, v * s))
+                        .collect(),
+                );
+            }
+            (Matrix::Sparse(SparseMatrix::from_columns(sm.n_rows(), cols)), scales)
+        }
+        Matrix::Quantized(_) => panic!("normalize before quantizing"),
+    }
+}
+
+/// Subtract the mean from regression targets; returns (centered, mean).
+/// Centering absorbs the intercept so no bias column is needed.
+pub fn center_targets(y: &[f32]) -> (Vec<f32>, f32) {
+    let mean = y.iter().map(|&t| t as f64).sum::<f64>() / y.len().max(1) as f64;
+    let mean = mean as f32;
+    (y.iter().map(|&t| t - mean).collect(), mean)
+}
+
+/// Split row indices into train/test (regression orientation: rows are
+/// samples).  Deterministic per seed.
+pub fn train_test_split(d: usize, test_frac: f64, seed: u64) -> (Vec<usize>, Vec<usize>) {
+    assert!((0.0..1.0).contains(&test_frac));
+    let mut idx: Vec<usize> = (0..d).collect();
+    let mut rng = Rng::new(seed);
+    rng.shuffle(&mut idx);
+    let n_test = ((d as f64) * test_frac).round() as usize;
+    let test = idx[..n_test].to_vec();
+    let train = idx[n_test..].to_vec();
+    (train, test)
+}
+
+/// Restrict a dense regression problem to a subset of rows.
+pub fn take_rows_dense(m: &DenseMatrix, y: &[f32], rows: &[usize]) -> (DenseMatrix, Vec<f32>) {
+    let n = m.n_cols();
+    let dd = rows.len();
+    let mut data = Vec::with_capacity(dd * n);
+    for j in 0..n {
+        let col = m.col(j);
+        data.extend(rows.iter().map(|&r| col[r]));
+    }
+    let ty = rows.iter().map(|&r| y[r]).collect();
+    (DenseMatrix::from_col_major(dd, n, data), ty)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::generator::{generate, DatasetKind, Family};
+    use crate::data::ColumnOps;
+
+    #[test]
+    fn unit_norm_dense() {
+        let g = generate(DatasetKind::Tiny, Family::Regression, 1.0, 601);
+        let (m2, scales) = unit_norm_columns(&g.matrix);
+        assert_eq!(scales.len(), g.n());
+        for j in 0..m2.n_cols() {
+            let sq = m2.as_ops().sq_norm(j);
+            assert!((sq - 1.0).abs() < 1e-4, "col {j}: {sq}");
+        }
+    }
+
+    #[test]
+    fn unit_norm_sparse_preserves_pattern() {
+        let g = generate(DatasetKind::News20Like, Family::Regression, 0.03, 602);
+        let (m2, _) = unit_norm_columns(&g.matrix);
+        if let (Matrix::Sparse(a), Matrix::Sparse(b)) = (&g.matrix, &m2) {
+            for j in 0..a.n_cols() {
+                assert_eq!(a.col(j).0, b.col(j).0, "pattern must not change");
+                if a.nnz(j) > 0 {
+                    assert!((b.sq_norm(j) - 1.0).abs() < 1e-4);
+                }
+            }
+        } else {
+            panic!();
+        }
+    }
+
+    #[test]
+    fn zero_column_scale_is_identity() {
+        let m = Matrix::Dense(DenseMatrix::from_col_major(4, 2, vec![
+            1.0, 2.0, 3.0, 4.0, 0.0, 0.0, 0.0, 0.0,
+        ]));
+        let (m2, scales) = unit_norm_columns(&m);
+        assert_eq!(scales[1], 1.0);
+        assert_eq!(m2.as_ops().sq_norm(1), 0.0);
+    }
+
+    #[test]
+    fn center_targets_zero_mean() {
+        let (c, mean) = center_targets(&[1.0, 2.0, 3.0, 6.0]);
+        assert_eq!(mean, 3.0);
+        let s: f32 = c.iter().sum();
+        assert!(s.abs() < 1e-6);
+    }
+
+    #[test]
+    fn split_is_partition() {
+        let (train, test) = train_test_split(100, 0.2, 9);
+        assert_eq!(test.len(), 20);
+        assert_eq!(train.len(), 80);
+        let mut all: Vec<usize> = train.iter().chain(&test).copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn take_rows_consistent() {
+        let g = generate(DatasetKind::Tiny, Family::Regression, 1.0, 603);
+        if let Matrix::Dense(dm) = &g.matrix {
+            let rows = vec![3, 10, 20];
+            let (sub, ty) = take_rows_dense(dm, &g.targets, &rows);
+            assert_eq!(sub.n_rows(), 3);
+            assert_eq!(sub.n_cols(), dm.n_cols());
+            assert_eq!(ty[1], g.targets[10]);
+            assert_eq!(sub.col(5)[2], dm.col(5)[20]);
+        }
+    }
+}

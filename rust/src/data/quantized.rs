@@ -1,0 +1,297 @@
+//! 4-bit quantized representation (paper §IV-E, Clover-style).
+//!
+//! The data matrix D is stored as 4-bit codes (two per byte) with one
+//! f32 scale per `QGROUP`-element group per column; `v` and `alpha`
+//! remain f32 ("low precision results in excessive error accumulation").
+//! The benefit is 4x less data movement for D at the cost of unpack
+//! arithmetic — Table VI measures exactly that trade.
+//!
+//! Layout matches `python/compile/kernels/ref.py` (`pack4`/`quantize4`):
+//! round-to-nearest codes in [-8, 7] biased by +8, low nibble = even row.
+
+use super::{dense::DenseMatrix, ColumnOps};
+
+/// Elements per scale group — must match `ref.QGROUP` on the python side.
+pub const QGROUP: usize = 64;
+
+/// 4-bit quantized column-major matrix.
+pub struct QuantizedMatrix {
+    d: usize,
+    n: usize,
+    /// ceil(d/2) bytes per column, column-major.
+    packed: Vec<u8>,
+    /// d/QGROUP scales per column, column-major.
+    scales: Vec<f32>,
+    sq_norms: Vec<f32>,
+    bytes_per_col: usize,
+    groups_per_col: usize,
+}
+
+#[inline]
+fn code_of(byte: u8, even: bool) -> i32 {
+    let nib = if even { byte & 0xF } else { byte >> 4 };
+    nib as i32 - 8
+}
+
+/// §Perf: byte -> (low nibble, high nibble) dequantization LUT.  One L1
+/// load replaces two shift/mask/cvtsi2ss chains per byte in the hot
+/// unpack loop (before/after in EXPERIMENTS.md §Perf).  2 KiB, L1-hot.
+static NIBBLE_LUT: once_cell::sync::Lazy<[[f32; 2]; 256]> =
+    once_cell::sync::Lazy::new(|| {
+        let mut lut = [[0.0f32; 2]; 256];
+        for (b, pair) in lut.iter_mut().enumerate() {
+            pair[0] = ((b & 0xF) as i32 - 8) as f32;
+            pair[1] = ((b >> 4) as i32 - 8) as f32;
+        }
+        lut
+    });
+
+impl QuantizedMatrix {
+    /// Quantize a dense matrix (round-to-nearest, per-group absmax/7).
+    pub fn from_dense(m: &DenseMatrix) -> Self {
+        let d = m.n_rows();
+        let n = m.n_cols();
+        assert!(d % QGROUP == 0, "d must be a multiple of QGROUP={QGROUP}");
+        let bytes_per_col = d / 2;
+        let groups_per_col = d / QGROUP;
+        let mut packed = vec![0u8; bytes_per_col * n];
+        let mut scales = vec![0f32; groups_per_col * n];
+        let mut sq_norms = vec![0f32; n];
+        for j in 0..n {
+            let col = m.col(j);
+            let pcol = &mut packed[j * bytes_per_col..(j + 1) * bytes_per_col];
+            let scol = &mut scales[j * groups_per_col..(j + 1) * groups_per_col];
+            let mut sq = 0.0f32;
+            for g in 0..groups_per_col {
+                let grp = &col[g * QGROUP..(g + 1) * QGROUP];
+                let absmax = grp.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+                let scale = if absmax > 0.0 { absmax / 7.0 } else { 1.0 };
+                scol[g] = scale;
+                for (k, &x) in grp.iter().enumerate() {
+                    let code = (x / scale).round().clamp(-8.0, 7.0) as i32;
+                    let deq = code as f32 * scale;
+                    sq += deq * deq;
+                    let row = g * QGROUP + k;
+                    let b = (code + 8) as u8;
+                    if row % 2 == 0 {
+                        pcol[row / 2] |= b;
+                    } else {
+                        pcol[row / 2] |= b << 4;
+                    }
+                }
+            }
+            sq_norms[j] = sq;
+        }
+        QuantizedMatrix { d, n, packed, scales, sq_norms, bytes_per_col, groups_per_col }
+    }
+
+    #[inline]
+    fn pcol(&self, j: usize) -> &[u8] {
+        &self.packed[j * self.bytes_per_col..(j + 1) * self.bytes_per_col]
+    }
+
+    #[inline]
+    fn scol(&self, j: usize) -> &[f32] {
+        &self.scales[j * self.groups_per_col..(j + 1) * self.groups_per_col]
+    }
+
+    /// Dequantize one column to f32 (tests, PJRT padding).
+    pub fn col_dense(&self, j: usize) -> Vec<f32> {
+        let pcol = self.pcol(j);
+        let scol = self.scol(j);
+        (0..self.d)
+            .map(|r| {
+                let scale = scol[r / QGROUP];
+                code_of(pcol[r / 2], r % 2 == 0) as f32 * scale
+            })
+            .collect()
+    }
+
+    /// Raw packed bytes of column `j` (for the PJRT q4 artifact).
+    pub fn col_packed(&self, j: usize) -> (&[u8], &[f32]) {
+        (self.pcol(j), self.scol(j))
+    }
+
+    /// Worst-case absolute dequantization error for group `g` of col `j`.
+    pub fn group_err_bound(&self, j: usize, g: usize) -> f32 {
+        self.scol(j)[g] / 2.0
+    }
+}
+
+impl ColumnOps for QuantizedMatrix {
+    fn n_rows(&self) -> usize {
+        self.d
+    }
+
+    fn n_cols(&self) -> usize {
+        self.n
+    }
+
+    /// Unpack-dequantize-FMA in one pass, group by group (scale hoisted):
+    /// the Clover pattern — trade unpack ALU for 4x less memory traffic.
+    #[inline]
+    fn dot(&self, col: usize, w: &[f32]) -> f32 {
+        self.dot_range(col, w, 0, self.d)
+    }
+
+    #[inline]
+    fn dot_range(&self, col: usize, w: &[f32], lo: usize, hi: usize) -> f32 {
+        debug_assert!(lo % QGROUP == 0, "range must be group-aligned");
+        let pcol = self.pcol(col);
+        let scol = self.scol(col);
+        let lut = &*NIBBLE_LUT;
+        let mut total = 0.0f32;
+        let g_lo = lo / QGROUP;
+        let g_hi = hi.div_ceil(QGROUP);
+        for g in g_lo..g_hi {
+            let base = g * QGROUP;
+            let end = (base + QGROUP).min(hi);
+            let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+            let mut r = base;
+            while r + 3 < end {
+                let b0 = lut[pcol[r / 2] as usize];
+                let b1 = lut[pcol[r / 2 + 1] as usize];
+                s0 += b0[0] * w[r];
+                s1 += b0[1] * w[r + 1];
+                s2 += b1[0] * w[r + 2];
+                s3 += b1[1] * w[r + 3];
+                r += 4;
+            }
+            while r < end {
+                s0 += code_of(pcol[r / 2], r % 2 == 0) as f32 * w[r];
+                r += 1;
+            }
+            total += ((s0 + s1) + (s2 + s3)) * scol[g];
+        }
+        total
+    }
+
+    #[inline]
+    fn axpy(&self, col: usize, delta: f32, v: &mut [f32]) {
+        let pcol = self.pcol(col);
+        let scol = self.scol(col);
+        for g in 0..self.groups_per_col {
+            let base = g * QGROUP;
+            let ds = delta * scol[g];
+            let mut r = base;
+            while r + 1 < base + QGROUP {
+                let byte = pcol[r / 2];
+                v[r] += ((byte & 0xF) as i32 - 8) as f32 * ds;
+                v[r + 1] += ((byte >> 4) as i32 - 8) as f32 * ds;
+                r += 2;
+            }
+        }
+    }
+
+    #[inline]
+    fn sq_norm(&self, col: usize) -> f32 {
+        self.sq_norms[col]
+    }
+
+    fn nnz(&self, _col: usize) -> usize {
+        self.d
+    }
+
+    /// The whole point: a column streams d/2 bytes + group scales
+    /// instead of 4d bytes.
+    fn col_bytes(&self, _col: usize) -> u64 {
+        (self.bytes_per_col + self.groups_per_col * 4) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn random_dense(d: usize, n: usize, seed: u64) -> DenseMatrix {
+        let mut rng = Rng::new(seed);
+        let data: Vec<f32> = (0..d * n).map(|_| rng.normal()).collect();
+        DenseMatrix::from_col_major(d, n, data)
+    }
+
+    #[test]
+    fn roundtrip_error_bounded() {
+        let m = random_dense(256, 8, 1);
+        let q = QuantizedMatrix::from_dense(&m);
+        for j in 0..8 {
+            let deq = q.col_dense(j);
+            for (r, (&x, &xq)) in m.col(j).iter().zip(&deq).enumerate() {
+                let bound = q.group_err_bound(j, r / QGROUP) + 1e-6;
+                assert!(
+                    (x - xq).abs() <= bound,
+                    "col {j} row {r}: {x} vs {xq} bound {bound}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn dot_matches_dequantized_dot() {
+        let m = random_dense(512, 4, 2);
+        let q = QuantizedMatrix::from_dense(&m);
+        let mut rng = Rng::new(3);
+        let w: Vec<f32> = (0..512).map(|_| rng.normal()).collect();
+        for j in 0..4 {
+            let deq = q.col_dense(j);
+            let want: f32 = deq.iter().zip(&w).map(|(a, b)| a * b).sum();
+            let got = q.dot(j, &w);
+            assert!((got - want).abs() < 1e-3, "col {j}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn dot_range_composes() {
+        let m = random_dense(256, 2, 4);
+        let q = QuantizedMatrix::from_dense(&m);
+        let mut rng = Rng::new(5);
+        let w: Vec<f32> = (0..256).map(|_| rng.normal()).collect();
+        let full = q.dot(0, &w);
+        let split = q.dot_range(0, &w, 0, 128) + q.dot_range(0, &w, 128, 256);
+        assert!((full - split).abs() < 1e-4);
+    }
+
+    #[test]
+    fn axpy_matches_dequantized() {
+        let m = random_dense(128, 2, 6);
+        let q = QuantizedMatrix::from_dense(&m);
+        let mut v1 = vec![0.5f32; 128];
+        let mut v2 = v1.clone();
+        q.axpy(1, 0.7, &mut v1);
+        let deq = q.col_dense(1);
+        for (vi, xi) in v2.iter_mut().zip(&deq) {
+            *vi += 0.7 * xi;
+        }
+        for (a, b) in v1.iter().zip(&v2) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn sq_norm_is_dequantized_norm() {
+        let m = random_dense(128, 3, 7);
+        let q = QuantizedMatrix::from_dense(&m);
+        for j in 0..3 {
+            let deq = q.col_dense(j);
+            let want: f32 = deq.iter().map(|x| x * x).sum();
+            assert!((q.sq_norm(j) - want).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn bytes_are_4x_smaller_plus_scales() {
+        let m = random_dense(1024, 1, 8);
+        let q = QuantizedMatrix::from_dense(&m);
+        assert_eq!(q.col_bytes(0), (1024 / 2 + (1024 / QGROUP) * 4) as u64);
+        let dense_bytes = 1024 * 4;
+        assert!((q.col_bytes(0) as usize) < dense_bytes / 3);
+    }
+
+    #[test]
+    fn zero_matrix_quantizes_to_zero() {
+        let m = DenseMatrix::from_col_major(128, 1, vec![0.0; 128]);
+        let q = QuantizedMatrix::from_dense(&m);
+        assert!(q.col_dense(0).iter().all(|&x| x == 0.0));
+        assert_eq!(q.sq_norm(0), 0.0);
+    }
+}

@@ -1,0 +1,416 @@
+//! Sparse representation (paper §IV-D).
+//!
+//! The full data matrix is CSC-like: each column stores only its
+//! non-zero `(index, value)` pairs.  Task B keeps *its own copy* of the
+//! selected columns in the fast tier, split into fixed-length chunks
+//! managed by a free stack, so columns of very different length can be
+//! swapped in and out of preallocated space each epoch without
+//! reallocating — that is the paper's chunk/stack/linked-list design,
+//! implemented here with chunk indices instead of raw pointers.
+
+use super::ColumnOps;
+
+/// Minimum chunk length: "the minimal chunk size of 32 enables the use
+/// of multiple AVX-512 accumulators" (§IV-D).
+pub const MIN_CHUNK: usize = 32;
+
+/// CSC sparse matrix: per-column (row-index, value) pairs.
+pub struct SparseMatrix {
+    d: usize,
+    n: usize,
+    col_ptr: Vec<usize>,
+    row_idx: Vec<u32>,
+    values: Vec<f32>,
+    sq_norms: Vec<f32>,
+}
+
+impl SparseMatrix {
+    /// Build from per-column (row, value) lists.  Rows may be unsorted.
+    pub fn from_columns(d: usize, cols: Vec<Vec<(u32, f32)>>) -> Self {
+        let n = cols.len();
+        let mut col_ptr = Vec::with_capacity(n + 1);
+        let mut row_idx = Vec::new();
+        let mut values = Vec::new();
+        let mut sq_norms = Vec::with_capacity(n);
+        col_ptr.push(0);
+        for mut col in cols {
+            col.sort_unstable_by_key(|&(r, _)| r);
+            let mut sq = 0.0f32;
+            for (r, v) in col {
+                assert!((r as usize) < d, "row {r} out of bounds (d={d})");
+                row_idx.push(r);
+                values.push(v);
+                sq += v * v;
+            }
+            col_ptr.push(row_idx.len());
+            sq_norms.push(sq);
+        }
+        SparseMatrix { d, n, col_ptr, row_idx, values, sq_norms }
+    }
+
+    /// Entries of column `j` as parallel slices.
+    #[inline]
+    pub fn col(&self, j: usize) -> (&[u32], &[f32]) {
+        let (a, b) = (self.col_ptr[j], self.col_ptr[j + 1]);
+        (&self.row_idx[a..b], &self.values[a..b])
+    }
+
+    /// `v = D * alpha` from scratch.
+    pub fn matvec_alpha(&self, alpha: &[f32]) -> Vec<f32> {
+        let mut v = vec![0.0f32; self.d];
+        for (j, &a) in alpha.iter().enumerate() {
+            if a != 0.0 {
+                let (rows, vals) = self.col(j);
+                for (&r, &x) in rows.iter().zip(vals) {
+                    v[r as usize] += a * x;
+                }
+            }
+        }
+        v
+    }
+
+    /// Overall density (nnz / (d*n)).
+    pub fn density(&self) -> f64 {
+        self.values.len() as f64 / (self.d as f64 * self.n as f64)
+    }
+
+    /// Densify one column (testing / PJRT padding).
+    pub fn col_dense(&self, j: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.d];
+        let (rows, vals) = self.col(j);
+        for (&r, &x) in rows.iter().zip(vals) {
+            out[r as usize] = x;
+        }
+        out
+    }
+}
+
+/// Sparse dot with 2 accumulators over the gathered entries.
+#[inline]
+pub fn sparse_dot(rows: &[u32], vals: &[f32], w: &[f32]) -> f32 {
+    let n = rows.len();
+    let half = n / 2 * 2;
+    let (mut s0, mut s1) = (0.0f32, 0.0f32);
+    let mut i = 0;
+    while i < half {
+        s0 += vals[i] * w[rows[i] as usize];
+        s1 += vals[i + 1] * w[rows[i + 1] as usize];
+        i += 2;
+    }
+    if n % 2 == 1 {
+        s0 += vals[n - 1] * w[rows[n - 1] as usize];
+    }
+    s0 + s1
+}
+
+impl ColumnOps for SparseMatrix {
+    fn n_rows(&self) -> usize {
+        self.d
+    }
+
+    fn n_cols(&self) -> usize {
+        self.n
+    }
+
+    #[inline]
+    fn dot(&self, col: usize, w: &[f32]) -> f32 {
+        let (rows, vals) = self.col(col);
+        sparse_dot(rows, vals, w)
+    }
+
+    #[inline]
+    fn dot_range(&self, col: usize, w: &[f32], lo: usize, hi: usize) -> f32 {
+        // Range over *row indices*: entries are row-sorted, binary-search
+        // the window.  (The paper notes V_B = 1 is best for sparse data —
+        // most sparse columns are too short to split profitably.)
+        let (rows, vals) = self.col(col);
+        let a = rows.partition_point(|&r| (r as usize) < lo);
+        let b = rows.partition_point(|&r| (r as usize) < hi);
+        sparse_dot(&rows[a..b], &vals[a..b], w)
+    }
+
+    #[inline]
+    fn axpy(&self, col: usize, delta: f32, v: &mut [f32]) {
+        let (rows, vals) = self.col(col);
+        for (&r, &x) in rows.iter().zip(vals) {
+            v[r as usize] += delta * x;
+        }
+    }
+
+    #[inline]
+    fn sq_norm(&self, col: usize) -> f32 {
+        self.sq_norms[col]
+    }
+
+    fn nnz(&self, col: usize) -> usize {
+        self.col_ptr[col + 1] - self.col_ptr[col]
+    }
+
+    fn col_bytes(&self, col: usize) -> u64 {
+        (self.nnz(col) * 8) as u64 // (u32 index + f32 value)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Chunked working-set storage (task B's fast-tier copy)
+// ---------------------------------------------------------------------------
+
+/// One fixed-length chunk of (index, value) pairs.
+struct Chunk {
+    rows: Box<[u32]>,
+    vals: Box<[f32]>,
+    /// Valid prefix length (last chunk of a column may be partial).
+    len: usize,
+    /// Next chunk of the same column, or usize::MAX.
+    next: usize,
+}
+
+const NONE: usize = usize::MAX;
+
+/// Preallocated pool of chunks with a free stack + per-column chain
+/// heads: the paper's §IV-D structure.  `swap_in` pops chunks from the
+/// stack to hold a new column; `swap_out` pushes them back.  Total pool
+/// size is fixed up-front from the `m` densest columns, as in the paper.
+pub struct ChunkPool {
+    chunk_len: usize,
+    chunks: Vec<Chunk>,
+    free: Vec<usize>,
+    /// Chain head per working-set slot.
+    heads: Vec<usize>,
+    /// nnz per slot (for iteration).
+    lens: Vec<usize>,
+    sq_norms: Vec<f32>,
+}
+
+impl ChunkPool {
+    /// Pool sized for `slots` columns of up to `max_nnz` entries each.
+    pub fn new(slots: usize, max_nnz: usize, chunk_len: usize) -> Self {
+        assert!(chunk_len >= MIN_CHUNK && chunk_len % MIN_CHUNK == 0);
+        let per_col = max_nnz.div_ceil(chunk_len);
+        let total = slots * per_col;
+        let mut chunks = Vec::with_capacity(total);
+        for _ in 0..total {
+            chunks.push(Chunk {
+                rows: vec![0u32; chunk_len].into_boxed_slice(),
+                vals: vec![0f32; chunk_len].into_boxed_slice(),
+                len: 0,
+                next: NONE,
+            });
+        }
+        ChunkPool {
+            chunk_len,
+            chunks,
+            free: (0..total).rev().collect(),
+            heads: vec![NONE; slots],
+            lens: vec![0; slots],
+            sq_norms: vec![0.0; slots],
+        }
+    }
+
+    pub fn chunk_len(&self) -> usize {
+        self.chunk_len
+    }
+
+    pub fn free_chunks(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn slots(&self) -> usize {
+        self.heads.len()
+    }
+
+    /// Copy a column into `slot`, linking chunks popped from the stack.
+    /// Returns false (slot untouched) if the pool is exhausted.
+    pub fn swap_in(&mut self, slot: usize, rows: &[u32], vals: &[f32]) -> bool {
+        assert_eq!(rows.len(), vals.len());
+        self.swap_out(slot);
+        let needed = rows.len().div_ceil(self.chunk_len);
+        if needed > self.free.len() {
+            return false;
+        }
+        let mut head = NONE;
+        let mut tail = NONE;
+        let mut sq = 0.0f32;
+        for start in (0..rows.len()).step_by(self.chunk_len) {
+            let end = (start + self.chunk_len).min(rows.len());
+            let id = self.free.pop().expect("checked above");
+            let c = &mut self.chunks[id];
+            let k = end - start;
+            c.rows[..k].copy_from_slice(&rows[start..end]);
+            c.vals[..k].copy_from_slice(&vals[start..end]);
+            c.len = k;
+            c.next = NONE;
+            for &v in &vals[start..end] {
+                sq += v * v;
+            }
+            if head == NONE {
+                head = id;
+            } else {
+                self.chunks[tail].next = id;
+            }
+            tail = id;
+        }
+        self.heads[slot] = head;
+        self.lens[slot] = rows.len();
+        self.sq_norms[slot] = sq;
+        true
+    }
+
+    /// Return `slot`'s chunks to the free stack.
+    pub fn swap_out(&mut self, slot: usize) {
+        let mut id = self.heads[slot];
+        while id != NONE {
+            let next = self.chunks[id].next;
+            self.chunks[id].len = 0;
+            self.chunks[id].next = NONE;
+            self.free.push(id);
+            id = next;
+        }
+        self.heads[slot] = NONE;
+        self.lens[slot] = 0;
+        self.sq_norms[slot] = 0.0;
+    }
+
+    /// Iterate `slot`'s (rows, vals) chunk by chunk.
+    pub fn for_each_chunk<F: FnMut(&[u32], &[f32])>(&self, slot: usize, mut f: F) {
+        let mut id = self.heads[slot];
+        while id != NONE {
+            let c = &self.chunks[id];
+            f(&c.rows[..c.len], &c.vals[..c.len]);
+            id = c.next;
+        }
+    }
+
+    /// `<w, column-at-slot>` across chunks.
+    pub fn dot(&self, slot: usize, w: &[f32]) -> f32 {
+        let mut s = 0.0f32;
+        self.for_each_chunk(slot, |rows, vals| s += sparse_dot(rows, vals, w));
+        s
+    }
+
+    pub fn nnz(&self, slot: usize) -> usize {
+        self.lens[slot]
+    }
+
+    pub fn sq_norm(&self, slot: usize) -> f32 {
+        self.sq_norms[slot]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mat() -> SparseMatrix {
+        // d=5; col0: rows {0:1, 4:2}; col1: rows {2:-3}; col2: empty
+        SparseMatrix::from_columns(
+            5,
+            vec![vec![(4, 2.0), (0, 1.0)], vec![(2, -3.0)], vec![]],
+        )
+    }
+
+    #[test]
+    fn construction_sorts_rows() {
+        let m = mat();
+        let (rows, vals) = m.col(0);
+        assert_eq!(rows, &[0, 4]);
+        assert_eq!(vals, &[1.0, 2.0]);
+        assert_eq!(m.nnz(2), 0);
+    }
+
+    #[test]
+    fn dot_and_sq_norm() {
+        let m = mat();
+        let w = vec![1.0, 1.0, 1.0, 1.0, 0.5];
+        assert_eq!(m.dot(0, &w), 2.0);
+        assert_eq!(m.dot(1, &w), -3.0);
+        assert_eq!(m.dot(2, &w), 0.0);
+        assert_eq!(m.sq_norm(0), 5.0);
+        assert_eq!(m.sq_norm(1), 9.0);
+    }
+
+    #[test]
+    fn dot_range_by_row_window() {
+        let m = mat();
+        let w = vec![1.0; 5];
+        assert_eq!(m.dot_range(0, &w, 0, 1), 1.0); // row 0 only
+        assert_eq!(m.dot_range(0, &w, 1, 5), 2.0); // row 4 only
+        let whole = m.dot_range(0, &w, 0, 5);
+        assert_eq!(whole, m.dot(0, &w));
+    }
+
+    #[test]
+    fn axpy_scatter() {
+        let m = mat();
+        let mut v = vec![0.0; 5];
+        m.axpy(0, 2.0, &mut v);
+        assert_eq!(v, vec![2.0, 0.0, 0.0, 0.0, 4.0]);
+    }
+
+    #[test]
+    fn matvec_alpha_consistent() {
+        let m = mat();
+        let v = m.matvec_alpha(&[1.0, 2.0, 3.0]);
+        assert_eq!(v, vec![1.0, 0.0, -6.0, 0.0, 2.0]);
+    }
+
+    #[test]
+    fn density() {
+        assert!((mat().density() - 3.0 / 15.0).abs() < 1e-12);
+    }
+
+    // --- chunk pool ---
+
+    #[test]
+    fn pool_swap_in_out_roundtrip() {
+        let mut p = ChunkPool::new(2, 100, 32);
+        let rows: Vec<u32> = (0..70).collect();
+        let vals: Vec<f32> = (0..70).map(|i| i as f32).collect();
+        assert!(p.swap_in(0, &rows, &vals));
+        assert_eq!(p.nnz(0), 70);
+        // 70 entries over 32-chunks = 3 chunks used
+        assert_eq!(p.free_chunks(), 2 * 4 - 3);
+        let mut got_rows = Vec::new();
+        p.for_each_chunk(0, |r, v| {
+            assert_eq!(r.len(), v.len());
+            got_rows.extend_from_slice(r);
+        });
+        assert_eq!(got_rows, rows);
+        p.swap_out(0);
+        assert_eq!(p.free_chunks(), 8);
+        assert_eq!(p.nnz(0), 0);
+    }
+
+    #[test]
+    fn pool_dot_matches_sparse() {
+        let m = mat();
+        let mut p = ChunkPool::new(1, 64, 32);
+        let (rows, vals) = m.col(0);
+        p.swap_in(0, rows, vals);
+        let w = vec![1.0, 1.0, 1.0, 1.0, 0.5];
+        assert_eq!(p.dot(0, &w), m.dot(0, &w));
+        assert_eq!(p.sq_norm(0), m.sq_norm(0));
+    }
+
+    #[test]
+    fn pool_exhaustion_is_clean() {
+        let mut p = ChunkPool::new(1, 32, 32); // exactly 1 chunk
+        let rows: Vec<u32> = (0..64).collect();
+        let vals = vec![1.0f32; 64];
+        assert!(!p.swap_in(0, &rows, &vals)); // needs 2 chunks
+        assert_eq!(p.free_chunks(), 1); // nothing leaked
+        assert!(p.swap_in(0, &rows[..32], &vals[..32]));
+    }
+
+    #[test]
+    fn pool_swap_replaces_previous() {
+        let mut p = ChunkPool::new(1, 96, 32);
+        p.swap_in(0, &[1, 2, 3], &[1.0, 2.0, 3.0]);
+        p.swap_in(0, &[7], &[9.0]);
+        assert_eq!(p.nnz(0), 1);
+        let mut seen = Vec::new();
+        p.for_each_chunk(0, |r, _| seen.extend_from_slice(r));
+        assert_eq!(seen, vec![7]);
+        assert_eq!(p.free_chunks(), 3 - 1);
+    }
+}

@@ -1,0 +1,132 @@
+//! Elastic net: `f(v) = 1/2 ||v - y||^2`,
+//! `g_i(a) = lam * (rho |a| + (1 - rho)/2 a^2)`, `rho in (0, 1)`.
+//!
+//! The strongly-convex L2 part makes the conjugate finite — the gap is
+//! exact with no Lipschitzing:
+//! `g_i*(z) = max(0, |z| - lam rho)^2 / (2 lam (1 - rho))`.
+
+use super::{soft_threshold, GlmModel};
+
+#[derive(Clone, Debug)]
+pub struct ElasticNet {
+    pub lam: f32,
+    pub rho: f32,
+}
+
+impl ElasticNet {
+    pub fn new(lam: f32, rho: f32) -> Self {
+        assert!(lam > 0.0);
+        assert!(
+            (0.0..1.0).contains(&rho),
+            "rho must be in [0,1); rho=1 is plain lasso — use Lasso"
+        );
+        ElasticNet { lam, rho }
+    }
+}
+
+impl GlmModel for ElasticNet {
+    fn name(&self) -> &'static str {
+        "elastic-net"
+    }
+
+    fn kind(&self) -> super::ModelKind {
+        super::ModelKind::ElasticNet {
+            l1: self.lam * self.rho,
+            l2: self.lam * (1.0 - self.rho),
+        }
+    }
+
+    #[inline(always)]
+    fn w_of(&self, v_j: f32, y_j: f32) -> f32 {
+        v_j - y_j
+    }
+
+    #[inline(always)]
+    fn gap(&self, u: f32, alpha_i: f32) -> f32 {
+        let l1 = self.lam * self.rho;
+        let l2 = self.lam * (1.0 - self.rho);
+        let g = l1 * alpha_i.abs() + 0.5 * l2 * alpha_i * alpha_i;
+        let conj_arg = (u.abs() - l1).max(0.0);
+        let g_conj = conj_arg * conj_arg / (2.0 * l2);
+        alpha_i * u + g + g_conj
+    }
+
+    #[inline(always)]
+    fn delta(&self, u: f32, alpha_i: f32, sq_norm: f32) -> f32 {
+        if sq_norm <= 0.0 {
+            return 0.0;
+        }
+        let l1 = self.lam * self.rho;
+        let l2 = self.lam * (1.0 - self.rho);
+        // minimize 1/2||v + t d - y||^2 + l1|a+t| + l2/2 (a+t)^2 over t:
+        // closed form soft-threshold on the combined quadratic.
+        let new = soft_threshold(alpha_i * sq_norm - u, l1) / (sq_norm + l2);
+        new - alpha_i
+    }
+
+    fn objective(&self, v: &[f32], y: &[f32], alpha: &[f32]) -> f64 {
+        let fv: f64 = v
+            .iter()
+            .zip(y)
+            .map(|(&vj, &yj)| {
+                let r = (vj - yj) as f64;
+                0.5 * r * r
+            })
+            .sum();
+        let l1 = (self.lam * self.rho) as f64;
+        let l2 = (self.lam * (1.0 - self.rho)) as f64;
+        let g: f64 = alpha
+            .iter()
+            .map(|&a| l1 * a.abs() as f64 + 0.5 * l2 * (a as f64) * (a as f64))
+            .sum();
+        fv + g
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::glm::test_support::*;
+    use crate::glm::{solve_reference, total_gap};
+
+    #[test]
+    fn update_is_stationary() {
+        assert_stationary(&ElasticNet::new(0.3, 0.5), 61);
+    }
+
+    #[test]
+    fn gap_nonneg() {
+        assert_gap_nonneg(&ElasticNet::new(0.3, 0.5), 62);
+    }
+
+    #[test]
+    fn gap_zero_at_coordinate_optimum() {
+        let m = ElasticNet::new(0.4, 0.5);
+        // optimum of a*u + g(a) + g*(-u) in u for fixed a>0: u = -(l1 + l2 a)
+        let (l1, l2) = (0.2f32, 0.2f32);
+        let a = 0.7f32;
+        let u = -(l1 + l2 * a);
+        assert!(m.gap(u, a).abs() < 1e-6);
+    }
+
+    #[test]
+    fn interpolates_lasso_and_ridge() {
+        // rho -> 1 behaves like lasso (sparsity); rho -> 0 like ridge.
+        let (mat, y, _, n) = tiny_problem(63);
+        let run = |rho: f32| {
+            let mut model = ElasticNet::new(1.0, rho);
+            let mut alpha = vec![0.0f32; n];
+            let mut v = vec![0.0f32; y.len()];
+            solve_reference(&mut model, &mat, &y, &mut alpha, &mut v, 150);
+            let gap = total_gap(&model, &mat, &v, &y, &alpha);
+            assert!(gap < 1e-5, "rho={rho} gap {gap}");
+            alpha.iter().filter(|&&a| a != 0.0).count()
+        };
+        let sparse_support = run(0.99);
+        let dense_support = run(0.01);
+        assert!(
+            sparse_support <= dense_support,
+            "L1-heavy ({sparse_support}) should be at most as dense as L2-heavy ({dense_support})"
+        );
+    }
+}

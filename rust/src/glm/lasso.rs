@@ -1,0 +1,137 @@
+//! Lasso: `f(v) = 1/2 ||v - y||^2`, `g_i(a) = lam * |a|`.
+//!
+//! The L1 conjugate is unbounded, so coordinate-wise duality gaps use
+//! the Lipschitzing trick of Dünner et al. (paper ref [23], footnote 2):
+//! restrict `|a| <= B`, giving `g_i*(u) = B * max(0, |u| - lam)`.  `B`
+//! is refreshed each epoch from the current iterate.
+
+use super::{soft_threshold, GlmModel};
+
+#[derive(Clone, Debug)]
+pub struct Lasso {
+    pub lam: f32,
+    /// Lipschitzing bound B (iterate-dependent, epoch-refreshed).
+    pub lip_b: f32,
+}
+
+impl Lasso {
+    pub fn new(lam: f32) -> Self {
+        assert!(lam > 0.0);
+        Lasso { lam, lip_b: 1.0 }
+    }
+
+    pub fn with_lip_b(mut self, b: f32) -> Self {
+        self.lip_b = b;
+        self
+    }
+}
+
+impl GlmModel for Lasso {
+    fn name(&self) -> &'static str {
+        "lasso"
+    }
+
+    fn kind(&self) -> super::ModelKind {
+        super::ModelKind::Lasso { lam: self.lam, lip_b: self.lip_b }
+    }
+
+    #[inline(always)]
+    fn w_of(&self, v_j: f32, y_j: f32) -> f32 {
+        v_j - y_j
+    }
+
+    #[inline(always)]
+    fn gap(&self, u: f32, alpha_i: f32) -> f32 {
+        alpha_i * u + self.lam * alpha_i.abs() + self.lip_b * (u.abs() - self.lam).max(0.0)
+    }
+
+    #[inline(always)]
+    fn delta(&self, u: f32, alpha_i: f32, sq_norm: f32) -> f32 {
+        if sq_norm <= 0.0 {
+            return 0.0;
+        }
+        let raw = alpha_i - u / sq_norm;
+        soft_threshold(raw, self.lam / sq_norm) - alpha_i
+    }
+
+    fn objective(&self, v: &[f32], y: &[f32], alpha: &[f32]) -> f64 {
+        let fv: f64 = v
+            .iter()
+            .zip(y)
+            .map(|(&vj, &yj)| {
+                let r = (vj - yj) as f64;
+                0.5 * r * r
+            })
+            .sum();
+        let g: f64 = alpha.iter().map(|&a| (self.lam * a.abs()) as f64).sum();
+        fv + g
+    }
+
+    fn epoch_refresh(&mut self, alpha: &[f32]) {
+        // B must dominate |alpha_i| at the optimum; twice the current
+        // max (floored) is the standard safe choice.
+        let amax = alpha.iter().fold(0.0f32, |m, &a| m.max(a.abs()));
+        self.lip_b = (2.0 * amax).max(1.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::glm::test_support::*;
+    use crate::glm::{solve_reference, total_gap};
+
+    #[test]
+    fn update_is_stationary() {
+        assert_stationary(&Lasso::new(0.3), 11);
+    }
+
+    #[test]
+    fn gap_nonneg() {
+        assert_gap_nonneg(&Lasso::new(0.3).with_lip_b(2.0), 12);
+    }
+
+    #[test]
+    fn gap_zero_inside_subdifferential() {
+        // alpha = 0 and |u| <= lam: coordinate is optimal, gap exactly 0.
+        let m = Lasso::new(0.1).with_lip_b(5.0);
+        for u in [-0.09f32, -0.02, 0.0, 0.05, 0.1] {
+            assert_eq!(m.gap(u, 0.0), 0.0, "u={u}");
+        }
+        assert!(m.gap(0.2, 0.0) > 0.0);
+    }
+
+    #[test]
+    fn large_lambda_zeroes_solution() {
+        let (mat, y, _, n) = tiny_problem(21);
+        let mut model = Lasso::new(1e4);
+        let mut alpha = vec![0.2f32; n];
+        let mut v = mat.matvec_alpha(&alpha);
+        solve_reference(&mut model, &mat, &y, &mut alpha, &mut v, 30);
+        assert!(alpha.iter().all(|&a| a == 0.0), "lam=1e4 must kill all coords");
+    }
+
+    #[test]
+    fn converges_to_small_gap_and_sparse_model() {
+        let (mat, y, _, n) = tiny_problem(22);
+        let mut model = Lasso::new(0.5);
+        let mut alpha = vec![0.0f32; n];
+        let mut v = vec![0.0f32; y.len()];
+        let obj0 = model.objective(&v, &y, &alpha);
+        let obj = solve_reference(&mut model, &mat, &y, &mut alpha, &mut v, 200);
+        assert!(obj < obj0);
+        let gap = total_gap(&model, &mat, &v, &y, &alpha);
+        assert!(gap < 1e-4 * obj0.abs().max(1.0), "gap {gap}");
+        let support = alpha.iter().filter(|&&a| a != 0.0).count();
+        assert!(support < n, "L1 must induce sparsity: {support}/{n}");
+    }
+
+    #[test]
+    fn epoch_refresh_tracks_iterate() {
+        let mut m = Lasso::new(0.1);
+        m.epoch_refresh(&[0.0, -3.0, 1.0]);
+        assert_eq!(m.lip_b, 6.0);
+        m.epoch_refresh(&[0.0, 0.0]);
+        assert_eq!(m.lip_b, 1.0); // floor
+    }
+}

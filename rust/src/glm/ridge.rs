@@ -1,0 +1,106 @@
+//! Ridge regression: `f(v) = 1/2 ||v - y||^2`, `g_i(a) = lam/2 a^2`.
+//!
+//! The smooth conjugate `g_i*(u) = u^2 / (2 lam)` makes the coordinate
+//! gap *exact* — no Lipschitzing needed:
+//! `gap_i = (u + lam a)^2 / (2 lam)`.
+
+use super::GlmModel;
+
+#[derive(Clone, Debug)]
+pub struct Ridge {
+    pub lam: f32,
+}
+
+impl Ridge {
+    pub fn new(lam: f32) -> Self {
+        assert!(lam > 0.0);
+        Ridge { lam }
+    }
+}
+
+impl GlmModel for Ridge {
+    fn name(&self) -> &'static str {
+        "ridge"
+    }
+
+    fn kind(&self) -> super::ModelKind {
+        super::ModelKind::Ridge { lam: self.lam }
+    }
+
+    #[inline(always)]
+    fn w_of(&self, v_j: f32, y_j: f32) -> f32 {
+        v_j - y_j
+    }
+
+    #[inline(always)]
+    fn gap(&self, u: f32, alpha_i: f32) -> f32 {
+        let t = u + self.lam * alpha_i;
+        t * t / (2.0 * self.lam)
+    }
+
+    #[inline(always)]
+    fn delta(&self, u: f32, alpha_i: f32, sq_norm: f32) -> f32 {
+        if sq_norm <= 0.0 {
+            return 0.0;
+        }
+        -(u + self.lam * alpha_i) / (sq_norm + self.lam)
+    }
+
+    fn objective(&self, v: &[f32], y: &[f32], alpha: &[f32]) -> f64 {
+        let fv: f64 = v
+            .iter()
+            .zip(y)
+            .map(|(&vj, &yj)| {
+                let r = (vj - yj) as f64;
+                0.5 * r * r
+            })
+            .sum();
+        let g: f64 = alpha
+            .iter()
+            .map(|&a| 0.5 * (self.lam * a * a) as f64)
+            .sum();
+        fv + g
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::glm::test_support::*;
+    use crate::glm::{solve_reference, total_gap};
+
+    #[test]
+    fn update_is_stationary() {
+        assert_stationary(&Ridge::new(0.4), 41);
+    }
+
+    #[test]
+    fn gap_nonneg() {
+        assert_gap_nonneg(&Ridge::new(0.4), 42);
+    }
+
+    #[test]
+    fn gap_zero_iff_coordinate_optimal() {
+        let m = Ridge::new(0.5);
+        // optimal when u = -lam * a
+        assert_eq!(m.gap(-0.25, 0.5), 0.0);
+        assert!(m.gap(0.25, 0.5) > 0.0);
+    }
+
+    #[test]
+    fn closed_form_matches_solve() {
+        // Ridge has a unique dense optimum; CD must reach tiny total gap.
+        let (mat, y, _, n) = tiny_problem(43);
+        let mut model = Ridge::new(0.7);
+        let mut alpha = vec![0.0f32; n];
+        let mut v = vec![0.0f32; y.len()];
+        solve_reference(&mut model, &mat, &y, &mut alpha, &mut v, 120);
+        let gap = total_gap(&model, &mat, &v, &y, &alpha);
+        assert!(gap < 1e-6, "gap {gap}");
+        // v stays consistent with alpha
+        let v2 = mat.matvec_alpha(&alpha);
+        for (a, b) in v.iter().zip(&v2) {
+            assert!((a - b).abs() < 1e-3);
+        }
+    }
+}

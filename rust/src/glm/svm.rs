@@ -1,0 +1,150 @@
+//! Dual hinge-loss SVM.
+//!
+//! `min_alpha  1/(2 lam n^2) ||D alpha||^2 - (1/n) sum_i alpha_i`
+//! subject to `alpha_i in [0, 1]`, where columns `d_i = y_i x_i` are
+//! samples pre-scaled by their labels.  This is the formulation the
+//! paper inherits from PASSCoDe/CoCoA: `g_i(a) = -a/n + I_[0,1](a)`,
+//! whose conjugate under Eq. (2)'s sign convention gives
+//! `g_i*(-u) = max_{a in [0,1]} (-u a + a/n) = max(0, 1/n - u)`.
+
+use super::GlmModel;
+
+#[derive(Clone, Debug)]
+pub struct SvmDual {
+    pub lam: f32,
+    /// Number of coordinates (samples) — enters the 1/(lam n^2) scaling.
+    pub n: usize,
+    inv_scale: f32, // 1 / (lam * n^2)
+    inv_n: f32,
+}
+
+impl SvmDual {
+    pub fn new(lam: f32, n: usize) -> Self {
+        assert!(lam > 0.0 && n > 0);
+        SvmDual {
+            lam,
+            n,
+            inv_scale: 1.0 / (lam * (n as f32) * (n as f32)),
+            inv_n: 1.0 / n as f32,
+        }
+    }
+
+    /// Training accuracy from `v = D alpha`: sample i is classified
+    /// correctly iff `<v, d_i> > 0` (because `d_i = y_i x_i` and the
+    /// primal weight vector is proportional to `v`).
+    pub fn accuracy(&self, data: &dyn crate::data::ColumnOps, v: &[f32]) -> f64 {
+        let n = data.n_cols();
+        let correct = (0..n).filter(|&j| data.dot(j, v) > 0.0).count();
+        correct as f64 / n as f64
+    }
+}
+
+impl GlmModel for SvmDual {
+    fn name(&self) -> &'static str {
+        "svm"
+    }
+
+    fn kind(&self) -> super::ModelKind {
+        super::ModelKind::Svm { inv_scale: self.inv_scale, inv_n: self.inv_n }
+    }
+
+    #[inline(always)]
+    fn w_of(&self, v_j: f32, _y_j: f32) -> f32 {
+        v_j * self.inv_scale
+    }
+
+    #[inline(always)]
+    fn gap(&self, u: f32, alpha_i: f32) -> f32 {
+        alpha_i * u - alpha_i * self.inv_n + (self.inv_n - u).max(0.0)
+    }
+
+    #[inline(always)]
+    fn delta(&self, u: f32, alpha_i: f32, sq_norm: f32) -> f32 {
+        if sq_norm <= 0.0 {
+            return 0.0;
+        }
+        // Newton step on the coordinate (the dual problem is quadratic
+        // along each coordinate), clipped to the box.
+        let hess = sq_norm * self.inv_scale;
+        let new = (alpha_i - (u - self.inv_n) / hess).clamp(0.0, 1.0);
+        new - alpha_i
+    }
+
+    fn objective(&self, v: &[f32], _y: &[f32], alpha: &[f32]) -> f64 {
+        let fv: f64 = v.iter().map(|&x| (x * x) as f64).sum::<f64>()
+            * 0.5
+            * self.inv_scale as f64;
+        let g: f64 = -alpha.iter().map(|&a| a as f64).sum::<f64>() * self.inv_n as f64;
+        fv + g
+    }
+
+    fn box_constrained(&self) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::generator::{generate, DatasetKind, Family};
+    use crate::data::{ColumnOps, Matrix};
+    use crate::glm::test_support::assert_stationary;
+    use crate::glm::{solve_reference, total_gap};
+
+    #[test]
+    fn update_is_stationary() {
+        assert_stationary(&SvmDual::new(0.05, 64), 31);
+    }
+
+    #[test]
+    fn gap_nonneg_in_box() {
+        let m = SvmDual::new(0.1, 100);
+        let mut rng = crate::util::Rng::new(32);
+        for _ in 0..500 {
+            let u = rng.normal();
+            let a = rng.f32();
+            assert!(m.gap(u, a) >= -1e-5);
+        }
+    }
+
+    #[test]
+    fn gap_zero_at_coordinate_optimum() {
+        let m = SvmDual::new(0.1, 10);
+        // alpha = 0 needs u >= 1/n; alpha = 1 needs u <= 1/n.
+        assert_eq!(m.gap(0.15, 0.0), 0.0);
+        assert!((m.gap(0.05, 1.0) - 0.0).abs() < 1e-7);
+        assert!(m.gap(0.05, 0.0) > 0.0);
+        assert!(m.gap(0.15, 1.0) > 0.0);
+    }
+
+    #[test]
+    fn updates_respect_box() {
+        let m = SvmDual::new(0.01, 50);
+        let mut rng = crate::util::Rng::new(33);
+        for _ in 0..200 {
+            let a = rng.f32();
+            let u = rng.normal() * 10.0;
+            let sq = rng.f32() * 3.0 + 0.1;
+            let next = a + m.delta(u, a, sq);
+            assert!((-1e-6..=1.0 + 1e-6).contains(&next));
+        }
+    }
+
+    #[test]
+    fn trains_to_high_accuracy_on_separable_data() {
+        let g = generate(DatasetKind::Tiny, Family::Classification, 1.0, 34);
+        let (d, n) = (g.d(), g.n());
+        let mut model = SvmDual::new(1e-3, n);
+        let mut alpha = vec![0.0f32; n];
+        let mut v = vec![0.0f32; d];
+        let ops: &dyn ColumnOps = match &g.matrix {
+            Matrix::Dense(m) => m,
+            _ => unreachable!(),
+        };
+        solve_reference(&mut model, ops, &g.targets, &mut alpha, &mut v, 60);
+        let acc = model.accuracy(ops, &v);
+        assert!(acc > 0.95, "accuracy {acc}");
+        let gap = total_gap(&model, ops, &v, &g.targets, &alpha);
+        assert!(gap >= -1e-6);
+    }
+}

@@ -1,0 +1,45 @@
+//! # HTHC — Heterogeneous Tasks on Homogeneous Cores
+//!
+//! Reproduction of *"On Linear Learning with Manycore Processors"*
+//! (Wszola, Jaggi, Mendler-Dünner, Püschel — HiPC 2019).
+//!
+//! HTHC trains generalized linear models with duality-gap guided
+//! asynchronous block coordinate descent split into two heterogeneous
+//! tasks running concurrently on disjoint core sets:
+//!
+//! * **Task A** recomputes coordinate-wise duality gaps into a shared
+//!   *gap memory* (read-only w.r.t. the model),
+//! * **Task B** performs asynchronous parallel SCD on the `m`
+//!   highest-gap coordinates (the only writer of the model).
+//!
+//! The crate layers (see `DESIGN.md`):
+//!
+//! * [`data`] — dense / chunked-sparse / 4-bit-quantized matrices,
+//!   synthetic workload generators, LIBSVM I/O;
+//! * [`memory`] — the two-tier (DRAM vs MCDRAM) placement & bandwidth
+//!   simulator standing in for KNL flat mode;
+//! * [`glm`] — the model zoo (Lasso, SVM, ridge, logistic, elastic-net)
+//!   with closed-form coordinate updates and duality gaps;
+//! * [`threadpool`] — pinned worker pools with counter-based barriers
+//!   (the paper's pthreads-over-OpenMP discipline);
+//! * [`coordinator`] — the HTHC scheme itself plus the §IV-F
+//!   performance model;
+//! * [`baselines`] — ST, OMP, OMP-WILD, PASSCoDe, SGD comparators;
+//! * [`runtime`] — PJRT executor for the AOT-compiled JAX/Pallas
+//!   artifacts (`artifacts/*.hlo.txt`), Python never on the hot path;
+//! * [`metrics`] — convergence traces and table rendering;
+//! * [`util`] — PRNG, CLI parsing, timing (no external deps).
+
+pub mod baselines;
+pub mod bench_support;
+pub mod coordinator;
+pub mod data;
+pub mod glm;
+pub mod memory;
+pub mod metrics;
+pub mod runtime;
+pub mod threadpool;
+pub mod util;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

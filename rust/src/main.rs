@@ -1,0 +1,445 @@
+//! `hthc` — the leader binary.
+//!
+//! ```text
+//! hthc train      --dataset epsilon --model lasso --solver hthc ...
+//! hthc perfmodel  --n 100000 --d 100000 --r-tilde 0.15
+//! hthc datasets   [--scale 0.25]
+//! hthc artifacts  [--dir artifacts]
+//! ```
+//!
+//! See `hthc help` for all flags.  The bench harnesses under
+//! `rust/benches/` drive the same library APIs; this binary is the
+//! interactive entry point.
+
+use hthc::baselines::{self, OmpMode, PasscodeMode};
+use hthc::coordinator::{HthcConfig, HthcSolver, Selection};
+use hthc::data::generator::{self, DatasetKind, Family};
+use hthc::data::{Matrix, QuantizedMatrix};
+use hthc::glm::{ElasticNet, GlmModel, HuberL1, Lasso, LogisticL1, Ridge, SvmDual, SvmL2Dual};
+use hthc::memory::TierSim;
+use hthc::metrics::Table;
+use hthc::runtime::{GapService, XlaRuntime};
+use hthc::util::Args;
+
+const HELP: &str = "\
+hthc — Heterogeneous Tasks on Homogeneous Cores (HiPC'19 reproduction)
+
+USAGE: hthc <command> [flags]
+
+COMMANDS
+  train       train a GLM with HTHC or a baseline solver
+  search      grid-search (%B, T_A, T_B, V_B) — the paper's §V-B protocol
+  perfmodel   calibrate the §IV-F table and recommend (m, T_A, T_B, V_B)
+              (--platform knl|thunderx2|centriq|host retargets the model)
+  evaluate    load an exported model (--model-file) and score a dataset
+  datasets    print the Table-I-style inventory of synthetic datasets
+  artifacts   check the PJRT artifacts load and execute
+  help        this text
+
+TRAIN FLAGS
+  --dataset   epsilon|dvsc|news20|criteo|tiny   (default tiny)
+  --scale     dataset scale factor              (default 1.0)
+  --model     lasso|svm|svm-l2|ridge|logistic|elastic|huber (default lasso)
+  --adaptive-r target refresh fraction for the online %B controller
+  --lam       regularization                    (default 1e-3)
+  --solver    hthc|st|omp|omp-wild|passcode|passcode-wild|sgd
+  --t-a / --t-b / --v-b                         thread topology
+  --batch     %B as a fraction                  (default 0.08)
+  --selection gap|random|importance             (default gap)
+  --epochs    max epochs                        (default 200)
+  --tol       duality-gap tolerance             (default 1e-5)
+  --timeout   seconds                           (default 120)
+  --quantize  store D as 4-bit (dense only)
+  --pjrt      route task A's gaps through the AOT artifacts
+  --csv       dump the convergence trace as CSV
+  --seed      PRNG seed                         (default 42)
+";
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "train" => cmd_train(&args),
+        "search" => cmd_search(&args),
+        "perfmodel" => cmd_perfmodel(&args),
+        "evaluate" => cmd_evaluate(&args),
+        "datasets" => cmd_datasets(&args),
+        "artifacts" => cmd_artifacts(&args),
+        _ => print!("{HELP}"),
+    }
+    let unknown = args.unknown();
+    if !unknown.is_empty() {
+        eprintln!("warning: unrecognized flags: {unknown:?}");
+    }
+}
+
+fn build_model(name: &str, lam: f32, n: usize) -> Box<dyn GlmModel> {
+    match name {
+        "lasso" => Box::new(Lasso::new(lam)),
+        "svm" => Box::new(SvmDual::new(lam, n)),
+        "svm-l2" => Box::new(SvmL2Dual::new(lam, n, 0.5 / n as f32)),
+        "ridge" => Box::new(Ridge::new(lam)),
+        "logistic" => Box::new(LogisticL1::new(lam)),
+        "elastic" => Box::new(ElasticNet::new(lam, 0.5)),
+        "huber" => Box::new(HuberL1::new(lam, 1.0)),
+        other => {
+            eprintln!("unknown model {other:?}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn cmd_train(args: &Args) {
+    let kind = DatasetKind::parse(&args.str_or("dataset", "tiny")).unwrap_or_else(|| {
+        eprintln!("unknown dataset");
+        std::process::exit(2);
+    });
+    let model_name = args.str_or("model", "lasso");
+    let family = if matches!(model_name.as_str(), "svm" | "svm-l2" | "logistic") {
+        Family::Classification
+    } else {
+        Family::Regression
+    };
+    let scale = args.f64_or("scale", 1.0);
+    let seed = args.u64_or("seed", 42);
+    let g = generator::generate(kind, family, scale, seed);
+    println!("dataset: {}", g.describe());
+
+    let mut matrix = g.matrix;
+    if args.bool_or("quantize", false) {
+        matrix = match matrix {
+            Matrix::Dense(dm) => Matrix::Quantized(QuantizedMatrix::from_dense(&dm)),
+            other => {
+                eprintln!("--quantize requires a dense dataset");
+                drop(other);
+                std::process::exit(2);
+            }
+        };
+        println!("representation: quantized 4-bit");
+    }
+
+    let lam = args.f32_or("lam", 1e-3);
+    let mut model = build_model(&model_name, lam, matrix.n_cols());
+    let cfg = HthcConfig {
+        t_a: args.usize_or("t-a", 4),
+        t_b: args.usize_or("t-b", 2),
+        v_b: args.usize_or("v-b", 1),
+        batch_frac: args.f64_or("batch", 0.08),
+        selection: Selection::parse(&args.str_or("selection", "gap"))
+            .unwrap_or(Selection::DualityGap),
+        gap_tol: args.f64_or("tol", 1e-5),
+        max_epochs: args.usize_or("epochs", 200),
+        timeout_secs: args.f64_or("timeout", 120.0),
+        eval_every: args.usize_or("eval-every", 1),
+        seed,
+        use_pjrt_gaps: args.bool_or("pjrt", false),
+        adaptive_r_tilde: args.get("adaptive-r").map(|s| s.parse().expect("--adaptive-r")),
+        ..Default::default()
+    };
+    let sim = TierSim::default();
+    let solver_name = args.str_or("solver", "hthc");
+    let y = &g.targets;
+
+    let result = match solver_name.as_str() {
+        "hthc" => {
+            let solver = HthcSolver::new(cfg.clone());
+            if cfg.use_pjrt_gaps {
+                let rt = XlaRuntime::start(&hthc::runtime::default_artifacts_dir())
+                    .unwrap_or_else(|e| {
+                        eprintln!("PJRT runtime unavailable: {e:#}");
+                        std::process::exit(1);
+                    });
+                let service = GapService::new(&rt);
+                solver.train_with_backend(model.as_mut(), &matrix, y, &sim, &service)
+            } else {
+                solver.train(model.as_mut(), &matrix, y, &sim)
+            }
+        }
+        "st" => baselines::train_st(model.as_mut(), &matrix, y, &cfg, &sim),
+        "omp" => baselines::train_omp(model.as_mut(), &matrix, y, &cfg, &sim, OmpMode::Atomic),
+        "omp-wild" => {
+            baselines::train_omp(model.as_mut(), &matrix, y, &cfg, &sim, OmpMode::Wild)
+        }
+        "passcode" => baselines::train_passcode(
+            model.as_mut(), &matrix, y, &cfg, &sim,
+            PasscodeMode::Atomic, |_, _, _, _| false,
+        ),
+        "passcode-wild" => baselines::train_passcode(
+            model.as_mut(), &matrix, y, &cfg, &sim,
+            PasscodeMode::Wild, |_, _, _, _| false,
+        ),
+        "sgd" => {
+            let (trace, _beta) = baselines::train_sgd(&matrix, y, lam, &cfg, &sim, 0.0);
+            println!(
+                "sgd: final MSE {:.6}",
+                trace.final_objective().unwrap_or(f64::NAN)
+            );
+            print_tier_report(&sim);
+            return;
+        }
+        other => {
+            eprintln!("unknown solver {other:?}");
+            std::process::exit(2);
+        }
+    };
+
+    println!("solver: {solver_name}");
+    println!("result: {}", result.summary());
+    if model_name.starts_with("svm") {
+        let acc = SvmDual::new(lam, matrix.n_cols()).accuracy(matrix.as_ops(), &result.v);
+        println!("training accuracy: {:.2}%", acc * 100.0);
+    }
+    if args.bool_or("csv", false) {
+        print!("{}", result.trace.to_csv());
+    }
+    if let Some(path) = args.get("export") {
+        let saved = hthc::data::io::SavedModel {
+            name: model_name.clone(),
+            lam,
+            alpha: result.alpha.clone(),
+        };
+        let f = std::fs::File::create(&path).expect("create export file");
+        hthc::data::io::save_model(std::io::BufWriter::new(f), &saved).expect("export");
+        println!("model exported to {path}");
+    }
+    println!("{}", result.phase_times.render());
+    println!("{}", result.staleness.render());
+    print_tier_report(&sim);
+}
+
+fn cmd_search(args: &Args) {
+    let kind = DatasetKind::parse(&args.str_or("dataset", "tiny")).expect("--dataset");
+    let model_name = args.str_or("model", "lasso");
+    let family = if matches!(model_name.as_str(), "svm" | "svm-l2" | "logistic") {
+        Family::Classification
+    } else {
+        Family::Regression
+    };
+    let g = generator::generate(kind, family, args.f64_or("scale", 1.0), args.u64_or("seed", 42));
+    println!("dataset: {}", g.describe());
+    let lam = args.f32_or("lam", 1e-3);
+    let n = g.n();
+    let probe = build_model(&model_name, lam, n);
+    let obj0 = probe
+        .objective(&vec![0.0; g.d()], &g.targets, &vec![0.0; n])
+        .abs()
+        .max(1.0);
+    let target = args.f64_or("target-rel", 1e-3) * obj0;
+    let grid = hthc::coordinator::SearchGrid::small();
+    println!(
+        "searching {} configurations, target gap {:.3e}, {:.0}s each ...",
+        grid.len(),
+        target,
+        args.f64_or("per-candidate", 10.0)
+    );
+    let base = HthcConfig {
+        max_epochs: args.usize_or("epochs", 100_000),
+        eval_every: 5,
+        seed: args.u64_or("seed", 42),
+        ..Default::default()
+    };
+    let model_name2 = model_name.clone();
+    let results = hthc::coordinator::grid_search(
+        &move || build_model(&model_name2, lam, n),
+        &g.matrix,
+        &g.targets,
+        &grid,
+        target,
+        args.f64_or("per-candidate", 10.0),
+        &base,
+        true,
+    );
+    let mut t = Table::new(
+        format!("Search results ({} {})", model_name, kind.name()),
+        &["rank", "%B", "T_A", "T_B", "V_B", "T_total", "t(target)", "epochs", "refresh"],
+    );
+    for (i, r) in results.iter().take(args.usize_or("top", 10)).enumerate() {
+        t.row(vec![
+            (i + 1).to_string(),
+            format!("{:.0}%", r.batch_frac * 100.0),
+            r.t_a.to_string(),
+            r.t_b.to_string(),
+            r.v_b.to_string(),
+            r.total_threads().to_string(),
+            hthc::metrics::report::fmt_opt_secs(r.time_to_target),
+            r.epochs.to_string(),
+            format!("{:.0}%", r.refresh_frac * 100.0),
+        ]);
+    }
+    t.print();
+    let nb = hthc::coordinator::near_best(&results, 1.1);
+    println!("{} configurations within 110% of best (Fig. 6 view)", nb.len());
+}
+
+fn cmd_evaluate(args: &Args) {
+    let path = args.get("model-file").unwrap_or_else(|| {
+        eprintln!("--model-file required");
+        std::process::exit(2);
+    });
+    let f = std::fs::File::open(&path).expect("open model file");
+    let saved = hthc::data::io::load_model(std::io::BufReader::new(f)).expect("parse model");
+    println!("model: {} (lam {}, {} coordinates)", saved.name, saved.lam, saved.alpha.len());
+    let kind = DatasetKind::parse(&args.str_or("dataset", "tiny")).expect("--dataset");
+    let family = if saved.name.starts_with("svm") || saved.name == "logistic" {
+        Family::Classification
+    } else {
+        Family::Regression
+    };
+    let g = generator::generate(kind, family, args.f64_or("scale", 1.0), args.u64_or("seed", 42));
+    assert_eq!(g.n(), saved.alpha.len(), "model/dataset coordinate mismatch");
+    let v = g.matrix.matvec_alpha(&saved.alpha);
+    match family {
+        Family::Regression => {
+            let mse: f64 = v
+                .iter()
+                .zip(&g.targets)
+                .map(|(&p, &t)| ((p - t) as f64).powi(2))
+                .sum::<f64>()
+                / g.d() as f64;
+            let support = saved.alpha.iter().filter(|&&a| a != 0.0).count();
+            println!("MSE {mse:.6}; support {support}/{}", g.n());
+        }
+        Family::Classification => {
+            let ops = g.matrix.as_ops();
+            let acc = (0..g.n()).filter(|&j| ops.dot(j, &v) > 0.0).count() as f64 / g.n() as f64;
+            println!("training accuracy {:.2}%", acc * 100.0);
+        }
+    }
+}
+
+fn print_tier_report(sim: &TierSim) {
+    let slow = sim.stats(hthc::memory::Tier::Slow);
+    let fast = sim.stats(hthc::memory::Tier::Fast);
+    println!(
+        "tier traffic: DRAM {} read / {} written, MCDRAM {} read / {} written",
+        hthc::util::fmt_bytes(slow.read_bytes),
+        hthc::util::fmt_bytes(slow.write_bytes),
+        hthc::util::fmt_bytes(fast.read_bytes),
+        hthc::util::fmt_bytes(fast.write_bytes),
+    );
+}
+
+fn cmd_perfmodel(args: &Args) {
+    let n = args.usize_or("n", 100_000);
+    let d = args.usize_or("d", 100_000);
+    let r = args.f64_or("r-tilde", 0.15);
+    let platform = hthc::memory::Platform::parse(&args.str_or("platform", "knl"))
+        .unwrap_or_else(|| {
+            eprintln!("unknown --platform (knl|thunderx2|centriq|host)");
+            std::process::exit(2);
+        });
+    let budget = args.usize_or("threads", platform.cores);
+    println!("platform: {}", platform.describe());
+    if !platform.has_fast_tier() {
+        println!(
+            "note: uniform memory — HTHC loses the placement lever here; \
+             the model still balances compute (paper conclusion: ports to \
+             other manycores via adaptivity)."
+        );
+    }
+    println!("calibrating t_I,d table (paper §IV-F) ...");
+    let pm = hthc::coordinator::PerfModel::calibrate(
+        &[10_000, 50_000, 100_000, 500_000, 1_000_000, 5_000_000],
+        &[1, 2, 4, 8, 12, 16, 20, 24, 32, 48, 72],
+        &[1, 2, 4, 8, 14, 16, 32, 56, 64, 68, 72],
+        &[1, 2, 4, 6, 8, 10],
+    );
+    println!(
+        "host constants: {:.2} ns/elem dot, {:.1} ns/barrier",
+        pm.per_elem_secs * 1e9,
+        pm.sync_secs * 1e9
+    );
+    match pm.recommend(n, d, r, &[0.001, 0.01, 0.02, 0.04, 0.08, 0.25, 0.5], budget) {
+        Some(rec) => {
+            let mut t = Table::new(
+                format!("Recommended configuration (n={n}, d={d}, r~={r})"),
+                &["m", "T_A", "T_B", "V_B", "T_total", "epoch (model)", "z refresh"],
+            );
+            t.row(vec![
+                rec.m.to_string(),
+                rec.t_a.to_string(),
+                rec.t_b.to_string(),
+                rec.v_b.to_string(),
+                (rec.t_a + rec.t_b * rec.v_b).to_string(),
+                hthc::util::fmt_secs(rec.epoch_secs),
+                format!("{:.0}%", rec.refresh_frac * 100.0),
+            ]);
+            t.print();
+        }
+        None => println!("no feasible configuration under budget {budget}"),
+    }
+}
+
+fn cmd_datasets(args: &Args) {
+    let scale = args.f64_or("scale", 1.0);
+    let mut t = Table::new(
+        format!("Synthetic datasets (Table I analogues, scale {scale})"),
+        &["dataset", "rows (d)", "coords (n)", "repr", "size", "paper original"],
+    );
+    for (kind, orig) in [
+        (DatasetKind::EpsilonLike, "400,000 samples x 2,000 features dense, 3.2 GB"),
+        (DatasetKind::DvscLike, "40,002 x 200,704 dense, 32.1 GB"),
+        (DatasetKind::News20Like, "19,996 x 1,355,191 sparse, 0.07 GB"),
+        (DatasetKind::CriteoLike, "45,840,617 x 1,000,000 sparse, 14.4 GB"),
+    ] {
+        let g = generator::generate(kind, Family::Regression, scale, 42);
+        t.row(vec![
+            kind.name().into(),
+            g.d().to_string(),
+            g.n().to_string(),
+            g.matrix.repr_name().into(),
+            hthc::util::fmt_bytes(g.matrix.total_bytes()),
+            orig.into(),
+        ]);
+    }
+    t.print();
+}
+
+fn cmd_artifacts(args: &Args) {
+    let dir: std::path::PathBuf = args
+        .get("dir")
+        .map(Into::into)
+        .unwrap_or_else(hthc::runtime::default_artifacts_dir);
+    match XlaRuntime::start(&dir) {
+        Err(e) => {
+            eprintln!("FAILED to start runtime over {}: {e:#}", dir.display());
+            std::process::exit(1);
+        }
+        Ok(rt) => {
+            println!("{} artifacts in {}", rt.manifest().artifacts.len(), dir.display());
+            // smoke: run the small lasso gap artifact with known numbers
+            let (d, n) = (1024, 256);
+            let out = rt.run(
+                "gaps_lasso_1024x256",
+                vec![
+                    hthc::runtime::ArgData::F32 { data: vec![1.0; d * n], dims: vec![d, n] },
+                    hthc::runtime::ArgData::F32 { data: vec![1.0 / d as f32; d], dims: vec![d] },
+                    hthc::runtime::ArgData::F32 { data: vec![0.0; n], dims: vec![n] },
+                    hthc::runtime::ArgData::ScalarF32(0.5),
+                    hthc::runtime::ArgData::ScalarF32(n as f32),
+                    hthc::runtime::ArgData::ScalarF32(1.0),
+                ],
+            );
+            match out {
+                Ok(res) => {
+                    // u = 1 per column; gap = 0*1 + 0 + 1*max(0, 1-0.5) = 0.5
+                    let z = &res[0];
+                    let ok = z.iter().all(|&g| (g - 0.5).abs() < 1e-4);
+                    println!(
+                        "gaps_lasso_1024x256 smoke: z[0]={:.4} ({} values) -> {}",
+                        z[0],
+                        z.len(),
+                        if ok { "OK" } else { "MISMATCH" }
+                    );
+                    if !ok {
+                        std::process::exit(1);
+                    }
+                }
+                Err(e) => {
+                    eprintln!("execution failed: {e:#}");
+                    std::process::exit(1);
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,113 @@
+//! Tier-tagged arena allocator.
+//!
+//! On KNL the paper uses `memkind`/`numa` to place task B's working set
+//! in MCDRAM and everything else in DRAM.  Here an [`Arena`] is a plain
+//! slab tagged with its [`Tier`]; allocation tracks usage against the
+//! tier capacity (MCDRAM: 16 GB) so configurations that would not fit
+//! on the real machine are rejected the same way (this drives the
+//! paper's "B works on a subset small enough for MCDRAM" constraint).
+
+use super::tier::{Tier, FAST_CAPACITY};
+
+/// A bump arena of f32 slots in one memory tier.
+pub struct Arena {
+    tier: Tier,
+    capacity_bytes: u64,
+    used_bytes: u64,
+    /// Slabs handed out (kept alive by the arena).
+    allocations: Vec<Box<[f32]>>,
+}
+
+impl Arena {
+    pub fn new(tier: Tier) -> Self {
+        let capacity_bytes = match tier {
+            Tier::Fast => FAST_CAPACITY,
+            Tier::Slow => u64::MAX, // DRAM: effectively unbounded here
+        };
+        Arena { tier, capacity_bytes, used_bytes: 0, allocations: Vec::new() }
+    }
+
+    /// Arena with an explicit capacity (tests, scaled experiments).
+    pub fn with_capacity(tier: Tier, capacity_bytes: u64) -> Self {
+        Arena { tier, capacity_bytes, used_bytes: 0, allocations: Vec::new() }
+    }
+
+    pub fn tier(&self) -> Tier {
+        self.tier
+    }
+
+    pub fn used_bytes(&self) -> u64 {
+        self.used_bytes
+    }
+
+    pub fn capacity_bytes(&self) -> u64 {
+        self.capacity_bytes
+    }
+
+    /// Whether `len` f32 elements would still fit.
+    pub fn fits(&self, len: usize) -> bool {
+        self.used_bytes + (len as u64) * 4 <= self.capacity_bytes
+    }
+
+    /// Allocate a zeroed f32 slab, or `None` if the tier is full.
+    ///
+    /// Returns a raw pointer + length; the arena owns the storage.  The
+    /// coordinator wraps these in the shared-vector / working-set types,
+    /// which manage cross-thread access.
+    pub fn alloc(&mut self, len: usize) -> Option<&mut [f32]> {
+        if !self.fits(len) {
+            return None;
+        }
+        self.used_bytes += (len as u64) * 4;
+        self.allocations.push(vec![0.0f32; len].into_boxed_slice());
+        let slab = self.allocations.last_mut().unwrap();
+        // Safe reborrow with arena lifetime.
+        Some(unsafe { std::slice::from_raw_parts_mut(slab.as_mut_ptr(), len) })
+    }
+
+    /// Release everything (working-set teardown between runs).
+    pub fn reset(&mut self) {
+        self.allocations.clear();
+        self.used_bytes = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_tracks_usage() {
+        let mut a = Arena::with_capacity(Tier::Fast, 1024);
+        assert!(a.fits(256));
+        let s = a.alloc(100).unwrap();
+        assert_eq!(s.len(), 100);
+        assert!(s.iter().all(|&x| x == 0.0));
+        assert_eq!(a.used_bytes(), 400);
+    }
+
+    #[test]
+    fn capacity_enforced() {
+        let mut a = Arena::with_capacity(Tier::Fast, 1000);
+        assert!(a.alloc(200).is_some()); // 800 bytes
+        assert!(a.alloc(100).is_none()); // would exceed
+        assert!(a.alloc(50).is_some()); // exactly fits
+        assert!(!a.fits(1));
+    }
+
+    #[test]
+    fn reset_frees() {
+        let mut a = Arena::with_capacity(Tier::Fast, 1000);
+        a.alloc(250).unwrap();
+        assert!(!a.fits(1));
+        a.reset();
+        assert!(a.fits(250));
+        assert_eq!(a.used_bytes(), 0);
+    }
+
+    #[test]
+    fn default_fast_capacity_is_16gb() {
+        let a = Arena::new(Tier::Fast);
+        assert_eq!(a.capacity_bytes(), 16 * (1 << 30));
+    }
+}

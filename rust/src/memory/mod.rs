@@ -1,0 +1,21 @@
+//! Two-tier memory placement & bandwidth simulation.
+//!
+//! KNL flat mode gives HTHC two separately-allocatable memories:
+//! DRAM (~80 GB/s, large) for task A's full dataset and MCDRAM
+//! (~440 GB/s, 16 GB) for task B's working set, so that one task
+//! saturating its tier cannot stall the other (paper §IV-A1).
+//!
+//! This host has a single uniform memory, so the *placement decisions*
+//! are executed for real (separate arenas, real copies on working-set
+//! swap) while the *bandwidth consequences* are modeled: every bulk
+//! access charges bytes to its tier and the [`TierSim`] converts traffic
+//! into modeled seconds with per-tier saturation.  Benches report both
+//! wall-clock (measured) and modeled time (see DESIGN.md §5).
+
+pub mod arena;
+pub mod platform;
+pub mod tier;
+
+pub use arena::Arena;
+pub use platform::Platform;
+pub use tier::{Tier, TierSim, TierStats};

@@ -1,0 +1,152 @@
+//! Platform profiles (paper intro + conclusion: "the inherent
+//! adaptivity of HTHC should enable porting it to other existing and
+//! future standalone manycore platforms").
+//!
+//! A profile parameterizes the §IV-F model and the TierSim: core count,
+//! clock, per-tier bandwidths and their saturation points.  `--platform`
+//! on the CLI re-targets the recommendation without touching code —
+//! the adaptivity claim made executable.
+
+use super::tier::TierSim;
+
+/// One manycore target.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Platform {
+    pub name: &'static str,
+    pub cores: usize,
+    pub clock_hz: f64,
+    /// Large-tier (DRAM) bandwidth GB/s and streaming-thread saturation.
+    pub slow_gbs: f64,
+    pub slow_sat_threads: f64,
+    /// Fast-tier bandwidth GB/s (None = single uniform memory: the fast
+    /// tier degenerates to the slow one and HTHC loses the placement
+    /// lever, as on most non-KNL parts).
+    pub fast_gbs: Option<f64>,
+    pub fast_capacity_gb: f64,
+}
+
+impl Platform {
+    /// Intel Xeon Phi 7290 (Knights Landing) — the paper's machine.
+    pub fn knl() -> Self {
+        Platform {
+            name: "knl",
+            cores: 72,
+            clock_hz: 1.5e9,
+            slow_gbs: 80.0,
+            slow_sat_threads: 20.0,
+            fast_gbs: Some(440.0),
+            fast_capacity_gb: 16.0,
+        }
+    }
+
+    /// Marvell/Cavium ThunderX2 (64 cores, 8-ch DDR4) — paper intro.
+    pub fn thunderx2() -> Self {
+        Platform {
+            name: "thunderx2",
+            cores: 64,
+            clock_hz: 2.2e9,
+            slow_gbs: 150.0,
+            slow_sat_threads: 24.0,
+            fast_gbs: None,
+            fast_capacity_gb: 0.0,
+        }
+    }
+
+    /// Qualcomm Centriq 2400 (48 cores, 6-ch DDR4) — paper intro.
+    pub fn centriq() -> Self {
+        Platform {
+            name: "centriq",
+            cores: 48,
+            clock_hz: 2.5e9,
+            slow_gbs: 120.0,
+            slow_sat_threads: 20.0,
+            fast_gbs: None,
+            fast_capacity_gb: 0.0,
+        }
+    }
+
+    /// This host (for measured-vs-modeled sanity): 1 core, uniform mem.
+    pub fn host() -> Self {
+        Platform {
+            name: "host",
+            cores: 1,
+            clock_hz: 3.0e9,
+            slow_gbs: 37.0, // measured STREAM-ish via dot_f32 bench
+            slow_sat_threads: 1.0,
+            fast_gbs: None,
+            fast_capacity_gb: 0.0,
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "knl" => Self::knl(),
+            "thunderx2" => Self::thunderx2(),
+            "centriq" => Self::centriq(),
+            "host" => Self::host(),
+            _ => return None,
+        })
+    }
+
+    /// Whether the platform has a separately-allocatable fast tier (the
+    /// precondition for HTHC's memory-separation lever).
+    pub fn has_fast_tier(&self) -> bool {
+        self.fast_gbs.is_some()
+    }
+
+    /// Build the matching simulator.  Uniform-memory platforms get
+    /// fast == slow (placement becomes a no-op, not an error).
+    pub fn tier_sim(&self) -> TierSim {
+        TierSim::new(self.slow_gbs, self.fast_gbs.unwrap_or(self.slow_gbs))
+    }
+
+    pub fn describe(&self) -> String {
+        format!(
+            "{}: {} cores @ {:.1} GHz, DRAM {:.0} GB/s{}",
+            self.name,
+            self.cores,
+            self.clock_hz / 1e9,
+            self.slow_gbs,
+            match self.fast_gbs {
+                Some(f) => format!(", fast tier {:.0} GB/s ({} GB)", f, self.fast_capacity_gb),
+                None => ", uniform memory".into(),
+            }
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_all() {
+        for name in ["knl", "thunderx2", "centriq", "host"] {
+            let p = Platform::parse(name).unwrap();
+            assert_eq!(p.name, name);
+            assert!(p.cores >= 1);
+        }
+        assert!(Platform::parse("gpu").is_none());
+    }
+
+    #[test]
+    fn only_knl_has_fast_tier() {
+        assert!(Platform::knl().has_fast_tier());
+        assert!(!Platform::thunderx2().has_fast_tier());
+        assert!(!Platform::centriq().has_fast_tier());
+    }
+
+    #[test]
+    fn uniform_memory_sim_has_equal_tiers() {
+        let sim = Platform::thunderx2().tier_sim();
+        assert_eq!(sim.slow_gbs, sim.fast_gbs);
+        let knl = Platform::knl().tier_sim();
+        assert!(knl.fast_gbs > 5.0 * knl.slow_gbs);
+    }
+
+    #[test]
+    fn describe_mentions_tier() {
+        assert!(Platform::knl().describe().contains("fast tier"));
+        assert!(Platform::centriq().describe().contains("uniform"));
+    }
+}

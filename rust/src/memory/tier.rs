@@ -1,0 +1,184 @@
+//! Bandwidth accounting for the two KNL memory tiers.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Which memory a structure lives in (paper: DRAM vs MCDRAM flat mode).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Tier {
+    /// Large, slow: KNL DRAM, 6 channels, ~80 GB/s STREAM.
+    Slow,
+    /// Small, fast: KNL MCDRAM scratchpad, ~440 GB/s, 16 GB.
+    Fast,
+}
+
+/// Default tier parameters from the paper (§II-D).
+pub const SLOW_GBS: f64 = 80.0;
+pub const FAST_GBS: f64 = 440.0;
+pub const FAST_CAPACITY: u64 = 16 * (1 << 30);
+
+/// Per-tier traffic counters (thread-safe, relaxed: counters only).
+#[derive(Default)]
+pub struct TierCounters {
+    pub read_bytes: AtomicU64,
+    pub write_bytes: AtomicU64,
+}
+
+/// Snapshot of one tier's accumulated traffic.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TierStats {
+    pub read_bytes: u64,
+    pub write_bytes: u64,
+}
+
+impl TierStats {
+    pub fn total(&self) -> u64 {
+        self.read_bytes + self.write_bytes
+    }
+}
+
+/// The simulator: traffic counters + bandwidth model.
+///
+/// Modeled time for a task = bytes moved on its tier / tier bandwidth,
+/// optionally derated by a saturation factor when more threads stream
+/// than the tier's channels sustain (this reproduces the Fig-2 roll-off
+/// above ~24 task-A threads on DRAM).
+pub struct TierSim {
+    pub slow: TierCounters,
+    pub fast: TierCounters,
+    pub slow_gbs: f64,
+    pub fast_gbs: f64,
+}
+
+impl Default for TierSim {
+    fn default() -> Self {
+        TierSim {
+            slow: TierCounters::default(),
+            fast: TierCounters::default(),
+            slow_gbs: SLOW_GBS,
+            fast_gbs: FAST_GBS,
+        }
+    }
+}
+
+impl TierSim {
+    pub fn new(slow_gbs: f64, fast_gbs: f64) -> Self {
+        TierSim { slow_gbs, fast_gbs, ..Default::default() }
+    }
+
+    fn counters(&self, tier: Tier) -> &TierCounters {
+        match tier {
+            Tier::Slow => &self.slow,
+            Tier::Fast => &self.fast,
+        }
+    }
+
+    /// Record a bulk read of `bytes` from `tier`.
+    #[inline]
+    pub fn read(&self, tier: Tier, bytes: u64) {
+        self.counters(tier).read_bytes.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    /// Record a bulk write of `bytes` to `tier`.
+    #[inline]
+    pub fn write(&self, tier: Tier, bytes: u64) {
+        self.counters(tier).write_bytes.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    pub fn stats(&self, tier: Tier) -> TierStats {
+        let c = self.counters(tier);
+        TierStats {
+            read_bytes: c.read_bytes.load(Ordering::Relaxed),
+            write_bytes: c.write_bytes.load(Ordering::Relaxed),
+        }
+    }
+
+    pub fn reset(&self) {
+        for t in [Tier::Slow, Tier::Fast] {
+            let c = self.counters(t);
+            c.read_bytes.store(0, Ordering::Relaxed);
+            c.write_bytes.store(0, Ordering::Relaxed);
+        }
+    }
+
+    /// Effective bandwidth for `threads` concurrent streamers on `tier`.
+    ///
+    /// Bandwidth scales ~linearly until the channel count saturates, then
+    /// degrades slightly due to contention on the mesh (paper Fig. 2:
+    /// no gain above ~20 threads, decline + fluctuation above ~24).
+    pub fn effective_gbs(&self, tier: Tier, threads: usize) -> f64 {
+        let (peak, sat_threads) = match tier {
+            // DRAM: ~6 channels; measured saturation at about 20 threads.
+            Tier::Slow => (self.slow_gbs, 20.0),
+            // MCDRAM: 8 channels; ~32 streaming cores reach peak
+            // (~14 GB/s per-core streaming, consistent with KNL STREAM).
+            Tier::Fast => (self.fast_gbs, 32.0),
+        };
+        let t = threads.max(1) as f64;
+        if t <= sat_threads {
+            peak * (t / sat_threads)
+        } else {
+            // Beyond saturation: contention costs ~0.3% per extra thread.
+            peak * (1.0 - 0.003 * (t - sat_threads)).max(0.8)
+        }
+    }
+
+    /// Modeled seconds to move `bytes` with `threads` streamers on `tier`.
+    pub fn modeled_secs(&self, tier: Tier, bytes: u64, threads: usize) -> f64 {
+        bytes as f64 / (self.effective_gbs(tier, threads) * 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let sim = TierSim::default();
+        sim.read(Tier::Slow, 100);
+        sim.read(Tier::Slow, 50);
+        sim.write(Tier::Fast, 30);
+        assert_eq!(sim.stats(Tier::Slow).read_bytes, 150);
+        assert_eq!(sim.stats(Tier::Fast).write_bytes, 30);
+        assert_eq!(sim.stats(Tier::Fast).read_bytes, 0);
+        sim.reset();
+        assert_eq!(sim.stats(Tier::Slow).total(), 0);
+    }
+
+    #[test]
+    fn bandwidth_saturates_like_fig2() {
+        let sim = TierSim::default();
+        let b1 = sim.effective_gbs(Tier::Slow, 1);
+        let b12 = sim.effective_gbs(Tier::Slow, 12);
+        let b20 = sim.effective_gbs(Tier::Slow, 20);
+        let b40 = sim.effective_gbs(Tier::Slow, 40);
+        assert!(b12 > b1 * 8.0, "near-linear scaling early");
+        assert!((b20 - SLOW_GBS).abs() < 1e-9, "peak at saturation");
+        assert!(b40 < b20, "decline past saturation");
+        assert!(b40 >= 0.8 * SLOW_GBS, "bounded decline");
+    }
+
+    #[test]
+    fn fast_tier_is_much_faster() {
+        let sim = TierSim::default();
+        let slow = sim.modeled_secs(Tier::Slow, 1 << 30, 20);
+        let fast = sim.modeled_secs(Tier::Fast, 1 << 30, 32);
+        assert!(slow / fast > 5.0, "MCDRAM ~5.5x DRAM: {slow} vs {fast}");
+    }
+
+    #[test]
+    fn concurrent_charges() {
+        let sim = std::sync::Arc::new(TierSim::default());
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let sim = sim.clone();
+                s.spawn(move || {
+                    for _ in 0..1000 {
+                        sim.read(Tier::Fast, 8);
+                    }
+                });
+            }
+        });
+        assert_eq!(sim.stats(Tier::Fast).read_bytes, 4 * 1000 * 8);
+    }
+}

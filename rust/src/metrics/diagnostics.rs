@@ -1,0 +1,129 @@
+//! Run diagnostics: staleness histograms and epoch-phase timing.
+//!
+//! The paper's §IV-F analysis rests on *how stale* the gap memory is
+//! and *where epoch time goes* (swap vs A vs B vs eval).  These
+//! collectors turn both into printable summaries used by the benches
+//! and the EXPERIMENTS.md §Perf narrative.
+
+/// Histogram over staleness ages (epochs since last refresh).
+#[derive(Debug, Default, Clone)]
+pub struct StalenessHistogram {
+    /// buckets: 0, 1, 2-3, 4-7, 8-15, 16+
+    pub buckets: [u64; 6],
+    pub total: u64,
+}
+
+impl StalenessHistogram {
+    pub fn from_ages(ages: &[u32]) -> Self {
+        let mut h = StalenessHistogram::default();
+        for &a in ages {
+            let b = match a {
+                0 => 0,
+                1 => 1,
+                2..=3 => 2,
+                4..=7 => 3,
+                8..=15 => 4,
+                _ => 5,
+            };
+            h.buckets[b] += 1;
+            h.total += 1;
+        }
+        h
+    }
+
+    /// Fraction of entries no older than `epochs`.
+    pub fn fresh_within(&self, epochs: u32) -> f64 {
+        if self.total == 0 {
+            return 1.0;
+        }
+        let upto = match epochs {
+            0 => 1,
+            1 => 2,
+            2..=3 => 3,
+            4..=7 => 4,
+            8..=15 => 5,
+            _ => 6,
+        };
+        let fresh: u64 = self.buckets[..upto].iter().sum();
+        fresh as f64 / self.total as f64
+    }
+
+    pub fn render(&self) -> String {
+        let labels = ["0", "1", "2-3", "4-7", "8-15", "16+"];
+        let mut s = String::from("staleness (epochs): ");
+        for (l, &c) in labels.iter().zip(&self.buckets) {
+            let pct = if self.total > 0 {
+                100.0 * c as f64 / self.total as f64
+            } else {
+                0.0
+            };
+            s.push_str(&format!("{l}:{pct:.0}% "));
+        }
+        s.trim_end().to_string()
+    }
+}
+
+/// Accumulated per-phase epoch timing.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct PhaseTimes {
+    pub snapshot_secs: f64,
+    pub select_secs: f64,
+    pub swap_secs: f64,
+    pub run_secs: f64,
+    pub eval_secs: f64,
+}
+
+impl PhaseTimes {
+    pub fn total(&self) -> f64 {
+        self.snapshot_secs + self.select_secs + self.swap_secs + self.run_secs + self.eval_secs
+    }
+
+    pub fn render(&self) -> String {
+        let t = self.total().max(1e-12);
+        format!(
+            "epoch time: snapshot {:.0}% select {:.0}% swap {:.0}% run {:.0}% eval {:.0}% (total {})",
+            100.0 * self.snapshot_secs / t,
+            100.0 * self.select_secs / t,
+            100.0 * self.swap_secs / t,
+            100.0 * self.run_secs / t,
+            100.0 * self.eval_secs / t,
+            crate::util::fmt_secs(self.total()),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_buckets() {
+        let h = StalenessHistogram::from_ages(&[0, 0, 1, 2, 3, 5, 9, 40]);
+        assert_eq!(h.buckets, [2, 1, 2, 1, 1, 1]);
+        assert_eq!(h.total, 8);
+        assert!((h.fresh_within(0) - 0.25).abs() < 1e-12);
+        assert!((h.fresh_within(3) - 5.0 / 8.0).abs() < 1e-12);
+        assert_eq!(h.fresh_within(1000), 1.0);
+    }
+
+    #[test]
+    fn empty_histogram_is_fully_fresh() {
+        let h = StalenessHistogram::from_ages(&[]);
+        assert_eq!(h.fresh_within(0), 1.0);
+        assert!(h.render().contains("0:0%"));
+    }
+
+    #[test]
+    fn phase_times_render() {
+        let p = PhaseTimes {
+            snapshot_secs: 0.1,
+            select_secs: 0.1,
+            swap_secs: 0.2,
+            run_secs: 0.5,
+            eval_secs: 0.1,
+        };
+        assert!((p.total() - 1.0).abs() < 1e-12);
+        let s = p.render();
+        assert!(s.contains("run 50%"), "{s}");
+    }
+}

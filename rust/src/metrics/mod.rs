@@ -1,0 +1,9 @@
+//! Convergence traces and table rendering for the experiment harnesses.
+
+pub mod diagnostics;
+pub mod report;
+pub mod trace;
+
+pub use diagnostics::{PhaseTimes, StalenessHistogram};
+pub use report::Table;
+pub use trace::{ConvergencePoint, ConvergenceTrace};

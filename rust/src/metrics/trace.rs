@@ -1,0 +1,129 @@
+//! Convergence traces: (time, epoch, objective, duality gap) series.
+//!
+//! Fig. 5's precision-vs-time curves and every time-to-threshold table
+//! (IV, V, VI) are derived from these.
+
+/// One measurement.
+#[derive(Clone, Copy, Debug)]
+pub struct ConvergencePoint {
+    pub secs: f64,
+    pub epoch: usize,
+    pub objective: f64,
+    pub duality_gap: f64,
+}
+
+/// A labelled series of measurements.
+#[derive(Clone, Debug, Default)]
+pub struct ConvergenceTrace {
+    pub label: String,
+    pub points: Vec<ConvergencePoint>,
+}
+
+impl ConvergenceTrace {
+    pub fn new(label: impl Into<String>) -> Self {
+        ConvergenceTrace { label: label.into(), points: Vec::new() }
+    }
+
+    pub fn push(&mut self, secs: f64, epoch: usize, objective: f64, duality_gap: f64) {
+        self.points.push(ConvergencePoint { secs, epoch, objective, duality_gap });
+    }
+
+    pub fn final_objective(&self) -> Option<f64> {
+        self.points.last().map(|p| p.objective)
+    }
+
+    pub fn final_gap(&self) -> Option<f64> {
+        self.points.last().map(|p| p.duality_gap)
+    }
+
+    /// First time the duality gap drops below `thresh` (time-to-gap
+    /// tables: Table VI, Fig. 5 thresholds).
+    pub fn time_to_gap(&self, thresh: f64) -> Option<f64> {
+        self.points
+            .iter()
+            .find(|p| p.duality_gap <= thresh)
+            .map(|p| p.secs)
+    }
+
+    /// First epoch at which the gap drops below `thresh` — the currency
+    /// for work-normalized comparisons (epochs x updates-per-epoch).
+    pub fn epoch_to_gap(&self, thresh: f64) -> Option<usize> {
+        self.points
+            .iter()
+            .find(|p| p.duality_gap <= thresh)
+            .map(|p| p.epoch)
+    }
+
+    /// First time suboptimality (objective - `opt`) drops below `thresh`.
+    pub fn time_to_subopt(&self, opt: f64, thresh: f64) -> Option<f64> {
+        self.points
+            .iter()
+            .find(|p| p.objective - opt <= thresh)
+            .map(|p| p.secs)
+    }
+
+    /// Best objective seen (monotone lower envelope end).
+    pub fn best_objective(&self) -> Option<f64> {
+        self.points
+            .iter()
+            .map(|p| p.objective)
+            .min_by(|a, b| a.partial_cmp(b).unwrap())
+    }
+
+    /// Render as CSV (plots are produced offline from these).
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from("secs,epoch,objective,duality_gap\n");
+        for p in &self.points {
+            s.push_str(&format!(
+                "{:.6},{},{:.9e},{:.9e}\n",
+                p.secs, p.epoch, p.objective, p.duality_gap
+            ));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> ConvergenceTrace {
+        let mut t = ConvergenceTrace::new("test");
+        t.push(0.1, 1, 10.0, 1.0);
+        t.push(0.2, 2, 5.0, 0.1);
+        t.push(0.3, 3, 4.0, 0.01);
+        t
+    }
+
+    #[test]
+    fn time_to_gap_finds_first_crossing() {
+        let t = sample();
+        assert_eq!(t.time_to_gap(0.5), Some(0.2));
+        assert_eq!(t.time_to_gap(0.01), Some(0.3));
+        assert_eq!(t.time_to_gap(1e-9), None);
+        assert_eq!(t.epoch_to_gap(0.5), Some(2));
+        assert_eq!(t.epoch_to_gap(1e-9), None);
+    }
+
+    #[test]
+    fn time_to_subopt() {
+        let t = sample();
+        assert_eq!(t.time_to_subopt(3.9, 1.2), Some(0.2)); // 5.0-3.9=1.1
+        assert_eq!(t.time_to_subopt(3.9, 0.05), None);
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let csv = sample().to_csv();
+        assert_eq!(csv.lines().count(), 4);
+        assert!(csv.starts_with("secs,epoch,"));
+    }
+
+    #[test]
+    fn final_and_best() {
+        let t = sample();
+        assert_eq!(t.final_objective(), Some(4.0));
+        assert_eq!(t.best_objective(), Some(4.0));
+        assert_eq!(t.final_gap(), Some(0.01));
+    }
+}

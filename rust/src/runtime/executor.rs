@@ -1,0 +1,225 @@
+//! The PJRT executor thread.
+//!
+//! The `xla` crate's objects wrap raw C pointers; everything PJRT lives
+//! on one dedicated thread that owns the `PjRtClient` and a cache of
+//! compiled executables (compile-on-first-use per artifact).  Callers
+//! interact through [`XlaRuntime`]: plain-data requests in, plain f32
+//! vectors out — cheap to send across the channel and keeps the unsafe
+//! surface in one place.
+//!
+//! Interchange is HLO *text* (`HloModuleProto::from_text_file`): see
+//! `python/compile/aot.py` for why serialized protos are rejected by
+//! this XLA version.
+
+use super::manifest::{ArtifactSpec, DType, Manifest};
+use crate::Result;
+use anyhow::{anyhow, bail, Context};
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::mpsc;
+
+/// One argument's data, shaped.
+#[derive(Clone, Debug)]
+pub enum ArgData {
+    F32 { data: Vec<f32>, dims: Vec<usize> },
+    U8 { data: Vec<u8>, dims: Vec<usize> },
+    I32 { data: Vec<i32>, dims: Vec<usize> },
+    ScalarF32(f32),
+}
+
+impl ArgData {
+    fn matches(&self, spec: &super::manifest::ArgSpec) -> bool {
+        match self {
+            ArgData::F32 { dims, .. } => spec.dtype == DType::F32 && *dims == spec.dims,
+            ArgData::U8 { dims, .. } => spec.dtype == DType::U8 && *dims == spec.dims,
+            ArgData::I32 { dims, .. } => spec.dtype == DType::I32 && *dims == spec.dims,
+            ArgData::ScalarF32(_) => spec.dtype == DType::F32 && spec.dims.is_empty(),
+        }
+    }
+
+    fn len(&self) -> usize {
+        match self {
+            ArgData::F32 { data, .. } => data.len(),
+            ArgData::U8 { data, .. } => data.len(),
+            ArgData::I32 { data, .. } => data.len(),
+            ArgData::ScalarF32(_) => 1,
+        }
+    }
+}
+
+enum Req {
+    Run {
+        name: String,
+        args: Vec<ArgData>,
+        resp: mpsc::SyncSender<Result<Vec<Vec<f32>>>>,
+    },
+    Shutdown,
+}
+
+/// Handle to the executor thread.
+pub struct XlaRuntime {
+    tx: mpsc::Sender<Req>,
+    handle: Option<std::thread::JoinHandle<()>>,
+    manifest: Manifest,
+}
+
+impl XlaRuntime {
+    /// Start the executor over an artifacts directory.
+    pub fn start(dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let specs = manifest.artifacts.clone();
+        let (tx, rx) = mpsc::channel::<Req>();
+        let (ready_tx, ready_rx) = mpsc::sync_channel::<Result<()>>(1);
+        let handle = std::thread::Builder::new()
+            .name("pjrt-executor".into())
+            .spawn(move || executor_loop(specs, rx, ready_tx))
+            .context("spawn pjrt executor")?;
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("executor thread died during init"))??;
+        Ok(XlaRuntime { tx, handle: Some(handle), manifest })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Execute artifact `name`; returns the tuple elements as f32 vecs.
+    /// Validates shapes against the manifest before crossing the channel.
+    pub fn run(&self, name: &str, args: Vec<ArgData>) -> Result<Vec<Vec<f32>>> {
+        let spec = self
+            .manifest
+            .find(name)
+            .ok_or_else(|| anyhow!("no artifact named {name:?}"))?;
+        if spec.args.len() != args.len() {
+            bail!(
+                "{name}: expected {} args, got {}",
+                spec.args.len(),
+                args.len()
+            );
+        }
+        for (i, (a, s)) in args.iter().zip(&spec.args).enumerate() {
+            if !a.matches(s) {
+                bail!("{name}: arg {i} shape/dtype mismatch (want {s:?}, got len {})", a.len());
+            }
+        }
+        let (resp_tx, resp_rx) = mpsc::sync_channel(1);
+        self.tx
+            .send(Req::Run { name: name.to_string(), args, resp: resp_tx })
+            .map_err(|_| anyhow!("executor thread gone"))?;
+        resp_rx.recv().map_err(|_| anyhow!("executor dropped reply"))?
+    }
+}
+
+impl Drop for XlaRuntime {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Req::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn executor_loop(
+    specs: Vec<ArtifactSpec>,
+    rx: mpsc::Receiver<Req>,
+    ready: mpsc::SyncSender<Result<()>>,
+) {
+    let client = match xla::PjRtClient::cpu() {
+        Ok(c) => {
+            let _ = ready.send(Ok(()));
+            c
+        }
+        Err(e) => {
+            let _ = ready.send(Err(anyhow!("PjRtClient::cpu: {e:?}")));
+            return;
+        }
+    };
+    let by_name: HashMap<String, ArtifactSpec> =
+        specs.into_iter().map(|s| (s.name.clone(), s)).collect();
+    let mut compiled: HashMap<String, xla::PjRtLoadedExecutable> = HashMap::new();
+
+    while let Ok(req) = rx.recv() {
+        match req {
+            Req::Shutdown => break,
+            Req::Run { name, args, resp } => {
+                let result = run_one(&client, &by_name, &mut compiled, &name, args);
+                let _ = resp.send(result);
+            }
+        }
+    }
+}
+
+fn run_one(
+    client: &xla::PjRtClient,
+    by_name: &HashMap<String, ArtifactSpec>,
+    compiled: &mut HashMap<String, xla::PjRtLoadedExecutable>,
+    name: &str,
+    args: Vec<ArgData>,
+) -> Result<Vec<Vec<f32>>> {
+    if !compiled.contains_key(name) {
+        let spec = by_name.get(name).ok_or_else(|| anyhow!("unknown artifact {name}"))?;
+        let path = spec
+            .path
+            .to_str()
+            .ok_or_else(|| anyhow!("non-utf8 path"))?;
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow!("parse {path}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+        compiled.insert(name.to_string(), exe);
+    }
+    let exe = compiled.get(name).unwrap();
+
+    let literals: Vec<xla::Literal> = args
+        .into_iter()
+        .map(|a| -> Result<xla::Literal> {
+            Ok(match a {
+                ArgData::ScalarF32(x) => xla::Literal::scalar(x),
+                ArgData::F32 { data, dims } => {
+                    let lit = xla::Literal::vec1(&data);
+                    if dims.len() <= 1 {
+                        lit
+                    } else {
+                        let di: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+                        lit.reshape(&di).map_err(|e| anyhow!("reshape: {e:?}"))?
+                    }
+                }
+                ArgData::U8 { data, dims } => {
+                    // u8 lacks a NativeType impl in this crate version;
+                    // build the literal from untyped bytes + shape.
+                    xla::Literal::create_from_shape_and_untyped_data(
+                        xla::ElementType::U8,
+                        &dims,
+                        &data,
+                    )
+                    .map_err(|e| anyhow!("u8 literal: {e:?}"))?
+                }
+                ArgData::I32 { data, dims } => {
+                    let lit = xla::Literal::vec1(&data);
+                    if dims.len() <= 1 {
+                        lit
+                    } else {
+                        let di: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+                        lit.reshape(&di).map_err(|e| anyhow!("reshape: {e:?}"))?
+                    }
+                }
+            })
+        })
+        .collect::<Result<_>>()?;
+
+    let out = exe
+        .execute::<xla::Literal>(&literals)
+        .map_err(|e| anyhow!("execute {name}: {e:?}"))?;
+    let lit = out[0][0]
+        .to_literal_sync()
+        .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+    // aot.py lowers with return_tuple=True: the result is always a tuple.
+    let elems = lit.to_tuple().map_err(|e| anyhow!("untuple: {e:?}"))?;
+    elems
+        .into_iter()
+        .map(|e| e.to_vec::<f32>().map_err(|er| anyhow!("to_vec: {er:?}")))
+        .collect()
+}

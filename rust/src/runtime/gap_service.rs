@@ -1,0 +1,170 @@
+//! [`GapService`]: the coordinator-facing adapter for offloading task
+//! A's bulk gap computation to the compiled JAX/Pallas artifacts.
+//!
+//! Per request: pick the smallest `gaps_{model}_{d}x{n}` artifact whose
+//! row capacity holds the problem, pack the requested coordinate block
+//! into a zero-padded row-major tile, attach the `w`/`alpha` snapshots
+//! and the runtime scalars `(lam, n, lip_b)` recovered from
+//! [`ModelKind`], execute, and return the first `coords.len()` gaps.
+//!
+//! Zero-padding is sound: padded rows contribute nothing to `D^T w`, and
+//! padded columns evaluate `gap(0, 0) = 0`, which is discarded anyway.
+
+use super::executor::{ArgData, XlaRuntime};
+use crate::coordinator::hthc::GapBackend;
+use crate::data::{ColumnOps, Matrix};
+use crate::glm::ModelKind;
+
+pub struct GapService<'r> {
+    rt: &'r XlaRuntime,
+}
+
+impl<'r> GapService<'r> {
+    pub fn new(rt: &'r XlaRuntime) -> Self {
+        GapService { rt }
+    }
+
+    /// (model name, lam, n_total, lip_b) from the scalar-op snapshot;
+    /// None for models with no compiled artifact.
+    fn scalars(kind: ModelKind) -> Option<(&'static str, f32, f32, f32)> {
+        match kind {
+            ModelKind::Lasso { lam, lip_b } => Some(("lasso", lam, 0.0, lip_b)),
+            ModelKind::Ridge { lam } => Some(("ridge", lam, 0.0, 0.0)),
+            ModelKind::Svm { inv_scale, inv_n } => {
+                let n = 1.0 / inv_n;
+                let lam = 1.0 / (inv_scale * n * n);
+                Some(("svm", lam, n, 0.0))
+            }
+            // logistic / elastic-net: rust-side extensions, no artifact
+            _ => None,
+        }
+    }
+}
+
+impl GapBackend for GapService<'_> {
+    fn block_len(&self) -> usize {
+        256 // the n-tile of the smallest artifacts
+    }
+
+    fn batch_gaps(
+        &self,
+        data: &Matrix,
+        coords: &[usize],
+        w: &[f32],
+        alpha: &[f32],
+        kind: ModelKind,
+    ) -> Option<Vec<f32>> {
+        let dm = match data {
+            Matrix::Dense(dm) => dm,
+            Matrix::Sparse(sm) => {
+                return self.batch_gaps_sparse(sm, coords, w, alpha, kind)
+            }
+            Matrix::Quantized(_) => return None, // native fallback
+        };
+        let (model, lam, nn, lip_b) = Self::scalars(kind)?;
+        let d = dm.n_rows();
+        // smallest artifact that holds d rows and coords columns
+        let (da, na, spec) = self
+            .rt
+            .manifest()
+            .gap_artifacts(model)
+            .into_iter()
+            .find(|&(da, na, _)| da >= d && na >= coords.len())?;
+        let name = spec.name.clone();
+
+        // pack row-major (da x na), zero-padded
+        let mut tile = vec![0.0f32; da * na];
+        for (c, &j) in coords.iter().enumerate() {
+            let col = dm.col(j);
+            for (r, &x) in col.iter().enumerate() {
+                tile[r * na + c] = x;
+            }
+        }
+        let mut w_pad = vec![0.0f32; da];
+        w_pad[..d].copy_from_slice(&w[..d]);
+        let mut a_pad = vec![0.0f32; na];
+        for (c, &j) in coords.iter().enumerate() {
+            a_pad[c] = alpha[j];
+        }
+
+        let out = self
+            .rt
+            .run(
+                &name,
+                vec![
+                    ArgData::F32 { data: tile, dims: vec![da, na] },
+                    ArgData::F32 { data: w_pad, dims: vec![da] },
+                    ArgData::F32 { data: a_pad, dims: vec![na] },
+                    ArgData::ScalarF32(lam),
+                    ArgData::ScalarF32(nn),
+                    ArgData::ScalarF32(lip_b),
+                ],
+            )
+            .ok()?;
+        let z = out.into_iter().next()?;
+        Some(z[..coords.len()].to_vec())
+    }
+}
+
+impl GapService<'_> {
+    /// Sparse blocks go through the ELL-padded artifact
+    /// (`gaps_ell_{model}_{k_max}x{n}`, see kernels/sparse_ell.py) when
+    /// every requested column fits the padded-nnz budget; otherwise the
+    /// caller falls back to the native loop.
+    fn batch_gaps_sparse(
+        &self,
+        sm: &crate::data::SparseMatrix,
+        coords: &[usize],
+        w: &[f32],
+        alpha: &[f32],
+        kind: ModelKind,
+    ) -> Option<Vec<f32>> {
+        let (model, lam, nn, lip_b) = Self::scalars(kind)?;
+        let d = sm.n_rows();
+        // fixed artifact geometry (catalogue in python/compile/model.py)
+        let (kmax, ncols, dvec) = (128usize, 256usize, 2048usize);
+        if d > dvec || coords.len() > ncols {
+            return None;
+        }
+        if coords.iter().any(|&j| sm.nnz(j) > kmax) {
+            return None; // truncation would be silent wrongness
+        }
+        let name = format!("gaps_ell_{model}_{kmax}x{ncols}");
+        self.rt.manifest().find(&name)?;
+
+        let mut idx = vec![0i32; kmax * ncols];
+        let mut val = vec![0f32; kmax * ncols];
+        for (c, &j) in coords.iter().enumerate() {
+            let (rows, vals) = sm.col(j);
+            for (k, (&r, &x)) in rows.iter().zip(vals).enumerate() {
+                idx[k * ncols + c] = r as i32; // row-major (kmax, ncols)
+                val[k * ncols + c] = x;
+            }
+        }
+        let mut w_pad = vec![0f32; dvec];
+        w_pad[..d].copy_from_slice(&w[..d]);
+        let mut a_pad = vec![0f32; ncols];
+        for (c, &j) in coords.iter().enumerate() {
+            a_pad[c] = alpha[j];
+        }
+        let out = self
+            .rt
+            .run(
+                &name,
+                vec![
+                    ArgData::I32 { data: idx, dims: vec![kmax, ncols] },
+                    ArgData::F32 { data: val, dims: vec![kmax, ncols] },
+                    ArgData::F32 { data: w_pad, dims: vec![dvec] },
+                    ArgData::F32 { data: a_pad, dims: vec![ncols] },
+                    ArgData::ScalarF32(lam),
+                    ArgData::ScalarF32(nn),
+                    ArgData::ScalarF32(lip_b),
+                ],
+            )
+            .ok()?;
+        let z = out.into_iter().next()?;
+        Some(z[..coords.len()].to_vec())
+    }
+}
+
+// Tests live in rust/tests/runtime_pjrt.rs (they need built artifacts).

@@ -1,0 +1,165 @@
+//! `artifacts/manifest.txt` parsing.
+//!
+//! One artifact per line, tab-separated:
+//! `name <tab> relative-path <tab> sig` where `sig` is a comma list of
+//! `dtype:dims` entries (`float32:1024x256`, `float32:scalar`), exactly
+//! as written by `python/compile/aot.py::sig_of`.
+
+use crate::Result;
+use anyhow::{bail, Context};
+use std::path::{Path, PathBuf};
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    U8,
+    I32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "float32" => DType::F32,
+            "uint8" => DType::U8,
+            "int32" => DType::I32,
+            other => bail!("unsupported dtype {other:?}"),
+        })
+    }
+}
+
+/// One argument's shape.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ArgSpec {
+    pub dtype: DType,
+    /// Empty for scalars.
+    pub dims: Vec<usize>,
+}
+
+/// One compiled artifact.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub path: PathBuf,
+    pub args: Vec<ArgSpec>,
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(dir.join("manifest.txt"))
+            .with_context(|| format!("read {}/manifest.txt", dir.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: &Path) -> Result<Self> {
+        let mut artifacts = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let mut parts = line.split('\t');
+            let (name, rel, sig) = match (parts.next(), parts.next(), parts.next()) {
+                (Some(a), Some(b), Some(c)) => (a, b, c),
+                _ => bail!("manifest line {}: expected 3 tab-separated fields", lineno + 1),
+            };
+            let mut args = Vec::new();
+            for entry in sig.split(',') {
+                let (dt, dims) = entry
+                    .split_once(':')
+                    .with_context(|| format!("manifest line {}: bad sig entry {entry:?}", lineno + 1))?;
+                let dims = if dims == "scalar" {
+                    vec![]
+                } else {
+                    dims.split('x')
+                        .map(|d| d.parse::<usize>().context("bad dim"))
+                        .collect::<Result<Vec<_>>>()?
+                };
+                args.push(ArgSpec { dtype: DType::parse(dt)?, dims });
+            }
+            artifacts.push(ArtifactSpec { name: name.to_string(), path: dir.join(rel), args });
+        }
+        Ok(Manifest { artifacts })
+    }
+
+    pub fn find(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// All `gaps_{model}_{d}x{n}` artifacts for a model, as (d, n, spec),
+    /// sorted by ascending d.
+    pub fn gap_artifacts(&self, model: &str) -> Vec<(usize, usize, &ArtifactSpec)> {
+        let prefix = format!("gaps_{model}_");
+        let mut out: Vec<(usize, usize, &ArtifactSpec)> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.name.starts_with(&prefix))
+            .filter_map(|a| {
+                let shape = a.name.strip_prefix(&prefix)?;
+                let (d, n) = shape.split_once('x')?;
+                Some((d.parse().ok()?, n.parse().ok()?, a))
+            })
+            .collect();
+        out.sort_by_key(|&(d, _, _)| d);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "gaps_lasso_1024x256\tgaps_lasso_1024x256.hlo.txt\tfloat32:1024x256,float32:1024,float32:256,float32:scalar,float32:scalar,float32:scalar\n\
+gaps_q4_lasso_1024x256\tgaps_q4_lasso_1024x256.hlo.txt\tuint8:512x256,float32:16x256,float32:1024,float32:256,float32:scalar,float32:scalar,float32:scalar\n\
+gaps_lasso_4096x512\tgaps_lasso_4096x512.hlo.txt\tfloat32:4096x512,float32:4096,float32:512,float32:scalar,float32:scalar,float32:scalar\n";
+
+    #[test]
+    fn parses_names_paths_sigs() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.artifacts.len(), 3);
+        let a = m.find("gaps_lasso_1024x256").unwrap();
+        assert_eq!(a.path, Path::new("/tmp/a/gaps_lasso_1024x256.hlo.txt"));
+        assert_eq!(a.args.len(), 6);
+        assert_eq!(a.args[0], ArgSpec { dtype: DType::F32, dims: vec![1024, 256] });
+        assert_eq!(a.args[3], ArgSpec { dtype: DType::F32, dims: vec![] });
+        let q = m.find("gaps_q4_lasso_1024x256").unwrap();
+        assert_eq!(q.args[0].dtype, DType::U8);
+    }
+
+    #[test]
+    fn gap_artifacts_sorted_by_d() {
+        let m = Manifest::parse(SAMPLE, Path::new(".")).unwrap();
+        let gaps = m.gap_artifacts("lasso");
+        assert_eq!(gaps.len(), 2);
+        assert_eq!((gaps[0].0, gaps[0].1), (1024, 256));
+        assert_eq!((gaps[1].0, gaps[1].1), (4096, 512));
+        // the q4 family is addressable under its own model key, and the
+        // fp32 "lasso" prefix above did NOT match the q4 artifact
+        assert_eq!(m.gap_artifacts("q4_lasso").len(), 1);
+    }
+
+    #[test]
+    fn malformed_lines_error() {
+        assert!(Manifest::parse("only-one-field", Path::new(".")).is_err());
+        assert!(Manifest::parse("a\tb\tbaddtype:2", Path::new(".")).is_err());
+        assert!(Manifest::parse("a\tb\tfloat32:2xNaN", Path::new(".")).is_err());
+    }
+
+    #[test]
+    fn real_manifest_loads_if_built() {
+        // integration smoke: only runs when `make artifacts` has run
+        let dir = crate::runtime::default_artifacts_dir();
+        if dir.join("manifest.txt").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.artifacts.len() >= 13);
+            for a in &m.artifacts {
+                assert!(a.path.exists(), "{} missing", a.path.display());
+            }
+        }
+    }
+}

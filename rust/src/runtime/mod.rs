@@ -1,0 +1,32 @@
+//! PJRT runtime: load and execute the AOT-compiled JAX/Pallas artifacts
+//! from the rust hot path (python never runs at serve time).
+//!
+//! `make artifacts` lowers the L2 graphs (which embed the L1 Pallas
+//! kernels) to **HLO text** in `artifacts/*.hlo.txt` plus a
+//! `manifest.txt` index.  [`XlaRuntime`] owns a `PjRtClient` on a
+//! dedicated executor thread (the PJRT wrappers hold raw pointers and
+//! are kept off other threads entirely); callers submit typed requests
+//! over a channel and block on a reply — the same pattern a serving
+//! coordinator uses for an accelerator-bound executor.
+//!
+//! [`GapService`] adapts the runtime to the coordinator's
+//! [`GapBackend`](crate::coordinator::hthc::GapBackend) hook: task A's
+//! bulk gap sweeps (`z = h(D^T w, alpha)`) run through the compiled
+//! artifact with tile padding.
+
+pub mod executor;
+pub mod gap_service;
+pub mod manifest;
+
+pub use executor::{ArgData, XlaRuntime};
+pub use gap_service::GapService;
+pub use manifest::{ArtifactSpec, Manifest};
+
+/// Default artifacts directory (relative to the repo root).
+pub fn default_artifacts_dir() -> std::path::PathBuf {
+    // honour an override for tests / deployments
+    if let Ok(p) = std::env::var("HTHC_ARTIFACTS") {
+        return p.into();
+    }
+    "artifacts".into()
+}

@@ -1,0 +1,151 @@
+//! Counter-based barriers (paper §IV-B, after [15]).
+//!
+//! pthread barriers are "relatively expensive"; the paper replaces them
+//! with integer counters protected by mutexes.  [`CounterBarrier`] is
+//! that scheme (sense-reversing generation counter + condvar for the
+//! epoch-level waits); [`SpinBarrier`] is the lock-free variant for task
+//! B's per-update synchronization, where the expected wait is far below
+//! a scheduler quantum.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex};
+
+/// Sense-reversing barrier on a mutex-protected counter.
+pub struct CounterBarrier {
+    n: usize,
+    state: Mutex<(usize, u64)>, // (arrived, generation)
+    cv: Condvar,
+}
+
+impl CounterBarrier {
+    pub fn new(n: usize) -> Self {
+        assert!(n > 0);
+        CounterBarrier { n, state: Mutex::new((0, 0)), cv: Condvar::new() }
+    }
+
+    /// Block until all `n` participants arrive.  Returns true for
+    /// exactly one "leader" per round (the last arriver).
+    pub fn wait(&self) -> bool {
+        let mut st = self.state.lock().unwrap();
+        let gen = st.1;
+        st.0 += 1;
+        if st.0 == self.n {
+            st.0 = 0;
+            st.1 = st.1.wrapping_add(1);
+            self.cv.notify_all();
+            true
+        } else {
+            while st.1 == gen {
+                st = self.cv.wait(st).unwrap();
+            }
+            false
+        }
+    }
+}
+
+/// Spin barrier: atomic counter + generation, no syscalls.
+///
+/// Used around task B's shared-scalar-product phases where V_B threads
+/// synchronize several times *per coordinate update* (paper §IV-B: three
+/// barriers per update) — the wait is short enough that parking would
+/// dominate.
+pub struct SpinBarrier {
+    n: usize,
+    arrived: AtomicUsize,
+    generation: AtomicUsize,
+}
+
+impl SpinBarrier {
+    pub fn new(n: usize) -> Self {
+        assert!(n > 0);
+        SpinBarrier { n, arrived: AtomicUsize::new(0), generation: AtomicUsize::new(0) }
+    }
+
+    /// Spin until all `n` arrive.  Returns true for the last arriver.
+    pub fn wait(&self) -> bool {
+        let gen = self.generation.load(Ordering::Acquire);
+        if self.arrived.fetch_add(1, Ordering::AcqRel) == self.n - 1 {
+            self.arrived.store(0, Ordering::Relaxed);
+            self.generation.store(gen.wrapping_add(1), Ordering::Release);
+            true
+        } else {
+            let mut spins = 0u32;
+            while self.generation.load(Ordering::Acquire) == gen {
+                spins += 1;
+                if spins < 64 {
+                    std::hint::spin_loop();
+                } else {
+                    // Single-core friendliness: yield so the remaining
+                    // participants can actually run.
+                    std::thread::yield_now();
+                }
+            }
+            false
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+
+    fn exercise_barrier(wait: impl Fn() -> bool + Sync, n: usize, rounds: usize) {
+        let phase = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            for _ in 0..n {
+                s.spawn(|| {
+                    for r in 0..rounds {
+                        // Everybody must observe the same phase before the
+                        // barrier releases anyone into the next round.
+                        assert_eq!(phase.load(Ordering::SeqCst) / n, r);
+                        phase.fetch_add(1, Ordering::SeqCst);
+                        wait();
+                    }
+                });
+            }
+        });
+        assert_eq!(phase.load(Ordering::SeqCst), n * rounds);
+    }
+
+    #[test]
+    fn counter_barrier_synchronizes_rounds() {
+        let b = CounterBarrier::new(4);
+        exercise_barrier(|| b.wait(), 4, 20);
+    }
+
+    #[test]
+    fn spin_barrier_synchronizes_rounds() {
+        let b = SpinBarrier::new(3);
+        exercise_barrier(|| b.wait(), 3, 50);
+    }
+
+    #[test]
+    fn exactly_one_leader_per_round() {
+        let b = Arc::new(CounterBarrier::new(5));
+        let leaders = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            for _ in 0..5 {
+                s.spawn(|| {
+                    for _ in 0..10 {
+                        if b.wait() {
+                            leaders.fetch_add(1, Ordering::SeqCst);
+                        }
+                    }
+                });
+            }
+        });
+        assert_eq!(leaders.load(Ordering::SeqCst), 10);
+    }
+
+    #[test]
+    fn single_participant_never_blocks() {
+        let b = CounterBarrier::new(1);
+        let sb = SpinBarrier::new(1);
+        for _ in 0..100 {
+            assert!(b.wait());
+            assert!(sb.wait());
+        }
+    }
+}

@@ -1,0 +1,22 @@
+//! Explicit thread control (paper §IV-A/B).
+//!
+//! HTHC's core engineering claim is that *detailed thread control* —
+//! persistent pools, explicit task-to-core assignment, cheap
+//! counter-based barriers instead of heavyweight primitives — beats
+//! straightforward OpenMP by an order of magnitude.  This module is the
+//! rust equivalent of the paper's pthreads layer:
+//!
+//! * [`CounterBarrier`] / [`SpinBarrier`] — the "integer counters
+//!   protected by mutexes" barrier replacement (after Franchetti's fast
+//!   x86 barrier, paper ref [15]); the spin variant is used inside task
+//!   B's per-update V_B synchronization where waits are ~ns.
+//! * [`WorkerPool`] — a persistent pool with generation-stamped job
+//!   broadcast, so epochs start/stop tasks without creating or
+//!   destroying threads (paper §IV-B, "thread pool with a constant
+//!   number of threads for A and B").
+
+pub mod barrier;
+pub mod pool;
+
+pub use barrier::{CounterBarrier, SpinBarrier};
+pub use pool::WorkerPool;

@@ -1,0 +1,213 @@
+//! Persistent worker pool with generation-stamped job broadcast.
+//!
+//! The paper avoids "the overhead of creating and destroying threads"
+//! by keeping constant pools for tasks A and B across epochs and
+//! coordinating start/stop with counter barriers (§IV-B).  This pool
+//! does the same: workers park on a condvar between jobs; `run(f)`
+//! publishes one closure to all workers and returns when every worker
+//! has finished it.  Borrowed (non-'static) closures are allowed because
+//! `run` joins the job before returning — the same contract as
+//! `std::thread::scope`, enforced here with a brief unsafe lifetime
+//! erasure documented inline.
+
+use std::sync::{Condvar, Mutex};
+
+type Job = *const (dyn Fn(usize) + Sync);
+
+struct Shared {
+    state: Mutex<State>,
+    start_cv: Condvar,
+    done_cv: Condvar,
+}
+
+struct State {
+    job: Option<SendJob>,
+    generation: u64,
+    remaining: usize,
+    shutdown: bool,
+}
+
+/// Raw job pointer made Send; validity is guaranteed by `run`'s joining.
+struct SendJob(Job);
+unsafe impl Send for SendJob {}
+impl Clone for SendJob {
+    fn clone(&self) -> Self {
+        SendJob(self.0)
+    }
+}
+
+/// Persistent pool of `n` workers with ids `0..n`.
+pub struct WorkerPool {
+    shared: std::sync::Arc<Shared>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    n: usize,
+}
+
+impl WorkerPool {
+    pub fn new(n: usize) -> Self {
+        Self::with_name(n, "hthc-worker")
+    }
+
+    /// Named pool ("hthc-a" / "hthc-b" in the coordinator — the paper
+    /// pins A and B to disjoint tiles; thread names record the role).
+    pub fn with_name(n: usize, name: &str) -> Self {
+        assert!(n > 0);
+        let shared = std::sync::Arc::new(Shared {
+            state: Mutex::new(State {
+                job: None,
+                generation: 0,
+                remaining: 0,
+                shutdown: false,
+            }),
+            start_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+        });
+        let handles = (0..n)
+            .map(|id| {
+                let shared = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("{name}-{id}"))
+                    .spawn(move || worker_loop(id, &shared))
+                    .expect("spawn worker")
+            })
+            .collect();
+        WorkerPool { shared, handles, n }
+    }
+
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Run `f(worker_id)` on every worker; blocks until all finish.
+    pub fn run<'a, F>(&self, f: F)
+    where
+        F: Fn(usize) + Sync + 'a,
+    {
+        let job_ref: &(dyn Fn(usize) + Sync) = &f;
+        // SAFETY: the pointer is only dereferenced by workers between the
+        // publish below and the `remaining == 0` wait; `f` outlives both
+        // because this function does not return until the wait completes.
+        let job_ptr: Job = unsafe {
+            std::mem::transmute::<
+                &(dyn Fn(usize) + Sync),
+                &'static (dyn Fn(usize) + Sync),
+            >(job_ref) as Job
+        };
+        let mut st = self.shared.state.lock().unwrap();
+        debug_assert!(st.job.is_none(), "run() is not reentrant");
+        st.job = Some(SendJob(job_ptr));
+        st.generation = st.generation.wrapping_add(1);
+        st.remaining = self.n;
+        self.shared.start_cv.notify_all();
+        while st.remaining > 0 {
+            st = self.shared.done_cv.wait(st).unwrap();
+        }
+        st.job = None;
+    }
+}
+
+fn worker_loop(id: usize, shared: &Shared) {
+    let mut seen_gen = 0u64;
+    loop {
+        let job = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.generation != seen_gen {
+                    seen_gen = st.generation;
+                    break st.job.clone().expect("job set with generation");
+                }
+                st = shared.start_cv.wait(st).unwrap();
+            }
+        };
+        // SAFETY: see `run` — the closure outlives this call.
+        unsafe { (*job.0)(id) };
+        let mut st = shared.state.lock().unwrap();
+        st.remaining -= 1;
+        if st.remaining == 0 {
+            shared.done_cv.notify_all();
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+            self.shared.start_cv.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn all_workers_run_each_job() {
+        let pool = WorkerPool::new(4);
+        let count = AtomicUsize::new(0);
+        pool.run(|_| {
+            count.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(count.load(Ordering::SeqCst), 4);
+        pool.run(|_| {
+            count.fetch_add(10, Ordering::SeqCst);
+        });
+        assert_eq!(count.load(Ordering::SeqCst), 44);
+    }
+
+    #[test]
+    fn worker_ids_are_distinct() {
+        let pool = WorkerPool::new(8);
+        let seen: Vec<AtomicUsize> = (0..8).map(|_| AtomicUsize::new(0)).collect();
+        pool.run(|id| {
+            seen[id].fetch_add(1, Ordering::SeqCst);
+        });
+        for s in &seen {
+            assert_eq!(s.load(Ordering::SeqCst), 1);
+        }
+    }
+
+    #[test]
+    fn borrows_local_state() {
+        let pool = WorkerPool::new(3);
+        let data = vec![1.0f32; 100]; // NOT 'static
+        let sum = AtomicUsize::new(0);
+        pool.run(|id| {
+            let part: f32 = data[id * 10..(id + 1) * 10].iter().sum();
+            sum.fetch_add(part as usize, Ordering::SeqCst);
+        });
+        assert_eq!(sum.load(Ordering::SeqCst), 30);
+    }
+
+    #[test]
+    fn many_epochs_no_thread_churn() {
+        let pool = WorkerPool::new(2);
+        let count = AtomicUsize::new(0);
+        for _ in 0..200 {
+            pool.run(|_| {
+                count.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        assert_eq!(count.load(Ordering::SeqCst), 400);
+    }
+
+    #[test]
+    fn drop_joins_cleanly() {
+        let pool = WorkerPool::new(4);
+        pool.run(|_| {});
+        drop(pool); // must not hang or panic
+    }
+}

@@ -1,0 +1,169 @@
+//! Minimal CLI argument parser (no clap offline).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, and
+//! positional arguments.  Typed getters with defaults keep call sites
+//! terse; unknown-flag detection catches typos in bench scripts.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    /// Flags that were actually read by the program (for typo detection).
+    consumed: std::cell::RefCell<std::collections::BTreeSet<String>>,
+}
+
+impl Args {
+    /// Parse from `std::env::args()` (skipping argv[0]).
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn parse<I: IntoIterator<Item = String>>(items: I) -> Self {
+        let mut out = Args::default();
+        let mut it = items.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else {
+                    // `--key value` unless the next token is another flag
+                    match it.peek() {
+                        Some(nxt) if !nxt.starts_with("--") => {
+                            let v = it.next().unwrap();
+                            out.flags.insert(stripped.to_string(), v);
+                        }
+                        _ => {
+                            out.flags.insert(stripped.to_string(), "true".into());
+                        }
+                    }
+                }
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        out
+    }
+
+    fn raw(&self, key: &str) -> Option<&str> {
+        let v = self.flags.get(key).map(|s| s.as_str());
+        if v.is_some() {
+            self.consumed.borrow_mut().insert(key.to_string());
+        }
+        v
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.raw(key).is_some()
+    }
+
+    pub fn get(&self, key: &str) -> Option<String> {
+        self.raw(key).map(|s| s.to_string())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.raw(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.typed_or(key, default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.typed_or(key, default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.typed_or(key, default)
+    }
+
+    pub fn f32_or(&self, key: &str, default: f32) -> f32 {
+        self.typed_or(key, default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        match self.raw(key) {
+            None => default,
+            Some("true") | Some("1") | Some("yes") => true,
+            Some("false") | Some("0") | Some("no") => false,
+            Some(other) => panic!("--{key}: expected bool, got {other:?}"),
+        }
+    }
+
+    fn typed_or<T: std::str::FromStr>(&self, key: &str, default: T) -> T
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.raw(key) {
+            None => default,
+            Some(s) => s
+                .parse()
+                .unwrap_or_else(|e| panic!("--{key}={s}: {e}")),
+        }
+    }
+
+    /// List of `--flags` that were provided but never read — call after
+    /// all getters to catch typos.
+    pub fn unknown(&self) -> Vec<String> {
+        let consumed = self.consumed.borrow();
+        self.flags
+            .keys()
+            .filter(|k| !consumed.contains(*k))
+            .cloned()
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|t| t.to_string()))
+    }
+
+    #[test]
+    fn key_value_both_syntaxes() {
+        let a = parse("--threads 8 --lam=0.5");
+        assert_eq!(a.usize_or("threads", 0), 8);
+        assert!((a.f64_or("lam", 0.0) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn boolean_flags() {
+        let a = parse("--verbose --quant=false train");
+        assert!(a.bool_or("verbose", false));
+        assert!(!a.bool_or("quant", true));
+        assert_eq!(a.positional, vec!["train"]);
+    }
+
+    #[test]
+    fn flag_followed_by_flag_is_boolean() {
+        let a = parse("--wild --threads 4");
+        assert!(a.bool_or("wild", false));
+        assert_eq!(a.usize_or("threads", 0), 4);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("");
+        assert_eq!(a.usize_or("missing", 42), 42);
+        assert_eq!(a.str_or("name", "x"), "x");
+    }
+
+    #[test]
+    fn unknown_flags_detected() {
+        let a = parse("--known 1 --typo 2");
+        let _ = a.usize_or("known", 0);
+        assert_eq!(a.unknown(), vec!["typo".to_string()]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_type_panics() {
+        let a = parse("--threads abc");
+        let _ = a.usize_or("threads", 0);
+    }
+}

@@ -1,0 +1,87 @@
+//! Wall-clock timing plus a cycle model.
+//!
+//! The paper reports flops/cycle on a 1.5 GHz KNL.  We time in seconds
+//! and convert through a configurable clock so benches can print the
+//! paper's units; `CYCLES_PER_SEC` defaults to the KNL base frequency so
+//! "flops/cycle" figures are directly comparable in *shape* (see
+//! DESIGN.md §5 on measured vs modeled numbers).
+
+use std::time::Instant;
+
+/// KNL base frequency used for flops/cycle conversions.
+pub const KNL_HZ: f64 = 1.5e9;
+
+/// Simple stopwatch.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer { start: Instant::now() }
+    }
+
+    /// Elapsed seconds.
+    #[inline]
+    pub fn secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn reset(&mut self) {
+        self.start = Instant::now();
+    }
+}
+
+/// flops/cycle at the KNL reference clock, given work and elapsed time.
+pub fn flops_per_cycle(flops: f64, secs: f64) -> f64 {
+    if secs <= 0.0 {
+        return 0.0;
+    }
+    flops / (secs * KNL_HZ)
+}
+
+/// Run `f` repeatedly until `min_secs` of total time or `max_reps`
+/// repetitions, returning (median_secs, reps).  Dependency-free
+/// criterion stand-in used by the bench harnesses.
+pub fn bench_median<F: FnMut()>(mut f: F, min_secs: f64, max_reps: usize) -> (f64, usize) {
+    let mut times = Vec::new();
+    let total = Timer::start();
+    loop {
+        let t = Timer::start();
+        f();
+        times.push(t.secs());
+        if times.len() >= max_reps || (total.secs() >= min_secs && times.len() >= 3) {
+            break;
+        }
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    (times[times.len() / 2], times.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_monotonic() {
+        let t = Timer::start();
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        assert!(t.secs() >= 0.004);
+    }
+
+    #[test]
+    fn flops_per_cycle_math() {
+        // 1.5e9 flops in 1s at 1.5GHz = 1 flop/cycle
+        assert!((flops_per_cycle(KNL_HZ, 1.0) - 1.0).abs() < 1e-12);
+        assert_eq!(flops_per_cycle(1.0, 0.0), 0.0);
+    }
+
+    #[test]
+    fn bench_median_runs_at_least_three() {
+        let mut n = 0;
+        let (med, reps) = bench_median(|| n += 1, 0.0, 100);
+        assert!(reps >= 3);
+        assert!(med >= 0.0);
+        assert!(n >= 3);
+    }
+}

@@ -1,0 +1,195 @@
+//! Failure injection: malformed inputs, degenerate data, adversarial
+//! configurations.  Everything must error cleanly or train robustly —
+//! never panic from library internals, never emit NaN iterates.
+
+use hthc::coordinator::{HthcConfig, HthcSolver};
+use hthc::data::generator::{generate, DatasetKind, Family};
+use hthc::data::{libsvm, DenseMatrix, Matrix, SparseMatrix};
+use hthc::glm::{GlmModel, Lasso, Ridge};
+use hthc::memory::TierSim;
+use hthc::util::Rng;
+
+// ---------------------------------------------------------------------------
+// libsvm parser fuzz
+// ---------------------------------------------------------------------------
+
+#[test]
+fn libsvm_fuzz_never_panics() {
+    let mut rng = Rng::new(7001);
+    let tokens = [
+        "+1", "-1", "0", "1:1.0", "2:-3.5", "abc", "1:", ":5", "1:1:1", "#x",
+        "999999999999:1", "3:nan", "3:inf", "-1e30", "\t", "1:0x10",
+    ];
+    for _ in 0..500 {
+        let lines = (0..rng.below(6))
+            .map(|_| {
+                (0..rng.below(8))
+                    .map(|_| tokens[rng.below(tokens.len())])
+                    .collect::<Vec<_>>()
+                    .join(" ")
+            })
+            .collect::<Vec<_>>()
+            .join("\n");
+        // must return Ok or Err — never panic
+        let _ = libsvm::read(lines.as_bytes());
+    }
+}
+
+#[test]
+fn libsvm_nan_inf_values_parse_as_floats() {
+    // rust f32 parses "nan"/"inf"; downstream validation is the
+    // trainer's job — verify the parser is at least consistent.
+    let s = libsvm::read("+1 1:inf 2:nan".as_bytes()).unwrap();
+    assert!(s[0].features[0].1.is_infinite());
+    assert!(s[0].features[1].1.is_nan());
+}
+
+// ---------------------------------------------------------------------------
+// degenerate matrices
+// ---------------------------------------------------------------------------
+
+fn quick_cfg() -> HthcConfig {
+    HthcConfig {
+        t_a: 1,
+        t_b: 2,
+        v_b: 1,
+        batch_frac: 0.5,
+        gap_tol: 0.0,
+        max_epochs: 30,
+        eval_every: 10,
+        timeout_secs: 20.0,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn constant_columns_and_duplicate_columns() {
+    let d = 64;
+    let mut rng = Rng::new(7002);
+    let base: Vec<f32> = (0..d).map(|_| rng.normal()).collect();
+    let mut data = Vec::new();
+    data.extend(std::iter::repeat(1.0f32).take(d)); // constant col
+    data.extend(base.iter()); // col A
+    data.extend(base.iter()); // exact duplicate of col A
+    data.extend(base.iter().map(|x| -x)); // negated duplicate
+    let m = Matrix::Dense(DenseMatrix::from_col_major(d, 4, data));
+    let y: Vec<f32> = (0..d).map(|_| rng.normal()).collect();
+    let mut model = Lasso::new(0.05);
+    let solver = HthcSolver::new(quick_cfg());
+    let res = solver.train(&mut model, &m, &y, &TierSim::default());
+    assert!(res.alpha.iter().all(|a| a.is_finite()));
+    assert!(res.trace.final_objective().unwrap().is_finite());
+}
+
+#[test]
+fn single_coordinate_problem() {
+    let d = 32;
+    let mut rng = Rng::new(7003);
+    let col: Vec<f32> = (0..d).map(|_| rng.normal()).collect();
+    let m = Matrix::Dense(DenseMatrix::from_col_major(d, 1, col.clone()));
+    let y: Vec<f32> = col.iter().map(|&x| 2.0 * x).collect();
+    let mut model = Ridge::new(1e-4);
+    let mut cfg = quick_cfg();
+    cfg.batch_frac = 1.0;
+    cfg.max_epochs = 50;
+    let solver = HthcSolver::new(cfg);
+    let res = solver.train(&mut model, &m, &y, &TierSim::default());
+    assert!((res.alpha[0] - 2.0).abs() < 0.05, "alpha {}", res.alpha[0]);
+}
+
+#[test]
+fn empty_sparse_columns_everywhere() {
+    let m = Matrix::Sparse(SparseMatrix::from_columns(
+        16,
+        vec![vec![]; 8],
+    ));
+    let y = vec![1.0f32; 16];
+    let mut model = Lasso::new(0.1);
+    let solver = HthcSolver::new(quick_cfg());
+    let res = solver.train(&mut model, &m, &y, &TierSim::default());
+    assert!(res.alpha.iter().all(|&a| a == 0.0), "nothing can move");
+}
+
+#[test]
+fn extreme_regularization_is_stable() {
+    let g = generate(DatasetKind::Tiny, Family::Regression, 1.0, 7004);
+    for lam in [1e-12f32, 1e12] {
+        let mut model = Lasso::new(lam);
+        let solver = HthcSolver::new(quick_cfg());
+        let res = solver.train(&mut model, &g.matrix, &g.targets, &TierSim::default());
+        assert!(res.alpha.iter().all(|a| a.is_finite()), "lam={lam}");
+        if lam > 1.0 {
+            assert!(res.alpha.iter().all(|&a| a == 0.0), "huge lam kills all");
+        }
+    }
+}
+
+#[test]
+fn huge_target_magnitudes_stay_finite() {
+    let g = generate(DatasetKind::Tiny, Family::Regression, 1.0, 7005);
+    let y: Vec<f32> = g.targets.iter().map(|&t| t * 1e10).collect();
+    let mut model = Ridge::new(1.0);
+    let solver = HthcSolver::new(quick_cfg());
+    let res = solver.train(&mut model, &g.matrix, &y, &TierSim::default());
+    assert!(res.alpha.iter().all(|a| a.is_finite()));
+    assert!(res.v.iter().all(|v| v.is_finite()));
+}
+
+// ---------------------------------------------------------------------------
+// adversarial configurations
+// ---------------------------------------------------------------------------
+
+#[test]
+fn more_threads_than_coordinates() {
+    let g = generate(DatasetKind::Tiny, Family::Regression, 1.0, 7006);
+    let mut cfg = quick_cfg();
+    cfg.t_b = 8;
+    cfg.v_b = 2;
+    cfg.batch_frac = 0.02; // batch of ~1 coordinate, 16 B-threads
+    let mut model = Lasso::new(0.1);
+    let solver = HthcSolver::new(cfg);
+    let res = solver.train(&mut model, &g.matrix, &g.targets, &TierSim::default());
+    assert!(res.epochs > 0);
+}
+
+#[test]
+fn v_b_larger_than_rows() {
+    let d = 8;
+    let mut rng = Rng::new(7007);
+    let data: Vec<f32> = (0..d * 4).map(|_| rng.normal()).collect();
+    let m = Matrix::Dense(DenseMatrix::from_col_major(d, 4, data));
+    let y: Vec<f32> = (0..d).map(|_| rng.normal()).collect();
+    let mut cfg = quick_cfg();
+    cfg.t_b = 1;
+    cfg.v_b = 16; // lanes get empty row ranges — must not deadlock
+    cfg.batch_frac = 1.0;
+    let mut model = Ridge::new(0.5);
+    let solver = HthcSolver::new(cfg);
+    let res = solver.train(&mut model, &m, &y, &TierSim::default());
+    assert!(res.trace.final_objective().unwrap().is_finite());
+}
+
+#[test]
+fn lock_chunk_of_one_is_correct_if_slow() {
+    let g = generate(DatasetKind::Tiny, Family::Regression, 1.0, 7008);
+    let mut cfg = quick_cfg();
+    cfg.lock_chunk = 1; // pathological: one mutex per element
+    cfg.max_epochs = 10;
+    let mut model = Lasso::new(0.2);
+    let solver = HthcSolver::new(cfg);
+    let res = solver.train(&mut model, &g.matrix, &g.targets, &TierSim::default());
+    // v = D alpha must still hold exactly
+    let v2 = g.matrix.matvec_alpha(&res.alpha);
+    for (a, b) in res.v.iter().zip(&v2) {
+        assert!((a - b).abs() < 1e-2 * b.abs().max(1.0));
+    }
+}
+
+#[test]
+fn dataset_io_rejects_garbage_gracefully() {
+    use hthc::data::io;
+    for garbage in [&b""[..], &b"HTHC"[..], &b"HTHC1\xFF"[..], &b"XXXXX\x01\x00"[..]] {
+        assert!(io::load_dataset(garbage).is_err());
+        assert!(io::load_model(garbage).is_err());
+    }
+}
