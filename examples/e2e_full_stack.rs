@@ -18,11 +18,12 @@
 //! signal => same convergence behaviour), which is the composition
 //! proof.  Results are recorded in EXPERIMENTS.md §E2E.
 
-use hthc::coordinator::{HthcConfig, HthcSolver};
+use hthc::coordinator::HthcConfig;
 use hthc::data::generator::{generate, DatasetKind, Family};
 use hthc::glm::{GlmModel, Lasso, SvmDual};
 use hthc::memory::TierSim;
 use hthc::runtime::{GapService, XlaRuntime};
+use hthc::solver::{Hthc, StopWhen, Trainer};
 use hthc::util::Timer;
 
 fn main() {
@@ -32,7 +33,10 @@ fn main() {
         std::process::exit(1);
     }
     let t0 = Timer::start();
-    let rt = XlaRuntime::start(&dir).expect("start PJRT runtime");
+    let rt = XlaRuntime::start(&dir).unwrap_or_else(|e| {
+        eprintln!("cannot start PJRT runtime: {e}");
+        std::process::exit(1);
+    });
     println!(
         "[runtime] {} artifacts loaded in {}",
         rt.manifest().artifacts.len(),
@@ -63,13 +67,12 @@ fn main() {
 
     let run = |label: &str, use_pjrt: bool| {
         let mut model = Lasso::new(0.05);
-        let solver = HthcSolver::new(cfg.clone());
         let sim = TierSim::default();
-        let res = if use_pjrt {
-            solver.train_with_backend(&mut model, &data.matrix, &data.targets, &sim, &service)
-        } else {
-            solver.train(&mut model, &data.matrix, &data.targets, &sim)
-        };
+        let mut trainer = Trainer::new().config(cfg.clone());
+        if use_pjrt {
+            trainer = trainer.solver(Hthc::with_backend(&service));
+        }
+        let res = trainer.fit_with(&mut model, &data.matrix, &data.targets, &sim);
         println!("[{label:>10}] {}", res.summary());
         assert!(res.converged, "{label} must converge to gap <= {tol:.3e}");
         res
@@ -91,19 +94,18 @@ fn main() {
     println!("\n=== SVM, {} ===", svm_data.describe());
     let n = svm_data.n();
     let mut model = SvmDual::new(1e-3, n);
-    let solver = HthcSolver::new(HthcConfig {
-        t_a: 2,
-        t_b: 2,
-        v_b: 1,
-        batch_frac: 0.2,
-        gap_tol: 1e-5,
-        max_epochs: 2000,
-        eval_every: 10,
-        timeout_secs: 180.0,
-        ..Default::default()
-    });
     let sim = TierSim::default();
-    let res = solver.train_with_backend(&mut model, &svm_data.matrix, &svm_data.targets, &sim, &service);
+    let res = Trainer::new()
+        .solver(Hthc::with_backend(&service))
+        .threads(2, 2, 1)
+        .batch_frac(0.2)
+        .stop_when(
+            StopWhen::gap_below(1e-5)
+                .max_epochs(2000)
+                .eval_every(10)
+                .timeout_secs(180.0),
+        )
+        .fit_with(&mut model, &svm_data.matrix, &svm_data.targets, &sim);
     let acc = model.accuracy(svm_data.matrix.as_ops(), &res.v);
     println!("[pjrt-A   ] {}", res.summary());
     println!("training accuracy: {:.2}%", acc * 100.0);

@@ -11,10 +11,11 @@
 //! features — we report support recovery and compare against random
 //! selection at an equal epoch budget.
 
-use hthc::coordinator::{HthcConfig, HthcSolver, Selection};
+use hthc::coordinator::Selection;
 use hthc::data::generator::{generate, DatasetKind, Family};
 use hthc::glm::Lasso;
 use hthc::memory::TierSim;
+use hthc::solver::{StopWhen, Trainer};
 
 fn f1(alpha: &[f32], truth: &[f32]) -> (f64, usize) {
     let got: Vec<bool> = alpha.iter().map(|&a| a != 0.0).collect();
@@ -37,19 +38,17 @@ fn main() {
     let sim = TierSim::default();
     for sel in [Selection::DualityGap, Selection::Random] {
         let mut model = Lasso::new(12.0);
-        let solver = HthcSolver::new(HthcConfig {
-            t_a: 2,
-            t_b: 2,
-            v_b: 1,
-            batch_frac: 0.02, // small batch: selection quality matters
-            selection: sel,
-            gap_tol: 0.0,     // fixed epoch budget instead
-            max_epochs: 400,
-            eval_every: 25,
-            timeout_secs: 120.0,
-            ..Default::default()
-        });
-        let res = solver.train(&mut model, &data.matrix, &data.targets, &sim);
+        let res = Trainer::new()
+            .threads(2, 2, 1)
+            .batch_frac(0.02) // small batch: selection quality matters
+            .selection(sel)
+            .stop_when(
+                StopWhen::gap_below(0.0) // fixed epoch budget instead
+                    .max_epochs(400)
+                    .eval_every(25)
+                    .timeout_secs(120.0),
+            )
+            .fit_with(&mut model, &data.matrix, &data.targets, &sim);
         let (f1_score, support) = f1(&res.alpha, truth);
         println!("selection = {:<12}  {}", sel.name(), res.summary());
         println!(

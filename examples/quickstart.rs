@@ -7,10 +7,9 @@
 //! Shows the minimal API surface: generate (or load) data, configure
 //! the two-task topology, train, inspect the convergence trace.
 
-use hthc::coordinator::{HthcConfig, HthcSolver};
 use hthc::data::generator::{generate, DatasetKind, Family};
 use hthc::glm::Lasso;
-use hthc::memory::TierSim;
+use hthc::solver::{StopWhen, Trainer};
 
 fn main() {
     // 1. A dataset: epsilon-like (dense, samples >> features), scaled
@@ -19,29 +18,30 @@ fn main() {
     println!("dataset: {}", data.describe());
 
     // 2. A model: Lasso, regularized hard enough to select features.
-    let mut model = Lasso::new(2.0);
-
-    // 3. The HTHC topology (paper §IV-F): T_A gap-refresh threads,
-    //    T_B x V_B update threads, %B of coordinates per epoch.  The
-    //    gap tolerance is relative to the problem scale.
+    //    The gap tolerance is relative to the problem scale.
+    let model = Lasso::new(2.0);
     let obj0 = {
         use hthc::glm::GlmModel;
         model.objective(&vec![0.0; data.d()], &data.targets, &vec![0.0; data.n()])
     };
-    let solver = HthcSolver::new(HthcConfig {
-        t_a: 2,
-        t_b: 2,
-        v_b: 1,
-        batch_frac: 0.08,
-        gap_tol: 1e-5 * obj0,
-        max_epochs: 2000,
-        timeout_secs: 60.0,
-        ..Default::default()
-    });
 
-    // 4. Train.  TierSim records the DRAM/MCDRAM traffic split.
-    let sim = TierSim::default();
-    let result = solver.train(&mut model, &data.matrix, &data.targets, &sim);
+    // 3. The Trainer facade: pick a solver (HTHC is the default), the
+    //    two-task topology (paper §IV-F: T_A gap-refresh threads,
+    //    T_B x V_B update threads, %B of coordinates per epoch) and the
+    //    stopping rules, then train.  The trainer-owned TierSim records
+    //    the DRAM/MCDRAM traffic split.
+    let mut trainer = Trainer::new()
+        .model(Box::new(model))
+        .threads(2, 2, 1)
+        .batch_frac(0.08)
+        .stop_when(
+            StopWhen::gap_below(1e-5 * obj0)
+                .max_epochs(2000)
+                .timeout_secs(60.0),
+        );
+
+    // 4. Train.
+    let result = trainer.fit(&data.matrix, &data.targets);
 
     // 5. Inspect.
     println!("converged: {}", result.converged);

@@ -10,12 +10,11 @@
 //! reporting against the ST baseline — plus the LIBSVM loader on an
 //! inline sample so real data drops in with one path change.
 
-use hthc::baselines::train_st;
-use hthc::coordinator::{HthcConfig, HthcSolver};
 use hthc::data::generator::{generate, DatasetKind, Family};
 use hthc::data::{libsvm, ColumnOps, Matrix};
 use hthc::glm::SvmDual;
 use hthc::memory::TierSim;
+use hthc::solver::{SeqThreshold, StopWhen, Trainer};
 
 fn main() {
     // --- real-data path: LIBSVM format ---------------------------------
@@ -37,36 +36,29 @@ fn main() {
     let lam = 1e-4;
     let sim = TierSim::default();
 
-    // HTHC (A+B)
+    // HTHC (A+B) — the default Trainer engine
+    let stop = StopWhen::gap_below(1e-7)
+        .max_epochs(200)
+        .eval_every(10)
+        .timeout_secs(60.0);
     let mut model = SvmDual::new(lam, n);
-    let solver = HthcSolver::new(HthcConfig {
-        t_a: 2,
-        t_b: 4,
-        v_b: 1, // sparse: one thread per vector (paper §IV-D)
-        batch_frac: 0.25,
-        gap_tol: 1e-7,
-        max_epochs: 200,
-        eval_every: 10,
-        timeout_secs: 60.0,
-        ..Default::default()
-    });
-    let res = solver.train(&mut model, &data.matrix, &data.targets, &sim);
+    let res = Trainer::new()
+        .threads(2, 4, 1) // sparse: one thread per vector (paper §IV-D)
+        .batch_frac(0.25)
+        .stop_when(stop)
+        .fit_with(&mut model, &data.matrix, &data.targets, &sim);
     let acc = model.accuracy(data.matrix.as_ops(), &res.v);
     println!("\nHTHC (A+B): {}", res.summary());
     println!("  training accuracy {:.2}%", acc * 100.0);
 
-    // ST baseline at the same thread budget
+    // ST baseline at the same thread budget — same facade, one builder
+    // call changed
     let mut model_st = SvmDual::new(lam, n);
-    let cfg_st = HthcConfig {
-        t_b: 6,
-        v_b: 1,
-        gap_tol: 1e-7,
-        max_epochs: 200,
-        eval_every: 10,
-        timeout_secs: 60.0,
-        ..Default::default()
-    };
-    let res_st = train_st(&mut model_st, &data.matrix, &data.targets, &cfg_st, &sim);
+    let res_st = Trainer::new()
+        .solver(SeqThreshold)
+        .threads(2, 6, 1)
+        .stop_when(stop)
+        .fit_with(&mut model_st, &data.matrix, &data.targets, &sim);
     let acc_st = model_st.accuracy(data.matrix.as_ops(), &res_st.v);
     println!("ST        : {}", res_st.summary());
     println!("  training accuracy {:.2}%", acc_st * 100.0);

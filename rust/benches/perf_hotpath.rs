@@ -163,10 +163,17 @@ fn main() {
 
     // ---- PJRT gap batch vs native ----------------------------------------
     let dir = hthc::runtime::default_artifacts_dir();
-    if dir.join("manifest.txt").exists() {
+    let rt = if dir.join("manifest.txt").exists() {
+        hthc::runtime::XlaRuntime::start(&dir)
+            .map_err(|e| println!("(PJRT unavailable: {e}; skipping microbench)"))
+            .ok()
+    } else {
+        println!("(artifacts not built; skipping PJRT microbench)");
+        None
+    };
+    if let Some(rt) = rt {
         use hthc::coordinator::hthc::GapBackend;
         use hthc::glm::GlmModel;
-        let rt = hthc::runtime::XlaRuntime::start(&dir).expect("runtime");
         let service = hthc::runtime::GapService::new(&rt);
         let g = hthc::data::generator::generate(
             hthc::data::generator::DatasetKind::EpsilonLike,
@@ -218,7 +225,5 @@ fn main() {
              interpret overhead; on a TPU backend the same artifact is the \
              fast path.  Structural (VMEM/roofline) analysis in DESIGN.md."
         );
-    } else {
-        println!("(artifacts not built; skipping PJRT microbench)");
     }
 }

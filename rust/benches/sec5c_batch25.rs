@@ -39,7 +39,7 @@ fn main() {
             let res = run_solver("A+B", model.as_mut(), &g.matrix, &g.targets, &cfg);
             if let Some(t) = res.trace.time_to_gap(target) {
                 if best.map_or(true, |b| t < b.0) {
-                    best = Some((t, frac, res.epochs, res.mean_refresh_frac));
+                    best = Some((t, frac, res.epochs, res.refresh_frac()));
                 }
             }
             if (frac - 0.25).abs() < 1e-12 {
@@ -48,7 +48,7 @@ fn main() {
                     "25% (forced, GPU-RAM analogue)".into(),
                     fmt_opt_secs(res.trace.time_to_gap(target)),
                     res.epochs.to_string(),
-                    format!("{:.0}%", res.mean_refresh_frac * 100.0),
+                    format!("{:.0}%", res.refresh_frac() * 100.0),
                 ]);
             }
         }

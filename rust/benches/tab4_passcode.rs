@@ -5,13 +5,13 @@
 //! PASSCoDe clearly faster on news20-like sparse (HTHC's chunk locks
 //! are wasteful for sparse data — the paper's own finding).
 
-use hthc::baselines::{train_passcode, PasscodeMode};
 use hthc::bench_support::*;
-use hthc::coordinator::HthcSolver;
+use hthc::baselines::PasscodeMode;
 use hthc::data::generator::{DatasetKind, Family};
 use hthc::glm::SvmDual;
 use hthc::memory::TierSim;
 use hthc::metrics::{report::fmt_opt_secs, Table};
+use hthc::solver::{Passcode, Trainer};
 use hthc::util::Timer;
 
 /// Train until accuracy target, returning seconds (None on timeout).
@@ -39,17 +39,18 @@ fn time_to_accuracy(
             cfg.eval_every = 1;
             let mut model = SvmDual::new(lam, n);
             let mut hit: Option<f64> = None;
-            let _ = train_passcode(
-                &mut model, &g.matrix, &g.targets, &cfg, &sim, mode,
-                |_, secs, v_now, _| {
-                    if acc_of(v_now) >= target {
-                        hit = Some(secs);
+            let _ = Trainer::new()
+                .solver(Passcode { mode })
+                .config(cfg)
+                .on_epoch(|ev| {
+                    if acc_of(ev.v) >= target {
+                        hit = Some(ev.wall_secs);
                         true
                     } else {
                         false
                     }
-                },
-            );
+                })
+                .fit_with(&mut model, &g.matrix, &g.targets, &sim);
             hit
         }
         name => {
@@ -65,13 +66,7 @@ fn time_to_accuracy(
                 cfg.eval_every = usize::MAX >> 1; // skip gap evals: pure speed
                 cfg.max_epochs = budget;
                 let mut model = SvmDual::new(lam, n);
-                let res = match name {
-                    "A+B" => {
-                        let s = HthcSolver::new(cfg);
-                        s.train(&mut model, &g.matrix, &g.targets, &sim)
-                    }
-                    _ => run_solver(name, &mut model, &g.matrix, &g.targets, &cfg),
-                };
+                let res = run_solver(name, &mut model, &g.matrix, &g.targets, &cfg);
                 if acc_of(&res.v) >= target {
                     return Some(res.wall_secs);
                 }

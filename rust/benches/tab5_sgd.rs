@@ -5,10 +5,11 @@
 //! VW's 12.19 s; dvsc: 5.91 vs 47.29) and *loses* on news20-like sparse
 //! (VW 0.02 s) — CD + chunk locks are overkill for tiny sparse columns.
 
-use hthc::baselines::{sgd::RowCache, train_sgd};
+use hthc::baselines::sgd::RowCache;
 use hthc::bench_support::*;
 use hthc::data::generator::{DatasetKind, Family};
 use hthc::metrics::{report::fmt_opt_secs, Table};
+use hthc::solver::{Sgd, Trainer};
 
 fn main() {
     println!("Table V reproduction: Lasso time-to-squared-error vs SGD\n");
@@ -60,10 +61,23 @@ fn main() {
             }
             row.push(fmt_opt_secs(hit));
         }
-        // SGD trains on rows directly, tracking MSE per epoch.
-        let cfg = bench_cfg(0.0, timeout);
-        let (trace, _beta) = train_sgd(&g.matrix, &g.targets, 1e-4, &cfg, &hthc::memory::TierSim::default(), target);
-        let sgd_time = trace
+        // SGD trains on rows directly, tracking MSE per epoch (the
+        // engine honours eval_every, so force the per-epoch cadence the
+        // time-to-MSE comparison needs).
+        let mut cfg = bench_cfg(0.0, timeout);
+        cfg.eval_every = 1;
+        let mut model = bench_model("lasso", g.n()); // ignored by Sgd
+        let res = Trainer::new()
+            .solver(Sgd { lam: 1e-4, mse_target: target })
+            .config(cfg)
+            .fit_with(
+                model.as_mut(),
+                &g.matrix,
+                &g.targets,
+                &hthc::memory::TierSim::default(),
+            );
+        let sgd_time = res
+            .trace
             .points
             .iter()
             .find(|p| p.objective <= target)

@@ -13,12 +13,23 @@
 //! * [`sgd`] — a Vowpal-Wabbit-style SGD comparator for the Lasso runs
 //!   of Table V (VW does not implement CD; the paper uses its SGD).
 
+//! All four run through the unified [`crate::solver`] API
+//! ([`crate::solver::SeqThreshold`], [`crate::solver::Omp`],
+//! [`crate::solver::Passcode`], [`crate::solver::Sgd`]); the `train_*`
+//! free functions remain as deprecated shims for one release.
+
 pub mod omp;
 pub mod passcode;
 pub mod sgd;
 pub mod st;
 
-pub use omp::{train_omp, OmpMode};
-pub use passcode::{train_passcode, PasscodeMode};
+#[allow(deprecated)]
+pub use omp::train_omp;
+pub use omp::OmpMode;
+#[allow(deprecated)]
+pub use passcode::train_passcode;
+pub use passcode::PasscodeMode;
+#[allow(deprecated)]
 pub use sgd::train_sgd;
+#[allow(deprecated)]
 pub use st::train_st;

@@ -17,6 +17,7 @@ use crate::data::Matrix;
 use crate::glm::{self, GlmModel};
 use crate::memory::TierSim;
 use crate::metrics::ConvergenceTrace;
+use crate::solver::{keys, notify_epoch, EpochEvent, Extras, FitReport, Problem};
 use crate::util::{Rng, Timer};
 use std::sync::atomic::{AtomicUsize, Ordering};
 
@@ -28,10 +29,8 @@ pub enum OmpMode {
     Wild,
 }
 
-/// Train the OMP-style baseline.  Uses the HTHC thread counts
-/// (`t_a` for the gap loop, `t_b * v_b` flat threads for updates) so
-/// the comparison is like-for-like in resources (§V-B1: "with the
-/// thread counts T_A, T_B and V_B").
+/// Train the OMP-style baseline (legacy shim).
+#[deprecated(note = "use solver::Trainer with solver::Omp { wild }")]
 pub fn train_omp(
     model: &mut dyn GlmModel,
     data: &Matrix,
@@ -40,18 +39,35 @@ pub fn train_omp(
     sim: &TierSim,
     mode: OmpMode,
 ) -> crate::coordinator::TrainResult {
+    let mut p = Problem::new(model, data, y, sim, cfg.clone());
+    fit(&mut p, mode).into_train_result()
+}
+
+/// The OMP engine loop over a [`Problem`] (entered via
+/// [`crate::solver::Omp`]).  Uses the HTHC thread counts (`t_a` for the
+/// gap loop, `t_b * v_b` flat threads for updates) so the comparison is
+/// like-for-like in resources (§V-B1: "with the thread counts T_A, T_B
+/// and V_B").
+pub(crate) fn fit(p: &mut Problem<'_>, mode: OmpMode) -> FitReport {
+    let cfg = p.cfg.clone();
+    let data = p.data;
+    let y = p.targets;
+    let sim = p.sim;
+    let mut on_epoch = p.on_epoch.take();
+    let (alpha0, v0) = p.initial_state();
+    let model = &mut *p.model;
     let (d, n) = (data.n_rows(), data.n_cols());
-    assert_eq!(y.len(), d);
     let ops = data.as_ops();
-    let v = SharedVector::new(d, cfg.lock_chunk);
-    let alpha = SharedVector::new(n, usize::MAX >> 1);
+    let v = SharedVector::from_slice(&v0, cfg.lock_chunk);
+    let alpha = SharedVector::from_slice(&alpha0, usize::MAX >> 1);
     let m_batch = cfg.batch_size(n);
     let mut z = vec![f32::INFINITY; n];
     let mut rng = Rng::new(cfg.seed);
-    let mut trace = ConvergenceTrace::new(match mode {
+    let name = match mode {
         OmpMode::Atomic => "omp",
         OmpMode::Wild => "omp-wild",
-    });
+    };
+    let mut trace = ConvergenceTrace::new(name);
     let timer = Timer::start();
     let update_threads = cfg.t_b * cfg.v_b;
     let mut total_b = 0u64;
@@ -165,6 +181,22 @@ pub fn train_omp(
             // certificates (they can undershoot the real suboptimality).
             let gap = glm::total_gap(model, ops, &v_now, y, &a_now);
             trace.push(timer.secs(), epoch, obj, gap);
+            let stop_requested = notify_epoch(
+                &mut on_epoch,
+                &EpochEvent {
+                    solver: name,
+                    epoch,
+                    wall_secs: timer.secs(),
+                    objective: obj,
+                    gap,
+                    v: &v_now,
+                    alpha: &a_now,
+                },
+            );
+            if stop_requested {
+                converged = true;
+                break;
+            }
             if gap <= cfg.gap_tol && mode == OmpMode::Atomic {
                 converged = true;
                 break;
@@ -181,19 +213,22 @@ pub fn train_omp(
         }
     }
 
-    crate::coordinator::TrainResult {
+    let mut extras = Extras::default();
+    extras.set_f64(keys::REFRESH_FRAC, 1.0);
+    extras.set_u64(keys::A_UPDATES, total_a);
+    extras.set_u64(keys::B_UPDATES, total_b);
+    extras.set_u64(keys::B_ZERO_DELTAS, 0);
+    FitReport {
+        solver: name,
         alpha: alpha.snapshot(),
         v: v.snapshot(),
         trace,
         epochs,
-        mean_refresh_frac: 1.0,
-        total_a_updates: total_a,
-        total_b_updates: total_b,
-        total_b_zero_deltas: 0,
-        wall_secs: timer.secs(),
         converged,
+        wall_secs: timer.secs(),
         phase_times: Default::default(),
         staleness: Default::default(),
+        extras,
     }
 }
 
@@ -207,6 +242,8 @@ fn apply(v: &SharedVector, r: usize, x: f32, mode: OmpMode) {
 
 #[cfg(test)]
 mod tests {
+    #![allow(deprecated)] // the shim must stay faithful to solver::Trainer
+
     use super::*;
     use crate::data::generator::{generate, DatasetKind, Family};
     use crate::glm::Lasso;

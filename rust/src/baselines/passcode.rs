@@ -18,6 +18,7 @@ use crate::data::Matrix;
 use crate::glm::{self, GlmModel};
 use crate::memory::TierSim;
 use crate::metrics::ConvergenceTrace;
+use crate::solver::{keys, notify_epoch, EpochEvent, Extras, FitReport, Problem};
 use crate::util::{Rng, Timer};
 use std::sync::atomic::{AtomicUsize, Ordering};
 
@@ -27,10 +28,9 @@ pub enum PasscodeMode {
     Wild,
 }
 
-/// Train with PASSCoDe using `cfg.t_b` threads (T_B in Table IV).
-/// Stops on `gap_tol` / `max_epochs` / `timeout_secs`; additionally
-/// records an accuracy trace hook via `on_epoch` (used by the Table IV
-/// time-to-accuracy bench).
+/// Train with PASSCoDe (legacy shim).  The `on_epoch` hook maps onto
+/// the [`Problem`]-level epoch observer.
+#[deprecated(note = "use solver::Trainer with solver::Passcode (+ .on_epoch for hooks)")]
 pub fn train_passcode(
     model: &mut dyn GlmModel,
     data: &Matrix,
@@ -40,18 +40,35 @@ pub fn train_passcode(
     mode: PasscodeMode,
     mut on_epoch: impl FnMut(usize, f64, &[f32], &[f32]) -> bool,
 ) -> crate::coordinator::TrainResult {
+    let mut cb = |ev: &EpochEvent<'_>| on_epoch(ev.epoch, ev.wall_secs, ev.v, ev.alpha);
+    let mut p = Problem::new(model, data, y, sim, cfg.clone()).on_epoch(&mut cb);
+    fit(&mut p, mode).into_train_result()
+}
+
+/// The PASSCoDe engine loop over a [`Problem`] (entered via
+/// [`crate::solver::Passcode`]).  Uses `cfg.t_b` threads (T_B in
+/// Table IV); stops on `gap_tol` / `max_epochs` / `timeout_secs` or the
+/// problem's epoch observer (the Table IV time-to-accuracy probe).
+pub(crate) fn fit(p: &mut Problem<'_>, mode: PasscodeMode) -> FitReport {
+    let cfg = p.cfg.clone();
+    let data = p.data;
+    let y = p.targets;
+    let sim = p.sim;
+    let mut on_epoch = p.on_epoch.take();
+    let (alpha0, v0) = p.initial_state();
+    let model = &mut *p.model;
     let (d, n) = (data.n_rows(), data.n_cols());
-    assert_eq!(y.len(), d);
     let ops = data.as_ops();
-    let v = SharedVector::new(d, cfg.lock_chunk);
-    let alpha = SharedVector::new(n, usize::MAX >> 1);
+    let v = SharedVector::from_slice(&v0, cfg.lock_chunk);
+    let alpha = SharedVector::from_slice(&alpha0, usize::MAX >> 1);
     let threads = cfg.t_b.max(1);
     let mut rng = Rng::new(cfg.seed);
     let mut order: Vec<usize> = (0..n).collect();
-    let mut trace = ConvergenceTrace::new(match mode {
+    let name = match mode {
         PasscodeMode::Atomic => "passcode-atomic",
         PasscodeMode::Wild => "passcode-wild",
-    });
+    };
+    let mut trace = ConvergenceTrace::new(name);
     let timer = Timer::start();
     let mut total = 0u64;
     let mut zeros = 0u64;
@@ -125,7 +142,19 @@ pub fn train_passcode(
             let obj = model.objective(&v_now, y, &a_now);
             let gap = glm::total_gap(model, ops, &v_now, y, &a_now);
             trace.push(timer.secs(), epoch, obj, gap);
-            if on_epoch(epoch, timer.secs(), &v_now, &a_now) {
+            let stop_requested = notify_epoch(
+                &mut on_epoch,
+                &EpochEvent {
+                    solver: name,
+                    epoch,
+                    wall_secs: timer.secs(),
+                    objective: obj,
+                    gap,
+                    v: &v_now,
+                    alpha: &a_now,
+                },
+            );
+            if stop_requested {
                 converged = true;
                 break;
             }
@@ -139,19 +168,22 @@ pub fn train_passcode(
         }
     }
 
-    crate::coordinator::TrainResult {
+    let mut extras = Extras::default();
+    extras.set_f64(keys::REFRESH_FRAC, 1.0);
+    extras.set_u64(keys::A_UPDATES, 0);
+    extras.set_u64(keys::B_UPDATES, total - zeros);
+    extras.set_u64(keys::B_ZERO_DELTAS, zeros);
+    FitReport {
+        solver: name,
         alpha: alpha.snapshot(),
         v: v.snapshot(),
         trace,
         epochs,
-        mean_refresh_frac: 1.0,
-        total_a_updates: 0,
-        total_b_updates: total - zeros,
-        total_b_zero_deltas: zeros,
-        wall_secs: timer.secs(),
         converged,
+        wall_secs: timer.secs(),
         phase_times: Default::default(),
         staleness: Default::default(),
+        extras,
     }
 }
 
@@ -165,6 +197,8 @@ fn apply(v: &SharedVector, r: usize, x: f32, mode: PasscodeMode) {
 
 #[cfg(test)]
 mod tests {
+    #![allow(deprecated)] // the shim must stay faithful to solver::Trainer
+
     use super::*;
     use crate::data::generator::{generate, DatasetKind, Family};
     use crate::glm::SvmDual;

@@ -16,6 +16,7 @@ use crate::data::Matrix;
 use crate::glm::soft_threshold;
 use crate::memory::TierSim;
 use crate::metrics::ConvergenceTrace;
+use crate::solver::{keys, notify_epoch, EpochEvent, Extras, FitReport, Problem};
 use crate::util::{Rng, Timer};
 
 /// Row view of a column-oriented matrix: samples as (indices, values).
@@ -74,29 +75,61 @@ impl RowCache {
     }
 }
 
-/// Run SGD; returns (trace of MSE-vs-time, final beta).
-/// `cfg.t_b` is accepted for API symmetry but SGD here is sequential —
-/// VW's single-node learner is too (its parallelism is across nodes,
-/// and the paper uses few nodes / one node for the dense sets).
+/// Run SGD; returns (trace of MSE-vs-time, final beta) — legacy shim.
+#[deprecated(note = "use solver::Trainer with solver::Sgd { lam, mse_target }")]
 pub fn train_sgd(
     data: &Matrix,
     targets: &[f32],
     lam: f32,
     cfg: &HthcConfig,
-    _sim: &TierSim,
+    sim: &TierSim,
     mse_target: f64,
 ) -> (ConvergenceTrace, Vec<f32>) {
+    // SGD is model-free (primal Lasso with its own lam); the Problem
+    // still carries a GLM instance for API uniformity.
+    let mut model = crate::glm::Lasso::new(lam);
+    let mut p = Problem::new(&mut model, data, targets, sim, cfg.clone());
+    let r = fit(&mut p, lam, mse_target);
+    (r.trace, r.alpha)
+}
+
+/// The SGD engine loop over a [`Problem`] (entered via
+/// [`crate::solver::Sgd`]).  Ignores the problem's GLM model; the
+/// report's `alpha` holds the primal weights `beta` and `v` the final
+/// predictions `X beta`.  `cfg.t_b` is accepted for API symmetry but
+/// SGD here is sequential — VW's single-node learner is too (its
+/// parallelism is across nodes, and the paper uses few nodes / one node
+/// for the dense sets).
+pub(crate) fn fit(p: &mut Problem<'_>, lam: f32, mse_target: f64) -> FitReport {
+    let cfg = p.cfg.clone();
+    let data = p.data;
+    let targets = p.targets;
+    let mut on_epoch = p.on_epoch.take();
+    // warm start: alpha doubles as beta for the primal solver.  Taken
+    // directly (not via initial_state) — SGD has no shared vector to
+    // seed, so deriving v = D alpha here would be a wasted matvec.
+    let n = data.n_cols();
+    let mut beta = match p.warm_alpha.take() {
+        Some(a) => {
+            assert_eq!(a.len(), n, "warm-start alpha length must equal n_cols");
+            a
+        }
+        None => vec![0.0f32; n],
+    };
     let cache = RowCache::build(data);
-    let n = cache.n_features;
-    let mut beta = vec![0.0f32; n];
+    debug_assert_eq!(beta.len(), cache.n_features);
     let mut rng = Rng::new(cfg.seed);
     let mut order: Vec<usize> = (0..cache.rows.len()).collect();
     let mut trace = ConvergenceTrace::new("sgd");
     let timer = Timer::start();
     let eta0 = 0.5f32;
     let mut t = 0u64;
+    let mut epochs = 0usize;
+    let mut converged = false;
+    let mut last_mse = f64::NAN;
 
     for epoch in 1..=cfg.max_epochs {
+        epochs = epoch;
         rng.shuffle(&mut order);
         for &r in &order {
             t += 1;
@@ -114,17 +147,68 @@ pub fn train_sgd(
                 *bj = soft_threshold(*bj, eta * lam);
             }
         }
-        let mse = cache.mean_squared_error(&beta, targets);
-        trace.push(timer.secs(), epoch, mse, f64::NAN);
-        if mse <= mse_target || timer.secs() > cfg.timeout_secs {
+        // evaluation cadence follows cfg.eval_every like every other
+        // engine (MSE, trace, observer and the mse_target stop all
+        // happen at evaluation epochs only)
+        if epoch % cfg.eval_every == 0 || epoch == cfg.max_epochs {
+            // with an observer, one prediction pass serves both the
+            // MSE and the event's v (avoids a second full matvec)
+            let (mse, preds) = if on_epoch.is_some() {
+                let preds = data.matvec_alpha(&beta);
+                let sum: f64 = preds
+                    .iter()
+                    .zip(targets)
+                    .map(|(&p, &t)| ((p - t) as f64).powi(2))
+                    .sum();
+                (sum / targets.len().max(1) as f64, Some(preds))
+            } else {
+                (cache.mean_squared_error(&beta, targets), None)
+            };
+            trace.push(timer.secs(), epoch, mse, f64::NAN);
+            last_mse = mse;
+            let stop_requested = notify_epoch(
+                &mut on_epoch,
+                &EpochEvent {
+                    solver: "sgd",
+                    epoch,
+                    wall_secs: timer.secs(),
+                    objective: mse,
+                    gap: f64::NAN,
+                    v: preds.as_deref().unwrap_or(&[]),
+                    alpha: &beta,
+                },
+            );
+            if stop_requested || mse <= mse_target {
+                converged = true;
+                break;
+            }
+        }
+        if timer.secs() > cfg.timeout_secs {
             break;
         }
     }
-    (trace, beta)
+
+    let mut extras = Extras::default();
+    extras.set_f64(keys::FINAL_MSE, last_mse);
+    let v = data.matvec_alpha(&beta);
+    FitReport {
+        solver: "sgd",
+        alpha: beta,
+        v,
+        trace,
+        epochs,
+        converged,
+        wall_secs: timer.secs(),
+        phase_times: Default::default(),
+        staleness: Default::default(),
+        extras,
+    }
 }
 
 #[cfg(test)]
 mod tests {
+    #![allow(deprecated)] // the shim must stay faithful to solver::Trainer
+
     use super::*;
     use crate::data::generator::{generate, DatasetKind, Family};
 

@@ -15,12 +15,12 @@ use crate::data::Matrix;
 use crate::glm::{self, GlmModel};
 use crate::memory::TierSim;
 use crate::metrics::ConvergenceTrace;
+use crate::solver::{keys, notify_epoch, EpochEvent, Extras, FitReport, Problem};
 use crate::threadpool::WorkerPool;
 use crate::util::{Rng, Timer};
 
-/// Train with the ST baseline.  Uses `cfg.t_b`, `cfg.v_b`, `cfg.gap_tol`,
-/// `cfg.max_epochs`, `cfg.timeout_secs`, `cfg.lock_chunk`; `t_a`,
-/// `batch_frac` and `selection` are ignored (there is no task A).
+/// Train with the ST baseline (legacy shim).
+#[deprecated(note = "use solver::Trainer with solver::SeqThreshold")]
 pub fn train_st(
     model: &mut dyn GlmModel,
     data: &Matrix,
@@ -28,10 +28,25 @@ pub fn train_st(
     cfg: &HthcConfig,
     sim: &TierSim,
 ) -> crate::coordinator::TrainResult {
-    let (d, n) = (data.n_rows(), data.n_cols());
-    assert_eq!(y.len(), d);
-    let v = SharedVector::new(d, cfg.lock_chunk);
-    let alpha = SharedVector::new(n, usize::MAX >> 1);
+    let mut p = Problem::new(model, data, y, sim, cfg.clone());
+    fit(&mut p).into_train_result()
+}
+
+/// The ST engine loop over a [`Problem`] (entered via
+/// [`crate::solver::SeqThreshold`]).  Uses `cfg.t_b`, `cfg.v_b`,
+/// `cfg.gap_tol`, `cfg.max_epochs`, `cfg.timeout_secs`, `cfg.lock_chunk`;
+/// `t_a`, `batch_frac` and `selection` are ignored (there is no task A).
+pub(crate) fn fit(p: &mut Problem<'_>) -> FitReport {
+    let cfg = p.cfg.clone();
+    let data = p.data;
+    let y = p.targets;
+    let sim = p.sim;
+    let mut on_epoch = p.on_epoch.take();
+    let (alpha0, v0) = p.initial_state();
+    let model = &mut *p.model;
+    let n = data.n_cols();
+    let v = SharedVector::from_slice(&v0, cfg.lock_chunk);
+    let alpha = SharedVector::from_slice(&alpha0, usize::MAX >> 1);
     let pool = WorkerPool::with_name(cfg.t_b * cfg.v_b, "st");
     let mut rng = Rng::new(cfg.seed);
     let mut trace = ConvergenceTrace::new("st");
@@ -76,7 +91,19 @@ pub fn train_st(
             let obj = model.objective(&v_now, y, &a_now);
             let gap = glm::total_gap(model, data.as_ops(), &v_now, y, &a_now);
             trace.push(timer.secs(), epoch, obj, gap);
-            if gap <= cfg.gap_tol {
+            let stop_requested = notify_epoch(
+                &mut on_epoch,
+                &EpochEvent {
+                    solver: "st",
+                    epoch,
+                    wall_secs: timer.secs(),
+                    objective: obj,
+                    gap,
+                    v: &v_now,
+                    alpha: &a_now,
+                },
+            );
+            if stop_requested || gap <= cfg.gap_tol {
                 converged = true;
                 break;
             }
@@ -86,24 +113,29 @@ pub fn train_st(
         }
     }
 
-    crate::coordinator::TrainResult {
+    let mut extras = Extras::default();
+    extras.set_f64(keys::REFRESH_FRAC, 1.0); // every coordinate, every epoch
+    extras.set_u64(keys::A_UPDATES, 0);
+    extras.set_u64(keys::B_UPDATES, total_b);
+    extras.set_u64(keys::B_ZERO_DELTAS, total_zero);
+    FitReport {
+        solver: "st",
         alpha: alpha.snapshot(),
         v: v.snapshot(),
         trace,
         epochs,
-        mean_refresh_frac: 1.0, // every coordinate touched every epoch
-        total_a_updates: 0,
-        total_b_updates: total_b,
-        total_b_zero_deltas: total_zero,
-        wall_secs: timer.secs(),
         converged,
+        wall_secs: timer.secs(),
         phase_times: Default::default(),
         staleness: Default::default(),
+        extras,
     }
 }
 
 #[cfg(test)]
 mod tests {
+    #![allow(deprecated)] // the shim must stay faithful to solver::Trainer
+
     use super::*;
     use crate::data::generator::{generate, DatasetKind, Family};
     use crate::glm::{Lasso, SvmDual};

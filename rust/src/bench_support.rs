@@ -2,12 +2,12 @@
 //! (`rust/benches/*`): dataset construction, solver dispatch, and
 //! time-to-threshold extraction.  Not part of the training API.
 
-use crate::baselines::{train_omp, train_passcode, train_st, OmpMode, PasscodeMode};
-use crate::coordinator::{HthcConfig, HthcSolver, TrainResult};
+use crate::coordinator::HthcConfig;
 use crate::data::generator::{generate, DatasetKind, Family, GeneratedDataset};
 use crate::data::Matrix;
 use crate::glm::{GlmModel, Lasso, SvmDual};
 use crate::memory::TierSim;
+use crate::solver::{by_name, FitReport, Trainer};
 
 /// Environment-tunable dataset scale so `cargo bench` stays minutes,
 /// not hours, on small hosts (`HTHC_BENCH_SCALE`, default 1.0 applies
@@ -49,28 +49,22 @@ pub fn obj0(model: &dyn GlmModel, m: &Matrix, y: &[f32]) -> f64 {
         .max(1.0)
 }
 
-/// Solver dispatch by the paper's names.
+/// Solver dispatch by the paper's names (and the CLI spellings) — a
+/// thin veneer over [`crate::solver::by_name`]: all dispatch lives in
+/// the solver layer.
 pub fn run_solver(
     name: &str,
     model: &mut dyn GlmModel,
     data: &Matrix,
     y: &[f32],
     cfg: &HthcConfig,
-) -> TrainResult {
+) -> FitReport {
     let sim = TierSim::default();
-    match name {
-        "A+B" => HthcSolver::new(cfg.clone()).train(model, data, y, &sim),
-        "ST" | "ST(A+B)" => train_st(model, data, y, cfg, &sim),
-        "OMP" => train_omp(model, data, y, cfg, &sim, OmpMode::Atomic),
-        "OMP WILD" => train_omp(model, data, y, cfg, &sim, OmpMode::Wild),
-        "PASSCoDe-atomic" => {
-            train_passcode(model, data, y, cfg, &sim, PasscodeMode::Atomic, |_, _, _, _| false)
-        }
-        "PASSCoDe-wild" => {
-            train_passcode(model, data, y, cfg, &sim, PasscodeMode::Wild, |_, _, _, _| false)
-        }
-        other => panic!("run_solver: {other}"),
-    }
+    let solver = by_name(name).unwrap_or_else(|| panic!("run_solver: {name}"));
+    Trainer::new()
+        .solver_boxed(solver)
+        .config(cfg.clone())
+        .fit_with(model, data, y, &sim)
 }
 
 /// Default bench config (thread topology mirrors the paper's tables at
@@ -90,7 +84,7 @@ pub fn bench_cfg(gap_tol: f64, timeout: f64) -> HthcConfig {
 }
 
 /// Render "time to gap <= thr" for a set of thresholds.
-pub fn times_to(res: &TrainResult, obj0: f64, rels: &[f64]) -> Vec<Option<f64>> {
+pub fn times_to(res: &FitReport, obj0: f64, rels: &[f64]) -> Vec<Option<f64>> {
     rels.iter().map(|r| res.trace.time_to_gap(r * obj0)).collect()
 }
 
@@ -107,7 +101,7 @@ mod tests {
     #[test]
     fn dispatch_covers_all_solvers() {
         let g = bench_dataset(DatasetKind::Tiny, Family::Regression, 9);
-        for s in ["A+B", "ST", "OMP", "OMP WILD", "PASSCoDe-atomic", "PASSCoDe-wild"] {
+        for s in ["A+B", "ST", "OMP", "OMP WILD", "PASSCoDe-atomic", "PASSCoDe-wild", "sgd"] {
             let mut m = bench_model("lasso", g.n());
             let mut cfg = bench_cfg(0.0, 5.0);
             cfg.max_epochs = 2;

@@ -6,7 +6,7 @@ use super::selection::Selection;
 /// `T_A` threads for task A, `T_B` parallel updates on task B, `V_B`
 /// threads per vector operation, `%B` = `batch_frac` of coordinates
 /// updated by B per epoch.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct HthcConfig {
     /// Threads computing gap-memory updates (paper caps at 24: DRAM
     /// bandwidth saturation, Fig. 2).

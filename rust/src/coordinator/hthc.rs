@@ -25,6 +25,7 @@ use crate::data::Matrix;
 use crate::glm::{self, GlmModel};
 use crate::memory::TierSim;
 use crate::metrics::{ConvergenceTrace, PhaseTimes, StalenessHistogram};
+use crate::solver::{keys, notify_epoch, EpochEvent, Extras, FitReport, Problem};
 use crate::threadpool::WorkerPool;
 use crate::util::{Rng, Timer};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -48,7 +49,9 @@ pub trait GapBackend: Sync {
     fn block_len(&self) -> usize;
 }
 
-/// Outcome of a training run.
+/// Outcome of a training run — the legacy result shape returned by the
+/// deprecated `train`/`train_with_backend`/`train_*` shims.  New code
+/// receives a [`FitReport`] from [`crate::solver::Solver::fit`].
 pub struct TrainResult {
     pub alpha: Vec<f32>,
     pub v: Vec<f32>,
@@ -102,6 +105,7 @@ impl HthcSolver {
     }
 
     /// Train with the native task-A path.
+    #[deprecated(note = "use solver::Trainer (or solver::Hthc via Solver::fit)")]
     pub fn train(
         &self,
         model: &mut dyn GlmModel,
@@ -109,10 +113,12 @@ impl HthcSolver {
         y: &[f32],
         sim: &TierSim,
     ) -> TrainResult {
-        self.train_impl(model, data, y, sim, None)
+        let mut p = Problem::new(model, data, y, sim, self.config.clone());
+        self.fit_problem(&mut p, None).into_train_result()
     }
 
     /// Train with task A's gap sweeps offloaded to a PJRT backend.
+    #[deprecated(note = "use solver::Trainer with solver::Hthc::with_backend")]
     pub fn train_with_backend(
         &self,
         model: &mut dyn GlmModel,
@@ -121,20 +127,26 @@ impl HthcSolver {
         sim: &TierSim,
         backend: &dyn GapBackend,
     ) -> TrainResult {
-        self.train_impl(model, data, y, sim, Some(backend))
+        let mut p = Problem::new(model, data, y, sim, self.config.clone());
+        self.fit_problem(&mut p, Some(backend)).into_train_result()
     }
 
-    fn train_impl(
+    /// The HTHC engine loop over a [`Problem`] (entered via
+    /// [`crate::solver::Hthc`]).  `problem.cfg` is expected to match
+    /// `self.config` — the pools were sized from it.
+    pub(crate) fn fit_problem(
         &self,
-        model: &mut dyn GlmModel,
-        data: &Matrix,
-        y: &[f32],
-        sim: &TierSim,
+        problem: &mut Problem<'_>,
         backend: Option<&dyn GapBackend>,
-    ) -> TrainResult {
+    ) -> FitReport {
         let cfg = &self.config;
+        let data = problem.data;
+        let y = problem.targets;
+        let sim = problem.sim;
+        let mut on_epoch = problem.on_epoch.take();
+        let (alpha0, v0) = problem.initial_state();
+        let model = &mut *problem.model;
         let (d, n) = (data.n_rows(), data.n_cols());
-        assert_eq!(y.len(), d, "targets length must equal rows");
         let mut m_batch = cfg.batch_size(n);
         // headroom for the adaptive controller to grow the batch
         let m_slots = if cfg.adaptive_r_tilde.is_some() {
@@ -143,8 +155,8 @@ impl HthcSolver {
             m_batch
         };
 
-        let v = SharedVector::new(d, cfg.lock_chunk);
-        let alpha = SharedVector::new(n, usize::MAX >> 1);
+        let v = SharedVector::from_slice(&v0, cfg.lock_chunk);
+        let alpha = SharedVector::from_slice(&alpha0, usize::MAX >> 1);
         let gaps = GapMemory::new(n);
         let mut ws = WorkingSet::new(data, m_slots);
         let mut rng = Rng::new(cfg.seed);
@@ -241,7 +253,19 @@ impl HthcSolver {
                 let gap = glm::total_gap(model, data.as_ops(), &v_now, y, &a_now);
                 trace.push(timer.secs(), epoch, obj, gap);
                 phases.eval_secs += tp.secs();
-                if gap <= cfg.gap_tol {
+                let stop_requested = notify_epoch(
+                    &mut on_epoch,
+                    &EpochEvent {
+                        solver: "hthc",
+                        epoch,
+                        wall_secs: timer.secs(),
+                        objective: obj,
+                        gap,
+                        v: &v_now,
+                        alpha: &a_now,
+                    },
+                );
+                if stop_requested || gap <= cfg.gap_tol {
                     converged = true;
                     break;
                 }
@@ -251,19 +275,22 @@ impl HthcSolver {
             }
         }
 
-        TrainResult {
+        let mut extras = Extras::default();
+        extras.set_f64(keys::REFRESH_FRAC, frac_sum / epochs.max(1) as f64);
+        extras.set_u64(keys::A_UPDATES, total_a);
+        extras.set_u64(keys::B_UPDATES, total_b);
+        extras.set_u64(keys::B_ZERO_DELTAS, total_zero);
+        FitReport {
+            solver: "hthc",
             alpha: alpha.snapshot(),
             v: v.snapshot(),
             trace,
             epochs,
-            mean_refresh_frac: frac_sum / epochs.max(1) as f64,
-            total_a_updates: total_a,
-            total_b_updates: total_b,
-            total_b_zero_deltas: total_zero,
-            wall_secs: timer.secs(),
             converged,
+            wall_secs: timer.secs(),
             phase_times: phases,
             staleness: StalenessHistogram::from_ages(&gaps.staleness(epochs as u32)),
+            extras,
         }
     }
 }
@@ -322,6 +349,10 @@ fn run_a_offload(
 
 #[cfg(test)]
 mod tests {
+    // the deprecated train() shims are exercised on purpose: they must
+    // stay faithful to the solver::Trainer path for one release
+    #![allow(deprecated)]
+
     use super::*;
     use crate::data::generator::{generate, DatasetKind, Family};
     use crate::glm::{Lasso, SvmDual};

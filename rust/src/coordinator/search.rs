@@ -7,10 +7,11 @@
 //! budget, returning every result ranked — which also powers the Fig. 6
 //! sensitivity analysis (all configurations within a ratio of best).
 
-use super::{HthcConfig, HthcSolver};
+use super::HthcConfig;
 use crate::data::Matrix;
 use crate::glm::GlmModel;
 use crate::memory::TierSim;
+use crate::solver::{Hthc, Problem, Solver};
 
 /// The search grid.
 #[derive(Clone, Debug)]
@@ -91,10 +92,11 @@ pub fn grid_search(
                         timeout_secs: per_candidate_secs,
                         ..base.clone()
                     };
-                    let solver = HthcSolver::new(cfg);
                     let mut model = make_model();
                     let sim = TierSim::default();
-                    let res = solver.train(model.as_mut(), data, y, &sim);
+                    let mut problem =
+                        Problem::new(model.as_mut(), data, y, &sim, cfg);
+                    let res = Hthc::new().fit(&mut problem);
                     out.push(SearchResult {
                         batch_frac: frac,
                         t_a,
@@ -102,7 +104,7 @@ pub fn grid_search(
                         v_b,
                         time_to_target: res.trace.time_to_gap(target_gap),
                         epochs: res.epochs,
-                        refresh_frac: res.mean_refresh_frac,
+                        refresh_frac: res.refresh_frac(),
                     });
                 }
             }

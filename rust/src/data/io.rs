@@ -15,8 +15,8 @@
 //! models be exported for the `evaluate` flow.
 
 use crate::data::{ColumnOps, DenseMatrix, Matrix, SparseMatrix};
-use crate::Result;
-use anyhow::{bail, Context};
+use crate::util::error::Context;
+use crate::{bail, Result};
 use std::io::{Read, Write};
 use std::path::Path;
 

@@ -6,8 +6,8 @@
 //! coordinates for Lasso, samples as coordinates for SVM.
 
 use crate::data::sparse::SparseMatrix;
-use crate::Result;
-use anyhow::{bail, Context};
+use crate::util::error::Context;
+use crate::{bail, Result};
 use std::io::{BufRead, BufReader, Write};
 use std::path::Path;
 

@@ -209,6 +209,17 @@ pub fn total_gap(
 /// Exact sequential coordinate descent (the T_B = 1 oracle).  Returns
 /// the final objective.  Used by tests and to compute reference optima
 /// for suboptimality traces.
+///
+/// `w = grad f(v)` is re-anchored from `v` once per epoch (which also
+/// bounds fp32 drift) and maintained *incrementally* through the epoch:
+/// for the models whose dual map is affine in `v` (`w = v - y` for the
+/// squared-loss family, `w = v / scale` for the SVMs) the same `axpy`
+/// that updates `v` updates `w` exactly.  For the nonlinear maps
+/// (Huber's clamp, logistic's sigmoid) an incremental slope does not
+/// exist, so `w` is re-mapped from `v` — but only after a coordinate
+/// actually moved, not unconditionally per coordinate as before (with
+/// L1 models most deltas are zero, so the old O(d)-per-coordinate
+/// re-map was nearly always wasted work).
 pub fn solve_reference(
     model: &mut dyn GlmModel,
     data: &dyn ColumnOps,
@@ -222,15 +233,32 @@ pub fn solve_reference(
     let mut w = vec![0.0f32; d];
     for _ in 0..epochs {
         model.epoch_refresh(alpha);
+        // dw/dv where the map is affine in v; None -> re-map on change
+        let w_slope = match model.kind() {
+            ModelKind::Lasso { .. } | ModelKind::Ridge { .. } | ModelKind::ElasticNet { .. } => {
+                Some(1.0f32)
+            }
+            ModelKind::Svm { inv_scale, .. } | ModelKind::SvmL2 { inv_scale, .. } => {
+                Some(inv_scale)
+            }
+            ModelKind::Huber { .. } | ModelKind::Logistic { .. } => None,
+        };
+        w_from_v(model, v, y, &mut w); // per-epoch re-anchor
+        let mut w_stale = false;
         for j in 0..n {
-            // recompute w lazily: for our models w is elementwise in v,
-            // so keep it in sync incrementally instead of re-mapping.
-            w_from_v(model, v, y, &mut w);
+            if w_stale {
+                w_from_v(model, v, y, &mut w);
+                w_stale = false;
+            }
             let u = data.dot(j, &w);
             let delta = model.delta(u, alpha[j], data.sq_norm(j));
             if delta != 0.0 {
                 alpha[j] += delta;
                 data.axpy(j, delta, v);
+                match w_slope {
+                    Some(s) => data.axpy(j, delta * s, &mut w),
+                    None => w_stale = true,
+                }
             }
         }
     }

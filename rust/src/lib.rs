@@ -12,7 +12,7 @@
 //! * **Task B** performs asynchronous parallel SCD on the `m`
 //!   highest-gap coordinates (the only writer of the model).
 //!
-//! The crate layers (see `DESIGN.md`):
+//! The crate layers (see `rust/DESIGN.md`):
 //!
 //! * [`data`] — dense / chunked-sparse / 4-bit-quantized matrices,
 //!   synthetic workload generators, LIBSVM I/O;
@@ -25,10 +25,13 @@
 //! * [`coordinator`] — the HTHC scheme itself plus the §IV-F
 //!   performance model;
 //! * [`baselines`] — ST, OMP, OMP-WILD, PASSCoDe, SGD comparators;
+//! * [`solver`] — the engine-agnostic training API: [`solver::Trainer`]
+//!   builds a [`solver::Problem`] and runs any [`solver::Solver`]
+//!   (HTHC or baseline) to a unified [`solver::FitReport`];
 //! * [`runtime`] — PJRT executor for the AOT-compiled JAX/Pallas
 //!   artifacts (`artifacts/*.hlo.txt`), Python never on the hot path;
 //! * [`metrics`] — convergence traces and table rendering;
-//! * [`util`] — PRNG, CLI parsing, timing (no external deps).
+//! * [`util`] — PRNG, CLI parsing, timing, errors (no external deps).
 
 pub mod baselines;
 pub mod bench_support;
@@ -38,8 +41,9 @@ pub mod glm;
 pub mod memory;
 pub mod metrics;
 pub mod runtime;
+pub mod solver;
 pub mod threadpool;
 pub mod util;
 
 /// Crate-wide result alias.
-pub type Result<T> = anyhow::Result<T>;
+pub type Result<T> = util::error::Result<T>;

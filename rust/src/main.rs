@@ -11,14 +11,14 @@
 //! `rust/benches/` drive the same library APIs; this binary is the
 //! interactive entry point.
 
-use hthc::baselines::{self, OmpMode, PasscodeMode};
-use hthc::coordinator::{HthcConfig, HthcSolver, Selection};
+use hthc::coordinator::HthcConfig;
 use hthc::data::generator::{self, DatasetKind, Family};
 use hthc::data::{Matrix, QuantizedMatrix};
 use hthc::glm::{ElasticNet, GlmModel, HuberL1, Lasso, LogisticL1, Ridge, SvmDual, SvmL2Dual};
 use hthc::memory::TierSim;
 use hthc::metrics::Table;
 use hthc::runtime::{GapService, XlaRuntime};
+use hthc::solver::{self, keys, Hthc, Trainer};
 use hthc::util::Args;
 
 const HELP: &str = "\
@@ -49,10 +49,14 @@ TRAIN FLAGS
   --epochs    max epochs                        (default 200)
   --tol       duality-gap tolerance             (default 1e-5)
   --timeout   seconds                           (default 120)
+  --mse-target SGD stop-at-MSE                  (default 0 = run out)
   --quantize  store D as 4-bit (dense only)
   --pjrt      route task A's gaps through the AOT artifacts
   --csv       dump the convergence trace as CSV
   --seed      PRNG seed                         (default 42)
+
+All solvers run through the same solver::Trainer facade and report a
+unified FitReport (see rust/DESIGN.md).
 ";
 
 fn main() {
@@ -118,72 +122,40 @@ fn cmd_train(args: &Args) {
         println!("representation: quantized 4-bit");
     }
 
-    let lam = args.f32_or("lam", 1e-3);
+    let lam = args.f32_or("lam", solver::DEFAULT_LAM);
     let mut model = build_model(&model_name, lam, matrix.n_cols());
-    let cfg = HthcConfig {
-        t_a: args.usize_or("t-a", 4),
-        t_b: args.usize_or("t-b", 2),
-        v_b: args.usize_or("v-b", 1),
-        batch_frac: args.f64_or("batch", 0.08),
-        selection: Selection::parse(&args.str_or("selection", "gap"))
-            .unwrap_or(Selection::DualityGap),
-        gap_tol: args.f64_or("tol", 1e-5),
-        max_epochs: args.usize_or("epochs", 200),
-        timeout_secs: args.f64_or("timeout", 120.0),
-        eval_every: args.usize_or("eval-every", 1),
-        seed,
-        use_pjrt_gaps: args.bool_or("pjrt", false),
-        adaptive_r_tilde: args.get("adaptive-r").map(|s| s.parse().expect("--adaptive-r")),
-        ..Default::default()
-    };
     let sim = TierSim::default();
     let solver_name = args.str_or("solver", "hthc");
     let y = &g.targets;
 
-    let result = match solver_name.as_str() {
-        "hthc" => {
-            let solver = HthcSolver::new(cfg.clone());
-            if cfg.use_pjrt_gaps {
-                let rt = XlaRuntime::start(&hthc::runtime::default_artifacts_dir())
-                    .unwrap_or_else(|e| {
-                        eprintln!("PJRT runtime unavailable: {e:#}");
-                        std::process::exit(1);
-                    });
-                let service = GapService::new(&rt);
-                solver.train_with_backend(model.as_mut(), &matrix, y, &sim, &service)
-            } else {
-                solver.train(model.as_mut(), &matrix, y, &sim)
-            }
-        }
-        "st" => baselines::train_st(model.as_mut(), &matrix, y, &cfg, &sim),
-        "omp" => baselines::train_omp(model.as_mut(), &matrix, y, &cfg, &sim, OmpMode::Atomic),
-        "omp-wild" => {
-            baselines::train_omp(model.as_mut(), &matrix, y, &cfg, &sim, OmpMode::Wild)
-        }
-        "passcode" => baselines::train_passcode(
-            model.as_mut(), &matrix, y, &cfg, &sim,
-            PasscodeMode::Atomic, |_, _, _, _| false,
-        ),
-        "passcode-wild" => baselines::train_passcode(
-            model.as_mut(), &matrix, y, &cfg, &sim,
-            PasscodeMode::Wild, |_, _, _, _| false,
-        ),
-        "sgd" => {
-            let (trace, _beta) = baselines::train_sgd(&matrix, y, lam, &cfg, &sim, 0.0);
-            println!(
-                "sgd: final MSE {:.6}",
-                trace.final_objective().unwrap_or(f64::NAN)
-            );
-            print_tier_report(&sim);
-            return;
-        }
-        other => {
-            eprintln!("unknown solver {other:?}");
-            std::process::exit(2);
-        }
+    // one facade for every solver: flags -> Trainer (solver::cli is the
+    // single source of truth — asserted by the CLI-parity test)
+    let mut trainer = solver::cli::trainer_from_args(args).unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(2);
+    });
+    // gate on the resolved engine, not the flag spelling, so the
+    // `A+B` alias also reaches the PJRT path
+    let use_pjrt = trainer.solver_ref().name() == "hthc" && trainer.cfg().use_pjrt_gaps;
+    let result = if use_pjrt {
+        let rt = XlaRuntime::start(&hthc::runtime::default_artifacts_dir())
+            .unwrap_or_else(|e| {
+                eprintln!("PJRT runtime unavailable: {e:#}");
+                std::process::exit(1);
+            });
+        let service = GapService::new(&rt);
+        Trainer::new()
+            .solver(Hthc::with_backend(&service))
+            .config(trainer.cfg().clone())
+            .fit_with(model.as_mut(), &matrix, y, &sim)
+    } else {
+        trainer.fit_with(model.as_mut(), &matrix, y, &sim)
     };
 
     println!("solver: {solver_name}");
+    if let Some(mse) = result.extras.f64(keys::FINAL_MSE) {
+        println!("sgd: final MSE {mse:.6}");
+    }
     println!("result: {}", result.summary());
     if model_name.starts_with("svm") {
         let acc = SvmDual::new(lam, matrix.n_cols()).accuracy(matrix.as_ops(), &result.v);
@@ -217,7 +189,7 @@ fn cmd_search(args: &Args) {
     };
     let g = generator::generate(kind, family, args.f64_or("scale", 1.0), args.u64_or("seed", 42));
     println!("dataset: {}", g.describe());
-    let lam = args.f32_or("lam", 1e-3);
+    let lam = args.f32_or("lam", solver::DEFAULT_LAM);
     let n = g.n();
     let probe = build_model(&model_name, lam, n);
     let obj0 = probe

@@ -10,11 +10,16 @@
 //! Interchange is HLO *text* (`HloModuleProto::from_text_file`): see
 //! `python/compile/aot.py` for why serialized protos are rejected by
 //! this XLA version.
+//!
+//! The `xla` crate is not part of the offline dependency set, so the
+//! whole backend is gated behind the `pjrt` cargo feature.  Without it
+//! the public API is unchanged but [`XlaRuntime::start`] reports a
+//! clean "not compiled in" error — callers (tests, benches, the CLI)
+//! already treat a failed start as "skip the PJRT path".
 
 use super::manifest::{ArtifactSpec, DType, Manifest};
-use crate::Result;
-use anyhow::{anyhow, bail, Context};
-use std::collections::HashMap;
+use crate::util::error::Context;
+use crate::{bail, err, Result};
 use std::path::Path;
 use std::sync::mpsc;
 
@@ -76,7 +81,7 @@ impl XlaRuntime {
             .context("spawn pjrt executor")?;
         ready_rx
             .recv()
-            .map_err(|_| anyhow!("executor thread died during init"))??;
+            .map_err(|_| err!("executor thread died during init"))??;
         Ok(XlaRuntime { tx, handle: Some(handle), manifest })
     }
 
@@ -90,7 +95,7 @@ impl XlaRuntime {
         let spec = self
             .manifest
             .find(name)
-            .ok_or_else(|| anyhow!("no artifact named {name:?}"))?;
+            .ok_or_else(|| err!("no artifact named {name:?}"))?;
         if spec.args.len() != args.len() {
             bail!(
                 "{name}: expected {} args, got {}",
@@ -106,8 +111,8 @@ impl XlaRuntime {
         let (resp_tx, resp_rx) = mpsc::sync_channel(1);
         self.tx
             .send(Req::Run { name: name.to_string(), args, resp: resp_tx })
-            .map_err(|_| anyhow!("executor thread gone"))?;
-        resp_rx.recv().map_err(|_| anyhow!("executor dropped reply"))?
+            .map_err(|_| err!("executor thread gone"))?;
+        resp_rx.recv().map_err(|_| err!("executor dropped reply"))?
     }
 }
 
@@ -120,18 +125,35 @@ impl Drop for XlaRuntime {
     }
 }
 
+/// Stub executor: built without the `pjrt` feature there is no XLA
+/// client, so init reports failure and [`XlaRuntime::start`] errors out.
+#[cfg(not(feature = "pjrt"))]
+fn executor_loop(
+    _specs: Vec<ArtifactSpec>,
+    _rx: mpsc::Receiver<Req>,
+    ready: mpsc::SyncSender<Result<()>>,
+) {
+    let _ = ready.send(Err(err!(
+        "PJRT backend not compiled in: rebuild with `--features pjrt` \
+         (requires the `xla` crate; see rust/DESIGN.md §Runtime)"
+    )));
+}
+
+#[cfg(feature = "pjrt")]
 fn executor_loop(
     specs: Vec<ArtifactSpec>,
     rx: mpsc::Receiver<Req>,
     ready: mpsc::SyncSender<Result<()>>,
 ) {
+    use std::collections::HashMap;
+
     let client = match xla::PjRtClient::cpu() {
         Ok(c) => {
             let _ = ready.send(Ok(()));
             c
         }
         Err(e) => {
-            let _ = ready.send(Err(anyhow!("PjRtClient::cpu: {e:?}")));
+            let _ = ready.send(Err(err!("PjRtClient::cpu: {e:?}")));
             return;
         }
     };
@@ -150,25 +172,26 @@ fn executor_loop(
     }
 }
 
+#[cfg(feature = "pjrt")]
 fn run_one(
     client: &xla::PjRtClient,
-    by_name: &HashMap<String, ArtifactSpec>,
-    compiled: &mut HashMap<String, xla::PjRtLoadedExecutable>,
+    by_name: &std::collections::HashMap<String, ArtifactSpec>,
+    compiled: &mut std::collections::HashMap<String, xla::PjRtLoadedExecutable>,
     name: &str,
     args: Vec<ArgData>,
 ) -> Result<Vec<Vec<f32>>> {
     if !compiled.contains_key(name) {
-        let spec = by_name.get(name).ok_or_else(|| anyhow!("unknown artifact {name}"))?;
+        let spec = by_name.get(name).ok_or_else(|| err!("unknown artifact {name}"))?;
         let path = spec
             .path
             .to_str()
-            .ok_or_else(|| anyhow!("non-utf8 path"))?;
+            .ok_or_else(|| err!("non-utf8 path"))?;
         let proto = xla::HloModuleProto::from_text_file(path)
-            .map_err(|e| anyhow!("parse {path}: {e:?}"))?;
+            .map_err(|e| err!("parse {path}: {e:?}"))?;
         let comp = xla::XlaComputation::from_proto(&proto);
         let exe = client
             .compile(&comp)
-            .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+            .map_err(|e| err!("compile {name}: {e:?}"))?;
         compiled.insert(name.to_string(), exe);
     }
     let exe = compiled.get(name).unwrap();
@@ -184,7 +207,7 @@ fn run_one(
                         lit
                     } else {
                         let di: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
-                        lit.reshape(&di).map_err(|e| anyhow!("reshape: {e:?}"))?
+                        lit.reshape(&di).map_err(|e| err!("reshape: {e:?}"))?
                     }
                 }
                 ArgData::U8 { data, dims } => {
@@ -195,7 +218,7 @@ fn run_one(
                         &dims,
                         &data,
                     )
-                    .map_err(|e| anyhow!("u8 literal: {e:?}"))?
+                    .map_err(|e| err!("u8 literal: {e:?}"))?
                 }
                 ArgData::I32 { data, dims } => {
                     let lit = xla::Literal::vec1(&data);
@@ -203,7 +226,7 @@ fn run_one(
                         lit
                     } else {
                         let di: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
-                        lit.reshape(&di).map_err(|e| anyhow!("reshape: {e:?}"))?
+                        lit.reshape(&di).map_err(|e| err!("reshape: {e:?}"))?
                     }
                 }
             })
@@ -212,14 +235,14 @@ fn run_one(
 
     let out = exe
         .execute::<xla::Literal>(&literals)
-        .map_err(|e| anyhow!("execute {name}: {e:?}"))?;
+        .map_err(|e| err!("execute {name}: {e:?}"))?;
     let lit = out[0][0]
         .to_literal_sync()
-        .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+        .map_err(|e| err!("fetch result: {e:?}"))?;
     // aot.py lowers with return_tuple=True: the result is always a tuple.
-    let elems = lit.to_tuple().map_err(|e| anyhow!("untuple: {e:?}"))?;
+    let elems = lit.to_tuple().map_err(|e| err!("untuple: {e:?}"))?;
     elems
         .into_iter()
-        .map(|e| e.to_vec::<f32>().map_err(|er| anyhow!("to_vec: {er:?}")))
+        .map(|e| e.to_vec::<f32>().map_err(|er| err!("to_vec: {er:?}")))
         .collect()
 }

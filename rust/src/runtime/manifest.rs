@@ -5,8 +5,8 @@
 //! `dtype:dims` entries (`float32:1024x256`, `float32:scalar`), exactly
 //! as written by `python/compile/aot.py::sig_of`.
 
-use crate::Result;
-use anyhow::{bail, Context};
+use crate::util::error::Context;
+use crate::{bail, Result};
 use std::path::{Path, PathBuf};
 
 #[derive(Clone, Debug, PartialEq, Eq)]

@@ -1,0 +1,83 @@
+//! Flag-to-[`Trainer`] mapping shared by the `hthc` binary and the
+//! CLI-parity tests: the single source of truth for how `hthc train`
+//! flags become a training configuration.
+
+use super::{by_name, Sgd, Solver, Trainer, DEFAULT_LAM};
+use crate::coordinator::{HthcConfig, Selection};
+use crate::util::Args;
+
+/// Build an [`HthcConfig`] from `hthc train`-style flags (defaults match
+/// the `hthc help` text).
+pub fn config_from_args(args: &Args) -> HthcConfig {
+    HthcConfig {
+        t_a: args.usize_or("t-a", 4),
+        t_b: args.usize_or("t-b", 2),
+        v_b: args.usize_or("v-b", 1),
+        batch_frac: args.f64_or("batch", 0.08),
+        selection: Selection::parse(&args.str_or("selection", "gap"))
+            .unwrap_or(Selection::DualityGap),
+        gap_tol: args.f64_or("tol", 1e-5),
+        max_epochs: args.usize_or("epochs", 200),
+        timeout_secs: args.f64_or("timeout", 120.0),
+        eval_every: args.usize_or("eval-every", 1),
+        seed: args.u64_or("seed", 42),
+        use_pjrt_gaps: args.bool_or("pjrt", false),
+        adaptive_r_tilde: args.get("adaptive-r").map(|s| s.parse().expect("--adaptive-r")),
+        ..Default::default()
+    }
+}
+
+/// Build the full [`Trainer`] (engine + configuration) from the flags.
+/// Errors on an unknown `--solver` — the process-exit policy stays in
+/// the binary.
+pub fn trainer_from_args(args: &Args) -> crate::Result<Trainer<'static>> {
+    let name = args.str_or("solver", "hthc");
+    // case-insensitive so that --solver SGD also honours --lam/--mse-target
+    let solver: Box<dyn Solver> = if name.eq_ignore_ascii_case("sgd") {
+        // SGD reads its own regularizer and target from the flags.
+        Box::new(Sgd {
+            lam: args.f32_or("lam", DEFAULT_LAM),
+            mse_target: args.f64_or("mse-target", 0.0),
+        })
+    } else {
+        by_name(&name).ok_or_else(|| crate::err!("unknown solver {name:?}"))?
+    };
+    Ok(Trainer::new()
+        .solver_boxed(solver)
+        .config(config_from_args(args)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|t| t.to_string()))
+    }
+
+    #[test]
+    fn defaults_match_help_text() {
+        let cfg = config_from_args(&parse(""));
+        assert_eq!((cfg.t_a, cfg.t_b, cfg.v_b), (4, 2, 1));
+        assert_eq!(cfg.batch_frac, 0.08);
+        assert_eq!(cfg.selection, Selection::DualityGap);
+        assert_eq!(cfg.gap_tol, 1e-5);
+        assert_eq!(cfg.max_epochs, 200);
+        assert_eq!(cfg.seed, 42);
+        assert_eq!(cfg.adaptive_r_tilde, None);
+    }
+
+    #[test]
+    fn sgd_solver_reads_lam_flag() {
+        let t = trainer_from_args(&parse("--solver sgd --lam 0.25")).unwrap();
+        assert_eq!(t.solver_ref().name(), "sgd");
+        // case-insensitive spelling routes through the same branch
+        let t2 = trainer_from_args(&parse("--solver SGD --lam 0.25")).unwrap();
+        assert_eq!(t2.solver_ref().name(), "sgd");
+    }
+
+    #[test]
+    fn unknown_solver_is_an_error_not_an_exit() {
+        assert!(trainer_from_args(&parse("--solver bogus")).is_err());
+    }
+}

@@ -1,0 +1,180 @@
+//! The engine adapters: one zero-cost struct per solver family, each
+//! implementing [`Solver`](super::Solver) by delegating to the engine
+//! loop that lives next to its algorithm (coordinator for HTHC, the
+//! `baselines` modules for the comparators).
+//!
+//! Adding a solver = implement `Solver` + add a [`by_name`] arm; nothing
+//! else in the crate needs to know.
+
+use super::{FitReport, Problem, Solver};
+use crate::baselines::{omp, passcode, sgd, st, OmpMode, PasscodeMode};
+use crate::coordinator::hthc::{GapBackend, HthcSolver};
+
+/// The paper's scheme: heterogeneous tasks A+B (§III).  Optionally
+/// carries a PJRT [`GapBackend`] for task A's bulk gap sweeps.
+#[derive(Default)]
+pub struct Hthc<'b> {
+    backend: Option<&'b dyn GapBackend>,
+}
+
+impl<'b> Hthc<'b> {
+    pub fn new() -> Self {
+        Hthc { backend: None }
+    }
+
+    /// Route task A's gap computation through a PJRT backend.
+    pub fn with_backend(backend: &'b dyn GapBackend) -> Self {
+        Hthc { backend: Some(backend) }
+    }
+}
+
+impl Solver for Hthc<'_> {
+    fn name(&self) -> &'static str {
+        "hthc"
+    }
+
+    fn fit(&self, problem: &mut Problem<'_>) -> FitReport {
+        HthcSolver::new(problem.cfg.clone()).fit_problem(problem, self.backend)
+    }
+}
+
+/// The paper's ST baseline: single-task parallel async SCD over every
+/// coordinate each epoch (§V-B1).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SeqThreshold;
+
+impl Solver for SeqThreshold {
+    fn name(&self) -> &'static str {
+        "st"
+    }
+
+    fn fit(&self, problem: &mut Problem<'_>) -> FitReport {
+        st::fit(problem)
+    }
+}
+
+/// The "straightforward OpenMP port" comparator; `wild` drops the
+/// per-element atomics (OMP WILD).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Omp {
+    pub wild: bool,
+}
+
+impl Solver for Omp {
+    fn name(&self) -> &'static str {
+        if self.wild {
+            "omp-wild"
+        } else {
+            "omp"
+        }
+    }
+
+    fn fit(&self, problem: &mut Problem<'_>) -> FitReport {
+        let mode = if self.wild { OmpMode::Wild } else { OmpMode::Atomic };
+        omp::fit(problem, mode)
+    }
+}
+
+/// PASSCoDe-atomic / -wild (Hsieh et al., Table IV).
+#[derive(Clone, Copy, Debug)]
+pub struct Passcode {
+    pub mode: PasscodeMode,
+}
+
+impl Default for Passcode {
+    fn default() -> Self {
+        Passcode { mode: PasscodeMode::Atomic }
+    }
+}
+
+impl Solver for Passcode {
+    fn name(&self) -> &'static str {
+        match self.mode {
+            PasscodeMode::Atomic => "passcode-atomic",
+            PasscodeMode::Wild => "passcode-wild",
+        }
+    }
+
+    fn fit(&self, problem: &mut Problem<'_>) -> FitReport {
+        passcode::fit(problem, self.mode)
+    }
+}
+
+/// The one `--lam` default, shared by the CLI parser, `main`'s model
+/// factory and [`Sgd::default`] so the three cannot drift apart.
+pub const DEFAULT_LAM: f32 = 1e-3;
+
+/// VW-style primal SGD (Table V).  Ignores the problem's GLM model: it
+/// optimizes the primal Lasso objective with its own `lam`, and the
+/// report's `alpha` holds the primal weights `beta` (`v` the predictions).
+#[derive(Clone, Copy, Debug)]
+pub struct Sgd {
+    pub lam: f32,
+    /// Stop (converged) once the training MSE falls to this.
+    pub mse_target: f64,
+}
+
+impl Default for Sgd {
+    fn default() -> Self {
+        // comparisons that care about the objective must set `lam`
+        // explicitly (SGD is model-free)
+        Sgd { lam: DEFAULT_LAM, mse_target: 0.0 }
+    }
+}
+
+impl Solver for Sgd {
+    fn name(&self) -> &'static str {
+        "sgd"
+    }
+
+    fn fit(&self, problem: &mut Problem<'_>) -> FitReport {
+        sgd::fit(problem, self.lam, self.mse_target)
+    }
+}
+
+/// Solver dispatch by name — accepts both the CLI spellings
+/// (`hthc`, `st`, `omp-wild`, `passcode`, ...) and the paper's table
+/// labels (`A+B`, `ST`, `OMP WILD`, `PASSCoDe-atomic`, ...).
+///
+/// `"sgd"` returns [`Sgd::default`] (lam 1e-3, no MSE target).  SGD
+/// optimizes its own primal objective and ignores the problem's GLM
+/// model, so objective comparisons against the CD engines must
+/// construct `Sgd { lam, mse_target }` explicitly instead.
+pub fn by_name(name: &str) -> Option<Box<dyn Solver>> {
+    Some(match name {
+        "hthc" | "A+B" => Box::new(Hthc::new()),
+        "st" | "ST" | "ST(A+B)" => Box::new(SeqThreshold),
+        "omp" | "OMP" => Box::new(Omp { wild: false }),
+        "omp-wild" | "OMP WILD" => Box::new(Omp { wild: true }),
+        "passcode" | "passcode-atomic" | "PASSCoDe-atomic" => {
+            Box::new(Passcode { mode: PasscodeMode::Atomic })
+        }
+        "passcode-wild" | "PASSCoDe-wild" => Box::new(Passcode { mode: PasscodeMode::Wild }),
+        "sgd" | "SGD" => Box::new(Sgd::default()),
+        _ => return None,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn by_name_covers_cli_and_paper_spellings() {
+        for (name, want) in [
+            ("hthc", "hthc"),
+            ("A+B", "hthc"),
+            ("st", "st"),
+            ("ST", "st"),
+            ("ST(A+B)", "st"),
+            ("omp", "omp"),
+            ("OMP WILD", "omp-wild"),
+            ("passcode", "passcode-atomic"),
+            ("PASSCoDe-wild", "passcode-wild"),
+            ("sgd", "sgd"),
+        ] {
+            assert_eq!(by_name(name).unwrap().name(), want, "{name}");
+        }
+        assert!(by_name("bogus").is_none());
+    }
+}

@@ -1,0 +1,49 @@
+//! The engine-agnostic training API.
+//!
+//! The paper's contribution is a *comparison* — HTHC against ST,
+//! OMP/OMP-WILD, PASSCoDe and SGD on the same problems — so the crate
+//! exposes one interface over all of them:
+//!
+//! * [`Problem`] bundles matrix + targets + model + [`TierSim`]
+//!   (+ warm start + epoch observer + [`HthcConfig`]);
+//! * [`Solver`] is the engine trait (`fit(&mut Problem) -> FitReport`),
+//!   implemented by [`Hthc`], [`SeqThreshold`] (ST), [`Omp`],
+//!   [`Passcode`] and [`Sgd`];
+//! * [`FitReport`] is the unified outcome (iterate, trace, stop reason,
+//!   phase times, typed solver-specific [`Extras`]);
+//! * [`Trainer`] is the builder facade gluing it together, with the
+//!   shared stopping rules in [`StopWhen`] and name-based dispatch in
+//!   [`by_name`] / [`cli`].
+//!
+//! The old per-engine entry points (`HthcSolver::train`, `train_st`,
+//! `train_omp`, `train_passcode`, `train_sgd`) remain as deprecated
+//! shims for one release and delegate here.
+//!
+//! [`TierSim`]: crate::memory::TierSim
+//! [`HthcConfig`]: crate::coordinator::HthcConfig
+
+pub mod cli;
+pub mod engines;
+pub mod problem;
+pub mod report;
+pub mod trainer;
+
+pub use engines::{by_name, Hthc, Omp, Passcode, SeqThreshold, Sgd, DEFAULT_LAM};
+pub(crate) use problem::notify_epoch;
+pub use problem::{EpochEvent, OnEpoch, Problem};
+pub use report::{keys, Extras, FitReport, Stat};
+pub use trainer::{StopWhen, Trainer};
+
+/// A training engine: consumes a [`Problem`], produces a [`FitReport`].
+///
+/// Engines honour the shared contract: `cfg`'s stopping rules
+/// (`gap_tol`, `max_epochs`, `timeout_secs`, `eval_every`), the seed,
+/// the warm start, and the per-epoch observer.  Solver-specific knobs
+/// live on the implementing struct (e.g. `Omp { wild }`).
+pub trait Solver {
+    /// Stable engine name (doubles as the trace label).
+    fn name(&self) -> &'static str;
+
+    /// Run the engine to completion on `problem`.
+    fn fit(&self, problem: &mut Problem<'_>) -> FitReport;
+}

@@ -1,0 +1,153 @@
+//! [`Problem`]: everything one training run needs, in one place.
+//!
+//! The pre-redesign API passed (model, matrix, targets, sim) positionally
+//! with a different shape per engine; `Problem` bundles them together
+//! with the run configuration, an optional warm start, and an optional
+//! per-epoch observer so every [`Solver`](super::Solver) sees the same
+//! inputs.
+
+use crate::coordinator::HthcConfig;
+use crate::data::Matrix;
+use crate::glm::GlmModel;
+use crate::memory::TierSim;
+
+/// Snapshot handed to the per-epoch callback at every convergence
+/// evaluation (`cfg.eval_every` epochs).  `v`/`alpha` are the freshly
+/// evaluated iterate; returning `true` from the callback stops the run
+/// and marks the report converged (caller-defined stopping criterion,
+/// e.g. time-to-accuracy probes).
+pub struct EpochEvent<'e> {
+    /// Engine name (matches the trace label).
+    pub solver: &'static str,
+    pub epoch: usize,
+    pub wall_secs: f64,
+    pub objective: f64,
+    /// Duality gap (NaN for solvers without a certificate, e.g. SGD).
+    pub gap: f64,
+    /// Shared vector `v = D alpha` (SGD: predictions `X beta`).
+    pub v: &'e [f32],
+    /// Dual iterate (SGD: primal weights `beta`).
+    pub alpha: &'e [f32],
+}
+
+/// Per-epoch observer: `true` = stop now (converged by caller's rule).
+pub type OnEpoch<'a> = &'a mut dyn FnMut(&EpochEvent<'_>) -> bool;
+
+/// Dispatch an epoch event to an optional observer — the one dispatch
+/// path shared by every engine loop (engines `take()` the observer out
+/// of the [`Problem`] before their borrow-heavy loops start).
+pub(crate) fn notify_epoch(on_epoch: &mut Option<OnEpoch<'_>>, ev: &EpochEvent<'_>) -> bool {
+    match on_epoch.as_mut() {
+        Some(cb) => (**cb)(ev),
+        None => false,
+    }
+}
+
+/// One training problem: data + targets + model + tier simulator +
+/// configuration (+ optional warm start and epoch observer).
+pub struct Problem<'a> {
+    pub data: &'a Matrix,
+    pub targets: &'a [f32],
+    pub model: &'a mut dyn GlmModel,
+    pub sim: &'a TierSim,
+    /// Shared run configuration (thread topology, batch, stopping rules,
+    /// seed).  Engines read the fields that apply to them — the same
+    /// contract `HthcConfig` always had for the baselines.
+    pub cfg: HthcConfig,
+    /// Warm-start iterate (length n).  `v` is re-derived exactly as
+    /// `D alpha` so the primal-dual invariant holds from epoch one.
+    pub warm_alpha: Option<Vec<f32>>,
+    /// Per-epoch observer (see [`EpochEvent`]).
+    pub on_epoch: Option<OnEpoch<'a>>,
+}
+
+impl<'a> Problem<'a> {
+    pub fn new(
+        model: &'a mut dyn GlmModel,
+        data: &'a Matrix,
+        targets: &'a [f32],
+        sim: &'a TierSim,
+        cfg: HthcConfig,
+    ) -> Self {
+        assert_eq!(
+            targets.len(),
+            data.n_rows(),
+            "targets length must equal matrix rows"
+        );
+        // every engine gets the documented panic-early messages, not
+        // just HTHC (whose pool construction used to be the only check)
+        cfg.validate();
+        Problem { data, targets, model, sim, cfg, warm_alpha: None, on_epoch: None }
+    }
+
+    /// Start from a previous iterate instead of zeros.
+    pub fn warm_start(mut self, alpha: Vec<f32>) -> Self {
+        self.warm_alpha = Some(alpha);
+        self
+    }
+
+    /// Observe (and optionally stop) the run at every evaluation epoch.
+    pub fn on_epoch(mut self, cb: OnEpoch<'a>) -> Self {
+        self.on_epoch = Some(cb);
+        self
+    }
+
+    /// Consume the warm start into an initial `(alpha, v)` pair; zeros
+    /// when no warm start was requested.
+    pub(crate) fn initial_state(&mut self) -> (Vec<f32>, Vec<f32>) {
+        let (d, n) = (self.data.n_rows(), self.data.n_cols());
+        match self.warm_alpha.take() {
+            Some(alpha) => {
+                assert_eq!(alpha.len(), n, "warm-start alpha length must equal n_cols");
+                let v = self.data.matvec_alpha(&alpha);
+                (alpha, v)
+            }
+            None => (vec![0.0; n], vec![0.0; d]),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::generator::{generate, DatasetKind, Family};
+    use crate::glm::Lasso;
+
+    #[test]
+    fn initial_state_zero_without_warm_start() {
+        let g = generate(DatasetKind::Tiny, Family::Regression, 1.0, 3100);
+        let mut model = Lasso::new(0.1);
+        let sim = TierSim::default();
+        let mut p =
+            Problem::new(&mut model, &g.matrix, &g.targets, &sim, HthcConfig::default());
+        let (a, v) = p.initial_state();
+        assert_eq!(a.len(), g.n());
+        assert_eq!(v.len(), g.d());
+        assert!(a.iter().all(|&x| x == 0.0) && v.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn warm_start_rederives_v_exactly() {
+        let g = generate(DatasetKind::Tiny, Family::Regression, 1.0, 3101);
+        let mut model = Lasso::new(0.1);
+        let sim = TierSim::default();
+        let alpha: Vec<f32> = (0..g.n()).map(|j| (j % 3) as f32 * 0.5).collect();
+        let mut p = Problem::new(&mut model, &g.matrix, &g.targets, &sim, HthcConfig::default())
+            .warm_start(alpha.clone());
+        let (a, v) = p.initial_state();
+        assert_eq!(a, alpha);
+        assert_eq!(v, g.matrix.matvec_alpha(&alpha));
+        // consumed: a second call is a cold start
+        assert!(p.initial_state().0.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    #[should_panic]
+    fn mismatched_targets_rejected() {
+        let g = generate(DatasetKind::Tiny, Family::Regression, 1.0, 3102);
+        let mut model = Lasso::new(0.1);
+        let sim = TierSim::default();
+        let short = vec![0.0f32; g.d() - 1];
+        let _ = Problem::new(&mut model, &g.matrix, &short, &sim, HthcConfig::default());
+    }
+}

@@ -1,0 +1,222 @@
+//! [`FitReport`]: the unified outcome of any training run.
+//!
+//! Replaces the old `TrainResult`-vs-ad-hoc-tuple split: the fields all
+//! solvers share are first-class, and solver-specific statistics (task
+//! A/B update counts, gap-memory refresh fraction, SGD's final MSE, ...)
+//! live in a typed [`Extras`] map keyed by the constants in [`keys`].
+
+use crate::coordinator::TrainResult;
+use crate::metrics::{ConvergenceTrace, PhaseTimes, StalenessHistogram};
+use std::collections::BTreeMap;
+
+/// Well-known [`Extras`] keys.  Engines only ever write these constants
+/// so downstream tables can rely on the names.
+pub mod keys {
+    /// Task-A gap refreshes over the whole run (u64).
+    pub const A_UPDATES: &str = "a_updates";
+    /// Coordinate updates applied by the update task (u64).
+    pub const B_UPDATES: &str = "b_updates";
+    /// Updates whose closed-form delta was exactly zero (u64).
+    pub const B_ZERO_DELTAS: &str = "b_zero_deltas";
+    /// Mean fraction of the gap memory refreshed per epoch (f64).
+    pub const REFRESH_FRAC: &str = "refresh_frac";
+    /// SGD: final training mean squared error (f64).
+    pub const FINAL_MSE: &str = "final_mse";
+}
+
+/// One solver-specific statistic.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Stat {
+    U64(u64),
+    F64(f64),
+}
+
+/// Typed string-keyed statistics map.
+#[derive(Clone, Debug, Default)]
+pub struct Extras(BTreeMap<&'static str, Stat>);
+
+impl Extras {
+    pub fn set_u64(&mut self, key: &'static str, v: u64) {
+        self.0.insert(key, Stat::U64(v));
+    }
+
+    pub fn set_f64(&mut self, key: &'static str, v: f64) {
+        self.0.insert(key, Stat::F64(v));
+    }
+
+    pub fn get(&self, key: &str) -> Option<Stat> {
+        self.0.get(key).copied()
+    }
+
+    pub fn u64(&self, key: &str) -> Option<u64> {
+        match self.get(key)? {
+            Stat::U64(v) => Some(v),
+            Stat::F64(_) => None,
+        }
+    }
+
+    pub fn f64(&self, key: &str) -> Option<f64> {
+        match self.get(key)? {
+            Stat::F64(v) => Some(v),
+            Stat::U64(v) => Some(v as f64),
+        }
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&'static str, Stat)> + '_ {
+        self.0.iter().map(|(&k, &v)| (k, v))
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.0.is_empty()
+    }
+}
+
+/// Outcome of a [`Solver::fit`](super::Solver::fit) run.
+pub struct FitReport {
+    /// Engine name (matches the trace label).
+    pub solver: &'static str,
+    /// Final dual iterate (SGD: primal weights `beta`).
+    pub alpha: Vec<f32>,
+    /// Final shared vector `v = D alpha` (SGD: predictions).
+    pub v: Vec<f32>,
+    /// Convergence measurements over the run.
+    pub trace: ConvergenceTrace,
+    pub epochs: usize,
+    /// True when stopped by `gap_tol` or by the epoch callback.
+    pub converged: bool,
+    pub wall_secs: f64,
+    /// Where epoch time went (engines that do not instrument phases
+    /// leave this default).
+    pub phase_times: PhaseTimes,
+    /// Gap-memory staleness at the end of the run (HTHC only).
+    pub staleness: StalenessHistogram,
+    /// Solver-specific statistics (see [`keys`]).
+    pub extras: Extras,
+}
+
+impl FitReport {
+    pub fn final_objective(&self) -> Option<f64> {
+        self.trace.final_objective()
+    }
+
+    pub fn final_gap(&self) -> Option<f64> {
+        self.trace.final_gap()
+    }
+
+    /// Task-A refreshes (0 for engines without a gap task).
+    pub fn a_updates(&self) -> u64 {
+        self.extras.u64(keys::A_UPDATES).unwrap_or(0)
+    }
+
+    pub fn b_updates(&self) -> u64 {
+        self.extras.u64(keys::B_UPDATES).unwrap_or(0)
+    }
+
+    pub fn b_zero_deltas(&self) -> u64 {
+        self.extras.u64(keys::B_ZERO_DELTAS).unwrap_or(0)
+    }
+
+    /// Mean gap-memory refresh fraction per epoch (engines that touch
+    /// every coordinate per epoch report 1.0).
+    pub fn refresh_frac(&self) -> f64 {
+        self.extras.f64(keys::REFRESH_FRAC).unwrap_or(0.0)
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "[{}] epochs={} wall={} gap={:.3e} obj={:.6e} refreshed/epoch={:.1}% A-updates={} B-updates={} (zero-deltas {})",
+            self.solver,
+            self.epochs,
+            crate::util::fmt_secs(self.wall_secs),
+            self.final_gap().unwrap_or(f64::NAN),
+            self.final_objective().unwrap_or(f64::NAN),
+            100.0 * self.refresh_frac(),
+            self.a_updates(),
+            self.b_updates(),
+            self.b_zero_deltas(),
+        )
+    }
+
+    /// Legacy view for the deprecated `train_*` shims.
+    pub(crate) fn into_train_result(self) -> TrainResult {
+        TrainResult {
+            mean_refresh_frac: self.refresh_frac(),
+            total_a_updates: self.a_updates(),
+            total_b_updates: self.b_updates(),
+            total_b_zero_deltas: self.b_zero_deltas(),
+            alpha: self.alpha,
+            v: self.v,
+            trace: self.trace,
+            epochs: self.epochs,
+            wall_secs: self.wall_secs,
+            converged: self.converged,
+            phase_times: self.phase_times,
+            staleness: self.staleness,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report() -> FitReport {
+        let mut extras = Extras::default();
+        extras.set_u64(keys::A_UPDATES, 10);
+        extras.set_u64(keys::B_UPDATES, 20);
+        extras.set_u64(keys::B_ZERO_DELTAS, 3);
+        extras.set_f64(keys::REFRESH_FRAC, 0.5);
+        let mut trace = ConvergenceTrace::new("test");
+        trace.push(1.0, 4, 2.5, 0.125);
+        FitReport {
+            solver: "test",
+            alpha: vec![1.0],
+            v: vec![2.0],
+            trace,
+            epochs: 4,
+            converged: true,
+            wall_secs: 1.0,
+            phase_times: Default::default(),
+            staleness: Default::default(),
+            extras,
+        }
+    }
+
+    #[test]
+    fn extras_typed_access() {
+        let r = report();
+        assert_eq!(r.a_updates(), 10);
+        assert_eq!(r.b_updates(), 20);
+        assert_eq!(r.b_zero_deltas(), 3);
+        assert_eq!(r.refresh_frac(), 0.5);
+        assert_eq!(r.extras.u64(keys::REFRESH_FRAC), None, "wrong type is None");
+        assert_eq!(r.extras.f64(keys::A_UPDATES), Some(10.0), "u64 widens to f64");
+        assert_eq!(r.extras.get("nonexistent"), None);
+    }
+
+    #[test]
+    fn missing_extras_default_to_zero() {
+        let mut r = report();
+        r.extras = Extras::default();
+        assert_eq!(r.a_updates(), 0);
+        assert_eq!(r.refresh_frac(), 0.0);
+    }
+
+    #[test]
+    fn train_result_conversion_preserves_stats() {
+        let tr = report().into_train_result();
+        assert_eq!(tr.total_a_updates, 10);
+        assert_eq!(tr.total_b_updates, 20);
+        assert_eq!(tr.total_b_zero_deltas, 3);
+        assert!((tr.mean_refresh_frac - 0.5).abs() < 1e-12);
+        assert_eq!(tr.epochs, 4);
+        assert!(tr.converged);
+    }
+
+    #[test]
+    fn summary_mentions_solver_and_counts() {
+        let s = report().summary();
+        assert!(s.contains("[test]"), "{s}");
+        assert!(s.contains("A-updates=10"), "{s}");
+    }
+}

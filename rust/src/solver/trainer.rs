@@ -1,0 +1,302 @@
+//! [`Trainer`]: the builder facade over every [`Solver`].
+//!
+//! ```no_run
+//! use hthc::data::generator::{generate, DatasetKind, Family};
+//! use hthc::glm::Lasso;
+//! use hthc::solver::{SeqThreshold, StopWhen, Trainer};
+//!
+//! let g = generate(DatasetKind::Tiny, Family::Regression, 1.0, 42);
+//! let report = Trainer::new()
+//!     .solver(SeqThreshold)
+//!     .model(Box::new(Lasso::new(0.3)))
+//!     .threads(2, 2, 1)
+//!     .stop_when(StopWhen::gap_below(1e-4).max_epochs(500))
+//!     .fit(&g.matrix, &g.targets);
+//! println!("{}", report.summary());
+//! ```
+//!
+//! The shared stopping rules (gap tolerance, epoch cap, wall-clock
+//! timeout), deterministic seeding, warm starts and per-epoch callbacks
+//! apply to every engine — before the redesign only HTHC (stopping) and
+//! PASSCoDe (callback) had them.
+
+use super::{EpochEvent, FitReport, Hthc, Problem, Solver};
+use crate::coordinator::{HthcConfig, Selection};
+use crate::data::Matrix;
+use crate::glm::GlmModel;
+use crate::memory::TierSim;
+
+/// The shared stopping rules, separable from the solver knobs.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct StopWhen {
+    /// Stop (converged) when the total duality gap falls below this.
+    pub gap_tol: f64,
+    /// Hard epoch cap.
+    pub max_epochs: usize,
+    /// Hard wall-clock cap (seconds).
+    pub timeout_secs: f64,
+    /// Epochs between exact convergence evaluations.
+    pub eval_every: usize,
+}
+
+impl Default for StopWhen {
+    fn default() -> Self {
+        let cfg = HthcConfig::default();
+        StopWhen {
+            gap_tol: cfg.gap_tol,
+            max_epochs: cfg.max_epochs,
+            timeout_secs: cfg.timeout_secs,
+            eval_every: cfg.eval_every,
+        }
+    }
+}
+
+impl StopWhen {
+    /// Converge on a duality-gap threshold (other limits at defaults).
+    pub fn gap_below(tol: f64) -> Self {
+        StopWhen { gap_tol: tol, ..Default::default() }
+    }
+
+    pub fn max_epochs(mut self, n: usize) -> Self {
+        self.max_epochs = n;
+        self
+    }
+
+    pub fn timeout_secs(mut self, s: f64) -> Self {
+        self.timeout_secs = s;
+        self
+    }
+
+    pub fn eval_every(mut self, k: usize) -> Self {
+        self.eval_every = k;
+        self
+    }
+}
+
+/// Builder facade: pick a solver, a model, the topology and stopping
+/// rules, then [`fit`](Trainer::fit).
+///
+/// The lifetime `'b` covers borrowed engine state (a PJRT backend in
+/// [`Hthc::with_backend`]) and the epoch callback; plain usage infers it.
+pub struct Trainer<'b> {
+    solver: Box<dyn Solver + 'b>,
+    model: Option<Box<dyn GlmModel>>,
+    cfg: HthcConfig,
+    warm_alpha: Option<Vec<f32>>,
+    on_epoch: Option<Box<dyn FnMut(&EpochEvent<'_>) -> bool + 'b>>,
+    sim: TierSim,
+}
+
+impl Default for Trainer<'_> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<'b> Trainer<'b> {
+    /// A trainer with the HTHC engine and default configuration.
+    pub fn new() -> Self {
+        Trainer {
+            solver: Box::new(Hthc::new()),
+            model: None,
+            cfg: HthcConfig::default(),
+            warm_alpha: None,
+            on_epoch: None,
+            sim: TierSim::default(),
+        }
+    }
+
+    /// Select the engine (default: [`Hthc`]).
+    pub fn solver(mut self, s: impl Solver + 'b) -> Self {
+        self.solver = Box::new(s);
+        self
+    }
+
+    /// Select an already-boxed engine (e.g. from [`super::by_name`]).
+    pub fn solver_boxed(mut self, s: Box<dyn Solver + 'b>) -> Self {
+        self.solver = s;
+        self
+    }
+
+    /// Own the model to train; retrieve it after [`fit`](Trainer::fit)
+    /// with [`model_ref`](Trainer::model_ref), or keep ownership outside
+    /// and use [`fit_with`](Trainer::fit_with).
+    pub fn model(mut self, m: Box<dyn GlmModel>) -> Self {
+        self.model = Some(m);
+        self
+    }
+
+    /// Replace the whole configuration (harness path; the granular
+    /// setters below cover interactive use).
+    pub fn config(mut self, cfg: HthcConfig) -> Self {
+        self.cfg = cfg;
+        self
+    }
+
+    /// Thread topology `(T_A, T_B, V_B)` (paper §IV-F).
+    pub fn threads(mut self, t_a: usize, t_b: usize, v_b: usize) -> Self {
+        self.cfg.t_a = t_a;
+        self.cfg.t_b = t_b;
+        self.cfg.v_b = v_b;
+        self
+    }
+
+    /// `%B`: fraction of coordinates updated per epoch.
+    pub fn batch_frac(mut self, frac: f64) -> Self {
+        self.cfg.batch_frac = frac;
+        self
+    }
+
+    pub fn selection(mut self, s: Selection) -> Self {
+        self.cfg.selection = s;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.cfg.seed = seed;
+        self
+    }
+
+    pub fn lock_chunk(mut self, chunk: usize) -> Self {
+        self.cfg.lock_chunk = chunk;
+        self
+    }
+
+    /// Online §IV-F batch controller target (HTHC only).
+    pub fn adaptive_refresh(mut self, r_tilde: Option<f64>) -> Self {
+        self.cfg.adaptive_r_tilde = r_tilde;
+        self
+    }
+
+    /// The shared stopping rules.
+    pub fn stop_when(mut self, stop: StopWhen) -> Self {
+        self.cfg.gap_tol = stop.gap_tol;
+        self.cfg.max_epochs = stop.max_epochs;
+        self.cfg.timeout_secs = stop.timeout_secs;
+        self.cfg.eval_every = stop.eval_every;
+        self
+    }
+
+    /// Warm-start the **next fit only** from a previous iterate; it is
+    /// consumed by that fit, so on a reused trainer subsequent fits
+    /// cold-start unless `warm_start` is called again (solver, config
+    /// and callback persist across fits — the warm start deliberately
+    /// does not, since replaying a stale iterate is rarely intended).
+    pub fn warm_start(mut self, alpha: Vec<f32>) -> Self {
+        self.warm_alpha = Some(alpha);
+        self
+    }
+
+    /// Observe every evaluation epoch; return `true` to stop the run
+    /// (the report is then marked converged).
+    pub fn on_epoch(mut self, cb: impl FnMut(&EpochEvent<'_>) -> bool + 'b) -> Self {
+        self.on_epoch = Some(Box::new(cb));
+        self
+    }
+
+    /// The assembled configuration (CLI parity tests, introspection).
+    pub fn cfg(&self) -> &HthcConfig {
+        &self.cfg
+    }
+
+    /// The selected engine.
+    pub fn solver_ref(&self) -> &(dyn Solver + 'b) {
+        &*self.solver
+    }
+
+    /// The trainer-owned tier simulator (traffic accounting for fits
+    /// run through [`fit`](Trainer::fit)).
+    pub fn tier_sim(&self) -> &TierSim {
+        &self.sim
+    }
+
+    /// The owned model, if one was set (post-fit inspection).
+    pub fn model_ref(&self) -> Option<&dyn GlmModel> {
+        self.model.as_deref()
+    }
+
+    /// Train the owned model on `(data, targets)`.
+    ///
+    /// Panics if no model was set — harnesses that keep model ownership
+    /// outside the trainer use [`fit_with`](Trainer::fit_with).
+    pub fn fit(&mut self, data: &Matrix, targets: &[f32]) -> FitReport {
+        let mut model = self
+            .model
+            .take()
+            .expect("Trainer::fit: no model set — call .model(...) or use fit_with");
+        let report = {
+            let mut problem =
+                Problem::new(model.as_mut(), data, targets, &self.sim, self.cfg.clone());
+            if let Some(alpha) = self.warm_alpha.take() {
+                problem = problem.warm_start(alpha);
+            }
+            if let Some(cb) = self.on_epoch.as_deref_mut() {
+                problem = problem.on_epoch(cb);
+            }
+            self.solver.fit(&mut problem)
+        };
+        self.model = Some(model);
+        report
+    }
+
+    /// Train a borrowed model against an external tier simulator — the
+    /// harness-facing twin of [`fit`](Trainer::fit).
+    pub fn fit_with(
+        &mut self,
+        model: &mut dyn GlmModel,
+        data: &Matrix,
+        targets: &[f32],
+        sim: &TierSim,
+    ) -> FitReport {
+        let mut problem = Problem::new(model, data, targets, sim, self.cfg.clone());
+        if let Some(alpha) = self.warm_alpha.take() {
+            problem = problem.warm_start(alpha);
+        }
+        if let Some(cb) = self.on_epoch.as_deref_mut() {
+            problem = problem.on_epoch(cb);
+        }
+        self.solver.fit(&mut problem)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stop_when_maps_onto_config() {
+        let t = Trainer::new().stop_when(
+            StopWhen::gap_below(1e-3)
+                .max_epochs(7)
+                .timeout_secs(2.5)
+                .eval_every(4),
+        );
+        assert_eq!(t.cfg().gap_tol, 1e-3);
+        assert_eq!(t.cfg().max_epochs, 7);
+        assert_eq!(t.cfg().timeout_secs, 2.5);
+        assert_eq!(t.cfg().eval_every, 4);
+    }
+
+    #[test]
+    fn builder_setters_compose() {
+        let t = Trainer::new()
+            .threads(3, 4, 2)
+            .batch_frac(0.5)
+            .selection(Selection::Random)
+            .seed(9)
+            .lock_chunk(64)
+            .adaptive_refresh(Some(0.2));
+        let c = t.cfg();
+        assert_eq!((c.t_a, c.t_b, c.v_b), (3, 4, 2));
+        assert_eq!(c.batch_frac, 0.5);
+        assert_eq!(c.selection, Selection::Random);
+        assert_eq!(c.seed, 9);
+        assert_eq!(c.lock_chunk, 64);
+        assert_eq!(c.adaptive_r_tilde, Some(0.2));
+    }
+
+    #[test]
+    fn default_engine_is_hthc() {
+        assert_eq!(Trainer::new().solver_ref().name(), "hthc");
+    }
+}

@@ -1,0 +1,135 @@
+//! Minimal error plumbing (anyhow stand-in; no external deps offline).
+//!
+//! Provides the three things the crate actually uses from `anyhow`:
+//! a boxed message-plus-source [`Error`], the [`Context`] extension on
+//! `Result`/`Option`, and the [`err!`](crate::err)/[`bail!`](crate::bail)
+//! macros.  `Display` prints `message: source` so wrapped I/O and parse
+//! errors stay legible in CLI output.
+
+use std::fmt;
+
+/// A message with an optional boxed source error.
+#[derive(Debug)]
+pub struct Error {
+    msg: String,
+    source: Option<Box<dyn std::error::Error + Send + Sync + 'static>>,
+}
+
+impl Error {
+    pub fn msg(m: impl Into<String>) -> Self {
+        Error { msg: m.into(), source: None }
+    }
+
+    pub fn wrap(
+        m: impl Into<String>,
+        source: impl std::error::Error + Send + Sync + 'static,
+    ) -> Self {
+        Error { msg: m.into(), source: Some(Box::new(source)) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        if let Some(s) = &self.source {
+            write!(f, ": {s}")?;
+        }
+        Ok(())
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        self.source
+            .as_deref()
+            .map(|e| e as &(dyn std::error::Error + 'static))
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::wrap("I/O error", e)
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// `.context(msg)` / `.with_context(|| msg)` on `Result` and `Option`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E> Context<T> for std::result::Result<T, E>
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| Error::wrap(c.to_string(), e))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::wrap(f().to_string(), e))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f().to_string()))
+    }
+}
+
+/// Build an [`Error`] from a format string (anyhow's `anyhow!`).
+#[macro_export]
+macro_rules! err {
+    ($($t:tt)*) => {
+        $crate::util::error::Error::msg(format!($($t)*))
+    };
+}
+
+/// Return early with a formatted [`Error`] (anyhow's `bail!`).
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err($crate::err!($($t)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_chains_source() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e = Error::wrap("open file", io);
+        let s = format!("{e}");
+        assert!(s.starts_with("open file: "), "{s}");
+    }
+
+    #[test]
+    fn context_on_option_and_result() {
+        let none: Option<u8> = None;
+        assert!(none.context("missing").is_err());
+        let bad: std::result::Result<u8, std::num::ParseIntError> = "x".parse();
+        let e = bad.with_context(|| format!("parse {}", "x")).unwrap_err();
+        assert!(format!("{e}").contains("parse x"));
+    }
+
+    #[test]
+    fn bail_macro_returns_err() {
+        fn f(x: u8) -> Result<u8> {
+            if x == 0 {
+                bail!("zero not allowed ({x})");
+            }
+            Ok(x)
+        }
+        assert!(f(0).is_err());
+        assert_eq!(f(3).unwrap(), 3);
+    }
+}

@@ -1,10 +1,12 @@
-//! Dependency-free utilities: PRNG, CLI parsing, timers, simple logging.
+//! Dependency-free utilities: PRNG, CLI parsing, timers, error plumbing.
 
 pub mod cli;
+pub mod error;
 pub mod prng;
 pub mod timer;
 
 pub use cli::Args;
+pub use error::{Context, Error};
 pub use prng::Rng;
 pub use timer::Timer;
 

@@ -2,12 +2,20 @@
 //! configurations.  Everything must error cleanly or train robustly —
 //! never panic from library internals, never emit NaN iterates.
 
-use hthc::coordinator::{HthcConfig, HthcSolver};
+use hthc::coordinator::HthcConfig;
 use hthc::data::generator::{generate, DatasetKind, Family};
 use hthc::data::{libsvm, DenseMatrix, Matrix, SparseMatrix};
 use hthc::glm::{GlmModel, Lasso, Ridge};
 use hthc::memory::TierSim;
+use hthc::solver::{FitReport, Trainer};
 use hthc::util::Rng;
+
+/// HTHC via the unified facade (the adversarial suite targets the
+/// default engine).
+fn fit_hthc(cfg: HthcConfig, model: &mut dyn GlmModel, m: &Matrix, y: &[f32]) -> FitReport {
+    let sim = TierSim::default();
+    Trainer::new().config(cfg).fit_with(model, m, y, &sim)
+}
 
 // ---------------------------------------------------------------------------
 // libsvm parser fuzz
@@ -75,8 +83,7 @@ fn constant_columns_and_duplicate_columns() {
     let m = Matrix::Dense(DenseMatrix::from_col_major(d, 4, data));
     let y: Vec<f32> = (0..d).map(|_| rng.normal()).collect();
     let mut model = Lasso::new(0.05);
-    let solver = HthcSolver::new(quick_cfg());
-    let res = solver.train(&mut model, &m, &y, &TierSim::default());
+    let res = fit_hthc(quick_cfg(), &mut model, &m, &y);
     assert!(res.alpha.iter().all(|a| a.is_finite()));
     assert!(res.trace.final_objective().unwrap().is_finite());
 }
@@ -92,8 +99,7 @@ fn single_coordinate_problem() {
     let mut cfg = quick_cfg();
     cfg.batch_frac = 1.0;
     cfg.max_epochs = 50;
-    let solver = HthcSolver::new(cfg);
-    let res = solver.train(&mut model, &m, &y, &TierSim::default());
+    let res = fit_hthc(cfg, &mut model, &m, &y);
     assert!((res.alpha[0] - 2.0).abs() < 0.05, "alpha {}", res.alpha[0]);
 }
 
@@ -105,8 +111,7 @@ fn empty_sparse_columns_everywhere() {
     ));
     let y = vec![1.0f32; 16];
     let mut model = Lasso::new(0.1);
-    let solver = HthcSolver::new(quick_cfg());
-    let res = solver.train(&mut model, &m, &y, &TierSim::default());
+    let res = fit_hthc(quick_cfg(), &mut model, &m, &y);
     assert!(res.alpha.iter().all(|&a| a == 0.0), "nothing can move");
 }
 
@@ -115,8 +120,7 @@ fn extreme_regularization_is_stable() {
     let g = generate(DatasetKind::Tiny, Family::Regression, 1.0, 7004);
     for lam in [1e-12f32, 1e12] {
         let mut model = Lasso::new(lam);
-        let solver = HthcSolver::new(quick_cfg());
-        let res = solver.train(&mut model, &g.matrix, &g.targets, &TierSim::default());
+        let res = fit_hthc(quick_cfg(), &mut model, &g.matrix, &g.targets);
         assert!(res.alpha.iter().all(|a| a.is_finite()), "lam={lam}");
         if lam > 1.0 {
             assert!(res.alpha.iter().all(|&a| a == 0.0), "huge lam kills all");
@@ -129,8 +133,7 @@ fn huge_target_magnitudes_stay_finite() {
     let g = generate(DatasetKind::Tiny, Family::Regression, 1.0, 7005);
     let y: Vec<f32> = g.targets.iter().map(|&t| t * 1e10).collect();
     let mut model = Ridge::new(1.0);
-    let solver = HthcSolver::new(quick_cfg());
-    let res = solver.train(&mut model, &g.matrix, &y, &TierSim::default());
+    let res = fit_hthc(quick_cfg(), &mut model, &g.matrix, &y);
     assert!(res.alpha.iter().all(|a| a.is_finite()));
     assert!(res.v.iter().all(|v| v.is_finite()));
 }
@@ -147,8 +150,7 @@ fn more_threads_than_coordinates() {
     cfg.v_b = 2;
     cfg.batch_frac = 0.02; // batch of ~1 coordinate, 16 B-threads
     let mut model = Lasso::new(0.1);
-    let solver = HthcSolver::new(cfg);
-    let res = solver.train(&mut model, &g.matrix, &g.targets, &TierSim::default());
+    let res = fit_hthc(cfg, &mut model, &g.matrix, &g.targets);
     assert!(res.epochs > 0);
 }
 
@@ -164,8 +166,7 @@ fn v_b_larger_than_rows() {
     cfg.v_b = 16; // lanes get empty row ranges — must not deadlock
     cfg.batch_frac = 1.0;
     let mut model = Ridge::new(0.5);
-    let solver = HthcSolver::new(cfg);
-    let res = solver.train(&mut model, &m, &y, &TierSim::default());
+    let res = fit_hthc(cfg, &mut model, &m, &y);
     assert!(res.trace.final_objective().unwrap().is_finite());
 }
 
@@ -176,8 +177,7 @@ fn lock_chunk_of_one_is_correct_if_slow() {
     cfg.lock_chunk = 1; // pathological: one mutex per element
     cfg.max_epochs = 10;
     let mut model = Lasso::new(0.2);
-    let solver = HthcSolver::new(cfg);
-    let res = solver.train(&mut model, &g.matrix, &g.targets, &TierSim::default());
+    let res = fit_hthc(cfg, &mut model, &g.matrix, &g.targets);
     // v = D alpha must still hold exactly
     let v2 = g.matrix.matvec_alpha(&res.alpha);
     for (a, b) in res.v.iter().zip(&v2) {

@@ -2,12 +2,13 @@
 //! (model x representation x solver) combination the paper evaluates,
 //! plus the coordination invariants that only show up end-to-end.
 
-use hthc::baselines::{train_omp, train_passcode, train_st, OmpMode, PasscodeMode};
-use hthc::coordinator::{HthcConfig, HthcSolver, Selection};
+use hthc::baselines::PasscodeMode;
+use hthc::coordinator::{HthcConfig, Selection};
 use hthc::data::generator::{generate, DatasetKind, Family};
 use hthc::data::{Matrix, QuantizedMatrix};
 use hthc::glm::{self, ElasticNet, GlmModel, Lasso, LogisticL1, Ridge, SvmDual};
 use hthc::memory::{Tier, TierSim};
+use hthc::solver::{FitReport, Hthc, Omp, Passcode, SeqThreshold, Solver, Trainer};
 
 fn rel_tol(model: &dyn GlmModel, d: usize, n: usize, y: &[f32], rel: f64) -> f64 {
     let obj0 = model.objective(&vec![0.0; d], y, &vec![0.0; n]);
@@ -28,6 +29,22 @@ fn quick_cfg(gap_tol: f64) -> HthcConfig {
     }
 }
 
+/// Run any engine through the unified facade (the only entry point the
+/// integration suite uses).
+fn fit(
+    solver: impl Solver + 'static,
+    cfg: HthcConfig,
+    model: &mut dyn GlmModel,
+    data: &Matrix,
+    y: &[f32],
+    sim: &TierSim,
+) -> FitReport {
+    Trainer::new()
+        .solver(solver)
+        .config(cfg)
+        .fit_with(model, data, y, sim)
+}
+
 /// Every model trains on its natural dataset through the full HTHC
 /// stack and reaches a small relative duality gap.
 #[test]
@@ -46,9 +63,8 @@ fn all_models_train_via_hthc() {
     for (mut model, family) in cases {
         let g = generate(DatasetKind::Tiny, family, 1.0, 201);
         let tol = rel_tol(model.as_ref(), g.d(), g.n(), &g.targets, 1e-3);
-        let solver = HthcSolver::new(quick_cfg(tol));
         let sim = TierSim::default();
-        let res = solver.train(model.as_mut(), &g.matrix, &g.targets, &sim);
+        let res = fit(Hthc::new(), quick_cfg(tol), model.as_mut(), &g.matrix, &g.targets, &sim);
         let name = model.name();
         assert!(res.converged, "{name}: {}", res.summary());
         // the headline invariant: locked updates never lose writes
@@ -82,9 +98,8 @@ fn all_representations_train() {
     ] {
         let mut model = Lasso::new(0.3);
         let tol = rel_tol(&model, matrix.n_rows(), matrix.n_cols(), targets, 5e-3);
-        let solver = HthcSolver::new(quick_cfg(tol));
         let sim = TierSim::default();
-        let res = solver.train(&mut model, matrix, targets, &sim);
+        let res = fit(Hthc::new(), quick_cfg(tol), &mut model, matrix, targets, &sim);
         let first = res.trace.points.first().unwrap().objective;
         let last = res.trace.final_objective().unwrap();
         assert!(
@@ -109,25 +124,22 @@ fn solvers_agree_on_the_optimum() {
     let tol = rel_tol(&Lasso::new(0.4), g.d(), g.n(), &g.targets, 1e-3);
     let mut objs: Vec<(String, f64)> = Vec::new();
 
-    let solver = HthcSolver::new(quick_cfg(tol));
-    let mut m = Lasso::new(0.4);
-    let r = solver.train(&mut m, &g.matrix, &g.targets, &sim);
-    objs.push(("hthc".into(), r.trace.final_objective().unwrap()));
-
-    let mut m = Lasso::new(0.4);
-    let r = train_st(&mut m, &g.matrix, &g.targets, &quick_cfg(tol), &sim);
-    objs.push(("st".into(), r.trace.final_objective().unwrap()));
-
-    let mut m = Lasso::new(0.4);
-    let r = train_omp(&mut m, &g.matrix, &g.targets, &quick_cfg(tol), &sim, OmpMode::Atomic);
-    objs.push(("omp".into(), r.trace.final_objective().unwrap()));
-
-    let mut m = Lasso::new(0.4);
-    let r = train_passcode(
-        &mut m, &g.matrix, &g.targets, &quick_cfg(tol), &sim,
-        PasscodeMode::Atomic, |_, _, _, _| false,
-    );
-    objs.push(("passcode".into(), r.trace.final_objective().unwrap()));
+    // every engine through the one facade — same model, same data
+    let engines: Vec<Box<dyn Solver>> = vec![
+        Box::new(Hthc::new()),
+        Box::new(SeqThreshold),
+        Box::new(Omp { wild: false }),
+        Box::new(Passcode { mode: PasscodeMode::Atomic }),
+    ];
+    for engine in engines {
+        let name = engine.name();
+        let mut m = Lasso::new(0.4);
+        let r = Trainer::new()
+            .solver_boxed(engine)
+            .config(quick_cfg(tol))
+            .fit_with(&mut m, &g.matrix, &g.targets, &sim);
+        objs.push((name.into(), r.trace.final_objective().unwrap()));
+    }
 
     let best = objs.iter().map(|&(_, o)| o).fold(f64::INFINITY, f64::min);
     for (name, obj) in &objs {
@@ -147,9 +159,9 @@ fn wild_breaks_primal_dual_consistency_atomic_does_not() {
     let mut cfg = quick_cfg(0.0);
     cfg.max_epochs = 30;
     cfg.t_b = 4; // more concurrency -> more lost updates for wild
-    let drift = |mode: OmpMode| {
+    let drift = |wild: bool| {
         let mut m = Lasso::new(0.2);
-        let r = train_omp(&mut m, &g.matrix, &g.targets, &cfg, &sim, mode);
+        let r = fit(Omp { wild }, cfg.clone(), &mut m, &g.matrix, &g.targets, &sim);
         let v2 = g.matrix.matvec_alpha(&r.alpha);
         r.v
             .iter()
@@ -157,14 +169,14 @@ fn wild_breaks_primal_dual_consistency_atomic_does_not() {
             .map(|(a, b)| (a - b).abs() as f64)
             .sum::<f64>()
     };
-    let atomic_drift = drift(OmpMode::Atomic);
+    let atomic_drift = drift(false);
     assert!(
         atomic_drift < 1e-1,
         "atomic drift should be fp-noise only: {atomic_drift}"
     );
     // wild drift is usually large; on a 1-core host races may be rare,
     // so only assert the *ordering*, not a magnitude.
-    let wild_drift = drift(OmpMode::Wild);
+    let wild_drift = drift(true);
     assert!(
         wild_drift >= atomic_drift * 0.9,
         "wild ({wild_drift}) should not be cleaner than atomic ({atomic_drift})"
@@ -179,9 +191,8 @@ fn tier_traffic_separation() {
     let sim = TierSim::default();
     let mut cfg = quick_cfg(0.0);
     cfg.max_epochs = 10;
-    let solver = HthcSolver::new(cfg);
     let mut model = Lasso::new(0.4);
-    let _ = solver.train(&mut model, &g.matrix, &g.targets, &sim);
+    let _ = fit(Hthc::new(), cfg, &mut model, &g.matrix, &g.targets, &sim);
     let slow = sim.stats(Tier::Slow);
     let fast = sim.stats(Tier::Fast);
     assert!(slow.read_bytes > 0, "A must stream the full matrix from DRAM");
@@ -198,9 +209,8 @@ fn importance_selection_converges() {
     let tol = rel_tol(&model, g.d(), g.n(), &g.targets, 1e-3);
     let mut cfg = quick_cfg(tol);
     cfg.selection = Selection::Importance;
-    let solver = HthcSolver::new(cfg);
     let sim = TierSim::default();
-    let res = solver.train(&mut model, &g.matrix, &g.targets, &sim);
+    let res = fit(Hthc::new(), cfg, &mut model, &g.matrix, &g.targets, &sim);
     assert!(res.converged, "{}", res.summary());
 }
 
@@ -224,9 +234,8 @@ fn zero_columns_are_handled() {
     let mut model = Lasso::new(0.1);
     let mut cfg = quick_cfg(0.0);
     cfg.max_epochs = 50;
-    let solver = HthcSolver::new(cfg);
     let sim = TierSim::default();
-    let res = solver.train(&mut model, &matrix, &y, &sim);
+    let res = fit(Hthc::new(), cfg, &mut model, &matrix, &y, &sim);
     assert!(res.alpha.iter().all(|a| a.is_finite()));
     assert!(res.v.iter().all(|v| v.is_finite()));
     // zero columns never move
@@ -252,8 +261,7 @@ fn gap_upper_bounds_suboptimality() {
     let mut cfg = quick_cfg(0.0);
     cfg.max_epochs = 120;
     cfg.eval_every = 10;
-    let solver = HthcSolver::new(cfg);
-    let res = solver.train(&mut model, &g.matrix, &g.targets, &sim);
+    let res = fit(Hthc::new(), cfg, &mut model, &g.matrix, &g.targets, &sim);
     for p in &res.trace.points {
         let subopt = p.objective - opt;
         assert!(

@@ -1,0 +1,238 @@
+//! Tests for the unified `solver` API: CLI parity (`hthc train` flags
+//! and builder calls must assemble the same `Trainer`), a smoke matrix
+//! running every `Solver` impl through one shared harness, and the
+//! Trainer-level features (warm starts, epoch callbacks) that the
+//! redesign made engine-agnostic.
+
+use hthc::baselines::PasscodeMode;
+use hthc::coordinator::Selection;
+use hthc::data::generator::{generate, DatasetKind, Family};
+use hthc::glm::Lasso;
+use hthc::memory::TierSim;
+use hthc::solver::{
+    by_name, cli, Hthc, Omp, Passcode, SeqThreshold, Sgd, Solver, StopWhen, Trainer,
+};
+use hthc::util::Args;
+
+fn args(s: &str) -> Args {
+    Args::parse(s.split_whitespace().map(|t| t.to_string()))
+}
+
+// ---------------------------------------------------------------------------
+// CLI parity
+// ---------------------------------------------------------------------------
+
+/// The flags accepted by `hthc train` must build exactly the Trainer the
+/// builder calls produce — one source of truth for the configuration.
+#[test]
+fn cli_flags_match_builder_calls() {
+    let cli_trainer = cli::trainer_from_args(&args(
+        "--solver st --t-a 3 --t-b 2 --v-b 2 --batch 0.1 --selection random \
+         --tol 1e-4 --epochs 77 --timeout 9 --eval-every 3 --seed 7",
+    ))
+    .unwrap();
+    let built = Trainer::new()
+        .solver(SeqThreshold)
+        .threads(3, 2, 2)
+        .batch_frac(0.1)
+        .selection(Selection::Random)
+        .seed(7)
+        .stop_when(
+            StopWhen::gap_below(1e-4)
+                .max_epochs(77)
+                .timeout_secs(9.0)
+                .eval_every(3),
+        );
+    assert_eq!(cli_trainer.cfg(), built.cfg());
+    assert_eq!(cli_trainer.solver_ref().name(), built.solver_ref().name());
+}
+
+#[test]
+fn cli_defaults_match_builder_defaults() {
+    let cli_trainer = cli::trainer_from_args(&args("")).unwrap();
+    let built = Trainer::new();
+    assert_eq!(cli_trainer.cfg(), built.cfg());
+    assert_eq!(cli_trainer.solver_ref().name(), built.solver_ref().name());
+}
+
+#[test]
+fn cli_solver_flag_selects_every_engine() {
+    for (flag, want) in [
+        ("hthc", "hthc"),
+        ("st", "st"),
+        ("omp", "omp"),
+        ("omp-wild", "omp-wild"),
+        ("passcode", "passcode-atomic"),
+        ("passcode-wild", "passcode-wild"),
+        ("sgd", "sgd"),
+    ] {
+        let t = cli::trainer_from_args(&args(&format!("--solver {flag}"))).unwrap();
+        assert_eq!(t.solver_ref().name(), want, "--solver {flag}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Solver matrix smoke: every engine through one shared harness
+// ---------------------------------------------------------------------------
+
+/// Every `Solver` impl runs on the tiny problem through the same
+/// harness and returns a well-formed `FitReport`.
+#[test]
+fn solver_matrix_smoke() {
+    let g = generate(DatasetKind::Tiny, Family::Regression, 1.0, 4001);
+    let engines: Vec<Box<dyn Solver>> = vec![
+        Box::new(Hthc::new()),
+        Box::new(SeqThreshold),
+        Box::new(Omp { wild: false }),
+        Box::new(Omp { wild: true }),
+        Box::new(Passcode { mode: PasscodeMode::Atomic }),
+        Box::new(Passcode { mode: PasscodeMode::Wild }),
+        Box::new(Sgd::default()),
+    ];
+    for engine in engines {
+        let name = engine.name();
+        let sim = TierSim::default();
+        let mut model = Lasso::new(0.3);
+        let res = Trainer::new()
+            .solver_boxed(engine)
+            .threads(1, 2, 1)
+            .batch_frac(0.5)
+            .stop_when(
+                StopWhen::gap_below(0.0)
+                    .max_epochs(3)
+                    .timeout_secs(20.0)
+                    .eval_every(1),
+            )
+            .fit_with(&mut model, &g.matrix, &g.targets, &sim);
+        assert_eq!(res.solver, name, "report is tagged with the engine");
+        assert!(res.epochs >= 1, "{name}: must run");
+        assert!(!res.trace.points.is_empty(), "{name}: must trace");
+        assert_eq!(res.alpha.len(), g.n(), "{name}: iterate length");
+        assert_eq!(res.v.len(), g.d(), "{name}: v length");
+        assert!(res.alpha.iter().all(|a| a.is_finite()), "{name}: finite");
+        // the report's summary renders without panicking
+        let _ = res.summary();
+    }
+}
+
+/// `by_name` and the struct construction paths agree.
+#[test]
+fn by_name_matches_structs() {
+    for name in ["hthc", "st", "omp", "omp-wild", "passcode-atomic", "passcode-wild", "sgd"] {
+        assert_eq!(by_name(name).unwrap().name(), name);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Trainer-level features, engine-agnostic
+// ---------------------------------------------------------------------------
+
+/// Warm-starting from a converged iterate must make the next run's
+/// first evaluation at least as good as a cold run's.
+#[test]
+fn warm_start_resumes_from_prior_iterate() {
+    let g = generate(DatasetKind::Tiny, Family::Regression, 1.0, 4002);
+    let sim = TierSim::default();
+    let stop = StopWhen::gap_below(0.0).max_epochs(40).eval_every(1).timeout_secs(20.0);
+
+    let mut model = Lasso::new(0.3);
+    let first = Trainer::new()
+        .threads(1, 1, 1)
+        .stop_when(stop)
+        .fit_with(&mut model, &g.matrix, &g.targets, &sim);
+    let first_final = first.trace.final_objective().unwrap();
+    let first_initial = first.trace.points.first().unwrap().objective;
+    assert!(first_final < first_initial);
+
+    let mut model2 = Lasso::new(0.3);
+    let resumed = Trainer::new()
+        .threads(1, 1, 1)
+        .stop_when(StopWhen::gap_below(0.0).max_epochs(2).eval_every(1).timeout_secs(20.0))
+        .warm_start(first.alpha.clone())
+        .fit_with(&mut model2, &g.matrix, &g.targets, &sim);
+    let resumed_first = resumed.trace.points.first().unwrap().objective;
+    assert!(
+        resumed_first <= first_final * 1.01 + 1e-9,
+        "warm start must begin near the previous optimum: {resumed_first} vs {first_final}"
+    );
+}
+
+/// Warm start works on the baselines too (they previously always
+/// cold-started).
+#[test]
+fn warm_start_on_st_baseline() {
+    let g = generate(DatasetKind::Tiny, Family::Regression, 1.0, 4003);
+    let sim = TierSim::default();
+    let mut model = Lasso::new(0.3);
+    let run = |warm: Option<Vec<f32>>, model: &mut Lasso| {
+        let mut t = Trainer::new()
+            .solver(SeqThreshold)
+            .threads(1, 1, 1)
+            .stop_when(StopWhen::gap_below(0.0).max_epochs(25).eval_every(1).timeout_secs(20.0));
+        if let Some(a) = warm {
+            t = t.warm_start(a);
+        }
+        t.fit_with(model, &g.matrix, &g.targets, &sim)
+    };
+    let first = run(None, &mut model);
+    let mut model2 = Lasso::new(0.3);
+    let resumed = run(Some(first.alpha.clone()), &mut model2);
+    let cold_initial = first.trace.points.first().unwrap().objective;
+    let warm_initial = resumed.trace.points.first().unwrap().objective;
+    assert!(
+        warm_initial < cold_initial,
+        "warm ST start must beat the cold start: {warm_initial} vs {cold_initial}"
+    );
+}
+
+/// The per-epoch callback fires on every engine and can stop the run.
+#[test]
+fn on_epoch_callback_stops_any_engine() {
+    let g = generate(DatasetKind::Tiny, Family::Regression, 1.0, 4004);
+    let engines: Vec<Box<dyn Solver>> = vec![
+        Box::new(Hthc::new()),
+        Box::new(SeqThreshold),
+        Box::new(Omp { wild: false }),
+        Box::new(Passcode { mode: PasscodeMode::Atomic }),
+        Box::new(Sgd::default()),
+    ];
+    for engine in engines {
+        let name = engine.name();
+        let sim = TierSim::default();
+        let mut model = Lasso::new(0.3);
+        let mut seen = 0usize;
+        let res = Trainer::new()
+            .solver_boxed(engine)
+            .threads(1, 2, 1)
+            .stop_when(
+                StopWhen::gap_below(0.0).max_epochs(500).eval_every(1).timeout_secs(30.0),
+            )
+            .on_epoch(|ev| {
+                assert_eq!(ev.solver, name);
+                assert!(ev.epoch >= 1);
+                seen += 1;
+                seen >= 2 // stop after the second evaluation
+            })
+            .fit_with(&mut model, &g.matrix, &g.targets, &sim);
+        assert!(res.converged, "{name}: callback stop marks convergence");
+        assert!(res.epochs <= 4, "{name}: stopped early ({} epochs)", res.epochs);
+    }
+}
+
+/// Shared stopping rules: the epoch cap binds every engine.
+#[test]
+fn epoch_cap_binds_every_engine() {
+    let g = generate(DatasetKind::Tiny, Family::Regression, 1.0, 4005);
+    for name in ["hthc", "st", "omp", "passcode-atomic", "sgd"] {
+        let sim = TierSim::default();
+        let mut model = Lasso::new(0.3);
+        let res = Trainer::new()
+            .solver_boxed(by_name(name).unwrap())
+            .threads(1, 1, 1)
+            .batch_frac(0.5)
+            .stop_when(StopWhen::gap_below(0.0).max_epochs(2).eval_every(1).timeout_secs(20.0))
+            .fit_with(&mut model, &g.matrix, &g.targets, &sim);
+        assert_eq!(res.epochs, 2, "{name}");
+        assert!(!res.converged, "{name}: gap_tol 0 must not converge");
+    }
+}
