@@ -6,28 +6,206 @@
 //! native loop.  Before/after numbers from this harness are recorded in
 //! EXPERIMENTS.md §Perf.
 
+use hthc::bench_support::BenchJson;
 use hthc::coordinator::{selection, SharedVector};
-use hthc::data::dense::dot_f32;
 use hthc::data::{ColumnOps, DenseMatrix, QuantizedMatrix, SparseMatrix};
+use hthc::kernels::{self, Backend, QGROUP};
 use hthc::metrics::Table;
 use hthc::threadpool::SpinBarrier;
 use hthc::util::timer::{bench_median, KNL_HZ};
 use hthc::util::{Rng, Timer};
 
+/// Per-kernel scalar-vs-dispatched microbenchmarks.  Records results
+/// into the bench JSON (`target/bench-json/perf_hotpath.json`) so CI
+/// and EXPERIMENTS.md have machine-readable throughput + speedups.
+fn bench_kernel_matrix(rng: &mut Rng, json: &mut BenchJson) {
+    let dispatched = kernels::backend();
+    println!(
+        "kernel dispatch: {} (override with RUST_PALLAS_KERNELS=scalar|simd|portable|avx2)\n",
+        dispatched.name()
+    );
+    if !kernels::avx2_available() {
+        json.note(
+            "host lacks AVX2+FMA: dispatched backend is the portable auto-vectorized \
+             path, so the dense-dot >= 1.5x speedup target is waived on this machine",
+        );
+    }
+    if dispatched == Backend::Scalar {
+        json.note(
+            "RUST_PALLAS_KERNELS=scalar: dispatched == scalar baseline, speedups are ~1.0 \
+             by construction (A/B control run)",
+        );
+    }
+
+    let mut t = Table::new(
+        "kernels: scalar vs dispatched throughput",
+        &["kernel", "scalar GB/s", "dispatched GB/s", "speedup"],
+    );
+    let mut push = |json: &mut BenchJson, name: &str, bytes: f64, scalar: f64, disp: f64| {
+        json.record(name, bytes, scalar, disp);
+        let r = json.records().last().unwrap();
+        t.row(vec![
+            name.to_string(),
+            format!("{:.2}", r.scalar_gbs()),
+            format!("{:.2}", r.dispatched_gbs()),
+            format!("{:.2}x", r.speedup()),
+        ]);
+    };
+
+    // dense kernels at d = 100k (L2-resident streams)
+    let d = 100_000usize;
+    let a: Vec<f32> = (0..d).map(|_| rng.normal()).collect();
+    let b: Vec<f32> = (0..d).map(|_| rng.normal()).collect();
+    {
+        let mut acc = 0.0f32;
+        let (scal, _) =
+            bench_median(|| acc += kernels::dot_with(Backend::Scalar, &a, &b), 0.1, 5_000);
+        let (disp, _) = bench_median(|| acc += kernels::dot(&a, &b), 0.1, 5_000);
+        std::hint::black_box(acc);
+        push(json, "dense_dot", (d * 8) as f64, scal, disp);
+    }
+    {
+        let mut v = b.clone();
+        let (scal, _) =
+            bench_median(|| kernels::axpy_with(Backend::Scalar, 1e-7, &a, &mut v), 0.1, 5_000);
+        let (disp, _) = bench_median(|| kernels::axpy(1e-7, &a, &mut v), 0.1, 5_000);
+        std::hint::black_box(v[0]);
+        push(json, "dense_axpy", (d * 12) as f64, scal, disp);
+    }
+    {
+        let mut acc = 0.0f32;
+        let (scal, _) =
+            bench_median(|| acc += kernels::sq_norm_with(Backend::Scalar, &a), 0.1, 5_000);
+        let (disp, _) = bench_median(|| acc += kernels::sq_norm(&a), 0.1, 5_000);
+        std::hint::black_box(acc);
+        push(json, "dense_sq_norm", (d * 4) as f64, scal, disp);
+    }
+    {
+        let mut acc = (0.0f32, 0.0f32);
+        let (scal, _) = bench_median(
+            || {
+                let (x, y) = kernels::dot_sq_norm_with(Backend::Scalar, &a, &b);
+                acc.0 += x;
+                acc.1 += y;
+            },
+            0.1,
+            5_000,
+        );
+        let (disp, _) = bench_median(
+            || {
+                let (x, y) = kernels::dot_sq_norm(&a, &b);
+                acc.0 += x;
+                acc.1 += y;
+            },
+            0.1,
+            5_000,
+        );
+        std::hint::black_box(acc);
+        push(json, "dense_dot_sq_norm", (d * 8) as f64, scal, disp);
+    }
+
+    // sparse kernels: 2k nnz gathered over a 100k-row vector
+    {
+        let nnz = 2_000usize;
+        let mut rows: Vec<u32> =
+            rng.sample_distinct(d, nnz).into_iter().map(|r| r as u32).collect();
+        rows.sort_unstable();
+        let vals: Vec<f32> = (0..nnz).map(|_| rng.normal()).collect();
+        let w: Vec<f32> = (0..d).map(|_| rng.normal()).collect();
+        let mut acc = 0.0f32;
+        let (scal, _) = bench_median(
+            || acc += kernels::sparse_dot_with(Backend::Scalar, &rows, &vals, &w),
+            0.1,
+            20_000,
+        );
+        let (disp, _) = bench_median(|| acc += kernels::sparse_dot(&rows, &vals, &w), 0.1, 20_000);
+        std::hint::black_box(acc);
+        push(json, "sparse_dot", (nnz * 12) as f64, scal, disp);
+
+        let mut v = w.clone();
+        let (scal, _) = bench_median(
+            || kernels::sparse_axpy_with(Backend::Scalar, &rows, &vals, 1e-7, &mut v),
+            0.1,
+            20_000,
+        );
+        let (disp, _) =
+            bench_median(|| kernels::sparse_axpy(&rows, &vals, 1e-7, &mut v), 0.1, 20_000);
+        std::hint::black_box(v[0]);
+        push(json, "sparse_axpy", (nnz * 12) as f64, scal, disp);
+    }
+
+    // quantized kernels: one 64k-row column (65_536/QGROUP = 1024 scale groups)
+    {
+        let dq = 65_536usize;
+        let data: Vec<f32> = (0..dq).map(|_| rng.normal()).collect();
+        let dm = DenseMatrix::from_col_major(dq, 1, data);
+        let qm = QuantizedMatrix::from_dense(&dm);
+        let (packed, scales) = qm.col_packed(0);
+        let w: Vec<f32> = (0..dq).map(|_| rng.normal()).collect();
+        let bytes = (dq / 2 + (dq / QGROUP) * 4 + dq * 4) as f64; // packed + scales + w
+        let mut acc = 0.0f32;
+        let (scal, _) = bench_median(
+            || acc += kernels::quant_dot_range_with(Backend::Scalar, packed, scales, &w, 0, dq),
+            0.1,
+            10_000,
+        );
+        let (disp, _) = bench_median(
+            || acc += kernels::quant_dot_range(packed, scales, &w, 0, dq),
+            0.1,
+            10_000,
+        );
+        std::hint::black_box(acc);
+        push(json, "quant_dot", bytes, scal, disp);
+
+        let mut v = w.clone();
+        let (scal, _) = bench_median(
+            || kernels::quant_axpy_with(Backend::Scalar, packed, scales, 1e-7, &mut v),
+            0.1,
+            10_000,
+        );
+        let (disp, _) =
+            bench_median(|| kernels::quant_axpy(packed, scales, 1e-7, &mut v), 0.1, 10_000);
+        std::hint::black_box(v[0]);
+        push(json, "quant_axpy", bytes + (dq * 4) as f64, scal, disp);
+    }
+
+    t.print();
+}
+
 fn main() {
     println!("§Perf hot-path microbenchmarks\n");
     let mut rng = Rng::new(424242);
 
+    // ---- kernel layer: scalar vs dispatched -----------------------------
+    let mut json = BenchJson::new("perf_hotpath");
+    bench_kernel_matrix(&mut rng, &mut json);
+    let dense_speedup = json
+        .records()
+        .iter()
+        .find(|r| r.kernel == "dense_dot")
+        .map(|r| r.speedup());
+    if let Some(s) = dense_speedup {
+        if s < 1.5 && kernels::backend() != Backend::Scalar {
+            json.note(&format!(
+                "dense_dot dispatched speedup {s:.2}x is below the 1.5x target on this host"
+            ));
+        }
+    }
+    match json.save() {
+        Ok(path) => println!("bench JSON -> {}\n", path.display()),
+        Err(e) => println!("(bench JSON not written: {e})\n"),
+    }
+
     // ---- dense dot -----------------------------------------------------
     let mut t = Table::new(
-        "dense dot_f32 (task A/B inner product)",
+        "dense dot (task A/B inner product, dispatched kernel)",
         &["d", "GB/s", "flops/cycle@1.5GHz", "ns/call"],
     );
     for &d in &[1_000usize, 10_000, 100_000, 1_000_000] {
         let a: Vec<f32> = (0..d).map(|_| rng.normal()).collect();
         let b: Vec<f32> = (0..d).map(|_| rng.normal()).collect();
         let mut acc = 0.0f32;
-        let (med, _) = bench_median(|| acc += dot_f32(&a, &b), 0.15, 10_000);
+        let (med, _) = bench_median(|| acc += kernels::dot(&a, &b), 0.15, 10_000);
         std::hint::black_box(acc);
         t.row(vec![
             d.to_string(),
@@ -55,7 +233,7 @@ fn main() {
             10_000,
         );
         let mut acc2 = 0.0f32;
-        let (med_plain, _) = bench_median(|| acc2 += dot_f32(&col, &plain), 0.1, 10_000);
+        let (med_plain, _) = bench_median(|| acc2 += kernels::dot(&col, &plain), 0.1, 10_000);
         std::hint::black_box((acc, acc2));
         t.row(vec![
             d.to_string(),

@@ -15,21 +15,14 @@
 
 //! All four run through the unified [`crate::solver`] API
 //! ([`crate::solver::SeqThreshold`], [`crate::solver::Omp`],
-//! [`crate::solver::Passcode`], [`crate::solver::Sgd`]); the `train_*`
-//! free functions remain as deprecated shims for one release.
+//! [`crate::solver::Passcode`], [`crate::solver::Sgd`]).  The old
+//! `train_*` free-function shims served their one deprecation release
+//! and are gone.
 
 pub mod omp;
 pub mod passcode;
 pub mod sgd;
 pub mod st;
 
-#[allow(deprecated)]
-pub use omp::train_omp;
 pub use omp::OmpMode;
-#[allow(deprecated)]
-pub use passcode::train_passcode;
 pub use passcode::PasscodeMode;
-#[allow(deprecated)]
-pub use sgd::train_sgd;
-#[allow(deprecated)]
-pub use st::train_st;

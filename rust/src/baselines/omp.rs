@@ -12,10 +12,9 @@
 //! *neighborhood* of the optimum and its computed "gap" is unreliable
 //! (the paper's suboptimality plateaus, Fig. 5).
 
-use crate::coordinator::{HthcConfig, SharedVector};
+use crate::coordinator::SharedVector;
 use crate::data::Matrix;
-use crate::glm::{self, GlmModel};
-use crate::memory::TierSim;
+use crate::glm;
 use crate::metrics::ConvergenceTrace;
 use crate::solver::{keys, notify_epoch, EpochEvent, Extras, FitReport, Problem};
 use crate::util::{Rng, Timer};
@@ -27,20 +26,6 @@ pub enum OmpMode {
     Atomic,
     /// No synchronization at all (lost updates allowed).
     Wild,
-}
-
-/// Train the OMP-style baseline (legacy shim).
-#[deprecated(note = "use solver::Trainer with solver::Omp { wild }")]
-pub fn train_omp(
-    model: &mut dyn GlmModel,
-    data: &Matrix,
-    y: &[f32],
-    cfg: &HthcConfig,
-    sim: &TierSim,
-    mode: OmpMode,
-) -> crate::coordinator::TrainResult {
-    let mut p = Problem::new(model, data, y, sim, cfg.clone());
-    fit(&mut p, mode).into_train_result()
 }
 
 /// The OMP engine loop over a [`Problem`] (entered via
@@ -118,22 +103,17 @@ pub(crate) fn fit(p: &mut Problem<'_>, mode: OmpMode) -> FitReport {
                     if delta != 0.0 {
                         alpha.write(j, a + delta);
                         // per-element updates — atomic or wild
+                        let sink = |r: usize, upd: f32| apply(&v, r, upd, mode);
                         match data {
                             Matrix::Dense(m) => {
-                                for (r, &x) in m.col(j).iter().enumerate() {
-                                    apply(&v, r, delta * x, mode);
-                                }
+                                crate::kernels::scaled_scatter(m.col(j), delta, sink);
                             }
                             Matrix::Sparse(m) => {
                                 let (rows, vals) = m.col(j);
-                                for (&r, &x) in rows.iter().zip(vals) {
-                                    apply(&v, r as usize, delta * x, mode);
-                                }
+                                crate::kernels::scaled_scatter_sparse(rows, vals, delta, sink);
                             }
                             Matrix::Quantized(m) => {
-                                for (r, &x) in m.col_dense(j).iter().enumerate() {
-                                    apply(&v, r, delta * x, mode);
-                                }
+                                crate::kernels::scaled_scatter(&m.col_dense(j), delta, sink);
                             }
                         }
                     }
@@ -148,9 +128,7 @@ pub(crate) fn fit(p: &mut Problem<'_>, mode: OmpMode) -> FitReport {
         // with respect to B — no concurrent heterogeneous tasks)
         let v_snap = v.snapshot();
         let mut w = vec![0.0f32; d];
-        for r in 0..d {
-            w[r] = kind.w_of(v_snap[r], y[r]);
-        }
+        crate::kernels::map2_into(&mut w, &v_snap, y, |vj, yj| kind.w_of(vj, yj));
         let a_now = alpha.snapshot();
         let next_a = AtomicUsize::new(0);
         let z_cell: Vec<std::sync::atomic::AtomicU32> =
@@ -242,11 +220,12 @@ fn apply(v: &SharedVector, r: usize, x: f32, mode: OmpMode) {
 
 #[cfg(test)]
 mod tests {
-    #![allow(deprecated)] // the shim must stay faithful to solver::Trainer
-
     use super::*;
+    use crate::coordinator::HthcConfig;
     use crate::data::generator::{generate, DatasetKind, Family};
     use crate::glm::Lasso;
+    use crate::memory::TierSim;
+    use crate::solver::{Omp, Trainer};
 
     fn cfg(gap_tol: f64) -> HthcConfig {
         HthcConfig {
@@ -266,14 +245,26 @@ mod tests {
         }
     }
 
+    fn fit_omp(
+        cfg: HthcConfig,
+        model: &mut Lasso,
+        g: &crate::data::GeneratedDataset,
+        wild: bool,
+    ) -> FitReport {
+        let sim = TierSim::default();
+        Trainer::new()
+            .solver(Omp { wild })
+            .config(cfg)
+            .fit_with(model, &g.matrix, &g.targets, &sim)
+    }
+
     #[test]
     fn omp_atomic_converges_and_v_consistent() {
         let g = generate(DatasetKind::Tiny, Family::Regression, 1.0, 131);
         let mut model = Lasso::new(0.5);
-        let sim = TierSim::default();
         let obj0 = model.objective(&vec![0.0; g.d()], &g.targets, &vec![0.0; g.n()]);
         let tol = 1e-4 * obj0.abs().max(1.0);
-        let res = train_omp(&mut model, &g.matrix, &g.targets, &cfg(tol), &sim, OmpMode::Atomic);
+        let res = fit_omp(cfg(tol), &mut model, &g, false);
         assert!(res.converged, "{}", res.summary());
         let v2 = match &g.matrix {
             Matrix::Dense(m) => m.matvec_alpha(&res.alpha),
@@ -288,8 +279,7 @@ mod tests {
     fn omp_wild_objective_still_decreases() {
         let g = generate(DatasetKind::Tiny, Family::Regression, 1.0, 132);
         let mut model = Lasso::new(0.5);
-        let sim = TierSim::default();
-        let res = train_omp(&mut model, &g.matrix, &g.targets, &cfg(1e-5), &sim, OmpMode::Wild);
+        let res = fit_omp(cfg(1e-5), &mut model, &g, true);
         let first = res.trace.points.first().unwrap().objective;
         let last = res.trace.final_objective().unwrap();
         assert!(last < first, "wild still optimizes approximately");

@@ -13,10 +13,9 @@
 //! Table IV benches SVM (PASSCoDe "does not support Lasso"); the
 //! implementation is model-generic anyway, keyed off [`crate::glm`].
 
-use crate::coordinator::{HthcConfig, SharedVector};
+use crate::coordinator::SharedVector;
 use crate::data::Matrix;
-use crate::glm::{self, GlmModel};
-use crate::memory::TierSim;
+use crate::glm;
 use crate::metrics::ConvergenceTrace;
 use crate::solver::{keys, notify_epoch, EpochEvent, Extras, FitReport, Problem};
 use crate::util::{Rng, Timer};
@@ -26,23 +25,6 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 pub enum PasscodeMode {
     Atomic,
     Wild,
-}
-
-/// Train with PASSCoDe (legacy shim).  The `on_epoch` hook maps onto
-/// the [`Problem`]-level epoch observer.
-#[deprecated(note = "use solver::Trainer with solver::Passcode (+ .on_epoch for hooks)")]
-pub fn train_passcode(
-    model: &mut dyn GlmModel,
-    data: &Matrix,
-    y: &[f32],
-    cfg: &HthcConfig,
-    sim: &TierSim,
-    mode: PasscodeMode,
-    mut on_epoch: impl FnMut(usize, f64, &[f32], &[f32]) -> bool,
-) -> crate::coordinator::TrainResult {
-    let mut cb = |ev: &EpochEvent<'_>| on_epoch(ev.epoch, ev.wall_secs, ev.v, ev.alpha);
-    let mut p = Problem::new(model, data, y, sim, cfg.clone()).on_epoch(&mut cb);
-    fit(&mut p, mode).into_train_result()
 }
 
 /// The PASSCoDe engine loop over a [`Problem`] (entered via
@@ -111,22 +93,17 @@ pub(crate) fn fit(p: &mut Problem<'_>, mode: PasscodeMode) -> FitReport {
                         continue;
                     }
                     alpha.write(j, a + delta);
+                    let sink = |r: usize, upd: f32| apply(&v, r, upd, mode);
                     match data {
                         Matrix::Dense(m) => {
-                            for (r, &x) in m.col(j).iter().enumerate() {
-                                apply(&v, r, delta * x, mode);
-                            }
+                            crate::kernels::scaled_scatter(m.col(j), delta, sink);
                         }
                         Matrix::Sparse(m) => {
                             let (rows, vals) = m.col(j);
-                            for (&r, &x) in rows.iter().zip(vals) {
-                                apply(&v, r as usize, delta * x, mode);
-                            }
+                            crate::kernels::scaled_scatter_sparse(rows, vals, delta, sink);
                         }
                         Matrix::Quantized(m) => {
-                            for (r, &x) in m.col_dense(j).iter().enumerate() {
-                                apply(&v, r, delta * x, mode);
-                            }
+                            crate::kernels::scaled_scatter(&m.col_dense(j), delta, sink);
                         }
                     }
                     sim.read(crate::memory::Tier::Slow, ops.col_bytes(j) * 2);
@@ -197,11 +174,12 @@ fn apply(v: &SharedVector, r: usize, x: f32, mode: PasscodeMode) {
 
 #[cfg(test)]
 mod tests {
-    #![allow(deprecated)] // the shim must stay faithful to solver::Trainer
-
     use super::*;
+    use crate::coordinator::HthcConfig;
     use crate::data::generator::{generate, DatasetKind, Family};
     use crate::glm::SvmDual;
+    use crate::memory::TierSim;
+    use crate::solver::{Passcode, Trainer};
 
     fn cfg() -> HthcConfig {
         HthcConfig {
@@ -220,20 +198,17 @@ mod tests {
         let mut model = SvmDual::new(1e-3, g.n());
         let sim = TierSim::default();
         let target = 0.95;
-        let res = train_passcode(
-            &mut model,
-            &g.matrix,
-            &g.targets,
-            &cfg(),
-            &sim,
-            PasscodeMode::Atomic,
-            |_, _, v_now, _| {
-                // stop once training accuracy crosses the target
+        // the Table IV time-to-accuracy probe: the engine-agnostic
+        // Trainer::on_epoch observer stops the run
+        let res = Trainer::new()
+            .solver(Passcode { mode: PasscodeMode::Atomic })
+            .config(cfg())
+            .on_epoch(|ev| {
                 let ops = g.matrix.as_ops();
-                let correct = (0..g.n()).filter(|&j| ops.dot(j, v_now) > 0.0).count();
+                let correct = (0..g.n()).filter(|&j| ops.dot(j, ev.v) > 0.0).count();
                 correct as f64 / g.n() as f64 >= target
-            },
-        );
+            })
+            .fit_with(&mut model, &g.matrix, &g.targets, &sim);
         assert!(res.converged, "{}", res.summary());
     }
 
@@ -242,10 +217,10 @@ mod tests {
         let g = generate(DatasetKind::Tiny, Family::Classification, 1.0, 142);
         let mut model = SvmDual::new(1e-3, g.n());
         let sim = TierSim::default();
-        let res = train_passcode(
-            &mut model, &g.matrix, &g.targets, &cfg(), &sim,
-            PasscodeMode::Wild, |_, _, _, _| false,
-        );
+        let res = Trainer::new()
+            .solver(Passcode { mode: PasscodeMode::Wild })
+            .config(cfg())
+            .fit_with(&mut model, &g.matrix, &g.targets, &sim);
         let first = res.trace.points.first().unwrap().objective;
         let last = res.trace.final_objective().unwrap();
         assert!(last < first);
@@ -258,10 +233,10 @@ mod tests {
         let sim = TierSim::default();
         let mut c = cfg();
         c.max_epochs = 10;
-        let res = train_passcode(
-            &mut model, &g.matrix, &g.targets, &c, &sim,
-            PasscodeMode::Atomic, |_, _, _, _| false,
-        );
+        let res = Trainer::new()
+            .solver(Passcode { mode: PasscodeMode::Atomic })
+            .config(c)
+            .fit_with(&mut model, &g.matrix, &g.targets, &sim);
         assert!(res.alpha.iter().all(|&a| (-1e-6..=1.0 + 1e-6).contains(&a)));
     }
 }

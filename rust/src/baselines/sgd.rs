@@ -11,10 +11,8 @@
 //! power decay; L1 is applied via truncated gradient (Langford et al.),
 //! the scheme VW uses for `--l1`.
 
-use crate::coordinator::HthcConfig;
 use crate::data::Matrix;
 use crate::glm::soft_threshold;
-use crate::memory::TierSim;
 use crate::metrics::ConvergenceTrace;
 use crate::solver::{keys, notify_epoch, EpochEvent, Extras, FitReport, Problem};
 use crate::util::{Rng, Timer};
@@ -67,30 +65,11 @@ impl RowCache {
     pub fn mean_squared_error(&self, beta: &[f32], targets: &[f32]) -> f64 {
         let mut sum = 0.0f64;
         for (row, &t) in self.rows.iter().zip(targets) {
-            let pred: f32 = row.iter().map(|&(j, x)| x * beta[j as usize]).sum();
-            let e = (pred - t) as f64;
+            let e = (crate::kernels::pair_dot(row, beta) - t) as f64;
             sum += e * e;
         }
         sum / self.rows.len().max(1) as f64
     }
-}
-
-/// Run SGD; returns (trace of MSE-vs-time, final beta) — legacy shim.
-#[deprecated(note = "use solver::Trainer with solver::Sgd { lam, mse_target }")]
-pub fn train_sgd(
-    data: &Matrix,
-    targets: &[f32],
-    lam: f32,
-    cfg: &HthcConfig,
-    sim: &TierSim,
-    mse_target: f64,
-) -> (ConvergenceTrace, Vec<f32>) {
-    // SGD is model-free (primal Lasso with its own lam); the Problem
-    // still carries a GLM instance for API uniformity.
-    let mut model = crate::glm::Lasso::new(lam);
-    let mut p = Problem::new(&mut model, data, targets, sim, cfg.clone());
-    let r = fit(&mut p, lam, mse_target);
-    (r.trace, r.alpha)
 }
 
 /// The SGD engine loop over a [`Problem`] (entered via
@@ -134,11 +113,11 @@ pub(crate) fn fit(p: &mut Problem<'_>, lam: f32, mse_target: f64) -> FitReport {
         for &r in &order {
             t += 1;
             let row = &cache.rows[r];
-            let pred: f32 = row.iter().map(|&(j, x)| x * beta[j as usize]).sum();
+            let pred = crate::kernels::pair_dot(row, &beta);
             let err = pred - targets[r];
             let eta = eta0 / (1.0 + eta0 * 0.01 * t as f32).sqrt();
             // row norm-normalized step (VW normalizes by feature scale)
-            let row_sq: f32 = row.iter().map(|&(_, x)| x * x).sum::<f32>().max(1e-6);
+            let row_sq = crate::kernels::pair_sq_norm(row).max(1e-6);
             let step = eta * err / row_sq;
             for &(j, x) in row {
                 let bj = &mut beta[j as usize];
@@ -155,11 +134,7 @@ pub(crate) fn fit(p: &mut Problem<'_>, lam: f32, mse_target: f64) -> FitReport {
             // MSE and the event's v (avoids a second full matvec)
             let (mse, preds) = if on_epoch.is_some() {
                 let preds = data.matvec_alpha(&beta);
-                let sum: f64 = preds
-                    .iter()
-                    .zip(targets)
-                    .map(|(&p, &t)| ((p - t) as f64).powi(2))
-                    .sum();
+                let sum = crate::kernels::sq_err_f64(&preds, targets);
                 (sum / targets.len().max(1) as f64, Some(preds))
             } else {
                 (cache.mean_squared_error(&beta, targets), None)
@@ -207,10 +182,27 @@ pub(crate) fn fit(p: &mut Problem<'_>, lam: f32, mse_target: f64) -> FitReport {
 
 #[cfg(test)]
 mod tests {
-    #![allow(deprecated)] // the shim must stay faithful to solver::Trainer
-
     use super::*;
+    use crate::coordinator::HthcConfig;
     use crate::data::generator::{generate, DatasetKind, Family};
+    use crate::memory::TierSim;
+    use crate::solver::{Sgd, Trainer};
+
+    /// Run the SGD engine through the Trainer facade; the problem's GLM
+    /// model is ignored by SGD (lam comes from the Sgd struct).
+    fn fit_sgd(
+        g: &crate::data::GeneratedDataset,
+        lam: f32,
+        mse_target: f64,
+        max_epochs: usize,
+    ) -> FitReport {
+        let sim = TierSim::default();
+        let mut model = crate::glm::Lasso::new(lam);
+        Trainer::new()
+            .solver(Sgd { lam, mse_target })
+            .config(HthcConfig { max_epochs, timeout_secs: 20.0, ..Default::default() })
+            .fit_with(&mut model, &g.matrix, &g.targets, &sim)
+    }
 
     #[test]
     fn row_cache_matches_matrix() {
@@ -235,21 +227,18 @@ mod tests {
     #[test]
     fn sgd_reduces_mse() {
         let g = generate(DatasetKind::Tiny, Family::Regression, 1.0, 152);
-        let cfg = HthcConfig { max_epochs: 60, timeout_secs: 20.0, ..Default::default() };
-        let sim = TierSim::default();
-        let (trace, beta) = train_sgd(&g.matrix, &g.targets, 1e-4, &cfg, &sim, 0.0);
-        let first = trace.points.first().unwrap().objective;
-        let last = trace.final_objective().unwrap();
+        let res = fit_sgd(&g, 1e-4, 0.0, 60);
+        let first = res.trace.points.first().unwrap().objective;
+        let last = res.trace.final_objective().unwrap();
         assert!(last < first * 0.5, "MSE {first} -> {last}");
-        assert_eq!(beta.len(), g.n());
+        assert_eq!(res.alpha.len(), g.n(), "alpha carries the primal beta");
     }
 
     #[test]
     fn mse_target_stops_early() {
         let g = generate(DatasetKind::Tiny, Family::Regression, 1.0, 153);
-        let cfg = HthcConfig { max_epochs: 1000, timeout_secs: 20.0, ..Default::default() };
-        let sim = TierSim::default();
-        let (trace, _) = train_sgd(&g.matrix, &g.targets, 1e-4, &cfg, &sim, 1e9);
-        assert_eq!(trace.points.len(), 1, "target met after first epoch");
+        let res = fit_sgd(&g, 1e-4, 1e9, 1000);
+        assert_eq!(res.trace.points.len(), 1, "target met after first epoch");
+        assert!(res.converged);
     }
 }

@@ -10,27 +10,12 @@
 //! Notably ST *skips* the `v += delta d_i` write when `delta == 0` —
 //! the effect that lets ST win on criteo-like sparse data (§V-B2).
 
-use crate::coordinator::{task_b, HthcConfig, SharedVector, WorkingSet};
-use crate::data::Matrix;
-use crate::glm::{self, GlmModel};
-use crate::memory::TierSim;
+use crate::coordinator::{task_b, SharedVector, WorkingSet};
+use crate::glm;
 use crate::metrics::ConvergenceTrace;
 use crate::solver::{keys, notify_epoch, EpochEvent, Extras, FitReport, Problem};
 use crate::threadpool::WorkerPool;
 use crate::util::{Rng, Timer};
-
-/// Train with the ST baseline (legacy shim).
-#[deprecated(note = "use solver::Trainer with solver::SeqThreshold")]
-pub fn train_st(
-    model: &mut dyn GlmModel,
-    data: &Matrix,
-    y: &[f32],
-    cfg: &HthcConfig,
-    sim: &TierSim,
-) -> crate::coordinator::TrainResult {
-    let mut p = Problem::new(model, data, y, sim, cfg.clone());
-    fit(&mut p).into_train_result()
-}
 
 /// The ST engine loop over a [`Problem`] (entered via
 /// [`crate::solver::SeqThreshold`]).  Uses `cfg.t_b`, `cfg.v_b`,
@@ -134,11 +119,11 @@ pub(crate) fn fit(p: &mut Problem<'_>) -> FitReport {
 
 #[cfg(test)]
 mod tests {
-    #![allow(deprecated)] // the shim must stay faithful to solver::Trainer
-
-    use super::*;
+    use crate::coordinator::HthcConfig;
     use crate::data::generator::{generate, DatasetKind, Family};
-    use crate::glm::{Lasso, SvmDual};
+    use crate::glm::{GlmModel, Lasso, SvmDual};
+    use crate::memory::TierSim;
+    use crate::solver::{FitReport, SeqThreshold, Trainer};
 
     fn cfg(gap_tol: f64) -> HthcConfig {
         HthcConfig {
@@ -150,6 +135,19 @@ mod tests {
             eval_every: 3,
             ..Default::default()
         }
+    }
+
+    /// Run the ST engine through the Trainer facade.
+    fn fit_st(
+        cfg: HthcConfig,
+        model: &mut dyn GlmModel,
+        g: &crate::data::GeneratedDataset,
+    ) -> FitReport {
+        let sim = TierSim::default();
+        Trainer::new()
+            .solver(SeqThreshold)
+            .config(cfg)
+            .fit_with(model, &g.matrix, &g.targets, &sim)
     }
 
     /// Relative tolerance (see coordinator::hthc tests).
@@ -166,13 +164,12 @@ mod tests {
     fn st_converges_lasso_dense() {
         let g = generate(DatasetKind::Tiny, Family::Regression, 1.0, 121);
         let mut model = Lasso::new(0.5);
-        let sim = TierSim::default();
         let tol = rel_tol(&model, &g, 1e-4);
-        let res = train_st(&mut model, &g.matrix, &g.targets, &cfg(tol), &sim);
+        let res = fit_st(cfg(tol), &mut model, &g);
         assert!(res.converged, "{}", res.summary());
         // every coordinate processed every epoch
         assert_eq!(
-            res.total_b_updates + res.total_b_zero_deltas,
+            res.b_updates() + res.b_zero_deltas(),
             (res.epochs * g.n()) as u64
         );
     }
@@ -181,8 +178,7 @@ mod tests {
     fn st_converges_svm() {
         let g = generate(DatasetKind::Tiny, Family::Classification, 1.0, 122);
         let mut model = SvmDual::new(1e-3, g.n());
-        let sim = TierSim::default();
-        let res = train_st(&mut model, &g.matrix, &g.targets, &cfg(1e-4), &sim);
+        let res = fit_st(cfg(1e-4), &mut model, &g);
         assert!(res.trace.final_gap().unwrap() < 1e-3, "{}", res.summary());
     }
 
@@ -192,15 +188,14 @@ mod tests {
         // axpys: the criteo effect (§V-B2).
         let g = generate(DatasetKind::News20Like, Family::Regression, 0.03, 123);
         let mut model = Lasso::new(5.0);
-        let sim = TierSim::default();
         let mut c = cfg(0.0);
         c.max_epochs = 5;
-        let res = train_st(&mut model, &g.matrix, &g.targets, &c, &sim);
+        let res = fit_st(c, &mut model, &g);
         assert!(
-            res.total_b_zero_deltas > res.total_b_updates,
+            res.b_zero_deltas() > res.b_updates(),
             "strong L1 should skip most: {} zero vs {} real",
-            res.total_b_zero_deltas,
-            res.total_b_updates
+            res.b_zero_deltas(),
+            res.b_updates()
         );
     }
 }

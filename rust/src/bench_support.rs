@@ -88,6 +88,150 @@ pub fn times_to(res: &FitReport, obj0: f64, rels: &[f64]) -> Vec<Option<f64>> {
     rels.iter().map(|r| res.trace.time_to_gap(r * obj0)).collect()
 }
 
+// ---------------------------------------------------------------------------
+// Bench JSON (dependency-free writer)
+// ---------------------------------------------------------------------------
+
+/// One kernel's scalar-vs-dispatched measurement.
+pub struct KernelRecord {
+    pub kernel: String,
+    /// Bytes a single call streams (for GB/s conversion).
+    pub bytes_per_call: f64,
+    pub scalar_secs: f64,
+    pub dispatched_secs: f64,
+}
+
+impl KernelRecord {
+    pub fn scalar_gbs(&self) -> f64 {
+        self.bytes_per_call / self.scalar_secs.max(1e-12) / 1e9
+    }
+
+    pub fn dispatched_gbs(&self) -> f64 {
+        self.bytes_per_call / self.dispatched_secs.max(1e-12) / 1e9
+    }
+
+    /// Throughput ratio dispatched / scalar.
+    pub fn speedup(&self) -> f64 {
+        self.scalar_secs / self.dispatched_secs.max(1e-12)
+    }
+}
+
+/// Machine-readable bench output: per-kernel scalar-vs-dispatched
+/// throughput plus free-form notes (e.g. "host lacks AVX2").  Written
+/// as JSON with a hand-rolled renderer — the crate is dependency-free.
+pub struct BenchJson {
+    bench: String,
+    backend: String,
+    records: Vec<KernelRecord>,
+    notes: Vec<String>,
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn json_num(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x:.6}")
+    } else {
+        "null".to_string()
+    }
+}
+
+impl BenchJson {
+    pub fn new(bench: &str) -> Self {
+        BenchJson {
+            bench: bench.to_string(),
+            backend: crate::kernels::backend().name().to_string(),
+            records: Vec::new(),
+            notes: Vec::new(),
+        }
+    }
+
+    /// Record one kernel's scalar-vs-dispatched timing.
+    pub fn record(
+        &mut self,
+        kernel: &str,
+        bytes_per_call: f64,
+        scalar_secs: f64,
+        dispatched_secs: f64,
+    ) {
+        self.records.push(KernelRecord {
+            kernel: kernel.to_string(),
+            bytes_per_call,
+            scalar_secs,
+            dispatched_secs,
+        });
+    }
+
+    /// Attach a free-form note (e.g. why a speedup target is waived).
+    pub fn note(&mut self, s: &str) {
+        self.notes.push(s.to_string());
+    }
+
+    pub fn records(&self) -> &[KernelRecord] {
+        &self.records
+    }
+
+    /// Render the JSON document.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str("{\n");
+        out.push_str(&format!("  \"bench\": \"{}\",\n", json_escape(&self.bench)));
+        out.push_str(&format!(
+            "  \"dispatched_backend\": \"{}\",\n",
+            json_escape(&self.backend)
+        ));
+        out.push_str("  \"kernels\": [\n");
+        for (i, r) in self.records.iter().enumerate() {
+            out.push_str(&format!(
+                "    {{\"kernel\": \"{}\", \"bytes_per_call\": {}, \
+                 \"scalar_gbs\": {}, \"dispatched_gbs\": {}, \"speedup\": {}}}{}\n",
+                json_escape(&r.kernel),
+                json_num(r.bytes_per_call),
+                json_num(r.scalar_gbs()),
+                json_num(r.dispatched_gbs()),
+                json_num(r.speedup()),
+                if i + 1 < self.records.len() { "," } else { "" },
+            ));
+        }
+        out.push_str("  ],\n");
+        out.push_str("  \"notes\": [");
+        for (i, n) in self.notes.iter().enumerate() {
+            if i > 0 {
+                out.push_str(", ");
+            }
+            out.push_str(&format!("\"{}\"", json_escape(n)));
+        }
+        out.push_str("]\n}\n");
+        out
+    }
+
+    /// Write to `$HTHC_BENCH_JSON_DIR` (default `target/bench-json/`)
+    /// as `<bench>.json`; returns the path.
+    pub fn save(&self) -> std::io::Result<std::path::PathBuf> {
+        let dir = std::env::var("HTHC_BENCH_JSON_DIR")
+            .map(std::path::PathBuf::from)
+            .unwrap_or_else(|_| std::path::PathBuf::from("target/bench-json"));
+        std::fs::create_dir_all(&dir)?;
+        let path = dir.join(format!("{}.json", self.bench));
+        std::fs::write(&path, self.render())?;
+        Ok(path)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -96,6 +240,36 @@ mod tests {
     fn scale_default_is_one() {
         // (cannot set env var safely in parallel tests; just check parse)
         assert!(bench_scale() > 0.0);
+    }
+
+    #[test]
+    fn bench_json_renders_valid_structure() {
+        let mut j = BenchJson::new("unit");
+        j.record("dense_dot", 800.0, 2e-6, 1e-6);
+        j.record("sparse \"dot\"", 96.0, 1e-6, 1e-6);
+        j.note("line1\nline2");
+        let s = j.render();
+        assert!(s.contains("\"bench\": \"unit\""));
+        assert!(s.contains("\"dispatched_backend\""));
+        assert!(s.contains("\"speedup\": 2.000000"), "{s}");
+        assert!(s.contains("sparse \\\"dot\\\""), "escaped: {s}");
+        assert!(s.contains("line1\\nline2"));
+        // crude balance check on the hand-rolled renderer
+        assert_eq!(s.matches('{').count(), s.matches('}').count());
+        assert_eq!(s.matches('[').count(), s.matches(']').count());
+    }
+
+    #[test]
+    fn kernel_record_throughput_math() {
+        let r = KernelRecord {
+            kernel: "k".into(),
+            bytes_per_call: 1e9,
+            scalar_secs: 1.0,
+            dispatched_secs: 0.5,
+        };
+        assert!((r.scalar_gbs() - 1.0).abs() < 1e-9);
+        assert!((r.dispatched_gbs() - 2.0).abs() < 1e-9);
+        assert!((r.speedup() - 2.0).abs() < 1e-9);
     }
 
     #[test]

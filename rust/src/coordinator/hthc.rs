@@ -22,8 +22,7 @@ use super::shared_vec::SharedVector;
 use super::working_set::WorkingSet;
 use super::{task_a, task_b};
 use crate::data::Matrix;
-use crate::glm::{self, GlmModel};
-use crate::memory::TierSim;
+use crate::glm;
 use crate::metrics::{ConvergenceTrace, PhaseTimes, StalenessHistogram};
 use crate::solver::{keys, notify_epoch, EpochEvent, Extras, FitReport, Problem};
 use crate::threadpool::WorkerPool;
@@ -49,47 +48,10 @@ pub trait GapBackend: Sync {
     fn block_len(&self) -> usize;
 }
 
-/// Outcome of a training run — the legacy result shape returned by the
-/// deprecated `train`/`train_with_backend`/`train_*` shims.  New code
-/// receives a [`FitReport`] from [`crate::solver::Solver::fit`].
-pub struct TrainResult {
-    pub alpha: Vec<f32>,
-    pub v: Vec<f32>,
-    pub trace: ConvergenceTrace,
-    pub epochs: usize,
-    /// Mean fraction of gap memory refreshed per epoch (paper wants
-    /// >= ~15%; §IV-F).
-    pub mean_refresh_frac: f64,
-    pub total_a_updates: u64,
-    pub total_b_updates: u64,
-    pub total_b_zero_deltas: u64,
-    pub wall_secs: f64,
-    /// True if stopped by reaching `gap_tol`.
-    pub converged: bool,
-    /// Where epoch time went (§Perf diagnostics).
-    pub phase_times: PhaseTimes,
-    /// Gap-memory staleness at the end of the run.
-    pub staleness: StalenessHistogram,
-}
-
-impl TrainResult {
-    pub fn summary(&self) -> String {
-        format!(
-            "epochs={} wall={} gap={:.3e} obj={:.6e} refreshed/epoch={:.1}% A-updates={} B-updates={} (zero-deltas {})",
-            self.epochs,
-            crate::util::fmt_secs(self.wall_secs),
-            self.trace.final_gap().unwrap_or(f64::NAN),
-            self.trace.final_objective().unwrap_or(f64::NAN),
-            100.0 * self.mean_refresh_frac,
-            self.total_a_updates,
-            self.total_b_updates,
-            self.total_b_zero_deltas,
-        )
-    }
-}
-
 /// The solver: owns the two pinned pools for the lifetime of a run
 /// (paper §IV-B: constant thread pools, no churn across epochs).
+/// Entered through [`crate::solver::Hthc`] / [`crate::solver::Trainer`];
+/// the one-release `train`/`train_with_backend` shims are gone.
 pub struct HthcSolver {
     pub config: HthcConfig,
     pool_a: WorkerPool,
@@ -102,33 +64,6 @@ impl HthcSolver {
         let pool_a = WorkerPool::with_name(config.t_a, "hthc-a");
         let pool_b = WorkerPool::with_name(config.t_b * config.v_b, "hthc-b");
         HthcSolver { config, pool_a, pool_b }
-    }
-
-    /// Train with the native task-A path.
-    #[deprecated(note = "use solver::Trainer (or solver::Hthc via Solver::fit)")]
-    pub fn train(
-        &self,
-        model: &mut dyn GlmModel,
-        data: &Matrix,
-        y: &[f32],
-        sim: &TierSim,
-    ) -> TrainResult {
-        let mut p = Problem::new(model, data, y, sim, self.config.clone());
-        self.fit_problem(&mut p, None).into_train_result()
-    }
-
-    /// Train with task A's gap sweeps offloaded to a PJRT backend.
-    #[deprecated(note = "use solver::Trainer with solver::Hthc::with_backend")]
-    pub fn train_with_backend(
-        &self,
-        model: &mut dyn GlmModel,
-        data: &Matrix,
-        y: &[f32],
-        sim: &TierSim,
-        backend: &dyn GapBackend,
-    ) -> TrainResult {
-        let mut p = Problem::new(model, data, y, sim, self.config.clone());
-        self.fit_problem(&mut p, Some(backend)).into_train_result()
     }
 
     /// The HTHC engine loop over a [`Problem`] (entered via
@@ -182,9 +117,7 @@ impl HthcSolver {
             // (2) snapshot w for task A
             let v_snap = v.snapshot();
             let mut w_snap = vec![0.0f32; d];
-            for r in 0..d {
-                w_snap[r] = kind.w_of(v_snap[r], y[r]);
-            }
+            crate::kernels::map2_into(&mut w_snap, &v_snap, y, |vj, yj| kind.w_of(vj, yj));
             phases.snapshot_secs += tp.secs();
 
             // (3) batch selection (first epoch: random — z still unknown)
@@ -349,24 +282,33 @@ fn run_a_offload(
 
 #[cfg(test)]
 mod tests {
-    // the deprecated train() shims are exercised on purpose: they must
-    // stay faithful to the solver::Trainer path for one release
-    #![allow(deprecated)]
-
     use super::*;
     use crate::data::generator::{generate, DatasetKind, Family};
-    use crate::glm::{Lasso, SvmDual};
+    use crate::glm::{GlmModel, Lasso, SvmDual};
+    use crate::memory::TierSim;
+    use crate::solver::{FitReport, Trainer};
 
     /// Relative convergence target: fp32 accumulation cannot reach
     /// absolute 1e-6 on objectives of O(1000); the paper's thresholds
     /// are likewise relative to each problem's scale.
-    fn rel_tol(model: &dyn crate::glm::GlmModel, g: &crate::data::GeneratedDataset, rel: f64) -> f64 {
+    fn rel_tol(model: &dyn GlmModel, g: &crate::data::GeneratedDataset, rel: f64) -> f64 {
         let obj0 = model.objective(&vec![0.0; g.d()], &g.targets, &vec![0.0; g.n()]);
         rel * obj0.abs().max(1.0)
     }
 
-    fn solver(t_a: usize, t_b: usize, v_b: usize, frac: f64, gap_tol: f64) -> HthcSolver {
-        HthcSolver::new(HthcConfig {
+    /// Run the HTHC engine through the Trainer facade (the only entry
+    /// point since the deprecated `train` shims were removed).
+    fn fit(
+        cfg: HthcConfig,
+        model: &mut dyn GlmModel,
+        g: &crate::data::GeneratedDataset,
+    ) -> FitReport {
+        let sim = TierSim::default();
+        Trainer::new().config(cfg).fit_with(model, &g.matrix, &g.targets, &sim)
+    }
+
+    fn cfg(t_a: usize, t_b: usize, v_b: usize, frac: f64, gap_tol: f64) -> HthcConfig {
+        HthcConfig {
             t_a,
             t_b,
             v_b,
@@ -381,17 +323,15 @@ mod tests {
             timeout_secs: 30.0,
             eval_every: 2,
             ..Default::default()
-        })
+        }
     }
 
     #[test]
     fn lasso_converges_on_dense_tiny() {
         let g = generate(DatasetKind::Tiny, Family::Regression, 1.0, 111);
         let mut model = Lasso::new(0.5);
-        let sim = TierSim::default();
         let tol = rel_tol(&model, &g, 1e-4);
-        let s = solver(2, 2, 1, 0.25, tol);
-        let res = s.train(&mut model, &g.matrix, &g.targets, &sim);
+        let res = fit(cfg(2, 2, 1, 0.25, tol), &mut model, &g);
         assert!(res.converged, "{}", res.summary());
         // v consistent with alpha at the end (locked updates lost nothing)
         let v2 = match &g.matrix {
@@ -401,7 +341,7 @@ mod tests {
         for (a, b) in res.v.iter().zip(&v2) {
             assert!((a - b).abs() < 1e-2 * b.abs().max(1.0));
         }
-        assert!(res.mean_refresh_frac > 0.0);
+        assert!(res.refresh_frac() > 0.0);
     }
 
     #[test]
@@ -409,9 +349,7 @@ mod tests {
         let g = generate(DatasetKind::Tiny, Family::Classification, 1.0, 112);
         let n = g.n();
         let mut model = SvmDual::new(1e-3, n);
-        let sim = TierSim::default();
-        let s = solver(2, 2, 2, 0.3, 1e-5);
-        let res = s.train(&mut model, &g.matrix, &g.targets, &sim);
+        let res = fit(cfg(2, 2, 2, 0.3, 1e-5), &mut model, &g);
         assert!(
             res.trace.final_gap().unwrap() < 1e-3,
             "{}", res.summary()
@@ -427,10 +365,8 @@ mod tests {
     fn sparse_dataset_trains() {
         let g = generate(DatasetKind::News20Like, Family::Regression, 0.04, 113);
         let mut model = Lasso::new(0.05);
-        let sim = TierSim::default();
         let tol = rel_tol(&model, &g, 1e-4);
-        let s = solver(2, 2, 1, 0.1, tol);
-        let res = s.train(&mut model, &g.matrix, &g.targets, &sim);
+        let res = fit(cfg(2, 2, 1, 0.1, tol), &mut model, &g);
         let first = res.trace.points.first().unwrap().objective;
         let last = res.trace.final_objective().unwrap();
         assert!(last < first, "objective must decrease: {first} -> {last}");
@@ -441,23 +377,25 @@ mod tests {
         // The paper's core claim, in miniature: with a small batch,
         // duality-gap selection needs fewer epochs than random.
         let g = generate(DatasetKind::Tiny, Family::Regression, 2.0, 114);
-        let sim = TierSim::default();
         let tol = rel_tol(&Lasso::new(0.3), &g, 1e-4);
         let run = |sel: Selection| {
             let mut model = Lasso::new(0.3);
-            let s = HthcSolver::new(HthcConfig {
-                t_a: 2,
-                t_b: 1,
-                v_b: 1,
-                batch_frac: 0.1,
-                selection: sel,
-                gap_tol: tol,
-                max_epochs: 2500,
-                eval_every: 1,
-                timeout_secs: 60.0,
-                ..Default::default()
-            });
-            let r = s.train(&mut model, &g.matrix, &g.targets, &sim);
+            let r = fit(
+                HthcConfig {
+                    t_a: 2,
+                    t_b: 1,
+                    v_b: 1,
+                    batch_frac: 0.1,
+                    selection: sel,
+                    gap_tol: tol,
+                    max_epochs: 2500,
+                    eval_every: 1,
+                    timeout_secs: 60.0,
+                    ..Default::default()
+                },
+                &mut model,
+                &g,
+            );
             assert!(r.converged, "{} {}", sel.name(), r.summary());
             r.epochs
         };
@@ -489,21 +427,23 @@ mod tests {
         // this asserts the integration is sound (no panic, convergence
         // behaviour intact) — the law itself is unit-tested above.
         let g = generate(DatasetKind::Tiny, Family::Regression, 2.0, 117);
-        let sim = TierSim::default();
         let mut model = Lasso::new(0.3);
-        let s = HthcSolver::new(HthcConfig {
-            t_a: 1,
-            t_b: 2,
-            v_b: 1,
-            batch_frac: 0.05,
-            adaptive_r_tilde: Some(0.15),
-            gap_tol: 0.0,
-            max_epochs: 60,
-            eval_every: 10,
-            timeout_secs: 30.0,
-            ..Default::default()
-        });
-        let res = s.train(&mut model, &g.matrix, &g.targets, &sim);
+        let res = fit(
+            HthcConfig {
+                t_a: 1,
+                t_b: 2,
+                v_b: 1,
+                batch_frac: 0.05,
+                adaptive_r_tilde: Some(0.15),
+                gap_tol: 0.0,
+                max_epochs: 60,
+                eval_every: 10,
+                timeout_secs: 30.0,
+                ..Default::default()
+            },
+            &mut model,
+            &g,
+        );
         assert_eq!(res.epochs, 60);
         let first = res.trace.points.first().unwrap().objective;
         let last = res.trace.final_objective().unwrap();
@@ -514,16 +454,18 @@ mod tests {
     fn timeout_is_honoured() {
         let g = generate(DatasetKind::Tiny, Family::Regression, 2.0, 115);
         let mut model = Lasso::new(1e-6); // tiny lambda: slow convergence
-        let sim = TierSim::default();
-        let s = HthcSolver::new(HthcConfig {
-            gap_tol: 1e-300,
-            max_epochs: usize::MAX >> 1,
-            timeout_secs: 0.3,
-            eval_every: 1,
-            ..Default::default()
-        });
         let t = Timer::start();
-        let res = s.train(&mut model, &g.matrix, &g.targets, &sim);
+        let res = fit(
+            HthcConfig {
+                gap_tol: 1e-300,
+                max_epochs: usize::MAX >> 1,
+                timeout_secs: 0.3,
+                eval_every: 1,
+                ..Default::default()
+            },
+            &mut model,
+            &g,
+        );
         assert!(!res.converged);
         assert!(t.secs() < 10.0, "timeout must bound the run");
     }

@@ -31,7 +31,7 @@ pub mod working_set;
 
 pub use config::HthcConfig;
 pub use gap_memory::GapMemory;
-pub use hthc::{HthcSolver, TrainResult};
+pub use hthc::HthcSolver;
 pub use perf_model::{PerfModel, Recommendation};
 pub use search::{grid_search, near_best, SearchGrid, SearchResult};
 pub use selection::Selection;

@@ -91,7 +91,7 @@ impl PerfModel {
         let mut acc = 0.0f32;
         let (secs, _) = crate::util::timer::bench_median(
             || {
-                acc += crate::data::dense::dot_f32(&x, &w);
+                acc += crate::kernels::dot(&x, &w);
             },
             0.05,
             200,

@@ -11,7 +11,12 @@
 //!
 //! Storage is `AtomicU32` bit-cast to f32 so that racy reads are
 //! well-defined in rust (on x86 a relaxed load is an ordinary `mov`).
+//!
+//! The lock-free inner bodies (mapped dots, unlocked axpy segments)
+//! live in [`crate::kernels`]; this module owns the chunk-lock
+//! discipline and hands the kernels the ranges each lock covers.
 
+use crate::kernels;
 use std::sync::atomic::{AtomicU32, Ordering};
 use std::sync::Mutex;
 
@@ -89,13 +94,11 @@ impl SharedVector {
         while i < rows.len() {
             let chunk_id = rows[i] as usize / self.chunk;
             let chunk_end = ((chunk_id + 1) * self.chunk) as u32;
+            // entries are row-sorted: the lock's segment is contiguous
+            let seg = i + rows[i..].partition_point(|&r| r < chunk_end);
             let _guard = self.locks[chunk_id].lock().unwrap();
-            while i < rows.len() && rows[i] < chunk_end {
-                let r = rows[i] as usize;
-                let old = f32::from_bits(self.bits[r].load(Ordering::Relaxed));
-                self.bits[r].store((old + delta * vals[i]).to_bits(), Ordering::Relaxed);
-                i += 1;
-            }
+            kernels::sparse_axpy_atomic(&self.bits, &rows[i..seg], &vals[i..seg], delta);
+            i = seg;
         }
     }
 
@@ -108,10 +111,7 @@ impl SharedVector {
             let chunk_id = i / self.chunk;
             let chunk_end = ((chunk_id + 1) * self.chunk).min(hi);
             let _guard = self.locks[chunk_id].lock().unwrap();
-            for r in i..chunk_end {
-                let old = f32::from_bits(self.bits[r].load(Ordering::Relaxed));
-                self.bits[r].store((old + delta * x[r]).to_bits(), Ordering::Relaxed);
-            }
+            kernels::axpy_atomic(&self.bits, x, delta, i, chunk_end);
             i = chunk_end;
         }
     }
@@ -143,14 +143,8 @@ impl SharedVector {
 
     /// Fused stale dot: `sum_r x[r] * w_of(v[r], y[r])` over `[lo, hi)`.
     /// This is task B's hot read path — it must see *recent* v (not the
-    /// epoch snapshot), so it streams the live atomics.
-    ///
-    /// §Perf iteration log (EXPERIMENTS.md §Perf): a 256-element staging
-    /// buffer (copy v out of the atomics, then a vectorizable FMA loop)
-    /// measured *slower* (10.9 vs 7.8 us at d=10k) — the per-element
-    /// `w_of` map blocks SIMD either way, so staging only added traffic;
-    /// reverted.  Four independent accumulators on direct relaxed loads
-    /// is the best of the variants tried.
+    /// epoch snapshot), so it streams the live atomics
+    /// ([`kernels::dot_mapped_atomic`] carries the §Perf history).
     #[inline]
     pub fn dot_mapped_range<W: Fn(f32, f32) -> f32>(
         &self,
@@ -160,40 +154,14 @@ impl SharedVector {
         lo: usize,
         hi: usize,
     ) -> f32 {
-        let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
-        let mut r = lo;
-        while r + 3 < hi {
-            s0 += x[r] * w_of(self.read(r), y[r]);
-            s1 += x[r + 1] * w_of(self.read(r + 1), y[r + 1]);
-            s2 += x[r + 2] * w_of(self.read(r + 2), y[r + 2]);
-            s3 += x[r + 3] * w_of(self.read(r + 3), y[r + 3]);
-            r += 4;
-        }
-        while r < hi {
-            s0 += x[r] * w_of(self.read(r), y[r]);
-            r += 1;
-        }
-        (s0 + s1) + (s2 + s3)
+        kernels::dot_mapped_atomic(&self.bits, x, y, w_of, lo, hi)
     }
 
     /// Scaled plain dot `scale * sum_r x[r] * v[r]` over `[lo, hi)` —
     /// the y-free fast path for models with `w = scale * v` (SVM family).
     #[inline]
     pub fn dot_scaled_range(&self, x: &[f32], scale: f32, lo: usize, hi: usize) -> f32 {
-        let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
-        let mut r = lo;
-        while r + 3 < hi {
-            s0 += x[r] * self.read(r);
-            s1 += x[r + 1] * self.read(r + 1);
-            s2 += x[r + 2] * self.read(r + 2);
-            s3 += x[r + 3] * self.read(r + 3);
-            r += 4;
-        }
-        while r < hi {
-            s0 += x[r] * self.read(r);
-            r += 1;
-        }
-        scale * ((s0 + s1) + (s2 + s3))
+        kernels::dot_scaled_atomic(&self.bits, x, scale, lo, hi)
     }
 
     /// Sparse variant of [`Self::dot_mapped_range`].
@@ -205,12 +173,7 @@ impl SharedVector {
         y: &[f32],
         w_of: W,
     ) -> f32 {
-        let mut s = 0.0f32;
-        for (&r, &x) in rows.iter().zip(vals) {
-            let r = r as usize;
-            s += x * w_of(self.read(r), y[r]);
-        }
-        s
+        kernels::sparse_dot_mapped_atomic(&self.bits, rows, vals, y, w_of)
     }
 }
 

@@ -162,18 +162,19 @@ impl<'m> WorkingSet<'m> {
             }
             WorkingSet::Sparse { pool, .. } => {
                 // V_B is 1 for sparse data in practice (paper §IV-D); a
-                // row-window is still honoured for correctness.
+                // row-window is still honoured for correctness.  Chunk
+                // entries are row-sorted, so the window is a contiguous
+                // sub-slice of each chunk.
                 let mut s = 0.0f32;
                 pool.for_each_chunk(slot, |rows, vals| {
                     if lo == 0 && hi >= self.n_rows() {
                         s += v.dot_mapped_sparse(rows, vals, y, |vj, yj| kind.w_of(vj, yj));
                     } else {
-                        for (&r, &x) in rows.iter().zip(vals) {
-                            let r = r as usize;
-                            if r >= lo && r < hi {
-                                s += x * kind.w_of(v.read(r), y[r]);
-                            }
-                        }
+                        let a = rows.partition_point(|&r| (r as usize) < lo);
+                        let b = rows.partition_point(|&r| (r as usize) < hi);
+                        s += v.dot_mapped_sparse(&rows[a..b], &vals[a..b], y, |vj, yj| {
+                            kind.w_of(vj, yj)
+                        });
                     }
                 });
                 s

@@ -1,14 +1,12 @@
 //! Dense column-major matrix — the representation the paper's headline
 //! results (order-of-magnitude Lasso speedup) are about.
 //!
-//! The dot/axpy kernels mirror the paper's AVX-512 strategy (§IV-A3):
-//! multiple independent accumulators for instruction-level parallelism,
-//! written so LLVM auto-vectorizes the unrolled lanes.  On KNL the paper
-//! reaches ~7.2 flops/cycle for the full coordinate update; here the
-//! same structure hits the host's practical roofline (measured in
-//! `benches/perf_hotpath.rs`).
+//! All inner loops live in [`crate::kernels`] (runtime-dispatched
+//! scalar/SIMD, paper §IV-A3); this module only owns the layout and
+//! the precomputed column norms.
 
 use super::ColumnOps;
+use crate::kernels;
 
 /// Column-major dense f32 matrix (`d` rows — samples; `n` cols — the
 /// coordinates/features the CD algorithm iterates over).
@@ -22,45 +20,12 @@ pub struct DenseMatrix {
     sq_norms: Vec<f32>,
 }
 
-/// Dot product with 4 independent accumulators (ILP; auto-vectorizes).
-#[inline]
-pub fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
-    debug_assert_eq!(a.len(), b.len());
-    let chunks = a.len() / 16;
-    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
-    for c in 0..chunks {
-        let i = c * 16;
-        let (xa, xb) = (&a[i..i + 16], &b[i..i + 16]);
-        s0 += xa[0] * xb[0] + xa[1] * xb[1] + xa[2] * xb[2] + xa[3] * xb[3];
-        s1 += xa[4] * xb[4] + xa[5] * xb[5] + xa[6] * xb[6] + xa[7] * xb[7];
-        s2 += xa[8] * xb[8] + xa[9] * xb[9] + xa[10] * xb[10] + xa[11] * xb[11];
-        s3 += xa[12] * xb[12] + xa[13] * xb[13] + xa[14] * xb[14] + xa[15] * xb[15];
-    }
-    let mut tail = 0.0f32;
-    for i in chunks * 16..a.len() {
-        tail += a[i] * b[i];
-    }
-    (s0 + s1) + (s2 + s3) + tail
-}
-
-/// `v += delta * x` (unrolled axpy; auto-vectorizes).
-#[inline]
-pub fn axpy_f32(delta: f32, x: &[f32], v: &mut [f32]) {
-    debug_assert_eq!(x.len(), v.len());
-    for (vi, xi) in v.iter_mut().zip(x.iter()) {
-        *vi += delta * *xi;
-    }
-}
-
 impl DenseMatrix {
     /// Build from column-major data.
     pub fn from_col_major(d: usize, n: usize, data: Vec<f32>) -> Self {
         assert_eq!(data.len(), d * n, "column-major size mismatch");
         let sq_norms = (0..n)
-            .map(|j| {
-                let c = &data[j * d..(j + 1) * d];
-                dot_f32(c, c)
-            })
+            .map(|j| kernels::sq_norm(&data[j * d..(j + 1) * d]))
             .collect();
         DenseMatrix { d, n, data, sq_norms }
     }
@@ -77,7 +42,7 @@ impl DenseMatrix {
         let mut v = vec![0.0f32; self.d];
         for (j, &a) in alpha.iter().enumerate() {
             if a != 0.0 {
-                axpy_f32(a, self.col(j), &mut v);
+                kernels::axpy(a, self.col(j), &mut v);
             }
         }
         v
@@ -100,17 +65,17 @@ impl ColumnOps for DenseMatrix {
 
     #[inline]
     fn dot(&self, col: usize, w: &[f32]) -> f32 {
-        dot_f32(self.col(col), &w[..self.d])
+        kernels::dot(self.col(col), &w[..self.d])
     }
 
     #[inline]
     fn dot_range(&self, col: usize, w: &[f32], lo: usize, hi: usize) -> f32 {
-        dot_f32(&self.col(col)[lo..hi], &w[lo..hi])
+        kernels::dot_range(self.col(col), &w[..self.d], lo, hi)
     }
 
     #[inline]
     fn axpy(&self, col: usize, delta: f32, v: &mut [f32]) {
-        axpy_f32(delta, self.col(col), &mut v[..self.d]);
+        kernels::axpy(delta, self.col(col), &mut v[..self.d]);
     }
 
     #[inline]
@@ -152,13 +117,14 @@ mod tests {
     }
 
     #[test]
-    fn dot_f32_long_vectors_accurate() {
-        // length not a multiple of 16 exercises the tail path
+    fn dot_long_vectors_accurate() {
+        // length not a multiple of any SIMD width exercises tail paths
         let n = 1037;
         let a: Vec<f32> = (0..n).map(|i| (i % 7) as f32 - 3.0).collect();
         let b: Vec<f32> = (0..n).map(|i| (i % 5) as f32 - 2.0).collect();
         let naive: f64 = a.iter().zip(&b).map(|(&x, &y)| (x * y) as f64).sum();
-        let got = dot_f32(&a, &b) as f64;
+        let m = DenseMatrix::from_col_major(n, 1, a);
+        let got = m.dot(0, &b) as f64;
         assert!((got - naive).abs() < 1e-3 * naive.abs().max(1.0));
     }
 

@@ -276,7 +276,7 @@ fn regression_from(
         Matrix::Quantized(_) => unreachable!("generator emits fp32"),
     };
     let noise_scale = 0.1
-        * (clean.iter().map(|&x| (x * x) as f64).sum::<f64>() / d as f64)
+        * (crate::kernels::sq_norm_f64(&clean) / d as f64)
             .sqrt()
             .max(1e-6) as f32;
     let targets: Vec<f32> = clean

@@ -8,11 +8,17 @@
 //!
 //! Layout matches `python/compile/kernels/ref.py` (`pack4`/`quantize4`):
 //! round-to-nearest codes in [-8, 7] biased by +8, low nibble = even row.
+//!
+//! The unpack-dot / unpack-axpy inner loops live in [`crate::kernels`]
+//! (runtime-dispatched scalar vs LUT paths); this module owns layout,
+//! quantization and the error-bound bookkeeping.
 
 use super::{dense::DenseMatrix, ColumnOps};
+use crate::kernels;
 
-/// Elements per scale group — must match `ref.QGROUP` on the python side.
-pub const QGROUP: usize = 64;
+/// Elements per scale group — re-exported from the kernel layer, which
+/// owns the group structure; must match `ref.QGROUP` on the python side.
+pub use crate::kernels::QGROUP;
 
 /// 4-bit quantized column-major matrix.
 pub struct QuantizedMatrix {
@@ -26,25 +32,6 @@ pub struct QuantizedMatrix {
     bytes_per_col: usize,
     groups_per_col: usize,
 }
-
-#[inline]
-fn code_of(byte: u8, even: bool) -> i32 {
-    let nib = if even { byte & 0xF } else { byte >> 4 };
-    nib as i32 - 8
-}
-
-/// §Perf: byte -> (low nibble, high nibble) dequantization LUT.  One L1
-/// load replaces two shift/mask/cvtsi2ss chains per byte in the hot
-/// unpack loop (before/after in EXPERIMENTS.md §Perf).  2 KiB, L1-hot.
-static NIBBLE_LUT: once_cell::sync::Lazy<[[f32; 2]; 256]> =
-    once_cell::sync::Lazy::new(|| {
-        let mut lut = [[0.0f32; 2]; 256];
-        for (b, pair) in lut.iter_mut().enumerate() {
-            pair[0] = ((b & 0xF) as i32 - 8) as f32;
-            pair[1] = ((b >> 4) as i32 - 8) as f32;
-        }
-        lut
-    });
 
 impl QuantizedMatrix {
     /// Quantize a dense matrix (round-to-nearest, per-group absmax/7).
@@ -67,10 +54,10 @@ impl QuantizedMatrix {
                 let absmax = grp.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
                 let scale = if absmax > 0.0 { absmax / 7.0 } else { 1.0 };
                 scol[g] = scale;
+                let mut deq = [0.0f32; QGROUP];
                 for (k, &x) in grp.iter().enumerate() {
                     let code = (x / scale).round().clamp(-8.0, 7.0) as i32;
-                    let deq = code as f32 * scale;
-                    sq += deq * deq;
+                    deq[k] = code as f32 * scale;
                     let row = g * QGROUP + k;
                     let b = (code + 8) as u8;
                     if row % 2 == 0 {
@@ -79,6 +66,7 @@ impl QuantizedMatrix {
                         pcol[row / 2] |= b << 4;
                     }
                 }
+                sq += kernels::sq_norm(&deq);
             }
             sq_norms[j] = sq;
         }
@@ -102,7 +90,7 @@ impl QuantizedMatrix {
         (0..self.d)
             .map(|r| {
                 let scale = scol[r / QGROUP];
-                code_of(pcol[r / 2], r % 2 == 0) as f32 * scale
+                kernels::quant_code(pcol[r / 2], r % 2 == 0) as f32 * scale
             })
             .collect()
     }
@@ -137,50 +125,12 @@ impl ColumnOps for QuantizedMatrix {
     #[inline]
     fn dot_range(&self, col: usize, w: &[f32], lo: usize, hi: usize) -> f32 {
         debug_assert!(lo % QGROUP == 0, "range must be group-aligned");
-        let pcol = self.pcol(col);
-        let scol = self.scol(col);
-        let lut = &*NIBBLE_LUT;
-        let mut total = 0.0f32;
-        let g_lo = lo / QGROUP;
-        let g_hi = hi.div_ceil(QGROUP);
-        for g in g_lo..g_hi {
-            let base = g * QGROUP;
-            let end = (base + QGROUP).min(hi);
-            let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
-            let mut r = base;
-            while r + 3 < end {
-                let b0 = lut[pcol[r / 2] as usize];
-                let b1 = lut[pcol[r / 2 + 1] as usize];
-                s0 += b0[0] * w[r];
-                s1 += b0[1] * w[r + 1];
-                s2 += b1[0] * w[r + 2];
-                s3 += b1[1] * w[r + 3];
-                r += 4;
-            }
-            while r < end {
-                s0 += code_of(pcol[r / 2], r % 2 == 0) as f32 * w[r];
-                r += 1;
-            }
-            total += ((s0 + s1) + (s2 + s3)) * scol[g];
-        }
-        total
+        kernels::quant_dot_range(self.pcol(col), self.scol(col), w, lo, hi)
     }
 
     #[inline]
     fn axpy(&self, col: usize, delta: f32, v: &mut [f32]) {
-        let pcol = self.pcol(col);
-        let scol = self.scol(col);
-        for g in 0..self.groups_per_col {
-            let base = g * QGROUP;
-            let ds = delta * scol[g];
-            let mut r = base;
-            while r + 1 < base + QGROUP {
-                let byte = pcol[r / 2];
-                v[r] += ((byte & 0xF) as i32 - 8) as f32 * ds;
-                v[r + 1] += ((byte >> 4) as i32 - 8) as f32 * ds;
-                r += 2;
-            }
-        }
+        kernels::quant_axpy(self.pcol(col), self.scol(col), delta, &mut v[..self.d]);
     }
 
     #[inline]

@@ -9,6 +9,7 @@
 //! implemented here with chunk indices instead of raw pointers.
 
 use super::ColumnOps;
+use crate::kernels;
 
 /// Minimum chunk length: "the minimal chunk size of 32 enables the use
 /// of multiple AVX-512 accumulators" (§IV-D).
@@ -35,15 +36,14 @@ impl SparseMatrix {
         col_ptr.push(0);
         for mut col in cols {
             col.sort_unstable_by_key(|&(r, _)| r);
-            let mut sq = 0.0f32;
+            let start = values.len();
             for (r, v) in col {
                 assert!((r as usize) < d, "row {r} out of bounds (d={d})");
                 row_idx.push(r);
                 values.push(v);
-                sq += v * v;
             }
             col_ptr.push(row_idx.len());
-            sq_norms.push(sq);
+            sq_norms.push(kernels::sq_norm(&values[start..]));
         }
         SparseMatrix { d, n, col_ptr, row_idx, values, sq_norms }
     }
@@ -61,9 +61,7 @@ impl SparseMatrix {
         for (j, &a) in alpha.iter().enumerate() {
             if a != 0.0 {
                 let (rows, vals) = self.col(j);
-                for (&r, &x) in rows.iter().zip(vals) {
-                    v[r as usize] += a * x;
-                }
+                kernels::sparse_axpy(rows, vals, a, &mut v);
             }
         }
         v
@@ -85,24 +83,6 @@ impl SparseMatrix {
     }
 }
 
-/// Sparse dot with 2 accumulators over the gathered entries.
-#[inline]
-pub fn sparse_dot(rows: &[u32], vals: &[f32], w: &[f32]) -> f32 {
-    let n = rows.len();
-    let half = n / 2 * 2;
-    let (mut s0, mut s1) = (0.0f32, 0.0f32);
-    let mut i = 0;
-    while i < half {
-        s0 += vals[i] * w[rows[i] as usize];
-        s1 += vals[i + 1] * w[rows[i + 1] as usize];
-        i += 2;
-    }
-    if n % 2 == 1 {
-        s0 += vals[n - 1] * w[rows[n - 1] as usize];
-    }
-    s0 + s1
-}
-
 impl ColumnOps for SparseMatrix {
     fn n_rows(&self) -> usize {
         self.d
@@ -115,7 +95,7 @@ impl ColumnOps for SparseMatrix {
     #[inline]
     fn dot(&self, col: usize, w: &[f32]) -> f32 {
         let (rows, vals) = self.col(col);
-        sparse_dot(rows, vals, w)
+        kernels::sparse_dot(rows, vals, w)
     }
 
     #[inline]
@@ -126,15 +106,13 @@ impl ColumnOps for SparseMatrix {
         let (rows, vals) = self.col(col);
         let a = rows.partition_point(|&r| (r as usize) < lo);
         let b = rows.partition_point(|&r| (r as usize) < hi);
-        sparse_dot(&rows[a..b], &vals[a..b], w)
+        kernels::sparse_dot(&rows[a..b], &vals[a..b], w)
     }
 
     #[inline]
     fn axpy(&self, col: usize, delta: f32, v: &mut [f32]) {
         let (rows, vals) = self.col(col);
-        for (&r, &x) in rows.iter().zip(vals) {
-            v[r as usize] += delta * x;
-        }
+        kernels::sparse_axpy(rows, vals, delta, v);
     }
 
     #[inline]
@@ -240,9 +218,7 @@ impl ChunkPool {
             c.vals[..k].copy_from_slice(&vals[start..end]);
             c.len = k;
             c.next = NONE;
-            for &v in &vals[start..end] {
-                sq += v * v;
-            }
+            sq += kernels::sq_norm(&vals[start..end]);
             if head == NONE {
                 head = id;
             } else {
@@ -284,7 +260,7 @@ impl ChunkPool {
     /// `<w, column-at-slot>` across chunks.
     pub fn dot(&self, slot: usize, w: &[f32]) -> f32 {
         let mut s = 0.0f32;
-        self.for_each_chunk(slot, |rows, vals| s += sparse_dot(rows, vals, w));
+        self.for_each_chunk(slot, |rows, vals| s += kernels::sparse_dot(rows, vals, w));
         s
     }
 

@@ -65,14 +65,7 @@ impl GlmModel for ElasticNet {
     }
 
     fn objective(&self, v: &[f32], y: &[f32], alpha: &[f32]) -> f64 {
-        let fv: f64 = v
-            .iter()
-            .zip(y)
-            .map(|(&vj, &yj)| {
-                let r = (vj - yj) as f64;
-                0.5 * r * r
-            })
-            .sum();
+        let fv = 0.5 * crate::kernels::sq_err_f64(v, y);
         let l1 = (self.lam * self.rho) as f64;
         let l2 = (self.lam * (1.0 - self.rho)) as f64;
         let g: f64 = alpha

@@ -55,14 +55,7 @@ impl GlmModel for Lasso {
     }
 
     fn objective(&self, v: &[f32], y: &[f32], alpha: &[f32]) -> f64 {
-        let fv: f64 = v
-            .iter()
-            .zip(y)
-            .map(|(&vj, &yj)| {
-                let r = (vj - yj) as f64;
-                0.5 * r * r
-            })
-            .sum();
+        let fv = 0.5 * crate::kernels::sq_err_f64(v, y);
         let g: f64 = alpha.iter().map(|&a| (self.lam * a.abs()) as f64).sum();
         fv + g
     }

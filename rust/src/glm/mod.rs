@@ -182,12 +182,12 @@ pub trait GlmModel: Sync + Send {
     fn epoch_refresh(&mut self, _alpha: &[f32]) {}
 }
 
-/// Materialize `w` from `v` (dense helper used by tasks and tests).
+/// Materialize `w` from `v` — the residual/dual map, evaluated through
+/// the kernel layer's elementwise map (dense helper used by tasks and
+/// tests).
 pub fn w_from_v(model: &dyn GlmModel, v: &[f32], y: &[f32], out: &mut [f32]) {
     debug_assert_eq!(v.len(), y.len());
-    for ((o, &vj), &yj) in out.iter_mut().zip(v).zip(y) {
-        *o = model.w_of(vj, yj);
-    }
+    crate::kernels::map2_into(out, v, y, |vj, yj| model.w_of(vj, yj));
 }
 
 /// Total duality gap `sum_i gap_i` over all columns (exact, sequential —

@@ -71,9 +71,7 @@ impl GlmModel for SvmL2Dual {
     }
 
     fn objective(&self, v: &[f32], _y: &[f32], alpha: &[f32]) -> f64 {
-        let fv: f64 = v.iter().map(|&x| (x * x) as f64).sum::<f64>()
-            * 0.5
-            * self.inv_scale as f64;
+        let fv = crate::kernels::sq_norm_f64(v) * 0.5 * self.inv_scale as f64;
         let g: f64 = alpha
             .iter()
             .map(|&a| {

@@ -1,0 +1,119 @@
+//! Kernels over the shared vector's atomic storage.
+//!
+//! `SharedVector` keeps `v` as f32 bits in `AtomicU32` so racy reads
+//! are defined (§IV-C; on x86 a relaxed load is an ordinary `mov`).
+//! These are the lock-free inner bodies of its hot paths: the caller
+//! (`coordinator::shared_vec`) owns the chunk-lock discipline and
+//! hands these the ranges/segments a lock covers.
+//!
+//! §Perf iteration log (EXPERIMENTS.md §Perf): a 256-element staging
+//! buffer (copy v out of the atomics, then a vectorizable FMA loop)
+//! measured *slower* (10.9 vs 7.8 us at d=10k) — the per-element
+//! `w_of` map blocks SIMD either way, so staging only added traffic.
+//! Four independent accumulators on direct relaxed loads remain the
+//! best variant tried; that is the non-scalar backend here.
+
+use std::sync::atomic::{AtomicU32, Ordering};
+
+#[inline(always)]
+fn read(v: &[AtomicU32], i: usize) -> f32 {
+    f32::from_bits(v[i].load(Ordering::Relaxed))
+}
+
+pub(super) fn dot_mapped_scalar<F: Fn(f32, f32) -> f32>(
+    v: &[AtomicU32],
+    x: &[f32],
+    y: &[f32],
+    w_of: F,
+    lo: usize,
+    hi: usize,
+) -> f32 {
+    let mut s = 0.0f32;
+    for r in lo..hi {
+        s += x[r] * w_of(read(v, r), y[r]);
+    }
+    s
+}
+
+pub(super) fn dot_mapped_unrolled<F: Fn(f32, f32) -> f32>(
+    v: &[AtomicU32],
+    x: &[f32],
+    y: &[f32],
+    w_of: F,
+    lo: usize,
+    hi: usize,
+) -> f32 {
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    let mut r = lo;
+    while r + 3 < hi {
+        s0 += x[r] * w_of(read(v, r), y[r]);
+        s1 += x[r + 1] * w_of(read(v, r + 1), y[r + 1]);
+        s2 += x[r + 2] * w_of(read(v, r + 2), y[r + 2]);
+        s3 += x[r + 3] * w_of(read(v, r + 3), y[r + 3]);
+        r += 4;
+    }
+    while r < hi {
+        s0 += x[r] * w_of(read(v, r), y[r]);
+        r += 1;
+    }
+    (s0 + s1) + (s2 + s3)
+}
+
+pub(super) fn dot_scaled_scalar(v: &[AtomicU32], x: &[f32], lo: usize, hi: usize) -> f32 {
+    let mut s = 0.0f32;
+    for r in lo..hi {
+        s += x[r] * read(v, r);
+    }
+    s
+}
+
+pub(super) fn dot_scaled_unrolled(v: &[AtomicU32], x: &[f32], lo: usize, hi: usize) -> f32 {
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    let mut r = lo;
+    while r + 3 < hi {
+        s0 += x[r] * read(v, r);
+        s1 += x[r + 1] * read(v, r + 1);
+        s2 += x[r + 2] * read(v, r + 2);
+        s3 += x[r + 3] * read(v, r + 3);
+        r += 4;
+    }
+    while r < hi {
+        s0 += x[r] * read(v, r);
+        r += 1;
+    }
+    (s0 + s1) + (s2 + s3)
+}
+
+pub(super) fn sparse_dot_mapped<F: Fn(f32, f32) -> f32>(
+    v: &[AtomicU32],
+    rows: &[u32],
+    vals: &[f32],
+    y: &[f32],
+    w_of: F,
+) -> f32 {
+    let mut s = 0.0f32;
+    for (&r, &x) in rows.iter().zip(vals) {
+        let r = r as usize;
+        s += x * w_of(read(v, r), y[r]);
+    }
+    s
+}
+
+/// Unlocked `v[r] += delta * x[r]` for `r in [lo, hi)` (caller holds
+/// the covering lock; each access is individually relaxed-atomic).
+pub(super) fn axpy(v: &[AtomicU32], x: &[f32], delta: f32, lo: usize, hi: usize) {
+    for r in lo..hi {
+        let old = read(v, r);
+        v[r].store((old + delta * x[r]).to_bits(), Ordering::Relaxed);
+    }
+}
+
+/// Unlocked scatter `v[rows[k]] += delta * vals[k]` (caller holds the
+/// covering lock).
+pub(super) fn sparse_axpy(v: &[AtomicU32], rows: &[u32], vals: &[f32], delta: f32) {
+    for (&r, &x) in rows.iter().zip(vals) {
+        let r = r as usize;
+        let old = read(v, r);
+        v[r].store((old + delta * x).to_bits(), Ordering::Relaxed);
+    }
+}

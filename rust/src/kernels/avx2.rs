@@ -1,0 +1,170 @@
+//! Explicit AVX2+FMA dense kernels (`std::arch::x86_64`).
+//!
+//! Four 8-lane FMA accumulators per loop — 32 elements in flight —
+//! mirroring the paper's AVX-512 multiple-accumulator strategy one
+//! register width down.  Unaligned loads throughout (`loadu`): column
+//! slices and `dot_range` sub-ranges carry no alignment guarantee.
+//!
+//! Every function here is `unsafe`: callers must have verified
+//! AVX2+FMA support at runtime (`kernels::avx2_available()`), which
+//! the dispatch layer does before ever selecting [`Backend::Avx2`].
+//!
+//! [`Backend::Avx2`]: super::Backend::Avx2
+
+use std::arch::x86_64::*;
+
+/// Horizontal sum of one 8-lane register.
+///
+/// # Safety
+/// Requires AVX (subsumed by the callers' AVX2+FMA contract).
+#[inline]
+#[target_feature(enable = "avx2")]
+#[target_feature(enable = "fma")]
+unsafe fn hsum(v: __m256) -> f32 {
+    let hi = _mm256_extractf128_ps::<1>(v);
+    let lo = _mm256_castps256_ps128(v);
+    let quad = _mm_add_ps(lo, hi);
+    let dual = _mm_add_ps(quad, _mm_movehl_ps(quad, quad));
+    let single = _mm_add_ss(dual, _mm_shuffle_ps::<0b01>(dual, dual));
+    _mm_cvtss_f32(single)
+}
+
+/// `<a, b>`.
+///
+/// # Safety
+/// Host must support AVX2 and FMA; `a.len() == b.len()`.
+#[inline]
+#[target_feature(enable = "avx2")]
+#[target_feature(enable = "fma")]
+pub(super) unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len();
+    let (pa, pb) = (a.as_ptr(), b.as_ptr());
+    let mut acc0 = _mm256_setzero_ps();
+    let mut acc1 = _mm256_setzero_ps();
+    let mut acc2 = _mm256_setzero_ps();
+    let mut acc3 = _mm256_setzero_ps();
+    let mut i = 0usize;
+    while i + 32 <= n {
+        acc0 = _mm256_fmadd_ps(_mm256_loadu_ps(pa.add(i)), _mm256_loadu_ps(pb.add(i)), acc0);
+        acc1 = _mm256_fmadd_ps(
+            _mm256_loadu_ps(pa.add(i + 8)),
+            _mm256_loadu_ps(pb.add(i + 8)),
+            acc1,
+        );
+        acc2 = _mm256_fmadd_ps(
+            _mm256_loadu_ps(pa.add(i + 16)),
+            _mm256_loadu_ps(pb.add(i + 16)),
+            acc2,
+        );
+        acc3 = _mm256_fmadd_ps(
+            _mm256_loadu_ps(pa.add(i + 24)),
+            _mm256_loadu_ps(pb.add(i + 24)),
+            acc3,
+        );
+        i += 32;
+    }
+    while i + 8 <= n {
+        acc0 = _mm256_fmadd_ps(_mm256_loadu_ps(pa.add(i)), _mm256_loadu_ps(pb.add(i)), acc0);
+        i += 8;
+    }
+    let mut s = hsum(_mm256_add_ps(_mm256_add_ps(acc0, acc1), _mm256_add_ps(acc2, acc3)));
+    while i < n {
+        s += a[i] * b[i];
+        i += 1;
+    }
+    s
+}
+
+/// `v += delta * x`.
+///
+/// # Safety
+/// Host must support AVX2 and FMA; `x.len() == v.len()`.
+#[inline]
+#[target_feature(enable = "avx2")]
+#[target_feature(enable = "fma")]
+pub(super) unsafe fn axpy(delta: f32, x: &[f32], v: &mut [f32]) {
+    let n = v.len();
+    let d = _mm256_set1_ps(delta);
+    let px = x.as_ptr();
+    let pv = v.as_mut_ptr();
+    let mut i = 0usize;
+    while i + 8 <= n {
+        let xv = _mm256_loadu_ps(px.add(i));
+        let vv = _mm256_loadu_ps(pv.add(i));
+        _mm256_storeu_ps(pv.add(i), _mm256_fmadd_ps(d, xv, vv));
+        i += 8;
+    }
+    while i < n {
+        v[i] += delta * x[i];
+        i += 1;
+    }
+}
+
+/// `||x||^2`.
+///
+/// # Safety
+/// Host must support AVX2 and FMA.
+#[inline]
+#[target_feature(enable = "avx2")]
+#[target_feature(enable = "fma")]
+pub(super) unsafe fn sq_norm(x: &[f32]) -> f32 {
+    let n = x.len();
+    let px = x.as_ptr();
+    let mut acc0 = _mm256_setzero_ps();
+    let mut acc1 = _mm256_setzero_ps();
+    let mut i = 0usize;
+    while i + 16 <= n {
+        let a = _mm256_loadu_ps(px.add(i));
+        let b = _mm256_loadu_ps(px.add(i + 8));
+        acc0 = _mm256_fmadd_ps(a, a, acc0);
+        acc1 = _mm256_fmadd_ps(b, b, acc1);
+        i += 16;
+    }
+    while i + 8 <= n {
+        let a = _mm256_loadu_ps(px.add(i));
+        acc0 = _mm256_fmadd_ps(a, a, acc0);
+        i += 8;
+    }
+    let mut s = hsum(_mm256_add_ps(acc0, acc1));
+    while i < n {
+        s += x[i] * x[i];
+        i += 1;
+    }
+    s
+}
+
+/// Fused `(<a, b>, ||a||^2)` — one pass over `a`.
+///
+/// # Safety
+/// Host must support AVX2 and FMA; `a.len() == b.len()`.
+#[inline]
+#[target_feature(enable = "avx2")]
+#[target_feature(enable = "fma")]
+pub(super) unsafe fn dot_sq_norm(a: &[f32], b: &[f32]) -> (f32, f32) {
+    let n = a.len();
+    let (pa, pb) = (a.as_ptr(), b.as_ptr());
+    let mut dacc0 = _mm256_setzero_ps();
+    let mut dacc1 = _mm256_setzero_ps();
+    let mut qacc0 = _mm256_setzero_ps();
+    let mut qacc1 = _mm256_setzero_ps();
+    let mut i = 0usize;
+    while i + 16 <= n {
+        let a0 = _mm256_loadu_ps(pa.add(i));
+        let a1 = _mm256_loadu_ps(pa.add(i + 8));
+        let b0 = _mm256_loadu_ps(pb.add(i));
+        let b1 = _mm256_loadu_ps(pb.add(i + 8));
+        dacc0 = _mm256_fmadd_ps(a0, b0, dacc0);
+        dacc1 = _mm256_fmadd_ps(a1, b1, dacc1);
+        qacc0 = _mm256_fmadd_ps(a0, a0, qacc0);
+        qacc1 = _mm256_fmadd_ps(a1, a1, qacc1);
+        i += 16;
+    }
+    let mut d = hsum(_mm256_add_ps(dacc0, dacc1));
+    let mut q = hsum(_mm256_add_ps(qacc0, qacc1));
+    while i < n {
+        d += a[i] * b[i];
+        q += a[i] * a[i];
+        i += 1;
+    }
+    (d, q)
+}

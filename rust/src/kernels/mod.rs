@@ -1,0 +1,666 @@
+//! The unified kernel layer: every hot inner loop in the crate, behind
+//! one runtime-dispatched seam (paper §IV-A3: "architecture-cognizant"
+//! vectorized inner loops are where the order-of-magnitude Lasso
+//! speedup comes from).
+//!
+//! Three backends implement the same kernel set:
+//!
+//! * [`Backend::Scalar`] — straight-line reference loops
+//!   ([`scalar`]); the ground truth the differential harness
+//!   (`rust/tests/kernel_diff.rs`) checks the others against.
+//! * [`Backend::Portable`] — chunked/unrolled Rust with multiple
+//!   independent accumulators ([`portable`]); LLVM auto-vectorizes it
+//!   on any target (the paper's multiple-AVX-512-accumulator strategy,
+//!   expressed portably).
+//! * [`Backend::Avx2`] — explicit `std::arch` AVX2+FMA intrinsics for
+//!   the dense kernels (x86-64 only, runtime-detected).  Sparse,
+//!   quantized and mapped kernels fall back to the portable code —
+//!   gather-based sparse SIMD and AVX-512 are ROADMAP items.
+//!
+//! The backend is chosen once per process: the `RUST_PALLAS_KERNELS`
+//! environment variable (`scalar` | `simd` | `portable` | `avx2`) or
+//! the `hthc --kernels` CLI flag override the default, which is the
+//! best SIMD path the host supports.  [`set_backend`] re-points the
+//! dispatch at runtime — that is an A/B-testing hook for benches and
+//! the differential tests, not something engine code should call.
+//!
+//! Numerical contract: all backends compute the same quantity with
+//! possibly different summation trees.  Any summation order of `n`
+//! terms differs from any other by at most `2 (n-1) eps Σ|term_i|`
+//! (standard forward-error bound), which is the bound the differential
+//! tests assert — see `rust/DESIGN.md` §Kernels for the rationale.
+
+mod atomic_impl;
+mod portable;
+mod quant;
+mod scalar;
+
+#[cfg(target_arch = "x86_64")]
+mod avx2;
+
+pub use quant::QGROUP;
+
+use std::sync::atomic::{AtomicU32, AtomicU8, Ordering};
+
+// ---------------------------------------------------------------------------
+// Backend selection
+// ---------------------------------------------------------------------------
+
+/// Which kernel implementation the dispatched entry points run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// Reference scalar loops.
+    Scalar,
+    /// Unrolled multi-accumulator Rust (auto-vectorized).
+    Portable,
+    /// `std::arch` AVX2+FMA dense kernels (x86-64 with runtime support).
+    Avx2,
+}
+
+impl Backend {
+    pub fn name(self) -> &'static str {
+        match self {
+            Backend::Scalar => "scalar",
+            Backend::Portable => "portable",
+            Backend::Avx2 => "avx2",
+        }
+    }
+
+    /// Parse a `RUST_PALLAS_KERNELS` / `--kernels` spec.  `simd` maps
+    /// to the best SIMD backend the host supports; requesting `avx2`
+    /// on a host without AVX2+FMA resolves to `portable` (the closest
+    /// supported backend) rather than failing.
+    pub fn parse(spec: &str) -> Option<Backend> {
+        match spec {
+            "scalar" => Some(Backend::Scalar),
+            "portable" => Some(Backend::Portable),
+            "simd" => Some(best_simd()),
+            "avx2" => Some(if avx2_available() { Backend::Avx2 } else { Backend::Portable }),
+            _ => None,
+        }
+    }
+
+    fn from_u8(raw: u8) -> Backend {
+        match raw {
+            0 => Backend::Scalar,
+            1 => Backend::Portable,
+            _ => Backend::Avx2,
+        }
+    }
+}
+
+/// Whether the host can run the AVX2+FMA dense kernels.
+pub fn avx2_available() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        std::is_x86_feature_detected!("avx2") && std::is_x86_feature_detected!("fma")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// The best SIMD backend available on this host.
+pub fn best_simd() -> Backend {
+    if avx2_available() {
+        Backend::Avx2
+    } else {
+        Backend::Portable
+    }
+}
+
+/// Every backend this host can execute (scalar and portable always;
+/// AVX2 when detected) — the axis the differential tests sweep.
+pub fn available_backends() -> Vec<Backend> {
+    let mut v = vec![Backend::Scalar, Backend::Portable];
+    if avx2_available() {
+        v.push(Backend::Avx2);
+    }
+    v
+}
+
+const BACKEND_UNSET: u8 = u8::MAX;
+static BACKEND: AtomicU8 = AtomicU8::new(BACKEND_UNSET);
+
+/// The active backend, resolving `RUST_PALLAS_KERNELS` on first use.
+/// Unknown spec values fall back to the default (best SIMD) after a
+/// one-line warning rather than aborting a long training run.
+#[inline]
+pub fn backend() -> Backend {
+    let raw = BACKEND.load(Ordering::Relaxed);
+    if raw != BACKEND_UNSET {
+        return Backend::from_u8(raw);
+    }
+    let chosen = match std::env::var("RUST_PALLAS_KERNELS") {
+        Ok(spec) if !spec.is_empty() => Backend::parse(&spec).unwrap_or_else(|| {
+            eprintln!(
+                "warning: RUST_PALLAS_KERNELS={spec:?} not recognized \
+                 (want scalar|simd|portable|avx2); using {}",
+                best_simd().name()
+            );
+            best_simd()
+        }),
+        _ => best_simd(),
+    };
+    BACKEND.store(chosen as u8, Ordering::Relaxed);
+    chosen
+}
+
+/// Re-point the dispatch (benches / differential tests only; see the
+/// module docs).  Takes effect for every subsequent dispatched call in
+/// the process.  Requesting [`Backend::Avx2`] on a host without
+/// AVX2+FMA degrades to [`Backend::Portable`] — this is a safe fn, so
+/// it must never be able to route safe callers into intrinsics the
+/// CPU lacks (the AVX2 trampolines' safety contract).
+pub fn set_backend(b: Backend) {
+    let b = if b == Backend::Avx2 && !avx2_available() {
+        Backend::Portable
+    } else {
+        b
+    };
+    BACKEND.store(b as u8, Ordering::Relaxed);
+}
+
+// ---------------------------------------------------------------------------
+// Dense kernels
+// ---------------------------------------------------------------------------
+
+/// `<a, b>` with an explicit backend (benches, differential tests).
+#[inline]
+pub fn dot_with(b: Backend, x: &[f32], y: &[f32]) -> f32 {
+    debug_assert_eq!(x.len(), y.len());
+    match b {
+        Backend::Scalar => scalar::dot(x, y),
+        Backend::Portable => portable::dot(x, y),
+        Backend::Avx2 => dot_avx2(x, y),
+    }
+}
+
+/// `<a, b>` (Eq. (3)/(4)'s `<w, d_i>` inner product).
+#[inline]
+pub fn dot(x: &[f32], y: &[f32]) -> f32 {
+    dot_with(backend(), x, y)
+}
+
+/// Partial dot over `[lo, hi)` — V_B-way vector splitting.  The
+/// sub-range is in general unaligned to any SIMD lane width; every
+/// backend handles that (differential tests exercise it).
+#[inline]
+pub fn dot_range_with(b: Backend, x: &[f32], y: &[f32], lo: usize, hi: usize) -> f32 {
+    dot_with(b, &x[lo..hi], &y[lo..hi])
+}
+
+/// Partial dot over `[lo, hi)` on the dispatched backend.
+#[inline]
+pub fn dot_range(x: &[f32], y: &[f32], lo: usize, hi: usize) -> f32 {
+    dot_with(backend(), &x[lo..hi], &y[lo..hi])
+}
+
+/// `v += delta * x` with an explicit backend.
+#[inline]
+pub fn axpy_with(b: Backend, delta: f32, x: &[f32], v: &mut [f32]) {
+    debug_assert_eq!(x.len(), v.len());
+    match b {
+        Backend::Scalar => scalar::axpy(delta, x, v),
+        Backend::Portable => portable::axpy(delta, x, v),
+        Backend::Avx2 => axpy_avx2(delta, x, v),
+    }
+}
+
+/// `v += delta * x` (the shared-vector maintenance step).
+#[inline]
+pub fn axpy(delta: f32, x: &[f32], v: &mut [f32]) {
+    axpy_with(backend(), delta, x, v)
+}
+
+/// `||x||^2` with an explicit backend.
+#[inline]
+pub fn sq_norm_with(b: Backend, x: &[f32]) -> f32 {
+    match b {
+        Backend::Scalar => scalar::sq_norm(x),
+        Backend::Portable => portable::sq_norm(x),
+        Backend::Avx2 => sq_norm_avx2(x),
+    }
+}
+
+/// `||x||^2` (column norms for the closed-form coordinate update).
+#[inline]
+pub fn sq_norm(x: &[f32]) -> f32 {
+    sq_norm_with(backend(), x)
+}
+
+/// Fused `(<x, y>, ||x||^2)` in one pass over `x` — one memory stream
+/// instead of two when a column's dot and norm are both needed (e.g.
+/// normalizing while scoring, or CD without precomputed norms).
+#[inline]
+pub fn dot_sq_norm_with(b: Backend, x: &[f32], y: &[f32]) -> (f32, f32) {
+    debug_assert_eq!(x.len(), y.len());
+    match b {
+        Backend::Scalar => scalar::dot_sq_norm(x, y),
+        Backend::Portable => portable::dot_sq_norm(x, y),
+        Backend::Avx2 => dot_sq_norm_avx2(x, y),
+    }
+}
+
+/// Fused `(<x, y>, ||x||^2)` on the dispatched backend.
+#[inline]
+pub fn dot_sq_norm(x: &[f32], y: &[f32]) -> (f32, f32) {
+    dot_sq_norm_with(backend(), x, y)
+}
+
+// AVX2 trampolines: the cfg lives here so the match arms above stay
+// identical on every target (non-x86 hosts degrade to portable).
+#[cfg(target_arch = "x86_64")]
+#[inline]
+fn dot_avx2(x: &[f32], y: &[f32]) -> f32 {
+    // SAFETY: Backend::Avx2 is only ever selected after
+    // `avx2_available()` confirmed AVX2+FMA at runtime.
+    unsafe { avx2::dot(x, y) }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+#[inline]
+fn dot_avx2(x: &[f32], y: &[f32]) -> f32 {
+    portable::dot(x, y)
+}
+
+#[cfg(target_arch = "x86_64")]
+#[inline]
+fn axpy_avx2(delta: f32, x: &[f32], v: &mut [f32]) {
+    // SAFETY: as for `dot_avx2`.
+    unsafe { avx2::axpy(delta, x, v) }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+#[inline]
+fn axpy_avx2(delta: f32, x: &[f32], v: &mut [f32]) {
+    portable::axpy(delta, x, v)
+}
+
+#[cfg(target_arch = "x86_64")]
+#[inline]
+fn sq_norm_avx2(x: &[f32]) -> f32 {
+    // SAFETY: as for `dot_avx2`.
+    unsafe { avx2::sq_norm(x) }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+#[inline]
+fn sq_norm_avx2(x: &[f32]) -> f32 {
+    portable::sq_norm(x)
+}
+
+#[cfg(target_arch = "x86_64")]
+#[inline]
+fn dot_sq_norm_avx2(x: &[f32], y: &[f32]) -> (f32, f32) {
+    // SAFETY: as for `dot_avx2`.
+    unsafe { avx2::dot_sq_norm(x, y) }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+#[inline]
+fn dot_sq_norm_avx2(x: &[f32], y: &[f32]) -> (f32, f32) {
+    portable::dot_sq_norm(x, y)
+}
+
+// ---------------------------------------------------------------------------
+// Sparse kernels (index-gather over parallel (rows, vals) slices)
+// ---------------------------------------------------------------------------
+
+/// Sparse gather dot `sum_k vals[k] * w[rows[k]]` with an explicit
+/// backend.  AVX2 has no dense-kernel advantage here (a hardware
+/// gather pass is a ROADMAP item), so `Avx2` runs the portable code.
+#[inline]
+pub fn sparse_dot_with(b: Backend, rows: &[u32], vals: &[f32], w: &[f32]) -> f32 {
+    debug_assert_eq!(rows.len(), vals.len());
+    match b {
+        Backend::Scalar => scalar::sparse_dot(rows, vals, w),
+        Backend::Portable | Backend::Avx2 => portable::sparse_dot(rows, vals, w),
+    }
+}
+
+/// Sparse gather dot on the dispatched backend.
+#[inline]
+pub fn sparse_dot(rows: &[u32], vals: &[f32], w: &[f32]) -> f32 {
+    sparse_dot_with(backend(), rows, vals, w)
+}
+
+/// Sparse scatter axpy `v[rows[k]] += delta * vals[k]` with an explicit
+/// backend (scatter has no portable SIMD form; kept here so the whole
+/// hot-loop inventory lives behind one seam).
+#[inline]
+pub fn sparse_axpy_with(b: Backend, rows: &[u32], vals: &[f32], delta: f32, v: &mut [f32]) {
+    debug_assert_eq!(rows.len(), vals.len());
+    match b {
+        Backend::Scalar => scalar::sparse_axpy(rows, vals, delta, v),
+        Backend::Portable | Backend::Avx2 => portable::sparse_axpy(rows, vals, delta, v),
+    }
+}
+
+/// Sparse scatter axpy on the dispatched backend.
+#[inline]
+pub fn sparse_axpy(rows: &[u32], vals: &[f32], delta: f32, v: &mut [f32]) {
+    sparse_axpy_with(backend(), rows, vals, delta, v)
+}
+
+// ---------------------------------------------------------------------------
+// 4-bit quantized kernels (two codes per byte, one scale per QGROUP)
+// ---------------------------------------------------------------------------
+
+/// Quantized unpack-dot over rows `[lo, hi)` with an explicit backend:
+/// `sum_g scale[g] * sum_{r in g} code(packed, r) * w[r]`.  `lo` must
+/// be [`QGROUP`]-aligned; `hi` may be arbitrary (partial final group).
+#[inline]
+pub fn quant_dot_range_with(
+    b: Backend,
+    packed: &[u8],
+    scales: &[f32],
+    w: &[f32],
+    lo: usize,
+    hi: usize,
+) -> f32 {
+    debug_assert!(lo % QGROUP == 0, "lo must be group-aligned");
+    debug_assert!(hi <= packed.len() * 2 && hi <= w.len());
+    match b {
+        Backend::Scalar => quant::dot_range_scalar(packed, scales, w, lo, hi),
+        Backend::Portable | Backend::Avx2 => quant::dot_range_lut(packed, scales, w, lo, hi),
+    }
+}
+
+/// Quantized unpack-dot on the dispatched backend.
+#[inline]
+pub fn quant_dot_range(packed: &[u8], scales: &[f32], w: &[f32], lo: usize, hi: usize) -> f32 {
+    quant_dot_range_with(backend(), packed, scales, w, lo, hi)
+}
+
+/// Quantized unpack-axpy `v[r] += delta * scale[g(r)] * code(packed, r)`
+/// over the whole column, with an explicit backend.  `v.len()` must be
+/// a multiple of [`QGROUP`] with `scales.len() * QGROUP == v.len()`.
+#[inline]
+pub fn quant_axpy_with(b: Backend, packed: &[u8], scales: &[f32], delta: f32, v: &mut [f32]) {
+    debug_assert_eq!(scales.len() * QGROUP, v.len());
+    debug_assert_eq!(packed.len() * 2, v.len());
+    match b {
+        Backend::Scalar => quant::axpy_scalar(packed, scales, delta, v),
+        Backend::Portable | Backend::Avx2 => quant::axpy_lut(packed, scales, delta, v),
+    }
+}
+
+/// Quantized unpack-axpy on the dispatched backend.
+#[inline]
+pub fn quant_axpy(packed: &[u8], scales: &[f32], delta: f32, v: &mut [f32]) {
+    quant_axpy_with(backend(), packed, scales, delta, v)
+}
+
+/// Decode one 4-bit code (row `r` parity picks the nibble) — the shared
+/// scalar decode used by reference paths and column densification.
+#[inline(always)]
+pub fn quant_code(byte: u8, even: bool) -> i32 {
+    quant::code_of(byte, even)
+}
+
+// ---------------------------------------------------------------------------
+// Interleaved-pair kernels (row-major (index, value) pair slices — the
+// SGD baseline's VW-style row cache)
+// ---------------------------------------------------------------------------
+
+/// Gathered dot over interleaved `(index, value)` pairs, with an
+/// explicit backend: `sum_k vals_k * w[idx_k]`.
+#[inline]
+pub fn pair_dot_with(b: Backend, row: &[(u32, f32)], w: &[f32]) -> f32 {
+    match b {
+        Backend::Scalar => scalar::pair_dot(row, w),
+        Backend::Portable | Backend::Avx2 => portable::pair_dot(row, w),
+    }
+}
+
+/// Gathered pair dot on the dispatched backend.
+#[inline]
+pub fn pair_dot(row: &[(u32, f32)], w: &[f32]) -> f32 {
+    pair_dot_with(backend(), row, w)
+}
+
+/// `sum_k vals_k^2` over interleaved pairs (row-norm step scaling).
+#[inline]
+pub fn pair_sq_norm(row: &[(u32, f32)]) -> f32 {
+    let mut s = 0.0f32;
+    for &(_, x) in row {
+        s += x * x;
+    }
+    s
+}
+
+// ---------------------------------------------------------------------------
+// Scaled scatter drivers (per-element-synchronized baselines)
+// ---------------------------------------------------------------------------
+//
+// OMP / PASSCoDe update `v` one element at a time (atomic or racy-wild
+// add) — that per-element synchronization IS the baseline being
+// compared against, so the kernel only owns the iteration and scaling;
+// the caller supplies the per-element sink.
+
+/// Drive `sink(r, delta * x[r])` over a dense column.
+#[inline]
+pub fn scaled_scatter<F: FnMut(usize, f32)>(x: &[f32], delta: f32, mut sink: F) {
+    for (r, &xi) in x.iter().enumerate() {
+        sink(r, delta * xi);
+    }
+}
+
+/// Drive `sink(rows[k], delta * vals[k])` over a sparse column.
+#[inline]
+pub fn scaled_scatter_sparse<F: FnMut(usize, f32)>(
+    rows: &[u32],
+    vals: &[f32],
+    delta: f32,
+    mut sink: F,
+) {
+    for (&r, &x) in rows.iter().zip(vals) {
+        sink(r as usize, delta * x);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// f64-accumulated residual reductions (objective / trace evaluations)
+// ---------------------------------------------------------------------------
+
+/// `sum_i (a_i - b_i)^2` accumulated in f64, with an explicit backend.
+#[inline]
+pub fn sq_err_f64_with(back: Backend, a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    match back {
+        Backend::Scalar => scalar::sq_err_f64(a, b),
+        Backend::Portable | Backend::Avx2 => portable::sq_err_f64(a, b),
+    }
+}
+
+/// `sum_i (a_i - b_i)^2` accumulated in f64 — the squared-loss residual
+/// shared by the Lasso/ridge/elastic-net objectives.  f64 so the
+/// convergence traces do not floor at fp32 accumulation noise.
+#[inline]
+pub fn sq_err_f64(a: &[f32], b: &[f32]) -> f64 {
+    sq_err_f64_with(backend(), a, b)
+}
+
+/// f64-accumulated `||a||^2` with an explicit backend.
+#[inline]
+pub fn sq_norm_f64_with(back: Backend, a: &[f32]) -> f64 {
+    match back {
+        Backend::Scalar => scalar::sq_norm_f64(a),
+        Backend::Portable | Backend::Avx2 => portable::sq_norm_f64(a),
+    }
+}
+
+/// `||a||^2` accumulated in f64 (the SVM-family objective term).
+#[inline]
+pub fn sq_norm_f64(a: &[f32]) -> f64 {
+    sq_norm_f64_with(backend(), a)
+}
+
+// ---------------------------------------------------------------------------
+// Elementwise residual map
+// ---------------------------------------------------------------------------
+
+/// Elementwise map with an explicit backend (see [`map2_into`]).
+#[inline]
+pub fn map2_into_with<F: Fn(f32, f32) -> f32>(
+    back: Backend,
+    out: &mut [f32],
+    a: &[f32],
+    b: &[f32],
+    f: F,
+) {
+    debug_assert!(a.len() >= out.len() && b.len() >= out.len());
+    match back {
+        Backend::Scalar => scalar::map2_into(out, a, b, f),
+        Backend::Portable | Backend::Avx2 => portable::map2_into(out, a, b, f),
+    }
+}
+
+/// `out[i] = f(a[i], b[i])` — the `v -> w` residual/dual map
+/// (`glm::w_from_v` and the per-epoch `w` snapshots).  The map closure
+/// blocks real SIMD, so the backends differ only in unrolling; kept in
+/// the kernel layer so every elementwise hot loop shares one home.
+#[inline]
+pub fn map2_into<F: Fn(f32, f32) -> f32>(out: &mut [f32], a: &[f32], b: &[f32], f: F) {
+    map2_into_with(backend(), out, a, b, f)
+}
+
+// ---------------------------------------------------------------------------
+// Atomic-slice kernels (SharedVector's hot paths)
+// ---------------------------------------------------------------------------
+//
+// The shared vector stores f32 bits in `AtomicU32` so racy reads are
+// defined; these kernels stream those atomics with relaxed ordering.
+// The caller owns all locking discipline (chunk locks around the axpy
+// variants) — these are the lock-free inner bodies only.
+
+/// Fused stale dot `sum_r x[r] * w_of(v[r], y[r])` over `[lo, hi)`
+/// against live atomic `v` (task B's read path).
+#[inline]
+pub fn dot_mapped_atomic<F: Fn(f32, f32) -> f32>(
+    v: &[AtomicU32],
+    x: &[f32],
+    y: &[f32],
+    w_of: F,
+    lo: usize,
+    hi: usize,
+) -> f32 {
+    match backend() {
+        Backend::Scalar => atomic_impl::dot_mapped_scalar(v, x, y, w_of, lo, hi),
+        Backend::Portable | Backend::Avx2 => {
+            atomic_impl::dot_mapped_unrolled(v, x, y, w_of, lo, hi)
+        }
+    }
+}
+
+/// Scaled plain dot `scale * sum_r x[r] * v[r]` over `[lo, hi)` — the
+/// y-free fast path for models with `w = scale * v` (SVM family).
+#[inline]
+pub fn dot_scaled_atomic(v: &[AtomicU32], x: &[f32], scale: f32, lo: usize, hi: usize) -> f32 {
+    match backend() {
+        Backend::Scalar => atomic_impl::dot_scaled_scalar(v, x, lo, hi) * scale,
+        Backend::Portable | Backend::Avx2 => atomic_impl::dot_scaled_unrolled(v, x, lo, hi) * scale,
+    }
+}
+
+/// Sparse variant of [`dot_mapped_atomic`] over gathered entries.
+#[inline]
+pub fn sparse_dot_mapped_atomic<F: Fn(f32, f32) -> f32>(
+    v: &[AtomicU32],
+    rows: &[u32],
+    vals: &[f32],
+    y: &[f32],
+    w_of: F,
+) -> f32 {
+    // gathered entries + a closure: no profitable unrolling split —
+    // one shared implementation for all backends.
+    atomic_impl::sparse_dot_mapped(v, rows, vals, y, w_of)
+}
+
+/// Unlocked dense axpy body `v[r] += delta * x[r]` for `r in [lo, hi)`
+/// (relaxed load/store; the caller holds the covering chunk lock).
+#[inline]
+pub fn axpy_atomic(v: &[AtomicU32], x: &[f32], delta: f32, lo: usize, hi: usize) {
+    atomic_impl::axpy(v, x, delta, lo, hi)
+}
+
+/// Unlocked sparse scatter body `v[rows[k]] += delta * vals[k]`
+/// (relaxed; caller holds the covering chunk lock).
+#[inline]
+pub fn sparse_axpy_atomic(v: &[AtomicU32], rows: &[u32], vals: &[f32], delta: f32) {
+    atomic_impl::sparse_axpy(v, rows, vals, delta)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Serializes the tests that read-or-flip the process-global
+    /// backend (cargo runs unit tests on parallel threads).
+    static BACKEND_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+    #[test]
+    fn parse_specs() {
+        assert_eq!(Backend::parse("scalar"), Some(Backend::Scalar));
+        assert_eq!(Backend::parse("portable"), Some(Backend::Portable));
+        assert_eq!(Backend::parse("simd"), Some(best_simd()));
+        // avx2 resolves to something runnable on every host
+        let avx2 = Backend::parse("avx2").unwrap();
+        assert!(avx2 == Backend::Avx2 || avx2 == Backend::Portable);
+        assert_eq!(Backend::parse("neon"), None);
+        assert_eq!(Backend::parse(""), None);
+    }
+
+    #[test]
+    fn available_backends_start_with_scalar_and_portable() {
+        let all = available_backends();
+        assert!(all.len() >= 2);
+        assert_eq!(all[0], Backend::Scalar);
+        assert_eq!(all[1], Backend::Portable);
+        assert_eq!(all.contains(&Backend::Avx2), avx2_available());
+    }
+
+    #[test]
+    fn backend_names_roundtrip_through_parse() {
+        for b in [Backend::Scalar, Backend::Portable] {
+            assert_eq!(Backend::parse(b.name()), Some(b));
+        }
+    }
+
+    #[test]
+    fn every_backend_agrees_on_a_tiny_dot() {
+        let a = [1.0f32, -2.0, 3.0, 0.5, 4.0];
+        let b = [2.0f32, 1.0, -1.0, 8.0, 0.25];
+        let want = 2.0f32 - 2.0 - 3.0 + 4.0 + 1.0;
+        for back in available_backends() {
+            let got = dot_with(back, &a, &b);
+            assert!((got - want).abs() < 1e-5, "{}: {got}", back.name());
+        }
+    }
+
+    #[test]
+    fn dispatched_matches_selected_backend() {
+        let _l = BACKEND_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let a: Vec<f32> = (0..100).map(|i| (i % 7) as f32 - 3.0).collect();
+        let b: Vec<f32> = (0..100).map(|i| (i % 5) as f32 - 2.0).collect();
+        assert_eq!(dot(&a, &b), dot_with(backend(), &a, &b));
+    }
+
+    #[test]
+    fn set_backend_never_selects_unsupported_avx2() {
+        // safe fn contract: must not be able to route safe callers
+        // into intrinsics the CPU lacks
+        let _l = BACKEND_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let prev = backend();
+        set_backend(Backend::Avx2);
+        let eff = backend();
+        set_backend(prev); // restore before asserting (other tests)
+        if avx2_available() {
+            assert_eq!(eff, Backend::Avx2);
+        } else {
+            assert_eq!(eff, Backend::Portable);
+        }
+    }
+}

@@ -1,0 +1,193 @@
+//! Portable SIMD-friendly kernels: fixed-width chunks with multiple
+//! independent accumulators (instruction-level parallelism), written
+//! so LLVM auto-vectorizes the unrolled lanes on any target — the
+//! paper's multiple-AVX-512-accumulator strategy (§IV-A3) without
+//! target-specific intrinsics.  Tails fall back to the plain loop.
+
+/// Dot with 4 independent accumulators over 16-element chunks.
+#[inline]
+pub(super) fn dot(a: &[f32], b: &[f32]) -> f32 {
+    let chunks = a.len() / 16;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    for c in 0..chunks {
+        let i = c * 16;
+        let (xa, xb) = (&a[i..i + 16], &b[i..i + 16]);
+        s0 += xa[0] * xb[0] + xa[1] * xb[1] + xa[2] * xb[2] + xa[3] * xb[3];
+        s1 += xa[4] * xb[4] + xa[5] * xb[5] + xa[6] * xb[6] + xa[7] * xb[7];
+        s2 += xa[8] * xb[8] + xa[9] * xb[9] + xa[10] * xb[10] + xa[11] * xb[11];
+        s3 += xa[12] * xb[12] + xa[13] * xb[13] + xa[14] * xb[14] + xa[15] * xb[15];
+    }
+    let mut tail = 0.0f32;
+    for i in chunks * 16..a.len() {
+        tail += a[i] * b[i];
+    }
+    (s0 + s1) + (s2 + s3) + tail
+}
+
+/// Elementwise FMA with no loop-carried dependence — the plain zip
+/// already auto-vectorizes (each lane is independent).
+#[inline]
+pub(super) fn axpy(delta: f32, x: &[f32], v: &mut [f32]) {
+    for (vi, xi) in v.iter_mut().zip(x) {
+        *vi += delta * *xi;
+    }
+}
+
+/// `||x||^2` with 4 accumulators over 16-element chunks.
+#[inline]
+pub(super) fn sq_norm(x: &[f32]) -> f32 {
+    let chunks = x.len() / 16;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    for c in 0..chunks {
+        let i = c * 16;
+        let w = &x[i..i + 16];
+        s0 += w[0] * w[0] + w[1] * w[1] + w[2] * w[2] + w[3] * w[3];
+        s1 += w[4] * w[4] + w[5] * w[5] + w[6] * w[6] + w[7] * w[7];
+        s2 += w[8] * w[8] + w[9] * w[9] + w[10] * w[10] + w[11] * w[11];
+        s3 += w[12] * w[12] + w[13] * w[13] + w[14] * w[14] + w[15] * w[15];
+    }
+    let mut tail = 0.0f32;
+    for v in &x[chunks * 16..] {
+        tail += v * v;
+    }
+    (s0 + s1) + (s2 + s3) + tail
+}
+
+/// Fused `(<a, b>, ||a||^2)`: 2+2 accumulators over 8-element chunks
+/// (two reductions share one pass over `a`).
+#[inline]
+pub(super) fn dot_sq_norm(a: &[f32], b: &[f32]) -> (f32, f32) {
+    let chunks = a.len() / 8;
+    let (mut d0, mut d1) = (0.0f32, 0.0f32);
+    let (mut q0, mut q1) = (0.0f32, 0.0f32);
+    for c in 0..chunks {
+        let i = c * 8;
+        let (xa, xb) = (&a[i..i + 8], &b[i..i + 8]);
+        d0 += xa[0] * xb[0] + xa[1] * xb[1] + xa[2] * xb[2] + xa[3] * xb[3];
+        d1 += xa[4] * xb[4] + xa[5] * xb[5] + xa[6] * xb[6] + xa[7] * xb[7];
+        q0 += xa[0] * xa[0] + xa[1] * xa[1] + xa[2] * xa[2] + xa[3] * xa[3];
+        q1 += xa[4] * xa[4] + xa[5] * xa[5] + xa[6] * xa[6] + xa[7] * xa[7];
+    }
+    let (mut dt, mut qt) = (0.0f32, 0.0f32);
+    for i in chunks * 8..a.len() {
+        dt += a[i] * b[i];
+        qt += a[i] * a[i];
+    }
+    (d0 + d1 + dt, q0 + q1 + qt)
+}
+
+/// Gathered dot with 4 accumulators over 4-entry chunks (the gathers
+/// stay scalar loads; the independent accumulators still buy ILP —
+/// §IV-D's "minimal chunk size of 32 enables multiple accumulators").
+#[inline]
+pub(super) fn sparse_dot(rows: &[u32], vals: &[f32], w: &[f32]) -> f32 {
+    let n = rows.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    for c in 0..chunks {
+        let i = c * 4;
+        s0 += vals[i] * w[rows[i] as usize];
+        s1 += vals[i + 1] * w[rows[i + 1] as usize];
+        s2 += vals[i + 2] * w[rows[i + 2] as usize];
+        s3 += vals[i + 3] * w[rows[i + 3] as usize];
+    }
+    let mut tail = 0.0f32;
+    for i in chunks * 4..n {
+        tail += vals[i] * w[rows[i] as usize];
+    }
+    (s0 + s1) + (s2 + s3) + tail
+}
+
+/// Scatter axpy: rows may repeat between columns but are distinct
+/// within one, so there is no carried dependence to unroll around;
+/// hardware scatter (AVX-512) is a ROADMAP item.
+#[inline]
+pub(super) fn sparse_axpy(rows: &[u32], vals: &[f32], delta: f32, v: &mut [f32]) {
+    for (&r, &x) in rows.iter().zip(vals) {
+        v[r as usize] += delta * x;
+    }
+}
+
+/// Gathered dot over interleaved `(index, value)` pairs, 2-wide
+/// unrolled (SGD's VW-style row cache; indices and values interleave,
+/// so the wider dense unroll does not apply).
+#[inline]
+pub(super) fn pair_dot(row: &[(u32, f32)], w: &[f32]) -> f32 {
+    let n = row.len();
+    let chunks = n / 2;
+    let (mut s0, mut s1) = (0.0f32, 0.0f32);
+    for c in 0..chunks {
+        let i = c * 2;
+        s0 += row[i].1 * w[row[i].0 as usize];
+        s1 += row[i + 1].1 * w[row[i + 1].0 as usize];
+    }
+    if n % 2 == 1 {
+        s0 += row[n - 1].1 * w[row[n - 1].0 as usize];
+    }
+    s0 + s1
+}
+
+/// f64-accumulated `sum (a_i - b_i)^2` with 2 accumulators (objective
+/// evaluations keep f64 so traces do not floor at fp32 noise).
+#[inline]
+pub(super) fn sq_err_f64(a: &[f32], b: &[f32]) -> f64 {
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1) = (0.0f64, 0.0f64);
+    for c in 0..chunks {
+        let i = c * 4;
+        let r0 = (a[i] - b[i]) as f64;
+        let r1 = (a[i + 1] - b[i + 1]) as f64;
+        let r2 = (a[i + 2] - b[i + 2]) as f64;
+        let r3 = (a[i + 3] - b[i + 3]) as f64;
+        s0 += r0 * r0 + r1 * r1;
+        s1 += r2 * r2 + r3 * r3;
+    }
+    let mut tail = 0.0f64;
+    for i in chunks * 4..n {
+        let r = (a[i] - b[i]) as f64;
+        tail += r * r;
+    }
+    s0 + s1 + tail
+}
+
+/// f64-accumulated `||a||^2` with 2 accumulators.
+#[inline]
+pub(super) fn sq_norm_f64(a: &[f32]) -> f64 {
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1) = (0.0f64, 0.0f64);
+    for c in 0..chunks {
+        let i = c * 4;
+        let r0 = a[i] as f64;
+        let r1 = a[i + 1] as f64;
+        let r2 = a[i + 2] as f64;
+        let r3 = a[i + 3] as f64;
+        s0 += r0 * r0 + r1 * r1;
+        s1 += r2 * r2 + r3 * r3;
+    }
+    let mut tail = 0.0f64;
+    for i in chunks * 4..n {
+        let r = a[i] as f64;
+        tail += r * r;
+    }
+    s0 + s1 + tail
+}
+
+/// Elementwise map, 4-wide unrolled (the closure blocks vectorization;
+/// unrolling still hides call/branch latency on trivial maps).
+#[inline]
+pub(super) fn map2_into<F: Fn(f32, f32) -> f32>(out: &mut [f32], a: &[f32], b: &[f32], f: F) {
+    let n = out.len();
+    let chunks = n / 4;
+    for c in 0..chunks {
+        let i = c * 4;
+        out[i] = f(a[i], b[i]);
+        out[i + 1] = f(a[i + 1], b[i + 1]);
+        out[i + 2] = f(a[i + 2], b[i + 2]);
+        out[i + 3] = f(a[i + 3], b[i + 3]);
+    }
+    for i in chunks * 4..n {
+        out[i] = f(a[i], b[i]);
+    }
+}

@@ -1,0 +1,144 @@
+//! 4-bit quantized unpack kernels (paper §IV-E, Clover-style).
+//!
+//! Codes live two-per-byte (low nibble = even row), biased by +8 into
+//! `[0, 15]`; one f32 scale per [`QGROUP`]-element group.  The kernels
+//! accumulate each group at code precision and apply the scale once
+//! per group (hoisted), trading unpack ALU for 4x less data movement.
+//!
+//! The scalar reference decodes nibbles arithmetically; the SIMD-path
+//! implementation replaces the two shift/mask/convert chains per byte
+//! with one L1-resident 2 KiB lookup table (§Perf: measured faster
+//! than the arithmetic unpack — the table stays hot).
+
+/// Elements per scale group — must match `ref.QGROUP` on the python
+/// side (`python/compile/kernels/ref.py`).
+pub const QGROUP: usize = 64;
+
+/// byte -> (low-nibble value, high-nibble value), debiased to [-8, 7].
+/// Built at compile time: float arithmetic is allowed in `static`
+/// initializers (unlike in `const fn` on older toolchains), so this
+/// needs no lazy-init dependency.
+static NIBBLE_LUT: [[f32; 2]; 256] = {
+    let mut lut = [[0.0f32; 2]; 256];
+    let mut b = 0usize;
+    while b < 256 {
+        lut[b][0] = (b & 0xF) as f32 - 8.0;
+        lut[b][1] = (b >> 4) as f32 - 8.0;
+        b += 1;
+    }
+    lut
+};
+
+/// Decode one 4-bit code: row parity picks the nibble.
+#[inline(always)]
+pub(super) fn code_of(byte: u8, even: bool) -> i32 {
+    let nib = if even { byte & 0xF } else { byte >> 4 };
+    nib as i32 - 8
+}
+
+/// Scalar reference unpack-dot over rows `[lo, hi)`, `lo` group-aligned.
+pub(super) fn dot_range_scalar(
+    packed: &[u8],
+    scales: &[f32],
+    w: &[f32],
+    lo: usize,
+    hi: usize,
+) -> f32 {
+    let mut total = 0.0f32;
+    let g_lo = lo / QGROUP;
+    let g_hi = hi.div_ceil(QGROUP);
+    for g in g_lo..g_hi {
+        let base = g * QGROUP;
+        let end = (base + QGROUP).min(hi);
+        let mut s = 0.0f32;
+        for r in base..end {
+            s += code_of(packed[r / 2], r % 2 == 0) as f32 * w[r];
+        }
+        total += s * scales[g];
+    }
+    total
+}
+
+/// LUT-based unpack-dot with 4 accumulators (two bytes -> four codes
+/// per step), same group/scale structure as the scalar reference.
+pub(super) fn dot_range_lut(
+    packed: &[u8],
+    scales: &[f32],
+    w: &[f32],
+    lo: usize,
+    hi: usize,
+) -> f32 {
+    let lut = &NIBBLE_LUT;
+    let mut total = 0.0f32;
+    let g_lo = lo / QGROUP;
+    let g_hi = hi.div_ceil(QGROUP);
+    for g in g_lo..g_hi {
+        let base = g * QGROUP;
+        let end = (base + QGROUP).min(hi);
+        let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+        let mut r = base;
+        while r + 3 < end {
+            let b0 = lut[packed[r / 2] as usize];
+            let b1 = lut[packed[r / 2 + 1] as usize];
+            s0 += b0[0] * w[r];
+            s1 += b0[1] * w[r + 1];
+            s2 += b1[0] * w[r + 2];
+            s3 += b1[1] * w[r + 3];
+            r += 4;
+        }
+        while r < end {
+            s0 += code_of(packed[r / 2], r % 2 == 0) as f32 * w[r];
+            r += 1;
+        }
+        total += ((s0 + s1) + (s2 + s3)) * scales[g];
+    }
+    total
+}
+
+/// Scalar reference unpack-axpy over the whole column.
+pub(super) fn axpy_scalar(packed: &[u8], scales: &[f32], delta: f32, v: &mut [f32]) {
+    for (g, &scale) in scales.iter().enumerate() {
+        let ds = delta * scale;
+        let base = g * QGROUP;
+        for r in base..base + QGROUP {
+            v[r] += code_of(packed[r / 2], r % 2 == 0) as f32 * ds;
+        }
+    }
+}
+
+/// LUT-based unpack-axpy: one table load yields both nibbles of a byte.
+pub(super) fn axpy_lut(packed: &[u8], scales: &[f32], delta: f32, v: &mut [f32]) {
+    let lut = &NIBBLE_LUT;
+    for (g, &scale) in scales.iter().enumerate() {
+        let ds = delta * scale;
+        let base = g * QGROUP;
+        let mut r = base;
+        while r + 1 < base + QGROUP {
+            let pair = lut[packed[r / 2] as usize];
+            v[r] += pair[0] * ds;
+            v[r + 1] += pair[1] * ds;
+            r += 2;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lut_matches_code_of() {
+        for b in 0..=255u8 {
+            assert_eq!(NIBBLE_LUT[b as usize][0], code_of(b, true) as f32);
+            assert_eq!(NIBBLE_LUT[b as usize][1], code_of(b, false) as f32);
+        }
+    }
+
+    #[test]
+    fn code_range_is_centered() {
+        assert_eq!(code_of(0x00, true), -8);
+        assert_eq!(code_of(0x0F, true), 7);
+        assert_eq!(code_of(0xF0, false), 7);
+        assert_eq!(code_of(0x80, true), -8);
+    }
+}

@@ -1,0 +1,92 @@
+//! Reference scalar kernels: the simplest correct loops, in the
+//! left-to-right summation order.  These are the ground truth the
+//! differential harness (`rust/tests/kernel_diff.rs`) measures the
+//! SIMD backends against, and the `RUST_PALLAS_KERNELS=scalar` A/B
+//! baseline — keep them boring.
+
+#[inline]
+pub(super) fn dot(a: &[f32], b: &[f32]) -> f32 {
+    let mut s = 0.0f32;
+    for (x, y) in a.iter().zip(b) {
+        s += x * y;
+    }
+    s
+}
+
+#[inline]
+pub(super) fn axpy(delta: f32, x: &[f32], v: &mut [f32]) {
+    for (vi, xi) in v.iter_mut().zip(x) {
+        *vi += delta * *xi;
+    }
+}
+
+#[inline]
+pub(super) fn sq_norm(x: &[f32]) -> f32 {
+    let mut s = 0.0f32;
+    for v in x {
+        s += v * v;
+    }
+    s
+}
+
+#[inline]
+pub(super) fn dot_sq_norm(a: &[f32], b: &[f32]) -> (f32, f32) {
+    let (mut d, mut q) = (0.0f32, 0.0f32);
+    for (x, y) in a.iter().zip(b) {
+        d += x * y;
+        q += x * x;
+    }
+    (d, q)
+}
+
+#[inline]
+pub(super) fn sparse_dot(rows: &[u32], vals: &[f32], w: &[f32]) -> f32 {
+    let mut s = 0.0f32;
+    for (&r, &x) in rows.iter().zip(vals) {
+        s += x * w[r as usize];
+    }
+    s
+}
+
+#[inline]
+pub(super) fn sparse_axpy(rows: &[u32], vals: &[f32], delta: f32, v: &mut [f32]) {
+    for (&r, &x) in rows.iter().zip(vals) {
+        v[r as usize] += delta * x;
+    }
+}
+
+#[inline]
+pub(super) fn map2_into<F: Fn(f32, f32) -> f32>(out: &mut [f32], a: &[f32], b: &[f32], f: F) {
+    for ((o, &x), &y) in out.iter_mut().zip(a).zip(b) {
+        *o = f(x, y);
+    }
+}
+
+#[inline]
+pub(super) fn pair_dot(row: &[(u32, f32)], w: &[f32]) -> f32 {
+    let mut s = 0.0f32;
+    for &(j, x) in row {
+        s += x * w[j as usize];
+    }
+    s
+}
+
+#[inline]
+pub(super) fn sq_err_f64(a: &[f32], b: &[f32]) -> f64 {
+    let mut s = 0.0f64;
+    for (&x, &y) in a.iter().zip(b) {
+        let r = (x - y) as f64;
+        s += r * r;
+    }
+    s
+}
+
+#[inline]
+pub(super) fn sq_norm_f64(a: &[f32]) -> f64 {
+    let mut s = 0.0f64;
+    for &x in a {
+        let r = x as f64;
+        s += r * r;
+    }
+    s
+}

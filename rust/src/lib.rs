@@ -18,6 +18,9 @@
 //!   synthetic workload generators, LIBSVM I/O;
 //! * [`memory`] — the two-tier (DRAM vs MCDRAM) placement & bandwidth
 //!   simulator standing in for KNL flat mode;
+//! * [`kernels`] — every hot inner loop (dense/sparse/quantized
+//!   dot/axpy/norms and the shared-vector variants) behind one
+//!   runtime-dispatched scalar/SIMD seam (`RUST_PALLAS_KERNELS`);
 //! * [`glm`] — the model zoo (Lasso, SVM, ridge, logistic, elastic-net)
 //!   with closed-form coordinate updates and duality gaps;
 //! * [`threadpool`] — pinned worker pools with counter-based barriers
@@ -38,6 +41,7 @@ pub mod bench_support;
 pub mod coordinator;
 pub mod data;
 pub mod glm;
+pub mod kernels;
 pub mod memory;
 pub mod metrics;
 pub mod runtime;

@@ -55,12 +55,29 @@ TRAIN FLAGS
   --csv       dump the convergence trace as CSV
   --seed      PRNG seed                         (default 42)
 
+GLOBAL FLAGS
+  --kernels   scalar|simd|portable|avx2 — inner-loop backend for every
+              hot dot/axpy kernel (default: best SIMD the host supports;
+              also via the RUST_PALLAS_KERNELS environment variable)
+
 All solvers run through the same solver::Trainer facade and report a
-unified FitReport (see rust/DESIGN.md).
+unified FitReport (see rust/DESIGN.md §Kernels for the dispatch policy).
 ";
 
 fn main() {
     let args = Args::from_env();
+    // kernel backend override — must run before anything touches a hot
+    // loop (the dispatch is process-wide; also settable via the
+    // RUST_PALLAS_KERNELS environment variable)
+    if let Some(spec) = args.get("kernels") {
+        match hthc::kernels::Backend::parse(&spec) {
+            Some(b) => hthc::kernels::set_backend(b),
+            None => {
+                eprintln!("unknown --kernels {spec:?} (want scalar|simd|portable|avx2)");
+                std::process::exit(2);
+            }
+        }
+    }
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     match cmd {
         "train" => cmd_train(&args),
@@ -262,12 +279,7 @@ fn cmd_evaluate(args: &Args) {
     let v = g.matrix.matvec_alpha(&saved.alpha);
     match family {
         Family::Regression => {
-            let mse: f64 = v
-                .iter()
-                .zip(&g.targets)
-                .map(|(&p, &t)| ((p - t) as f64).powi(2))
-                .sum::<f64>()
-                / g.d() as f64;
+            let mse = hthc::kernels::sq_err_f64(&v, &g.targets) / g.d() as f64;
             let support = saved.alpha.iter().filter(|&&a| a != 0.0).count();
             println!("MSE {mse:.6}; support {support}/{}", g.n());
         }

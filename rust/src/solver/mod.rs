@@ -15,9 +15,10 @@
 //!   shared stopping rules in [`StopWhen`] and name-based dispatch in
 //!   [`by_name`] / [`cli`].
 //!
-//! The old per-engine entry points (`HthcSolver::train`, `train_st`,
-//! `train_omp`, `train_passcode`, `train_sgd`) remain as deprecated
-//! shims for one release and delegate here.
+//! This is the only way to run an engine: the pre-redesign per-engine
+//! entry points (`HthcSolver::train`, `train_st`, `train_omp`,
+//! `train_passcode`, `train_sgd`) were kept as deprecated shims for
+//! one release and have now been removed.
 //!
 //! [`TierSim`]: crate::memory::TierSim
 //! [`HthcConfig`]: crate::coordinator::HthcConfig

@@ -5,7 +5,6 @@
 //! A/B update counts, gap-memory refresh fraction, SGD's final MSE, ...)
 //! live in a typed [`Extras`] map keyed by the constants in [`keys`].
 
-use crate::coordinator::TrainResult;
 use crate::metrics::{ConvergenceTrace, PhaseTimes, StalenessHistogram};
 use std::collections::BTreeMap;
 
@@ -136,24 +135,6 @@ impl FitReport {
             self.b_zero_deltas(),
         )
     }
-
-    /// Legacy view for the deprecated `train_*` shims.
-    pub(crate) fn into_train_result(self) -> TrainResult {
-        TrainResult {
-            mean_refresh_frac: self.refresh_frac(),
-            total_a_updates: self.a_updates(),
-            total_b_updates: self.b_updates(),
-            total_b_zero_deltas: self.b_zero_deltas(),
-            alpha: self.alpha,
-            v: self.v,
-            trace: self.trace,
-            epochs: self.epochs,
-            wall_secs: self.wall_secs,
-            converged: self.converged,
-            phase_times: self.phase_times,
-            staleness: self.staleness,
-        }
-    }
 }
 
 #[cfg(test)]
@@ -200,17 +181,6 @@ mod tests {
         r.extras = Extras::default();
         assert_eq!(r.a_updates(), 0);
         assert_eq!(r.refresh_frac(), 0.0);
-    }
-
-    #[test]
-    fn train_result_conversion_preserves_stats() {
-        let tr = report().into_train_result();
-        assert_eq!(tr.total_a_updates, 10);
-        assert_eq!(tr.total_b_updates, 20);
-        assert_eq!(tr.total_b_zero_deltas, 3);
-        assert!((tr.mean_refresh_frac - 0.5).abs() < 1e-12);
-        assert_eq!(tr.epochs, 4);
-        assert!(tr.converged);
     }
 
     #[test]

@@ -1,0 +1,505 @@
+//! Differential property tests for the `kernels` layer: every SIMD
+//! backend must agree with the scalar reference within a summation
+//! error bound, across adversarial shapes — empty slices, length 1,
+//! non-multiple-of-lane lengths, unaligned `dot_range` sub-ranges,
+//! degenerate sparse columns, and quantized group boundaries.
+//!
+//! Bound rationale (see rust/DESIGN.md §Kernels): any summation order
+//! of `n` f32 terms has forward error at most `(n-1) eps Σ|term_i|`
+//! (FMA only tightens it), so two orders differ by at most twice that.
+//! The assertions use `C·n·eps·Σ|term|` with a small safety factor C
+//! — a tight, shape-aware ULP-style bound rather than a loose fixed
+//! tolerance.
+//!
+//! Runs under any `RUST_PALLAS_KERNELS` setting: explicit `_with`
+//! entry points pin each backend, so scalar-vs-SIMD agreement is
+//! checked regardless of what the dispatcher would pick (CI runs the
+//! whole suite under both `scalar` and `simd` anyway).
+
+use hthc::coordinator::SharedVector;
+use hthc::data::{DenseMatrix, QuantizedMatrix};
+use hthc::kernels::{self, Backend, QGROUP};
+use hthc::util::Rng;
+
+/// Adversarial lengths: empty, 1, around every lane width (4/8/16/32),
+/// and the issue's non-multiples 7, 33, 1023.
+const LENGTHS: &[usize] = &[
+    0, 1, 2, 3, 4, 5, 7, 8, 9, 15, 16, 17, 31, 32, 33, 63, 64, 65, 100, 255, 256, 257, 1023,
+    1024, 1025,
+];
+
+/// `C·n·eps·Σ|term|` summation bound (+ tiny absolute floor for n=0).
+fn sum_bound(n: usize, sum_abs: f64) -> f64 {
+    8.0 * (n.max(1) as f64) * (f32::EPSILON as f64) * sum_abs + 1e-30
+}
+
+fn randvec(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.normal()).collect()
+}
+
+// ---------------------------------------------------------------------------
+// Dense kernels
+// ---------------------------------------------------------------------------
+
+#[test]
+fn dot_backends_agree_across_lengths() {
+    let mut rng = Rng::new(9001);
+    for &n in LENGTHS {
+        let a = randvec(&mut rng, n);
+        let b = randvec(&mut rng, n);
+        let want: f64 = a.iter().zip(&b).map(|(&x, &y)| x as f64 * y as f64).sum();
+        let sum_abs: f64 = a.iter().zip(&b).map(|(&x, &y)| (x as f64 * y as f64).abs()).sum();
+        let tol = sum_bound(n, sum_abs);
+        let scalar = kernels::dot_with(Backend::Scalar, &a, &b) as f64;
+        assert!((scalar - want).abs() <= tol, "scalar n={n}: {scalar} vs {want}");
+        for back in kernels::available_backends() {
+            let got = kernels::dot_with(back, &a, &b) as f64;
+            assert!(
+                (got - scalar).abs() <= 2.0 * tol,
+                "n={n} [{}]: {got} vs scalar {scalar} (tol {tol:e})",
+                back.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn dot_range_unaligned_subranges_agree() {
+    let mut rng = Rng::new(9002);
+    let n = 1023;
+    let a = randvec(&mut rng, n);
+    let b = randvec(&mut rng, n);
+    // deliberately lane-misaligned windows
+    for &(lo, hi) in &[
+        (0usize, 0usize),
+        (0, 1),
+        (1, 2),
+        (1, n),
+        (3, 7),
+        (5, 38),
+        (17, 1000),
+        (511, 513),
+        (1000, 1023),
+    ] {
+        let want: f64 = a[lo..hi]
+            .iter()
+            .zip(&b[lo..hi])
+            .map(|(&x, &y)| x as f64 * y as f64)
+            .sum();
+        let sum_abs: f64 = a[lo..hi]
+            .iter()
+            .zip(&b[lo..hi])
+            .map(|(&x, &y)| (x as f64 * y as f64).abs())
+            .sum();
+        let tol = sum_bound(hi - lo, sum_abs);
+        for back in kernels::available_backends() {
+            let got = kernels::dot_range_with(back, &a, &b, lo, hi) as f64;
+            assert!(
+                (got - want).abs() <= tol,
+                "[{lo}, {hi}) [{}]: {got} vs {want}",
+                back.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn axpy_backends_agree_elementwise() {
+    let mut rng = Rng::new(9003);
+    for &n in LENGTHS {
+        let x = randvec(&mut rng, n);
+        let v0 = randvec(&mut rng, n);
+        let delta = rng.normal();
+        let mut scalar = v0.clone();
+        kernels::axpy_with(Backend::Scalar, delta, &x, &mut scalar);
+        for back in kernels::available_backends() {
+            let mut got = v0.clone();
+            kernels::axpy_with(back, delta, &x, &mut got);
+            for (i, (&g, &s)) in got.iter().zip(&scalar).enumerate() {
+                // per-element: FMA vs mul+add differ by ~0.5 ulp of the
+                // *product*, which under cancellation (v0 ~ -delta*x)
+                // dwarfs any bound on the result — include the term
+                let term = (delta * x[i]).abs();
+                let tol = 4.0 * f32::EPSILON * (g.abs() + s.abs() + term) + 1e-30;
+                assert!(
+                    (g - s).abs() <= tol,
+                    "n={n} i={i} [{}]: {g} vs {s}",
+                    back.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn sq_norm_backends_agree() {
+    let mut rng = Rng::new(9004);
+    for &n in LENGTHS {
+        let x = randvec(&mut rng, n);
+        let want: f64 = x.iter().map(|&v| v as f64 * v as f64).sum();
+        let tol = sum_bound(n, want); // all terms nonnegative
+        for back in kernels::available_backends() {
+            let got = kernels::sq_norm_with(back, &x) as f64;
+            assert!((got - want).abs() <= tol, "n={n} [{}]: {got} vs {want}", back.name());
+        }
+    }
+}
+
+#[test]
+fn fused_dot_sq_norm_matches_separate_kernels() {
+    let mut rng = Rng::new(9005);
+    for &n in LENGTHS {
+        let a = randvec(&mut rng, n);
+        let b = randvec(&mut rng, n);
+        let dot_abs: f64 = a.iter().zip(&b).map(|(&x, &y)| (x as f64 * y as f64).abs()).sum();
+        let nrm: f64 = a.iter().map(|&v| v as f64 * v as f64).sum();
+        let dot_ref: f64 = a.iter().zip(&b).map(|(&x, &y)| x as f64 * y as f64).sum();
+        for back in kernels::available_backends() {
+            let (d, q) = kernels::dot_sq_norm_with(back, &a, &b);
+            assert!(
+                (d as f64 - dot_ref).abs() <= sum_bound(n, dot_abs),
+                "fused dot n={n} [{}]",
+                back.name()
+            );
+            assert!(
+                (q as f64 - nrm).abs() <= sum_bound(n, nrm),
+                "fused sq_norm n={n} [{}]",
+                back.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn f64_reductions_backends_agree() {
+    // sq_err_f64 / sq_norm_f64 accumulate in f64, so the backend gap is
+    // at f64 epsilon scale — bound with the f64 analogue of sum_bound
+    let mut rng = Rng::new(9014);
+    for &n in LENGTHS {
+        let a = randvec(&mut rng, n);
+        let b = randvec(&mut rng, n);
+        let err_ref: f64 = a
+            .iter()
+            .zip(&b)
+            .map(|(&x, &y)| {
+                let r = (x - y) as f64;
+                r * r
+            })
+            .sum();
+        let nrm_ref: f64 = a.iter().map(|&x| x as f64 * x as f64).sum();
+        let ftol = |sum: f64| 8.0 * (n.max(1) as f64) * f64::EPSILON * sum + 1e-300;
+        for back in kernels::available_backends() {
+            let e = kernels::sq_err_f64_with(back, &a, &b);
+            let q = kernels::sq_norm_f64_with(back, &a);
+            assert!((e - err_ref).abs() <= ftol(err_ref), "sq_err n={n} [{}]", back.name());
+            assert!((q - nrm_ref).abs() <= ftol(nrm_ref), "sq_norm n={n} [{}]", back.name());
+        }
+    }
+}
+
+#[test]
+fn map2_backends_are_bitwise_identical() {
+    // the map applies f elementwise on every backend — only the loop
+    // structure differs, so outputs must match exactly
+    let mut rng = Rng::new(9015);
+    for &n in LENGTHS {
+        let a = randvec(&mut rng, n);
+        let b = randvec(&mut rng, n);
+        let f = |x: f32, y: f32| (x - y).clamp(-1.5, 1.5) * 0.25;
+        let mut scalar = vec![0.0f32; n];
+        kernels::map2_into_with(Backend::Scalar, &mut scalar, &a, &b, f);
+        for back in kernels::available_backends() {
+            let mut got = vec![0.0f32; n];
+            kernels::map2_into_with(back, &mut got, &a, &b, f);
+            for (i, (&g, &s)) in got.iter().zip(&scalar).enumerate() {
+                assert!(g.to_bits() == s.to_bits(), "n={n} i={i} [{}]", back.name());
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Sparse kernels
+// ---------------------------------------------------------------------------
+
+/// Random sorted sparse column with `nnz` entries over `d` rows.
+fn sparse_col(rng: &mut Rng, d: usize, nnz: usize) -> (Vec<u32>, Vec<f32>) {
+    let mut rows: Vec<u32> = rng.sample_distinct(d, nnz).into_iter().map(|r| r as u32).collect();
+    rows.sort_unstable();
+    let vals = randvec(rng, nnz);
+    (rows, vals)
+}
+
+#[test]
+fn sparse_dot_backends_agree_adversarial_columns() {
+    let mut rng = Rng::new(9006);
+    let d = 4096;
+    let w = randvec(&mut rng, d);
+    // empty, single-nonzero, tiny, lane-odd, dense-ish
+    let cases: Vec<(Vec<u32>, Vec<f32>)> = vec![
+        (vec![], vec![]),
+        (vec![17], vec![3.5]),
+        (vec![d as u32 - 1], vec![-2.0]),
+        sparse_col(&mut rng, d, 3),
+        sparse_col(&mut rng, d, 7),
+        sparse_col(&mut rng, d, 33),
+        sparse_col(&mut rng, d, 1023),
+        // all-zero values on live indices
+        (vec![0, 5, 9], vec![0.0, 0.0, 0.0]),
+    ];
+    for (ci, (rows, vals)) in cases.iter().enumerate() {
+        let want: f64 = rows
+            .iter()
+            .zip(vals)
+            .map(|(&r, &x)| x as f64 * w[r as usize] as f64)
+            .sum();
+        let sum_abs: f64 = rows
+            .iter()
+            .zip(vals)
+            .map(|(&r, &x)| (x as f64 * w[r as usize] as f64).abs())
+            .sum();
+        let tol = sum_bound(rows.len(), sum_abs);
+        for back in kernels::available_backends() {
+            let got = kernels::sparse_dot_with(back, rows, vals, &w) as f64;
+            assert!(
+                (got - want).abs() <= tol,
+                "case {ci} nnz={} [{}]: {got} vs {want}",
+                rows.len(),
+                back.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn sparse_axpy_backends_agree() {
+    let mut rng = Rng::new(9007);
+    let d = 2048;
+    for &nnz in &[0usize, 1, 7, 33, 500] {
+        let (rows, vals) = sparse_col(&mut rng, d, nnz);
+        let v0 = randvec(&mut rng, d);
+        let delta = rng.normal();
+        let mut scalar = v0.clone();
+        kernels::sparse_axpy_with(Backend::Scalar, &rows, &vals, delta, &mut scalar);
+        // per-element scattered term magnitude (0 where no entry landed),
+        // for the same cancellation-proof tolerance as the dense test
+        let mut term = vec![0.0f32; d];
+        for (&r, &x) in rows.iter().zip(&vals) {
+            term[r as usize] = (delta * x).abs();
+        }
+        for back in kernels::available_backends() {
+            let mut got = v0.clone();
+            kernels::sparse_axpy_with(back, &rows, &vals, delta, &mut got);
+            for (i, (&g, &s)) in got.iter().zip(&scalar).enumerate() {
+                let tol = 4.0 * f32::EPSILON * (g.abs() + s.abs() + term[i]) + 1e-30;
+                assert!((g - s).abs() <= tol, "nnz={nnz} i={i} [{}]", back.name());
+            }
+        }
+    }
+}
+
+#[test]
+fn pair_dot_backends_agree() {
+    // SGD's interleaved (index, value) row format
+    let mut rng = Rng::new(9013);
+    let d = 512;
+    let w = randvec(&mut rng, d);
+    for &nnz in &[0usize, 1, 2, 3, 7, 33, 255] {
+        let (rows, vals) = sparse_col(&mut rng, d, nnz);
+        let row: Vec<(u32, f32)> = rows.iter().copied().zip(vals.iter().copied()).collect();
+        let want: f64 = row.iter().map(|&(j, x)| x as f64 * w[j as usize] as f64).sum();
+        let sum_abs: f64 = row
+            .iter()
+            .map(|&(j, x)| (x as f64 * w[j as usize] as f64).abs())
+            .sum();
+        let tol = sum_bound(nnz, sum_abs);
+        for back in kernels::available_backends() {
+            let got = kernels::pair_dot_with(back, &row, &w) as f64;
+            assert!(
+                (got - want).abs() <= tol,
+                "nnz={nnz} [{}]: {got} vs {want}",
+                back.name()
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Quantized kernels
+// ---------------------------------------------------------------------------
+
+fn quantized(rng: &mut Rng, d: usize) -> QuantizedMatrix {
+    let data = randvec(rng, d);
+    QuantizedMatrix::from_dense(&DenseMatrix::from_col_major(d, 1, data))
+}
+
+#[test]
+fn quant_dot_backends_agree_at_group_boundaries() {
+    let mut rng = Rng::new(9008);
+    let d = 4 * QGROUP; // 256
+    let q = quantized(&mut rng, d);
+    let (packed, scales) = q.col_packed(0);
+    let w = randvec(&mut rng, d);
+    let deq = q.col_dense(0);
+    // lo must be group-aligned; hi may cut a group anywhere
+    for &(lo, hi) in &[
+        (0usize, 0usize),
+        (0, 1),
+        (0, QGROUP - 1),
+        (0, QGROUP),
+        (0, QGROUP + 5),
+        (0, 100),
+        (QGROUP, QGROUP),
+        (QGROUP, QGROUP + 1),
+        (QGROUP, 2 * QGROUP + 17),
+        (2 * QGROUP, d),
+        (3 * QGROUP, d - 3),
+        (0, d),
+    ] {
+        let want: f64 = (lo..hi).map(|r| deq[r] as f64 * w[r] as f64).sum();
+        let sum_abs: f64 = (lo..hi).map(|r| (deq[r] as f64 * w[r] as f64).abs()).sum();
+        let tol = sum_bound(hi - lo, sum_abs) * 2.0; // + per-group scale rounding
+        for back in kernels::available_backends() {
+            let got = kernels::quant_dot_range_with(back, packed, scales, &w, lo, hi) as f64;
+            assert!(
+                (got - want).abs() <= tol,
+                "[{lo}, {hi}) [{}]: {got} vs {want} (tol {tol:e})",
+                back.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn quant_axpy_backends_agree_elementwise() {
+    let mut rng = Rng::new(9009);
+    for &groups in &[1usize, 2, 5] {
+        let d = groups * QGROUP;
+        let q = quantized(&mut rng, d);
+        let (packed, scales) = q.col_packed(0);
+        let v0 = randvec(&mut rng, d);
+        let delta = rng.normal();
+        let mut scalar = v0.clone();
+        kernels::quant_axpy_with(Backend::Scalar, packed, scales, delta, &mut scalar);
+        // against the dequantized reference
+        let deq = q.col_dense(0);
+        for (i, &s) in scalar.iter().enumerate() {
+            let want = v0[i] + delta * deq[i];
+            // the term's own rounding can exceed a bound on the (possibly
+            // cancelled) result, so include its magnitude in the tolerance
+            let tol = 8.0 * f32::EPSILON * (s.abs() + want.abs() + (delta * deq[i]).abs()) + 1e-30;
+            assert!((s - want).abs() <= tol, "scalar vs dequantized i={i}: {s} vs {want}");
+        }
+        for back in kernels::available_backends() {
+            let mut got = v0.clone();
+            kernels::quant_axpy_with(back, packed, scales, delta, &mut got);
+            for (i, (&g, &s)) in got.iter().zip(&scalar).enumerate() {
+                let tol = 4.0 * f32::EPSILON * (g.abs() + s.abs()) + 1e-30;
+                assert!((g - s).abs() <= tol, "d={d} i={i} [{}]", back.name());
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shared-vector (atomic) kernels — validated against an f64 reference
+// through the public SharedVector API on the *dispatched* backend (the
+// CI kernel matrix runs this under both scalar and simd settings).
+// ---------------------------------------------------------------------------
+
+#[test]
+fn shared_vector_mapped_dot_matches_f64_reference() {
+    let mut rng = Rng::new(9010);
+    for &n in &[0usize, 1, 7, 33, 1023] {
+        let vv = randvec(&mut rng, n);
+        let x = randvec(&mut rng, n);
+        let y = randvec(&mut rng, n);
+        let v = SharedVector::from_slice(&vv, 64);
+        let w_of = |vj: f32, yj: f32| vj - yj;
+        let want: f64 = (0..n)
+            .map(|r| x[r] as f64 * (vv[r] - y[r]) as f64)
+            .sum();
+        let sum_abs: f64 = (0..n)
+            .map(|r| (x[r] as f64 * (vv[r] - y[r]) as f64).abs())
+            .sum();
+        let got = v.dot_mapped_range(&x, &y, w_of, 0, n) as f64;
+        assert!(
+            (got - want).abs() <= 2.0 * sum_bound(n, sum_abs),
+            "n={n} [{}]: {got} vs {want}",
+            kernels::backend().name()
+        );
+        // unaligned window
+        if n > 5 {
+            let (lo, hi) = (1, n - 2);
+            let wwant: f64 = (lo..hi).map(|r| x[r] as f64 * (vv[r] - y[r]) as f64).sum();
+            let wgot = v.dot_mapped_range(&x, &y, w_of, lo, hi) as f64;
+            assert!((wgot - wwant).abs() <= 2.0 * sum_bound(n, sum_abs), "window n={n}");
+        }
+        // scaled fast path
+        let scale = 0.37f32;
+        let swant: f64 = (0..n).map(|r| x[r] as f64 * vv[r] as f64).sum::<f64>() * scale as f64;
+        let sgot = v.dot_scaled_range(&x, scale, 0, n) as f64;
+        assert!((sgot - swant).abs() <= 2.0 * sum_bound(n, sum_abs) + 1e-12, "scaled n={n}");
+    }
+}
+
+#[test]
+fn shared_vector_locked_axpy_matches_f64_reference() {
+    let mut rng = Rng::new(9011);
+    let n = 1023;
+    let vv = randvec(&mut rng, n);
+    let x = randvec(&mut rng, n);
+    let delta = rng.normal();
+    // dense, across lock-chunk sizes that do and don't divide n
+    for &chunk in &[1usize, 7, 64, 1024, 4096] {
+        let v = SharedVector::from_slice(&vv, chunk);
+        v.axpy_dense_locked(&x, delta, 0, n);
+        for r in 0..n {
+            let want = vv[r] + delta * x[r];
+            let got = v.read(r);
+            let tol = 4.0 * f32::EPSILON * (want.abs() + got.abs()) + 1e-30;
+            assert!((got - want).abs() <= tol, "chunk={chunk} r={r}");
+        }
+    }
+    // sparse scatter spanning several chunks
+    let (rows, vals) = sparse_col(&mut rng, n, 100);
+    let v = SharedVector::from_slice(&vv, 64);
+    v.axpy_sparse_locked(&rows, &vals, delta);
+    let mut want = vv.clone();
+    for (&r, &xv) in rows.iter().zip(&vals) {
+        want[r as usize] += delta * xv;
+    }
+    for r in 0..n {
+        let got = v.read(r);
+        let tol = 4.0 * f32::EPSILON * (want[r].abs() + got.abs()) + 1e-30;
+        assert!((got - want[r]).abs() <= tol, "sparse r={r}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Dispatch plumbing
+// ---------------------------------------------------------------------------
+
+#[test]
+fn dispatched_entry_points_match_explicit_backend() {
+    let mut rng = Rng::new(9012);
+    let a = randvec(&mut rng, 257);
+    let b = randvec(&mut rng, 257);
+    let back = kernels::backend();
+    assert_eq!(kernels::dot(&a, &b), kernels::dot_with(back, &a, &b));
+    assert_eq!(kernels::sq_norm(&a), kernels::sq_norm_with(back, &a));
+    assert_eq!(kernels::dot_sq_norm(&a, &b), kernels::dot_sq_norm_with(back, &a, &b));
+    let (rows, vals) = sparse_col(&mut rng, 257, 33);
+    assert_eq!(
+        kernels::sparse_dot(&rows, &vals, &a),
+        kernels::sparse_dot_with(back, &rows, &vals, &a)
+    );
+}
+
+#[test]
+fn env_spec_parsing_is_total_over_documented_values() {
+    for spec in ["scalar", "simd", "portable", "avx2"] {
+        assert!(kernels::Backend::parse(spec).is_some(), "{spec}");
+    }
+    assert!(kernels::Backend::parse("mmx").is_none());
+}

@@ -3,10 +3,10 @@
 //! with shrinking-free but seed-reported failures.
 
 use hthc::coordinator::{selection, SharedVector};
-use hthc::data::dense::{axpy_f32, dot_f32};
 use hthc::data::sparse::SparseMatrix;
 use hthc::data::{ColumnOps, DenseMatrix, QuantizedMatrix};
 use hthc::glm::{ElasticNet, GlmModel, Lasso, LogisticL1, ModelKind, Ridge, SvmDual};
+use hthc::kernels;
 use hthc::util::Rng;
 
 const CASES: usize = 60;
@@ -21,7 +21,8 @@ fn models(n: usize) -> Vec<Box<dyn GlmModel>> {
     ]
 }
 
-/// dot_f32 == f64 reference within fp32 accumulation error, any length.
+/// kernels::dot == f64 reference within fp32 accumulation error, for
+/// every available backend and any length.
 #[test]
 fn prop_dot_matches_f64_reference() {
     let mut rng = Rng::new(301);
@@ -30,16 +31,20 @@ fn prop_dot_matches_f64_reference() {
         let a: Vec<f32> = (0..len).map(|_| rng.normal()).collect();
         let b: Vec<f32> = (0..len).map(|_| rng.normal()).collect();
         let want: f64 = a.iter().zip(&b).map(|(&x, &y)| x as f64 * y as f64).sum();
-        let got = dot_f32(&a, &b) as f64;
         let tol = 1e-5 * (len as f64).sqrt() * 10.0;
-        assert!(
-            (got - want).abs() <= tol * want.abs().max(1.0),
-            "case {case} len {len}: {got} vs {want}"
-        );
+        for back in kernels::available_backends() {
+            let got = kernels::dot_with(back, &a, &b) as f64;
+            assert!(
+                (got - want).abs() <= tol * want.abs().max(1.0),
+                "case {case} len {len} [{}]: {got} vs {want}",
+                back.name()
+            );
+        }
     }
 }
 
-/// axpy then axpy with -delta restores the vector (within fp noise).
+/// axpy then axpy with -delta restores the vector (within fp noise),
+/// for every available backend.
 #[test]
 fn prop_axpy_invertible() {
     let mut rng = Rng::new(302);
@@ -47,12 +52,14 @@ fn prop_axpy_invertible() {
         let len = 1 + rng.below(2000);
         let x: Vec<f32> = (0..len).map(|_| rng.normal()).collect();
         let v0: Vec<f32> = (0..len).map(|_| rng.normal()).collect();
-        let mut v = v0.clone();
         let delta = rng.normal();
-        axpy_f32(delta, &x, &mut v);
-        axpy_f32(-delta, &x, &mut v);
-        for (a, b) in v.iter().zip(&v0) {
-            assert!((a - b).abs() <= 1e-4 * b.abs().max(1.0));
+        for back in kernels::available_backends() {
+            let mut v = v0.clone();
+            kernels::axpy_with(back, delta, &x, &mut v);
+            kernels::axpy_with(back, -delta, &x, &mut v);
+            for (a, b) in v.iter().zip(&v0) {
+                assert!((a - b).abs() <= 1e-4 * b.abs().max(1.0), "[{}]", back.name());
+            }
         }
     }
 }
