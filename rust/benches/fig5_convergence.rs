@@ -172,7 +172,7 @@ fn main() {
         use hthc::glm::GlmModel;
         fresh.epoch_refresh(&r.alpha);
         let obj = fresh.objective(&v2, &g.targets, &r.alpha);
-        let gap = glm::total_gap(&fresh, g.matrix.as_ops(), &v2, &g.targets, &r.alpha);
+        let gap = glm::total_gap(&fresh, g.matrix.as_block_ops(), &v2, &g.targets, &r.alpha);
         (obj, gap)
     };
     let (obj_atomic, gap_atomic) = run("OMP");

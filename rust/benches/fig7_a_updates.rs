@@ -68,7 +68,7 @@ fn run_fixed_a(
             let v_now = g.matrix.matvec_alpha(&a_now);
             v.store_all(&v_now);
             let gap = glm::total_gap(
-                model.as_ref(), g.matrix.as_ops(), &v_now, &g.targets, &a_now,
+                model.as_ref(), g.matrix.as_block_ops(), &v_now, &g.targets, &a_now,
             );
             if gap <= target_gap {
                 return (Some(timer.secs()), epoch as usize);

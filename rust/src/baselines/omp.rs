@@ -42,7 +42,7 @@ pub(crate) fn fit(p: &mut Problem<'_>, mode: OmpMode) -> FitReport {
     let (alpha0, v0) = p.initial_state();
     let model = &mut *p.model;
     let (d, n) = (data.n_rows(), data.n_cols());
-    let ops = data.as_ops();
+    let ops = data.as_block_ops();
     let v = SharedVector::from_slice(&v0, cfg.lock_chunk);
     let alpha = SharedVector::from_slice(&alpha0, usize::MAX >> 1);
     let m_batch = cfg.batch_size(n);
@@ -125,7 +125,9 @@ pub(crate) fn fit(p: &mut Problem<'_>, mode: OmpMode) -> FitReport {
 
         // --- "task A": parallel for refreshing all gap values ---------
         // (the naive port recomputes the full z each epoch, serially
-        // with respect to B — no concurrent heterogeneous tasks)
+        // with respect to B — no concurrent heterogeneous tasks).  Each
+        // worker claims a whole column *block* and computes its dots in
+        // one blocked pass over w (the §IV-A/IV-D sweep backend).
         let v_snap = v.snapshot();
         let mut w = vec![0.0f32; d];
         crate::kernels::map2_into(&mut w, &v_snap, y, |vj, yj| kind.w_of(vj, yj));
@@ -135,14 +137,26 @@ pub(crate) fn fit(p: &mut Problem<'_>, mode: OmpMode) -> FitReport {
             (0..n).map(|_| std::sync::atomic::AtomicU32::new(0)).collect();
         std::thread::scope(|s| {
             for _ in 0..cfg.t_a.max(1) {
-                s.spawn(|| loop {
-                    let j = next_a.fetch_add(1, Ordering::Relaxed);
-                    if j >= n {
-                        break;
+                s.spawn(|| {
+                    const B: usize = crate::kernels::BLOCK_COLS;
+                    let mut idx = [0usize; B];
+                    let mut u = [0.0f32; B];
+                    loop {
+                        let k = next_a.fetch_add(B, Ordering::Relaxed);
+                        if k >= n {
+                            break;
+                        }
+                        let end = (k + B).min(n);
+                        for (t, j) in idx.iter_mut().zip(k..end) {
+                            *t = j;
+                        }
+                        let m = end - k;
+                        ops.dots_block(&idx[..m], &w, &mut u[..m]);
+                        for (j, &uj) in (k..end).zip(&u) {
+                            z_cell[j].store(kind.gap(uj, a_now[j]).to_bits(), Ordering::Relaxed);
+                            sim.read(crate::memory::Tier::Slow, ops.col_bytes(j));
+                        }
                     }
-                    let u = ops.dot(j, &w);
-                    z_cell[j].store(kind.gap(u, a_now[j]).to_bits(), Ordering::Relaxed);
-                    sim.read(crate::memory::Tier::Slow, ops.col_bytes(j));
                 });
             }
         });

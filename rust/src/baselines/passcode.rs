@@ -40,7 +40,7 @@ pub(crate) fn fit(p: &mut Problem<'_>, mode: PasscodeMode) -> FitReport {
     let (alpha0, v0) = p.initial_state();
     let model = &mut *p.model;
     let (d, n) = (data.n_rows(), data.n_cols());
-    let ops = data.as_ops();
+    let ops = data.as_block_ops();
     let v = SharedVector::from_slice(&v0, cfg.lock_chunk);
     let alpha = SharedVector::from_slice(&alpha0, usize::MAX >> 1);
     let threads = cfg.t_b.max(1);

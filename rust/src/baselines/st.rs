@@ -74,7 +74,7 @@ pub(crate) fn fit(p: &mut Problem<'_>) -> FitReport {
             let v_now = data.matvec_alpha(&a_now);
             v.store_all(&v_now);
             let obj = model.objective(&v_now, y, &a_now);
-            let gap = glm::total_gap(model, data.as_ops(), &v_now, y, &a_now);
+            let gap = glm::total_gap(model, data.as_block_ops(), &v_now, y, &a_now);
             trace.push(timer.secs(), epoch, obj, gap);
             let stop_requested = notify_epoch(
                 &mut on_epoch,

@@ -7,13 +7,34 @@
 //! refresh: the paper's convergence argument needs a sufficient fraction
 //! (~15%, §IV-F) of z refreshed every epoch, which [`GapMemory::refresh_stats`]
 //! reports and the benches assert.
+//!
+//! Each entry packs `(f32 gap bits, u32 epoch stamp)` into **one**
+//! `AtomicU64`, so the pair is always read and written atomically.
+//! With two independent relaxed atomics (the previous layout) a reader
+//! could observe a *fresh stamp paired with a stale gap value* — e.g.
+//! `refresh_stats` counting an entry as refreshed whose value was still
+//! the old epoch's, or selection ranking a coordinate on a gap that the
+//! fresh stamp claims is current.  Last-writer-wins on the whole pair
+//! is the intended semantics and is now guaranteed; `Relaxed` ordering
+//! is still sufficient because no reader infers anything about *other*
+//! memory from a gap entry.
 
-use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// `(gap bits << 32) | epoch` — one atomic word per coordinate.
+#[inline(always)]
+fn pack(gap: f32, epoch: u32) -> u64 {
+    ((gap.to_bits() as u64) << 32) | epoch as u64
+}
+
+#[inline(always)]
+fn unpack(word: u64) -> (f32, u32) {
+    (f32::from_bits((word >> 32) as u32), word as u32)
+}
 
 pub struct GapMemory {
-    z: Vec<AtomicU32>,
-    /// Epoch of last refresh, per coordinate.
-    stamp: Vec<AtomicU32>,
+    /// Packed `(z_i, stamp_i)` pairs (see module docs).
+    z: Vec<AtomicU64>,
     /// Updates performed during the current epoch.
     epoch_updates: AtomicU64,
 }
@@ -24,8 +45,7 @@ impl GapMemory {
     /// approximates uniform random (paper: first epoch is random).
     pub fn new(n: usize) -> Self {
         GapMemory {
-            z: (0..n).map(|_| AtomicU32::new(f32::INFINITY.to_bits())).collect(),
-            stamp: (0..n).map(|_| AtomicU32::new(0)).collect(),
+            z: (0..n).map(|_| AtomicU64::new(pack(f32::INFINITY, 0))).collect(),
             epoch_updates: AtomicU64::new(0),
         }
     }
@@ -38,11 +58,12 @@ impl GapMemory {
         self.z.is_empty()
     }
 
-    /// Task A's write: refresh `z_i` in epoch `epoch`.
+    /// Task A's write: refresh `z_i` in epoch `epoch`.  Value and stamp
+    /// are published in one atomic store — a reader can never pair this
+    /// epoch's stamp with a previous epoch's value.
     #[inline]
     pub fn update(&self, i: usize, gap: f32, epoch: u32) {
-        self.z[i].store(gap.to_bits(), Ordering::Relaxed);
-        self.stamp[i].store(epoch, Ordering::Relaxed);
+        self.z[i].store(pack(gap, epoch), Ordering::Relaxed);
         self.epoch_updates.fetch_add(1, Ordering::Relaxed);
     }
 
@@ -54,13 +75,18 @@ impl GapMemory {
     /// the entry fresh but does not count as an A update.
     #[inline]
     pub fn mark_processed(&self, i: usize, residual_gap: f32, epoch: u32) {
-        self.z[i].store(residual_gap.to_bits(), Ordering::Relaxed);
-        self.stamp[i].store(epoch, Ordering::Relaxed);
+        self.z[i].store(pack(residual_gap, epoch), Ordering::Relaxed);
     }
 
     #[inline]
     pub fn read(&self, i: usize) -> f32 {
-        f32::from_bits(self.z[i].load(Ordering::Relaxed))
+        unpack(self.z[i].load(Ordering::Relaxed)).0
+    }
+
+    /// The atomically-consistent `(gap, stamp)` pair of coordinate `i`.
+    #[inline]
+    pub fn read_entry(&self, i: usize) -> (f32, u32) {
+        unpack(self.z[i].load(Ordering::Relaxed))
     }
 
     pub fn values(&self) -> Vec<f32> {
@@ -72,9 +98,9 @@ impl GapMemory {
     pub fn refresh_stats(&self, epoch: u32) -> (u64, f64) {
         let updates = self.epoch_updates.load(Ordering::Relaxed);
         let fresh = self
-            .stamp
+            .z
             .iter()
-            .filter(|s| s.load(Ordering::Relaxed) == epoch)
+            .filter(|s| unpack(s.load(Ordering::Relaxed)).1 == epoch)
             .count();
         (updates, fresh as f64 / self.len().max(1) as f64)
     }
@@ -86,9 +112,9 @@ impl GapMemory {
     /// Age (in epochs) of each entry at `epoch` — staleness histogram
     /// input for the diagnostics in EXPERIMENTS.md.
     pub fn staleness(&self, epoch: u32) -> Vec<u32> {
-        self.stamp
+        self.z
             .iter()
-            .map(|s| epoch.saturating_sub(s.load(Ordering::Relaxed)))
+            .map(|s| epoch.saturating_sub(unpack(s.load(Ordering::Relaxed)).1))
             .collect()
     }
 }
@@ -101,6 +127,7 @@ mod tests {
     fn starts_infinite_everywhere() {
         let g = GapMemory::new(5);
         assert!(g.values().iter().all(|z| z.is_infinite()));
+        assert!(g.staleness(3).iter().all(|&a| a == 3), "initial stamp is epoch 0");
     }
 
     #[test]
@@ -113,6 +140,7 @@ mod tests {
         assert_eq!(updates, 3);
         assert!((frac - 0.2).abs() < 1e-12, "2 distinct / 10");
         assert_eq!(g.read(3), 0.6);
+        assert_eq!(g.read_entry(3), (0.6, 1));
         g.reset_epoch_counter();
         assert_eq!(g.refresh_stats(1).0, 0);
     }
@@ -142,5 +170,43 @@ mod tests {
         let (updates, frac) = g.refresh_stats(2);
         assert_eq!(updates, 400);
         assert_eq!(frac, 1.0);
+    }
+
+    /// Regression (issue 4): with `z` and `stamp` as two independent
+    /// relaxed atomics, a reader could pair a fresh stamp with a stale
+    /// value.  Writers maintain the invariant `gap == f(epoch)`; racing
+    /// readers must never observe a pair that violates it.
+    #[test]
+    fn value_and_stamp_are_never_torn() {
+        let g = GapMemory::new(8);
+        let f = |epoch: u32| epoch as f32 * 3.5 + 1.0;
+        let stop = std::sync::atomic::AtomicBool::new(false);
+        std::thread::scope(|s| {
+            for t in 0..2usize {
+                let (g, stop) = (&g, &stop);
+                s.spawn(move || {
+                    for round in 0..20_000u32 {
+                        let epoch = round % 997 + 1;
+                        g.update((t * 3 + round as usize) % 8, f(epoch), epoch);
+                    }
+                    stop.store(true, std::sync::atomic::Ordering::Relaxed);
+                });
+            }
+            for _ in 0..2 {
+                let (g, stop) = (&g, &stop);
+                s.spawn(move || {
+                    let mut i = 0usize;
+                    while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                        let (gap, stamp) = g.read_entry(i % 8);
+                        if stamp == 0 {
+                            assert!(gap.is_infinite(), "untouched entry must still be +inf");
+                        } else {
+                            assert_eq!(gap, f(stamp), "torn pair: stamp {stamp} value {gap}");
+                        }
+                        i += 1;
+                    }
+                });
+            }
+        });
     }
 }

@@ -183,7 +183,7 @@ impl HthcSolver {
                 let v_now = data.matvec_alpha(&a_now);
                 v.store_all(&v_now);
                 let obj = model.objective(&v_now, y, &a_now);
-                let gap = glm::total_gap(model, data.as_ops(), &v_now, y, &a_now);
+                let gap = glm::total_gap(model, data.as_block_ops(), &v_now, y, &a_now);
                 trace.push(timer.secs(), epoch, obj, gap);
                 phases.eval_secs += tp.secs();
                 let stop_requested = notify_epoch(

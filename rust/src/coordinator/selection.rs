@@ -51,16 +51,34 @@ impl Selection {
             Selection::Random => rng.sample_distinct(n, m),
             Selection::DualityGap => {
                 if z.iter().any(|v| !v.is_finite()) {
-                    let zmax = z
+                    // Unmeasured priorities live in [2*base, 3*base], so
+                    // `base` is capped at f32::MAX/4 to keep them *finite*
+                    // even when measured gaps approach f32::MAX.  The old
+                    // uncapped `zmax * (2 + r)` overflowed to +inf there,
+                    // and equal +inf priorities degenerate top_m into
+                    // keep-the-first-m — exactly the lowest-index
+                    // starvation the randomization exists to prevent.
+                    // Measured gaps are clamped to `base` (order-preserving
+                    // below the cap, which only pathological gaps exceed),
+                    // so every unmeasured entry still outranks every
+                    // measured one.
+                    let base = z
                         .iter()
                         .copied()
                         .filter(|v| v.is_finite())
                         .fold(0.0f32, f32::max)
-                        .max(1.0);
+                        .clamp(1.0, f32::MAX / 4.0);
                     let adjusted: Vec<f32> = z
                         .iter()
-                        .map(|&v| if v.is_finite() { v } else { zmax * (2.0 + rng.f32()) })
+                        .map(|&v| {
+                            if v.is_finite() {
+                                v.min(base)
+                            } else {
+                                base * (2.0 + rng.f32())
+                            }
+                        })
                         .collect();
+                    debug_assert!(adjusted.iter().all(|p| p.is_finite()));
                     top_m(&adjusted, m)
                 } else {
                     top_m(z, m)
@@ -202,6 +220,32 @@ mod tests {
         let greedy = sum(&Selection::DualityGap.select(&z, 50, &mut rng));
         let random = sum(&Selection::Random.select(&z, 50, &mut rng));
         assert!(greedy > 3.0 * random, "greedy {greedy} vs random {random}");
+    }
+
+    /// Regression (issue 4): with finite gaps near f32::MAX, the
+    /// unmeasured-entry priority `zmax * (2 + r)` overflowed to +inf,
+    /// all unmeasured entries tied, and top_m degenerated into always
+    /// picking the lowest-index unmeasured block — the starvation the
+    /// randomization is documented to prevent.  The clamped priorities
+    /// must stay finite, still rank every unmeasured entry above every
+    /// measured one, and actually vary across draws.
+    #[test]
+    fn huge_finite_gaps_do_not_collapse_unmeasured_tiebreak() {
+        let m = 5;
+        // measured gaps in 0..50 (near f32::MAX), unmeasured in 50..100
+        let mut z = vec![f32::MAX / 1.5; 50];
+        z.extend_from_slice(&[f32::INFINITY; 50]);
+        let mut union = std::collections::HashSet::new();
+        for seed in 0..20u64 {
+            let mut rng = Rng::new(800 + seed);
+            let got = Selection::DualityGap.select(&z, m, &mut rng);
+            assert_eq!(got.len(), m);
+            for &j in &got {
+                assert!(j >= 50, "unmeasured entries must outrank measured ones, got {j}");
+            }
+            union.extend(got);
+        }
+        assert!(union.len() > m, "selection must vary across draws, got {union:?}");
     }
 
     #[test]

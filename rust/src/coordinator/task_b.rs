@@ -1,17 +1,21 @@
 //! Task B: asynchronous parallel SCD over the selected batch
 //! (paper §III, §IV-A2, §IV-B).
 //!
-//! `T_B` updater *groups* work concurrently; each group processes one
-//! coordinate at a time, pulled from a shared queue so that "each
+//! `T_B` updater *groups* work concurrently; each group claims a
+//! *block* of coordinates at a time from a shared queue (one
+//! `fetch_add` per block instead of per coordinate) so that "each
 //! coordinate is processed exactly once" per epoch.  Within a group,
 //! `V_B` lanes split the vector work (dot + axpy) by row ranges and
-//! synchronize with the three-barrier pattern of §IV-B:
+//! synchronize with the counter-barrier pattern of §IV-B:
 //!
-//! 1. barrier after resetting the shared partial sums,
-//! 2. barrier after the partial dots (leader then forms delta via the
-//!    scalar `h-hat`),
-//! 3. barrier after the locked `v += delta * d_i` so no lane races ahead
-//!    into the next coordinate's reset.
+//! 1. one barrier per *block* after the leader publishes the claim,
+//! 2. barrier after the partial dots (each lane overwrites its own
+//!    partials slot, so no reset step is needed between coordinates;
+//!    the leader then forms delta via the scalar `h-hat`),
+//! 3. barrier after delta publication; lanes apply the locked
+//!    `v += delta * d_i` on their own row ranges, which no other lane
+//!    reads, so the next coordinate's dot can start without a third
+//!    per-update barrier.
 //!
 //! The shared vector `v` is updated under medium-grained chunk locks
 //! (§IV-C) to preserve the primal-dual relation `w = grad f(D alpha)`
@@ -28,7 +32,7 @@ use std::sync::atomic::{AtomicU32, AtomicU64, AtomicUsize, Ordering};
 struct Group {
     barrier: SpinBarrier,
     partials: Vec<AtomicU32>, // f32 bits, one per lane
-    slot: AtomicUsize,        // coordinate slot being processed
+    base: AtomicUsize,        // first queue index of the claimed item block
     delta: AtomicU32,         // f32 bits of the computed delta
 }
 
@@ -92,13 +96,17 @@ pub fn run_epoch(
         .map(|_| Group {
             barrier: SpinBarrier::new(v_b),
             partials: (0..v_b).map(|_| AtomicU32::new(0)).collect(),
-            slot: AtomicUsize::new(usize::MAX),
+            base: AtomicUsize::new(usize::MAX),
             delta: AtomicU32::new(0),
         })
         .collect();
     let queue = AtomicUsize::new(0);
     let updates = AtomicU64::new(0);
     let zero_deltas = AtomicU64::new(0);
+    // Groups claim item *blocks*, not single items: one queue fetch_add
+    // amortizes over `claim` coordinates (the §IV-D bulk-sweep claim
+    // granularity), sized so small batches still spread across groups.
+    let claim = (items.len() / (t_b * 8)).clamp(1, crate::kernels::BLOCK_COLS);
 
     pool.run(|wid| {
         let g = wid / v_b;
@@ -109,52 +117,53 @@ pub fn run_epoch(
         let hi = (lane + 1) * d / v_b;
         let mut local_bytes = 0u64;
         loop {
-            // Lane 0 pulls the next work item and publishes it.
+            // Lane 0 claims the next item block and publishes its base.
             if lane == 0 {
-                let k = queue.fetch_add(1, Ordering::Relaxed);
+                let k = queue.fetch_add(claim, Ordering::Relaxed);
                 group
-                    .slot
+                    .base
                     .store(if k < items.len() { k } else { usize::MAX }, Ordering::Release);
-                for p in &group.partials {
-                    p.store(0, Ordering::Relaxed);
-                }
             }
-            group.barrier.wait(); // barrier 1: item + reset visible
-            let k = group.slot.load(Ordering::Acquire);
-            if k == usize::MAX {
+            group.barrier.wait(); // block published
+            let base = group.base.load(Ordering::Acquire);
+            if base == usize::MAX {
                 break;
             }
-            let item = items[k];
-            let (slot, coord) = (item.slot as usize, item.coord as usize);
+            for item in &items[base..(base + claim).min(items.len())] {
+                let (slot, coord) = (item.slot as usize, item.coord as usize);
 
-            // Partial dot over this lane's rows against live v.
-            let part = ws.dot_mapped(slot, v, y, kind, lo, hi);
-            group.partials[lane].store(part.to_bits(), Ordering::Release);
-            group.barrier.wait(); // barrier 2: partials complete
+                // Partial dot over this lane's rows against live v.
+                let part = ws.dot_mapped(slot, v, y, kind, lo, hi);
+                group.partials[lane].store(part.to_bits(), Ordering::Release);
+                group.barrier.wait(); // barrier: partials complete
 
-            if lane == 0 {
-                let u: f32 = group
-                    .partials
-                    .iter()
-                    .map(|p| f32::from_bits(p.load(Ordering::Acquire)))
-                    .sum();
-                let a = alpha.read(coord);
-                let delta = kind.delta(u, a, ws.sq_norm(slot));
-                group.delta.store(delta.to_bits(), Ordering::Release);
-                if delta != 0.0 {
-                    alpha.write(coord, a + delta);
-                    updates.fetch_add(1, Ordering::Relaxed);
-                } else {
-                    zero_deltas.fetch_add(1, Ordering::Relaxed);
+                if lane == 0 {
+                    // every lane overwrites its own partials slot before
+                    // the barrier above, so no reset between items is
+                    // needed — the sum only ever reads fresh stores
+                    let u: f32 = group
+                        .partials
+                        .iter()
+                        .map(|p| f32::from_bits(p.load(Ordering::Acquire)))
+                        .sum();
+                    let a = alpha.read(coord);
+                    let delta = kind.delta(u, a, ws.sq_norm(slot));
+                    group.delta.store(delta.to_bits(), Ordering::Release);
+                    if delta != 0.0 {
+                        alpha.write(coord, a + delta);
+                        updates.fetch_add(1, Ordering::Relaxed);
+                    } else {
+                        zero_deltas.fetch_add(1, Ordering::Relaxed);
+                    }
                 }
+                group.barrier.wait(); // barrier: delta published
+                let delta = f32::from_bits(group.delta.load(Ordering::Acquire));
+                if delta != 0.0 {
+                    ws.axpy_locked(slot, v, delta, lo, hi);
+                }
+                // fast-tier traffic: col read (dot) + col read + v rw (axpy)
+                local_bytes += ((hi - lo) * 4 * 3) as u64;
             }
-            group.barrier.wait(); // barrier 3: delta published
-            let delta = f32::from_bits(group.delta.load(Ordering::Acquire));
-            if delta != 0.0 {
-                ws.axpy_locked(slot, v, delta, lo, hi);
-            }
-            // fast-tier traffic: col read (dot) + col read + v rw (axpy)
-            local_bytes += ((hi - lo) * 4 * 3) as u64;
         }
         sim.read(Tier::Fast, local_bytes);
     });

@@ -5,7 +5,7 @@
 //! scalar/SIMD, paper §IV-A3); this module only owns the layout and
 //! the precomputed column norms.
 
-use super::ColumnOps;
+use super::{BlockOps, ColumnOps};
 use crate::kernels;
 
 /// Column-major dense f32 matrix (`d` rows — samples; `n` cols — the
@@ -89,6 +89,24 @@ impl ColumnOps for DenseMatrix {
 
     fn col_bytes(&self, _col: usize) -> u64 {
         (self.d * 4) as u64
+    }
+}
+
+impl BlockOps for DenseMatrix {
+    fn dots_block(&self, cols: &[usize], w: &[f32], out: &mut [f32]) {
+        const B: usize = kernels::BLOCK_COLS;
+        debug_assert_eq!(cols.len(), out.len());
+        let w = &w[..self.d];
+        // Stack-tile the column list so the kernel sees at most B
+        // slices per call — no per-call allocation on the task-A hot
+        // path.
+        for (cidx, o) in cols.chunks(B).zip(out.chunks_mut(B)) {
+            let mut slices: [&[f32]; B] = [&[]; B];
+            for (s, &j) in slices.iter_mut().zip(cidx) {
+                *s = self.col(j);
+            }
+            kernels::dots_block(&slices[..cidx.len()], w, o);
+        }
     }
 }
 

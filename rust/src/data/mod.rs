@@ -5,7 +5,9 @@
 //! quantized (Clover-style).  All expose the one access pattern the
 //! algorithm needs — *iterate a column and dot it against a dense
 //! vector* — via the [`ColumnOps`] trait, so tasks A/B and every
-//! baseline are generic over representation.
+//! baseline are generic over representation.  Bulk consumers use the
+//! [`BlockOps`] extension instead: many columns dotted per pass over
+//! `w` through the blocked kernel backend (`rust/DESIGN.md` §8).
 
 pub mod dense;
 pub mod generator;
@@ -42,6 +44,27 @@ pub trait ColumnOps: Sync {
     fn col_bytes(&self, col: usize) -> u64;
 }
 
+/// Bulk column access for the blocked multi-column sweeps (paper
+/// §IV-A/IV-D): compute `out[k] = <w, d_cols[k]>` for a whole block of
+/// columns in one cache-blocked pass, so every cache line of `w` is
+/// reused across the block instead of re-streamed per column.
+///
+/// The default implementation is the per-column fallback — any
+/// [`ColumnOps`] type gets correct (unblocked) behaviour for free; the
+/// three crate representations override it with the
+/// `crate::kernels::*dots_block*` kernel family.  Bulk consumers (task
+/// A's sweeps, the ST/OMP full-epoch refreshes, `glm::total_gap`)
+/// claim column blocks of [`crate::kernels::BLOCK_COLS`] and call this
+/// instead of per-column [`ColumnOps::dot`].
+pub trait BlockOps: ColumnOps {
+    /// `out[k] = <w, d_cols[k]>` for every k (`cols.len() == out.len()`).
+    fn dots_block(&self, cols: &[usize], w: &[f32], out: &mut [f32]) {
+        for (o, &j) in out.iter_mut().zip(cols) {
+            *o = self.dot(j, w);
+        }
+    }
+}
+
 /// Dense, sparse or quantized — run-time polymorphism for the CLI layer.
 pub enum Matrix {
     Dense(DenseMatrix),
@@ -51,6 +74,16 @@ pub enum Matrix {
 
 impl Matrix {
     pub fn as_ops(&self) -> &dyn ColumnOps {
+        match self {
+            Matrix::Dense(m) => m,
+            Matrix::Sparse(m) => m,
+            Matrix::Quantized(m) => m,
+        }
+    }
+
+    /// Column access including the blocked bulk-dot sweeps (every
+    /// [`ColumnOps`] method is reachable through the supertrait).
+    pub fn as_block_ops(&self) -> &dyn BlockOps {
         match self {
             Matrix::Dense(m) => m,
             Matrix::Sparse(m) => m,

@@ -13,7 +13,7 @@
 //! (runtime-dispatched scalar vs LUT paths); this module owns layout,
 //! quantization and the error-bound bookkeeping.
 
-use super::{dense::DenseMatrix, ColumnOps};
+use super::{dense::DenseMatrix, BlockOps, ColumnOps};
 use crate::kernels;
 
 /// Elements per scale group — re-exported from the kernel layer, which
@@ -146,6 +146,21 @@ impl ColumnOps for QuantizedMatrix {
     /// instead of 4d bytes.
     fn col_bytes(&self, _col: usize) -> u64 {
         (self.bytes_per_col + self.groups_per_col * 4) as u64
+    }
+}
+
+impl BlockOps for QuantizedMatrix {
+    fn dots_block(&self, cols: &[usize], w: &[f32], out: &mut [f32]) {
+        const B: usize = kernels::BLOCK_COLS;
+        debug_assert_eq!(cols.len(), out.len());
+        let w = &w[..self.d];
+        for (cidx, o) in cols.chunks(B).zip(out.chunks_mut(B)) {
+            let mut slices: [(&[u8], &[f32]); B] = [(&[], &[]); B];
+            for (s, &j) in slices.iter_mut().zip(cidx) {
+                *s = (self.pcol(j), self.scol(j));
+            }
+            kernels::quant_dots_block(&slices[..cidx.len()], w, o);
+        }
     }
 }
 

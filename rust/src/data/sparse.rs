@@ -8,7 +8,7 @@
 //! reallocating — that is the paper's chunk/stack/linked-list design,
 //! implemented here with chunk indices instead of raw pointers.
 
-use super::ColumnOps;
+use super::{BlockOps, ColumnOps};
 use crate::kernels;
 
 /// Minimum chunk length: "the minimal chunk size of 32 enables the use
@@ -126,6 +126,21 @@ impl ColumnOps for SparseMatrix {
 
     fn col_bytes(&self, col: usize) -> u64 {
         (self.nnz(col) * 8) as u64 // (u32 index + f32 value)
+    }
+}
+
+impl BlockOps for SparseMatrix {
+    fn dots_block(&self, cols: &[usize], w: &[f32], out: &mut [f32]) {
+        const B: usize = kernels::BLOCK_COLS;
+        debug_assert_eq!(cols.len(), out.len());
+        let w = &w[..self.d];
+        for (cidx, o) in cols.chunks(B).zip(out.chunks_mut(B)) {
+            let mut slices: [(&[u32], &[f32]); B] = [(&[], &[]); B];
+            for (s, &j) in slices.iter_mut().zip(cidx) {
+                *s = self.col(j);
+            }
+            kernels::sparse_dots_block(&slices[..cidx.len()], w, o);
+        }
     }
 }
 

@@ -37,7 +37,7 @@ pub use ridge::Ridge;
 pub use svm::SvmDual;
 pub use svm_l2::SvmL2Dual;
 
-use crate::data::ColumnOps;
+use crate::data::{BlockOps, ColumnOps};
 
 /// Copyable scalar-op bundle for the hot paths.
 ///
@@ -191,19 +191,36 @@ pub fn w_from_v(model: &dyn GlmModel, v: &[f32], y: &[f32], out: &mut [f32]) {
 }
 
 /// Total duality gap `sum_i gap_i` over all columns (exact, sequential —
-/// used for convergence thresholds and traces, not the hot path).
+/// used for convergence thresholds and traces, not the hot path).  The
+/// full-matrix `u = Dᵀ w` sweep runs through the blocked multi-column
+/// backend ([`BlockOps::dots_block`]): one O(nd) pass that reuses each
+/// cache line of `w` across [`crate::kernels::BLOCK_COLS`] columns.
 pub fn total_gap(
     model: &dyn GlmModel,
-    data: &dyn ColumnOps,
+    data: &dyn BlockOps,
     v: &[f32],
     y: &[f32],
     alpha: &[f32],
 ) -> f64 {
+    const B: usize = crate::kernels::BLOCK_COLS;
     let mut w = vec![0.0f32; v.len()];
     w_from_v(model, v, y, &mut w);
-    (0..data.n_cols())
-        .map(|j| model.gap(data.dot(j, &w), alpha[j]) as f64)
-        .sum()
+    let n = data.n_cols();
+    let mut total = 0.0f64;
+    let mut idx = [0usize; B];
+    let mut u = [0.0f32; B];
+    for start in (0..n).step_by(B) {
+        let end = (start + B).min(n);
+        let m = end - start;
+        for (t, j) in idx.iter_mut().zip(start..end) {
+            *t = j;
+        }
+        data.dots_block(&idx[..m], &w, &mut u[..m]);
+        for (j, &uj) in (start..end).zip(&u) {
+            total += model.gap(uj, alpha[j]) as f64;
+        }
+    }
+    total
 }
 
 /// Exact sequential coordinate descent (the T_B = 1 oracle).  Returns

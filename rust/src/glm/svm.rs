@@ -85,7 +85,7 @@ impl GlmModel for SvmDual {
 mod tests {
     use super::*;
     use crate::data::generator::{generate, DatasetKind, Family};
-    use crate::data::{ColumnOps, Matrix};
+    use crate::data::Matrix;
     use crate::glm::test_support::assert_stationary;
     use crate::glm::{solve_reference, total_gap};
 
@@ -135,7 +135,9 @@ mod tests {
         let mut model = SvmDual::new(1e-3, n);
         let mut alpha = vec![0.0f32; n];
         let mut v = vec![0.0f32; d];
-        let ops: &dyn ColumnOps = match &g.matrix {
+        // concrete &DenseMatrix: coerces to &dyn ColumnOps for
+        // solve_reference/accuracy and &dyn BlockOps for total_gap
+        let ops = match &g.matrix {
             Matrix::Dense(m) => m,
             _ => unreachable!(),
         };

@@ -90,7 +90,7 @@ impl GlmModel for SvmL2Dual {
 mod tests {
     use super::*;
     use crate::data::generator::{generate, DatasetKind, Family};
-    use crate::data::{ColumnOps, Matrix};
+    use crate::data::Matrix;
     use crate::glm::{solve_reference, total_gap};
     use crate::util::Rng;
 
@@ -139,7 +139,9 @@ mod tests {
         let g = generate(DatasetKind::Tiny, Family::Classification, 1.0, 83);
         let n = g.n();
         let mut model = SvmL2Dual::new(1e-3, n, 0.5 / n as f32);
-        let ops: &dyn ColumnOps = match &g.matrix {
+        // concrete &DenseMatrix: coerces to &dyn ColumnOps for
+        // solve_reference/accuracy and &dyn BlockOps for total_gap
+        let ops = match &g.matrix {
             Matrix::Dense(m) => m,
             _ => unreachable!(),
         };

@@ -133,6 +133,85 @@ pub(super) unsafe fn sq_norm(x: &[f32]) -> f32 {
     s
 }
 
+/// Two dots sharing each `w` load: `(<a, w>, <b, w>)` with two 8-lane
+/// FMA accumulators per column — the register tile of the blocked
+/// multi-column sweep (each loaded `w` vector feeds two columns).
+///
+/// # Safety
+/// Host must support AVX2 and FMA; `a.len() == b.len() == w.len()`.
+#[inline]
+#[target_feature(enable = "avx2")]
+#[target_feature(enable = "fma")]
+unsafe fn dot2(a: &[f32], b: &[f32], w: &[f32]) -> (f32, f32) {
+    let n = w.len();
+    let (pa, pb, pw) = (a.as_ptr(), b.as_ptr(), w.as_ptr());
+    let mut aacc0 = _mm256_setzero_ps();
+    let mut aacc1 = _mm256_setzero_ps();
+    let mut bacc0 = _mm256_setzero_ps();
+    let mut bacc1 = _mm256_setzero_ps();
+    let mut i = 0usize;
+    while i + 16 <= n {
+        let w0 = _mm256_loadu_ps(pw.add(i));
+        let w1 = _mm256_loadu_ps(pw.add(i + 8));
+        aacc0 = _mm256_fmadd_ps(_mm256_loadu_ps(pa.add(i)), w0, aacc0);
+        bacc0 = _mm256_fmadd_ps(_mm256_loadu_ps(pb.add(i)), w0, bacc0);
+        aacc1 = _mm256_fmadd_ps(_mm256_loadu_ps(pa.add(i + 8)), w1, aacc1);
+        bacc1 = _mm256_fmadd_ps(_mm256_loadu_ps(pb.add(i + 8)), w1, bacc1);
+        i += 16;
+    }
+    while i + 8 <= n {
+        let w0 = _mm256_loadu_ps(pw.add(i));
+        aacc0 = _mm256_fmadd_ps(_mm256_loadu_ps(pa.add(i)), w0, aacc0);
+        bacc0 = _mm256_fmadd_ps(_mm256_loadu_ps(pb.add(i)), w0, bacc0);
+        i += 8;
+    }
+    let mut sa = hsum(_mm256_add_ps(aacc0, aacc1));
+    let mut sb = hsum(_mm256_add_ps(bacc0, bacc1));
+    while i < n {
+        sa += a[i] * w[i];
+        sb += b[i] * w[i];
+        i += 1;
+    }
+    (sa, sb)
+}
+
+/// Dense blocked dots `out[k] = <cols[k], w>`: column tiles of
+/// [`super::BLOCK_COLS`] over `ROW_BLOCK`-sized bands of `w`, column
+/// pairs sharing every `w` load via [`dot2`].
+///
+/// # Safety
+/// Host must support AVX2 and FMA; every `cols[k].len() == w.len()` and
+/// `cols.len() == out.len()`.
+#[target_feature(enable = "avx2")]
+#[target_feature(enable = "fma")]
+pub(super) unsafe fn dots_block(cols: &[&[f32]], w: &[f32], out: &mut [f32]) {
+    use super::block::ROW_BLOCK;
+    use super::BLOCK_COLS;
+
+    debug_assert_eq!(cols.len(), out.len());
+    let d = w.len();
+    for (tile, otile) in cols.chunks(BLOCK_COLS).zip(out.chunks_mut(BLOCK_COLS)) {
+        let mut acc = [0.0f32; BLOCK_COLS];
+        let mut lo = 0usize;
+        while lo < d {
+            let hi = (lo + ROW_BLOCK).min(d);
+            let wb = &w[lo..hi];
+            let mut k = 0usize;
+            while k + 1 < tile.len() {
+                let (s0, s1) = dot2(&tile[k][lo..hi], &tile[k + 1][lo..hi], wb);
+                acc[k] += s0;
+                acc[k + 1] += s1;
+                k += 2;
+            }
+            if k < tile.len() {
+                acc[k] += dot(&tile[k][lo..hi], wb);
+            }
+            lo = hi;
+        }
+        otile.copy_from_slice(&acc[..tile.len()]);
+    }
+}
+
 /// Fused `(<a, b>, ||a||^2)` — one pass over `a`.
 ///
 /// # Safety

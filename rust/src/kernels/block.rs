@@ -1,0 +1,144 @@
+//! Blocked multi-column sweep kernels (paper §IV-A/IV-D).
+//!
+//! Task A's whole budget goes into bulk `u_j = <w, d_j>` sweeps, and
+//! the paper's KNL implementation wins by traversing *many columns per
+//! pass over `w`*: each cache line of `w` is loaded once and reused
+//! across a block of B columns instead of being streamed again for
+//! every single-column dot.  The kernels here implement that scheme:
+//!
+//! * columns are processed in register tiles of [`super::BLOCK_COLS`]
+//!   with one accumulator per column (column *pairs* share each `w`
+//!   load, so the reuse is explicit in registers, not just in cache);
+//! * rows are traversed in [`ROW_BLOCK`]-sized cache blocks, so the
+//!   active window of `w` stays L1/L2-resident while the B column
+//!   blocks stream past it;
+//! * the sparse and quantized variants walk all B columns' entries in
+//!   one banded pass over the row space, with per-column cursors
+//!   (sparse) or group-aligned row windows (quantized).
+//!
+//! The scalar backend intentionally bypasses all of this: it computes
+//! each column with the plain per-column reference dot, which makes it
+//! bitwise-identical to the single-column path and the ground truth the
+//! blocked differential tests (`rust/tests/block_diff.rs`) compare
+//! against.
+
+use super::{portable, quant, BLOCK_COLS};
+
+/// Rows per cache block: 4096 f32 = 16 KiB of `w` per band, half a
+/// typical 32 KiB L1d so the band and one column tile coexist.  Must be
+/// a multiple of [`super::QGROUP`] (the quantized variant reuses the
+/// same banding and `quant_dot_range` requires group-aligned `lo`) —
+/// enforced at compile time below, since an unaligned band start would
+/// silently double-count the rows shared with the previous band's
+/// group.
+pub(super) const ROW_BLOCK: usize = 4096;
+
+const _: () = assert!(ROW_BLOCK % quant::QGROUP == 0, "bands must stay scale-group aligned");
+
+/// Dense blocked dots: `out[k] = <cols[k], w>`, portable backend.
+/// Accepts any number of columns; tiles them by [`BLOCK_COLS`]
+/// internally so the accumulators stay in registers.
+pub(super) fn dots_dense(cols: &[&[f32]], w: &[f32], out: &mut [f32]) {
+    let d = w.len();
+    for (tile, otile) in cols.chunks(BLOCK_COLS).zip(out.chunks_mut(BLOCK_COLS)) {
+        let mut acc = [0.0f32; BLOCK_COLS];
+        let mut lo = 0usize;
+        while lo < d {
+            let hi = (lo + ROW_BLOCK).min(d);
+            let wb = &w[lo..hi];
+            let mut k = 0usize;
+            while k + 1 < tile.len() {
+                let (s0, s1) = dot2(&tile[k][lo..hi], &tile[k + 1][lo..hi], wb);
+                acc[k] += s0;
+                acc[k + 1] += s1;
+                k += 2;
+            }
+            if k < tile.len() {
+                acc[k] += portable::dot(&tile[k][lo..hi], wb);
+            }
+            lo = hi;
+        }
+        otile.copy_from_slice(&acc[..tile.len()]);
+    }
+}
+
+/// Two dots sharing one pass over `w`: `(<a, w>, <b, w>)` with two
+/// independent accumulators per column over 8-element chunks — the
+/// register-tile primitive the dense blocked sweep is built from.
+fn dot2(a: &[f32], b: &[f32], w: &[f32]) -> (f32, f32) {
+    let n = w.len();
+    let chunks = n / 8;
+    let (mut a0, mut a1) = (0.0f32, 0.0f32);
+    let (mut b0, mut b1) = (0.0f32, 0.0f32);
+    for c in 0..chunks {
+        let i = c * 8;
+        let (xa, xb, xw) = (&a[i..i + 8], &b[i..i + 8], &w[i..i + 8]);
+        a0 += xa[0] * xw[0] + xa[1] * xw[1] + xa[2] * xw[2] + xa[3] * xw[3];
+        a1 += xa[4] * xw[4] + xa[5] * xw[5] + xa[6] * xw[6] + xa[7] * xw[7];
+        b0 += xb[0] * xw[0] + xb[1] * xw[1] + xb[2] * xw[2] + xb[3] * xw[3];
+        b1 += xb[4] * xw[4] + xb[5] * xw[5] + xb[6] * xw[6] + xb[7] * xw[7];
+    }
+    let (mut at, mut bt) = (0.0f32, 0.0f32);
+    for i in chunks * 8..n {
+        at += a[i] * w[i];
+        bt += b[i] * w[i];
+    }
+    (a0 + a1 + at, b0 + b1 + bt)
+}
+
+/// Sparse blocked dots over row-sorted CSC columns: a banded pass over
+/// the row space with a cursor per column, so the `w` rows a band
+/// touches stay cache-hot across all B columns (entries outside the
+/// band are never scanned — the cursor advances by binary search).
+/// Bands with no entries in *any* tile column are skipped outright by
+/// jumping to the band of the smallest unconsumed row, so the loop
+/// count is bounded by the tile's populated bands, not `d / ROW_BLOCK`
+/// — tall, very sparse matrices would otherwise pay thousands of empty
+/// band iterations per tile and lose to the per-column path.
+pub(super) fn sparse_dots_banded(cols: &[(&[u32], &[f32])], w: &[f32], out: &mut [f32]) {
+    let d = w.len();
+    for (tile, otile) in cols.chunks(BLOCK_COLS).zip(out.chunks_mut(BLOCK_COLS)) {
+        let mut cur = [0usize; BLOCK_COLS];
+        let mut acc = [0.0f32; BLOCK_COLS];
+        while let Some(next) = tile
+            .iter()
+            .zip(&cur)
+            .filter_map(|(&(rows, _), &c)| rows.get(c).map(|&r| r as usize))
+            .min()
+        {
+            if next >= d {
+                break; // malformed out-of-range rows: never consumable
+            }
+            let lo = next - next % ROW_BLOCK;
+            let hi = (lo + ROW_BLOCK).min(d);
+            for (k, &(rows, vals)) in tile.iter().enumerate() {
+                let s = cur[k];
+                let e = s + rows[s..].partition_point(|&r| (r as usize) < hi);
+                if e > s {
+                    acc[k] += portable::sparse_dot(&rows[s..e], &vals[s..e], w);
+                }
+                cur[k] = e;
+            }
+        }
+        otile.copy_from_slice(&acc[..tile.len()]);
+    }
+}
+
+/// Quantized blocked dots over packed 4-bit columns: group-aligned row
+/// bands (ROW_BLOCK is a QGROUP multiple), each band's `w` window
+/// reused across all B columns' unpack-dots.
+pub(super) fn quant_dots_banded(cols: &[(&[u8], &[f32])], w: &[f32], out: &mut [f32]) {
+    let d = w.len();
+    for (tile, otile) in cols.chunks(BLOCK_COLS).zip(out.chunks_mut(BLOCK_COLS)) {
+        let mut acc = [0.0f32; BLOCK_COLS];
+        let mut lo = 0usize;
+        while lo < d {
+            let hi = (lo + ROW_BLOCK).min(d);
+            for (k, &(packed, scales)) in tile.iter().enumerate() {
+                acc[k] += quant::dot_range_lut(packed, scales, w, lo, hi);
+            }
+            lo = hi;
+        }
+        otile.copy_from_slice(&acc[..tile.len()]);
+    }
+}

@@ -1,7 +1,10 @@
 //! The unified kernel layer: every hot inner loop in the crate, behind
 //! one runtime-dispatched seam (paper §IV-A3: "architecture-cognizant"
 //! vectorized inner loops are where the order-of-magnitude Lasso
-//! speedup comes from).
+//! speedup comes from).  This includes the blocked multi-column sweep
+//! family ([`dots_block`] and friends): bulk `u = Dᵀ_block · w` dots
+//! that reuse each cache line of `w` across [`BLOCK_COLS`] columns —
+//! see `rust/DESIGN.md` §8.
 //!
 //! Three backends implement the same kernel set:
 //!
@@ -31,6 +34,7 @@
 //! tests assert — see `rust/DESIGN.md` §Kernels for the rationale.
 
 mod atomic_impl;
+mod block;
 mod portable;
 mod quant;
 mod scalar;
@@ -302,6 +306,102 @@ fn dot_sq_norm_avx2(x: &[f32], y: &[f32]) -> (f32, f32) {
 #[inline]
 fn dot_sq_norm_avx2(x: &[f32], y: &[f32]) -> (f32, f32) {
     portable::dot_sq_norm(x, y)
+}
+
+// ---------------------------------------------------------------------------
+// Blocked multi-column sweeps (bulk `u = D_blockᵀ w`, paper §IV-A/IV-D)
+// ---------------------------------------------------------------------------
+
+/// Columns per claim/register tile for the blocked sweeps: bulk
+/// consumers (task A, the baselines' full-epoch refreshes, objective
+/// evaluation) claim work in blocks of this many columns, and the
+/// blocked kernels tile their accumulators at the same width.
+pub const BLOCK_COLS: usize = 8;
+
+/// Blocked dense dots `out[k] = <cols[k], w>` with an explicit backend.
+/// The SIMD backends traverse rows in cache blocks and columns in
+/// register-tiled pairs so each `w` load feeds many columns; the scalar
+/// backend is the per-column reference (bitwise-identical to calling
+/// [`dot_with`] per column).
+#[inline]
+pub fn dots_block_with(b: Backend, cols: &[&[f32]], w: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(cols.len(), out.len());
+    debug_assert!(cols.iter().all(|c| c.len() == w.len()));
+    match b {
+        Backend::Scalar => {
+            for (o, col) in out.iter_mut().zip(cols) {
+                *o = scalar::dot(col, w);
+            }
+        }
+        Backend::Portable => block::dots_dense(cols, w, out),
+        Backend::Avx2 => dots_block_avx2(cols, w, out),
+    }
+}
+
+/// Blocked dense dots on the dispatched backend.
+#[inline]
+pub fn dots_block(cols: &[&[f32]], w: &[f32], out: &mut [f32]) {
+    dots_block_with(backend(), cols, w, out)
+}
+
+/// Blocked sparse dots over row-sorted columns, with an explicit
+/// backend: `out[k] = sum_e vals_k[e] * w[rows_k[e]]`.  The SIMD
+/// backends walk all columns' entries in one banded pass over the row
+/// space (per-column cursors); scalar is the per-column reference.
+#[inline]
+pub fn sparse_dots_block_with(b: Backend, cols: &[(&[u32], &[f32])], w: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(cols.len(), out.len());
+    match b {
+        Backend::Scalar => {
+            for (o, &(rows, vals)) in out.iter_mut().zip(cols) {
+                *o = scalar::sparse_dot(rows, vals, w);
+            }
+        }
+        Backend::Portable | Backend::Avx2 => block::sparse_dots_banded(cols, w, out),
+    }
+}
+
+/// Blocked sparse dots on the dispatched backend.
+#[inline]
+pub fn sparse_dots_block(cols: &[(&[u32], &[f32])], w: &[f32], out: &mut [f32]) {
+    sparse_dots_block_with(backend(), cols, w, out)
+}
+
+/// Blocked quantized dots over packed 4-bit columns, with an explicit
+/// backend: `out[k]` is column k's unpack-dot against `w` (rows
+/// `0..w.len()`).  The SIMD backends reuse each group-aligned `w` band
+/// across all columns; scalar is the per-column reference.
+#[inline]
+pub fn quant_dots_block_with(b: Backend, cols: &[(&[u8], &[f32])], w: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(cols.len(), out.len());
+    debug_assert!(cols.iter().all(|&(p, _)| w.len() <= p.len() * 2));
+    match b {
+        Backend::Scalar => {
+            for (o, &(packed, scales)) in out.iter_mut().zip(cols) {
+                *o = quant::dot_range_scalar(packed, scales, w, 0, w.len());
+            }
+        }
+        Backend::Portable | Backend::Avx2 => block::quant_dots_banded(cols, w, out),
+    }
+}
+
+/// Blocked quantized dots on the dispatched backend.
+#[inline]
+pub fn quant_dots_block(cols: &[(&[u8], &[f32])], w: &[f32], out: &mut [f32]) {
+    quant_dots_block_with(backend(), cols, w, out)
+}
+
+#[cfg(target_arch = "x86_64")]
+#[inline]
+fn dots_block_avx2(cols: &[&[f32]], w: &[f32], out: &mut [f32]) {
+    // SAFETY: as for `dot_avx2`.
+    unsafe { avx2::dots_block(cols, w, out) }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+#[inline]
+fn dots_block_avx2(cols: &[&[f32]], w: &[f32], out: &mut [f32]) {
+    block::dots_dense(cols, w, out)
 }
 
 // ---------------------------------------------------------------------------

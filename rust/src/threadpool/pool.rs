@@ -9,6 +9,17 @@
 //! `run` joins the job before returning — the same contract as
 //! `std::thread::scope`, enforced here with a brief unsafe lifetime
 //! erasure documented inline.
+//!
+//! Failure semantics (also mirroring `std::thread::scope`): a job
+//! closure that panics on any worker does *not* hang `run()` or kill
+//! the worker — the panic is caught, the completion counter is still
+//! decremented (via a drop-guard, so even a panic in the bookkeeping
+//! cannot leak a count), and the first captured payload is re-raised
+//! from `run()` on the caller's thread once every worker has finished.
+//! The pool remains fully usable afterwards.  Concurrent `run()` calls
+//! from different threads are serialized by a publisher lock — the
+//! job/remaining handoff is single-publisher by construction, not by a
+//! `debug_assert!` that vanishes in release builds.
 
 use std::sync::{Condvar, Mutex};
 
@@ -24,6 +35,9 @@ struct State {
     job: Option<SendJob>,
     generation: u64,
     remaining: usize,
+    /// First panic payload captured from a worker during the current
+    /// job; re-raised by `run()` on the caller's thread.
+    panic: Option<Box<dyn std::any::Any + Send>>,
     shutdown: bool,
 }
 
@@ -40,6 +54,13 @@ impl Clone for SendJob {
 pub struct WorkerPool {
     shared: std::sync::Arc<Shared>,
     handles: Vec<std::thread::JoinHandle<()>>,
+    /// Serializes concurrent `run(&self)` publishers: without it two
+    /// threads would race on `job`/`remaining` and corrupt the handoff.
+    run_lock: Mutex<()>,
+    /// The workers' thread ids — `run` refuses (with a panic naming the
+    /// bug) to be called from inside a job, which would deadlock on
+    /// `run_lock` in every build profile.
+    worker_ids: Vec<std::thread::ThreadId>,
     n: usize,
 }
 
@@ -57,6 +78,7 @@ impl WorkerPool {
                 job: None,
                 generation: 0,
                 remaining: 0,
+                panic: None,
                 shutdown: false,
             }),
             start_cv: Condvar::new(),
@@ -70,8 +92,9 @@ impl WorkerPool {
                     .spawn(move || worker_loop(id, &shared))
                     .expect("spawn worker")
             })
-            .collect();
-        WorkerPool { shared, handles, n }
+            .collect::<Vec<_>>();
+        let worker_ids = handles.iter().map(|h| h.thread().id()).collect();
+        WorkerPool { shared, handles, run_lock: Mutex::new(()), worker_ids, n }
     }
 
     pub fn len(&self) -> usize {
@@ -83,10 +106,26 @@ impl WorkerPool {
     }
 
     /// Run `f(worker_id)` on every worker; blocks until all finish.
+    ///
+    /// If any worker's invocation of `f` panics, the panic payload is
+    /// re-raised here on the caller's thread *after* every worker has
+    /// finished the job (so the borrowed-closure contract still holds)
+    /// and the pool stays usable for subsequent `run`s.  Concurrent
+    /// callers on different threads are serialized, not corrupted.
     pub fn run<'a, F>(&self, f: F)
     where
         F: Fn(usize) + Sync + 'a,
     {
+        // A job closure calling back into run() would deadlock on the
+        // publisher lock below; fail loudly (in every profile) instead.
+        assert!(
+            !self.worker_ids.contains(&std::thread::current().id()),
+            "WorkerPool::run called reentrantly from a worker job"
+        );
+        // One publisher at a time: the job/remaining handoff below is
+        // single-publisher state (a poisoned lock just means a previous
+        // run re-raised a job panic — publishing is still safe).
+        let _publish = self.run_lock.lock().unwrap_or_else(|e| e.into_inner());
         let job_ref: &(dyn Fn(usize) + Sync) = &f;
         // SAFETY: the pointer is only dereferenced by workers between the
         // publish below and the `remaining == 0` wait; `f` outlives both
@@ -97,16 +136,36 @@ impl WorkerPool {
                 &'static (dyn Fn(usize) + Sync),
             >(job_ref) as Job
         };
-        let mut st = self.shared.state.lock().unwrap();
-        debug_assert!(st.job.is_none(), "run() is not reentrant");
+        let mut st = self.shared.state.lock().unwrap_or_else(|e| e.into_inner());
         st.job = Some(SendJob(job_ptr));
         st.generation = st.generation.wrapping_add(1);
         st.remaining = self.n;
         self.shared.start_cv.notify_all();
         while st.remaining > 0 {
-            st = self.shared.done_cv.wait(st).unwrap();
+            st = self.shared.done_cv.wait(st).unwrap_or_else(|e| e.into_inner());
         }
         st.job = None;
+        if let Some(payload) = st.panic.take() {
+            // state is clean again (job cleared, panic consumed): the
+            // pool survives; the caller observes the job's panic
+            drop(st);
+            std::panic::resume_unwind(payload);
+        }
+    }
+}
+
+/// Decrements `remaining` (and wakes the publisher at zero) on drop, so
+/// the count is released on every exit path from a job — including a
+/// panic escaping the worker's bookkeeping itself.
+struct DoneGuard<'a>(&'a Shared);
+
+impl Drop for DoneGuard<'_> {
+    fn drop(&mut self) {
+        let mut st = self.0.state.lock().unwrap_or_else(|e| e.into_inner());
+        st.remaining -= 1;
+        if st.remaining == 0 {
+            self.0.done_cv.notify_all();
+        }
     }
 }
 
@@ -114,7 +173,7 @@ fn worker_loop(id: usize, shared: &Shared) {
     let mut seen_gen = 0u64;
     loop {
         let job = {
-            let mut st = shared.state.lock().unwrap();
+            let mut st = shared.state.lock().unwrap_or_else(|e| e.into_inner());
             loop {
                 if st.shutdown {
                     return;
@@ -123,15 +182,22 @@ fn worker_loop(id: usize, shared: &Shared) {
                     seen_gen = st.generation;
                     break st.job.clone().expect("job set with generation");
                 }
-                st = shared.start_cv.wait(st).unwrap();
+                st = shared.start_cv.wait(st).unwrap_or_else(|e| e.into_inner());
             }
         };
-        // SAFETY: see `run` — the closure outlives this call.
-        unsafe { (*job.0)(id) };
-        let mut st = shared.state.lock().unwrap();
-        st.remaining -= 1;
-        if st.remaining == 0 {
-            shared.done_cv.notify_all();
+        // The guard decrements `remaining` on every exit path; a
+        // panicking job must neither hang `run()` nor kill this worker.
+        let _done = DoneGuard(shared);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            // SAFETY: see `run` — the closure outlives this call.
+            unsafe { (*job.0)(id) }
+        }));
+        if let Err(payload) = result {
+            let mut st = shared.state.lock().unwrap_or_else(|e| e.into_inner());
+            // keep the first payload; later ones add no information
+            if st.panic.is_none() {
+                st.panic = Some(payload);
+            }
         }
     }
 }
@@ -139,7 +205,7 @@ fn worker_loop(id: usize, shared: &Shared) {
 impl Drop for WorkerPool {
     fn drop(&mut self) {
         {
-            let mut st = self.shared.state.lock().unwrap();
+            let mut st = self.shared.state.lock().unwrap_or_else(|e| e.into_inner());
             st.shutdown = true;
             self.shared.start_cv.notify_all();
         }
@@ -209,5 +275,93 @@ mod tests {
         let pool = WorkerPool::new(4);
         pool.run(|_| {});
         drop(pool); // must not hang or panic
+    }
+
+    /// Regression (issue 4): a panicking job must neither hang `run()`
+    /// forever nor poison the pool — the panic propagates to the
+    /// caller and the very next `run` completes normally on all
+    /// workers (the `#[should_panic]`-style check is done manually so
+    /// the same test can also exercise the pool afterwards).
+    #[test]
+    fn panicking_job_propagates_and_pool_stays_usable() {
+        let pool = WorkerPool::new(4);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run(|id| {
+                if id == 1 {
+                    panic!("boom from worker 1");
+                }
+            });
+        }));
+        let payload = result.expect_err("job panic must re-raise from run()");
+        let msg = payload.downcast_ref::<&str>().copied().unwrap_or("");
+        assert_eq!(msg, "boom from worker 1", "original payload preserved");
+
+        // the dead-worker epoch poison is gone: all 4 workers run again
+        let count = AtomicUsize::new(0);
+        pool.run(|_| {
+            count.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(count.load(Ordering::SeqCst), 4);
+    }
+
+    #[test]
+    fn all_workers_panicking_still_terminates() {
+        let pool = WorkerPool::new(3);
+        for _ in 0..5 {
+            let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                pool.run(|_| panic!("everyone"));
+            }));
+            assert!(r.is_err());
+        }
+        let count = AtomicUsize::new(0);
+        pool.run(|_| {
+            count.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(count.load(Ordering::SeqCst), 3);
+    }
+
+    /// A job closure that calls back into `run` must fail loudly (the
+    /// reentrancy panic propagates like any job panic, and the pool
+    /// stays usable) rather than silently deadlock on the publisher
+    /// lock.
+    #[test]
+    fn reentrant_run_from_a_job_panics_instead_of_deadlocking() {
+        let pool = WorkerPool::new(2);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run(|id| {
+                if id == 0 {
+                    pool.run(|_| {});
+                }
+            });
+        }));
+        assert!(r.is_err(), "reentrant run must panic, not hang");
+        let count = AtomicUsize::new(0);
+        pool.run(|_| {
+            count.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(count.load(Ordering::SeqCst), 2);
+    }
+
+    /// Regression (issue 4): concurrent `run(&self)` from two threads
+    /// used to race on `job`/`remaining` with only a `debug_assert!`
+    /// in the way; the publisher lock serializes them.  Every job must
+    /// still execute on every worker exactly once.
+    #[test]
+    fn concurrent_run_from_two_threads_serializes() {
+        let pool = WorkerPool::new(3);
+        let count = AtomicUsize::new(0);
+        let rounds = 50;
+        std::thread::scope(|s| {
+            for _ in 0..2 {
+                s.spawn(|| {
+                    for _ in 0..rounds {
+                        pool.run(|_| {
+                            count.fetch_add(1, Ordering::SeqCst);
+                        });
+                    }
+                });
+            }
+        });
+        assert_eq!(count.load(Ordering::SeqCst), 2 * rounds * 3);
     }
 }

@@ -1,0 +1,297 @@
+//! Differential tests for the blocked multi-column sweep backend
+//! (`kernels::dots_block` family + the `data::BlockOps` trait): the
+//! blocked path must agree with the per-column dot path on every
+//! backend, across adversarial shapes — empty column blocks, B = 1,
+//! block counts that are not a multiple of the register tile, row
+//! counts that straddle the cache-band boundary, duplicate and
+//! reversed column lists, and degenerate (empty / zero) columns.
+//!
+//! Tolerances follow `kernel_diff.rs`: blocked traversal only changes
+//! the summation order, so blocked and per-column results differ by at
+//! most the usual `C·n·eps·Σ|term|` forward-error bound (the scalar
+//! backend is defined to be bitwise identical to the per-column path
+//! and is asserted as such).
+
+use hthc::data::{BlockOps, ColumnOps, DenseMatrix, QuantizedMatrix, SparseMatrix};
+use hthc::kernels::{self, Backend, BLOCK_COLS, QGROUP};
+use hthc::util::Rng;
+
+/// `C·n·eps·Σ|term|` summation bound (+ tiny absolute floor for n=0).
+fn sum_bound(n: usize, sum_abs: f64) -> f64 {
+    8.0 * (n.max(1) as f64) * (f32::EPSILON as f64) * sum_abs + 1e-30
+}
+
+fn randvec(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.normal()).collect()
+}
+
+/// Row counts around the kernel's cache-band boundary (4096) and the
+/// usual lane-width adversaries.
+const ROWS: &[usize] = &[1, 7, 33, 1000, 4096, 4100];
+
+/// Column-block sizes: empty, B=1, sub-tile, exact tile, tile+1, and a
+/// non-multiple-of-BLOCK_COLS tail.
+const NCOLS: &[usize] = &[0, 1, 3, BLOCK_COLS, BLOCK_COLS + 1, 2 * BLOCK_COLS + 3];
+
+// ---------------------------------------------------------------------------
+// Kernel level: explicit backends
+// ---------------------------------------------------------------------------
+
+#[test]
+fn dense_blocked_matches_per_column_on_all_backends() {
+    let mut rng = Rng::new(11001);
+    for &d in ROWS {
+        for &nc in NCOLS {
+            let cols: Vec<Vec<f32>> = (0..nc).map(|_| randvec(&mut rng, d)).collect();
+            let w = randvec(&mut rng, d);
+            let slices: Vec<&[f32]> = cols.iter().map(|c| c.as_slice()).collect();
+            for back in kernels::available_backends() {
+                let mut out = vec![0.0f32; nc];
+                kernels::dots_block_with(back, &slices, &w, &mut out);
+                for (k, col) in cols.iter().enumerate() {
+                    let per_col = kernels::dot_with(back, col, &w);
+                    if back == Backend::Scalar {
+                        // scalar blocked is *defined* as the per-column
+                        // reference — bitwise, not just close
+                        assert_eq!(
+                            out[k].to_bits(),
+                            per_col.to_bits(),
+                            "scalar blocked must be bitwise per-column (d={d} k={k})"
+                        );
+                    }
+                    let want: f64 = col.iter().zip(&w).map(|(&x, &y)| x as f64 * y as f64).sum();
+                    let sum_abs: f64 =
+                        col.iter().zip(&w).map(|(&x, &y)| (x as f64 * y as f64).abs()).sum();
+                    assert!(
+                        (out[k] as f64 - want).abs() <= sum_bound(d, sum_abs),
+                        "d={d} nc={nc} k={k} [{}]: {} vs {want}",
+                        back.name(),
+                        out[k]
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn sparse_blocked_matches_per_column_on_all_backends() {
+    let mut rng = Rng::new(11002);
+    let d = 5000; // > one row band
+    let w = randvec(&mut rng, d);
+    let sparse_col = |rng: &mut Rng, nnz: usize| -> (Vec<u32>, Vec<f32>) {
+        let mut rows: Vec<u32> =
+            rng.sample_distinct(d, nnz).into_iter().map(|r| r as u32).collect();
+        rows.sort_unstable();
+        let vals = randvec(rng, nnz);
+        (rows, vals)
+    };
+    // degenerate and banded-adversarial columns: empty, single entry at
+    // each extreme, all entries inside one band, entries spanning bands,
+    // zero values on live indices
+    let cols: Vec<(Vec<u32>, Vec<f32>)> = vec![
+        (vec![], vec![]),
+        (vec![0], vec![2.0]),
+        (vec![d as u32 - 1], vec![-3.0]),
+        (vec![17, 40, 99], vec![0.0, 0.0, 0.0]),
+        ((0..64u32).collect(), randvec(&mut rng, 64)),
+        sparse_col(&mut rng, 7),
+        sparse_col(&mut rng, 333),
+        sparse_col(&mut rng, 2500),
+        sparse_col(&mut rng, 1),
+    ];
+    let slices: Vec<(&[u32], &[f32])> =
+        cols.iter().map(|(r, v)| (r.as_slice(), v.as_slice())).collect();
+    for back in kernels::available_backends() {
+        let mut out = vec![0.0f32; slices.len()];
+        kernels::sparse_dots_block_with(back, &slices, &w, &mut out);
+        for (k, (rows, vals)) in cols.iter().enumerate() {
+            let per_col = kernels::sparse_dot_with(back, rows, vals, &w);
+            if back == Backend::Scalar {
+                assert_eq!(out[k].to_bits(), per_col.to_bits(), "scalar blocked k={k}");
+            }
+            let want: f64 = rows
+                .iter()
+                .zip(vals)
+                .map(|(&r, &x)| x as f64 * w[r as usize] as f64)
+                .sum();
+            let sum_abs: f64 = rows
+                .iter()
+                .zip(vals)
+                .map(|(&r, &x)| (x as f64 * w[r as usize] as f64).abs())
+                .sum();
+            assert!(
+                (out[k] as f64 - want).abs() <= sum_bound(rows.len(), sum_abs),
+                "k={k} nnz={} [{}]: {} vs {want}",
+                rows.len(),
+                back.name(),
+                out[k]
+            );
+        }
+    }
+}
+
+#[test]
+fn quant_blocked_matches_per_column_on_all_backends() {
+    let mut rng = Rng::new(11003);
+    // spans the band boundary (4096 rows = 64 groups) plus a tail band
+    for &groups in &[1usize, 3, 64, 65] {
+        let d = groups * QGROUP;
+        let nc = BLOCK_COLS + 1;
+        let dm = DenseMatrix::from_col_major(d, nc, randvec(&mut rng, d * nc));
+        let qm = QuantizedMatrix::from_dense(&dm);
+        let w = randvec(&mut rng, d);
+        let slices: Vec<(&[u8], &[f32])> = (0..nc).map(|j| qm.col_packed(j)).collect();
+        for back in kernels::available_backends() {
+            let mut out = vec![0.0f32; nc];
+            kernels::quant_dots_block_with(back, &slices, &w, &mut out);
+            for k in 0..nc {
+                let (packed, scales) = qm.col_packed(k);
+                let per_col = kernels::quant_dot_range_with(back, packed, scales, &w, 0, d);
+                if back == Backend::Scalar {
+                    assert_eq!(out[k].to_bits(), per_col.to_bits(), "scalar blocked k={k}");
+                }
+                let deq = qm.col_dense(k);
+                let want: f64 = deq.iter().zip(&w).map(|(&x, &y)| x as f64 * y as f64).sum();
+                let sum_abs: f64 =
+                    deq.iter().zip(&w).map(|(&x, &y)| (x as f64 * y as f64).abs()).sum();
+                assert!(
+                    (out[k] as f64 - want).abs() <= 2.0 * sum_bound(d, sum_abs),
+                    "groups={groups} k={k} [{}]: {} vs {want}",
+                    back.name(),
+                    out[k]
+                );
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// BlockOps level: the dispatched trait path every bulk consumer uses
+// ---------------------------------------------------------------------------
+
+/// Column lists the consumers actually produce: contiguous blocks,
+/// shuffled claims, duplicates (task A's random blocks), reversed, and
+/// the empty/B=1/tail shapes.
+fn adversarial_col_lists(n: usize) -> Vec<Vec<usize>> {
+    let mut lists = vec![
+        vec![],
+        vec![n / 2],
+        (0..n).collect::<Vec<_>>(),
+        (0..n).rev().collect::<Vec<_>>(),
+        (0..n.min(BLOCK_COLS + 3)).collect::<Vec<_>>(),
+    ];
+    lists.push(vec![0; BLOCK_COLS.min(n)]); // duplicates
+    lists.push((0..n).step_by(3).collect::<Vec<_>>()); // strided tail
+    lists
+}
+
+/// `col_of(j)` materializes column j densely (dequantized/densified) so
+/// the reference and the `Σ|term|` bound are computed in f64 regardless
+/// of representation.
+fn assert_blockops_matches_per_column(
+    ops: &dyn BlockOps,
+    w: &[f32],
+    col_of: &dyn Fn(usize) -> Vec<f32>,
+    label: &str,
+) {
+    let n = ops.n_cols();
+    let d = ops.n_rows();
+    for cols in adversarial_col_lists(n) {
+        let mut out = vec![0.0f32; cols.len()];
+        ops.dots_block(&cols, w, &mut out);
+        for (k, &j) in cols.iter().enumerate() {
+            let dense = col_of(j);
+            let want: f64 = dense.iter().zip(w).map(|(&x, &y)| x as f64 * y as f64).sum();
+            let sum_abs: f64 =
+                dense.iter().zip(w).map(|(&x, &y)| (x as f64 * y as f64).abs()).sum();
+            let per_col = ops.dot(j, w) as f64;
+            let tol = 2.0 * sum_bound(d, sum_abs);
+            assert!(
+                (out[k] as f64 - want).abs() <= tol,
+                "{label}: col {j} (slot {k}): blocked {} vs reference {want}",
+                out[k]
+            );
+            assert!(
+                (out[k] as f64 - per_col).abs() <= 2.0 * tol,
+                "{label}: col {j} (slot {k}): blocked {} vs per-column {per_col}",
+                out[k]
+            );
+        }
+    }
+}
+
+#[test]
+fn blockops_dense_sparse_quantized_agree_with_per_column_dot() {
+    let mut rng = Rng::new(11004);
+    let d = 4160; // spans the row band
+    let n = 2 * BLOCK_COLS + 3;
+
+    let dm = DenseMatrix::from_col_major(d, n, randvec(&mut rng, d * n));
+    let w = randvec(&mut rng, d);
+    assert_blockops_matches_per_column(&dm, &w, &|j| dm.col(j).to_vec(), "dense");
+
+    let qm = QuantizedMatrix::from_dense(&dm);
+    assert_blockops_matches_per_column(&qm, &w, &|j| qm.col_dense(j), "quantized");
+
+    let mut cols: Vec<Vec<(u32, f32)>> = Vec::new();
+    for j in 0..n {
+        // mix of empty, short and long columns
+        let nnz = [0usize, 1, 5, 200, 2000][j % 5];
+        let mut col: Vec<(u32, f32)> = rng
+            .sample_distinct(d, nnz)
+            .into_iter()
+            .map(|r| (r as u32, rng.normal()))
+            .collect();
+        col.sort_unstable_by_key(|&(r, _)| r);
+        cols.push(col);
+    }
+    let sm = SparseMatrix::from_columns(d, cols);
+    assert_blockops_matches_per_column(&sm, &w, &|j| sm.col_dense(j), "sparse");
+}
+
+/// The trait's default body is the documented per-column fallback: a
+/// representation that does not override `dots_block` must get results
+/// identical to its own `dot`.
+#[test]
+fn blockops_default_impl_is_the_per_column_fallback() {
+    struct Plain(DenseMatrix);
+    impl ColumnOps for Plain {
+        fn n_rows(&self) -> usize {
+            self.0.n_rows()
+        }
+        fn n_cols(&self) -> usize {
+            self.0.n_cols()
+        }
+        fn dot(&self, col: usize, w: &[f32]) -> f32 {
+            self.0.dot(col, w)
+        }
+        fn dot_range(&self, col: usize, w: &[f32], lo: usize, hi: usize) -> f32 {
+            self.0.dot_range(col, w, lo, hi)
+        }
+        fn axpy(&self, col: usize, delta: f32, v: &mut [f32]) {
+            self.0.axpy(col, delta, v)
+        }
+        fn sq_norm(&self, col: usize) -> f32 {
+            self.0.sq_norm(col)
+        }
+        fn nnz(&self, col: usize) -> usize {
+            self.0.nnz(col)
+        }
+        fn col_bytes(&self, col: usize) -> u64 {
+            self.0.col_bytes(col)
+        }
+    }
+    impl BlockOps for Plain {} // default dots_block
+
+    let mut rng = Rng::new(11005);
+    let (d, n) = (257, BLOCK_COLS + 2);
+    let p = Plain(DenseMatrix::from_col_major(d, n, randvec(&mut rng, d * n)));
+    let w = randvec(&mut rng, d);
+    let cols: Vec<usize> = (0..n).rev().collect();
+    let mut out = vec![0.0f32; n];
+    p.dots_block(&cols, &w, &mut out);
+    for (k, &j) in cols.iter().enumerate() {
+        assert_eq!(out[k].to_bits(), p.dot(j, &w).to_bits(), "fallback col {j}");
+    }
+}
