@@ -19,7 +19,7 @@
 //! proof.  Results are recorded in EXPERIMENTS.md §E2E.
 
 use hthc::coordinator::HthcConfig;
-use hthc::data::generator::{generate, DatasetKind, Family};
+use hthc::data::{DatasetBuilder, DatasetKind, Family};
 use hthc::glm::{GlmModel, Lasso, SvmDual};
 use hthc::memory::TierSim;
 use hthc::runtime::{GapService, XlaRuntime};
@@ -45,13 +45,14 @@ fn main() {
     let service = GapService::new(&rt);
 
     // ---------------- Lasso on epsilon-like dense -----------------------
-    let data = generate(DatasetKind::EpsilonLike, Family::Regression, 0.2, 4242);
+    let data = DatasetBuilder::generated(DatasetKind::EpsilonLike, Family::Regression)
+        .scale(0.2)
+        .seed(4242)
+        .build()
+        .expect("generated dataset");
     println!("\n=== Lasso, {} ===", data.describe());
-    let obj0 = Lasso::new(0.05).objective(
-        &vec![0.0; data.d()],
-        &data.targets,
-        &vec![0.0; data.n()],
-    );
+    let obj0 =
+        Lasso::new(0.05).objective(&vec![0.0; data.d()], data.targets(), &vec![0.0; data.n()]);
     let tol = 1e-4 * obj0;
     let cfg = HthcConfig {
         t_a: 2,
@@ -72,7 +73,7 @@ fn main() {
         if use_pjrt {
             trainer = trainer.solver(Hthc::with_backend(&service));
         }
-        let res = trainer.fit_with(&mut model, &data.matrix, &data.targets, &sim);
+        let res = trainer.fit_with(&mut model, &data, &sim);
         println!("[{label:>10}] {}", res.summary());
         assert!(res.converged, "{label} must converge to gap <= {tol:.3e}");
         res
@@ -90,7 +91,11 @@ fn main() {
     assert!(d_obj <= 2.0 * tol, "native and PJRT paths must agree");
 
     // ---------------- SVM on dense classification -----------------------
-    let svm_data = generate(DatasetKind::EpsilonLike, Family::Classification, 0.2, 77);
+    let svm_data = DatasetBuilder::generated(DatasetKind::EpsilonLike, Family::Classification)
+        .scale(0.2)
+        .seed(77)
+        .build()
+        .expect("generated dataset");
     println!("\n=== SVM, {} ===", svm_data.describe());
     let n = svm_data.n();
     let mut model = SvmDual::new(1e-3, n);
@@ -105,8 +110,8 @@ fn main() {
                 .eval_every(10)
                 .timeout_secs(180.0),
         )
-        .fit_with(&mut model, &svm_data.matrix, &svm_data.targets, &sim);
-    let acc = model.accuracy(svm_data.matrix.as_ops(), &res.v);
+        .fit_with(&mut model, &svm_data, &sim);
+    let acc = model.accuracy(svm_data.as_ops(), &res.v);
     println!("[pjrt-A   ] {}", res.summary());
     println!("training accuracy: {:.2}%", acc * 100.0);
     assert!(acc > 0.9, "separable planted data must classify well");

@@ -12,7 +12,7 @@
 //! selection at an equal epoch budget.
 
 use hthc::coordinator::Selection;
-use hthc::data::generator::{generate, DatasetKind, Family};
+use hthc::data::{DatasetBuilder, DatasetKind, Family};
 use hthc::glm::Lasso;
 use hthc::memory::TierSim;
 use hthc::solver::{StopWhen, Trainer};
@@ -29,9 +29,13 @@ fn f1(alpha: &[f32], truth: &[f32]) -> (f64, usize) {
 }
 
 fn main() {
-    let data = generate(DatasetKind::DvscLike, Family::Regression, 0.25, 7);
+    let data = DatasetBuilder::generated(DatasetKind::DvscLike, Family::Regression)
+        .scale(0.25)
+        .seed(7)
+        .build()
+        .expect("generated dataset");
     println!("dataset: {}", data.describe());
-    let truth = data.alpha_star.as_ref().expect("regression plants a model");
+    let truth = data.alpha_star().expect("regression plants a model");
     let planted = truth.iter().filter(|&&a| a != 0.0).count();
     println!("planted support: {planted} of {} features\n", data.n());
 
@@ -48,7 +52,7 @@ fn main() {
                     .eval_every(25)
                     .timeout_secs(120.0),
             )
-            .fit_with(&mut model, &data.matrix, &data.targets, &sim);
+            .fit_with(&mut model, &data, &sim);
         let (f1_score, support) = f1(&res.alpha, truth);
         println!("selection = {:<12}  {}", sel.name(), res.summary());
         println!(

@@ -7,14 +7,20 @@
 //! Shows the minimal API surface: generate (or load) data, configure
 //! the two-task topology, train, inspect the convergence trace.
 
-use hthc::data::generator::{generate, DatasetKind, Family};
+use hthc::data::{DatasetBuilder, DatasetKind, Family};
 use hthc::glm::Lasso;
 use hthc::solver::{StopWhen, Trainer};
 
 fn main() {
     // 1. A dataset: epsilon-like (dense, samples >> features), scaled
-    //    down so the example runs in seconds.
-    let data = generate(DatasetKind::EpsilonLike, Family::Regression, 0.25, 42);
+    //    down so the example runs in seconds.  The one DatasetBuilder
+    //    pipeline also loads real files (DatasetBuilder::path) and
+    //    handles normalization / representation / tier placement.
+    let data = DatasetBuilder::generated(DatasetKind::EpsilonLike, Family::Regression)
+        .scale(0.25)
+        .seed(42)
+        .build()
+        .expect("generated dataset");
     println!("dataset: {}", data.describe());
 
     // 2. A model: Lasso, regularized hard enough to select features.
@@ -22,7 +28,7 @@ fn main() {
     let model = Lasso::new(2.0);
     let obj0 = {
         use hthc::glm::GlmModel;
-        model.objective(&vec![0.0; data.d()], &data.targets, &vec![0.0; data.n()])
+        model.objective(&vec![0.0; data.d()], data.targets(), &vec![0.0; data.n()])
     };
 
     // 3. The Trainer facade: pick a solver (HTHC is the default), the
@@ -40,8 +46,8 @@ fn main() {
                 .timeout_secs(60.0),
         );
 
-    // 4. Train.
-    let result = trainer.fit(&data.matrix, &data.targets);
+    // 4. Train (targets travel inside the Dataset).
+    let result = trainer.fit(&data);
 
     // 5. Inspect.
     println!("converged: {}", result.converged);

@@ -10,27 +10,33 @@
 //! reporting against the ST baseline — plus the LIBSVM loader on an
 //! inline sample so real data drops in with one path change.
 
-use hthc::data::generator::{generate, DatasetKind, Family};
-use hthc::data::{libsvm, ColumnOps, Matrix};
+use hthc::data::{DatasetBuilder, DatasetKind, Family, Matrix};
 use hthc::glm::SvmDual;
 use hthc::memory::TierSim;
 use hthc::solver::{SeqThreshold, StopWhen, Trainer};
 
 fn main() {
-    // --- real-data path: LIBSVM format ---------------------------------
+    // --- real-data path: LIBSVM format through the builder --------------
     let sample = "+1 3:0.9 7:1.2\n-1 1:0.5 3:-0.3\n+1 2:1.1 9:0.4\n";
-    let samples = libsvm::read(sample.as_bytes()).expect("parse");
-    let (mini, labels) = libsvm::to_classification(&samples);
+    let samples = hthc::data::libsvm::read(sample.as_bytes()).expect("parse");
+    let mini = DatasetBuilder::libsvm_samples(samples)
+        .family(Family::Classification)
+        .build()
+        .expect("orient");
     println!(
         "libsvm loader: {} samples x {} features (labels {:?}) — swap in \
-         your own file with libsvm::read_file(path)\n",
+         your own file with DatasetBuilder::path(path)\n",
         mini.n_cols(),
         mini.n_rows(),
-        labels
+        mini.labels().unwrap()
     );
 
     // --- synthetic news20-like workload ---------------------------------
-    let data = generate(DatasetKind::News20Like, Family::Classification, 0.12, 11);
+    let data = DatasetBuilder::generated(DatasetKind::News20Like, Family::Classification)
+        .scale(0.12)
+        .seed(11)
+        .build()
+        .expect("generated dataset");
     println!("dataset: {}", data.describe());
     let n = data.n();
     let lam = 1e-4;
@@ -46,8 +52,8 @@ fn main() {
         .threads(2, 4, 1) // sparse: one thread per vector (paper §IV-D)
         .batch_frac(0.25)
         .stop_when(stop)
-        .fit_with(&mut model, &data.matrix, &data.targets, &sim);
-    let acc = model.accuracy(data.matrix.as_ops(), &res.v);
+        .fit_with(&mut model, &data, &sim);
+    let acc = model.accuracy(data.as_ops(), &res.v);
     println!("\nHTHC (A+B): {}", res.summary());
     println!("  training accuracy {:.2}%", acc * 100.0);
 
@@ -58,8 +64,8 @@ fn main() {
         .solver(SeqThreshold)
         .threads(2, 6, 1)
         .stop_when(stop)
-        .fit_with(&mut model_st, &data.matrix, &data.targets, &sim);
-    let acc_st = model_st.accuracy(data.matrix.as_ops(), &res_st.v);
+        .fit_with(&mut model_st, &data, &sim);
+    let acc_st = model_st.accuracy(data.as_ops(), &res_st.v);
     println!("ST        : {}", res_st.summary());
     println!("  training accuracy {:.2}%", acc_st * 100.0);
 
@@ -71,7 +77,7 @@ fn main() {
         .count();
     println!("\nbox violations: {violations} (must be 0)");
     assert_eq!(violations, 0);
-    if let Matrix::Sparse(sm) = &data.matrix {
+    if let Matrix::Sparse(sm) = data.matrix() {
         println!("matrix density: {:.4}%", sm.density() * 100.0);
     }
 }

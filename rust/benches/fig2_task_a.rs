@@ -9,7 +9,7 @@
 //! saturation shape (DESIGN.md §5).
 
 use hthc::coordinator::{task_a, GapMemory, PerfModel};
-use hthc::data::Matrix;
+use hthc::data::{Dataset, DatasetBuilder, DenseMatrix, Matrix};
 use hthc::glm::{GlmModel, Lasso};
 use hthc::memory::TierSim;
 use hthc::metrics::Table;
@@ -17,10 +17,13 @@ use hthc::threadpool::WorkerPool;
 use hthc::util::timer::{flops_per_cycle, KNL_HZ};
 use hthc::util::Timer;
 
-fn dense_cols(d: usize, n: usize, seed: u64) -> Matrix {
+fn dense_cols(d: usize, n: usize, seed: u64) -> Dataset {
     let mut rng = hthc::util::Rng::new(seed);
     let data: Vec<f32> = (0..d * n).map(|_| rng.normal()).collect();
-    Matrix::Dense(hthc::data::DenseMatrix::from_col_major(d, n, data))
+    let matrix = Matrix::Dense(DenseMatrix::from_col_major(d, n, data));
+    DatasetBuilder::in_memory(matrix, vec![0.0; d])
+        .build()
+        .expect("bench dataset")
 }
 
 fn main() {
@@ -43,7 +46,7 @@ fn main() {
     );
 
     for &d in &measured_ds {
-        let matrix = dense_cols(d, n, 2);
+        let dataset = dense_cols(d, n, 2);
         let model = Lasso::new(0.1);
         let kind = model.kind();
         let w = vec![0.5f32; d];
@@ -59,7 +62,9 @@ fn main() {
             // fixed work: 3 full sweeps of the 600 coords
             let coords: Vec<usize> = (0..n).cycle().take(3 * n).collect();
             let t = Timer::start();
-            task_a::run_fixed(&pool, &matrix, &snap, &gaps, &coords, &sim);
+            task_a::run_fixed(
+                &pool, dataset.matrix(), &snap, &gaps, &coords, &sim, dataset.placement(),
+            );
             let secs = t.secs();
             let flops = (coords.len() * 2 * d) as f64;
             // modeled: aggregate flops/cycle at T_A threads

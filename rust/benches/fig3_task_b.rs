@@ -8,7 +8,7 @@
 //! cover what one core can host; modeled rows carry the full range.
 
 use hthc::coordinator::{task_b, PerfModel, SharedVector, WorkingSet};
-use hthc::data::Matrix;
+use hthc::data::{Dataset, DatasetBuilder, DenseMatrix, Matrix};
 use hthc::glm::{GlmModel, Ridge};
 use hthc::memory::TierSim;
 use hthc::metrics::Table;
@@ -16,10 +16,13 @@ use hthc::threadpool::WorkerPool;
 use hthc::util::timer::KNL_HZ;
 use hthc::util::Timer;
 
-fn dense_cols(d: usize, n: usize, seed: u64) -> Matrix {
+fn dense_cols(d: usize, n: usize, seed: u64) -> Dataset {
     let mut rng = hthc::util::Rng::new(seed);
     let data: Vec<f32> = (0..d * n).map(|_| rng.normal()).collect();
-    Matrix::Dense(hthc::data::DenseMatrix::from_col_major(d, n, data))
+    let matrix = Matrix::Dense(DenseMatrix::from_col_major(d, n, data));
+    DatasetBuilder::in_memory(matrix, vec![0.0; d])
+        .build()
+        .expect("bench dataset")
 }
 
 fn main() {
@@ -44,17 +47,17 @@ fn main() {
     let kind = model.kind();
 
     for &d in &measured_ds {
-        let matrix = dense_cols(d, batch, 3);
+        let dataset = dense_cols(d, batch, 3);
         let y = vec![0.25f32; d];
         for &t_b in &t_bs {
             for &v_b in &v_bs {
                 if t_b * v_b > 16 {
                     continue; // thread budget on this host
                 }
-                let mut ws = WorkingSet::new(&matrix, batch);
+                let mut ws = WorkingSet::new(dataset.matrix(), batch);
                 let sim = TierSim::default();
                 let all: Vec<usize> = (0..batch).collect();
-                ws.swap_in(&matrix, &all, &sim);
+                ws.swap_in(dataset.matrix(), &all, &sim, dataset.placement());
                 let v = SharedVector::new(d, 1024);
                 let alpha = SharedVector::new(batch, usize::MAX >> 1);
                 let pool = WorkerPool::with_name(t_b * v_b, "fig3-b");

@@ -51,19 +51,19 @@ fn main() {
         let g = bench_dataset(kind, family, 1000 + kind as u64);
         let solvers: Vec<&str> = if kind == DatasetKind::CriteoLike {
             vec!["A+B", "ST"] // paper: only these for criteo
-        } else if matches!(g.matrix, hthc::data::Matrix::Dense(_)) {
+        } else if matches!(g.matrix(), hthc::data::Matrix::Dense(_)) {
             vec!["A+B", "ST", "ST(A+B)", "OMP", "OMP WILD"]
         } else {
             vec!["A+B", "ST", "ST(A+B)"] // paper: OMP runs only for dense
         };
 
         let probe = bench_model(model_name, g.n());
-        let o0 = obj0(probe.as_ref(), &g.matrix, &g.targets);
+        let o0 = obj0(probe.as_ref(), &g);
         let mut table = Table::new(
             format!(
                 "Fig 5: {} / {} ({} x {})",
                 model_name,
-                g.kind.name(),
+                g.meta().source.describe(),
                 g.d(),
                 g.n()
             ),
@@ -98,7 +98,7 @@ fn main() {
                 cfg.t_b = 4;
                 cfg.v_b = 1;
             }
-            let res = run_solver(solver, model.as_mut(), &g.matrix, &g.targets, &cfg);
+            let res = run_solver(solver, model.as_mut(), &g, &cfg);
             let times = times_to(&res, o0, &rels);
             let obj = res.trace.best_objective().unwrap_or(f64::NAN);
             best_objs.push(obj);
@@ -161,18 +161,18 @@ fn main() {
     // guard for the OMP-WILD plateau claim: its final suboptimality must
     // exceed OMP-atomic's on at least one dense case (broken v = D alpha).
     let g = bench_dataset(DatasetKind::EpsilonLike, Family::Regression, 7);
-    let o0v = obj0(&*bench_model("lasso", g.n()), &g.matrix, &g.targets);
+    let o0v = obj0(&*bench_model("lasso", g.n()), &g);
     let run = |s: &str| {
         let mut m = bench_model("lasso", g.n());
         let cfg = bench_cfg(1e-5 * o0v, 15.0);
-        let r = run_solver(s, m.as_mut(), &g.matrix, &g.targets, &cfg);
+        let r = run_solver(s, m.as_mut(), &g, &cfg);
         // true suboptimality against a consistent v (recomputed)
-        let v2 = g.matrix.matvec_alpha(&r.alpha);
+        let v2 = g.matvec_alpha(&r.alpha);
         let mut fresh = hthc::glm::Lasso::new(0.3);
         use hthc::glm::GlmModel;
         fresh.epoch_refresh(&r.alpha);
-        let obj = fresh.objective(&v2, &g.targets, &r.alpha);
-        let gap = glm::total_gap(&fresh, g.matrix.as_block_ops(), &v2, &g.targets, &r.alpha);
+        let obj = fresh.objective(&v2, g.targets(), &r.alpha);
+        let gap = glm::total_gap(&fresh, g.as_block_ops(), &v2, g.targets(), &r.alpha);
         (obj, gap)
     };
     let (obj_atomic, gap_atomic) = run("OMP");

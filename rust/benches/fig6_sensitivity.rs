@@ -23,7 +23,7 @@ fn main() {
         };
         let g = bench_dataset(kind, family, 7000);
         let probe = bench_model(model_name, g.n());
-        let o0 = obj0(probe.as_ref(), &g.matrix, &g.targets);
+        let o0 = obj0(probe.as_ref(), &g);
         let target = 1e-3 * o0;
 
         let mut results: Vec<(f64, f64, usize, usize, usize)> = Vec::new();
@@ -38,7 +38,7 @@ fn main() {
                         cfg.v_b = vb;
                         let mut model = bench_model(model_name, g.n());
                         let res =
-                            run_solver("A+B", model.as_mut(), &g.matrix, &g.targets, &cfg);
+                            run_solver("A+B", model.as_mut(), &g, &cfg);
                         if let Some(t) = res.trace.time_to_gap(target) {
                             results.push((t, frac, ta, tb, vb));
                         }
@@ -53,7 +53,7 @@ fn main() {
                 "Fig 6: settings within 110% of best ({}) — {} / {}",
                 hthc::util::fmt_secs(best),
                 model_name,
-                g.kind.name()
+                g.meta().source.describe()
             ),
             &["t(converge)", "%B", "T_A", "T_B", "V_B", "within"],
         );

@@ -18,7 +18,7 @@ use hthc::util::{Rng, Timer};
 /// HTHC epoch loop with a fixed A-update budget per epoch (the paper's
 /// Fig. 7 protocol; T_A = 10 there, scaled-down topology here).
 fn run_fixed_a(
-    g: &hthc::data::GeneratedDataset,
+    g: &hthc::data::Dataset,
     model_name: &str,
     a_frac: f64,
     target_gap: f64,
@@ -32,7 +32,7 @@ fn run_fixed_a(
     let v = SharedVector::new(d, 1024);
     let alpha = SharedVector::new(n, usize::MAX >> 1);
     let gaps = GapMemory::new(n);
-    let mut ws = WorkingSet::new(&g.matrix, m_batch);
+    let mut ws = WorkingSet::new(g.matrix(), m_batch);
     let sim = TierSim::default();
     let mut rng = Rng::new(99);
     let timer = Timer::start();
@@ -45,30 +45,30 @@ fn run_fixed_a(
         let v_snap = v.snapshot();
         let mut w = vec![0.0f32; d];
         for r in 0..d {
-            w[r] = kind.w_of(v_snap[r], g.targets[r]);
+            w[r] = kind.w_of(v_snap[r], g.targets()[r]);
         }
         let sel = if epoch == 1 { Selection::Random } else { Selection::DualityGap };
         let batch = sel.select(&gaps.values(), m_batch, &mut rng);
-        ws.swap_in(&g.matrix, &batch, &sim);
+        ws.swap_in(g.matrix(), &batch, &sim, g.placement());
 
         // A: exactly a_budget random refreshes, then B (sequentialized —
         // the budget, not the overlap, is what Fig. 7 varies)
         let coords: Vec<usize> = (0..a_budget).map(|_| rng.below(n)).collect();
         let snap = task_a::ASnapshot { w: &w, alpha: &alpha_snap, kind, epoch };
-        task_a::run_fixed(&pool_a, &g.matrix, &snap, &gaps, &coords, &sim);
+        task_a::run_fixed(&pool_a, g.matrix(), &snap, &gaps, &coords, &sim, g.placement());
 
         let items = task_b::WorkItem::from_batch(&batch);
-        task_b::run_epoch(&pool_b, &ws, &items, &v, &g.targets, &alpha, kind, 2, 1, &sim);
+        task_b::run_epoch(&pool_b, &ws, &items, &v, g.targets(), &alpha, kind, 2, 1, &sim);
         for &j in &batch {
             gaps.mark_processed(j, 0.0, epoch);
         }
 
         if epoch % 5 == 0 {
             let a_now = alpha.snapshot();
-            let v_now = g.matrix.matvec_alpha(&a_now);
+            let v_now = g.matvec_alpha(&a_now);
             v.store_all(&v_now);
             let gap = glm::total_gap(
-                model.as_ref(), g.matrix.as_block_ops(), &v_now, &g.targets, &a_now,
+                model.as_ref(), g.as_block_ops(), &v_now, g.targets(), &a_now,
             );
             if gap <= target_gap {
                 return (Some(timer.secs()), epoch as usize);
@@ -95,10 +95,10 @@ fn main() {
         };
         let g = bench_dataset(kind, family, 8000);
         let probe = bench_model(model_name, g.n());
-        let o0 = obj0(probe.as_ref(), &g.matrix, &g.targets);
+        let o0 = obj0(probe.as_ref(), &g);
         let target = 1e-3 * o0;
         let mut table = Table::new(
-            format!("Fig 7: {} / {}", model_name, g.kind.name()),
+            format!("Fig 7: {} / {}", model_name, g.meta().source.describe()),
             &["A updates/epoch", "% of n", "t(converge)", "epochs"],
         );
         for frac in [0.01f64, 0.05, 0.10, 0.25, 0.50, 1.00] {

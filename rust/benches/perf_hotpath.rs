@@ -424,29 +424,31 @@ fn main() {
         use hthc::coordinator::hthc::GapBackend;
         use hthc::glm::GlmModel;
         let service = hthc::runtime::GapService::new(&rt);
-        let g = hthc::data::generator::generate(
-            hthc::data::generator::DatasetKind::EpsilonLike,
-            hthc::data::generator::Family::Regression,
-            0.2,
-            31,
-        );
+        let g = hthc::data::DatasetBuilder::generated(
+            hthc::data::DatasetKind::EpsilonLike,
+            hthc::data::Family::Regression,
+        )
+        .scale(0.2)
+        .seed(31)
+        .build()
+        .expect("bench dataset");
         let (d, n) = (g.d(), g.n());
         let w: Vec<f32> = (0..d).map(|_| rng.normal()).collect();
         let alpha: Vec<f32> = (0..n).map(|_| rng.normal() * 0.1).collect();
         let kind = hthc::glm::Lasso::new(0.05).kind();
         let coords: Vec<usize> = (0..service.block_len().min(n)).collect();
         // warm once (compile)
-        let _ = service.batch_gaps(&g.matrix, &coords, &w, &alpha, kind);
+        let _ = service.batch_gaps(g.matrix(), &coords, &w, &alpha, kind);
         let (med_pjrt, _) = bench_median(
             || {
                 std::hint::black_box(
-                    service.batch_gaps(&g.matrix, &coords, &w, &alpha, kind),
+                    service.batch_gaps(g.matrix(), &coords, &w, &alpha, kind),
                 );
             },
             0.3,
             200,
         );
-        let ops = g.matrix.as_ops();
+        let ops = g.as_ops();
         let (med_native, _) = bench_median(
             || {
                 let mut s = 0.0f32;

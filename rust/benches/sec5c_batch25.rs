@@ -27,7 +27,7 @@ fn main() {
         };
         let g = bench_dataset(DatasetKind::DvscLike, family, 9000);
         let probe = bench_model(model_name, g.n());
-        let o0 = obj0(probe.as_ref(), &g.matrix, &g.targets);
+        let o0 = obj0(probe.as_ref(), &g);
         let target = 1e-3 * o0;
 
         // tuned: small search over batch fracs
@@ -36,7 +36,7 @@ fn main() {
             let mut cfg = bench_cfg(target, timeout);
             cfg.batch_frac = frac;
             let mut model = bench_model(model_name, g.n());
-            let res = run_solver("A+B", model.as_mut(), &g.matrix, &g.targets, &cfg);
+            let res = run_solver("A+B", model.as_mut(), &g, &cfg);
             if let Some(t) = res.trace.time_to_gap(target) {
                 if best.map_or(true, |b| t < b.0) {
                     best = Some((t, frac, res.epochs, res.refresh_frac()));

@@ -38,7 +38,7 @@ fn main() {
             };
             let g = bench_dataset(kind, family, 2000 + kind as u64);
             let probe = bench_model(model_name, g.n());
-            let o0 = obj0(probe.as_ref(), &g.matrix, &g.targets);
+            let o0 = obj0(probe.as_ref(), &g);
             let target = 1e-3 * o0;
 
             let mut best: Option<(f64, f64, usize, usize, usize, usize)> = None;
@@ -46,7 +46,7 @@ fn main() {
                 for &ta in &t_as {
                     for &tb in &t_bs {
                         for &vb in &v_bs {
-                            if vb > 1 && !matches!(g.matrix, hthc::data::Matrix::Dense(_)) {
+                            if vb > 1 && !matches!(g.matrix(), hthc::data::Matrix::Dense(_)) {
                                 continue; // paper: V_B = 1 for sparse
                             }
                             let mut cfg = bench_cfg(target, timeout);
@@ -56,7 +56,7 @@ fn main() {
                             cfg.v_b = vb;
                             let mut model = bench_model(model_name, g.n());
                             let res =
-                                run_solver("A+B", model.as_mut(), &g.matrix, &g.targets, &cfg);
+                                run_solver("A+B", model.as_mut(), &g, &cfg);
                             if let Some(t) = res.trace.time_to_gap(target) {
                                 if best.map_or(true, |b| t < b.0) {
                                     best = Some((t, frac, ta, tb, vb, res.epochs));
@@ -69,7 +69,7 @@ fn main() {
             match best {
                 Some((t, frac, ta, tb, vb, epochs)) => {
                     table.row(vec![
-                        g.kind.name().into(),
+                        g.meta().source.describe(),
                         format!("{:.0}%", frac * 100.0),
                         ta.to_string(),
                         tb.to_string(),
@@ -81,7 +81,7 @@ fn main() {
                 }
                 None => {
                     table.row(vec![
-                        g.kind.name().into(),
+                        g.meta().source.describe(),
                         "--".into(),
                         "--".into(),
                         "--".into(),

@@ -17,7 +17,7 @@ use hthc::util::Timer;
 /// Train until accuracy target, returning seconds (None on timeout).
 fn time_to_accuracy(
     solver: &str,
-    g: &hthc::data::GeneratedDataset,
+    g: &hthc::data::Dataset,
     target: f64,
     timeout: f64,
 ) -> Option<f64> {
@@ -25,7 +25,7 @@ fn time_to_accuracy(
     let lam = 1e-3f32;
     let sim = TierSim::default();
     let acc_of = |v: &[f32]| {
-        let ops = g.matrix.as_ops();
+        let ops = g.as_ops();
         (0..n).filter(|&j| ops.dot(j, v) > 0.0).count() as f64 / n as f64
     };
     match solver {
@@ -50,7 +50,7 @@ fn time_to_accuracy(
                         false
                     }
                 })
-                .fit_with(&mut model, &g.matrix, &g.targets, &sim);
+                .fit_with(&mut model, g, &sim);
             hit
         }
         name => {
@@ -66,7 +66,7 @@ fn time_to_accuracy(
                 cfg.eval_every = usize::MAX >> 1; // skip gap evals: pure speed
                 cfg.max_epochs = budget;
                 let mut model = SvmDual::new(lam, n);
-                let res = run_solver(name, &mut model, &g.matrix, &g.targets, &cfg);
+                let res = run_solver(name, &mut model, g, &cfg);
                 if acc_of(&res.v) >= target {
                     return Some(res.wall_secs);
                 }
@@ -94,7 +94,7 @@ fn main() {
     );
     for (kind, target, label) in cases {
         let g = bench_dataset(kind, Family::Classification, 4000 + kind as u64);
-        let mut row = vec![g.kind.name().to_string(), label.to_string()];
+        let mut row = vec![g.meta().source.describe(), label.to_string()];
         for solver in ["A+B", "ST", "PASSCoDe-atomic", "PASSCoDe-wild"] {
             let t = time_to_accuracy(solver, &g, target, timeout);
             row.push(fmt_opt_secs(t));

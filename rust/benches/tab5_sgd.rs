@@ -25,19 +25,19 @@ fn main() {
         DatasetKind::News20Like,
     ] {
         let g = bench_dataset(kind, Family::Regression, 5000 + kind as u64);
-        let cache = RowCache::build(&g.matrix);
+        let cache = RowCache::build(g.matrix());
         // target: the MSE a converged lasso reaches, padded 10% — every
         // solver can achieve it, the question is how fast.
         let target = {
             let mut model = bench_model("lasso", g.n());
-            let o0 = obj0(model.as_ref(), &g.matrix, &g.targets);
+            let o0 = obj0(model.as_ref(), &g);
             let cfg = bench_cfg(1e-4 * o0, timeout);
-            let res = run_solver("A+B", model.as_mut(), &g.matrix, &g.targets, &cfg);
+            let res = run_solver("A+B", model.as_mut(), &g, &cfg);
             let beta = res.alpha.clone();
-            cache.mean_squared_error(&beta, &g.targets) * 1.1 + 1e-6
+            cache.mean_squared_error(&beta, g.targets()) * 1.1 + 1e-6
         };
 
-        let mut row = vec![g.kind.name().to_string(), format!("{target:.4}")];
+        let mut row = vec![g.meta().source.describe(), format!("{target:.4}")];
         // A+B and ST: time until their iterate's MSE crosses the target,
         // probed by geometric restarts (same protocol as Table IV).
         for solver in ["A+B", "ST"] {
@@ -49,8 +49,8 @@ fn main() {
                 let mut cfg = bench_cfg(0.0, timeout - outer.secs());
                 cfg.eval_every = usize::MAX >> 1;
                 cfg.max_epochs = budget;
-                let res = run_solver(solver, model.as_mut(), &g.matrix, &g.targets, &cfg);
-                if cache.mean_squared_error(&res.alpha, &g.targets) <= target {
+                let res = run_solver(solver, model.as_mut(), &g, &cfg);
+                if cache.mean_squared_error(&res.alpha, g.targets()) <= target {
                     hit = Some(res.wall_secs);
                     break;
                 }
@@ -70,12 +70,7 @@ fn main() {
         let res = Trainer::new()
             .solver(Sgd { lam: 1e-4, mse_target: target })
             .config(cfg)
-            .fit_with(
-                model.as_mut(),
-                &g.matrix,
-                &g.targets,
-                &hthc::memory::TierSim::default(),
-            );
+            .fit_with(model.as_mut(), &g, &hthc::memory::TierSim::default());
         let sgd_time = res
             .trace
             .points

@@ -9,7 +9,7 @@
 
 use hthc::bench_support::*;
 use hthc::data::generator::{DatasetKind, Family};
-use hthc::data::{Matrix, QuantizedMatrix};
+use hthc::data::{Dataset, DatasetBuilder, Matrix, QuantizedMatrix};
 use hthc::metrics::{report::fmt_opt_secs, Table};
 
 fn main() {
@@ -28,32 +28,39 @@ fn main() {
                 Family::Regression
             };
             let g = bench_dataset(kind, family, 6000 + kind as u64);
-            let qmatrix = match &g.matrix {
-                Matrix::Dense(dm) => Matrix::Quantized(QuantizedMatrix::from_dense(dm)),
+            // same data, 4-bit representation (through the one builder
+            // pipeline, in-memory source)
+            let q = match g.matrix() {
+                Matrix::Dense(dm) => DatasetBuilder::in_memory(
+                    Matrix::Quantized(QuantizedMatrix::from_dense(dm)),
+                    g.targets().to_vec(),
+                )
+                .build()
+                .expect("quantized dataset"),
                 _ => unreachable!("dense kinds only"),
             };
             let probe = bench_model(model_name, g.n());
-            let o0 = obj0(probe.as_ref(), &g.matrix, &g.targets);
+            let o0 = obj0(probe.as_ref(), &g);
             // quantization noise floors the gap; pick a target both
             // representations can reach (paper uses 1e-3..1e-5 per case)
             let target = 2e-3 * o0;
 
-            let run = |m: &Matrix| -> Option<f64> {
+            let run = |ds: &Dataset| -> Option<f64> {
                 let mut model = bench_model(model_name, g.n());
                 let cfg = bench_cfg(target, timeout);
-                let res = run_solver("A+B", model.as_mut(), m, &g.targets, &cfg);
+                let res = run_solver("A+B", model.as_mut(), ds, &cfg);
                 res.trace.time_to_gap(target)
             };
-            let t32 = run(&g.matrix);
-            let t4 = run(&qmatrix);
+            let t32 = run(&g);
+            let t4 = run(&q);
             table.row(vec![
-                g.kind.name().into(),
+                g.meta().source.describe(),
                 model_name.into(),
                 format!("{target:.2e}"),
                 fmt_opt_secs(t32),
                 fmt_opt_secs(t4),
-                hthc::util::fmt_bytes(g.matrix.total_bytes()),
-                hthc::util::fmt_bytes(qmatrix.total_bytes()),
+                hthc::util::fmt_bytes(g.meta().bytes),
+                hthc::util::fmt_bytes(q.meta().bytes),
             ]);
         }
     }

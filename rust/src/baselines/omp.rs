@@ -35,8 +35,9 @@ pub enum OmpMode {
 /// and V_B").
 pub(crate) fn fit(p: &mut Problem<'_>, mode: OmpMode) -> FitReport {
     let cfg = p.cfg.clone();
-    let data = p.data;
-    let y = p.targets;
+    let data = p.data.matrix();
+    let y = p.data.targets();
+    let home = p.data.placement();
     let sim = p.sim;
     let mut on_epoch = p.on_epoch.take();
     let (alpha0, v0) = p.initial_state();
@@ -117,7 +118,7 @@ pub(crate) fn fit(p: &mut Problem<'_>, mode: OmpMode) -> FitReport {
                             }
                         }
                     }
-                    sim.read(crate::memory::Tier::Slow, ops.col_bytes(j) * 2);
+                    sim.read(home, ops.col_bytes(j) * 2);
                 });
             }
         });
@@ -154,7 +155,7 @@ pub(crate) fn fit(p: &mut Problem<'_>, mode: OmpMode) -> FitReport {
                         ops.dots_block(&idx[..m], &w, &mut u[..m]);
                         for (j, &uj) in (k..end).zip(&u) {
                             z_cell[j].store(kind.gap(uj, a_now[j]).to_bits(), Ordering::Relaxed);
-                            sim.read(crate::memory::Tier::Slow, ops.col_bytes(j));
+                            sim.read(home, ops.col_bytes(j));
                         }
                     }
                 });
@@ -236,10 +237,14 @@ fn apply(v: &SharedVector, r: usize, x: f32, mode: OmpMode) {
 mod tests {
     use super::*;
     use crate::coordinator::HthcConfig;
-    use crate::data::generator::{generate, DatasetKind, Family};
+    use crate::data::{Dataset, DatasetKind, Family};
     use crate::glm::Lasso;
     use crate::memory::TierSim;
     use crate::solver::{Omp, Trainer};
+
+    fn generate(kind: DatasetKind, family: Family, scale: f64, seed: u64) -> Dataset {
+        Dataset::generated(kind, family, scale, seed)
+    }
 
     fn cfg(gap_tol: f64) -> HthcConfig {
         HthcConfig {
@@ -259,28 +264,23 @@ mod tests {
         }
     }
 
-    fn fit_omp(
-        cfg: HthcConfig,
-        model: &mut Lasso,
-        g: &crate::data::GeneratedDataset,
-        wild: bool,
-    ) -> FitReport {
+    fn fit_omp(cfg: HthcConfig, model: &mut Lasso, g: &Dataset, wild: bool) -> FitReport {
         let sim = TierSim::default();
         Trainer::new()
             .solver(Omp { wild })
             .config(cfg)
-            .fit_with(model, &g.matrix, &g.targets, &sim)
+            .fit_with(model, g, &sim)
     }
 
     #[test]
     fn omp_atomic_converges_and_v_consistent() {
         let g = generate(DatasetKind::Tiny, Family::Regression, 1.0, 131);
         let mut model = Lasso::new(0.5);
-        let obj0 = model.objective(&vec![0.0; g.d()], &g.targets, &vec![0.0; g.n()]);
+        let obj0 = model.objective(&vec![0.0; g.d()], g.targets(), &vec![0.0; g.n()]);
         let tol = 1e-4 * obj0.abs().max(1.0);
         let res = fit_omp(cfg(tol), &mut model, &g, false);
         assert!(res.converged, "{}", res.summary());
-        let v2 = match &g.matrix {
+        let v2 = match g.matrix() {
             Matrix::Dense(m) => m.matvec_alpha(&res.alpha),
             _ => unreachable!(),
         };

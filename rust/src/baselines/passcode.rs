@@ -33,8 +33,9 @@ pub enum PasscodeMode {
 /// problem's epoch observer (the Table IV time-to-accuracy probe).
 pub(crate) fn fit(p: &mut Problem<'_>, mode: PasscodeMode) -> FitReport {
     let cfg = p.cfg.clone();
-    let data = p.data;
-    let y = p.targets;
+    let data = p.data.matrix();
+    let y = p.data.targets();
+    let home = p.data.placement();
     let sim = p.sim;
     let mut on_epoch = p.on_epoch.take();
     let (alpha0, v0) = p.initial_state();
@@ -106,7 +107,7 @@ pub(crate) fn fit(p: &mut Problem<'_>, mode: PasscodeMode) -> FitReport {
                             crate::kernels::scaled_scatter(&m.col_dense(j), delta, sink);
                         }
                     }
-                    sim.read(crate::memory::Tier::Slow, ops.col_bytes(j) * 2);
+                    sim.read(home, ops.col_bytes(j) * 2);
                 });
             }
         });
@@ -176,10 +177,14 @@ fn apply(v: &SharedVector, r: usize, x: f32, mode: PasscodeMode) {
 mod tests {
     use super::*;
     use crate::coordinator::HthcConfig;
-    use crate::data::generator::{generate, DatasetKind, Family};
+    use crate::data::{Dataset, DatasetKind, Family};
     use crate::glm::SvmDual;
     use crate::memory::TierSim;
     use crate::solver::{Passcode, Trainer};
+
+    fn generate(kind: DatasetKind, family: Family, scale: f64, seed: u64) -> Dataset {
+        Dataset::generated(kind, family, scale, seed)
+    }
 
     fn cfg() -> HthcConfig {
         HthcConfig {
@@ -204,11 +209,11 @@ mod tests {
             .solver(Passcode { mode: PasscodeMode::Atomic })
             .config(cfg())
             .on_epoch(|ev| {
-                let ops = g.matrix.as_ops();
+                let ops = g.as_ops();
                 let correct = (0..g.n()).filter(|&j| ops.dot(j, ev.v) > 0.0).count();
                 correct as f64 / g.n() as f64 >= target
             })
-            .fit_with(&mut model, &g.matrix, &g.targets, &sim);
+            .fit_with(&mut model, &g, &sim);
         assert!(res.converged, "{}", res.summary());
     }
 
@@ -220,7 +225,7 @@ mod tests {
         let res = Trainer::new()
             .solver(Passcode { mode: PasscodeMode::Wild })
             .config(cfg())
-            .fit_with(&mut model, &g.matrix, &g.targets, &sim);
+            .fit_with(&mut model, &g, &sim);
         let first = res.trace.points.first().unwrap().objective;
         let last = res.trace.final_objective().unwrap();
         assert!(last < first);
@@ -236,7 +241,7 @@ mod tests {
         let res = Trainer::new()
             .solver(Passcode { mode: PasscodeMode::Atomic })
             .config(c)
-            .fit_with(&mut model, &g.matrix, &g.targets, &sim);
+            .fit_with(&mut model, &g, &sim);
         assert!(res.alpha.iter().all(|&a| (-1e-6..=1.0 + 1e-6).contains(&a)));
     }
 }

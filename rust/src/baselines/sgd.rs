@@ -81,8 +81,8 @@ impl RowCache {
 /// for the dense sets).
 pub(crate) fn fit(p: &mut Problem<'_>, lam: f32, mse_target: f64) -> FitReport {
     let cfg = p.cfg.clone();
-    let data = p.data;
-    let targets = p.targets;
+    let data = p.data.matrix();
+    let targets = p.data.targets();
     let mut on_epoch = p.on_epoch.take();
     // warm start: alpha doubles as beta for the primal solver.  Taken
     // directly (not via initial_state) — SGD has no shared vector to
@@ -184,34 +184,33 @@ pub(crate) fn fit(p: &mut Problem<'_>, lam: f32, mse_target: f64) -> FitReport {
 mod tests {
     use super::*;
     use crate::coordinator::HthcConfig;
-    use crate::data::generator::{generate, DatasetKind, Family};
+    use crate::data::{Dataset, DatasetKind, Family};
     use crate::memory::TierSim;
     use crate::solver::{Sgd, Trainer};
 
+    fn generate(kind: DatasetKind, family: Family, scale: f64, seed: u64) -> Dataset {
+        Dataset::generated(kind, family, scale, seed)
+    }
+
     /// Run the SGD engine through the Trainer facade; the problem's GLM
     /// model is ignored by SGD (lam comes from the Sgd struct).
-    fn fit_sgd(
-        g: &crate::data::GeneratedDataset,
-        lam: f32,
-        mse_target: f64,
-        max_epochs: usize,
-    ) -> FitReport {
+    fn fit_sgd(g: &Dataset, lam: f32, mse_target: f64, max_epochs: usize) -> FitReport {
         let sim = TierSim::default();
         let mut model = crate::glm::Lasso::new(lam);
         Trainer::new()
             .solver(Sgd { lam, mse_target })
             .config(HthcConfig { max_epochs, timeout_secs: 20.0, ..Default::default() })
-            .fit_with(&mut model, &g.matrix, &g.targets, &sim)
+            .fit_with(&mut model, g, &sim)
     }
 
     #[test]
     fn row_cache_matches_matrix() {
         let g = generate(DatasetKind::Tiny, Family::Regression, 1.0, 151);
-        let cache = RowCache::build(&g.matrix);
+        let cache = RowCache::build(g.matrix());
         assert_eq!(cache.rows.len(), g.d());
         assert_eq!(cache.n_features, g.n());
         // reconstruct one column from rows
-        if let Matrix::Dense(m) = &g.matrix {
+        if let Matrix::Dense(m) = g.matrix() {
             let j = 3usize;
             for (r, &x) in m.col(j).iter().enumerate() {
                 let got = cache.rows[r]

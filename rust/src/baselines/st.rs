@@ -23,8 +23,9 @@ use crate::util::{Rng, Timer};
 /// `t_a`, `batch_frac` and `selection` are ignored (there is no task A).
 pub(crate) fn fit(p: &mut Problem<'_>) -> FitReport {
     let cfg = p.cfg.clone();
-    let data = p.data;
-    let y = p.targets;
+    let data = p.data.matrix();
+    let y = p.data.targets();
+    let home = p.data.placement();
     let sim = p.sim;
     let mut on_epoch = p.on_epoch.take();
     let (alpha0, v0) = p.initial_state();
@@ -45,7 +46,7 @@ pub(crate) fn fit(p: &mut Problem<'_>) -> FitReport {
     // per-update charges inside task_b::run_epoch).
     let all: Vec<usize> = (0..n).collect();
     let mut ws = WorkingSet::new(data, n);
-    ws.swap_in(data, &all, sim);
+    ws.swap_in(data, &all, sim, home);
 
     let mut order: Vec<usize> = (0..n).collect();
     let mut total_b = 0u64;
@@ -120,10 +121,14 @@ pub(crate) fn fit(p: &mut Problem<'_>) -> FitReport {
 #[cfg(test)]
 mod tests {
     use crate::coordinator::HthcConfig;
-    use crate::data::generator::{generate, DatasetKind, Family};
+    use crate::data::{Dataset, DatasetKind, Family};
     use crate::glm::{GlmModel, Lasso, SvmDual};
     use crate::memory::TierSim;
     use crate::solver::{FitReport, SeqThreshold, Trainer};
+
+    fn generate(kind: DatasetKind, family: Family, scale: f64, seed: u64) -> Dataset {
+        Dataset::generated(kind, family, scale, seed)
+    }
 
     fn cfg(gap_tol: f64) -> HthcConfig {
         HthcConfig {
@@ -138,25 +143,17 @@ mod tests {
     }
 
     /// Run the ST engine through the Trainer facade.
-    fn fit_st(
-        cfg: HthcConfig,
-        model: &mut dyn GlmModel,
-        g: &crate::data::GeneratedDataset,
-    ) -> FitReport {
+    fn fit_st(cfg: HthcConfig, model: &mut dyn GlmModel, g: &Dataset) -> FitReport {
         let sim = TierSim::default();
         Trainer::new()
             .solver(SeqThreshold)
             .config(cfg)
-            .fit_with(model, &g.matrix, &g.targets, &sim)
+            .fit_with(model, g, &sim)
     }
 
     /// Relative tolerance (see coordinator::hthc tests).
-    fn rel_tol(
-        model: &dyn crate::glm::GlmModel,
-        g: &crate::data::GeneratedDataset,
-        rel: f64,
-    ) -> f64 {
-        let obj0 = model.objective(&vec![0.0; g.d()], &g.targets, &vec![0.0; g.n()]);
+    fn rel_tol(model: &dyn crate::glm::GlmModel, g: &Dataset, rel: f64) -> f64 {
+        let obj0 = model.objective(&vec![0.0; g.d()], g.targets(), &vec![0.0; g.n()]);
         rel * obj0.abs().max(1.0)
     }
 

@@ -3,8 +3,7 @@
 //! time-to-threshold extraction.  Not part of the training API.
 
 use crate::coordinator::HthcConfig;
-use crate::data::generator::{generate, DatasetKind, Family, GeneratedDataset};
-use crate::data::Matrix;
+use crate::data::{Dataset, DatasetBuilder, DatasetKind, Family};
 use crate::glm::{GlmModel, Lasso, SvmDual};
 use crate::memory::TierSim;
 use crate::solver::{by_name, FitReport, Trainer};
@@ -19,8 +18,9 @@ pub fn bench_scale() -> f64 {
         .unwrap_or(1.0)
 }
 
-/// The four Table-I analogues at bench scale.
-pub fn bench_dataset(kind: DatasetKind, family: Family, seed: u64) -> GeneratedDataset {
+/// The four Table-I analogues at bench scale (built through the one
+/// [`DatasetBuilder`] pipeline, like every other dataset in the crate).
+pub fn bench_dataset(kind: DatasetKind, family: Family, seed: u64) -> Dataset {
     let base = match kind {
         DatasetKind::EpsilonLike => 0.35,
         DatasetKind::DvscLike => 0.3,
@@ -28,7 +28,11 @@ pub fn bench_dataset(kind: DatasetKind, family: Family, seed: u64) -> GeneratedD
         DatasetKind::CriteoLike => 0.05,
         DatasetKind::Tiny => 1.0,
     };
-    generate(kind, family, base * bench_scale(), seed)
+    DatasetBuilder::generated(kind, family)
+        .scale(base * bench_scale())
+        .seed(seed)
+        .build()
+        .expect("bench dataset")
 }
 
 /// Model factory per paper experiment (lambdas follow Table II/III's
@@ -42,9 +46,9 @@ pub fn bench_model(model: &str, n: usize) -> Box<dyn GlmModel> {
 }
 
 /// Relative initial objective for threshold scaling.
-pub fn obj0(model: &dyn GlmModel, m: &Matrix, y: &[f32]) -> f64 {
+pub fn obj0(model: &dyn GlmModel, ds: &Dataset) -> f64 {
     model
-        .objective(&vec![0.0; m.n_rows()], y, &vec![0.0; m.n_cols()])
+        .objective(&vec![0.0; ds.n_rows()], ds.targets(), &vec![0.0; ds.n_cols()])
         .abs()
         .max(1.0)
 }
@@ -55,8 +59,7 @@ pub fn obj0(model: &dyn GlmModel, m: &Matrix, y: &[f32]) -> f64 {
 pub fn run_solver(
     name: &str,
     model: &mut dyn GlmModel,
-    data: &Matrix,
-    y: &[f32],
+    data: &Dataset,
     cfg: &HthcConfig,
 ) -> FitReport {
     let sim = TierSim::default();
@@ -64,7 +67,7 @@ pub fn run_solver(
     Trainer::new()
         .solver_boxed(solver)
         .config(cfg.clone())
-        .fit_with(model, data, y, &sim)
+        .fit_with(model, data, &sim)
 }
 
 /// Default bench config (thread topology mirrors the paper's tables at
@@ -279,7 +282,7 @@ mod tests {
             let mut m = bench_model("lasso", g.n());
             let mut cfg = bench_cfg(0.0, 5.0);
             cfg.max_epochs = 2;
-            let r = run_solver(s, m.as_mut(), &g.matrix, &g.targets, &cfg);
+            let r = run_solver(s, m.as_mut(), &g, &cfg);
             assert!(r.epochs >= 1, "{s}");
         }
     }

@@ -75,8 +75,11 @@ impl HthcSolver {
         backend: Option<&dyn GapBackend>,
     ) -> FitReport {
         let cfg = &self.config;
-        let data = problem.data;
-        let y = problem.targets;
+        let data = problem.data.matrix();
+        let y = problem.data.targets();
+        // bulk matrix reads are charged against the dataset's recorded
+        // placement (DRAM unless the builder placed it elsewhere)
+        let home = problem.data.placement();
         let sim = problem.sim;
         let mut on_epoch = problem.on_epoch.take();
         let (alpha0, v0) = problem.initial_state();
@@ -128,7 +131,7 @@ impl HthcSolver {
 
             // (4) working-set swap (fast tier)
             let tp = Timer::start();
-            ws.swap_in(data, &batch, sim);
+            ws.swap_in(data, &batch, sim, home);
             phases.swap_secs += tp.secs();
 
             // (5) release A and B concurrently
@@ -140,7 +143,7 @@ impl HthcSolver {
             let (b_stats, a_updates) = std::thread::scope(|s| {
                 let a_handle = s.spawn(|| match backend {
                     None => task_a::run_epoch(
-                        &self.pool_a, data, &snap, &gaps, &stop, sim, seed_a,
+                        &self.pool_a, data, &snap, &gaps, &stop, sim, home, seed_a,
                     ),
                     Some(be) => run_a_offload(be, data, &snap, &gaps, &stop, &mut Rng::new(seed_a)),
                 });
@@ -283,28 +286,28 @@ fn run_a_offload(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::data::generator::{generate, DatasetKind, Family};
+    use crate::data::{Dataset, DatasetKind, Family};
     use crate::glm::{GlmModel, Lasso, SvmDual};
     use crate::memory::TierSim;
     use crate::solver::{FitReport, Trainer};
 
+    fn generate(kind: DatasetKind, family: Family, scale: f64, seed: u64) -> Dataset {
+        Dataset::generated(kind, family, scale, seed)
+    }
+
     /// Relative convergence target: fp32 accumulation cannot reach
     /// absolute 1e-6 on objectives of O(1000); the paper's thresholds
     /// are likewise relative to each problem's scale.
-    fn rel_tol(model: &dyn GlmModel, g: &crate::data::GeneratedDataset, rel: f64) -> f64 {
-        let obj0 = model.objective(&vec![0.0; g.d()], &g.targets, &vec![0.0; g.n()]);
+    fn rel_tol(model: &dyn GlmModel, g: &Dataset, rel: f64) -> f64 {
+        let obj0 = model.objective(&vec![0.0; g.d()], g.targets(), &vec![0.0; g.n()]);
         rel * obj0.abs().max(1.0)
     }
 
     /// Run the HTHC engine through the Trainer facade (the only entry
     /// point since the deprecated `train` shims were removed).
-    fn fit(
-        cfg: HthcConfig,
-        model: &mut dyn GlmModel,
-        g: &crate::data::GeneratedDataset,
-    ) -> FitReport {
+    fn fit(cfg: HthcConfig, model: &mut dyn GlmModel, g: &Dataset) -> FitReport {
         let sim = TierSim::default();
-        Trainer::new().config(cfg).fit_with(model, &g.matrix, &g.targets, &sim)
+        Trainer::new().config(cfg).fit_with(model, g, &sim)
     }
 
     fn cfg(t_a: usize, t_b: usize, v_b: usize, frac: f64, gap_tol: f64) -> HthcConfig {
@@ -334,7 +337,7 @@ mod tests {
         let res = fit(cfg(2, 2, 1, 0.25, tol), &mut model, &g);
         assert!(res.converged, "{}", res.summary());
         // v consistent with alpha at the end (locked updates lost nothing)
-        let v2 = match &g.matrix {
+        let v2 = match g.matrix() {
             Matrix::Dense(m) => m.matvec_alpha(&res.alpha),
             _ => unreachable!(),
         };
@@ -354,7 +357,7 @@ mod tests {
             res.trace.final_gap().unwrap() < 1e-3,
             "{}", res.summary()
         );
-        let ops = g.matrix.as_ops();
+        let ops = g.as_ops();
         let acc = model.accuracy(ops, &res.v);
         assert!(acc > 0.9, "accuracy {acc}");
         // box respected

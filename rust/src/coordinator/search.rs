@@ -8,7 +8,7 @@
 //! sensitivity analysis (all configurations within a ratio of best).
 
 use super::HthcConfig;
-use crate::data::Matrix;
+use crate::data::{Dataset, Matrix};
 use crate::glm::GlmModel;
 use crate::memory::TierSim;
 use crate::solver::{Hthc, Problem, Solver};
@@ -66,15 +66,14 @@ impl SearchResult {
 /// converged candidates by time, then non-converged.
 pub fn grid_search(
     make_model: &dyn Fn() -> Box<dyn GlmModel>,
-    data: &Matrix,
-    y: &[f32],
+    data: &Dataset,
     grid: &SearchGrid,
     target_gap: f64,
     per_candidate_secs: f64,
     base: &HthcConfig,
     skip_v_b_on_sparse: bool,
 ) -> Vec<SearchResult> {
-    let sparse = matches!(data, Matrix::Sparse(_));
+    let sparse = matches!(data.matrix(), Matrix::Sparse(_));
     let mut out = Vec::new();
     for &frac in &grid.batch_fracs {
         for &t_a in &grid.t_as {
@@ -94,8 +93,7 @@ pub fn grid_search(
                     };
                     let mut model = make_model();
                     let sim = TierSim::default();
-                    let mut problem =
-                        Problem::new(model.as_mut(), data, y, &sim, cfg);
+                    let mut problem = Problem::new(model.as_mut(), data, &sim, cfg);
                     let res = Hthc::new().fit(&mut problem);
                     out.push(SearchResult {
                         batch_frac: frac,
@@ -138,16 +136,19 @@ pub fn near_best(results: &[SearchResult], ratio: f64) -> Vec<&SearchResult> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::data::generator::{generate, DatasetKind, Family};
+    use crate::data::{DatasetBuilder, DatasetKind, Family};
     use crate::glm::Lasso;
 
     #[test]
     fn search_ranks_converged_first_and_covers_grid() {
-        let g = generate(DatasetKind::Tiny, Family::Regression, 1.0, 901);
+        let g = DatasetBuilder::generated(DatasetKind::Tiny, Family::Regression)
+            .seed(901)
+            .build()
+            .unwrap();
         let model = Lasso::new(0.4);
         let obj0 = {
             use crate::glm::GlmModel;
-            model.objective(&vec![0.0; g.d()], &g.targets, &vec![0.0; g.n()])
+            model.objective(&vec![0.0; g.d()], g.targets(), &vec![0.0; g.n()])
         };
         let grid = SearchGrid {
             batch_fracs: vec![0.25, 1.0],
@@ -158,8 +159,7 @@ mod tests {
         let base = HthcConfig { max_epochs: 3000, eval_every: 5, ..Default::default() };
         let results = grid_search(
             &|| Box::new(Lasso::new(0.4)),
-            &g.matrix,
-            &g.targets,
+            &g,
             &grid,
             1e-3 * obj0,
             20.0,
@@ -180,7 +180,11 @@ mod tests {
 
     #[test]
     fn sparse_grid_skips_v_b() {
-        let g = generate(DatasetKind::News20Like, Family::Regression, 0.03, 902);
+        let g = DatasetBuilder::generated(DatasetKind::News20Like, Family::Regression)
+            .scale(0.03)
+            .seed(902)
+            .build()
+            .unwrap();
         let grid = SearchGrid {
             batch_fracs: vec![0.5],
             t_as: vec![1],
@@ -190,8 +194,7 @@ mod tests {
         let base = HthcConfig { max_epochs: 3, eval_every: 3, ..Default::default() };
         let results = grid_search(
             &|| Box::new(Lasso::new(0.4)),
-            &g.matrix,
-            &g.targets,
+            &g,
             &grid,
             0.0,
             5.0,

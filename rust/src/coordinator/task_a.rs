@@ -40,8 +40,11 @@ pub struct ASnapshot<'a> {
 /// Run task A on `pool` until `stop` is raised.  Returns the number of
 /// gap refreshes performed (also counted inside `gaps`).
 ///
-/// `check_every` bounds stop-signal latency: each thread tests `stop`
-/// between coordinates (a relaxed load — cheap even on the hot path).
+/// `home` is the tier the full matrix lives in (the dataset's recorded
+/// placement) — every bulk column read is charged there.  Each thread
+/// tests `stop` between blocks (a relaxed load — cheap on the hot
+/// path).
+#[allow(clippy::too_many_arguments)]
 pub fn run_epoch(
     pool: &WorkerPool,
     data: &Matrix,
@@ -49,6 +52,7 @@ pub fn run_epoch(
     gaps: &GapMemory,
     stop: &AtomicBool,
     sim: &TierSim,
+    home: Tier,
     seed: u64,
 ) -> u64 {
     let n = data.n_cols();
@@ -75,11 +79,11 @@ pub fn run_epoch(
             local += kernels::BLOCK_COLS as u64;
             if local_bytes > (1 << 20) {
                 // batch the tier charges to keep atomics off the hot path
-                sim.read(Tier::Slow, local_bytes);
+                sim.read(home, local_bytes);
                 local_bytes = 0;
             }
         }
-        sim.read(Tier::Slow, local_bytes);
+        sim.read(home, local_bytes);
         counter.fetch_add(local, Ordering::Relaxed);
     });
     counter.load(Ordering::Relaxed)
@@ -95,6 +99,7 @@ pub fn run_fixed(
     gaps: &GapMemory,
     coords: &[usize],
     sim: &TierSim,
+    home: Tier,
 ) {
     let ops = data.as_block_ops();
     let next = std::sync::atomic::AtomicUsize::new(0);
@@ -114,7 +119,7 @@ pub fn run_fixed(
                 local_bytes += ops.col_bytes(j);
             }
         }
-        sim.read(Tier::Slow, local_bytes);
+        sim.read(home, local_bytes);
     });
 }
 
@@ -156,7 +161,7 @@ mod tests {
                 std::thread::sleep(std::time::Duration::from_millis(30));
                 stop.store(true, Ordering::Relaxed);
             });
-            run_epoch(&pool, &m, &snap, &gaps, &stop, &sim, 7)
+            run_epoch(&pool, &m, &snap, &gaps, &stop, &sim, Tier::Slow, 7)
         });
         assert!(updates > 0);
         // values in z match the direct computation wherever refreshed
@@ -184,7 +189,7 @@ mod tests {
         let pool = WorkerPool::with_name(3, "test-a");
         let snap = ASnapshot { w: &w, alpha: &alpha, kind, epoch: 2 };
         let coords = vec![1, 5, 9, 13];
-        run_fixed(&pool, &m, &snap, &gaps, &coords, &sim);
+        run_fixed(&pool, &m, &snap, &gaps, &coords, &sim, Tier::Slow);
         let (updates, frac) = gaps.refresh_stats(2);
         assert_eq!(updates, 4);
         assert!((frac - 4.0 / m.n_cols() as f64).abs() < 1e-9);

@@ -211,7 +211,7 @@ mod tests {
         let sim = TierSim::default();
         let batch: Vec<usize> = (0..n / 2).map(|i| i * 2).collect();
         let mut ws = WorkingSet::new(&m, batch.len());
-        ws.swap_in(&m, &batch, &sim);
+        ws.swap_in(&m, &batch, &sim, Tier::Slow);
         let v = SharedVector::new(d, 64);
         let alpha = SharedVector::new(n, usize::MAX >> 1);
         let _ = seed;
@@ -262,7 +262,7 @@ mod tests {
         let kind = model.kind();
         let batch: Vec<usize> = (0..8).collect();
         let mut ws = WorkingSet::new(&m, 8);
-        ws.swap_in(&m, &batch, &sim);
+        ws.swap_in(&m, &batch, &sim, Tier::Slow);
         let v = SharedVector::new(d, 1024);
         let alpha = SharedVector::new(n, usize::MAX >> 1);
         let pool = WorkerPool::with_name(1, "test-b");
@@ -296,7 +296,7 @@ mod tests {
         let sim = TierSim::default();
         let batch = vec![0usize];
         let mut ws = WorkingSet::new(&m, 1);
-        ws.swap_in(&m, &batch, &sim);
+        ws.swap_in(&m, &batch, &sim, Tier::Slow);
         let v = SharedVector::new(m.n_rows(), 64);
         let alpha = SharedVector::new(m.n_cols(), usize::MAX >> 1);
         let pool = WorkerPool::with_name(3, "test-b"); // != 2*2

@@ -77,9 +77,11 @@ impl<'m> WorkingSet<'m> {
     }
 
     /// Copy the batch columns in (evicting the previous epoch's), and
-    /// charge the tier traffic.  `batch[slot]` gives the original column
-    /// index of each slot.
-    pub fn swap_in(&mut self, matrix: &Matrix, batch: &[usize], sim: &TierSim) {
+    /// charge the tier traffic: read from `home` (the dataset's
+    /// recorded placement), write into the fast tier the working set
+    /// occupies.  `batch[slot]` gives the original column index of each
+    /// slot.
+    pub fn swap_in(&mut self, matrix: &Matrix, batch: &[usize], sim: &TierSim, home: Tier) {
         match (self, matrix) {
             (WorkingSet::Dense { d, buf, sq_norms, slots }, Matrix::Dense(dm)) => {
                 assert!(batch.len() <= *slots, "batch exceeds working-set slots");
@@ -88,7 +90,7 @@ impl<'m> WorkingSet<'m> {
                     buf[slot * *d..(slot + 1) * *d].copy_from_slice(col);
                     sq_norms[slot] = dm.sq_norm(j);
                     let bytes = (*d * 4) as u64;
-                    sim.read(Tier::Slow, bytes);
+                    sim.read(home, bytes);
                     sim.write(Tier::Fast, bytes);
                 }
             }
@@ -103,7 +105,7 @@ impl<'m> WorkingSet<'m> {
                     let ok = pool.swap_in(slot, rows, vals);
                     assert!(ok, "chunk pool exhausted (col {j}, nnz {})", rows.len());
                     let bytes = (rows.len() * 8) as u64;
-                    sim.read(Tier::Slow, bytes);
+                    sim.read(home, bytes);
                     sim.write(Tier::Fast, bytes);
                 }
             }
@@ -112,7 +114,7 @@ impl<'m> WorkingSet<'m> {
                 b.extend_from_slice(batch);
                 for &j in batch {
                     let bytes = qm.col_bytes(j);
-                    sim.read(Tier::Slow, bytes);
+                    sim.read(home, bytes);
                     sim.write(Tier::Fast, bytes);
                 }
             }
@@ -238,7 +240,7 @@ mod tests {
         let m = dense_matrix();
         let sim = TierSim::default();
         let mut ws = WorkingSet::new(&m, 4);
-        ws.swap_in(&m, &[0, 5, 9], &sim);
+        ws.swap_in(&m, &[0, 5, 9], &sim, Tier::Slow);
         if let Matrix::Dense(dm) = &m {
             assert_eq!(ws.dense_col(1), dm.col(5));
             assert_eq!(ws.sq_norm(2), dm.sq_norm(9));
@@ -254,7 +256,7 @@ mod tests {
         let d = m.n_rows();
         let sim = TierSim::default();
         let mut ws = WorkingSet::new(&m, 2);
-        ws.swap_in(&m, &[3, 7], &sim);
+        ws.swap_in(&m, &[3, 7], &sim, Tier::Slow);
         let vv: Vec<f32> = (0..d).map(|i| (i % 5) as f32 * 0.25).collect();
         let y: Vec<f32> = (0..d).map(|i| (i % 3) as f32 * 0.5).collect();
         let v = SharedVector::from_slice(&vv, 64);
@@ -285,7 +287,7 @@ mod tests {
         let sim = TierSim::default();
         let mut ws = WorkingSet::new(&g.matrix, 8);
         let batch: Vec<usize> = (0..8).map(|i| i * 3).collect();
-        ws.swap_in(&g.matrix, &batch, &sim);
+        ws.swap_in(&g.matrix, &batch, &sim, Tier::Slow);
         if let Matrix::Sparse(sm) = &g.matrix {
             let d = sm.n_rows();
             let v = SharedVector::from_slice(&vec![1.0; d], 1024);
@@ -301,7 +303,7 @@ mod tests {
             panic!("expected sparse");
         }
         // second swap must not exhaust the pool
-        ws.swap_in(&g.matrix, &batch, &sim);
+        ws.swap_in(&g.matrix, &batch, &sim, Tier::Slow);
     }
 
     #[test]
@@ -313,7 +315,7 @@ mod tests {
         };
         let sim = TierSim::default();
         let mut ws = WorkingSet::new(&q, 4);
-        ws.swap_in(&q, &[1, 2], &sim);
+        ws.swap_in(&q, &[1, 2], &sim, Tier::Slow);
         // charged at the quantized byte count (much smaller than dense)
         let charged = sim.stats(Tier::Fast).write_bytes;
         assert!(charged < 2 * (q.n_rows() as u64) * 4 / 3);
@@ -333,7 +335,7 @@ mod tests {
         let m = dense_matrix();
         let sim = TierSim::default();
         let mut ws = WorkingSet::new(&m, 2);
-        ws.swap_in(&m, &[0, 1, 2], &sim);
+        ws.swap_in(&m, &[0, 1, 2], &sim, Tier::Slow);
     }
 
     #[test]

@@ -1,0 +1,713 @@
+//! [`DatasetBuilder`]: the one pipeline every dataset goes through.
+//!
+//! ```text
+//! source (generated | path | samples | in-memory)
+//!   -> format auto-detect (HTHC1 binary magic, else LIBSVM text)
+//!   -> orient (Family: coordinates = features | samples)
+//!   -> preprocess (unit-norm columns, center targets — recorded in meta)
+//!   -> represent (Dense | Sparse | Quantized | Auto by density threshold)
+//!   -> place (memory tier; build_in reserves arena capacity)
+//! ```
+//!
+//! Replaces the seed's ad-hoc load paths (`io::load_dataset_file`,
+//! `libsvm::to_regression`/`to_classification` call sites,
+//! `preprocess::unit_norm_columns`/`center_targets` plumbing in
+//! `main.rs` and the bench harnesses) — deleted, not deprecated.
+//!
+//! # Example
+//!
+//! ```
+//! use hthc::data::{DatasetBuilder, DatasetKind, Family, Represent};
+//!
+//! let ds = DatasetBuilder::generated(DatasetKind::Tiny, Family::Regression)
+//!     .seed(7)
+//!     .normalize(true)
+//!     .center_targets(true)
+//!     .represent(Represent::Auto)
+//!     .build()
+//!     .unwrap();
+//! assert_eq!(ds.targets().len(), ds.n_rows());
+//! assert_eq!(ds.repr_name(), "dense"); // tiny is dense at any threshold
+//! ```
+
+use super::dataset::{stored_nnz, Dataset, DatasetMeta, SourceInfo};
+use super::generator::{self, DatasetKind, Family};
+use super::{io, libsvm, DenseMatrix, Matrix, QuantizedMatrix, SparseMatrix};
+use crate::data::ColumnOps;
+use crate::kernels::QGROUP;
+use crate::memory::{Arena, Tier};
+use crate::util::error::Context;
+use crate::{bail, Result};
+use std::io::BufRead;
+use std::path::PathBuf;
+
+/// Default density threshold for [`Represent::Auto`]: at or above this
+/// fraction of stored entries a column-major dense layout streams fewer
+/// bytes per pass than (index, value) pairs — 8 bytes per nnz vs 4 per
+/// element puts break-even at 0.5; the margin below that pays for the
+/// dense layout's better vectorization (paper §IV-D).
+pub const DENSE_DENSITY_THRESHOLD: f64 = 0.25;
+
+/// Which matrix representation the pipeline's `represent` stage emits.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Represent {
+    /// Whatever the source produced (generated sparse kinds stay
+    /// sparse, LIBSVM loads stay sparse, in-memory matrices are kept).
+    Keep,
+    /// Column-major dense f32 (densifies sparse sources).
+    Dense,
+    /// Chunked CSC (sparsifies dense sources).
+    Sparse,
+    /// 4-bit quantized (paper §IV-E).  Requires a dense source with
+    /// `d` divisible by the quantization group — quantizing a sparse
+    /// source is rejected rather than silently materializing a `d*n`
+    /// dense copy (chain `represent(Dense)` through a rebuild if the
+    /// densification cost is really intended).
+    Quantized,
+    /// Dense when the stored-entry density is at least the threshold
+    /// (see [`DENSE_DENSITY_THRESHOLD`]), sparse otherwise.
+    Auto,
+}
+
+impl Represent {
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "keep" => Represent::Keep,
+            "dense" => Represent::Dense,
+            "sparse" => Represent::Sparse,
+            "quantized" | "q4" => Represent::Quantized,
+            "auto" => Represent::Auto,
+            _ => return None,
+        })
+    }
+}
+
+enum Source {
+    Generated(DatasetKind),
+    Path(PathBuf),
+    Samples(Vec<libsvm::Sample>),
+    InMemory { matrix: Matrix, targets: Vec<f32> },
+}
+
+/// Fluent pipeline producing a [`Dataset`] — see the module docs.
+pub struct DatasetBuilder {
+    source: Source,
+    family: Family,
+    scale: f64,
+    seed: u64,
+    normalize: bool,
+    center: bool,
+    represent: Represent,
+    density_threshold: f64,
+    placement: Tier,
+}
+
+impl DatasetBuilder {
+    fn new(source: Source, family: Family) -> Self {
+        DatasetBuilder {
+            source,
+            family,
+            scale: 1.0,
+            seed: 42,
+            normalize: false,
+            center: false,
+            represent: Represent::Keep,
+            density_threshold: DENSE_DENSITY_THRESHOLD,
+            placement: Tier::Slow,
+        }
+    }
+
+    /// Synthetic Table-I analogue (see [`generator::generate`]).
+    pub fn generated(kind: DatasetKind, family: Family) -> Self {
+        Self::new(Source::Generated(kind), family)
+    }
+
+    /// Load from a file, sniffing the format at build time: the `HTHC1`
+    /// magic selects the binary format, anything else parses as LIBSVM
+    /// text (oriented by [`family`](Self::family)).
+    pub fn path(p: impl Into<PathBuf>) -> Self {
+        Self::new(Source::Path(p.into()), Family::Regression)
+    }
+
+    /// Already-parsed LIBSVM samples (oriented by
+    /// [`family`](Self::family) at build time).
+    pub fn libsvm_samples(samples: Vec<libsvm::Sample>) -> Self {
+        Self::new(Source::Samples(samples), Family::Regression)
+    }
+
+    /// An existing matrix + targets (tests, harnesses, adversarial
+    /// constructions).  Build fails if the lengths disagree.
+    pub fn in_memory(matrix: Matrix, targets: Vec<f32>) -> Self {
+        Self::new(Source::InMemory { matrix, targets }, Family::Regression)
+    }
+
+    /// Orientation for LIBSVM sources and the generator (ignored by
+    /// binary/in-memory sources, which carry their own shape).
+    pub fn family(mut self, family: Family) -> Self {
+        self.family = family;
+        self
+    }
+
+    /// Generator shape multiplier (generated sources only).
+    pub fn scale(mut self, scale: f64) -> Self {
+        self.scale = scale;
+        self
+    }
+
+    /// Generator PRNG seed (generated sources only).
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Scale every column to unit L2 norm (recorded in
+    /// `meta.col_scales`).  CD step sizes are `1/||d_i||^2`, so this
+    /// equalizes per-update progress — standard practice, and how the
+    /// paper's dense sets arrive.
+    pub fn normalize(mut self, yes: bool) -> Self {
+        self.normalize = yes;
+        self
+    }
+
+    /// Subtract the target mean (regression orientation only; absorbs
+    /// the intercept so no bias column is needed).  Recorded in
+    /// `meta.target_mean`.
+    pub fn center_targets(mut self, yes: bool) -> Self {
+        self.center = yes;
+        self
+    }
+
+    /// Output representation (default [`Represent::Keep`]).
+    pub fn represent(mut self, r: Represent) -> Self {
+        self.represent = r;
+        self
+    }
+
+    /// Density threshold for [`Represent::Auto`].
+    pub fn density_threshold(mut self, t: f64) -> Self {
+        self.density_threshold = t;
+        self
+    }
+
+    /// Record the memory tier the matrix lives in (default
+    /// [`Tier::Slow`] — the full dataset belongs in DRAM; task B copies
+    /// its working set into the fast tier separately).  Capacity is not
+    /// checked; use [`build_in`](Self::build_in) for that.
+    pub fn place(mut self, tier: Tier) -> Self {
+        self.placement = tier;
+        self
+    }
+
+    /// Run the pipeline.
+    pub fn build(self) -> Result<Dataset> {
+        let DatasetBuilder {
+            source,
+            family,
+            scale,
+            seed,
+            normalize,
+            center,
+            represent,
+            density_threshold,
+            placement,
+        } = self;
+
+        // -- 1. load + orient ------------------------------------------
+        let (mut matrix, mut targets, mut meta) = load_source(source, family, scale, seed)?;
+        if matrix.n_cols() == 0 || matrix.n_rows() == 0 {
+            bail!("{}: empty dataset", meta.source.describe());
+        }
+        if targets.len() != matrix.n_rows() {
+            bail!(
+                "{}: targets length {} != matrix rows {}",
+                meta.source.describe(),
+                targets.len(),
+                matrix.n_rows()
+            );
+        }
+
+        // -- 2. preprocess ---------------------------------------------
+        if normalize {
+            if matches!(matrix, Matrix::Quantized(_)) {
+                bail!("normalize before quantizing: the 4-bit codes cannot be rescaled");
+            }
+            let (m, scales) = unit_norm_columns(&matrix);
+            matrix = m;
+            meta.col_scales = Some(scales);
+        }
+        if center {
+            if family == Family::Classification {
+                bail!("target centering applies to the regression orientation only");
+            }
+            let (c, mean) = center_targets(&targets);
+            targets = c;
+            meta.target_mean = Some(mean);
+        }
+
+        // -- 3. represent ----------------------------------------------
+        let matrix = apply_representation(matrix, represent, density_threshold)?;
+
+        // -- 4. place + finalize ---------------------------------------
+        meta.placement = placement;
+        meta.nnz = stored_nnz(&matrix);
+        meta.bytes = matrix.total_bytes();
+        Ok(Dataset::assemble(matrix, targets, meta))
+    }
+
+    /// Run the pipeline and reserve the dataset's bytes in `arena`
+    /// (placement is taken from the arena's tier).  Fails when the
+    /// dataset does not fit the remaining capacity — the same rejection
+    /// a real `memkind` allocation would produce on MCDRAM.
+    pub fn build_in(mut self, arena: &mut Arena) -> Result<Dataset> {
+        self.placement = arena.tier();
+        let ds = self.build()?;
+        let bytes = ds.meta().bytes;
+        if !arena.reserve_bytes(bytes) {
+            bail!(
+                "dataset ({}) does not fit the {:?} arena ({} of {} used)",
+                crate::util::fmt_bytes(bytes),
+                arena.tier(),
+                crate::util::fmt_bytes(arena.used_bytes()),
+                crate::util::fmt_bytes(arena.capacity_bytes()),
+            );
+        }
+        Ok(ds)
+    }
+
+}
+
+// ---------------------------------------------------------------------------
+// Pipeline stages
+// ---------------------------------------------------------------------------
+
+fn blank_meta(source: SourceInfo, family: Family) -> DatasetMeta {
+    DatasetMeta {
+        source,
+        family,
+        col_scales: None,
+        target_mean: None,
+        labels: None,
+        alpha_star: None,
+        placement: Tier::Slow,
+        nnz: 0,
+        bytes: 0,
+    }
+}
+
+fn load_source(
+    source: Source,
+    family: Family,
+    scale: f64,
+    seed: u64,
+) -> Result<(Matrix, Vec<f32>, DatasetMeta)> {
+    match source {
+        Source::Generated(kind) => {
+            let g = generator::generate(kind, family, scale, seed);
+            let mut meta = blank_meta(SourceInfo::Generated { kind, scale, seed }, family);
+            meta.labels = g.labels;
+            meta.alpha_star = g.alpha_star;
+            Ok((g.matrix, g.targets, meta))
+        }
+        Source::Path(path) => {
+            let f = std::fs::File::open(&path)
+                .with_context(|| format!("open {}", path.display()))?;
+            let mut r = std::io::BufReader::new(f);
+            let is_binary = r.fill_buf()?.starts_with(io::MAGIC);
+            if is_binary {
+                let (matrix, targets) =
+                    io::load_dataset(r).with_context(|| format!("load {}", path.display()))?;
+                let meta = blank_meta(SourceInfo::Binary { path }, family);
+                Ok((matrix, targets, meta))
+            } else {
+                let samples =
+                    libsvm::read(r).with_context(|| format!("parse {}", path.display()))?;
+                let (matrix, targets, mut meta) = orient(samples, family)?;
+                meta.source = SourceInfo::Libsvm { path };
+                Ok((matrix, targets, meta))
+            }
+        }
+        Source::Samples(samples) => orient(samples, family),
+        Source::InMemory { matrix, targets } => {
+            Ok((matrix, targets, blank_meta(SourceInfo::InMemory, family)))
+        }
+    }
+}
+
+/// LIBSVM samples into the family's matrix orientation (paper §II-A).
+fn orient(
+    samples: Vec<libsvm::Sample>,
+    family: Family,
+) -> Result<(Matrix, Vec<f32>, DatasetMeta)> {
+    if samples.is_empty() {
+        bail!("libsvm source: no samples");
+    }
+    let mut meta = blank_meta(SourceInfo::Samples, family);
+    match family {
+        Family::Regression => {
+            let (m, targets) = libsvm::to_regression(&samples);
+            Ok((Matrix::Sparse(m), targets, meta))
+        }
+        Family::Classification => {
+            let (m, labels) = libsvm::to_classification(&samples);
+            let d = m.n_rows();
+            meta.labels = Some(labels);
+            Ok((Matrix::Sparse(m), vec![0.0; d], meta))
+        }
+    }
+}
+
+fn apply_representation(
+    matrix: Matrix,
+    represent: Represent,
+    density_threshold: f64,
+) -> Result<Matrix> {
+    let want = match represent {
+        // a quantized source is already in its final form — Auto's
+        // dense/sparse density policy does not apply to it
+        Represent::Auto if matches!(matrix, Matrix::Quantized(_)) => Represent::Keep,
+        Represent::Auto => {
+            if fp32_density(&matrix) >= density_threshold {
+                Represent::Dense
+            } else {
+                Represent::Sparse
+            }
+        }
+        other => other,
+    };
+    // fail on row misalignment BEFORE any densification: quantizing a
+    // sparse source materializes a d*n dense copy, which must not be
+    // paid (it can be enormous) just to discover the shape is invalid
+    if want == Represent::Quantized && matrix.n_rows() % QGROUP != 0 {
+        bail!(
+            "4-bit quantization needs rows divisible by the group size \
+             {QGROUP} (got {})",
+            matrix.n_rows()
+        );
+    }
+    Ok(match (want, matrix) {
+        (Represent::Keep, m) => m,
+        (Represent::Dense, Matrix::Dense(m)) => Matrix::Dense(m),
+        (Represent::Dense, Matrix::Sparse(m)) => Matrix::Dense(densify(&m)),
+        (Represent::Sparse, Matrix::Sparse(m)) => Matrix::Sparse(m),
+        (Represent::Sparse, Matrix::Dense(m)) => Matrix::Sparse(sparsify(&m)),
+        (Represent::Quantized, Matrix::Quantized(m)) => Matrix::Quantized(m),
+        // rows are QGROUP-aligned here (checked above); from_dense
+        // asserts the same invariant as its own last line of defense
+        (Represent::Quantized, Matrix::Dense(m)) => {
+            Matrix::Quantized(QuantizedMatrix::from_dense(&m))
+        }
+        (Represent::Quantized, Matrix::Sparse(m)) => {
+            // never densify implicitly: a paper-scale sparse set would
+            // materialize a d*n f32 copy (news20: ~100 GB) just to be
+            // quantized — an explicit dense rebuild must opt into that
+            bail!(
+                "4-bit quantization requires a dense source ({} x {} sparse \
+                 given) — build with represent(Dense) first if densifying \
+                 is really intended",
+                m.n_rows(),
+                m.n_cols()
+            );
+        }
+        (_, Matrix::Quantized(_)) => {
+            bail!(
+                "quantized data cannot be restored to fp32 exactly — \
+                 rebuild from the fp32 source instead"
+            );
+        }
+        (Represent::Auto, _) => unreachable!("Auto resolved above"),
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Stage helpers (the former data::preprocess free functions, now private
+// pipeline stages)
+// ---------------------------------------------------------------------------
+
+/// Scale every column to unit L2 norm; returns the per-column scales
+/// applied (1.0 for all-zero columns).
+fn unit_norm_columns(m: &Matrix) -> (Matrix, Vec<f32>) {
+    match m {
+        Matrix::Dense(dm) => {
+            let (d, n) = (dm.n_rows(), dm.n_cols());
+            let mut data = Vec::with_capacity(d * n);
+            let mut scales = Vec::with_capacity(n);
+            for j in 0..n {
+                let col = dm.col(j);
+                let norm = dm.sq_norm(j).sqrt();
+                let s = if norm > 0.0 { 1.0 / norm } else { 1.0 };
+                scales.push(s);
+                data.extend(col.iter().map(|&x| x * s));
+            }
+            (Matrix::Dense(DenseMatrix::from_col_major(d, n, data)), scales)
+        }
+        Matrix::Sparse(sm) => {
+            let n = sm.n_cols();
+            let mut cols = Vec::with_capacity(n);
+            let mut scales = Vec::with_capacity(n);
+            for j in 0..n {
+                let (rows, vals) = sm.col(j);
+                let norm = sm.sq_norm(j).sqrt();
+                let s = if norm > 0.0 { 1.0 / norm } else { 1.0 };
+                scales.push(s);
+                cols.push(rows.iter().zip(vals).map(|(&r, &v)| (r, v * s)).collect());
+            }
+            (Matrix::Sparse(SparseMatrix::from_columns(sm.n_rows(), cols)), scales)
+        }
+        Matrix::Quantized(_) => unreachable!("builder rejects normalize-after-quantize"),
+    }
+}
+
+/// Subtract the mean from regression targets; returns (centered, mean).
+fn center_targets(y: &[f32]) -> (Vec<f32>, f32) {
+    let mean = y.iter().map(|&t| t as f64).sum::<f64>() / y.len().max(1) as f64;
+    let mean = mean as f32;
+    (y.iter().map(|&t| t - mean).collect(), mean)
+}
+
+/// Fraction of stored entries that are non-zero (dense counts actual
+/// zeros so an all-dense-but-sparse in-memory matrix still auto-routes
+/// to the sparse representation).
+fn fp32_density(m: &Matrix) -> f64 {
+    match m {
+        Matrix::Dense(dm) => {
+            let total = dm.n_rows() * dm.n_cols();
+            if total == 0 {
+                return 1.0;
+            }
+            let nz = dm.raw().iter().filter(|&&x| x != 0.0).count();
+            nz as f64 / total as f64
+        }
+        Matrix::Sparse(sm) => sm.density(),
+        Matrix::Quantized(_) => 1.0,
+    }
+}
+
+fn densify(sm: &SparseMatrix) -> DenseMatrix {
+    let (d, n) = (sm.n_rows(), sm.n_cols());
+    let mut data = vec![0.0f32; d * n];
+    for j in 0..n {
+        let (rows, vals) = sm.col(j);
+        let col = &mut data[j * d..(j + 1) * d];
+        for (&r, &x) in rows.iter().zip(vals) {
+            col[r as usize] = x;
+        }
+    }
+    DenseMatrix::from_col_major(d, n, data)
+}
+
+fn sparsify(dm: &DenseMatrix) -> SparseMatrix {
+    let (d, n) = (dm.n_rows(), dm.n_cols());
+    let cols = (0..n)
+        .map(|j| {
+            dm.col(j)
+                .iter()
+                .enumerate()
+                .filter(|&(_, &x)| x != 0.0)
+                .map(|(r, &x)| (r as u32, x))
+                .collect()
+        })
+        .collect();
+    SparseMatrix::from_columns(d, cols)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny(seed: u64) -> DatasetBuilder {
+        DatasetBuilder::generated(DatasetKind::Tiny, Family::Regression).seed(seed)
+    }
+
+    #[test]
+    fn generated_matches_raw_generator() {
+        // goldens depend on this: the builder must not perturb the
+        // generator's output
+        let ds = tiny(4242).build().unwrap();
+        let g = generator::generate(DatasetKind::Tiny, Family::Regression, 1.0, 4242);
+        assert_eq!(ds.targets(), &g.targets[..]);
+        match (ds.matrix(), &g.matrix) {
+            (Matrix::Dense(a), Matrix::Dense(b)) => assert_eq!(a.raw(), b.raw()),
+            _ => panic!("expected dense"),
+        }
+        assert_eq!(ds.alpha_star().unwrap(), &g.alpha_star.unwrap()[..]);
+    }
+
+    #[test]
+    fn normalize_records_scales_and_unit_norms() {
+        let ds = tiny(601).normalize(true).build().unwrap();
+        let scales = ds.meta().col_scales.as_ref().unwrap();
+        assert_eq!(scales.len(), ds.n_cols());
+        for j in 0..ds.n_cols() {
+            let sq = ds.as_ops().sq_norm(j);
+            assert!((sq - 1.0).abs() < 1e-4, "col {j}: {sq}");
+        }
+    }
+
+    #[test]
+    fn normalize_sparse_preserves_pattern() {
+        let ds = DatasetBuilder::generated(DatasetKind::News20Like, Family::Regression)
+            .scale(0.03)
+            .seed(602)
+            .build()
+            .unwrap();
+        let normed = DatasetBuilder::generated(DatasetKind::News20Like, Family::Regression)
+            .scale(0.03)
+            .seed(602)
+            .normalize(true)
+            .build()
+            .unwrap();
+        let (Matrix::Sparse(a), Matrix::Sparse(b)) = (ds.matrix(), normed.matrix()) else {
+            panic!("expected sparse");
+        };
+        for j in 0..a.n_cols() {
+            assert_eq!(a.col(j).0, b.col(j).0, "pattern must not change");
+            if a.nnz(j) > 0 {
+                assert!((b.sq_norm(j) - 1.0).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn center_targets_zero_mean() {
+        let ds = tiny(603).center_targets(true).build().unwrap();
+        let mean = ds.meta().target_mean.unwrap();
+        let s: f64 = ds.targets().iter().map(|&t| t as f64).sum();
+        assert!(s.abs() / ds.n_rows() as f64 < 1e-4, "centered mean {s}");
+        assert!(mean.is_finite());
+    }
+
+    #[test]
+    fn center_rejected_for_classification() {
+        let err = DatasetBuilder::generated(DatasetKind::Tiny, Family::Classification)
+            .center_targets(true)
+            .build()
+            .unwrap_err();
+        assert!(format!("{err}").contains("regression"), "{err}");
+    }
+
+    #[test]
+    fn represent_roundtrip_preserves_values() {
+        let dense = tiny(604).build().unwrap();
+        let sparse = tiny(604).represent(Represent::Sparse).build().unwrap();
+        assert_eq!(sparse.repr_name(), "sparse");
+        // dense -> sparse conversion preserves every value exactly
+        let Matrix::Sparse(sm) = sparse.matrix() else { panic!() };
+        let Matrix::Dense(dm) = dense.matrix() else { panic!() };
+        for j in 0..dense.n_cols() {
+            assert_eq!(sm.col_dense(j), dm.col(j), "col {j}");
+        }
+    }
+
+    #[test]
+    fn auto_picks_by_density() {
+        let news = DatasetBuilder::generated(DatasetKind::News20Like, Family::Regression)
+            .scale(0.05)
+            .represent(Represent::Auto)
+            .build()
+            .unwrap();
+        assert_eq!(news.repr_name(), "sparse", "low density stays sparse");
+        let eps = tiny(605).represent(Represent::Auto).build().unwrap();
+        assert_eq!(eps.repr_name(), "dense", "dense data stays dense");
+        // threshold 1.01 forces even dense gaussian data to sparse
+        let forced = tiny(605)
+            .represent(Represent::Auto)
+            .density_threshold(1.01)
+            .build()
+            .unwrap();
+        assert_eq!(forced.repr_name(), "sparse");
+    }
+
+    #[test]
+    fn quantize_via_builder() {
+        let q = tiny(606).represent(Represent::Quantized).build().unwrap();
+        assert_eq!(q.repr_name(), "quantized-4bit");
+        assert!(q.meta().bytes < tiny(606).build().unwrap().meta().bytes / 3);
+    }
+
+    #[test]
+    fn quantize_rejects_unaligned_rows() {
+        let m = Matrix::Dense(DenseMatrix::from_col_major(3, 1, vec![1.0, 2.0, 3.0]));
+        let err = DatasetBuilder::in_memory(m, vec![0.0; 3])
+            .represent(Represent::Quantized)
+            .build()
+            .unwrap_err();
+        assert!(format!("{err}").contains("divisible"), "{err}");
+    }
+
+    #[test]
+    fn quantize_rejects_sparse_source_without_densifying() {
+        // group-aligned rows, so the rejection is the dense-source rule,
+        // not the divisibility check — and it must fire before any
+        // (potentially enormous) densification is attempted
+        let s = Matrix::Sparse(SparseMatrix::from_columns(64, vec![vec![(0, 1.0)]; 2]));
+        let err = DatasetBuilder::in_memory(s, vec![0.0; 64])
+            .represent(Represent::Quantized)
+            .build()
+            .unwrap_err();
+        assert!(format!("{err}").contains("dense source"), "{err}");
+    }
+
+    #[test]
+    fn auto_keeps_quantized_input() {
+        let dense = tiny(609).build().unwrap();
+        let Matrix::Dense(dm) = dense.matrix() else { panic!() };
+        let qm = QuantizedMatrix::from_dense(dm);
+        let ds = DatasetBuilder::in_memory(Matrix::Quantized(qm), vec![0.0; dense.n_rows()])
+            .represent(Represent::Auto)
+            .build()
+            .unwrap();
+        assert_eq!(ds.repr_name(), "quantized-4bit");
+    }
+
+    #[test]
+    fn zero_column_scale_is_identity() {
+        let m = Matrix::Dense(DenseMatrix::from_col_major(
+            4,
+            2,
+            vec![1.0, 2.0, 3.0, 4.0, 0.0, 0.0, 0.0, 0.0],
+        ));
+        let ds = DatasetBuilder::in_memory(m, vec![0.0; 4])
+            .normalize(true)
+            .build()
+            .unwrap();
+        assert_eq!(ds.meta().col_scales.as_ref().unwrap()[1], 1.0);
+        assert_eq!(ds.as_ops().sq_norm(1), 0.0, "zero column stays zero");
+        assert!((ds.as_ops().sq_norm(0) - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn in_memory_length_mismatch_is_an_error() {
+        let m = Matrix::Dense(DenseMatrix::from_col_major(4, 1, vec![1.0; 4]));
+        assert!(DatasetBuilder::in_memory(m, vec![0.0; 3]).build().is_err());
+    }
+
+    #[test]
+    fn build_in_reserves_and_rejects() {
+        let small = tiny(607).build().unwrap();
+        let need = small.meta().bytes;
+        let mut arena = Arena::with_capacity(Tier::Fast, need + 16);
+        let placed = tiny(607).build_in(&mut arena).unwrap();
+        assert_eq!(placed.placement(), Tier::Fast);
+        assert_eq!(arena.used_bytes(), need);
+        // a second copy no longer fits
+        assert!(tiny(607).build_in(&mut arena).is_err());
+    }
+
+    #[test]
+    fn classification_orientation_has_labels() {
+        let ds = DatasetBuilder::generated(DatasetKind::Tiny, Family::Classification)
+            .seed(608)
+            .build()
+            .unwrap();
+        let labels = ds.labels().unwrap();
+        assert_eq!(labels.len(), ds.n_cols());
+        assert!(ds.targets().iter().all(|&t| t == 0.0));
+    }
+
+    #[test]
+    fn represent_parse_covers_spellings() {
+        assert_eq!(Represent::parse("auto"), Some(Represent::Auto));
+        assert_eq!(Represent::parse("q4"), Some(Represent::Quantized));
+        assert_eq!(Represent::parse("bogus"), None);
+    }
+}

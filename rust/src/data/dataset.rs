@@ -1,0 +1,361 @@
+//! [`Dataset`]: matrix + targets + provenance in one owned value.
+//!
+//! The pre-redesign data layer passed `(Matrix, Vec<f32>)` pairs around
+//! and smeared ingestion/normalization/quantization/placement across
+//! `data::io`, `data::libsvm`, `data::preprocess` and `main.rs`.  A
+//! [`Dataset`] is the one owned value the rest of the crate consumes:
+//! `solver::Problem` borrows it whole (targets are no longer a separate
+//! field), the `TierSim` charges traffic against its recorded
+//! [`placement`](Dataset::placement), and zero-copy column
+//! [`views`](Dataset::view) serve splits, shards and restricted sweeps.
+//!
+//! Construction goes through [`DatasetBuilder`](super::DatasetBuilder)
+//! — see `rust/DESIGN.md` §9 for the pipeline stages.
+
+use super::generator::{DatasetKind, Family};
+use super::view::DatasetView;
+use super::{io, BlockOps, ColumnOps, Matrix};
+use crate::memory::Tier;
+use crate::util::Rng;
+use crate::Result;
+use std::path::{Path, PathBuf};
+
+/// Where a dataset came from (recorded by the builder).
+#[derive(Clone, Debug, PartialEq)]
+pub enum SourceInfo {
+    /// Synthetic Table-I analogue from [`super::generator::generate`].
+    Generated { kind: DatasetKind, scale: f64, seed: u64 },
+    /// LIBSVM text file.
+    Libsvm { path: PathBuf },
+    /// `HTHC1` binary file (written by [`Dataset::save`]).
+    Binary { path: PathBuf },
+    /// Parsed LIBSVM samples handed to the builder directly.
+    Samples,
+    /// An in-memory matrix handed to the builder directly.
+    InMemory,
+}
+
+impl SourceInfo {
+    pub fn describe(&self) -> String {
+        match self {
+            SourceInfo::Generated { kind, scale, seed } => {
+                format!("{} (scale {scale}, seed {seed})", kind.name())
+            }
+            SourceInfo::Libsvm { path } => format!("libsvm {}", path.display()),
+            SourceInfo::Binary { path } => format!("binary {}", path.display()),
+            SourceInfo::Samples => "libsvm samples".into(),
+            SourceInfo::InMemory => "in-memory".into(),
+        }
+    }
+}
+
+/// Provenance and derived statistics carried alongside the matrix.
+#[derive(Clone, Debug)]
+pub struct DatasetMeta {
+    pub source: SourceInfo,
+    /// Which orientation the matrix is in (coordinates = features for
+    /// regression, coordinates = samples for classification).
+    pub family: Family,
+    /// Per-column scales applied by the builder's unit-norm stage —
+    /// `alpha` learned on the normalized data maps back to the original
+    /// column scale via `alpha_i * col_scales[i]`.
+    pub col_scales: Option<Vec<f32>>,
+    /// Mean subtracted from the targets by the centering stage.
+    pub target_mean: Option<f32>,
+    /// Per-coordinate labels (classification orientation only).
+    pub labels: Option<Vec<f32>>,
+    /// Planted sparse model (generated regression data only).
+    pub alpha_star: Option<Vec<f32>>,
+    /// Memory tier the matrix is placed in (what the engines charge
+    /// bulk matrix reads against).
+    pub placement: Tier,
+    /// Stored entries in the current representation.
+    pub nnz: u64,
+    /// Bytes streamed by one full pass in the current representation.
+    pub bytes: u64,
+}
+
+/// One training dataset: matrix + targets + [`DatasetMeta`].
+///
+/// Targets always have length `n_rows` (zeros in the classification
+/// orientation, where the per-coordinate labels live in the metadata).
+pub struct Dataset {
+    matrix: Matrix,
+    targets: Vec<f32>,
+    meta: DatasetMeta,
+}
+
+impl Dataset {
+    /// Assemble from parts (the builder's final step).
+    pub(crate) fn assemble(matrix: Matrix, targets: Vec<f32>, meta: DatasetMeta) -> Self {
+        assert_eq!(
+            targets.len(),
+            matrix.n_rows(),
+            "targets length must equal matrix rows"
+        );
+        Dataset { matrix, targets, meta }
+    }
+
+    /// In-memory dataset with default metadata — the terse spelling of
+    /// `DatasetBuilder::in_memory(matrix, targets).build()` for tests
+    /// and harnesses that assemble raw matrices by hand.
+    ///
+    /// Panics on any builder rejection (length mismatch, empty matrix),
+    /// quoting the builder's actual error.
+    pub fn from_parts(matrix: Matrix, targets: Vec<f32>) -> Self {
+        super::DatasetBuilder::in_memory(matrix, targets)
+            .build()
+            .unwrap_or_else(|e| panic!("Dataset::from_parts: {e}"))
+    }
+
+    /// Generated dataset with default pipeline stages — the terse
+    /// spelling of `DatasetBuilder::generated(kind, family).scale(..)
+    /// .seed(..).build()` shared by the test suites (generation cannot
+    /// fail, so the `Result` is absorbed here).
+    pub fn generated(kind: DatasetKind, family: Family, scale: f64, seed: u64) -> Self {
+        super::DatasetBuilder::generated(kind, family)
+            .scale(scale)
+            .seed(seed)
+            .build()
+            .unwrap_or_else(|e| panic!("Dataset::generated: {e}"))
+    }
+
+    pub fn matrix(&self) -> &Matrix {
+        &self.matrix
+    }
+
+    pub fn targets(&self) -> &[f32] {
+        &self.targets
+    }
+
+    pub fn meta(&self) -> &DatasetMeta {
+        &self.meta
+    }
+
+    pub fn family(&self) -> Family {
+        self.meta.family
+    }
+
+    /// The memory tier the matrix lives in (engines key their
+    /// [`TierSim`](crate::memory::TierSim) charges off this).
+    pub fn placement(&self) -> Tier {
+        self.meta.placement
+    }
+
+    /// Per-coordinate labels (classification orientation).
+    pub fn labels(&self) -> Option<&[f32]> {
+        self.meta.labels.as_deref()
+    }
+
+    /// Planted model of generated regression data.
+    pub fn alpha_star(&self) -> Option<&[f32]> {
+        self.meta.alpha_star.as_deref()
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.matrix.n_rows()
+    }
+
+    pub fn n_cols(&self) -> usize {
+        self.matrix.n_cols()
+    }
+
+    /// `d` in the paper's notation (rows).
+    pub fn d(&self) -> usize {
+        self.matrix.n_rows()
+    }
+
+    /// `n` in the paper's notation (columns = model coordinates).
+    pub fn n(&self) -> usize {
+        self.matrix.n_cols()
+    }
+
+    pub fn repr_name(&self) -> &'static str {
+        self.matrix.repr_name()
+    }
+
+    /// Column access (delegates to the matrix).
+    pub fn as_ops(&self) -> &dyn ColumnOps {
+        self.matrix.as_ops()
+    }
+
+    /// Bulk column access (delegates to the matrix).
+    pub fn as_block_ops(&self) -> &dyn BlockOps {
+        self.matrix.as_block_ops()
+    }
+
+    /// `v = D * alpha` from scratch (delegates to the matrix).
+    pub fn matvec_alpha(&self, alpha: &[f32]) -> Vec<f32> {
+        self.matrix.matvec_alpha(alpha)
+    }
+
+    /// One-line human description (shape, representation, size, tier).
+    pub fn describe(&self) -> String {
+        let family = match self.meta.family {
+            Family::Regression => "regression",
+            Family::Classification => "classification",
+        };
+        let tier = match self.meta.placement {
+            Tier::Slow => "DRAM",
+            Tier::Fast => "MCDRAM",
+        };
+        let mut s = format!(
+            "{} [{}] {} x {} ({}, {}, {})",
+            self.meta.source.describe(),
+            family,
+            self.d(),
+            self.n(),
+            self.repr_name(),
+            crate::util::fmt_bytes(self.meta.bytes),
+            tier,
+        );
+        if self.meta.col_scales.is_some() {
+            s.push_str(" [unit-normed]");
+        }
+        if let Some(m) = self.meta.target_mean {
+            s.push_str(&format!(" [targets centered, mean {m:.4}]"));
+        }
+        s
+    }
+
+    // -- views ---------------------------------------------------------
+
+    /// Zero-copy view over every column.
+    pub fn view(&self) -> DatasetView<'_> {
+        DatasetView::range(self, 0, self.n_cols())
+    }
+
+    /// Zero-copy view over the column range `[lo, hi)`.
+    ///
+    /// Panics if `lo > hi` or `hi > n_cols`.
+    pub fn col_range(&self, lo: usize, hi: usize) -> DatasetView<'_> {
+        DatasetView::range(self, lo, hi)
+    }
+
+    /// Zero-copy view over an explicit column subset.
+    ///
+    /// Panics if any index is out of bounds.
+    pub fn col_subset(&self, cols: Vec<usize>) -> DatasetView<'_> {
+        DatasetView::subset(self, cols)
+    }
+
+    /// Deterministic train/validation split over *columns* (model
+    /// coordinates): for the classification orientation columns are
+    /// samples, so this is a sample split; for regression it holds out
+    /// coordinates (screening-style validation).  Both sides are
+    /// non-empty and sorted for access locality.
+    ///
+    /// Panics unless `0 < train_frac < 1` and `n_cols >= 2`.
+    pub fn split(&self, train_frac: f64, seed: u64) -> (DatasetView<'_>, DatasetView<'_>) {
+        let n = self.n_cols();
+        assert!(n >= 2, "split needs at least two columns");
+        assert!(
+            train_frac > 0.0 && train_frac < 1.0,
+            "train fraction must be in (0, 1), got {train_frac}"
+        );
+        let mut idx: Vec<usize> = (0..n).collect();
+        let mut rng = Rng::new(seed);
+        rng.shuffle(&mut idx);
+        let n_train = (((n as f64) * train_frac).round() as usize).clamp(1, n - 1);
+        let mut train = idx[..n_train].to_vec();
+        let mut val = idx[n_train..].to_vec();
+        train.sort_unstable();
+        val.sort_unstable();
+        (DatasetView::subset(self, train), DatasetView::subset(self, val))
+    }
+
+    // -- persistence ---------------------------------------------------
+
+    /// Save in the `HTHC1` binary format (load back through
+    /// `DatasetBuilder::path`).  Refuses quantized data — save the fp32
+    /// source and re-quantize on load instead.
+    ///
+    /// Only the matrix and targets are persisted: the `HTHC1` format
+    /// predates [`DatasetMeta`], so provenance (family, labels,
+    /// normalization scales, target mean) is **not** round-tripped —
+    /// the loader rebuilds metadata from its own pipeline flags, and a
+    /// reloaded classification dataset has `labels() == None`.  A
+    /// meta-preserving record is a ROADMAP follow-up.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        use crate::util::error::Context;
+        let f = std::fs::File::create(path)
+            .with_context(|| format!("create {}", path.display()))?;
+        io::save_dataset(std::io::BufWriter::new(f), &self.matrix, &self.targets)
+    }
+}
+
+/// Stored entries across all columns in the current representation.
+pub(crate) fn stored_nnz(m: &Matrix) -> u64 {
+    let ops = m.as_ops();
+    (0..m.n_cols()).map(|j| ops.nnz(j) as u64).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::DatasetBuilder;
+    use super::*;
+
+    fn ds(seed: u64) -> Dataset {
+        DatasetBuilder::generated(DatasetKind::Tiny, Family::Regression)
+            .seed(seed)
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn accessors_are_consistent() {
+        let g = ds(9001);
+        assert_eq!(g.targets().len(), g.n_rows());
+        assert_eq!(g.d(), g.n_rows());
+        assert_eq!(g.n(), g.n_cols());
+        assert_eq!(g.meta().bytes, g.matrix().total_bytes());
+        assert_eq!(g.meta().nnz, stored_nnz(g.matrix()));
+        assert_eq!(g.placement(), Tier::Slow);
+        assert!(g.describe().contains("tiny"));
+    }
+
+    #[test]
+    fn split_partitions_columns() {
+        let g = ds(9002);
+        let (train, val) = g.split(0.75, 7);
+        assert_eq!(train.len() + val.len(), g.n_cols());
+        let mut all: Vec<usize> = (0..train.len())
+            .map(|k| train.parent_col(k))
+            .chain((0..val.len()).map(|k| val.parent_col(k)))
+            .collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..g.n_cols()).collect::<Vec<_>>());
+        // deterministic per seed
+        let (train2, _) = g.split(0.75, 7);
+        assert_eq!(
+            (0..train.len()).map(|k| train.parent_col(k)).collect::<Vec<_>>(),
+            (0..train2.len()).map(|k| train2.parent_col(k)).collect::<Vec<_>>()
+        );
+        // different seed shuffles differently
+        let (train3, _) = g.split(0.75, 8);
+        let a: Vec<usize> = (0..train.len()).map(|k| train.parent_col(k)).collect();
+        let b: Vec<usize> = (0..train3.len()).map(|k| train3.parent_col(k)).collect();
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    #[should_panic]
+    fn split_rejects_bad_fraction() {
+        let g = ds(9003);
+        let _ = g.split(1.5, 1);
+    }
+
+    #[test]
+    fn save_roundtrips_through_builder() {
+        let g = ds(9004);
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("hthc-ds-roundtrip-{}.bin", std::process::id()));
+        g.save(&path).unwrap();
+        let back = DatasetBuilder::path(&path).build().unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(back.n_rows(), g.n_rows());
+        assert_eq!(back.n_cols(), g.n_cols());
+        assert_eq!(back.targets(), g.targets());
+        assert!(matches!(back.meta().source, SourceInfo::Binary { .. }));
+    }
+}

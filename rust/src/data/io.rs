@@ -11,16 +11,18 @@
 //! -- model:   name_len u64, name bytes, lam f32, n u64, alpha f32[n]
 //! ```
 //!
-//! Lets the bench harnesses cache generated workloads and lets trained
-//! models be exported for the `evaluate` flow.
+//! The dataset half of the format is crate-internal plumbing: writing
+//! goes through [`Dataset::save`](crate::data::Dataset::save), reading
+//! through `DatasetBuilder::path` (which sniffs the magic) — the old
+//! public `save_dataset_file`/`load_dataset_file` load path is gone.
+//! Model export/import stays public for the `evaluate` flow.
 
 use crate::data::{ColumnOps, DenseMatrix, Matrix, SparseMatrix};
 use crate::util::error::Context;
 use crate::{bail, Result};
 use std::io::{Read, Write};
-use std::path::Path;
 
-const MAGIC: &[u8; 5] = b"HTHC1";
+pub(crate) const MAGIC: &[u8; 5] = b"HTHC1";
 
 fn w_u64<W: Write>(w: &mut W, x: u64) -> Result<()> {
     w.write_all(&x.to_le_bytes())?;
@@ -59,7 +61,7 @@ fn r_u32s<R: Read>(r: &mut R, len: usize) -> Result<Vec<u32>> {
 }
 
 /// Save a dataset (dense or sparse) with its targets.
-pub fn save_dataset<W: Write>(mut w: W, m: &Matrix, targets: &[f32]) -> Result<()> {
+pub(crate) fn save_dataset<W: Write>(mut w: W, m: &Matrix, targets: &[f32]) -> Result<()> {
     w.write_all(MAGIC)?;
     match m {
         Matrix::Dense(dm) => {
@@ -89,7 +91,7 @@ pub fn save_dataset<W: Write>(mut w: W, m: &Matrix, targets: &[f32]) -> Result<(
 }
 
 /// Load a dataset saved by [`save_dataset`].
-pub fn load_dataset<R: Read>(mut r: R) -> Result<(Matrix, Vec<f32>)> {
+pub(crate) fn load_dataset<R: Read>(mut r: R) -> Result<(Matrix, Vec<f32>)> {
     let mut magic = [0u8; 5];
     r.read_exact(&mut magic)?;
     if &magic != MAGIC {
@@ -163,31 +165,22 @@ pub fn load_model<R: Read>(mut r: R) -> Result<SavedModel> {
     })
 }
 
-/// Convenience: file-path wrappers.
-pub fn save_dataset_file(path: &Path, m: &Matrix, targets: &[f32]) -> Result<()> {
-    let f = std::fs::File::create(path).with_context(|| format!("create {path:?}"))?;
-    save_dataset(std::io::BufWriter::new(f), m, targets)
-}
-
-pub fn load_dataset_file(path: &Path) -> Result<(Matrix, Vec<f32>)> {
-    let f = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
-    load_dataset(std::io::BufReader::new(f))
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::data::generator::{generate, DatasetKind, Family};
-    use crate::data::ColumnOps;
+    use crate::data::{ColumnOps, DatasetBuilder, DatasetKind, Family};
 
     #[test]
     fn dense_roundtrip() {
-        let g = generate(DatasetKind::Tiny, Family::Regression, 1.0, 501);
+        let g = DatasetBuilder::generated(DatasetKind::Tiny, Family::Regression)
+            .seed(501)
+            .build()
+            .unwrap();
         let mut buf = Vec::new();
-        save_dataset(&mut buf, &g.matrix, &g.targets).unwrap();
+        save_dataset(&mut buf, g.matrix(), g.targets()).unwrap();
         let (m2, t2) = load_dataset(buf.as_slice()).unwrap();
-        assert_eq!(t2, g.targets);
-        if let (Matrix::Dense(a), Matrix::Dense(b)) = (&g.matrix, &m2) {
+        assert_eq!(t2, g.targets());
+        if let (Matrix::Dense(a), Matrix::Dense(b)) = (g.matrix(), &m2) {
             assert_eq!(a.raw(), b.raw());
         } else {
             panic!("expected dense");
@@ -196,12 +189,16 @@ mod tests {
 
     #[test]
     fn sparse_roundtrip() {
-        let g = generate(DatasetKind::News20Like, Family::Regression, 0.03, 502);
+        let g = DatasetBuilder::generated(DatasetKind::News20Like, Family::Regression)
+            .scale(0.03)
+            .seed(502)
+            .build()
+            .unwrap();
         let mut buf = Vec::new();
-        save_dataset(&mut buf, &g.matrix, &g.targets).unwrap();
+        save_dataset(&mut buf, g.matrix(), g.targets()).unwrap();
         let (m2, t2) = load_dataset(buf.as_slice()).unwrap();
-        assert_eq!(t2, g.targets);
-        if let (Matrix::Sparse(a), Matrix::Sparse(b)) = (&g.matrix, &m2) {
+        assert_eq!(t2, g.targets());
+        if let (Matrix::Sparse(a), Matrix::Sparse(b)) = (g.matrix(), &m2) {
             assert_eq!(a.n_rows(), b.n_rows());
             for j in 0..a.n_cols() {
                 assert_eq!(a.col(j), b.col(j), "col {j}");
@@ -228,20 +225,23 @@ mod tests {
 
     #[test]
     fn truncated_file_errors_not_panics() {
-        let g = generate(DatasetKind::Tiny, Family::Regression, 1.0, 503);
+        let g = DatasetBuilder::generated(DatasetKind::Tiny, Family::Regression)
+            .seed(503)
+            .build()
+            .unwrap();
         let mut buf = Vec::new();
-        save_dataset(&mut buf, &g.matrix, &g.targets).unwrap();
+        save_dataset(&mut buf, g.matrix(), g.targets()).unwrap();
         buf.truncate(buf.len() / 2);
         assert!(load_dataset(buf.as_slice()).is_err());
     }
 
     #[test]
     fn quantized_save_refused() {
-        let g = generate(DatasetKind::Tiny, Family::Regression, 1.0, 504);
-        let q = match &g.matrix {
-            Matrix::Dense(dm) => Matrix::Quantized(crate::data::QuantizedMatrix::from_dense(dm)),
-            _ => unreachable!(),
-        };
-        assert!(save_dataset(Vec::new(), &q, &g.targets).is_err());
+        let g = DatasetBuilder::generated(DatasetKind::Tiny, Family::Regression)
+            .seed(504)
+            .represent(crate::data::Represent::Quantized)
+            .build()
+            .unwrap();
+        assert!(save_dataset(Vec::new(), g.matrix(), g.targets()).is_err());
     }
 }

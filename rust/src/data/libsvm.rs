@@ -1,9 +1,16 @@
-//! LIBSVM text-format I/O.
+//! LIBSVM text-format parsing.
 //!
 //! The paper's real datasets ship in this format (`label idx:val ...`,
-//! 1-based indices).  The loader produces the row-major sample stream
-//! and both task orientations (see `generator::Family`): features as
-//! coordinates for Lasso, samples as coordinates for SVM.
+//! 1-based indices).  The parser is deliberately tolerant of what
+//! real-world files contain — `#` comments (whole-line or trailing),
+//! blank lines, stray whitespace (including CRLF line endings), and
+//! out-of-order feature indices (sorted on ingest) — and rejects, with
+//! line numbers, what cannot be saved: malformed pairs, 0-based
+//! indices, and duplicate feature indices within a sample.
+//!
+//! Datasets are built from parsed samples by `DatasetBuilder` (the
+//! orientation conversions below are crate-internal pipeline stages);
+//! the parser itself stays public for tooling and tests.
 
 use crate::data::sparse::SparseMatrix;
 use crate::util::error::Context;
@@ -26,6 +33,12 @@ pub fn read_file(path: &Path) -> Result<Vec<Sample>> {
 }
 
 /// Parse LIBSVM lines from any reader.
+///
+/// Tolerated: `#` comments, blank lines, leading/trailing whitespace
+/// (and CRLF endings), out-of-order feature indices (sorted on
+/// ingest).  Rejected with a line number: malformed pairs, non-numeric
+/// labels/indices/values, 0-based indices, and duplicate feature
+/// indices within one sample.
 pub fn read<R: BufRead>(r: R) -> Result<Vec<Sample>> {
     let mut out = Vec::new();
     for (lineno, line) in r.lines().enumerate() {
@@ -47,16 +60,25 @@ pub fn read<R: BufRead>(r: R) -> Result<Vec<Sample>> {
                 .with_context(|| format!("line {}: bad pair {t:?}", lineno + 1))?;
             let i: u32 = i
                 .parse()
-                .with_context(|| format!("line {}: bad index", lineno + 1))?;
+                .with_context(|| format!("line {}: bad index {i:?}", lineno + 1))?;
             if i == 0 {
                 bail!("line {}: LIBSVM indices are 1-based", lineno + 1);
             }
             let v: f32 = v
                 .parse()
-                .with_context(|| format!("line {}: bad value", lineno + 1))?;
+                .with_context(|| format!("line {}: bad value {v:?}", lineno + 1))?;
             features.push((i - 1, v));
         }
+        // out-of-order indices are tolerated (sorted); duplicates are a
+        // hard error — "last one wins" silently corrupts norms and dots
         features.sort_unstable_by_key(|&(i, _)| i);
+        if let Some(w) = features.windows(2).find(|w| w[0].0 == w[1].0) {
+            bail!(
+                "line {}: duplicate feature index {}",
+                lineno + 1,
+                w[0].0 + 1
+            );
+        }
         out.push(Sample { label, features });
     }
     Ok(out)
@@ -85,7 +107,8 @@ pub fn n_features(samples: &[Sample]) -> usize {
 
 /// Regression orientation: coordinates = features.
 /// Returns (D of shape samples x features, targets = labels).
-pub fn to_regression(samples: &[Sample]) -> (SparseMatrix, Vec<f32>) {
+/// Crate-internal: datasets are oriented by the `DatasetBuilder`.
+pub(crate) fn to_regression(samples: &[Sample]) -> (SparseMatrix, Vec<f32>) {
     let d = samples.len();
     let n = n_features(samples);
     let mut cols: Vec<Vec<(u32, f32)>> = vec![Vec::new(); n];
@@ -100,7 +123,8 @@ pub fn to_regression(samples: &[Sample]) -> (SparseMatrix, Vec<f32>) {
 
 /// Dual-SVM orientation: coordinates = samples, columns y_i * x_i.
 /// Returns (D of shape features x samples, labels per column).
-pub fn to_classification(samples: &[Sample]) -> (SparseMatrix, Vec<f32>) {
+/// Crate-internal: datasets are oriented by the `DatasetBuilder`.
+pub(crate) fn to_classification(samples: &[Sample]) -> (SparseMatrix, Vec<f32>) {
     let d = n_features(samples);
     let labels: Vec<f32> = samples
         .iter()

@@ -8,19 +8,30 @@
 //! baseline are generic over representation.  Bulk consumers use the
 //! [`BlockOps`] extension instead: many columns dotted per pass over
 //! `w` through the blocked kernel backend (`rust/DESIGN.md` §8).
+//!
+//! The [`Dataset`] layer on top (`rust/DESIGN.md` §9) bundles a matrix
+//! with its targets and provenance: construction goes through the
+//! [`DatasetBuilder`] pipeline (source → format sniff → preprocess →
+//! represent → place), and [`DatasetView`] exposes zero-copy column
+//! ranges/subsets for splits, per-core shards and restricted sweeps.
 
+pub mod builder;
+pub mod dataset;
 pub mod dense;
 pub mod generator;
 pub mod io;
 pub mod libsvm;
-pub mod preprocess;
 pub mod quantized;
 pub mod sparse;
+pub mod view;
 
+pub use builder::{DatasetBuilder, Represent, DENSE_DENSITY_THRESHOLD};
+pub use dataset::{Dataset, DatasetMeta, SourceInfo};
 pub use dense::DenseMatrix;
-pub use generator::{DatasetKind, GeneratedDataset};
+pub use generator::{DatasetKind, Family, GeneratedDataset};
 pub use quantized::QuantizedMatrix;
 pub use sparse::{ChunkPool, SparseMatrix};
+pub use view::DatasetView;
 
 /// Column access used by the gap/update hot paths.
 ///

@@ -104,6 +104,30 @@ impl QuantizedMatrix {
     pub fn group_err_bound(&self, j: usize, g: usize) -> f32 {
         self.scol(j)[g] / 2.0
     }
+
+    /// Copy a column subset into a new matrix — packed bytes and scales
+    /// are moved verbatim, so there is **no** requantization error
+    /// (re-deriving group scales from dequantized values would shift
+    /// codes).  Backs `DatasetView::materialize`.
+    pub(crate) fn select_columns(&self, cols: &[usize]) -> QuantizedMatrix {
+        let mut packed = Vec::with_capacity(self.bytes_per_col * cols.len());
+        let mut scales = Vec::with_capacity(self.groups_per_col * cols.len());
+        let mut sq_norms = Vec::with_capacity(cols.len());
+        for &j in cols {
+            packed.extend_from_slice(self.pcol(j));
+            scales.extend_from_slice(self.scol(j));
+            sq_norms.push(self.sq_norms[j]);
+        }
+        QuantizedMatrix {
+            d: self.d,
+            n: cols.len(),
+            packed,
+            scales,
+            sq_norms,
+            bytes_per_col: self.bytes_per_col,
+            groups_per_col: self.groups_per_col,
+        }
+    }
 }
 
 impl ColumnOps for QuantizedMatrix {

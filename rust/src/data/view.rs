@@ -1,0 +1,331 @@
+//! [`DatasetView`]: zero-copy column-range / column-subset views.
+//!
+//! A view borrows a [`Dataset`] and exposes a subset of its columns
+//! through the same [`ColumnOps`] + [`BlockOps`] traits the full matrix
+//! implements, with index translation and no data movement.  One
+//! abstraction serves three consumers (paper §IV-A/IV-D):
+//!
+//! * train/validation splits ([`Dataset::split`]) — for the
+//!   classification orientation columns are samples, so a column split
+//!   is a sample split;
+//! * per-core column shards ([`DatasetView::shards`]) — the ROADMAP's
+//!   threaded tile scheduler pins one shard per core;
+//! * working-set-restricted sweeps — any consumer taking
+//!   `&dyn BlockOps` (e.g. `glm::total_gap`) runs unchanged on a view.
+//!
+//! Forwarding preserves bitwise results: a view's `dot`/`dots_block`
+//! issue exactly the kernel calls the parent would for the selected
+//! columns (`rust/tests/view_diff.rs` asserts this on every backend).
+
+use super::dataset::{stored_nnz, Dataset, DatasetMeta, SourceInfo};
+use super::{BlockOps, ColumnOps, Matrix, SparseMatrix};
+use crate::kernels;
+
+/// Which columns of the parent a view exposes.
+enum ColSel {
+    /// Contiguous `[lo, hi)` — splits and shards of resident data.
+    Range(usize, usize),
+    /// Explicit (sorted or not) subset — random splits, working sets.
+    Subset(Vec<usize>),
+}
+
+/// A zero-copy view over a column range or subset of a [`Dataset`].
+pub struct DatasetView<'a> {
+    parent: &'a Dataset,
+    sel: ColSel,
+}
+
+impl<'a> DatasetView<'a> {
+    pub(crate) fn range(parent: &'a Dataset, lo: usize, hi: usize) -> Self {
+        assert!(
+            lo <= hi && hi <= parent.n_cols(),
+            "column range [{lo}, {hi}) out of bounds (n_cols {})",
+            parent.n_cols()
+        );
+        DatasetView { parent, sel: ColSel::Range(lo, hi) }
+    }
+
+    pub(crate) fn subset(parent: &'a Dataset, cols: Vec<usize>) -> Self {
+        let n = parent.n_cols();
+        for &j in &cols {
+            assert!(j < n, "column {j} out of bounds (n_cols {n})");
+        }
+        DatasetView { parent, sel: ColSel::Subset(cols) }
+    }
+
+    /// Number of columns the view exposes.
+    pub fn len(&self) -> usize {
+        match &self.sel {
+            ColSel::Range(lo, hi) => *hi - *lo,
+            ColSel::Subset(cols) => cols.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The dataset this view borrows.
+    pub fn parent(&self) -> &'a Dataset {
+        self.parent
+    }
+
+    /// Parent column index of view column `k`.
+    ///
+    /// Panics when `k >= len()` — a real assert, not a debug one, so a
+    /// release-build over-iteration cannot silently read a neighbouring
+    /// parent column (the subset arm already panics via indexing).
+    #[inline]
+    pub fn parent_col(&self, k: usize) -> usize {
+        match &self.sel {
+            ColSel::Range(lo, hi) => {
+                assert!(*lo + k < *hi, "view column {k} out of bounds (len {})", *hi - *lo);
+                *lo + k
+            }
+            ColSel::Subset(cols) => cols[k],
+        }
+    }
+
+    /// Parent column indices, in view order.
+    pub fn parent_cols(&self) -> Vec<usize> {
+        match &self.sel {
+            ColSel::Range(lo, hi) => (*lo..*hi).collect(),
+            ColSel::Subset(cols) => cols.clone(),
+        }
+    }
+
+    /// The parent's targets (rows are shared by every view).
+    pub fn targets(&self) -> &'a [f32] {
+        self.parent.targets()
+    }
+
+    /// Per-coordinate labels restricted to the view's columns
+    /// (classification orientation).
+    pub fn labels(&self) -> Option<Vec<f32>> {
+        let labels = self.parent.labels()?;
+        Some((0..self.len()).map(|k| labels[self.parent_col(k)]).collect())
+    }
+
+    /// Split into `k` near-equal column shards (one per core).  Shards
+    /// of a range view stay ranges (no allocation per shard); trailing
+    /// shards may be empty when `k > len`.
+    pub fn shards(&self, k: usize) -> Vec<DatasetView<'a>> {
+        assert!(k >= 1, "at least one shard");
+        let len = self.len();
+        let base = len / k;
+        let rem = len % k;
+        let mut out = Vec::with_capacity(k);
+        let mut start = 0usize;
+        for i in 0..k {
+            let take = base + usize::from(i < rem);
+            let end = start + take;
+            out.push(match &self.sel {
+                ColSel::Range(lo, _) => DatasetView {
+                    parent: self.parent,
+                    sel: ColSel::Range(*lo + start, *lo + end),
+                },
+                ColSel::Subset(cols) => DatasetView {
+                    parent: self.parent,
+                    sel: ColSel::Subset(cols[start..end].to_vec()),
+                },
+            });
+            start = end;
+        }
+        out
+    }
+
+    /// Copy the selected columns into an owned [`Dataset`] in the
+    /// parent's representation (the engines' working-set machinery
+    /// needs owned column storage; evaluation paths should keep using
+    /// the zero-copy view).  Quantized columns are copied packed — no
+    /// requantization error.  Metadata (labels, scales, planted model)
+    /// is restricted to the selected columns.
+    pub fn materialize(&self) -> Dataset {
+        let cols = self.parent_cols();
+        let d = self.parent.n_rows();
+        let matrix = match self.parent.matrix() {
+            Matrix::Dense(dm) => {
+                let mut data = Vec::with_capacity(d * cols.len());
+                for &j in &cols {
+                    data.extend_from_slice(dm.col(j));
+                }
+                Matrix::Dense(super::DenseMatrix::from_col_major(d, cols.len(), data))
+            }
+            Matrix::Sparse(sm) => {
+                let sub = cols
+                    .iter()
+                    .map(|&j| {
+                        let (rows, vals) = sm.col(j);
+                        rows.iter().copied().zip(vals.iter().copied()).collect()
+                    })
+                    .collect();
+                Matrix::Sparse(SparseMatrix::from_columns(d, sub))
+            }
+            Matrix::Quantized(qm) => Matrix::Quantized(qm.select_columns(&cols)),
+        };
+        let pm = self.parent.meta();
+        let take = |v: &Vec<f32>| -> Vec<f32> { cols.iter().map(|&j| v[j]).collect() };
+        let meta = DatasetMeta {
+            source: SourceInfo::InMemory,
+            family: pm.family,
+            col_scales: pm.col_scales.as_ref().map(take),
+            target_mean: pm.target_mean,
+            labels: pm.labels.as_ref().map(take),
+            alpha_star: pm.alpha_star.as_ref().map(take),
+            placement: pm.placement,
+            nnz: stored_nnz(&matrix),
+            bytes: matrix.total_bytes(),
+        };
+        Dataset::assemble(matrix, self.parent.targets().to_vec(), meta)
+    }
+}
+
+impl ColumnOps for DatasetView<'_> {
+    fn n_rows(&self) -> usize {
+        self.parent.n_rows()
+    }
+
+    fn n_cols(&self) -> usize {
+        self.len()
+    }
+
+    #[inline]
+    fn dot(&self, col: usize, w: &[f32]) -> f32 {
+        self.parent.as_ops().dot(self.parent_col(col), w)
+    }
+
+    #[inline]
+    fn dot_range(&self, col: usize, w: &[f32], lo: usize, hi: usize) -> f32 {
+        self.parent.as_ops().dot_range(self.parent_col(col), w, lo, hi)
+    }
+
+    #[inline]
+    fn axpy(&self, col: usize, delta: f32, v: &mut [f32]) {
+        self.parent.as_ops().axpy(self.parent_col(col), delta, v);
+    }
+
+    #[inline]
+    fn sq_norm(&self, col: usize) -> f32 {
+        self.parent.as_ops().sq_norm(self.parent_col(col))
+    }
+
+    fn nnz(&self, col: usize) -> usize {
+        self.parent.as_ops().nnz(self.parent_col(col))
+    }
+
+    fn col_bytes(&self, col: usize) -> u64 {
+        self.parent.as_ops().col_bytes(self.parent_col(col))
+    }
+}
+
+impl BlockOps for DatasetView<'_> {
+    fn dots_block(&self, cols: &[usize], w: &[f32], out: &mut [f32]) {
+        const B: usize = kernels::BLOCK_COLS;
+        debug_assert_eq!(cols.len(), out.len());
+        let ops = self.parent.as_block_ops();
+        // Translate in BLOCK_COLS-sized stack tiles and forward: the
+        // parent receives exactly the per-chunk column lists it would
+        // cut for itself, so view results are bitwise the parent's.
+        for (cidx, o) in cols.chunks(B).zip(out.chunks_mut(B)) {
+            let mut mapped = [0usize; B];
+            for (m, &k) in mapped.iter_mut().zip(cidx) {
+                *m = self.parent_col(k);
+            }
+            ops.dots_block(&mapped[..cidx.len()], w, o);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{DatasetBuilder, DatasetKind, Family};
+    use super::*;
+
+    fn ds(seed: u64) -> Dataset {
+        DatasetBuilder::generated(DatasetKind::Tiny, Family::Regression)
+            .seed(seed)
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn range_and_subset_translate_indices() {
+        let g = ds(9101);
+        let r = g.col_range(4, 9);
+        assert_eq!(r.len(), 5);
+        assert_eq!(r.parent_col(0), 4);
+        assert_eq!(r.parent_col(4), 8);
+        let s = g.col_subset(vec![7, 1, 30]);
+        assert_eq!(s.len(), 3);
+        assert_eq!(s.parent_cols(), vec![7, 1, 30]);
+        assert_eq!(s.n_rows(), g.n_rows());
+        assert_eq!(s.n_cols(), 3);
+    }
+
+    #[test]
+    #[should_panic]
+    fn out_of_bounds_subset_panics() {
+        let g = ds(9102);
+        let _ = g.col_subset(vec![g.n_cols()]);
+    }
+
+    #[test]
+    fn shards_partition_in_order() {
+        let g = ds(9103);
+        let v = g.view();
+        let shards = v.shards(5);
+        assert_eq!(shards.len(), 5);
+        let mut all = Vec::new();
+        for s in &shards {
+            all.extend(s.parent_cols());
+        }
+        assert_eq!(all, (0..g.n_cols()).collect::<Vec<_>>());
+        // near-equal: sizes differ by at most one
+        let sizes: Vec<usize> = shards.iter().map(|s| s.len()).collect();
+        let (min, max) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+        assert!(max - min <= 1, "{sizes:?}");
+    }
+
+    #[test]
+    fn more_shards_than_columns_gives_empty_tails() {
+        let g = ds(9104);
+        let v = g.col_range(0, 3);
+        let shards = v.shards(5);
+        assert_eq!(shards.iter().filter(|s| !s.is_empty()).count(), 3);
+        assert_eq!(shards.iter().map(|s| s.len()).sum::<usize>(), 3);
+    }
+
+    #[test]
+    fn materialize_copies_selected_columns() {
+        let g = ds(9105);
+        let cols = vec![2, 17, 5];
+        let sub = g.col_subset(cols.clone()).materialize();
+        assert_eq!(sub.n_cols(), 3);
+        assert_eq!(sub.n_rows(), g.n_rows());
+        assert_eq!(sub.targets(), g.targets());
+        let (Matrix::Dense(a), Matrix::Dense(b)) = (sub.matrix(), g.matrix()) else {
+            panic!("expected dense");
+        };
+        for (k, &j) in cols.iter().enumerate() {
+            assert_eq!(a.col(k), b.col(j), "col {j}");
+        }
+        // planted model restricted to the same columns
+        let astar = g.alpha_star().unwrap();
+        let sub_astar = sub.alpha_star().unwrap();
+        for (k, &j) in cols.iter().enumerate() {
+            assert_eq!(sub_astar[k], astar[j]);
+        }
+    }
+
+    #[test]
+    fn labels_subset_follows_view() {
+        let g = DatasetBuilder::generated(DatasetKind::Tiny, Family::Classification)
+            .seed(9106)
+            .build()
+            .unwrap();
+        let v = g.col_subset(vec![3, 0, 9]);
+        let want: Vec<f32> =
+            [3usize, 0, 9].iter().map(|&j| g.labels().unwrap()[j]).collect();
+        assert_eq!(v.labels().unwrap(), want);
+    }
+}

@@ -14,8 +14,10 @@
 //!
 //! The crate layers (see `rust/DESIGN.md`):
 //!
-//! * [`data`] — dense / chunked-sparse / 4-bit-quantized matrices,
-//!   synthetic workload generators, LIBSVM I/O;
+//! * [`data`] — dense / chunked-sparse / 4-bit-quantized matrices
+//!   behind one `Dataset` value (builder pipeline for
+//!   load/normalize/represent/place, zero-copy column views),
+//!   synthetic workload generators, LIBSVM parsing;
 //! * [`memory`] — the two-tier (DRAM vs MCDRAM) placement & bandwidth
 //!   simulator standing in for KNL flat mode;
 //! * [`kernels`] — every hot inner loop (dense/sparse/quantized

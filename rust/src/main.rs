@@ -12,8 +12,7 @@
 //! interactive entry point.
 
 use hthc::coordinator::HthcConfig;
-use hthc::data::generator::{self, DatasetKind, Family};
-use hthc::data::{Matrix, QuantizedMatrix};
+use hthc::data::{Dataset, DatasetBuilder, DatasetKind, Family, Represent};
 use hthc::glm::{ElasticNet, GlmModel, HuberL1, Lasso, LogisticL1, Ridge, SvmDual, SvmL2Dual};
 use hthc::memory::TierSim;
 use hthc::metrics::Table;
@@ -36,9 +35,18 @@ COMMANDS
   artifacts   check the PJRT artifacts load and execute
   help        this text
 
+DATASET FLAGS (train / search / evaluate — one DatasetBuilder pipeline)
+  --dataset   epsilon|dvsc|news20|criteo|tiny   (default tiny, generated)
+  --data      PATH — load a real file instead; format is sniffed
+              (HTHC1 binary magic, else LIBSVM text)
+  --scale     generated dataset scale factor    (default 1.0)
+  --normalize scale every column to unit L2 norm
+  --center    subtract the target mean (regression only)
+  --repr      keep|dense|sparse|quantized|auto  (default keep; auto picks
+              dense vs sparse by stored-entry density)
+  --quantize  shorthand for --repr quantized (paper §IV-E, dense 4-bit)
+
 TRAIN FLAGS
-  --dataset   epsilon|dvsc|news20|criteo|tiny   (default tiny)
-  --scale     dataset scale factor              (default 1.0)
   --model     lasso|svm|svm-l2|ridge|logistic|elastic|huber (default lasso)
   --adaptive-r target refresh fraction for the online %B controller
   --lam       regularization                    (default 1e-3)
@@ -50,7 +58,9 @@ TRAIN FLAGS
   --tol       duality-gap tolerance             (default 1e-5)
   --timeout   seconds                           (default 120)
   --mse-target SGD stop-at-MSE                  (default 0 = run out)
-  --quantize  store D as 4-bit (dense only)
+  --split     train on this column fraction, report the held-out
+              duality-gap certificate (and accuracy for SVM) in extras
+  --split-seed PRNG seed for the split          (default: --seed)
   --pjrt      route task A's gaps through the AOT artifacts
   --csv       dump the convergence trace as CSV
   --seed      PRNG seed                         (default 42)
@@ -60,8 +70,9 @@ GLOBAL FLAGS
               hot dot/axpy kernel (default: best SIMD the host supports;
               also via the RUST_PALLAS_KERNELS environment variable)
 
-All solvers run through the same solver::Trainer facade and report a
-unified FitReport (see rust/DESIGN.md §Kernels for the dispatch policy).
+All solvers run through the same solver::Trainer facade over a
+data::Dataset built by data::DatasetBuilder, and report a unified
+FitReport (see rust/DESIGN.md §9 for the dataset pipeline).
 ";
 
 fn main() {
@@ -110,40 +121,95 @@ fn build_model(name: &str, lam: f32, n: usize) -> Box<dyn GlmModel> {
     }
 }
 
-fn cmd_train(args: &Args) {
-    let kind = DatasetKind::parse(&args.str_or("dataset", "tiny")).unwrap_or_else(|| {
-        eprintln!("unknown dataset");
-        std::process::exit(2);
-    });
-    let model_name = args.str_or("model", "lasso");
-    let family = if matches!(model_name.as_str(), "svm" | "svm-l2" | "logistic") {
+fn family_for(model_name: &str) -> Family {
+    if matches!(model_name, "svm" | "svm-l2" | "logistic") {
         Family::Classification
     } else {
         Family::Regression
-    };
-    let scale = args.f64_or("scale", 1.0);
-    let seed = args.u64_or("seed", 42);
-    let g = generator::generate(kind, family, scale, seed);
-    println!("dataset: {}", g.describe());
+    }
+}
 
-    let mut matrix = g.matrix;
-    if args.bool_or("quantize", false) {
-        matrix = match matrix {
-            Matrix::Dense(dm) => Matrix::Quantized(QuantizedMatrix::from_dense(&dm)),
-            other => {
-                eprintln!("--quantize requires a dense dataset");
-                drop(other);
+/// The one dataset construction path for every command: flags onto the
+/// `DatasetBuilder` pipeline (source -> preprocess -> represent).
+fn build_dataset(args: &Args, family: Family) -> Dataset {
+    let mut b = if let Some(path) = args.get("data") {
+        DatasetBuilder::path(path).family(family)
+    } else {
+        let kind = DatasetKind::parse(&args.str_or("dataset", "tiny")).unwrap_or_else(|| {
+            eprintln!("unknown dataset (want epsilon|dvsc|news20|criteo|tiny or --data PATH)");
+            std::process::exit(2);
+        });
+        DatasetBuilder::generated(kind, family)
+            .scale(args.f64_or("scale", 1.0))
+            .seed(args.u64_or("seed", 42))
+    };
+    b = b
+        .normalize(args.bool_or("normalize", false))
+        .center_targets(args.bool_or("center", false));
+    let quantize = args.bool_or("quantize", false);
+    let repr = args.get("repr");
+    if quantize && repr.as_deref().is_some_and(|r| r != "quantized" && r != "q4") {
+        eprintln!(
+            "--quantize conflicts with --repr {:?} (drop one)",
+            repr.unwrap()
+        );
+        std::process::exit(2);
+    }
+    if quantize {
+        b = b.represent(Represent::Quantized);
+    } else if let Some(spec) = repr {
+        match Represent::parse(&spec) {
+            Some(r) => b = b.represent(r),
+            None => {
+                eprintln!("unknown --repr {spec:?} (want keep|dense|sparse|quantized|auto)");
                 std::process::exit(2);
             }
-        };
-        println!("representation: quantized 4-bit");
+        }
     }
+    b.build().unwrap_or_else(|e| {
+        eprintln!("dataset: {e}");
+        std::process::exit(2);
+    })
+}
+
+fn cmd_train(args: &Args) {
+    let model_name = args.str_or("model", "lasso");
+    let family = family_for(&model_name);
+    let dataset = build_dataset(args, family);
+    println!("dataset: {}", dataset.describe());
+
+    // optional train/validation split over columns (zero-copy views;
+    // the train side is materialized because the engines' working-set
+    // machinery needs owned column storage)
+    let split = args.f64_or("split", 0.0);
+    if split != 0.0 && !(split > 0.0 && split < 1.0) {
+        // reject negative / >= 1 explicitly rather than silently
+        // training without a split (0 is the documented "no split")
+        eprintln!("--split must be a fraction in (0, 1), got {split}");
+        std::process::exit(2);
+    }
+    let split_seed = args.u64_or("split-seed", args.u64_or("seed", 42));
+    let mut train_cols: Option<Vec<usize>> = None;
+    let mut val_cols: Option<Vec<usize>> = None;
+    let train_owned: Option<Dataset> = if split > 0.0 {
+        let (train_view, val_view) = dataset.split(split, split_seed);
+        println!(
+            "split: {} train / {} held-out columns (seed {split_seed})",
+            train_view.len(),
+            val_view.len()
+        );
+        train_cols = Some(train_view.parent_cols());
+        val_cols = Some(val_view.parent_cols());
+        Some(train_view.materialize())
+    } else {
+        None
+    };
+    let train: &Dataset = train_owned.as_ref().unwrap_or(&dataset);
 
     let lam = args.f32_or("lam", solver::DEFAULT_LAM);
-    let mut model = build_model(&model_name, lam, matrix.n_cols());
+    let mut model = build_model(&model_name, lam, train.n_cols());
     let sim = TierSim::default();
     let solver_name = args.str_or("solver", "hthc");
-    let y = &g.targets;
 
     // one facade for every solver: flags -> Trainer (solver::cli is the
     // single source of truth — asserted by the CLI-parity test)
@@ -154,7 +220,7 @@ fn cmd_train(args: &Args) {
     // gate on the resolved engine, not the flag spelling, so the
     // `A+B` alias also reaches the PJRT path
     let use_pjrt = trainer.solver_ref().name() == "hthc" && trainer.cfg().use_pjrt_gaps;
-    let result = if use_pjrt {
+    let mut result = if use_pjrt {
         let rt = XlaRuntime::start(&hthc::runtime::default_artifacts_dir())
             .unwrap_or_else(|e| {
                 eprintln!("PJRT runtime unavailable: {e:#}");
@@ -164,10 +230,33 @@ fn cmd_train(args: &Args) {
         Trainer::new()
             .solver(Hthc::with_backend(&service))
             .config(trainer.cfg().clone())
-            .fit_with(model.as_mut(), &matrix, y, &sim)
+            .fit_with(model.as_mut(), train, &sim)
     } else {
-        trainer.fit_with(model.as_mut(), &matrix, y, &sim)
+        trainer.fit_with(model.as_mut(), train, &sim)
     };
+
+    // held-out certificate: the duality gap decomposes per coordinate
+    // (Eq. 3), so summing gap_i over the held-out columns at alpha_i = 0
+    // scores the trained w on unseen columns — hinge loss of held-out
+    // samples for the SVM orientation, screening violation for L1.
+    if let Some(cols) = val_cols {
+        let val = dataset.col_subset(cols);
+        let zeros = vec![0.0f32; val.len()];
+        let heldout =
+            hthc::glm::total_gap(model.as_ref(), &val, &result.v, dataset.targets(), &zeros);
+        result.extras.set_f64(keys::HELDOUT_GAP, heldout);
+        result.extras.set_u64(keys::HELDOUT_COLS, val.len() as u64);
+        let mut line = format!(
+            "held-out: gap {heldout:.6e} over {} columns",
+            val.len()
+        );
+        if model_name.starts_with("svm") {
+            let acc = SvmDual::new(lam, train.n_cols()).accuracy(&val, &result.v);
+            result.extras.set_f64(keys::HELDOUT_ACCURACY, acc);
+            line.push_str(&format!(", accuracy {:.2}%", acc * 100.0));
+        }
+        println!("{line}");
+    }
 
     println!("solver: {solver_name}");
     if let Some(mse) = result.extras.f64(keys::FINAL_MSE) {
@@ -175,18 +264,28 @@ fn cmd_train(args: &Args) {
     }
     println!("result: {}", result.summary());
     if model_name.starts_with("svm") {
-        let acc = SvmDual::new(lam, matrix.n_cols()).accuracy(matrix.as_ops(), &result.v);
+        let acc = SvmDual::new(lam, train.n_cols()).accuracy(train.as_ops(), &result.v);
         println!("training accuracy: {:.2}%", acc * 100.0);
     }
     if args.bool_or("csv", false) {
         print!("{}", result.trace.to_csv());
     }
     if let Some(path) = args.get("export") {
-        let saved = hthc::data::io::SavedModel {
-            name: model_name.clone(),
-            lam,
-            alpha: result.alpha.clone(),
+        // after --split the iterate is indexed by view-local train
+        // columns; scatter it back to parent coordinates (held-out
+        // coordinates were never trained and stay 0) so the export is
+        // always full-length and evaluate-compatible
+        let alpha = match &train_cols {
+            Some(cols) => {
+                let mut full = vec![0.0f32; dataset.n_cols()];
+                for (k, &j) in cols.iter().enumerate() {
+                    full[j] = result.alpha[k];
+                }
+                full
+            }
+            None => result.alpha.clone(),
         };
+        let saved = hthc::data::io::SavedModel { name: model_name.clone(), lam, alpha };
         let f = std::fs::File::create(&path).expect("create export file");
         hthc::data::io::save_model(std::io::BufWriter::new(f), &saved).expect("export");
         println!("model exported to {path}");
@@ -197,20 +296,15 @@ fn cmd_train(args: &Args) {
 }
 
 fn cmd_search(args: &Args) {
-    let kind = DatasetKind::parse(&args.str_or("dataset", "tiny")).expect("--dataset");
     let model_name = args.str_or("model", "lasso");
-    let family = if matches!(model_name.as_str(), "svm" | "svm-l2" | "logistic") {
-        Family::Classification
-    } else {
-        Family::Regression
-    };
-    let g = generator::generate(kind, family, args.f64_or("scale", 1.0), args.u64_or("seed", 42));
+    let family = family_for(&model_name);
+    let g = build_dataset(args, family);
     println!("dataset: {}", g.describe());
     let lam = args.f32_or("lam", solver::DEFAULT_LAM);
     let n = g.n();
     let probe = build_model(&model_name, lam, n);
     let obj0 = probe
-        .objective(&vec![0.0; g.d()], &g.targets, &vec![0.0; n])
+        .objective(&vec![0.0; g.d()], g.targets(), &vec![0.0; n])
         .abs()
         .max(1.0);
     let target = args.f64_or("target-rel", 1e-3) * obj0;
@@ -230,8 +324,7 @@ fn cmd_search(args: &Args) {
     let model_name2 = model_name.clone();
     let results = hthc::coordinator::grid_search(
         &move || build_model(&model_name2, lam, n),
-        &g.matrix,
-        &g.targets,
+        &g,
         &grid,
         target,
         args.f64_or("per-candidate", 10.0),
@@ -239,7 +332,7 @@ fn cmd_search(args: &Args) {
         true,
     );
     let mut t = Table::new(
-        format!("Search results ({} {})", model_name, kind.name()),
+        format!("Search results ({} {})", model_name, g.meta().source.describe()),
         &["rank", "%B", "T_A", "T_B", "V_B", "T_total", "t(target)", "epochs", "refresh"],
     );
     for (i, r) in results.iter().take(args.usize_or("top", 10)).enumerate() {
@@ -268,23 +361,22 @@ fn cmd_evaluate(args: &Args) {
     let f = std::fs::File::open(&path).expect("open model file");
     let saved = hthc::data::io::load_model(std::io::BufReader::new(f)).expect("parse model");
     println!("model: {} (lam {}, {} coordinates)", saved.name, saved.lam, saved.alpha.len());
-    let kind = DatasetKind::parse(&args.str_or("dataset", "tiny")).expect("--dataset");
     let family = if saved.name.starts_with("svm") || saved.name == "logistic" {
         Family::Classification
     } else {
         Family::Regression
     };
-    let g = generator::generate(kind, family, args.f64_or("scale", 1.0), args.u64_or("seed", 42));
+    let g = build_dataset(args, family);
     assert_eq!(g.n(), saved.alpha.len(), "model/dataset coordinate mismatch");
-    let v = g.matrix.matvec_alpha(&saved.alpha);
+    let v = g.matvec_alpha(&saved.alpha);
     match family {
         Family::Regression => {
-            let mse = hthc::kernels::sq_err_f64(&v, &g.targets) / g.d() as f64;
+            let mse = hthc::kernels::sq_err_f64(&v, g.targets()) / g.d() as f64;
             let support = saved.alpha.iter().filter(|&&a| a != 0.0).count();
             println!("MSE {mse:.6}; support {support}/{}", g.n());
         }
         Family::Classification => {
-            let ops = g.matrix.as_ops();
+            let ops = g.as_ops();
             let acc = (0..g.n()).filter(|&j| ops.dot(j, &v) > 0.0).count() as f64 / g.n() as f64;
             println!("training accuracy {:.2}%", acc * 100.0);
         }
@@ -366,13 +458,17 @@ fn cmd_datasets(args: &Args) {
         (DatasetKind::News20Like, "19,996 x 1,355,191 sparse, 0.07 GB"),
         (DatasetKind::CriteoLike, "45,840,617 x 1,000,000 sparse, 14.4 GB"),
     ] {
-        let g = generator::generate(kind, Family::Regression, scale, 42);
+        let g = DatasetBuilder::generated(kind, Family::Regression)
+            .scale(scale)
+            .seed(42)
+            .build()
+            .expect("generated dataset");
         t.row(vec![
             kind.name().into(),
             g.d().to_string(),
             g.n().to_string(),
-            g.matrix.repr_name().into(),
-            hthc::util::fmt_bytes(g.matrix.total_bytes()),
+            g.repr_name().into(),
+            hthc::util::fmt_bytes(g.meta().bytes),
             orig.into(),
         ]);
     }

@@ -65,6 +65,18 @@ impl Arena {
         Some(unsafe { std::slice::from_raw_parts_mut(slab.as_mut_ptr(), len) })
     }
 
+    /// Reserve raw capacity without handing out a slab — how the
+    /// `DatasetBuilder` charges a dataset's placed representation
+    /// against the tier (packed/quantized layouts are not f32 slabs).
+    /// Returns false (nothing reserved) when the bytes do not fit.
+    pub fn reserve_bytes(&mut self, bytes: u64) -> bool {
+        if self.used_bytes.saturating_add(bytes) > self.capacity_bytes {
+            return false;
+        }
+        self.used_bytes += bytes;
+        true
+    }
+
     /// Release everything (working-set teardown between runs).
     pub fn reset(&mut self) {
         self.allocations.clear();
@@ -103,6 +115,19 @@ mod tests {
         a.reset();
         assert!(a.fits(250));
         assert_eq!(a.used_bytes(), 0);
+    }
+
+    #[test]
+    fn reserve_bytes_tracks_and_rejects() {
+        let mut a = Arena::with_capacity(Tier::Fast, 100);
+        assert!(a.reserve_bytes(60));
+        assert_eq!(a.used_bytes(), 60);
+        assert!(!a.reserve_bytes(41), "over capacity");
+        assert_eq!(a.used_bytes(), 60, "failed reserve must not charge");
+        assert!(a.reserve_bytes(40), "exact fit");
+        assert!(!a.reserve_bytes(u64::MAX), "saturating add, no overflow");
+        a.reset();
+        assert!(a.reserve_bytes(100));
     }
 
     #[test]

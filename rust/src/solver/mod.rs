@@ -4,7 +4,8 @@
 //! OMP/OMP-WILD, PASSCoDe and SGD on the same problems — so the crate
 //! exposes one interface over all of them:
 //!
-//! * [`Problem`] bundles matrix + targets + model + [`TierSim`]
+//! * [`Problem`] bundles a borrowed [`Dataset`] (matrix + targets +
+//!   tier placement in one value) + model + [`TierSim`]
 //!   (+ warm start + epoch observer + [`HthcConfig`]);
 //! * [`Solver`] is the engine trait (`fit(&mut Problem) -> FitReport`),
 //!   implemented by [`Hthc`], [`SeqThreshold`] (ST), [`Omp`],
@@ -20,6 +21,7 @@
 //! `train_passcode`, `train_sgd`) were kept as deprecated shims for
 //! one release and have now been removed.
 //!
+//! [`Dataset`]: crate::data::Dataset
 //! [`TierSim`]: crate::memory::TierSim
 //! [`HthcConfig`]: crate::coordinator::HthcConfig
 

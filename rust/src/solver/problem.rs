@@ -1,13 +1,16 @@
 //! [`Problem`]: everything one training run needs, in one place.
 //!
-//! The pre-redesign API passed (model, matrix, targets, sim) positionally
-//! with a different shape per engine; `Problem` bundles them together
-//! with the run configuration, an optional warm start, and an optional
-//! per-epoch observer so every [`Solver`](super::Solver) sees the same
-//! inputs.
+//! The pre-redesign API passed (model, matrix, targets, sim)
+//! positionally with a different shape per engine; `Problem` bundles a
+//! borrowed [`Dataset`] (matrix + targets + placement metadata as one
+//! value — targets are no longer a separate field) with the model, the
+//! tier simulator, the run configuration, an optional warm start, and
+//! an optional per-epoch observer, so every [`Solver`](super::Solver)
+//! sees the same inputs.  Engines key their bulk-read `TierSim` charges
+//! off [`Dataset::placement`].
 
 use crate::coordinator::HthcConfig;
-use crate::data::Matrix;
+use crate::data::Dataset;
 use crate::glm::GlmModel;
 use crate::memory::TierSim;
 
@@ -43,11 +46,11 @@ pub(crate) fn notify_epoch(on_epoch: &mut Option<OnEpoch<'_>>, ev: &EpochEvent<'
     }
 }
 
-/// One training problem: data + targets + model + tier simulator +
+/// One training problem: dataset + model + tier simulator +
 /// configuration (+ optional warm start and epoch observer).
 pub struct Problem<'a> {
-    pub data: &'a Matrix,
-    pub targets: &'a [f32],
+    /// The data — matrix, targets and placement in one value.
+    pub data: &'a Dataset,
     pub model: &'a mut dyn GlmModel,
     pub sim: &'a TierSim,
     /// Shared run configuration (thread topology, batch, stopping rules,
@@ -64,20 +67,14 @@ pub struct Problem<'a> {
 impl<'a> Problem<'a> {
     pub fn new(
         model: &'a mut dyn GlmModel,
-        data: &'a Matrix,
-        targets: &'a [f32],
+        data: &'a Dataset,
         sim: &'a TierSim,
         cfg: HthcConfig,
     ) -> Self {
-        assert_eq!(
-            targets.len(),
-            data.n_rows(),
-            "targets length must equal matrix rows"
-        );
         // every engine gets the documented panic-early messages, not
         // just HTHC (whose pool construction used to be the only check)
         cfg.validate();
-        Problem { data, targets, model, sim, cfg, warm_alpha: None, on_epoch: None }
+        Problem { data, model, sim, cfg, warm_alpha: None, on_epoch: None }
     }
 
     /// Start from a previous iterate instead of zeros.
@@ -110,16 +107,22 @@ impl<'a> Problem<'a> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::data::generator::{generate, DatasetKind, Family};
+    use crate::data::{DatasetBuilder, DatasetKind, Family};
     use crate::glm::Lasso;
+
+    fn tiny(seed: u64) -> Dataset {
+        DatasetBuilder::generated(DatasetKind::Tiny, Family::Regression)
+            .seed(seed)
+            .build()
+            .unwrap()
+    }
 
     #[test]
     fn initial_state_zero_without_warm_start() {
-        let g = generate(DatasetKind::Tiny, Family::Regression, 1.0, 3100);
+        let g = tiny(3100);
         let mut model = Lasso::new(0.1);
         let sim = TierSim::default();
-        let mut p =
-            Problem::new(&mut model, &g.matrix, &g.targets, &sim, HthcConfig::default());
+        let mut p = Problem::new(&mut model, &g, &sim, HthcConfig::default());
         let (a, v) = p.initial_state();
         assert_eq!(a.len(), g.n());
         assert_eq!(v.len(), g.d());
@@ -128,26 +131,27 @@ mod tests {
 
     #[test]
     fn warm_start_rederives_v_exactly() {
-        let g = generate(DatasetKind::Tiny, Family::Regression, 1.0, 3101);
+        let g = tiny(3101);
         let mut model = Lasso::new(0.1);
         let sim = TierSim::default();
         let alpha: Vec<f32> = (0..g.n()).map(|j| (j % 3) as f32 * 0.5).collect();
-        let mut p = Problem::new(&mut model, &g.matrix, &g.targets, &sim, HthcConfig::default())
+        let mut p = Problem::new(&mut model, &g, &sim, HthcConfig::default())
             .warm_start(alpha.clone());
         let (a, v) = p.initial_state();
         assert_eq!(a, alpha);
-        assert_eq!(v, g.matrix.matvec_alpha(&alpha));
+        assert_eq!(v, g.matvec_alpha(&alpha));
         // consumed: a second call is a cold start
         assert!(p.initial_state().0.iter().all(|&x| x == 0.0));
     }
 
     #[test]
     #[should_panic]
-    fn mismatched_targets_rejected() {
-        let g = generate(DatasetKind::Tiny, Family::Regression, 1.0, 3102);
+    fn mismatched_warm_start_rejected() {
+        let g = tiny(3102);
         let mut model = Lasso::new(0.1);
         let sim = TierSim::default();
-        let short = vec![0.0f32; g.d() - 1];
-        let _ = Problem::new(&mut model, &g.matrix, &short, &sim, HthcConfig::default());
+        let mut p = Problem::new(&mut model, &g, &sim, HthcConfig::default())
+            .warm_start(vec![0.0; g.n() - 1]);
+        let _ = p.initial_state();
     }
 }

@@ -21,6 +21,15 @@ pub mod keys {
     pub const REFRESH_FRAC: &str = "refresh_frac";
     /// SGD: final training mean squared error (f64).
     pub const FINAL_MSE: &str = "final_mse";
+    /// `hthc train --split`: duality-gap certificate summed over the
+    /// held-out columns with zero dual variables — the decomposable
+    /// held-out objective (hinge loss of held-out samples for the SVM
+    /// orientation, screening violation for L1 regression) (f64).
+    pub const HELDOUT_GAP: &str = "heldout_gap";
+    /// `hthc train --split`, classification: held-out accuracy (f64).
+    pub const HELDOUT_ACCURACY: &str = "heldout_accuracy";
+    /// `hthc train --split`: number of held-out columns (u64).
+    pub const HELDOUT_COLS: &str = "heldout_cols";
 }
 
 /// One solver-specific statistic.

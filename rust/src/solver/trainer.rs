@@ -1,17 +1,20 @@
 //! [`Trainer`]: the builder facade over every [`Solver`].
 //!
 //! ```no_run
-//! use hthc::data::generator::{generate, DatasetKind, Family};
+//! use hthc::data::{DatasetBuilder, DatasetKind, Family};
 //! use hthc::glm::Lasso;
 //! use hthc::solver::{SeqThreshold, StopWhen, Trainer};
 //!
-//! let g = generate(DatasetKind::Tiny, Family::Regression, 1.0, 42);
+//! let ds = DatasetBuilder::generated(DatasetKind::Tiny, Family::Regression)
+//!     .seed(42)
+//!     .build()
+//!     .unwrap();
 //! let report = Trainer::new()
 //!     .solver(SeqThreshold)
 //!     .model(Box::new(Lasso::new(0.3)))
 //!     .threads(2, 2, 1)
 //!     .stop_when(StopWhen::gap_below(1e-4).max_epochs(500))
-//!     .fit(&g.matrix, &g.targets);
+//!     .fit(&ds);
 //! println!("{}", report.summary());
 //! ```
 //!
@@ -22,7 +25,7 @@
 
 use super::{EpochEvent, FitReport, Hthc, Problem, Solver};
 use crate::coordinator::{HthcConfig, Selection};
-use crate::data::Matrix;
+use crate::data::Dataset;
 use crate::glm::GlmModel;
 use crate::memory::TierSim;
 
@@ -215,18 +218,19 @@ impl<'b> Trainer<'b> {
         self.model.as_deref()
     }
 
-    /// Train the owned model on `(data, targets)`.
+    /// Train the owned model on `data` (targets travel inside the
+    /// [`Dataset`]).
     ///
     /// Panics if no model was set — harnesses that keep model ownership
     /// outside the trainer use [`fit_with`](Trainer::fit_with).
-    pub fn fit(&mut self, data: &Matrix, targets: &[f32]) -> FitReport {
+    pub fn fit(&mut self, data: &Dataset) -> FitReport {
         let mut model = self
             .model
             .take()
             .expect("Trainer::fit: no model set — call .model(...) or use fit_with");
         let report = {
             let mut problem =
-                Problem::new(model.as_mut(), data, targets, &self.sim, self.cfg.clone());
+                Problem::new(model.as_mut(), data, &self.sim, self.cfg.clone());
             if let Some(alpha) = self.warm_alpha.take() {
                 problem = problem.warm_start(alpha);
             }
@@ -244,11 +248,10 @@ impl<'b> Trainer<'b> {
     pub fn fit_with(
         &mut self,
         model: &mut dyn GlmModel,
-        data: &Matrix,
-        targets: &[f32],
+        data: &Dataset,
         sim: &TierSim,
     ) -> FitReport {
-        let mut problem = Problem::new(model, data, targets, sim, self.cfg.clone());
+        let mut problem = Problem::new(model, data, sim, self.cfg.clone());
         if let Some(alpha) = self.warm_alpha.take() {
             problem = problem.warm_start(alpha);
         }

@@ -16,7 +16,7 @@
 //! serializes on `KERNEL_LOCK`.
 
 use hthc::coordinator::HthcConfig;
-use hthc::data::generator::{generate, DatasetKind, Family, GeneratedDataset};
+use hthc::data::{Dataset, DatasetKind, Family};
 use hthc::glm::{GlmModel, Lasso, SvmDual};
 use hthc::kernels::{self, Backend};
 use hthc::memory::TierSim;
@@ -66,19 +66,25 @@ const BUDGET_SVM: &[(&str, usize)] =
 const SGD_MSE_REL: f64 = 0.25;
 const SGD_BUDGET: usize = 400;
 
-fn lasso_problem() -> (GeneratedDataset, Lasso) {
-    let g = generate(DatasetKind::Tiny, Family::Regression, 1.0, LASSO_SEED);
+/// The builder pipeline must not perturb the recorded generator output
+/// (asserted in `data::builder` unit tests), so the goldens stand.
+fn generate(kind: DatasetKind, family: Family, seed: u64) -> Dataset {
+    Dataset::generated(kind, family, 1.0, seed)
+}
+
+fn lasso_problem() -> (Dataset, Lasso) {
+    let g = generate(DatasetKind::Tiny, Family::Regression, LASSO_SEED);
     (g, Lasso::new(LASSO_LAM))
 }
 
-fn svm_problem() -> (GeneratedDataset, SvmDual) {
-    let g = generate(DatasetKind::Tiny, Family::Classification, 1.0, SVM_SEED);
+fn svm_problem() -> (Dataset, SvmDual) {
+    let g = generate(DatasetKind::Tiny, Family::Classification, SVM_SEED);
     let n = g.n();
     (g, SvmDual::new(SVM_LAM, n))
 }
 
-fn gap_tol(model: &dyn GlmModel, g: &GeneratedDataset) -> f64 {
-    let obj0 = model.objective(&vec![0.0; g.d()], &g.targets, &vec![0.0; g.n()]);
+fn gap_tol(model: &dyn GlmModel, g: &Dataset) -> f64 {
+    let obj0 = model.objective(&vec![0.0; g.d()], g.targets(), &vec![0.0; g.n()]);
     GAP_REL * obj0.abs().max(1.0)
 }
 
@@ -102,12 +108,12 @@ fn golden_cfg(gap_tol: f64, max_epochs: usize) -> HthcConfig {
     }
 }
 
-fn run(engine: &str, cfg: HthcConfig, model: &mut dyn GlmModel, g: &GeneratedDataset) -> FitReport {
+fn run(engine: &str, cfg: HthcConfig, model: &mut dyn GlmModel, g: &Dataset) -> FitReport {
     let sim = TierSim::default();
     Trainer::new()
         .solver_boxed(by_name(engine).unwrap())
         .config(cfg)
-        .fit_with(model, &g.matrix, &g.targets, &sim)
+        .fit_with(model, g, &sim)
 }
 
 // ---------------------------------------------------------------------------
@@ -155,12 +161,12 @@ fn golden_sgd_reaches_recorded_mse_in_budget() {
     let (g, _) = lasso_problem();
     let sim = TierSim::default();
     let mut model = Lasso::new(LASSO_LAM);
-    let mse0 = kernels::sq_err_f64(&g.targets, &vec![0.0; g.d()]) / g.d() as f64;
+    let mse0 = kernels::sq_err_f64(g.targets(), &vec![0.0; g.d()]) / g.d() as f64;
     let target = SGD_MSE_REL * mse0;
     let res = Trainer::new()
         .solver(hthc::solver::Sgd { lam: 1e-4, mse_target: target })
         .config(golden_cfg(0.0, SGD_BUDGET))
-        .fit_with(&mut model, &g.matrix, &g.targets, &sim);
+        .fit_with(&mut model, &g, &sim);
     assert!(
         res.converged,
         "sgd: MSE {:?} !<= {target:.4} within {SGD_BUDGET} epochs",

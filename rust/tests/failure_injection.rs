@@ -3,18 +3,25 @@
 //! never panic from library internals, never emit NaN iterates.
 
 use hthc::coordinator::HthcConfig;
-use hthc::data::generator::{generate, DatasetKind, Family};
-use hthc::data::{libsvm, DenseMatrix, Matrix, SparseMatrix};
+use hthc::data::{
+    libsvm, Dataset, DatasetBuilder, DatasetKind, DenseMatrix, Family, Matrix, SparseMatrix,
+};
 use hthc::glm::{GlmModel, Lasso, Ridge};
 use hthc::memory::TierSim;
 use hthc::solver::{FitReport, Trainer};
 use hthc::util::Rng;
 
+/// Every dataset here goes through the builder pipeline
+/// (`Dataset::from_parts` is the in-memory spelling of it).
+fn generate(kind: DatasetKind, family: Family, scale: f64, seed: u64) -> Dataset {
+    Dataset::generated(kind, family, scale, seed)
+}
+
 /// HTHC via the unified facade (the adversarial suite targets the
 /// default engine).
-fn fit_hthc(cfg: HthcConfig, model: &mut dyn GlmModel, m: &Matrix, y: &[f32]) -> FitReport {
+fn fit_hthc(cfg: HthcConfig, model: &mut dyn GlmModel, ds: &Dataset) -> FitReport {
     let sim = TierSim::default();
-    Trainer::new().config(cfg).fit_with(model, m, y, &sim)
+    Trainer::new().config(cfg).fit_with(model, ds, &sim)
 }
 
 // ---------------------------------------------------------------------------
@@ -80,10 +87,12 @@ fn constant_columns_and_duplicate_columns() {
     data.extend(base.iter()); // col A
     data.extend(base.iter()); // exact duplicate of col A
     data.extend(base.iter().map(|x| -x)); // negated duplicate
-    let m = Matrix::Dense(DenseMatrix::from_col_major(d, 4, data));
-    let y: Vec<f32> = (0..d).map(|_| rng.normal()).collect();
+    let ds = Dataset::from_parts(
+        Matrix::Dense(DenseMatrix::from_col_major(d, 4, data)),
+        (0..d).map(|_| rng.normal()).collect(),
+    );
     let mut model = Lasso::new(0.05);
-    let res = fit_hthc(quick_cfg(), &mut model, &m, &y);
+    let res = fit_hthc(quick_cfg(), &mut model, &ds);
     assert!(res.alpha.iter().all(|a| a.is_finite()));
     assert!(res.trace.final_objective().unwrap().is_finite());
 }
@@ -93,25 +102,26 @@ fn single_coordinate_problem() {
     let d = 32;
     let mut rng = Rng::new(7003);
     let col: Vec<f32> = (0..d).map(|_| rng.normal()).collect();
-    let m = Matrix::Dense(DenseMatrix::from_col_major(d, 1, col.clone()));
-    let y: Vec<f32> = col.iter().map(|&x| 2.0 * x).collect();
+    let ds = Dataset::from_parts(
+        Matrix::Dense(DenseMatrix::from_col_major(d, 1, col.clone())),
+        col.iter().map(|&x| 2.0 * x).collect(),
+    );
     let mut model = Ridge::new(1e-4);
     let mut cfg = quick_cfg();
     cfg.batch_frac = 1.0;
     cfg.max_epochs = 50;
-    let res = fit_hthc(cfg, &mut model, &m, &y);
+    let res = fit_hthc(cfg, &mut model, &ds);
     assert!((res.alpha[0] - 2.0).abs() < 0.05, "alpha {}", res.alpha[0]);
 }
 
 #[test]
 fn empty_sparse_columns_everywhere() {
-    let m = Matrix::Sparse(SparseMatrix::from_columns(
-        16,
-        vec![vec![]; 8],
-    ));
-    let y = vec![1.0f32; 16];
+    let ds = Dataset::from_parts(
+        Matrix::Sparse(SparseMatrix::from_columns(16, vec![vec![]; 8])),
+        vec![1.0f32; 16],
+    );
     let mut model = Lasso::new(0.1);
-    let res = fit_hthc(quick_cfg(), &mut model, &m, &y);
+    let res = fit_hthc(quick_cfg(), &mut model, &ds);
     assert!(res.alpha.iter().all(|&a| a == 0.0), "nothing can move");
 }
 
@@ -120,7 +130,7 @@ fn extreme_regularization_is_stable() {
     let g = generate(DatasetKind::Tiny, Family::Regression, 1.0, 7004);
     for lam in [1e-12f32, 1e12] {
         let mut model = Lasso::new(lam);
-        let res = fit_hthc(quick_cfg(), &mut model, &g.matrix, &g.targets);
+        let res = fit_hthc(quick_cfg(), &mut model, &g);
         assert!(res.alpha.iter().all(|a| a.is_finite()), "lam={lam}");
         if lam > 1.0 {
             assert!(res.alpha.iter().all(|&a| a == 0.0), "huge lam kills all");
@@ -131,9 +141,17 @@ fn extreme_regularization_is_stable() {
 #[test]
 fn huge_target_magnitudes_stay_finite() {
     let g = generate(DatasetKind::Tiny, Family::Regression, 1.0, 7005);
-    let y: Vec<f32> = g.targets.iter().map(|&t| t * 1e10).collect();
+    let scaled = DatasetBuilder::in_memory(
+        match g.matrix() {
+            Matrix::Dense(dm) => Matrix::Dense(dm.clone()),
+            _ => unreachable!("tiny is dense"),
+        },
+        g.targets().iter().map(|&t| t * 1e10).collect(),
+    )
+    .build()
+    .unwrap();
     let mut model = Ridge::new(1.0);
-    let res = fit_hthc(quick_cfg(), &mut model, &g.matrix, &y);
+    let res = fit_hthc(quick_cfg(), &mut model, &scaled);
     assert!(res.alpha.iter().all(|a| a.is_finite()));
     assert!(res.v.iter().all(|v| v.is_finite()));
 }
@@ -150,7 +168,7 @@ fn more_threads_than_coordinates() {
     cfg.v_b = 2;
     cfg.batch_frac = 0.02; // batch of ~1 coordinate, 16 B-threads
     let mut model = Lasso::new(0.1);
-    let res = fit_hthc(cfg, &mut model, &g.matrix, &g.targets);
+    let res = fit_hthc(cfg, &mut model, &g);
     assert!(res.epochs > 0);
 }
 
@@ -159,14 +177,16 @@ fn v_b_larger_than_rows() {
     let d = 8;
     let mut rng = Rng::new(7007);
     let data: Vec<f32> = (0..d * 4).map(|_| rng.normal()).collect();
-    let m = Matrix::Dense(DenseMatrix::from_col_major(d, 4, data));
-    let y: Vec<f32> = (0..d).map(|_| rng.normal()).collect();
+    let ds = Dataset::from_parts(
+        Matrix::Dense(DenseMatrix::from_col_major(d, 4, data)),
+        (0..d).map(|_| rng.normal()).collect(),
+    );
     let mut cfg = quick_cfg();
     cfg.t_b = 1;
     cfg.v_b = 16; // lanes get empty row ranges — must not deadlock
     cfg.batch_frac = 1.0;
     let mut model = Ridge::new(0.5);
-    let res = fit_hthc(cfg, &mut model, &m, &y);
+    let res = fit_hthc(cfg, &mut model, &ds);
     assert!(res.trace.final_objective().unwrap().is_finite());
 }
 
@@ -177,19 +197,33 @@ fn lock_chunk_of_one_is_correct_if_slow() {
     cfg.lock_chunk = 1; // pathological: one mutex per element
     cfg.max_epochs = 10;
     let mut model = Lasso::new(0.2);
-    let res = fit_hthc(cfg, &mut model, &g.matrix, &g.targets);
+    let res = fit_hthc(cfg, &mut model, &g);
     // v = D alpha must still hold exactly
-    let v2 = g.matrix.matvec_alpha(&res.alpha);
+    let v2 = g.matvec_alpha(&res.alpha);
     for (a, b) in res.v.iter().zip(&v2) {
         assert!((a - b).abs() < 1e-2 * b.abs().max(1.0));
     }
 }
 
 #[test]
-fn dataset_io_rejects_garbage_gracefully() {
-    use hthc::data::io;
-    for garbage in [&b""[..], &b"HTHC"[..], &b"HTHC1\xFF"[..], &b"XXXXX\x01\x00"[..]] {
-        assert!(io::load_dataset(garbage).is_err());
-        assert!(io::load_model(garbage).is_err());
+fn dataset_loading_rejects_garbage_gracefully() {
+    // the builder's path source sniffs the format and must surface a
+    // clean error for binary-magic garbage, truncation, and non-UTF8 /
+    // non-LIBSVM text alike
+    let dir = std::env::temp_dir();
+    for (i, garbage) in [&b"HTHC"[..], &b"HTHC1\xFF"[..], &b"XXXXX\x01\x00"[..]]
+        .iter()
+        .enumerate()
+    {
+        let path = dir.join(format!("hthc-garbage-{}-{i}.bin", std::process::id()));
+        std::fs::write(&path, garbage).unwrap();
+        let res = DatasetBuilder::path(&path).build();
+        std::fs::remove_file(&path).ok();
+        assert!(res.is_err(), "garbage case {i} must error");
+        assert!(hthc::data::io::load_model(*garbage).is_err());
     }
+    // a missing file errors with context rather than panicking
+    assert!(DatasetBuilder::path(dir.join("hthc-definitely-missing.bin"))
+        .build()
+        .is_err());
 }

@@ -4,11 +4,15 @@
 
 use hthc::baselines::PasscodeMode;
 use hthc::coordinator::{HthcConfig, Selection};
-use hthc::data::generator::{generate, DatasetKind, Family};
-use hthc::data::{Matrix, QuantizedMatrix};
+use hthc::data::{Dataset, DatasetBuilder, DatasetKind, Family, Matrix, Represent};
 use hthc::glm::{self, ElasticNet, GlmModel, Lasso, LogisticL1, Ridge, SvmDual};
 use hthc::memory::{Tier, TierSim};
 use hthc::solver::{FitReport, Hthc, Omp, Passcode, SeqThreshold, Solver, Trainer};
+
+/// Every dataset in this suite goes through the one builder pipeline.
+fn generate(kind: DatasetKind, family: Family, scale: f64, seed: u64) -> Dataset {
+    Dataset::generated(kind, family, scale, seed)
+}
 
 fn rel_tol(model: &dyn GlmModel, d: usize, n: usize, y: &[f32], rel: f64) -> f64 {
     let obj0 = model.objective(&vec![0.0; d], y, &vec![0.0; n]);
@@ -35,14 +39,10 @@ fn fit(
     solver: impl Solver + 'static,
     cfg: HthcConfig,
     model: &mut dyn GlmModel,
-    data: &Matrix,
-    y: &[f32],
+    data: &Dataset,
     sim: &TierSim,
 ) -> FitReport {
-    Trainer::new()
-        .solver(solver)
-        .config(cfg)
-        .fit_with(model, data, y, sim)
+    Trainer::new().solver(solver).config(cfg).fit_with(model, data, sim)
 }
 
 /// Every model trains on its natural dataset through the full HTHC
@@ -62,13 +62,13 @@ fn all_models_train_via_hthc() {
     };
     for (mut model, family) in cases {
         let g = generate(DatasetKind::Tiny, family, 1.0, 201);
-        let tol = rel_tol(model.as_ref(), g.d(), g.n(), &g.targets, 1e-3);
+        let tol = rel_tol(model.as_ref(), g.d(), g.n(), g.targets(), 1e-3);
         let sim = TierSim::default();
-        let res = fit(Hthc::new(), quick_cfg(tol), model.as_mut(), &g.matrix, &g.targets, &sim);
+        let res = fit(Hthc::new(), quick_cfg(tol), model.as_mut(), &g, &sim);
         let name = model.name();
         assert!(res.converged, "{name}: {}", res.summary());
         // the headline invariant: locked updates never lose writes
-        let v2 = g.matrix.matvec_alpha(&res.alpha);
+        let v2 = g.matvec_alpha(&res.alpha);
         for (idx, (a, b)) in res.v.iter().zip(&v2).enumerate() {
             assert!(
                 (a - b).abs() < 1e-2 * b.abs().max(1.0),
@@ -78,28 +78,26 @@ fn all_models_train_via_hthc() {
     }
 }
 
-/// Dense, sparse and quantized representations all train lasso.
+/// Dense, sparse and quantized representations all train lasso — the
+/// builder's `represent` stage producing each one.
 #[test]
 fn all_representations_train() {
     // dense
     let g = generate(DatasetKind::Tiny, Family::Regression, 1.0, 202);
-    // quantized view of the same data
-    let qmatrix = match &g.matrix {
-        Matrix::Dense(dm) => Matrix::Quantized(QuantizedMatrix::from_dense(dm)),
-        _ => unreachable!(),
-    };
+    // quantized pipeline over the same generated source
+    let gq = DatasetBuilder::generated(DatasetKind::Tiny, Family::Regression)
+        .seed(202)
+        .represent(Represent::Quantized)
+        .build()
+        .unwrap();
     // sparse dataset
     let gs = generate(DatasetKind::News20Like, Family::Regression, 0.03, 202);
 
-    for (label, matrix, targets) in [
-        ("dense", &g.matrix, &g.targets),
-        ("quantized", &qmatrix, &g.targets),
-        ("sparse", &gs.matrix, &gs.targets),
-    ] {
+    for (label, ds) in [("dense", &g), ("quantized", &gq), ("sparse", &gs)] {
         let mut model = Lasso::new(0.3);
-        let tol = rel_tol(&model, matrix.n_rows(), matrix.n_cols(), targets, 5e-3);
+        let tol = rel_tol(&model, ds.n_rows(), ds.n_cols(), ds.targets(), 5e-3);
         let sim = TierSim::default();
-        let res = fit(Hthc::new(), quick_cfg(tol), &mut model, matrix, targets, &sim);
+        let res = fit(Hthc::new(), quick_cfg(tol), &mut model, ds, &sim);
         let first = res.trace.points.first().unwrap().objective;
         let last = res.trace.final_objective().unwrap();
         assert!(
@@ -121,7 +119,7 @@ fn all_representations_train() {
 fn solvers_agree_on_the_optimum() {
     let g = generate(DatasetKind::Tiny, Family::Regression, 1.0, 203);
     let sim = TierSim::default();
-    let tol = rel_tol(&Lasso::new(0.4), g.d(), g.n(), &g.targets, 1e-3);
+    let tol = rel_tol(&Lasso::new(0.4), g.d(), g.n(), g.targets(), 1e-3);
     let mut objs: Vec<(String, f64)> = Vec::new();
 
     // every engine through the one facade — same model, same data
@@ -137,7 +135,7 @@ fn solvers_agree_on_the_optimum() {
         let r = Trainer::new()
             .solver_boxed(engine)
             .config(quick_cfg(tol))
-            .fit_with(&mut m, &g.matrix, &g.targets, &sim);
+            .fit_with(&mut m, &g, &sim);
         objs.push((name.into(), r.trace.final_objective().unwrap()));
     }
 
@@ -161,8 +159,8 @@ fn wild_breaks_primal_dual_consistency_atomic_does_not() {
     cfg.t_b = 4; // more concurrency -> more lost updates for wild
     let drift = |wild: bool| {
         let mut m = Lasso::new(0.2);
-        let r = fit(Omp { wild }, cfg.clone(), &mut m, &g.matrix, &g.targets, &sim);
-        let v2 = g.matrix.matvec_alpha(&r.alpha);
+        let r = fit(Omp { wild }, cfg.clone(), &mut m, &g, &sim);
+        let v2 = g.matvec_alpha(&r.alpha);
         r.v
             .iter()
             .zip(&v2)
@@ -192,7 +190,7 @@ fn tier_traffic_separation() {
     let mut cfg = quick_cfg(0.0);
     cfg.max_epochs = 10;
     let mut model = Lasso::new(0.4);
-    let _ = fit(Hthc::new(), cfg, &mut model, &g.matrix, &g.targets, &sim);
+    let _ = fit(Hthc::new(), cfg, &mut model, &g, &sim);
     let slow = sim.stats(Tier::Slow);
     let fast = sim.stats(Tier::Fast);
     assert!(slow.read_bytes > 0, "A must stream the full matrix from DRAM");
@@ -206,11 +204,11 @@ fn tier_traffic_separation() {
 fn importance_selection_converges() {
     let g = generate(DatasetKind::Tiny, Family::Regression, 1.0, 206);
     let mut model = Lasso::new(0.4);
-    let tol = rel_tol(&model, g.d(), g.n(), &g.targets, 1e-3);
+    let tol = rel_tol(&model, g.d(), g.n(), g.targets(), 1e-3);
     let mut cfg = quick_cfg(tol);
     cfg.selection = Selection::Importance;
     let sim = TierSim::default();
-    let res = fit(Hthc::new(), cfg, &mut model, &g.matrix, &g.targets, &sim);
+    let res = fit(Hthc::new(), cfg, &mut model, &g, &sim);
     assert!(res.converged, "{}", res.summary());
 }
 
@@ -230,12 +228,12 @@ fn zero_columns_are_handled() {
     }
     let m = hthc::data::DenseMatrix::from_col_major(d, n, data);
     let y: Vec<f32> = (0..d).map(|_| rng.normal()).collect();
-    let matrix = Matrix::Dense(m);
+    let ds = Dataset::from_parts(Matrix::Dense(m), y);
     let mut model = Lasso::new(0.1);
     let mut cfg = quick_cfg(0.0);
     cfg.max_epochs = 50;
     let sim = TierSim::default();
-    let res = fit(Hthc::new(), cfg, &mut model, &matrix, &y, &sim);
+    let res = fit(Hthc::new(), cfg, &mut model, &ds, &sim);
     assert!(res.alpha.iter().all(|a| a.is_finite()));
     assert!(res.v.iter().all(|v| v.is_finite()));
     // zero columns never move
@@ -254,14 +252,14 @@ fn gap_upper_bounds_suboptimality() {
     // long reference solve for a near-exact optimum
     let mut ref_model = Lasso::new(0.4);
     let (mut alpha, mut v) = (vec![0.0f32; g.n()], vec![0.0f32; g.d()]);
-    let ops = g.matrix.as_ops();
-    let opt = glm::solve_reference(&mut ref_model, ops, &g.targets, &mut alpha, &mut v, 800);
+    let ops = g.as_ops();
+    let opt = glm::solve_reference(&mut ref_model, ops, g.targets(), &mut alpha, &mut v, 800);
 
     let mut model = Lasso::new(0.4);
     let mut cfg = quick_cfg(0.0);
     cfg.max_epochs = 120;
     cfg.eval_every = 10;
-    let res = fit(Hthc::new(), cfg, &mut model, &g.matrix, &g.targets, &sim);
+    let res = fit(Hthc::new(), cfg, &mut model, &g, &sim);
     for p in &res.trace.points {
         let subopt = p.objective - opt;
         assert!(

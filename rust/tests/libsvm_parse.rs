@@ -1,0 +1,142 @@
+//! LIBSVM parser edge cases: what the hardened parser must tolerate
+//! (comments, blank lines, stray whitespace/CRLF, out-of-order feature
+//! indices) and what it must reject with a line number (malformed
+//! pairs, 0-based or duplicate indices, non-numeric fields) — both
+//! through the raw `libsvm::read` parser and through the
+//! `DatasetBuilder::path` pipeline that real callers use.
+
+use hthc::data::{libsvm, DatasetBuilder, Family};
+
+fn err_of(input: &str) -> String {
+    format!("{}", libsvm::read(input.as_bytes()).unwrap_err())
+}
+
+// ---------------------------------------------------------------------------
+// tolerated inputs
+// ---------------------------------------------------------------------------
+
+#[test]
+fn comments_blank_lines_and_whitespace_are_tolerated() {
+    let input = "\
+# full-line comment
++1 1:0.5 3:1.5   # trailing comment
+
+   \t
+-1 2:2.0\t4:0.25\x20\x20
+";
+    let s = libsvm::read(input.as_bytes()).unwrap();
+    assert_eq!(s.len(), 2);
+    assert_eq!(s[0].features, vec![(0, 0.5), (2, 1.5)]);
+    assert_eq!(s[1].features, vec![(1, 2.0), (3, 0.25)]);
+}
+
+#[test]
+fn crlf_line_endings_are_tolerated() {
+    let s = libsvm::read("+1 1:1.0\r\n-1 2:2.0\r\n".as_bytes()).unwrap();
+    assert_eq!(s.len(), 2);
+    assert_eq!(s[1].features, vec![(1, 2.0)]);
+}
+
+#[test]
+fn out_of_order_indices_are_sorted_on_ingest() {
+    let s = libsvm::read("+1 9:9.0 2:2.0 5:5.0".as_bytes()).unwrap();
+    assert_eq!(s[0].features, vec![(1, 2.0), (4, 5.0), (8, 9.0)]);
+}
+
+#[test]
+fn signed_and_scientific_values_parse() {
+    let s = libsvm::read("-1.5 1:-3e-2 2:+4.0".as_bytes()).unwrap();
+    assert_eq!(s[0].label, -1.5);
+    assert_eq!(s[0].features, vec![(0, -0.03), (1, 4.0)]);
+}
+
+// ---------------------------------------------------------------------------
+// rejected inputs, with line numbers
+// ---------------------------------------------------------------------------
+
+#[test]
+fn duplicate_feature_indices_error_with_line_number() {
+    // duplicates adjacent and after reordering both trip the check
+    let e = err_of("+1 1:1.0\n-1 3:1.0 3:2.0");
+    assert!(e.contains("line 2"), "{e}");
+    assert!(e.contains("duplicate feature index 3"), "{e}");
+
+    let e = err_of("+1 7:1.0 2:0.5 7:2.0");
+    assert!(e.contains("line 1") && e.contains("duplicate"), "{e}");
+}
+
+#[test]
+fn zero_based_index_errors_with_line_number() {
+    let e = err_of("+1 1:1.0\n\n+1 0:1.0");
+    assert!(e.contains("line 3"), "{e}");
+    assert!(e.contains("1-based"), "{e}");
+}
+
+#[test]
+fn malformed_pairs_error_with_line_number() {
+    for (input, line) in [
+        ("+1 abc", "line 1"),
+        ("+1 1:1.0\n-1 2:", "line 2"),
+        ("+1 1:1.0\n-1 :5", "line 2"),
+        ("+1 1:1.0\n+1 2:2.0\n-1 x:1", "line 3"),
+        ("nolabel", "line 1"),
+    ] {
+        let e = err_of(input);
+        assert!(e.contains(line), "{input:?}: {e}");
+    }
+}
+
+// comment lines must not advance the error line numbering incorrectly
+#[test]
+fn line_numbers_count_physical_lines() {
+    let e = err_of("# header\n# more\n+1 0:1");
+    assert!(e.contains("line 3"), "{e}");
+}
+
+// ---------------------------------------------------------------------------
+// through the builder pipeline (the path real callers use)
+// ---------------------------------------------------------------------------
+
+fn write_temp(name: &str, content: &str) -> std::path::PathBuf {
+    let path = std::env::temp_dir().join(format!("hthc-libsvm-{}-{name}", std::process::id()));
+    std::fs::write(&path, content).unwrap();
+    path
+}
+
+#[test]
+fn builder_loads_messy_but_valid_libsvm() {
+    let path = write_temp(
+        "ok.txt",
+        "# tiny classification set\n+1 3:0.9 1:1.2\n\n-1 2:0.5 # neg\n+1 2:1.1\r\n",
+    );
+    let ds = DatasetBuilder::path(&path)
+        .family(Family::Classification)
+        .build()
+        .unwrap();
+    std::fs::remove_file(&path).ok();
+    // classification orientation: coordinates = samples
+    assert_eq!(ds.n_cols(), 3);
+    assert_eq!(ds.n_rows(), 3); // max feature index
+    assert_eq!(ds.labels().unwrap(), &[1.0, -1.0, 1.0]);
+}
+
+#[test]
+fn builder_surfaces_parse_errors_with_file_and_line() {
+    let path = write_temp("bad.txt", "+1 1:1.0\n+1 4:4.0 4:5.0\n");
+    let err = DatasetBuilder::path(&path).build().unwrap_err();
+    let msg = format!("{err}");
+    std::fs::remove_file(&path).ok();
+    assert!(msg.contains("line 2"), "{msg}");
+    assert!(msg.contains("duplicate"), "{msg}");
+}
+
+#[test]
+fn builder_regression_orientation_from_file() {
+    let path = write_temp("reg.txt", "0.5 1:1.0 2:2.0\n-0.25 2:1.0\n");
+    let ds = DatasetBuilder::path(&path).build().unwrap();
+    std::fs::remove_file(&path).ok();
+    // regression orientation: rows = samples, columns = features
+    assert_eq!(ds.n_rows(), 2);
+    assert_eq!(ds.n_cols(), 2);
+    assert_eq!(ds.targets(), &[0.5, -0.25]);
+}

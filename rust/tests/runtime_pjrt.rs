@@ -6,11 +6,14 @@
 //! built — run `make artifacts` first for full coverage.
 
 use hthc::coordinator::hthc::GapBackend;
-use hthc::data::generator::{generate, DatasetKind, Family};
-use hthc::data::{ColumnOps, Matrix};
+use hthc::data::{ColumnOps, Dataset, DatasetKind, Family, Matrix};
 use hthc::glm::{GlmModel, Lasso, Ridge, SvmDual};
 use hthc::memory::TierSim;
 use hthc::runtime::{ArgData, GapService, XlaRuntime};
+
+fn generate(kind: DatasetKind, family: Family, scale: f64, seed: u64) -> Dataset {
+    Dataset::generated(kind, family, scale, seed)
+}
 
 fn runtime() -> Option<XlaRuntime> {
     let dir = hthc::runtime::default_artifacts_dir();
@@ -214,9 +217,9 @@ fn gap_service_backend_matches_native_task_a() {
     let kind = model.kind();
     let coords: Vec<usize> = (0..service.block_len().min(n)).map(|k| (k * 3) % n).collect();
     let z = service
-        .batch_gaps(&g.matrix, &coords, &w, &alpha, kind)
+        .batch_gaps(g.matrix(), &coords, &w, &alpha, kind)
         .expect("dense lasso must offload");
-    let ops = g.matrix.as_ops();
+    let ops = g.as_ops();
     for (i, &j) in coords.iter().enumerate() {
         let want = kind.gap(ops.dot(j, &w), alpha[j]);
         assert!(
@@ -234,7 +237,7 @@ fn gap_service_sparse_ell_offload_matches_native() {
     let service = GapService::new(&rt);
     // news20-like at a scale where d <= 2048 and col nnz <= 128
     let g = generate(DatasetKind::News20Like, Family::Regression, 0.06, 79);
-    let Matrix::Sparse(sm) = &g.matrix else { panic!("sparse expected") };
+    let Matrix::Sparse(sm) = g.matrix() else { panic!("sparse expected") };
     assert!(sm.n_rows() <= 2048, "d = {}", sm.n_rows());
     let d = sm.n_rows();
     let mut rng = hthc::util::Rng::new(17);
@@ -245,7 +248,7 @@ fn gap_service_sparse_ell_offload_matches_native() {
     let coords: Vec<usize> = (0..g.n()).filter(|&j| sm.nnz(j) <= 128).take(200).collect();
     assert!(!coords.is_empty());
     let z = service
-        .batch_gaps(&g.matrix, &coords, &w, &alpha, kind)
+        .batch_gaps(g.matrix(), &coords, &w, &alpha, kind)
         .expect("ELL offload must engage");
     for (i, &j) in coords.iter().enumerate() {
         let want = kind.gap(sm.dot(j, &w), alpha[j]);
@@ -260,7 +263,7 @@ fn gap_service_sparse_ell_offload_matches_native() {
     if let Some(big) = (0..g.n()).find(|&j| sm.nnz(j) > 128) {
         let mut coords2 = coords.clone();
         coords2[0] = big;
-        assert!(service.batch_gaps(&g.matrix, &coords2, &w, &alpha, kind).is_none());
+        assert!(service.batch_gaps(g.matrix(), &coords2, &w, &alpha, kind).is_none());
     }
 }
 
@@ -270,7 +273,7 @@ fn hthc_training_with_pjrt_backend_converges() {
     let service = GapService::new(&rt);
     let g = generate(DatasetKind::Tiny, Family::Regression, 1.0, 88);
     let mut model = Lasso::new(0.5);
-    let obj0 = model.objective(&vec![0.0; g.d()], &g.targets, &vec![0.0; g.n()]);
+    let obj0 = model.objective(&vec![0.0; g.d()], g.targets(), &vec![0.0; g.n()]);
     let sim = TierSim::default();
     let res = hthc::solver::Trainer::new()
         .solver(hthc::solver::Hthc::with_backend(&service))
@@ -286,11 +289,11 @@ fn hthc_training_with_pjrt_backend_converges() {
             use_pjrt_gaps: true,
             ..Default::default()
         })
-        .fit_with(&mut model, &g.matrix, &g.targets, &sim);
+        .fit_with(&mut model, &g, &sim);
     assert!(res.converged, "{}", res.summary());
     assert!(res.a_updates() > 0, "backend path must be exercised");
     // v consistency preserved end-to-end
-    let v2 = match &g.matrix {
+    let v2 = match g.matrix() {
         Matrix::Dense(m) => m.matvec_alpha(&res.alpha),
         _ => unreachable!(),
     };

@@ -6,7 +6,7 @@
 
 use hthc::baselines::PasscodeMode;
 use hthc::coordinator::Selection;
-use hthc::data::generator::{generate, DatasetKind, Family};
+use hthc::data::{Dataset, DatasetKind, Family};
 use hthc::glm::Lasso;
 use hthc::memory::TierSim;
 use hthc::solver::{
@@ -16,6 +16,11 @@ use hthc::util::Args;
 
 fn args(s: &str) -> Args {
     Args::parse(s.split_whitespace().map(|t| t.to_string()))
+}
+
+/// Every dataset in this suite goes through the one builder pipeline.
+fn generate(kind: DatasetKind, family: Family, scale: f64, seed: u64) -> Dataset {
+    Dataset::generated(kind, family, scale, seed)
 }
 
 // ---------------------------------------------------------------------------
@@ -103,7 +108,7 @@ fn solver_matrix_smoke() {
                     .timeout_secs(20.0)
                     .eval_every(1),
             )
-            .fit_with(&mut model, &g.matrix, &g.targets, &sim);
+            .fit_with(&mut model, &g, &sim);
         assert_eq!(res.solver, name, "report is tagged with the engine");
         assert!(res.epochs >= 1, "{name}: must run");
         assert!(!res.trace.points.is_empty(), "{name}: must trace");
@@ -139,7 +144,7 @@ fn warm_start_resumes_from_prior_iterate() {
     let first = Trainer::new()
         .threads(1, 1, 1)
         .stop_when(stop)
-        .fit_with(&mut model, &g.matrix, &g.targets, &sim);
+        .fit_with(&mut model, &g, &sim);
     let first_final = first.trace.final_objective().unwrap();
     let first_initial = first.trace.points.first().unwrap().objective;
     assert!(first_final < first_initial);
@@ -149,7 +154,7 @@ fn warm_start_resumes_from_prior_iterate() {
         .threads(1, 1, 1)
         .stop_when(StopWhen::gap_below(0.0).max_epochs(2).eval_every(1).timeout_secs(20.0))
         .warm_start(first.alpha.clone())
-        .fit_with(&mut model2, &g.matrix, &g.targets, &sim);
+        .fit_with(&mut model2, &g, &sim);
     let resumed_first = resumed.trace.points.first().unwrap().objective;
     assert!(
         resumed_first <= first_final * 1.01 + 1e-9,
@@ -172,7 +177,7 @@ fn warm_start_on_st_baseline() {
         if let Some(a) = warm {
             t = t.warm_start(a);
         }
-        t.fit_with(model, &g.matrix, &g.targets, &sim)
+        t.fit_with(model, &g, &sim)
     };
     let first = run(None, &mut model);
     let mut model2 = Lasso::new(0.3);
@@ -213,7 +218,7 @@ fn on_epoch_callback_stops_any_engine() {
                 seen += 1;
                 seen >= 2 // stop after the second evaluation
             })
-            .fit_with(&mut model, &g.matrix, &g.targets, &sim);
+            .fit_with(&mut model, &g, &sim);
         assert!(res.converged, "{name}: callback stop marks convergence");
         assert!(res.epochs <= 4, "{name}: stopped early ({} epochs)", res.epochs);
     }
@@ -231,7 +236,7 @@ fn epoch_cap_binds_every_engine() {
             .threads(1, 1, 1)
             .batch_frac(0.5)
             .stop_when(StopWhen::gap_below(0.0).max_epochs(2).eval_every(1).timeout_secs(20.0))
-            .fit_with(&mut model, &g.matrix, &g.targets, &sim);
+            .fit_with(&mut model, &g, &sim);
         assert_eq!(res.epochs, 2, "{name}");
         assert!(!res.converged, "{name}: gap_tol 0 must not converge");
     }

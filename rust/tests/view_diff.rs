@@ -1,0 +1,205 @@
+//! Differential tests for `DatasetView`: a view must agree with its
+//! parent matrix on the selected columns — *bitwise* for `dot`,
+//! `dots_block`, `sq_norm` and `axpy`, because the view forwards the
+//! very same kernel calls the parent would issue (no re-summation, no
+//! re-chunking differences).  Checked across all three representations
+//! (dense / sparse / quantized, each built through the
+//! `DatasetBuilder::represent` stage) and across every available kernel
+//! backend.
+//!
+//! Backend flipping uses `kernels::set_backend`, which is process
+//! global — all dispatched comparisons live in the single
+//! `view_forwarding_is_bitwise_everywhere` test so concurrent tests in
+//! this binary never observe a mid-flight backend switch.
+
+use hthc::data::{
+    BlockOps, ColumnOps, Dataset, DatasetBuilder, DatasetKind, Family, Represent,
+};
+use hthc::kernels::{self, Backend, BLOCK_COLS};
+use hthc::util::Rng;
+use std::sync::Mutex;
+
+/// `set_backend` is process-global; every test whose bitwise assertion
+/// spans two dispatched calls serializes here so a concurrent backend
+/// flip cannot land between them.
+static KERNEL_LOCK: Mutex<()> = Mutex::new(());
+
+/// The three representations over the same generated source.
+fn representations(seed: u64) -> Vec<(&'static str, Dataset)> {
+    let build = |r: Represent| {
+        DatasetBuilder::generated(DatasetKind::Tiny, Family::Regression)
+            .scale(2.0) // 128 x 64: spans several BLOCK_COLS tiles
+            .seed(seed)
+            .represent(r)
+            .build()
+            .unwrap()
+    };
+    vec![
+        ("dense", build(Represent::Dense)),
+        ("sparse", build(Represent::Sparse)),
+        ("quantized", build(Represent::Quantized)),
+    ]
+}
+
+/// Column selections that exercise both `ColSel` arms and the
+/// translation tiling: ranges, shuffled subsets, duplicates, reversed.
+fn selections(n: usize) -> Vec<(&'static str, Vec<usize>)> {
+    let mut rng = Rng::new(12001);
+    let mut shuffled: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut shuffled);
+    vec![
+        ("full", (0..n).collect()),
+        ("range-tail", (n / 3..n).collect()),
+        ("single", vec![n / 2]),
+        ("strided", (0..n).step_by(3).collect()),
+        ("shuffled", shuffled),
+        ("reversed", (0..n).rev().collect()),
+        ("duplicates", vec![1; BLOCK_COLS + 2]),
+    ]
+}
+
+/// `dot`, `dots_block`, `sq_norm`, `axpy` of the view vs the parent on
+/// the same columns — bitwise.
+fn assert_view_matches_parent(label: &str, ds: &Dataset, cols: &[usize], w: &[f32]) {
+    let view = ds.col_subset(cols.to_vec());
+    let parent = ds.as_block_ops();
+    assert_eq!(view.n_cols(), cols.len());
+    assert_eq!(view.n_rows(), ds.n_rows());
+
+    // per-column dot / sq_norm / axpy
+    for (k, &j) in cols.iter().enumerate() {
+        let vd = view.dot(k, w);
+        let pd = parent.dot(j, w);
+        assert_eq!(vd.to_bits(), pd.to_bits(), "{label}: dot col {j}");
+        assert_eq!(
+            view.sq_norm(k).to_bits(),
+            parent.sq_norm(j).to_bits(),
+            "{label}: sq_norm col {j}"
+        );
+        assert_eq!(view.nnz(k), parent.nnz(j), "{label}: nnz col {j}");
+        assert_eq!(view.col_bytes(k), parent.col_bytes(j), "{label}: col_bytes {j}");
+
+        let mut va = w.to_vec();
+        let mut pa = w.to_vec();
+        view.axpy(k, 0.75, &mut va);
+        parent.axpy(j, 0.75, &mut pa);
+        for (r, (x, y)) in va.iter().zip(&pa).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{label}: axpy col {j} row {r}");
+        }
+
+        // dot_range windows translate too
+        let d = ds.n_rows();
+        let (lo, hi) = (0, d / 2 / 64 * 64); // group-aligned for quantized
+        if hi > lo {
+            assert_eq!(
+                view.dot_range(k, w, lo, hi).to_bits(),
+                parent.dot_range(j, w, lo, hi).to_bits(),
+                "{label}: dot_range col {j}"
+            );
+        }
+    }
+
+    // blocked bulk dots: view tiling must reproduce the parent's exact
+    // chunking over the same translated list
+    let mut out_view = vec![0.0f32; cols.len()];
+    let mut out_parent = vec![0.0f32; cols.len()];
+    view.dots_block(&(0..cols.len()).collect::<Vec<_>>(), w, &mut out_view);
+    parent.dots_block(cols, w, &mut out_parent);
+    for (k, (a, b)) in out_view.iter().zip(&out_parent).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "{label}: dots_block slot {k}");
+    }
+}
+
+#[test]
+fn view_forwarding_is_bitwise_everywhere() {
+    let _l = KERNEL_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let ambient: Backend = kernels::backend();
+    for back in kernels::available_backends() {
+        kernels::set_backend(back);
+        for (repr, ds) in representations(12002) {
+            let mut rng = Rng::new(12003);
+            let w: Vec<f32> = (0..ds.n_rows()).map(|_| rng.normal()).collect();
+            for (sel_label, cols) in selections(ds.n_cols()) {
+                let label = format!("{repr}/{sel_label}[{}]", back.name());
+                assert_view_matches_parent(&label, &ds, &cols, &w);
+            }
+        }
+    }
+    // restore the ambient dispatch for the rest of the process
+    kernels::set_backend(ambient);
+}
+
+#[test]
+fn split_views_partition_and_score() {
+    let ds = DatasetBuilder::generated(DatasetKind::Tiny, Family::Regression)
+        .seed(12004)
+        .build()
+        .unwrap();
+    let (train, val) = ds.split(0.8, 99);
+    assert!(!train.is_empty() && !val.is_empty());
+    assert_eq!(train.len() + val.len(), ds.n_cols());
+    // no overlap
+    let mut seen = vec![false; ds.n_cols()];
+    for k in 0..train.len() {
+        seen[train.parent_col(k)] = true;
+    }
+    for k in 0..val.len() {
+        assert!(!seen[val.parent_col(k)], "overlapping split");
+    }
+    // a consumer taking &dyn BlockOps runs unchanged on the view:
+    // total_gap over the validation columns with zero duals
+    let model = hthc::glm::Lasso::new(0.3);
+    let v = vec![0.0f32; ds.n_rows()];
+    let zeros = vec![0.0f32; val.len()];
+    let gap = hthc::glm::total_gap(&model, &val, &v, ds.targets(), &zeros);
+    assert!(gap.is_finite());
+}
+
+#[test]
+fn materialized_split_trains_and_matches_view_columns() {
+    let _l = KERNEL_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let ds = DatasetBuilder::generated(DatasetKind::Tiny, Family::Regression)
+        .seed(12005)
+        .build()
+        .unwrap();
+    let (train_view, _) = ds.split(0.75, 5);
+    let train = train_view.materialize();
+    assert_eq!(train.n_cols(), train_view.len());
+    // materialized columns are bitwise the view's columns
+    let mut rng = Rng::new(12006);
+    let w: Vec<f32> = (0..ds.n_rows()).map(|_| rng.normal()).collect();
+    for k in 0..train.n_cols() {
+        assert_eq!(
+            train.as_ops().dot(k, &w).to_bits(),
+            train_view.dot(k, &w).to_bits(),
+            "col {k}"
+        );
+    }
+    // and the materialized subset is a real trainable Dataset
+    let mut model = hthc::glm::Lasso::new(0.3);
+    let sim = hthc::memory::TierSim::default();
+    let res = hthc::solver::Trainer::new()
+        .threads(1, 1, 1)
+        .stop_when(hthc::solver::StopWhen::gap_below(0.0).max_epochs(5).eval_every(1))
+        .fit_with(&mut model, &train, &sim);
+    assert_eq!(res.alpha.len(), train.n_cols());
+}
+
+#[test]
+fn shards_cover_every_column_exactly_once() {
+    let ds = DatasetBuilder::generated(DatasetKind::Tiny, Family::Regression)
+        .seed(12007)
+        .build()
+        .unwrap();
+    for k in [1usize, 3, 7, ds.n_cols(), ds.n_cols() + 5] {
+        let shards = ds.view().shards(k);
+        assert_eq!(shards.len(), k);
+        let mut count = vec![0usize; ds.n_cols()];
+        for s in &shards {
+            for i in 0..s.len() {
+                count[s.parent_col(i)] += 1;
+            }
+        }
+        assert!(count.iter().all(|&c| c == 1), "k={k}: {count:?}");
+    }
+}
