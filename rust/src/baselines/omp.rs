@@ -127,35 +127,35 @@ pub(crate) fn fit(p: &mut Problem<'_>, mode: OmpMode) -> FitReport {
         // --- "task A": parallel for refreshing all gap values ---------
         // (the naive port recomputes the full z each epoch, serially
         // with respect to B — no concurrent heterogeneous tasks).  Each
-        // worker claims a whole column *block* and computes its dots in
+        // worker drains its own shard of the tile scheduler (stealing
+        // from the heaviest remainder) and computes each tile's dots in
         // one blocked pass over w (the §IV-A/IV-D sweep backend).
         let v_snap = v.snapshot();
         let mut w = vec![0.0f32; d];
         crate::kernels::map2_into(&mut w, &v_snap, y, |vj, yj| kind.w_of(vj, yj));
         let a_now = alpha.snapshot();
-        let next_a = AtomicUsize::new(0);
+        let sched =
+            crate::sched::TileScheduler::new(n, cfg.t_a.max(1), crate::kernels::BLOCK_COLS);
         let z_cell: Vec<std::sync::atomic::AtomicU32> =
             (0..n).map(|_| std::sync::atomic::AtomicU32::new(0)).collect();
         std::thread::scope(|s| {
-            for _ in 0..cfg.t_a.max(1) {
-                s.spawn(|| {
+            for tid in 0..cfg.t_a.max(1) {
+                let (sched, z_cell, w) = (&sched, &z_cell, &w);
+                let a_now = &a_now;
+                s.spawn(move || {
                     const B: usize = crate::kernels::BLOCK_COLS;
                     let mut idx = [0usize; B];
                     let mut u = [0.0f32; B];
-                    loop {
-                        let k = next_a.fetch_add(B, Ordering::Relaxed);
-                        if k >= n {
-                            break;
+                    let mut charges = crate::memory::ReadBatcher::new(sim, home);
+                    while let Some(t) = sched.claim(tid) {
+                        let m = t.len();
+                        for (slot, j) in idx.iter_mut().zip(t.lo..t.hi) {
+                            *slot = j;
                         }
-                        let end = (k + B).min(n);
-                        for (t, j) in idx.iter_mut().zip(k..end) {
-                            *t = j;
-                        }
-                        let m = end - k;
-                        ops.dots_block(&idx[..m], &w, &mut u[..m]);
-                        for (j, &uj) in (k..end).zip(&u) {
+                        ops.dots_block(&idx[..m], w, &mut u[..m]);
+                        for (j, &uj) in (t.lo..t.hi).zip(&u) {
                             z_cell[j].store(kind.gap(uj, a_now[j]).to_bits(), Ordering::Relaxed);
-                            sim.read(home, ops.col_bytes(j));
+                            charges.add(ops.col_bytes(j));
                         }
                     }
                 });

@@ -43,7 +43,9 @@ pub(crate) fn fit(p: &mut Problem<'_>) -> FitReport {
     // we still go through WorkingSet so the inner loops are identical to
     // task B's — the full index set is swapped in once (the paper's ST
     // keeps D in DRAM; v/alpha in MCDRAM, which TierSim reflects by the
-    // per-update charges inside task_b::run_epoch).
+    // per-update charges inside task_b::run_epoch).  Group claiming
+    // inside run_epoch goes through the shard-pinned TileScheduler, so
+    // ST's full sweep inherits the same stealing as HTHC's batches.
     let all: Vec<usize> = (0..n).collect();
     let mut ws = WorkingSet::new(data, n);
     ws.swap_in(data, &all, sim, home);

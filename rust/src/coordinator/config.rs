@@ -41,6 +41,13 @@ pub struct HthcConfig {
     /// feedback controller instead of an offline table).  None = fixed
     /// `batch_frac`.
     pub adaptive_r_tilde: Option<f64>,
+    /// Refine the `(t_a, t_b, v_b, m, tile)` split after a few epochs
+    /// from *measured* tier traffic and timings (the §IV-F program over
+    /// an [`crate::coordinator::AutoTuner`]-calibrated table instead of
+    /// installation-time constants).
+    pub autotune: bool,
+    /// Epochs to observe before the autotuner refines the split.
+    pub autotune_warmup: usize,
 }
 
 impl Default for HthcConfig {
@@ -59,8 +66,16 @@ impl Default for HthcConfig {
             seed: 42,
             use_pjrt_gaps: false,
             adaptive_r_tilde: None,
+            autotune: false,
+            autotune_warmup: 3,
         }
     }
+}
+
+/// Hardware threads available to this process, when the platform can
+/// tell us (`std::thread::available_parallelism`).
+pub fn host_threads() -> Option<usize> {
+    std::thread::available_parallelism().ok().map(|n| n.get())
 }
 
 impl HthcConfig {
@@ -74,7 +89,10 @@ impl HthcConfig {
         self.t_a + self.t_b * self.v_b
     }
 
-    /// Panic-early validation with actionable messages.
+    /// Panic-early validation with actionable messages.  Thread-count
+    /// *oversubscription* is a warning, not an error: the paper's
+    /// splits assume a 72-core KNL and must still run (slowly) on small
+    /// hosts, and the oversubscription CI job depends on that.
     pub fn validate(&self) {
         assert!(self.t_a >= 1, "t_a must be >= 1");
         assert!(self.t_b >= 1, "t_b must be >= 1");
@@ -85,6 +103,48 @@ impl HthcConfig {
         );
         assert!(self.lock_chunk >= 1, "lock_chunk must be >= 1");
         assert!(self.eval_every >= 1, "eval_every must be >= 1");
+        assert!(self.autotune_warmup >= 1, "autotune_warmup must be >= 1");
+        if let Some(budget) = host_threads() {
+            if let Some(msg) = self.oversubscription_warning(budget) {
+                eprintln!("warning: {msg}");
+            }
+        }
+    }
+
+    /// The warning text when `t_a + t_b * v_b` oversubscribes a
+    /// `budget`-thread machine, else `None`.  Split out from
+    /// [`HthcConfig::validate`] so tests can probe the message without
+    /// depending on the host's core count.
+    pub fn oversubscription_warning(&self, budget: usize) -> Option<String> {
+        let total = self.total_threads();
+        if total > budget {
+            Some(format!(
+                "config uses {total} threads (t_a={} + t_b={} * v_b={}) but the host \
+                 has {budget}; expect contention — consider `--autotune` or \
+                 clamped_to({budget})",
+                self.t_a, self.t_b, self.v_b
+            ))
+        } else {
+            None
+        }
+    }
+
+    /// A copy shrunk to fit a `budget`-thread machine: first collapse
+    /// the vector lanes (`v_b -> 1`, the knob with the worst
+    /// oversubscription behavior — barrier spins), then shed B groups,
+    /// then A threads, never dropping either task below one thread.
+    pub fn clamped_to(&self, budget: usize) -> HthcConfig {
+        let mut c = self.clone();
+        if c.total_threads() > budget {
+            c.v_b = 1;
+        }
+        while c.total_threads() > budget && c.t_b > 1 {
+            c.t_b -= 1;
+        }
+        while c.total_threads() > budget && c.t_a > 1 {
+            c.t_a -= 1;
+        }
+        c
     }
 }
 
@@ -113,5 +173,37 @@ mod tests {
     #[should_panic]
     fn zero_threads_rejected() {
         HthcConfig { t_b: 0, ..Default::default() }.validate();
+    }
+
+    #[test]
+    fn oversubscription_warns_but_does_not_reject() {
+        let c = HthcConfig { t_a: 6, t_b: 4, v_b: 2, ..Default::default() };
+        // 14 threads on an explicit 8-thread budget: warning text names
+        // the arithmetic; a roomy budget stays silent.
+        let msg = c.oversubscription_warning(8).expect("14 > 8 warns");
+        assert!(msg.contains("14 threads"), "{msg}");
+        assert!(msg.contains("has 8"), "{msg}");
+        assert!(c.oversubscription_warning(14).is_none(), "exact fit is fine");
+        assert!(c.oversubscription_warning(64).is_none());
+        // validate() must not panic for oversubscribed-but-sane configs
+        c.validate();
+    }
+
+    #[test]
+    fn clamp_sheds_lanes_then_groups_then_a_threads() {
+        let c = HthcConfig { t_a: 6, t_b: 4, v_b: 2, ..Default::default() };
+        // budget 8: v_b -> 1 (10 left), then t_b 4 -> 2 (8 fits)
+        let c8 = c.clamped_to(8);
+        assert_eq!((c8.t_a, c8.t_b, c8.v_b), (6, 2, 1));
+        assert!(c8.total_threads() <= 8);
+        // budget 2: both tasks keep their last thread
+        let c2 = c.clamped_to(2);
+        assert_eq!((c2.t_a, c2.t_b, c2.v_b), (1, 1, 1));
+        assert_eq!(c2.total_threads(), 2);
+        // already-fitting configs come back unchanged
+        let fit = HthcConfig { t_a: 2, t_b: 1, v_b: 1, ..Default::default() };
+        assert_eq!(fit.clamped_to(4), fit);
+        // the clamp result never warns on its own budget
+        assert!(c8.oversubscription_warning(8).is_none());
     }
 }

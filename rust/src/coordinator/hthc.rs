@@ -15,15 +15,18 @@
 //! AOT-compiled JAX/Pallas artifacts (the [`GapBackend`] hook, fulfilled
 //! by `crate::runtime`); python is never involved at run time.
 
-use super::config::HthcConfig;
+use super::config::{host_threads, HthcConfig};
 use super::gap_memory::GapMemory;
+use super::perf_model::{tile_cols_for, AutoTuner, EpochMeasurement};
 use super::selection::Selection;
 use super::shared_vec::SharedVector;
 use super::working_set::WorkingSet;
 use super::{task_a, task_b};
 use crate::data::Matrix;
 use crate::glm;
+use crate::memory::Tier;
 use crate::metrics::{ConvergenceTrace, PhaseTimes, StalenessHistogram};
+use crate::sched::TileScheduler;
 use crate::solver::{keys, notify_epoch, EpochEvent, Extras, FitReport, Problem};
 use crate::threadpool::WorkerPool;
 use crate::util::{Rng, Timer};
@@ -70,11 +73,13 @@ impl HthcSolver {
     /// [`crate::solver::Hthc`]).  `problem.cfg` is expected to match
     /// `self.config` — the pools were sized from it.
     pub(crate) fn fit_problem(
-        &self,
+        &mut self,
         problem: &mut Problem<'_>,
         backend: Option<&dyn GapBackend>,
     ) -> FitReport {
-        let cfg = &self.config;
+        // `&mut self` because autotuning may re-size the pools mid-run;
+        // cfg is cloned so the borrow does not pin the whole solver.
+        let cfg = self.config.clone();
         let data = problem.data.matrix();
         let y = problem.data.targets();
         // bulk matrix reads are charged against the dataset's recorded
@@ -86,8 +91,8 @@ impl HthcSolver {
         let model = &mut *problem.model;
         let (d, n) = (data.n_rows(), data.n_cols());
         let mut m_batch = cfg.batch_size(n);
-        // headroom for the adaptive controller to grow the batch
-        let m_slots = if cfg.adaptive_r_tilde.is_some() {
+        // headroom for the adaptive controller / autotuner to grow m
+        let m_slots = if cfg.adaptive_r_tilde.is_some() || cfg.autotune {
             (m_batch * 4).clamp(m_batch, n)
         } else {
             m_batch
@@ -108,6 +113,19 @@ impl HthcSolver {
         let mut converged = false;
         let mut epochs = 0usize;
         let mut phases = PhaseTimes::default();
+
+        // Run-split state the autotuner may revise mid-run; the pools
+        // and the task-A scheduler always reflect it.  One shard per A
+        // worker; tile granularity targets ~64 claims per shard.
+        let (mut t_b, mut v_b) = (cfg.t_b, cfg.v_b);
+        let t_a0 = self.pool_a.len().max(1);
+        let mut sched_a = TileScheduler::new(n, t_a0, tile_cols_for(n, t_a0));
+        let mut tuner = if cfg.autotune {
+            Some(AutoTuner::new(t_a0, t_b, v_b, cfg.autotune_warmup))
+        } else {
+            None
+        };
+        let thread_budget = host_threads().unwrap_or_else(|| cfg.total_threads());
 
         for epoch in 1..=cfg.max_epochs {
             epochs = epoch;
@@ -140,22 +158,59 @@ impl HthcSolver {
             let stop = AtomicBool::new(false);
             let snap = task_a::ASnapshot { w: &w_snap, alpha: &alpha_snap, kind, epoch: epoch as u32 };
             let seed_a = cfg.seed ^ (epoch as u64) << 20;
+            // tier counters bracket exactly the concurrent phase, so the
+            // autotuner sees the run traffic without swap/eval noise
+            let slow0 = sim.stats(Tier::Slow);
+            let fast0 = sim.stats(Tier::Fast);
             let (b_stats, a_updates) = std::thread::scope(|s| {
+                let sched = &sched_a;
                 let a_handle = s.spawn(|| match backend {
                     None => task_a::run_epoch(
-                        &self.pool_a, data, &snap, &gaps, &stop, sim, home, seed_a,
+                        &self.pool_a, data, &snap, &gaps, &stop, sim, home, sched,
                     ),
                     Some(be) => run_a_offload(be, data, &snap, &gaps, &stop, &mut Rng::new(seed_a)),
                 });
                 let items = task_b::WorkItem::from_batch(&batch);
                 let b_stats = task_b::run_epoch(
                     &self.pool_b, &ws, &items, &v, y, &alpha, kind,
-                    cfg.t_b, cfg.v_b, sim,
+                    t_b, v_b, sim,
                 );
                 stop.store(true, Ordering::Relaxed);
                 (b_stats, a_handle.join().expect("task A panicked"))
             });
-            phases.run_secs += tp.secs();
+            let run_secs = tp.secs();
+            phases.run_secs += run_secs;
+
+            // Autotune: observe the measured phase, and once warm,
+            // solve the §IV-F program over the *measured* costs and
+            // re-shape pools / scheduler / batch to the recommendation.
+            if let Some(t) = tuner.as_mut() {
+                let slow1 = sim.stats(Tier::Slow);
+                let fast1 = sim.stats(Tier::Fast);
+                t.observe(EpochMeasurement {
+                    run_secs,
+                    a_updates,
+                    b_updates: b_stats.updates,
+                    slow_read_bytes: slow1.read_bytes.saturating_sub(slow0.read_bytes),
+                    fast_read_bytes: fast1.read_bytes.saturating_sub(fast0.read_bytes),
+                });
+            }
+            if tuner.as_ref().is_some_and(|t| t.ready()) {
+                let t = tuner.take().expect("readiness was just checked");
+                let r_tilde = cfg.adaptive_r_tilde.unwrap_or(0.15);
+                let fracs = [0.02, 0.05, 0.08, 0.1, 0.15, 0.25];
+                if let Some(rec) = t.recommend(sim, n, r_tilde, &fracs, thread_budget) {
+                    if self.pool_a.len() != rec.t_a {
+                        self.pool_a = WorkerPool::with_name(rec.t_a, "hthc-a");
+                    }
+                    if self.pool_b.len() != rec.t_b * rec.v_b {
+                        self.pool_b = WorkerPool::with_name(rec.t_b * rec.v_b, "hthc-b");
+                    }
+                    (t_b, v_b) = (rec.t_b, rec.v_b);
+                    sched_a = TileScheduler::new(n, rec.t_a, rec.tile_cols);
+                    m_batch = rec.m.clamp(1, m_slots);
+                }
+            }
 
             // (6) bookkeeping + convergence.  The refresh fraction is
             // read BEFORE B's write-back so it measures task A only.
@@ -216,6 +271,15 @@ impl HthcSolver {
         extras.set_u64(keys::A_UPDATES, total_a);
         extras.set_u64(keys::B_UPDATES, total_b);
         extras.set_u64(keys::B_ZERO_DELTAS, total_zero);
+        if cfg.autotune {
+            // the split actually in effect at the end of the run (the
+            // recommendation once applied, else the starting config)
+            extras.set_u64(keys::AUTOTUNE_T_A, self.pool_a.len() as u64);
+            extras.set_u64(keys::AUTOTUNE_T_B, t_b as u64);
+            extras.set_u64(keys::AUTOTUNE_V_B, v_b as u64);
+            extras.set_u64(keys::AUTOTUNE_M, m_batch as u64);
+            extras.set_u64(keys::AUTOTUNE_TILE_COLS, sched_a.tile_cols() as u64);
+        }
         FitReport {
             solver: "hthc",
             alpha: alpha.snapshot(),
@@ -451,6 +515,43 @@ mod tests {
         let first = res.trace.points.first().unwrap().objective;
         let last = res.trace.final_objective().unwrap();
         assert!(last < first);
+    }
+
+    #[test]
+    fn autotune_reports_a_measured_split() {
+        let g = generate(DatasetKind::Tiny, Family::Regression, 2.0, 118);
+        let mut model = Lasso::new(0.3);
+        let res = fit(
+            HthcConfig {
+                t_a: 2,
+                t_b: 2,
+                v_b: 1,
+                batch_frac: 0.1,
+                autotune: true,
+                autotune_warmup: 2,
+                gap_tol: 0.0,
+                max_epochs: 12,
+                eval_every: 4,
+                timeout_secs: 30.0,
+                ..Default::default()
+            },
+            &mut model,
+            &g,
+        );
+        // the split in effect is reported through extras; the tile
+        // granularity is scheduler-legal (block-aligned, nonzero)
+        let t_a = res.extras.u64(keys::AUTOTUNE_T_A).expect("split reported");
+        let t_b = res.extras.u64(keys::AUTOTUNE_T_B).unwrap();
+        let v_b = res.extras.u64(keys::AUTOTUNE_V_B).unwrap();
+        let m = res.extras.u64(keys::AUTOTUNE_M).unwrap();
+        let tile = res.extras.u64(keys::AUTOTUNE_TILE_COLS).unwrap();
+        assert!(t_a >= 1 && t_b >= 1 && v_b >= 1 && m >= 1);
+        assert!(tile >= crate::kernels::BLOCK_COLS as u64);
+        assert_eq!(tile % crate::kernels::BLOCK_COLS as u64, 0);
+        // still optimizes while retuning
+        let first = res.trace.points.first().unwrap().objective;
+        let last = res.trace.final_objective().unwrap();
+        assert!(last < first, "{first} -> {last}");
     }
 
     #[test]

@@ -16,7 +16,9 @@
 //! pools (§III, Fig. 1).
 //!
 //! The §IV-F performance model ([`perf_model`]) chooses
-//! `m, T_A, T_B, V_B` from a measured table of per-update times.
+//! `m, T_A, T_B, V_B` from a measured table of per-update times; in
+//! `--autotune` mode the [`AutoTuner`] re-solves the same program from
+//! live [`crate::memory::TierSim`] counters and per-epoch timings.
 
 pub mod config;
 pub mod gap_memory;
@@ -29,10 +31,12 @@ pub mod task_a;
 pub mod task_b;
 pub mod working_set;
 
-pub use config::HthcConfig;
+pub use config::{host_threads, HthcConfig};
 pub use gap_memory::GapMemory;
 pub use hthc::HthcSolver;
-pub use perf_model::{PerfModel, Recommendation};
+pub use perf_model::{
+    tile_cols_for, AutoTuner, EpochMeasurement, MeasuredCosts, PerfModel, Recommendation,
+};
 pub use search::{grid_search, near_best, SearchGrid, SearchResult};
 pub use selection::Selection;
 pub use shared_vec::SharedVector;

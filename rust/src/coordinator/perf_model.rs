@@ -45,6 +45,20 @@ pub struct Recommendation {
     pub epoch_secs: f64,
     /// Modeled fraction of z refreshed per epoch.
     pub refresh_frac: f64,
+    /// Column-tile granularity for the [`crate::sched::TileScheduler`]
+    /// at the recommended `t_a` (BLOCK_COLS-aligned).
+    pub tile_cols: usize,
+}
+
+/// Pick a tile granularity for a scheduler over `n` columns and `t_a`
+/// workers: aim for ~64 tiles per shard (enough claims that stealing
+/// can balance, few enough that claim overhead stays negligible),
+/// rounded down to a [`crate::kernels::BLOCK_COLS`] multiple and never
+/// below one block.
+pub fn tile_cols_for(n: usize, t_a: usize) -> usize {
+    let b = crate::kernels::BLOCK_COLS;
+    let shard = n / t_a.max(1);
+    ((shard / 64) / b * b).max(b)
 }
 
 /// The calibrated table.
@@ -99,23 +113,7 @@ impl PerfModel {
         std::hint::black_box(acc);
         let per_elem_secs = secs / d_probe as f64;
 
-        // Measure spin-barrier crossing cost with 2 real participants —
-        // this is the per-barrier price V_B pays (3 crossings/update).
-        let sync_secs = {
-            let b = crate::threadpool::SpinBarrier::new(2);
-            let rounds = 2000;
-            let t = Timer::start();
-            std::thread::scope(|s| {
-                for _ in 0..2 {
-                    s.spawn(|| {
-                        for _ in 0..rounds {
-                            b.wait();
-                        }
-                    });
-                }
-            });
-            t.secs() / rounds as f64
-        };
+        let sync_secs = measure_sync_secs();
 
         let mut model = PerfModel {
             a_entries: Vec::new(),
@@ -240,6 +238,7 @@ impl PerfModel {
                             v_b: vb,
                             epoch_secs: epoch,
                             refresh_frac: refresh,
+                            tile_cols: tile_cols_for(n, ta),
                         };
                         if best.map_or(true, |b| cand.epoch_secs < b.epoch_secs) {
                             best = Some(cand);
@@ -257,6 +256,209 @@ fn dedup_sorted(it: impl Iterator<Item = usize>) -> Vec<usize> {
     v.sort_unstable();
     v.dedup();
     v
+}
+
+/// Measure the spin-barrier crossing cost with 2 real participants —
+/// the per-barrier price V_B pays (3 crossings/update).  Shared by
+/// [`PerfModel::calibrate`] and [`AutoTuner`].
+fn measure_sync_secs() -> f64 {
+    let b = crate::threadpool::SpinBarrier::new(2);
+    let rounds = 2000;
+    let t = Timer::start();
+    std::thread::scope(|s| {
+        for _ in 0..2 {
+            s.spawn(|| {
+                for _ in 0..rounds {
+                    b.wait();
+                }
+            });
+        }
+    });
+    t.secs() / rounds as f64
+}
+
+// --- Autotuning from measured traffic -----------------------------------
+
+/// What one concurrent A+B epoch actually cost, as observed by the
+/// solver: wall seconds of the run phase (swap/eval excluded) plus the
+/// update counts and the [`TierSim`] read-counter deltas over exactly
+/// that phase.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EpochMeasurement {
+    /// Wall seconds of the concurrent A+B phase.
+    pub run_secs: f64,
+    /// Task-A gap refreshes performed in the phase.
+    pub a_updates: u64,
+    /// Task-B coordinate updates performed in the phase.
+    pub b_updates: u64,
+    /// Slow-tier read-byte delta over the phase (task A's sweep).
+    pub slow_read_bytes: u64,
+    /// Fast-tier read-byte delta over the phase (task B's working set).
+    pub fast_read_bytes: u64,
+}
+
+/// Host costs distilled from the observed epochs — the measured
+/// replacement for the KNL constants in the modeled table.
+#[derive(Clone, Copy, Debug)]
+pub struct MeasuredCosts {
+    /// Slow-tier bytes one gap refresh streams (col read, as charged).
+    pub a_bytes_per_update: f64,
+    /// Aggregate slow-tier read bandwidth task A achieved (GB/s) at the
+    /// observed `t_a`.
+    pub agg_slow_gbs: f64,
+    /// Fast-tier bytes one coordinate update streams.
+    pub b_bytes_per_update: f64,
+    /// Observed wall seconds per task-B update (at the observed split).
+    pub b_update_secs: f64,
+    /// Measured spin-barrier crossing cost (secs).
+    pub sync_secs: f64,
+}
+
+/// Accumulates per-epoch measurements under one `(t_a, t_b, v_b)` split
+/// and, once enough epochs are in, solves the §IV-F program using the
+/// *measured* costs instead of the installation-time table: task A's
+/// curve is the observed aggregate bandwidth rescaled along the
+/// [`TierSim`] saturation shape, task B's is the observed per-update
+/// time with the measured sync term swapped for the candidate V_B's.
+pub struct AutoTuner {
+    t_a: usize,
+    t_b: usize,
+    v_b: usize,
+    warmup: usize,
+    epochs: Vec<EpochMeasurement>,
+    sync_secs: f64,
+}
+
+impl AutoTuner {
+    /// `t_a`/`t_b`/`v_b` are the split the observed epochs run under;
+    /// `warmup` is how many epochs to observe before recommending.
+    pub fn new(t_a: usize, t_b: usize, v_b: usize, warmup: usize) -> Self {
+        AutoTuner {
+            t_a: t_a.max(1),
+            t_b: t_b.max(1),
+            v_b: v_b.max(1),
+            warmup: warmup.max(1),
+            epochs: Vec::new(),
+            sync_secs: measure_sync_secs(),
+        }
+    }
+
+    /// Record one epoch's observation.
+    pub fn observe(&mut self, m: EpochMeasurement) {
+        self.epochs.push(m);
+    }
+
+    /// True once `warmup` epochs have been observed.
+    pub fn ready(&self) -> bool {
+        self.epochs.len() >= self.warmup
+    }
+
+    /// Number of epochs observed so far.
+    pub fn observed(&self) -> usize {
+        self.epochs.len()
+    }
+
+    /// Distill the observations; `None` until both tasks have done real
+    /// work under real traffic (all-zero counters cannot calibrate).
+    pub fn measured(&self) -> Option<MeasuredCosts> {
+        let mut secs = 0.0f64;
+        let (mut a_up, mut b_up, mut slow, mut fast) = (0u64, 0u64, 0u64, 0u64);
+        for e in &self.epochs {
+            secs += e.run_secs;
+            a_up += e.a_updates;
+            b_up += e.b_updates;
+            slow += e.slow_read_bytes;
+            fast += e.fast_read_bytes;
+        }
+        if a_up == 0 || b_up == 0 || slow == 0 || secs <= 0.0 {
+            return None;
+        }
+        Some(MeasuredCosts {
+            a_bytes_per_update: slow as f64 / a_up as f64,
+            agg_slow_gbs: slow as f64 / secs / 1e9,
+            b_bytes_per_update: fast as f64 / b_up as f64,
+            b_update_secs: secs / b_up as f64,
+            sync_secs: self.sync_secs,
+        })
+    }
+
+    /// Solve the §IV-F program over the measured costs: minimize
+    /// `m * t_B(T_B, V_B)` subject to task A refreshing at least
+    /// `r_tilde * n` gaps per epoch, `T_A + T_B * V_B <= thread_budget`.
+    /// `sim` supplies the saturation shapes used to extrapolate away
+    /// from the observed thread counts.
+    pub fn recommend(
+        &self,
+        sim: &TierSim,
+        n: usize,
+        r_tilde: f64,
+        fracs: &[f64],
+        thread_budget: usize,
+    ) -> Option<Recommendation> {
+        let c = self.measured()?;
+        let budget = thread_budget.max(2);
+
+        // Task A: per-update time at T threads.  Aggregate bandwidth is
+        // the *observed* figure rescaled along the saturation curve, so
+        // a_updates(epoch, T) = epoch * agg_bw(T) / bytes_per_update.
+        let base_gbs = sim.effective_gbs(Tier::Slow, self.t_a).max(1e-12);
+        let ta_secs = |t: usize| -> f64 {
+            let agg = c.agg_slow_gbs * sim.effective_gbs(Tier::Slow, t) / base_gbs;
+            c.a_bytes_per_update * t as f64 / (agg.max(1e-12) * 1e9)
+        };
+
+        // Task B: strip the observed split's sync term to get one
+        // lane's worth of work, then re-dress candidate (T_B, V_B)'s.
+        let sync_term =
+            |v: usize| if v > 1 { 3.0 * c.sync_secs * v as f64 } else { 0.0 };
+        let w_obs = c.b_update_secs * self.t_b as f64;
+        let w1 = ((w_obs - sync_term(self.v_b)) * self.v_b as f64).max(1e-12);
+        let tb_secs = |t_b: usize, v_b: usize| -> f64 {
+            let work = (w1 / v_b as f64 + sync_term(v_b)) / t_b as f64;
+            let bw_floor = c.b_bytes_per_update
+                / (sim.effective_gbs(Tier::Fast, t_b * v_b).max(1e-12) * 1e9);
+            work.max(bw_floor)
+        };
+
+        let cap = budget.min(32);
+        let t_as: Vec<usize> = (1..=cap).collect();
+        let t_bs: Vec<usize> = (1..=cap).collect();
+        let v_bs: Vec<usize> =
+            [1usize, 2, 4, 8].into_iter().filter(|&v| v < budget).collect();
+
+        let mut best: Option<Recommendation> = None;
+        for &frac in fracs {
+            let m = ((n as f64 * frac).round() as usize).clamp(1, n);
+            for &ta in &t_as {
+                let a_secs = ta_secs(ta);
+                for &tb in &t_bs {
+                    for &vb in &v_bs {
+                        if ta + tb * vb > budget {
+                            continue;
+                        }
+                        let epoch = m as f64 * tb_secs(tb, vb);
+                        let a_updates = epoch / a_secs * ta as f64;
+                        if a_updates < r_tilde * n as f64 {
+                            continue;
+                        }
+                        let cand = Recommendation {
+                            m,
+                            t_a: ta,
+                            t_b: tb,
+                            v_b: vb,
+                            epoch_secs: epoch,
+                            refresh_frac: (a_updates / n as f64).min(1.0),
+                            tile_cols: tile_cols_for(n, ta),
+                        };
+                        if best.map_or(true, |b| cand.epoch_secs < b.epoch_secs) {
+                            best = Some(cand);
+                        }
+                    }
+                }
+            }
+        }
+        best
+    }
 }
 
 #[cfg(test)]
@@ -332,5 +534,81 @@ mod tests {
             .recommend(10_000, 100_000, 0.05, &[0.02, 0.5], 72)
             .unwrap();
         assert_eq!(rec.m, 200, "should pick the small batch");
+    }
+
+    #[test]
+    fn tile_cols_is_block_aligned_and_floored() {
+        let b = crate::kernels::BLOCK_COLS;
+        assert_eq!(tile_cols_for(10, 4), b, "tiny shards floor at one block");
+        let big = tile_cols_for(1_000_000, 4);
+        assert_eq!(big % b, 0, "aligned to BLOCK_COLS");
+        assert!(big >= b);
+        // ~64 tiles per shard: 250k/64 ~ 3906, rounded down to a block
+        assert!(big <= 250_000 / 64 && big > 250_000 / 64 - b);
+        assert_eq!(tile_cols_for(0, 0), b, "degenerate inputs stay sane");
+    }
+
+    #[test]
+    fn autotuner_waits_for_warmup_and_real_counters() {
+        let mut t = AutoTuner::new(2, 2, 1, 2);
+        assert!(!t.ready());
+        // all-zero observations can never calibrate
+        t.observe(EpochMeasurement::default());
+        t.observe(EpochMeasurement::default());
+        assert!(t.ready());
+        assert!(t.measured().is_none(), "zero counters cannot calibrate");
+        let sim = TierSim::default();
+        assert!(t.recommend(&sim, 1000, 0.15, &[0.1], 8).is_none());
+    }
+
+    #[test]
+    fn autotuner_recommends_from_measured_counters() {
+        let mut t = AutoTuner::new(2, 2, 1, 1);
+        // synthetic but self-consistent epoch: 1s wall, A streamed 8 GB
+        // over 100k refreshes (80 KB/refresh), B did 50k updates over
+        // 2 GB of fast-tier traffic.
+        t.observe(EpochMeasurement {
+            run_secs: 1.0,
+            a_updates: 100_000,
+            b_updates: 50_000,
+            slow_read_bytes: 8 << 30,
+            fast_read_bytes: 2 << 30,
+        });
+        assert!(t.ready());
+        let c = t.measured().expect("nonzero counters calibrate");
+        assert!((c.a_bytes_per_update - (8u64 << 30) as f64 / 1e5).abs() < 1.0);
+        assert!(c.agg_slow_gbs > 0.0);
+        assert!(c.b_update_secs > 0.0 && c.sync_secs > 0.0);
+
+        let sim = TierSim::default();
+        let rec = t
+            .recommend(&sim, 100_000, 0.15, &[0.02, 0.05, 0.1, 0.25], 16)
+            .expect("feasible under a 16-thread budget");
+        assert!(rec.t_a >= 1 && rec.t_b >= 1 && rec.v_b >= 1);
+        assert!(rec.t_a + rec.t_b * rec.v_b <= 16, "budget respected");
+        assert!(rec.refresh_frac >= 0.15 - 1e-9, "staleness constraint holds");
+        assert!(rec.epoch_secs > 0.0);
+        assert_eq!(rec.tile_cols % crate::kernels::BLOCK_COLS, 0);
+        assert_eq!(rec.tile_cols, tile_cols_for(100_000, rec.t_a));
+    }
+
+    #[test]
+    fn autotuner_extrapolates_more_a_threads_along_saturation_curve() {
+        // starve A in the observation (tiny refresh rate): the
+        // recommendation must raise t_a above the observed 1 to meet
+        // the constraint, which only works if the saturation-curve
+        // extrapolation credits extra threads with more bandwidth.
+        let mut t = AutoTuner::new(1, 2, 1, 1);
+        t.observe(EpochMeasurement {
+            run_secs: 1.0,
+            a_updates: 1_000,
+            b_updates: 200_000,
+            slow_read_bytes: 1 << 28,
+            fast_read_bytes: 1 << 30,
+        });
+        let sim = TierSim::default();
+        if let Some(rec) = t.recommend(&sim, 1_000_000, 0.15, &[0.25], 32) {
+            assert!(rec.t_a > 1, "starved A needs more threads: {rec:?}");
+        }
     }
 }

@@ -40,6 +40,20 @@ impl SearchGrid {
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
+
+    /// The largest `t_a + t_b * v_b` any candidate in the grid uses
+    /// (0 for an empty grid) — checked against the host budget before
+    /// a search so oversubscribed grids warn once up front.
+    pub fn max_total_threads(&self) -> usize {
+        let ta = self.t_as.iter().copied().max().unwrap_or(0);
+        let tb = self.t_bs.iter().copied().max().unwrap_or(0);
+        let vb = self.v_bs.iter().copied().max().unwrap_or(0);
+        if self.is_empty() {
+            0
+        } else {
+            ta + tb * vb
+        }
+    }
 }
 
 /// One evaluated configuration.
@@ -74,6 +88,16 @@ pub fn grid_search(
     skip_v_b_on_sparse: bool,
 ) -> Vec<SearchResult> {
     let sparse = matches!(data.matrix(), Matrix::Sparse(_));
+    if let Some(budget) = super::config::host_threads() {
+        let max = grid.max_total_threads();
+        if max > budget {
+            eprintln!(
+                "warning: search grid peaks at {max} threads but the host has \
+                 {budget}; oversubscribed candidates will run slow (and rank \
+                 accordingly)"
+            );
+        }
+    }
     let mut out = Vec::new();
     for &frac in &grid.batch_fracs {
         for &t_a in &grid.t_as {
@@ -202,6 +226,24 @@ mod tests {
             true,
         );
         assert_eq!(results.len(), 1, "v_b > 1 rows skipped for sparse");
+    }
+
+    #[test]
+    fn max_total_threads_tracks_the_heaviest_candidate() {
+        let grid = SearchGrid {
+            batch_fracs: vec![0.1],
+            t_as: vec![1, 4],
+            t_bs: vec![2, 3],
+            v_bs: vec![1, 2],
+        };
+        assert_eq!(grid.max_total_threads(), 4 + 3 * 2);
+        let empty = SearchGrid {
+            batch_fracs: vec![],
+            t_as: vec![4],
+            t_bs: vec![2],
+            v_bs: vec![2],
+        };
+        assert_eq!(empty.max_total_threads(), 0);
     }
 
     #[test]

@@ -1,30 +1,38 @@
 //! Task A: the gap-memory updater (paper §III, §IV-A2).
 //!
-//! `T_A` threads sample coordinates uniformly at random and refresh
-//! `z_i = gap(<w, d_i>, alpha_i)` using the **epoch-start snapshot** of
-//! `(v, alpha)` ("A ... computes gap_i with the most recent (i.e.,
-//! obtained in the previous epoch) parameters", §III).  Because the
-//! snapshot is immutable for the whole epoch, A needs no synchronization
-//! at all (§IV-B: "Task A does not write to shared variables") — each
-//! thread only issues atomic stores into the gap memory.
+//! `T_A` threads refresh `z_i = gap(<w, d_i>, alpha_i)` using the
+//! **epoch-start snapshot** of `(v, alpha)` ("A ... computes gap_i with
+//! the most recent (i.e., obtained in the previous epoch) parameters",
+//! §III).  Because the snapshot is immutable for the whole epoch, A
+//! needs no synchronization at all (§IV-B: "Task A does not write to
+//! shared variables") — each thread only issues atomic stores into the
+//! gap memory.
 //!
 //! A runs until task B finishes its batch and raises `stop`; one thread
 //! per `z_i` update (§IV-A2: multiple threads per update risk deadlock
 //! on the stop signal).
 //!
-//! Both entry points sweep coordinates in *blocks* of
-//! [`kernels::BLOCK_COLS`] through [`crate::data::BlockOps`], so each
-//! cache line of the epoch-frozen `w` is reused across the whole block
-//! instead of re-streamed per column (the §IV-A/IV-D blocked-sweep
-//! backend) — task A spends its entire budget in these bulk dots.
+//! Both entry points sweep coordinates through the shard-pinned
+//! [`TileScheduler`]: each worker owns one contiguous column shard
+//! (exactly the [`DatasetView::shards`] split) and claims
+//! tile-granular column blocks from it, so every cache line of the
+//! epoch-frozen `w` is reused across a whole tile via
+//! [`crate::data::BlockOps`] (the §IV-A/IV-D blocked-sweep backend)
+//! *and* each worker's streams stay inside its own shard.  The
+//! run-until-stopped loop uses cyclic claims (the shard is revisited
+//! with period `shard/tile` and the rotation persists across epochs);
+//! `run_fixed` drains its coordinate list exactly once, with work
+//! stealing from the heaviest remaining shard.
+//!
+//! [`DatasetView::shards`]: crate::data::DatasetView::shards
 
 use super::gap_memory::GapMemory;
 use crate::data::Matrix;
 use crate::glm::ModelKind;
 use crate::kernels;
-use crate::memory::{Tier, TierSim};
+use crate::memory::{ReadBatcher, Tier, TierSim};
+use crate::sched::TileScheduler;
 use crate::threadpool::WorkerPool;
-use crate::util::Rng;
 use std::sync::atomic::{AtomicBool, Ordering};
 
 /// Epoch-frozen inputs for task A.
@@ -37,13 +45,15 @@ pub struct ASnapshot<'a> {
     pub epoch: u32,
 }
 
-/// Run task A on `pool` until `stop` is raised.  Returns the number of
-/// gap refreshes performed (also counted inside `gaps`).
+/// Run task A on `pool` until `stop` is raised, claiming column tiles
+/// from `sched` (built over all `n` columns with one shard per pool
+/// worker).  Returns the number of gap refreshes performed (also
+/// counted inside `gaps`).
 ///
 /// `home` is the tier the full matrix lives in (the dataset's recorded
-/// placement) — every bulk column read is charged there.  Each thread
-/// tests `stop` between blocks (a relaxed load — cheap on the hot
-/// path).
+/// placement) — every bulk column read is charged there, batched
+/// through [`ReadBatcher`].  Each thread tests `stop` between tiles (a
+/// relaxed load — cheap on the hot path).
 #[allow(clippy::too_many_arguments)]
 pub fn run_epoch(
     pool: &WorkerPool,
@@ -53,37 +63,32 @@ pub fn run_epoch(
     stop: &AtomicBool,
     sim: &TierSim,
     home: Tier,
-    seed: u64,
+    sched: &TileScheduler,
 ) -> u64 {
-    let n = data.n_cols();
     let ops = data.as_block_ops();
     let counter = std::sync::atomic::AtomicU64::new(0);
     pool.run(|tid| {
-        let mut rng = Rng::new(seed ^ (0x9E37 + tid as u64 * 0x1234_5678_9ABC));
+        let mut charges = ReadBatcher::new(sim, home);
         let mut local = 0u64;
-        let mut local_bytes = 0u64;
-        let mut block = [0usize; kernels::BLOCK_COLS];
-        let mut u = [0.0f32; kernels::BLOCK_COLS];
+        let tile_cols = sched.tile_cols();
+        let mut idx = vec![0usize; tile_cols];
+        let mut u = vec![0.0f32; tile_cols];
         while !stop.load(Ordering::Relaxed) {
-            // one blocked sweep per stop-flag check: BLOCK_COLS random
-            // coordinates share a single pass over w (duplicates within
-            // a block are harmless — last write wins, as always)
-            for j in block.iter_mut() {
-                *j = rng.below(n);
+            // one tile per stop-flag check: the whole tile shares a
+            // single blocked pass over w, and cyclic claims keep this
+            // worker inside its own shard (uniform aging of z)
+            let Some(t) = sched.claim_cyclic(tid) else { break };
+            let len = t.len();
+            for (slot, j) in idx[..len].iter_mut().zip(t.lo..t.hi) {
+                *slot = j;
             }
-            ops.dots_block(&block, snap.w, &mut u);
-            for (&j, &uj) in block.iter().zip(&u) {
+            ops.dots_block(&idx[..len], snap.w, &mut u[..len]);
+            for (&j, &uj) in idx[..len].iter().zip(&u[..len]) {
                 gaps.update(j, snap.kind.gap(uj, snap.alpha[j]), snap.epoch);
-                local_bytes += ops.col_bytes(j);
+                charges.add(ops.col_bytes(j));
             }
-            local += kernels::BLOCK_COLS as u64;
-            if local_bytes > (1 << 20) {
-                // batch the tier charges to keep atomics off the hot path
-                sim.read(home, local_bytes);
-                local_bytes = 0;
-            }
+            local += len as u64;
         }
-        sim.read(home, local_bytes);
         counter.fetch_add(local, Ordering::Relaxed);
     });
     counter.load(Ordering::Relaxed)
@@ -91,7 +96,11 @@ pub fn run_epoch(
 
 /// Sweep task A over an explicit list of coordinates exactly once (used
 /// by Fig. 7's fixed-update-budget sensitivity runs and by the PJRT
-/// offload path, which processes tile-sized coordinate blocks).
+/// offload path, which processes tile-sized coordinate blocks).  The
+/// list is drained through a per-call [`TileScheduler`] (indices into
+/// `coords`), so workers claim whole tiles of their own shard first and
+/// steal from the heaviest remainder; charges batch through
+/// [`ReadBatcher`] exactly like [`run_epoch`].
 pub fn run_fixed(
     pool: &WorkerPool,
     data: &Matrix,
@@ -102,24 +111,18 @@ pub fn run_fixed(
     home: Tier,
 ) {
     let ops = data.as_block_ops();
-    let next = std::sync::atomic::AtomicUsize::new(0);
-    pool.run(|_tid| {
-        let mut local_bytes = 0u64;
+    let sched = TileScheduler::new(coords.len(), pool.len().max(1), kernels::BLOCK_COLS);
+    pool.run(|tid| {
+        let mut charges = ReadBatcher::new(sim, home);
         let mut u = [0.0f32; kernels::BLOCK_COLS];
-        loop {
-            // claim a whole column block, not a single coordinate
-            let k = next.fetch_add(kernels::BLOCK_COLS, Ordering::Relaxed);
-            if k >= coords.len() {
-                break;
-            }
-            let blk = &coords[k..(k + kernels::BLOCK_COLS).min(coords.len())];
+        while let Some(t) = sched.claim(tid) {
+            let blk = &coords[t.lo..t.hi];
             ops.dots_block(blk, snap.w, &mut u[..blk.len()]);
             for (&j, &uj) in blk.iter().zip(&u) {
                 gaps.update(j, snap.kind.gap(uj, snap.alpha[j]), snap.epoch);
-                local_bytes += ops.col_bytes(j);
+                charges.add(ops.col_bytes(j));
             }
         }
-        sim.read(home, local_bytes);
     });
 }
 
@@ -153,6 +156,7 @@ mod tests {
         let stop = AtomicBool::new(false);
         let sim = TierSim::default();
         let pool = WorkerPool::with_name(2, "test-a");
+        let sched = TileScheduler::new(n, 2, kernels::BLOCK_COLS);
         let snap = ASnapshot { w: &w, alpha: &alpha, kind, epoch: 1 };
 
         // stop after a short delay from another thread
@@ -161,7 +165,7 @@ mod tests {
                 std::thread::sleep(std::time::Duration::from_millis(30));
                 stop.store(true, Ordering::Relaxed);
             });
-            run_epoch(&pool, &m, &snap, &gaps, &stop, &sim, Tier::Slow, 7)
+            run_epoch(&pool, &m, &snap, &gaps, &stop, &sim, Tier::Slow, &sched)
         });
         assert!(updates > 0);
         // values in z match the direct computation wherever refreshed
@@ -182,6 +186,32 @@ mod tests {
     }
 
     #[test]
+    fn cyclic_sweep_covers_the_whole_gap_memory() {
+        // enough tile claims to rotate through both shards: every
+        // coordinate must end up refreshed (the uniform-aging property
+        // random sampling only gave in expectation)
+        let (m, w, alpha, kind) = setup();
+        let n = m.n_cols();
+        let gaps = GapMemory::new(n);
+        let stop = AtomicBool::new(false);
+        let sim = TierSim::default();
+        let pool = WorkerPool::with_name(2, "test-a");
+        let sched = TileScheduler::new(n, 2, kernels::BLOCK_COLS);
+        let snap = ASnapshot { w: &w, alpha: &alpha, kind, epoch: 1 };
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                std::thread::sleep(std::time::Duration::from_millis(80));
+                stop.store(true, Ordering::Relaxed);
+            });
+            run_epoch(&pool, &m, &snap, &gaps, &stop, &sim, Tier::Slow, &sched)
+        });
+        let (updates, frac) = gaps.refresh_stats(1);
+        if updates >= n as u64 {
+            assert!((frac - 1.0).abs() < 1e-9, "full rotation refreshes everything");
+        }
+    }
+
+    #[test]
     fn run_fixed_touches_exactly_the_given_coords() {
         let (m, w, alpha, kind) = setup();
         let gaps = GapMemory::new(m.n_cols());
@@ -196,5 +226,6 @@ mod tests {
         for j in 0..m.n_cols() {
             assert_eq!(gaps.read(j).is_finite(), coords.contains(&j));
         }
+        assert!(sim.stats(Tier::Slow).read_bytes > 0, "run_fixed charges are batched but flushed");
     }
 }

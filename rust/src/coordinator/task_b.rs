@@ -2,9 +2,11 @@
 //! (paper §III, §IV-A2, §IV-B).
 //!
 //! `T_B` updater *groups* work concurrently; each group claims a
-//! *block* of coordinates at a time from a shared queue (one
-//! `fetch_add` per block instead of per coordinate) so that "each
-//! coordinate is processed exactly once" per epoch.  Within a group,
+//! *tile* of work items at a time from the shard-pinned
+//! [`TileScheduler`] (one `fetch_add` per tile instead of per
+//! coordinate, with work stealing from the heaviest remaining shard
+//! once a group drains its own) so that "each coordinate is processed
+//! exactly once" per epoch.  Within a group,
 //! `V_B` lanes split the vector work (dot + axpy) by row ranges and
 //! synchronize with the counter-barrier pattern of §IV-B:
 //!
@@ -25,14 +27,29 @@ use super::shared_vec::SharedVector;
 use super::working_set::WorkingSet;
 use crate::glm::ModelKind;
 use crate::memory::{Tier, TierSim};
+use crate::sched::TileScheduler;
 use crate::threadpool::{SpinBarrier, WorkerPool};
-use std::sync::atomic::{AtomicU32, AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+
+/// Lane-0's published claim: `(lo << 32) | hi` over the item list, or
+/// [`SPAN_DONE`] when the scheduler is drained.  One word, so the
+/// non-leader lanes read the whole tile with a single acquire load.
+const SPAN_DONE: u64 = u64::MAX;
+
+fn pack_span(lo: usize, hi: usize) -> u64 {
+    debug_assert!(hi < u32::MAX as usize, "item list fits u32 indices");
+    ((lo as u64) << 32) | hi as u64
+}
+
+fn unpack_span(s: u64) -> (usize, usize) {
+    ((s >> 32) as usize, (s & u32::MAX as u64) as usize)
+}
 
 /// Per-group shared state for the V_B-lane update protocol.
 struct Group {
     barrier: SpinBarrier,
     partials: Vec<AtomicU32>, // f32 bits, one per lane
-    base: AtomicUsize,        // first queue index of the claimed item block
+    span: AtomicU64,          // packed claimed item range (pack_span)
     delta: AtomicU32,         // f32 bits of the computed delta
 }
 
@@ -96,17 +113,19 @@ pub fn run_epoch(
         .map(|_| Group {
             barrier: SpinBarrier::new(v_b),
             partials: (0..v_b).map(|_| AtomicU32::new(0)).collect(),
-            base: AtomicUsize::new(usize::MAX),
+            span: AtomicU64::new(SPAN_DONE),
             delta: AtomicU32::new(0),
         })
         .collect();
-    let queue = AtomicUsize::new(0);
     let updates = AtomicU64::new(0);
     let zero_deltas = AtomicU64::new(0);
-    // Groups claim item *blocks*, not single items: one queue fetch_add
+    // Groups claim item *tiles*, not single items: one claim fetch_add
     // amortizes over `claim` coordinates (the §IV-D bulk-sweep claim
     // granularity), sized so small batches still spread across groups.
+    // The scheduler shards the item list one shard per group; a group
+    // that drains its shard steals from the heaviest remainder.
     let claim = (items.len() / (t_b * 8)).clamp(1, crate::kernels::BLOCK_COLS);
+    let sched = TileScheduler::new(items.len(), t_b, claim);
 
     pool.run(|wid| {
         let g = wid / v_b;
@@ -117,19 +136,21 @@ pub fn run_epoch(
         let hi = (lane + 1) * d / v_b;
         let mut local_bytes = 0u64;
         loop {
-            // Lane 0 claims the next item block and publishes its base.
+            // Lane 0 claims the next item tile and publishes its span.
             if lane == 0 {
-                let k = queue.fetch_add(claim, Ordering::Relaxed);
-                group
-                    .base
-                    .store(if k < items.len() { k } else { usize::MAX }, Ordering::Release);
+                let span = match sched.claim(g) {
+                    Some(t) => pack_span(t.lo, t.hi),
+                    None => SPAN_DONE,
+                };
+                group.span.store(span, Ordering::Release);
             }
-            group.barrier.wait(); // block published
-            let base = group.base.load(Ordering::Acquire);
-            if base == usize::MAX {
+            group.barrier.wait(); // tile published
+            let span = group.span.load(Ordering::Acquire);
+            if span == SPAN_DONE {
                 break;
             }
-            for item in &items[base..(base + claim).min(items.len())] {
+            let (base, end) = unpack_span(span);
+            for item in &items[base..end] {
                 let (slot, coord) = (item.slot as usize, item.coord as usize);
 
                 // Partial dot over this lane's rows against live v.
@@ -286,6 +307,14 @@ mod tests {
         }
         for r in 0..d {
             assert!((v.read(r) - v_ref[r]).abs() < 1e-4, "v[{r}]");
+        }
+    }
+
+    #[test]
+    fn span_packing_roundtrips_and_reserves_done() {
+        for (lo, hi) in [(0usize, 1usize), (0, 0), (7, 900), (1 << 20, (1 << 20) + 8)] {
+            assert_eq!(unpack_span(pack_span(lo, hi)), (lo, hi));
+            assert_ne!(pack_span(lo, hi), SPAN_DONE);
         }
     }
 

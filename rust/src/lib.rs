@@ -27,6 +27,8 @@
 //!   with closed-form coordinate updates and duality gaps;
 //! * [`threadpool`] — pinned worker pools with counter-based barriers
 //!   (the paper's pthreads-over-OpenMP discipline);
+//! * [`sched`] — the shard-pinned tile scheduler behind every bulk
+//!   column sweep (per-worker shard queues + work stealing);
 //! * [`coordinator`] — the HTHC scheme itself plus the §IV-F
 //!   performance model;
 //! * [`baselines`] — ST, OMP, OMP-WILD, PASSCoDe, SGD comparators;
@@ -47,6 +49,7 @@ pub mod kernels;
 pub mod memory;
 pub mod metrics;
 pub mod runtime;
+pub mod sched;
 pub mod solver;
 pub mod threadpool;
 pub mod util;

@@ -49,6 +49,9 @@ DATASET FLAGS (train / search / evaluate — one DatasetBuilder pipeline)
 TRAIN FLAGS
   --model     lasso|svm|svm-l2|ridge|logistic|elastic|huber (default lasso)
   --adaptive-r target refresh fraction for the online %B controller
+  --autotune  refine (t_a, t_b, v_b, m, tile) after a few epochs from
+              measured tier traffic (§IV-F over live counters); the
+              chosen split lands in the autotune_* extras
   --lam       regularization                    (default 1e-3)
   --solver    hthc|st|omp|omp-wild|passcode|passcode-wild|sgd
   --t-a / --t-b / --v-b                         thread topology
@@ -262,6 +265,17 @@ fn cmd_train(args: &Args) {
     if let Some(mse) = result.extras.f64(keys::FINAL_MSE) {
         println!("sgd: final MSE {mse:.6}");
     }
+    if let (Some(t_a), Some(t_b), Some(v_b)) = (
+        result.extras.u64(keys::AUTOTUNE_T_A),
+        result.extras.u64(keys::AUTOTUNE_T_B),
+        result.extras.u64(keys::AUTOTUNE_V_B),
+    ) {
+        println!(
+            "autotune: split t_a={t_a} t_b={t_b} v_b={v_b} m={} tile={}",
+            result.extras.u64(keys::AUTOTUNE_M).unwrap_or(0),
+            result.extras.u64(keys::AUTOTUNE_TILE_COLS).unwrap_or(0),
+        );
+    }
     println!("result: {}", result.summary());
     if model_name.starts_with("svm") {
         let acc = SvmDual::new(lam, train.n_cols()).accuracy(train.as_ops(), &result.v);
@@ -429,7 +443,7 @@ fn cmd_perfmodel(args: &Args) {
         Some(rec) => {
             let mut t = Table::new(
                 format!("Recommended configuration (n={n}, d={d}, r~={r})"),
-                &["m", "T_A", "T_B", "V_B", "T_total", "epoch (model)", "z refresh"],
+                &["m", "T_A", "T_B", "V_B", "T_total", "tile", "epoch (model)", "z refresh"],
             );
             t.row(vec![
                 rec.m.to_string(),
@@ -437,6 +451,7 @@ fn cmd_perfmodel(args: &Args) {
                 rec.t_b.to_string(),
                 rec.v_b.to_string(),
                 (rec.t_a + rec.t_b * rec.v_b).to_string(),
+                rec.tile_cols.to_string(),
                 hthc::util::fmt_secs(rec.epoch_secs),
                 format!("{:.0}%", rec.refresh_frac * 100.0),
             ]);

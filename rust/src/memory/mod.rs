@@ -18,4 +18,4 @@ pub mod tier;
 
 pub use arena::Arena;
 pub use platform::Platform;
-pub use tier::{Tier, TierSim, TierStats};
+pub use tier::{ReadBatcher, Tier, TierSim, TierStats};

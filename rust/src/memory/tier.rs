@@ -128,6 +128,49 @@ impl TierSim {
     }
 }
 
+/// Charges accumulate locally until this many bytes, then flush in one
+/// atomic add — keeps the counter off the sweep hot path.
+pub const CHARGE_FLUSH_BYTES: u64 = 1 << 20;
+
+/// Per-worker batching of [`TierSim::read`] charges.  Every sweep
+/// consumer (task A's epoch loop, `run_fixed`, OMP's refresh) shares
+/// this one helper so no path forgets the 1 MiB batching threshold; the
+/// `Drop` impl flushes the tail, so early exits cannot lose traffic.
+pub struct ReadBatcher<'a> {
+    sim: &'a TierSim,
+    tier: Tier,
+    pending: u64,
+}
+
+impl<'a> ReadBatcher<'a> {
+    pub fn new(sim: &'a TierSim, tier: Tier) -> Self {
+        ReadBatcher { sim, tier, pending: 0 }
+    }
+
+    /// Record a read; flushes once the local tally passes
+    /// [`CHARGE_FLUSH_BYTES`].
+    #[inline]
+    pub fn add(&mut self, bytes: u64) {
+        self.pending += bytes;
+        if self.pending > CHARGE_FLUSH_BYTES {
+            self.flush();
+        }
+    }
+
+    pub fn flush(&mut self) {
+        if self.pending > 0 {
+            self.sim.read(self.tier, self.pending);
+            self.pending = 0;
+        }
+    }
+}
+
+impl Drop for ReadBatcher<'_> {
+    fn drop(&mut self) {
+        self.flush();
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -164,6 +207,21 @@ mod tests {
         let slow = sim.modeled_secs(Tier::Slow, 1 << 30, 20);
         let fast = sim.modeled_secs(Tier::Fast, 1 << 30, 32);
         assert!(slow / fast > 5.0, "MCDRAM ~5.5x DRAM: {slow} vs {fast}");
+    }
+
+    #[test]
+    fn read_batcher_flushes_at_threshold_and_on_drop() {
+        let sim = TierSim::default();
+        {
+            let mut b = ReadBatcher::new(&sim, Tier::Slow);
+            b.add(CHARGE_FLUSH_BYTES); // == threshold: held locally
+            assert_eq!(sim.stats(Tier::Slow).read_bytes, 0, "below/at threshold: no flush");
+            b.add(1); // crosses the threshold
+            assert_eq!(sim.stats(Tier::Slow).read_bytes, CHARGE_FLUSH_BYTES + 1);
+            b.add(7); // tail stays pending until drop
+            assert_eq!(sim.stats(Tier::Slow).read_bytes, CHARGE_FLUSH_BYTES + 1);
+        }
+        assert_eq!(sim.stats(Tier::Slow).read_bytes, CHARGE_FLUSH_BYTES + 8, "drop flushes tail");
     }
 
     #[test]

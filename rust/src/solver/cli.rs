@@ -23,6 +23,7 @@ pub fn config_from_args(args: &Args) -> HthcConfig {
         seed: args.u64_or("seed", 42),
         use_pjrt_gaps: args.bool_or("pjrt", false),
         adaptive_r_tilde: args.get("adaptive-r").map(|s| s.parse().expect("--adaptive-r")),
+        autotune: args.bool_or("autotune", false),
         ..Default::default()
     }
 }
@@ -65,6 +66,14 @@ mod tests {
         assert_eq!(cfg.max_epochs, 200);
         assert_eq!(cfg.seed, 42);
         assert_eq!(cfg.adaptive_r_tilde, None);
+        assert!(!cfg.autotune);
+    }
+
+    #[test]
+    fn autotune_flag_enables_auto_mode() {
+        let cfg = config_from_args(&parse("--autotune"));
+        assert!(cfg.autotune);
+        assert!(cfg.autotune_warmup >= 1);
     }
 
     #[test]

@@ -34,7 +34,9 @@ impl Solver for Hthc<'_> {
     }
 
     fn fit(&self, problem: &mut Problem<'_>) -> FitReport {
-        HthcSolver::new(problem.cfg.clone()).fit_problem(problem, self.backend)
+        // mut: autotuning may re-size the solver's pools mid-run
+        let mut solver = HthcSolver::new(problem.cfg.clone());
+        solver.fit_problem(problem, self.backend)
     }
 }
 

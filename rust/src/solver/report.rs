@@ -30,6 +30,16 @@ pub mod keys {
     pub const HELDOUT_ACCURACY: &str = "heldout_accuracy";
     /// `hthc train --split`: number of held-out columns (u64).
     pub const HELDOUT_COLS: &str = "heldout_cols";
+    /// Autotune: task-A threads in effect at the end of the run (u64).
+    pub const AUTOTUNE_T_A: &str = "autotune_t_a";
+    /// Autotune: task-B parallel updates in effect at run end (u64).
+    pub const AUTOTUNE_T_B: &str = "autotune_t_b";
+    /// Autotune: task-B vector lanes in effect at run end (u64).
+    pub const AUTOTUNE_V_B: &str = "autotune_v_b";
+    /// Autotune: batch size `m` in effect at run end (u64).
+    pub const AUTOTUNE_M: &str = "autotune_m";
+    /// Autotune: task-A scheduler tile granularity at run end (u64).
+    pub const AUTOTUNE_TILE_COLS: &str = "autotune_tile_cols";
 }
 
 /// One solver-specific statistic.

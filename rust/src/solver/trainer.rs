@@ -171,6 +171,15 @@ impl<'b> Trainer<'b> {
         self
     }
 
+    /// Auto mode (HTHC only): after a few observed epochs, re-solve the
+    /// §IV-F split from *measured* tier traffic and timings and apply
+    /// the recommendation (threads, batch size, scheduler tile).  The
+    /// chosen split is reported under the `autotune_*` extras keys.
+    pub fn autotune(mut self, on: bool) -> Self {
+        self.cfg.autotune = on;
+        self
+    }
+
     /// The shared stopping rules.
     pub fn stop_when(mut self, stop: StopWhen) -> Self {
         self.cfg.gap_tol = stop.gap_tol;
@@ -288,7 +297,8 @@ mod tests {
             .selection(Selection::Random)
             .seed(9)
             .lock_chunk(64)
-            .adaptive_refresh(Some(0.2));
+            .adaptive_refresh(Some(0.2))
+            .autotune(true);
         let c = t.cfg();
         assert_eq!((c.t_a, c.t_b, c.v_b), (3, 4, 2));
         assert_eq!(c.batch_frac, 0.5);
@@ -296,6 +306,7 @@ mod tests {
         assert_eq!(c.seed, 9);
         assert_eq!(c.lock_chunk, 64);
         assert_eq!(c.adaptive_r_tilde, Some(0.2));
+        assert!(c.autotune);
     }
 
     #[test]

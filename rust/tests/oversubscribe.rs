@@ -1,0 +1,88 @@
+//! Thread-oversubscription tests: the scheduler and the full HTHC loop
+//! must make progress (no deadlock, no starvation, no lost tiles) when
+//! the configured thread counts exceed the host's cores.  CI runs this
+//! file on purpose with `t_a`/`t_b` above the runner's core count; the
+//! worker counts below are derived from the *detected* core count so
+//! the 4x factor oversubscribes on any machine.
+
+use hthc::coordinator::{host_threads, HthcConfig};
+use hthc::data::{DatasetBuilder, DatasetKind, Family};
+use hthc::glm::Lasso;
+use hthc::kernels::BLOCK_COLS;
+use hthc::memory::TierSim;
+use hthc::sched::TileScheduler;
+use hthc::solver::Trainer;
+use hthc::threadpool::WorkerPool;
+use std::sync::atomic::{AtomicU32, Ordering};
+
+#[test]
+fn drain_is_exactly_once_with_4x_host_core_workers() {
+    let cores = host_threads().unwrap_or(2);
+    let workers = (4 * cores).max(8);
+    let n = workers * 3 * BLOCK_COLS + 5; // ragged tail, ~3 tiles/shard
+    let sched = TileScheduler::new(n, workers, BLOCK_COLS);
+    let touched: Vec<AtomicU32> = (0..n).map(|_| AtomicU32::new(0)).collect();
+    let pool = WorkerPool::with_name(workers, "oversub");
+    pool.run(|tid| {
+        while let Some(t) = sched.claim(tid) {
+            for j in t.lo..t.hi {
+                touched[j].fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    });
+    for j in 0..n {
+        assert_eq!(touched[j].load(Ordering::Relaxed), 1, "column {j} claimed exactly once");
+    }
+    assert_eq!(sched.remaining(), 0, "drain must exhaust every shard");
+}
+
+#[test]
+fn hthc_fit_completes_oversubscribed() {
+    // t_a + t_b * v_b = 19 threads: far above any CI runner we use.
+    // validate() warns (never rejects) and the fit must still finish —
+    // the tile scheduler and task B's group barrier may not deadlock
+    // when the OS timeslices the oversubscribed pools arbitrarily.
+    let cfg = HthcConfig {
+        t_a: 9,
+        t_b: 5,
+        v_b: 2,
+        max_epochs: 6,
+        eval_every: 3,
+        gap_tol: 0.0, // never converges: runs all 6 epochs
+        timeout_secs: 60.0,
+        ..Default::default()
+    };
+    assert!(
+        cfg.oversubscription_warning(4).is_some(),
+        "19 threads on a 4-core budget must warn"
+    );
+    cfg.validate();
+    let g = DatasetBuilder::generated(DatasetKind::Tiny, Family::Regression)
+        .seed(7301)
+        .build()
+        .unwrap();
+    let mut model = Lasso::new(0.4);
+    let sim = TierSim::default();
+    let res = Trainer::new().config(cfg).fit_with(&mut model, &g, &sim);
+    assert!(res.epochs >= 1, "oversubscribed fit must make progress: {}", res.summary());
+    assert!(
+        res.b_updates() > 0,
+        "task B must process coordinates under oversubscription"
+    );
+}
+
+#[test]
+fn clamped_config_fits_the_reported_budget() {
+    let cfg = HthcConfig { t_a: 9, t_b: 5, v_b: 2, ..Default::default() };
+    for budget in [1usize, 2, 4, 8, 16] {
+        let c = cfg.clamped_to(budget);
+        assert!(c.t_a >= 1 && c.t_b >= 1 && c.v_b >= 1);
+        // either the clamp fits the budget or it bottomed out at the
+        // (1, 1, 1) floor (budget 1 cannot be met: the floor needs 2)
+        assert!(
+            c.total_threads() <= budget || (c.t_a, c.t_b, c.v_b) == (1, 1, 1),
+            "clamp to {budget} left {} threads",
+            c.total_threads()
+        );
+    }
+}

@@ -1,0 +1,219 @@
+//! Differential tests for the shard-pinned tile scheduler
+//! (`sched::TileScheduler`): a scheduled multi-worker tile sweep must
+//! produce exactly the same work as the serial reference that walks the
+//! scheduler's tile decomposition in order — the same set of columns
+//! touched exactly once, and *bitwise*-equal `dots_block` values per
+//! tile, because stealing and claim order only permute whole tiles and
+//! each tile's blocked pass is deterministic for a fixed backend.
+//!
+//! Runs over all three matrix representations; the CI kernel matrix
+//! additionally runs this file under every `RUST_PALLAS_KERNELS`
+//! setting, so the bitwise claim is checked per backend.
+
+use hthc::coordinator::task_a::{self, ASnapshot};
+use hthc::coordinator::GapMemory;
+use hthc::data::{DenseMatrix, Matrix, QuantizedMatrix, SparseMatrix};
+use hthc::glm::{GlmModel, Lasso};
+use hthc::kernels::{BLOCK_COLS, QGROUP};
+use hthc::memory::{Tier, TierSim};
+use hthc::sched::TileScheduler;
+use hthc::threadpool::WorkerPool;
+use hthc::util::Rng;
+use std::sync::atomic::{AtomicU32, Ordering};
+
+fn randvec(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.normal()).collect()
+}
+
+/// One matrix per representation over the same shape: rows straddle the
+/// kernel cache band (4096) and stay `QGROUP`-aligned for the quantized
+/// path; the column count is deliberately not a multiple of
+/// `BLOCK_COLS` or of any worker count used below, so shards and tiles
+/// are ragged.
+fn matrices(rng: &mut Rng) -> Vec<(&'static str, Matrix)> {
+    let d = 4096 + 2 * QGROUP;
+    let n = 6 * BLOCK_COLS + 5;
+    let dm = DenseMatrix::from_col_major(d, n, randvec(rng, d * n));
+    let qm = QuantizedMatrix::from_dense(&dm);
+    let mut cols: Vec<Vec<(u32, f32)>> = Vec::new();
+    for j in 0..n {
+        // mix of empty, short and long columns
+        let nnz = [0usize, 1, 9, 250, 3000][j % 5];
+        let mut col: Vec<(u32, f32)> = rng
+            .sample_distinct(d, nnz)
+            .into_iter()
+            .map(|r| (r as u32, rng.normal()))
+            .collect();
+        col.sort_unstable_by_key(|&(r, _)| r);
+        cols.push(col);
+    }
+    let sm = SparseMatrix::from_columns(d, cols);
+    vec![
+        ("dense", Matrix::Dense(dm)),
+        ("quantized", Matrix::Quantized(qm)),
+        ("sparse", Matrix::Sparse(sm)),
+    ]
+}
+
+/// The scheduler's exact tile decomposition, shard-major in claim
+/// order: `[lo + k*tile, min(lo + (k+1)*tile, hi))` per shard.  Both
+/// `claim` and `claim_cyclic` hand out precisely these tiles.
+fn tiles_of(sched: &TileScheduler) -> Vec<(usize, usize)> {
+    let tile = sched.tile_cols();
+    let mut out = Vec::new();
+    for s in 0..sched.n_shards() {
+        let (lo, hi) = sched.shard_bounds(s);
+        let mut a = lo;
+        while a < hi {
+            let b = (a + tile).min(hi);
+            out.push((a, b));
+            a = b;
+        }
+    }
+    out
+}
+
+#[test]
+fn scheduled_tile_sweep_is_bitwise_equal_to_the_serial_reference() {
+    let mut rng = Rng::new(71001);
+    for (label, m) in matrices(&mut rng) {
+        let ops = m.as_block_ops();
+        let n = m.n_cols();
+        let w = randvec(&mut rng, m.n_rows());
+        for &workers in &[1usize, 3] {
+            let sched = TileScheduler::new(n, workers, BLOCK_COLS);
+            // serial reference: walk the same tiles in deterministic order
+            let mut reference = vec![0u32; n];
+            for &(lo, hi) in &tiles_of(&sched) {
+                let idx: Vec<usize> = (lo..hi).collect();
+                let mut u = vec![0.0f32; idx.len()];
+                ops.dots_block(&idx, &w, &mut u);
+                for (&j, &uj) in idx.iter().zip(&u) {
+                    reference[j] = uj.to_bits();
+                }
+            }
+            // scheduled: a pool drains the claims (stealing included)
+            let slots: Vec<AtomicU32> =
+                (0..n).map(|_| AtomicU32::new(f32::NAN.to_bits())).collect();
+            let touched: Vec<AtomicU32> = (0..n).map(|_| AtomicU32::new(0)).collect();
+            let pool = WorkerPool::with_name(workers, "sched-diff");
+            pool.run(|tid| {
+                let tile = sched.tile_cols();
+                let mut idx = vec![0usize; tile];
+                let mut u = vec![0.0f32; tile];
+                while let Some(t) = sched.claim(tid) {
+                    let len = t.len();
+                    for (slot, j) in idx[..len].iter_mut().zip(t.lo..t.hi) {
+                        *slot = j;
+                    }
+                    ops.dots_block(&idx[..len], &w, &mut u[..len]);
+                    for (&j, &uj) in idx[..len].iter().zip(&u[..len]) {
+                        slots[j].store(uj.to_bits(), Ordering::Relaxed);
+                        touched[j].fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            });
+            for j in 0..n {
+                assert_eq!(
+                    touched[j].load(Ordering::Relaxed),
+                    1,
+                    "{label} workers={workers}: column {j} must be claimed exactly once"
+                );
+                assert_eq!(
+                    slots[j].load(Ordering::Relaxed),
+                    reference[j],
+                    "{label} workers={workers}: column {j} must match bitwise"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn run_fixed_refresh_set_and_gap_values_match_the_serial_reference() {
+    let mut rng = Rng::new(71002);
+    for (label, m) in matrices(&mut rng) {
+        let ops = m.as_block_ops();
+        let n = m.n_cols();
+        let w = randvec(&mut rng, m.n_rows());
+        let alpha = randvec(&mut rng, n);
+        let kind = Lasso::new(0.1).kind();
+        // a distinct shuffled subset: with duplicates "exactly the given
+        // set" would be ambiguous (last tile to refresh a repeat wins)
+        let mut coords: Vec<usize> = (0..n).step_by(2).collect();
+        rng.shuffle(&mut coords);
+        let pool = WorkerPool::with_name(3, "sched-diff");
+        let sim = TierSim::default();
+        let gaps = GapMemory::new(n);
+        let snap = ASnapshot { w: &w, alpha: &alpha, kind, epoch: 1 };
+        task_a::run_fixed(&pool, &m, &snap, &gaps, &coords, &sim, Tier::Slow);
+
+        // serial reference replicating run_fixed's internal decomposition:
+        // tiles are index ranges into `coords`
+        let sched = TileScheduler::new(coords.len(), pool.len().max(1), BLOCK_COLS);
+        let mut want = vec![f32::INFINITY; n];
+        let mut refreshed = vec![false; n];
+        for &(lo, hi) in &tiles_of(&sched) {
+            let blk = &coords[lo..hi];
+            let mut u = vec![0.0f32; blk.len()];
+            ops.dots_block(blk, &w, &mut u);
+            for (&j, &uj) in blk.iter().zip(&u) {
+                want[j] = kind.gap(uj, alpha[j]);
+                refreshed[j] = true;
+            }
+        }
+        for j in 0..n {
+            let got = gaps.read(j);
+            if refreshed[j] {
+                assert_eq!(
+                    got.to_bits(),
+                    want[j].to_bits(),
+                    "{label}: column {j} gap must match the reference bitwise"
+                );
+            } else {
+                assert!(
+                    !got.is_finite(),
+                    "{label}: column {j} was not in the sweep but got refreshed"
+                );
+            }
+        }
+        let (updates, frac) = gaps.refresh_stats(1);
+        assert_eq!(updates, coords.len() as u64, "{label}: one refresh per coordinate");
+        assert!((frac - coords.len() as f64 / n as f64).abs() < 1e-9, "{label}");
+    }
+}
+
+#[test]
+fn cyclic_claims_rotate_through_the_exact_tile_decomposition() {
+    // claim_cyclic never drains, but one full rotation of a shard must
+    // cover each of that shard's tiles exactly once — this is what
+    // makes run_epoch's stop-flag loop a full sweep given enough time.
+    let n = 6 * BLOCK_COLS + 5;
+    for &workers in &[1usize, 2, 4] {
+        let sched = TileScheduler::new(n, workers, BLOCK_COLS);
+        for s in 0..sched.n_shards() {
+            let (lo, hi) = sched.shard_bounds(s);
+            let tile = sched.tile_cols();
+            let mut expect = Vec::new();
+            let mut a = lo;
+            while a < hi {
+                let b = (a + tile).min(hi);
+                expect.push((a, b));
+                a = b;
+            }
+            let mut seen = Vec::new();
+            for _ in 0..expect.len() {
+                let t = sched.claim_cyclic(s).expect("cyclic never drains");
+                assert_eq!(t.shard, s, "cyclic claims stay shard-pinned");
+                seen.push((t.lo, t.hi));
+            }
+            seen.sort_unstable();
+            assert_eq!(seen, expect, "shard {s}: one rotation covers each tile once");
+            // and the next lap stays inside the same tile set
+            for _ in 0..expect.len() {
+                let t = sched.claim_cyclic(s).expect("cyclic never drains");
+                assert!(expect.contains(&(t.lo, t.hi)), "lap 2 repeats the tile set");
+            }
+        }
+    }
+}
