@@ -6,7 +6,7 @@
 //! native loop.  Before/after numbers from this harness are recorded in
 //! EXPERIMENTS.md §Perf.
 
-use hthc::bench_support::BenchJson;
+use hthc::bench_support::{BenchJson, ServeRecord};
 use hthc::coordinator::{selection, SharedVector};
 use hthc::data::{ColumnOps, DenseMatrix, QuantizedMatrix, SparseMatrix};
 use hthc::kernels::{self, Backend, QGROUP};
@@ -244,6 +244,70 @@ fn bench_blocked_sweep(rng: &mut Rng, json: &mut BenchJson) {
     bench_scheduled_sweep(rng, json);
 }
 
+/// Latency benchmark axis (ISSUE 7): a short bounded serving run —
+/// batched predict through the kernel layer, streaming ingest, the
+/// warm-start refit cadence — recorded as the `serve` section of the
+/// bench JSON (QPS, rows/s, p50/p95/p99 request latency, publish and
+/// reject counters).
+fn bench_serve_axis(json: &mut BenchJson) {
+    use hthc::data::{DatasetBuilder, DatasetKind, Family};
+    use hthc::serve::{RefitConfig, ServeConfig};
+    use hthc::solver::StopWhen;
+
+    let base = DatasetBuilder::generated(DatasetKind::Tiny, Family::Regression)
+        .scale(2.0)
+        .seed(7007)
+        .build()
+        .expect("serve bench dataset")
+        .to_samples()
+        .expect("serve bench samples");
+    let cfg = ServeConfig {
+        duration_secs: 0.8 * hthc::bench_support::bench_scale().min(2.0),
+        batch: 64,
+        threads: 2,
+        ingest_per_round: 8,
+        refit: RefitConfig {
+            refit_every: 64,
+            solver: "st".into(),
+            budget: StopWhen::gap_below(1e-6).max_epochs(200).timeout_secs(5.0),
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    match hthc::serve::sim::run(base, &cfg) {
+        Ok(r) => {
+            json.set_serve(ServeRecord {
+                qps: r.qps,
+                rows_per_sec: r.rows_per_sec,
+                p50_ms: r.p50_ms,
+                p95_ms: r.p95_ms,
+                p99_ms: r.p99_ms,
+                published: r.published,
+                rejected: r.rejected,
+                attempts: r.attempts,
+            });
+            let mut t = Table::new(
+                "serving axis (bounded in-process run, batch = 64)",
+                &["metric", "value"],
+            );
+            t.row(vec!["req/s".into(), format!("{:.0}", r.qps)]);
+            t.row(vec!["rows/s".into(), format!("{:.0}", r.rows_per_sec)]);
+            t.row(vec!["p50 / p95 / p99 ms".into(),
+                format!("{:.3} / {:.3} / {:.3}", r.p50_ms, r.p95_ms, r.p99_ms)]);
+            t.row(vec!["refits pub/rej".into(),
+                format!("{} / {}", r.published, r.rejected)]);
+            t.print();
+            if !r.healthy() {
+                json.note(&format!(
+                    "serve axis unhealthy: {} published, {} rows served",
+                    r.published, r.rows
+                ));
+            }
+        }
+        Err(e) => json.note(&format!("serve axis skipped: {e}")),
+    }
+}
+
 /// Serial-vs-scheduled sweep under a fixed wall-clock budget: a
 /// single-thread per-column dot sweep against the shard-pinned
 /// [`TileScheduler`] driving a [`WorkerPool`] with blocked tile dots —
@@ -371,6 +435,8 @@ fn main() {
             ));
         }
     }
+    // ---- serving layer: latency axis ------------------------------------
+    bench_serve_axis(&mut json);
     match json.save() {
         Ok(path) => println!("bench JSON -> {}\n", path.display()),
         Err(e) => println!("(bench JSON not written: {e})\n"),

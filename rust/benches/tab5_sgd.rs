@@ -33,8 +33,8 @@ fn main() {
             let o0 = obj0(model.as_ref(), &g);
             let cfg = bench_cfg(1e-4 * o0, timeout);
             let res = run_solver("A+B", model.as_mut(), &g, &cfg);
-            let beta = res.alpha.clone();
-            cache.mean_squared_error(&beta, g.targets()) * 1.1 + 1e-6
+            let preds = cache.predictions(&res.alpha);
+            hthc::serve::predict::mean_squared_error(&preds, g.targets()) * 1.1 + 1e-6
         };
 
         let mut row = vec![g.meta().source.describe(), format!("{target:.4}")];
@@ -50,7 +50,8 @@ fn main() {
                 cfg.eval_every = usize::MAX >> 1;
                 cfg.max_epochs = budget;
                 let res = run_solver(solver, model.as_mut(), &g, &cfg);
-                if cache.mean_squared_error(&res.alpha, g.targets()) <= target {
+                let preds = cache.predictions(&res.alpha);
+                if hthc::serve::predict::mean_squared_error(&preds, g.targets()) <= target {
                     hit = Some(res.wall_secs);
                     break;
                 }

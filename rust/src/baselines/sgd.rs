@@ -58,17 +58,15 @@ impl RowCache {
         RowCache { rows, n_features: n }
     }
 
-    /// Mean squared prediction error of weights `beta` (VW's progressive
-    /// validation analogue, computed on the training set as the paper
-    /// compares "average squared error ... against progressive
-    /// validation error").
-    pub fn mean_squared_error(&self, beta: &[f32], targets: &[f32]) -> f64 {
-        let mut sum = 0.0f64;
-        for (row, &t) in self.rows.iter().zip(targets) {
-            let e = (crate::kernels::pair_dot(row, beta) - t) as f64;
-            sum += e * e;
-        }
-        sum / self.rows.len().max(1) as f64
+    /// Row-wise predictions `X beta` (VW's progressive-validation pass).
+    /// The MSE itself goes through
+    /// [`crate::serve::predict::mean_squared_error`] — the consolidated
+    /// predict seam — rather than a private duplicate.
+    pub fn predictions(&self, beta: &[f32]) -> Vec<f32> {
+        self.rows
+            .iter()
+            .map(|row| crate::kernels::pair_dot(row, beta))
+            .collect()
     }
 }
 
@@ -130,15 +128,10 @@ pub(crate) fn fit(p: &mut Problem<'_>, lam: f32, mse_target: f64) -> FitReport {
         // engine (MSE, trace, observer and the mse_target stop all
         // happen at evaluation epochs only)
         if epoch % cfg.eval_every == 0 || epoch == cfg.max_epochs {
-            // with an observer, one prediction pass serves both the
-            // MSE and the event's v (avoids a second full matvec)
-            let (mse, preds) = if on_epoch.is_some() {
-                let preds = data.matvec_alpha(&beta);
-                let sum = crate::kernels::sq_err_f64(&preds, targets);
-                (sum / targets.len().max(1) as f64, Some(preds))
-            } else {
-                (cache.mean_squared_error(&beta, targets), None)
-            };
+            // one row-wise prediction pass serves both the MSE (through
+            // the consolidated serve::predict seam) and the event's v
+            let preds = cache.predictions(&beta);
+            let mse = crate::serve::predict::mean_squared_error(&preds, targets);
             trace.push(timer.secs(), epoch, mse, f64::NAN);
             last_mse = mse;
             let stop_requested = notify_epoch(
@@ -149,7 +142,7 @@ pub(crate) fn fit(p: &mut Problem<'_>, lam: f32, mse_target: f64) -> FitReport {
                     wall_secs: timer.secs(),
                     objective: mse,
                     gap: f64::NAN,
-                    v: preds.as_deref().unwrap_or(&[]),
+                    v: &preds,
                     alpha: &beta,
                 },
             );

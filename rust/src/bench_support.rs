@@ -119,6 +119,21 @@ impl KernelRecord {
     }
 }
 
+/// One bounded serving-simulation measurement: the latency benchmark
+/// axis that rides alongside the kernel throughput records (ISSUE 7).
+/// Latencies are milliseconds, straight from the serve layer's
+/// fixed-bucket histogram.
+pub struct ServeRecord {
+    pub qps: f64,
+    pub rows_per_sec: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub published: u64,
+    pub rejected: u64,
+    pub attempts: u64,
+}
+
 /// Machine-readable bench output: per-kernel scalar-vs-dispatched
 /// throughput plus free-form notes (e.g. "host lacks AVX2").  Written
 /// as JSON with a hand-rolled renderer — the crate is dependency-free.
@@ -126,6 +141,7 @@ pub struct BenchJson {
     bench: String,
     backend: String,
     records: Vec<KernelRecord>,
+    serve: Option<ServeRecord>,
     notes: Vec<String>,
 }
 
@@ -159,8 +175,19 @@ impl BenchJson {
             bench: bench.to_string(),
             backend: crate::kernels::backend().name().to_string(),
             records: Vec::new(),
+            serve: None,
             notes: Vec::new(),
         }
+    }
+
+    /// Attach the serving-simulation measurement (at most one per
+    /// bench; a second call replaces the first).
+    pub fn set_serve(&mut self, serve: ServeRecord) {
+        self.serve = Some(serve);
+    }
+
+    pub fn serve(&self) -> Option<&ServeRecord> {
+        self.serve.as_ref()
     }
 
     /// Record one kernel's scalar-vs-dispatched timing.
@@ -211,6 +238,21 @@ impl BenchJson {
             ));
         }
         out.push_str("  ],\n");
+        if let Some(s) = &self.serve {
+            out.push_str(&format!(
+                "  \"serve\": {{\"qps\": {}, \"rows_per_sec\": {}, \
+                 \"p50_ms\": {}, \"p95_ms\": {}, \"p99_ms\": {}, \
+                 \"published\": {}, \"rejected\": {}, \"attempts\": {}}},\n",
+                json_num(s.qps),
+                json_num(s.rows_per_sec),
+                json_num(s.p50_ms),
+                json_num(s.p95_ms),
+                json_num(s.p99_ms),
+                s.published,
+                s.rejected,
+                s.attempts,
+            ));
+        }
         out.push_str("  \"notes\": [");
         for (i, n) in self.notes.iter().enumerate() {
             if i > 0 {
@@ -257,7 +299,24 @@ mod tests {
         assert!(s.contains("\"speedup\": 2.000000"), "{s}");
         assert!(s.contains("sparse \\\"dot\\\""), "escaped: {s}");
         assert!(s.contains("line1\\nline2"));
+        assert!(!s.contains("\"serve\""), "no serve section unless set");
         // crude balance check on the hand-rolled renderer
+        assert_eq!(s.matches('{').count(), s.matches('}').count());
+        assert_eq!(s.matches('[').count(), s.matches(']').count());
+
+        j.set_serve(ServeRecord {
+            qps: 1000.0,
+            rows_per_sec: 64_000.0,
+            p50_ms: 0.05,
+            p95_ms: 0.20,
+            p99_ms: 0.90,
+            published: 3,
+            rejected: 1,
+            attempts: 4,
+        });
+        let s = j.render();
+        assert!(s.contains("\"serve\": {\"qps\": 1000.000000"), "{s}");
+        assert!(s.contains("\"published\": 3, \"rejected\": 1, \"attempts\": 4"), "{s}");
         assert_eq!(s.matches('{').count(), s.matches('}').count());
         assert_eq!(s.matches('[').count(), s.matches(']').count());
     }

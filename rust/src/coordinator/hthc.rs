@@ -421,8 +421,7 @@ mod tests {
             res.trace.final_gap().unwrap() < 1e-3,
             "{}", res.summary()
         );
-        let ops = g.as_ops();
-        let acc = model.accuracy(ops, &res.v);
+        let acc = crate::serve::predict::accuracy(g.as_block_ops(), &res.v);
         assert!(acc > 0.9, "accuracy {acc}");
         // box respected
         assert!(res.alpha.iter().all(|&a| (-1e-6..=1.0 + 1e-6).contains(&a)));

@@ -92,6 +92,7 @@ enum Source {
 /// Fluent pipeline producing a [`Dataset`] — see the module docs.
 pub struct DatasetBuilder {
     source: Source,
+    appended: Vec<libsvm::Sample>,
     family: Family,
     scale: f64,
     seed: u64,
@@ -106,6 +107,7 @@ impl DatasetBuilder {
     fn new(source: Source, family: Family) -> Self {
         DatasetBuilder {
             source,
+            appended: Vec::new(),
             family,
             scale: 1.0,
             seed: 42,
@@ -139,6 +141,18 @@ impl DatasetBuilder {
     /// constructions).  Build fails if the lengths disagree.
     pub fn in_memory(matrix: Matrix, targets: Vec<f32>) -> Self {
         Self::new(Source::InMemory { matrix, targets }, Family::Regression)
+    }
+
+    /// Append raw samples to a [`libsvm_samples`](Self::libsvm_samples)
+    /// source before the pipeline runs — the streaming-ingest rebuild
+    /// path: the base training set and the newly-ingested examples are
+    /// oriented, normalized and centered together so preprocessing stays
+    /// consistent across refits.  `build` rejects this on any other
+    /// source kind (appending *raw* samples to an already-preprocessed
+    /// matrix would mix spaces).
+    pub fn append_samples(mut self, samples: Vec<libsvm::Sample>) -> Self {
+        self.appended.extend(samples);
+        self
     }
 
     /// Orientation for LIBSVM sources and the generator (ignored by
@@ -202,6 +216,7 @@ impl DatasetBuilder {
     pub fn build(self) -> Result<Dataset> {
         let DatasetBuilder {
             source,
+            appended,
             family,
             scale,
             seed,
@@ -211,6 +226,21 @@ impl DatasetBuilder {
             density_threshold,
             placement,
         } = self;
+
+        let source = if appended.is_empty() {
+            source
+        } else {
+            match source {
+                Source::Samples(mut base) => {
+                    base.extend(appended);
+                    Source::Samples(base)
+                }
+                _ => bail!(
+                    "append_samples requires a libsvm_samples source — raw \
+                     samples cannot join an already-preprocessed matrix"
+                ),
+            }
+        };
 
         // -- 1. load + orient ------------------------------------------
         let (mut matrix, mut targets, mut meta) = load_source(source, family, scale, seed)?;
@@ -702,6 +732,32 @@ mod tests {
         let labels = ds.labels().unwrap();
         assert_eq!(labels.len(), ds.n_cols());
         assert!(ds.targets().iter().all(|&t| t == 0.0));
+    }
+
+    #[test]
+    fn append_samples_extends_a_samples_source() {
+        let base = vec![
+            libsvm::Sample { label: 1.0, features: vec![(0, 1.0), (2, 2.0)] },
+            libsvm::Sample { label: -1.0, features: vec![(1, 3.0)] },
+        ];
+        let extra = vec![libsvm::Sample { label: 2.0, features: vec![(2, -1.0)] }];
+        let ds = DatasetBuilder::libsvm_samples(base)
+            .append_samples(extra)
+            .family(Family::Regression)
+            .build()
+            .unwrap();
+        // regression orientation: rows = samples
+        assert_eq!(ds.n_rows(), 3);
+        assert_eq!(ds.targets(), &[1.0, -1.0, 2.0]);
+    }
+
+    #[test]
+    fn append_samples_rejected_on_non_sample_sources() {
+        let err = tiny(610)
+            .append_samples(vec![libsvm::Sample { label: 0.0, features: vec![] }])
+            .build()
+            .unwrap_err();
+        assert!(format!("{err}").contains("libsvm_samples"), "{err}");
     }
 
     #[test]

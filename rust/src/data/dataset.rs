@@ -264,6 +264,96 @@ impl Dataset {
         (DatasetView::subset(self, train), DatasetView::subset(self, val))
     }
 
+    /// Export as LIBSVM samples in **raw input space**, inverting the
+    /// recorded preprocessing (normalization scales divided back out,
+    /// target mean added back).  This is the serving layer's rebuild
+    /// currency: streamed raw examples and the current training set
+    /// meet in one sample list that a fresh
+    /// [`DatasetBuilder`](super::DatasetBuilder) run re-normalizes
+    /// consistently.
+    ///
+    /// Regression orientation emits one sample per row; classification
+    /// emits one per column with the label sign divided out of the
+    /// stored `d_j = y_j x_j` entries (and fails without labels).
+    /// Quantized data cannot be exported exactly and is rejected.
+    pub fn to_samples(&self) -> Result<Vec<super::libsvm::Sample>> {
+        use super::libsvm::Sample;
+        let scales = self.meta.col_scales.as_deref();
+        let scale_of = |j: usize| scales.map_or(1.0, |s| s[j]);
+        match self.meta.family {
+            Family::Regression => {
+                let mean = self.meta.target_mean.unwrap_or(0.0);
+                let mut feats: Vec<Vec<(u32, f32)>> = vec![Vec::new(); self.n_rows()];
+                // column-outer iteration in ascending j keeps every
+                // per-row feature list sorted by index for free
+                match &self.matrix {
+                    Matrix::Dense(dm) => {
+                        for j in 0..self.n_cols() {
+                            let s = scale_of(j);
+                            for (r, &x) in dm.col(j).iter().enumerate() {
+                                if x != 0.0 {
+                                    feats[r].push((j as u32, x / s));
+                                }
+                            }
+                        }
+                    }
+                    Matrix::Sparse(sm) => {
+                        for j in 0..self.n_cols() {
+                            let s = scale_of(j);
+                            let (rows, vals) = sm.col(j);
+                            for (&r, &x) in rows.iter().zip(vals) {
+                                feats[r as usize].push((j as u32, x / s));
+                            }
+                        }
+                    }
+                    Matrix::Quantized(_) => crate::bail!(
+                        "quantized data cannot be exported as exact samples — \
+                         keep the fp32 source for ingest-append rebuilds"
+                    ),
+                }
+                Ok(feats
+                    .into_iter()
+                    .zip(&self.targets)
+                    .map(|(features, &t)| Sample { label: t + mean, features })
+                    .collect())
+            }
+            Family::Classification => {
+                let Some(labels) = self.meta.labels.as_deref() else {
+                    crate::bail!(
+                        "classification dataset has no labels — cannot invert \
+                         the label-scaled columns into samples"
+                    );
+                };
+                let mut out = Vec::with_capacity(self.n_cols());
+                for j in 0..self.n_cols() {
+                    let y = labels[j];
+                    // stored d_j = y_j x_j * s_j with y in {-1, +1}, so
+                    // dividing by y is multiplying by it
+                    let inv = y / scale_of(j);
+                    let features: Vec<(u32, f32)> = match &self.matrix {
+                        Matrix::Dense(dm) => dm
+                            .col(j)
+                            .iter()
+                            .enumerate()
+                            .filter(|&(_, &x)| x != 0.0)
+                            .map(|(r, &x)| (r as u32, x * inv))
+                            .collect(),
+                        Matrix::Sparse(sm) => {
+                            let (rows, vals) = sm.col(j);
+                            rows.iter().zip(vals).map(|(&r, &x)| (r, x * inv)).collect()
+                        }
+                        Matrix::Quantized(_) => crate::bail!(
+                            "quantized data cannot be exported as exact samples — \
+                             keep the fp32 source for ingest-append rebuilds"
+                        ),
+                    };
+                    out.push(Sample { label: y, features });
+                }
+                Ok(out)
+            }
+        }
+    }
+
     // -- persistence ---------------------------------------------------
 
     /// Save in the `HTHC1` binary format (load back through
@@ -343,6 +433,65 @@ mod tests {
     fn split_rejects_bad_fraction() {
         let g = ds(9003);
         let _ = g.split(1.5, 1);
+    }
+
+    #[test]
+    fn to_samples_inverts_preprocessing_regression() {
+        let g = DatasetBuilder::generated(DatasetKind::Tiny, Family::Regression)
+            .seed(9005)
+            .normalize(true)
+            .center_targets(true)
+            .build()
+            .unwrap();
+        let raw = DatasetBuilder::generated(DatasetKind::Tiny, Family::Regression)
+            .seed(9005)
+            .build()
+            .unwrap();
+        let samples = g.to_samples().unwrap();
+        assert_eq!(samples.len(), g.n_rows());
+        let Matrix::Dense(dm) = raw.matrix() else { panic!("expected dense") };
+        for (r, s) in samples.iter().enumerate() {
+            assert!((s.label - raw.targets()[r]).abs() < 1e-4);
+            for &(j, x) in &s.features {
+                let want = dm.col(j as usize)[r];
+                assert!((x - want).abs() < 1e-4, "row {r} feat {j}: {x} vs {want}");
+            }
+            // sorted indices (the LIBSVM invariant)
+            assert!(s.features.windows(2).all(|w| w[0].0 < w[1].0));
+        }
+        // rebuilding from the exported samples reproduces the dataset
+        let back = DatasetBuilder::libsvm_samples(samples)
+            .family(Family::Regression)
+            .normalize(true)
+            .center_targets(true)
+            .build()
+            .unwrap();
+        assert_eq!(back.n_rows(), g.n_rows());
+        for j in 0..g.n_cols() {
+            assert!((back.as_ops().sq_norm(j) - g.as_ops().sq_norm(j)).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn to_samples_divides_labels_out_classification() {
+        let g = DatasetBuilder::generated(DatasetKind::Tiny, Family::Classification)
+            .seed(9006)
+            .normalize(true)
+            .build()
+            .unwrap();
+        let samples = g.to_samples().unwrap();
+        assert_eq!(samples.len(), g.n_cols(), "one sample per column");
+        let labels = g.labels().unwrap();
+        let scales = g.meta().col_scales.as_ref().unwrap();
+        let Matrix::Dense(dm) = g.matrix() else { panic!("expected dense") };
+        for (j, s) in samples.iter().enumerate() {
+            assert_eq!(s.label, labels[j]);
+            for &(r, x) in &s.features {
+                let stored = dm.col(j)[r as usize];
+                let want = stored * labels[j] / scales[j];
+                assert!((x - want).abs() < 1e-4);
+            }
+        }
     }
 
     #[test]

@@ -29,6 +29,7 @@ pub use builder::{DatasetBuilder, Represent, DENSE_DENSITY_THRESHOLD};
 pub use dataset::{Dataset, DatasetMeta, SourceInfo};
 pub use dense::DenseMatrix;
 pub use generator::{DatasetKind, Family, GeneratedDataset};
+pub use libsvm::Sample;
 pub use quantized::QuantizedMatrix;
 pub use sparse::{ChunkPool, SparseMatrix};
 pub use view::DatasetView;

@@ -182,6 +182,34 @@ pub trait GlmModel: Sync + Send {
     fn epoch_refresh(&mut self, _alpha: &[f32]) {}
 }
 
+/// Name-based model construction — the single CLI/serving dispatch
+/// (previously duplicated in `main.rs`): `n` is the coordinate count
+/// (needed by the SVM duals' `1/(lam n)` scaling).  Fixed secondary
+/// hyperparameters match the CLI's historical choices (`svm-l2` mu
+/// `0.5/n`, elastic `l2 = 0.5`, huber `delta = 1.0`).
+pub fn model_by_name(name: &str, lam: f32, n: usize) -> Option<Box<dyn GlmModel>> {
+    Some(match name {
+        "lasso" => Box::new(Lasso::new(lam)),
+        "svm" => Box::new(SvmDual::new(lam, n)),
+        "svm-l2" => Box::new(SvmL2Dual::new(lam, n, 0.5 / n as f32)),
+        "ridge" => Box::new(Ridge::new(lam)),
+        "logistic" => Box::new(LogisticL1::new(lam)),
+        "elastic" => Box::new(ElasticNet::new(lam, 0.5)),
+        "huber" => Box::new(HuberL1::new(lam, 1.0)),
+        _ => return None,
+    })
+}
+
+/// Which matrix orientation a model name trains in (classification
+/// models consume label-scaled sample columns, paper §II-A).
+pub fn family_for(model_name: &str) -> crate::data::Family {
+    if matches!(model_name, "svm" | "svm-l2" | "logistic") {
+        crate::data::Family::Classification
+    } else {
+        crate::data::Family::Regression
+    }
+}
+
 /// Materialize `w` from `v` — the residual/dual map, evaluated through
 /// the kernel layer's elementwise map (dense helper used by tasks and
 /// tests).

@@ -28,16 +28,13 @@ impl SvmDual {
             inv_n: 1.0 / n as f32,
         }
     }
-
-    /// Training accuracy from `v = D alpha`: sample i is classified
-    /// correctly iff `<v, d_i> > 0` (because `d_i = y_i x_i` and the
-    /// primal weight vector is proportional to `v`).
-    pub fn accuracy(&self, data: &dyn crate::data::ColumnOps, v: &[f32]) -> f64 {
-        let n = data.n_cols();
-        let correct = (0..n).filter(|&j| data.dot(j, v) > 0.0).count();
-        correct as f64 / n as f64
-    }
 }
+
+// Training accuracy from `v = D alpha` lives in `crate::serve::predict`
+// (`accuracy(data, v)`): sample i is classified correctly iff
+// `<v, d_i> > 0`, which is model-independent given the label-scaled
+// column convention — the method that used to sit here was one of the
+// ad-hoc predict paths consolidated onto that seam.
 
 impl GlmModel for SvmDual {
     fn name(&self) -> &'static str {
@@ -142,7 +139,7 @@ mod tests {
             _ => unreachable!(),
         };
         solve_reference(&mut model, ops, &g.targets, &mut alpha, &mut v, 60);
-        let acc = model.accuracy(ops, &v);
+        let acc = crate::serve::predict::accuracy(ops, &v);
         assert!(acc > 0.95, "accuracy {acc}");
         let gap = total_gap(&model, ops, &v, &g.targets, &alpha);
         assert!(gap >= -1e-6);

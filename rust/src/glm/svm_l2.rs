@@ -31,13 +31,10 @@ impl SvmL2Dual {
             inv_n: 1.0 / n as f32,
         }
     }
-
-    /// Training accuracy — same margin test as the L1-hinge dual.
-    pub fn accuracy(&self, data: &dyn crate::data::ColumnOps, v: &[f32]) -> f64 {
-        let n = data.n_cols();
-        (0..n).filter(|&j| data.dot(j, v) > 0.0).count() as f64 / n as f64
-    }
 }
+
+// Training accuracy (the same margin test as the L1-hinge dual) lives in
+// `crate::serve::predict::accuracy` — the consolidated predict seam.
 
 impl GlmModel for SvmL2Dual {
     fn name(&self) -> &'static str {
@@ -148,7 +145,7 @@ mod tests {
         let mut alpha = vec![0.0f32; n];
         let mut v = vec![0.0f32; g.d()];
         solve_reference(&mut model, ops, &g.targets, &mut alpha, &mut v, 80);
-        assert!(model.accuracy(ops, &v) > 0.95);
+        assert!(crate::serve::predict::accuracy(ops, &v) > 0.95);
         let gap = total_gap(&model, ops, &v, &g.targets, &alpha);
         let obj0 = model.objective(&vec![0.0; g.d()], &g.targets, &vec![0.0; n]).abs();
         assert!(gap < 1e-3 * obj0.max(1.0), "gap {gap}");

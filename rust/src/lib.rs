@@ -35,6 +35,10 @@
 //! * [`solver`] — the engine-agnostic training API: [`solver::Trainer`]
 //!   builds a [`solver::Problem`] and runs any [`solver::Solver`]
 //!   (HTHC or baseline) to a unified [`solver::FitReport`];
+//! * [`serve`] — the always-on serving layer: versioned snapshot store
+//!   with lock-free readers, batched raw-input prediction through the
+//!   blocked kernels, streaming ingest with certificate-gated
+//!   warm-start refits, and latency/QPS statistics (`hthc serve`);
 //! * [`runtime`] — PJRT executor for the AOT-compiled JAX/Pallas
 //!   artifacts (`artifacts/*.hlo.txt`), Python never on the hot path;
 //! * [`metrics`] — convergence traces and table rendering;
@@ -50,6 +54,7 @@ pub mod memory;
 pub mod metrics;
 pub mod runtime;
 pub mod sched;
+pub mod serve;
 pub mod solver;
 pub mod threadpool;
 pub mod util;

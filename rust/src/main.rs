@@ -13,11 +13,12 @@
 
 use hthc::coordinator::HthcConfig;
 use hthc::data::{Dataset, DatasetBuilder, DatasetKind, Family, Represent};
-use hthc::glm::{ElasticNet, GlmModel, HuberL1, Lasso, LogisticL1, Ridge, SvmDual, SvmL2Dual};
+use hthc::glm::{family_for, GlmModel};
 use hthc::memory::TierSim;
 use hthc::metrics::Table;
 use hthc::runtime::{GapService, XlaRuntime};
-use hthc::solver::{self, keys, Hthc, Trainer};
+use hthc::serve::{RefitConfig, ServeConfig};
+use hthc::solver::{self, keys, EpochEvent, Hthc, StopWhen, Trainer};
 use hthc::util::Args;
 
 const HELP: &str = "\
@@ -31,11 +32,15 @@ COMMANDS
   perfmodel   calibrate the §IV-F table and recommend (m, T_A, T_B, V_B)
               (--platform knl|thunderx2|centriq|host retargets the model)
   evaluate    load an exported model (--model-file) and score a dataset
+  serve       bounded always-on serving run: batched predict from a
+              versioned snapshot store, streaming ingest, warm-start
+              refits gated by the duality-gap certificate
   datasets    print the Table-I-style inventory of synthetic datasets
   artifacts   check the PJRT artifacts load and execute
   help        this text
 
-DATASET FLAGS (train / search / evaluate — one DatasetBuilder pipeline)
+DATASET FLAGS (train / search / evaluate / serve — one DatasetBuilder
+pipeline)
   --dataset   epsilon|dvsc|news20|criteo|tiny   (default tiny, generated)
   --data      PATH — load a real file instead; format is sniffed
               (HTHC1 binary magic, else LIBSVM text)
@@ -64,9 +69,26 @@ TRAIN FLAGS
   --split     train on this column fraction, report the held-out
               duality-gap certificate (and accuracy for SVM) in extras
   --split-seed PRNG seed for the split          (default: --seed)
+  --heldout-every N  with --split: recompute the held-out certificate
+              every N evaluation epochs via the epoch observer
   --pjrt      route task A's gaps through the AOT artifacts
   --csv       dump the convergence trace as CSV
   --seed      PRNG seed                         (default 42)
+
+SERVE FLAGS (plus the dataset + --model/--lam/--solver/--t-a/--t-b/--v-b
+flags above; the dataset seeds the base training set, raw samples
+recovered via Dataset::to_samples)
+  --duration     wall-clock budget in seconds   (default 5)
+  --batch        rows per predict request       (default 64)
+  --threads      predict-pool workers           (default 2)
+  --ingest       examples streamed per request round (default 4)
+  --refit-every  refit once this many examples are buffered (default 64)
+  --refit-secs   ... or after this many seconds  (default 0 = off)
+  --refit-epochs max training epochs per refit  (default 100)
+  --refit-timeout  wall-clock budget per refit  (default 10)
+  --regress-tol  reject a refit whose certificate regresses beyond
+                 old_gap * (1 + tol)            (default 0.10)
+  --assert-healthy  exit 1 unless >=1 refit published and rows served
 
 GLOBAL FLAGS
   --kernels   scalar|simd|portable|avx2 — inner-loop backend for every
@@ -98,6 +120,7 @@ fn main() {
         "search" => cmd_search(&args),
         "perfmodel" => cmd_perfmodel(&args),
         "evaluate" => cmd_evaluate(&args),
+        "serve" => cmd_serve(&args),
         "datasets" => cmd_datasets(&args),
         "artifacts" => cmd_artifacts(&args),
         _ => print!("{HELP}"),
@@ -108,28 +131,14 @@ fn main() {
     }
 }
 
+/// Name-based construction lives in [`hthc::glm::model_by_name`] (one
+/// dispatch shared with the serving layer); the binary only owns the
+/// exit policy.
 fn build_model(name: &str, lam: f32, n: usize) -> Box<dyn GlmModel> {
-    match name {
-        "lasso" => Box::new(Lasso::new(lam)),
-        "svm" => Box::new(SvmDual::new(lam, n)),
-        "svm-l2" => Box::new(SvmL2Dual::new(lam, n, 0.5 / n as f32)),
-        "ridge" => Box::new(Ridge::new(lam)),
-        "logistic" => Box::new(LogisticL1::new(lam)),
-        "elastic" => Box::new(ElasticNet::new(lam, 0.5)),
-        "huber" => Box::new(HuberL1::new(lam, 1.0)),
-        other => {
-            eprintln!("unknown model {other:?}");
-            std::process::exit(2);
-        }
-    }
-}
-
-fn family_for(model_name: &str) -> Family {
-    if matches!(model_name, "svm" | "svm-l2" | "logistic") {
-        Family::Classification
-    } else {
-        Family::Regression
-    }
+    hthc::glm::model_by_name(name, lam, n).unwrap_or_else(|| {
+        eprintln!("unknown model {name:?}");
+        std::process::exit(2);
+    })
 }
 
 /// The one dataset construction path for every command: flags onto the
@@ -220,6 +229,49 @@ fn cmd_train(args: &Args) {
         eprintln!("{e}");
         std::process::exit(2);
     });
+    // --heldout-every N: re-score the held-out certificate from inside
+    // the run on the observer cadence.  The observer owns a
+    // materialized copy of the held-out columns and a fresh scoring
+    // model (the trained model is mutably borrowed by the fit).
+    let heldout_every = args.usize_or("heldout-every", 0);
+    if heldout_every > 0 && val_cols.is_none() {
+        eprintln!("--heldout-every needs --split; ignoring");
+    }
+    let heldout_evals = std::sync::Arc::new(std::sync::atomic::AtomicU64::new(0));
+    let heldout_cb: Option<Box<dyn FnMut(&EpochEvent<'_>) -> bool>> = match &val_cols {
+        Some(cols) if heldout_every > 0 => {
+            let val = dataset.col_subset(cols.clone()).materialize();
+            let scorer = build_model(&model_name, lam, train.n_cols());
+            let classify = model_name.starts_with("svm");
+            let evals = std::sync::Arc::clone(&heldout_evals);
+            Some(Box::new(move |ev: &EpochEvent<'_>| {
+                // engines whose events carry a different-length v (e.g.
+                // SGD's row predictions on a transposed problem) are
+                // skipped rather than mis-scored
+                if ev.epoch % heldout_every != 0 || ev.v.len() != val.d() {
+                    return false;
+                }
+                let zeros = vec![0.0f32; val.n()];
+                let gap = hthc::glm::total_gap(
+                    scorer.as_ref(),
+                    val.as_block_ops(),
+                    ev.v,
+                    val.targets(),
+                    &zeros,
+                );
+                evals.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                let mut line = format!("held-out[epoch {}]: gap {gap:.6e}", ev.epoch);
+                if classify {
+                    let acc = hthc::serve::predict::accuracy(val.as_block_ops(), ev.v);
+                    line.push_str(&format!(", accuracy {:.2}%", acc * 100.0));
+                }
+                println!("{line}");
+                false
+            }))
+        }
+        _ => None,
+    };
+
     // gate on the resolved engine, not the flag spelling, so the
     // `A+B` alias also reaches the PJRT path
     let use_pjrt = trainer.solver_ref().name() == "hthc" && trainer.cfg().use_pjrt_gaps;
@@ -230,13 +282,23 @@ fn cmd_train(args: &Args) {
                 std::process::exit(1);
             });
         let service = GapService::new(&rt);
-        Trainer::new()
+        let mut pjrt_trainer = Trainer::new()
             .solver(Hthc::with_backend(&service))
-            .config(trainer.cfg().clone())
-            .fit_with(model.as_mut(), train, &sim)
+            .config(trainer.cfg().clone());
+        if let Some(cb) = heldout_cb {
+            pjrt_trainer = pjrt_trainer.on_epoch(cb);
+        }
+        pjrt_trainer.fit_with(model.as_mut(), train, &sim)
     } else {
+        if let Some(cb) = heldout_cb {
+            trainer = trainer.on_epoch(cb);
+        }
         trainer.fit_with(model.as_mut(), train, &sim)
     };
+    let heldout_eval_count = heldout_evals.load(std::sync::atomic::Ordering::Relaxed);
+    if heldout_eval_count > 0 {
+        result.extras.set_u64(keys::HELDOUT_EVALS, heldout_eval_count);
+    }
 
     // held-out certificate: the duality gap decomposes per coordinate
     // (Eq. 3), so summing gap_i over the held-out columns at alpha_i = 0
@@ -254,7 +316,7 @@ fn cmd_train(args: &Args) {
             val.len()
         );
         if model_name.starts_with("svm") {
-            let acc = SvmDual::new(lam, train.n_cols()).accuracy(&val, &result.v);
+            let acc = hthc::serve::predict::accuracy(&val, &result.v);
             result.extras.set_f64(keys::HELDOUT_ACCURACY, acc);
             line.push_str(&format!(", accuracy {:.2}%", acc * 100.0));
         }
@@ -278,7 +340,7 @@ fn cmd_train(args: &Args) {
     }
     println!("result: {}", result.summary());
     if model_name.starts_with("svm") {
-        let acc = SvmDual::new(lam, train.n_cols()).accuracy(train.as_ops(), &result.v);
+        let acc = hthc::serve::predict::accuracy(train.as_block_ops(), &result.v);
         println!("training accuracy: {:.2}%", acc * 100.0);
     }
     if args.bool_or("csv", false) {
@@ -383,16 +445,76 @@ fn cmd_evaluate(args: &Args) {
     let g = build_dataset(args, family);
     assert_eq!(g.n(), saved.alpha.len(), "model/dataset coordinate mismatch");
     let v = g.matvec_alpha(&saved.alpha);
+    // scoring goes through the consolidated serve::predict seam
     match family {
         Family::Regression => {
-            let mse = hthc::kernels::sq_err_f64(&v, g.targets()) / g.d() as f64;
+            let mse = hthc::serve::predict::mean_squared_error(&v, g.targets());
             let support = saved.alpha.iter().filter(|&&a| a != 0.0).count();
             println!("MSE {mse:.6}; support {support}/{}", g.n());
         }
         Family::Classification => {
-            let ops = g.as_ops();
-            let acc = (0..g.n()).filter(|&j| ops.dot(j, &v) > 0.0).count() as f64 / g.n() as f64;
+            let acc = hthc::serve::predict::accuracy(g.as_block_ops(), &v);
             println!("training accuracy {:.2}%", acc * 100.0);
+        }
+    }
+}
+
+/// `hthc serve` — a bounded always-on serving run (`serve::sim::run`):
+/// initial fit on the dataset flags, then batched predicts against the
+/// live snapshot while streamed examples trigger certificate-gated
+/// warm-start refits.
+fn cmd_serve(args: &Args) {
+    let model_name = args.str_or("model", "lasso");
+    let family = family_for(&model_name);
+    let dataset = build_dataset(args, family);
+    println!("dataset: {}", dataset.describe());
+    let base = dataset.to_samples().unwrap_or_else(|e| {
+        eprintln!("serve: {e}");
+        std::process::exit(2);
+    });
+    drop(dataset); // the serving run rebuilds through its own pipeline
+    let budget = StopWhen::gap_below(args.f64_or("tol", 1e-5))
+        .max_epochs(args.usize_or("refit-epochs", 100))
+        .timeout_secs(args.f64_or("refit-timeout", 10.0));
+    let cfg = ServeConfig {
+        duration_secs: args.f64_or("duration", 5.0),
+        batch: args.usize_or("batch", 64),
+        threads: args.usize_or("threads", 2),
+        ingest_per_round: args.usize_or("ingest", 4),
+        refit: RefitConfig {
+            refit_every: args.usize_or("refit-every", 64),
+            refit_secs: args.f64_or("refit-secs", 0.0),
+            budget,
+            regress_tol: args.f64_or("regress-tol", 0.10),
+            threads: (
+                args.usize_or("t-a", 1),
+                args.usize_or("t-b", 2),
+                args.usize_or("v-b", 1),
+            ),
+            solver: args.str_or("solver", "hthc"),
+            seed: args.u64_or("seed", 42),
+        },
+        normalize: args.bool_or("normalize", true),
+        center: args.bool_or("center", true),
+        model: model_name,
+        lam: args.f32_or("lam", solver::DEFAULT_LAM),
+        seed: args.u64_or("seed", 42),
+    };
+    match hthc::serve::sim::run(base, &cfg) {
+        Ok(report) => {
+            println!("{}", report.render());
+            if args.bool_or("assert-healthy", false) && !report.healthy() {
+                eprintln!(
+                    "serve: UNHEALTHY — need >=1 refit publish and served rows \
+                     (published {}, rows {})",
+                    report.published, report.rows
+                );
+                std::process::exit(1);
+            }
+        }
+        Err(e) => {
+            eprintln!("serve: {e}");
+            std::process::exit(1);
         }
     }
 }

@@ -1,0 +1,456 @@
+//! Streaming ingest and the warm-start refit loop.
+//!
+//! [`IngestBuffer`] accumulates raw labeled examples; a [`Refitter`]
+//! drains it on a configurable cadence (example count or elapsed time),
+//! rebuilds the training set through the one [`DatasetBuilder`]
+//! pipeline (base samples + everything absorbed so far, re-normalized
+//! together), warm-starts a [`Trainer`] fit from the live snapshot's
+//! iterate, and publishes the result **only if the duality-gap
+//! certificate does not regress** beyond a tolerance
+//! ([`publish_decision`]).  A failed or diverged refit keeps the old
+//! version serving and is counted — graceful degradation, never a
+//! serving gap.
+//!
+//! The refit budget is an ordinary [`StopWhen`], so count-based and
+//! wall-clock-bounded refits use the same stopping machinery as any
+//! other fit.
+
+use super::{ModelSnapshot, ModelStore, ServeStats};
+use crate::data::{Dataset, DatasetBuilder, Family, Sample};
+use crate::memory::TierSim;
+use crate::solver::{by_name, StopWhen, Trainer};
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Thread-safe accumulator for streamed raw examples.
+#[derive(Default)]
+pub struct IngestBuffer {
+    inner: Mutex<Vec<Sample>>,
+    /// Examples ever pushed (drains do not reset this).
+    total: AtomicU64,
+}
+
+impl IngestBuffer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&self, s: Sample) {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner()).push(s);
+        self.total.fetch_add(1, Relaxed);
+    }
+
+    pub fn push_many(&self, batch: Vec<Sample>) {
+        let n = batch.len() as u64;
+        self.inner
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .extend(batch);
+        self.total.fetch_add(n, Relaxed);
+    }
+
+    /// Examples currently buffered (waiting for the next refit).
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner()).len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Examples ever pushed.
+    pub fn total(&self) -> u64 {
+        self.total.load(Relaxed)
+    }
+
+    /// Take everything buffered.
+    pub fn drain(&self) -> Vec<Sample> {
+        std::mem::take(&mut *self.inner.lock().unwrap_or_else(|e| e.into_inner()))
+    }
+}
+
+/// The refit loop's knobs.
+#[derive(Clone, Debug)]
+pub struct RefitConfig {
+    /// Refit once this many examples are buffered (0 disables the
+    /// count trigger).
+    pub refit_every: usize,
+    /// Refit when this much time passed since the last attempt and at
+    /// least one example is buffered (0 disables the time trigger).
+    pub refit_secs: f64,
+    /// Training budget per refit (`timeout_secs` is the serving-path
+    /// latency bound on background training).
+    pub budget: StopWhen,
+    /// Publish tolerance: a refit whose certificate exceeds
+    /// `old_gap * (1 + regress_tol)` (and is not converged outright) is
+    /// rejected.
+    pub regress_tol: f64,
+    /// Thread topology `(T_A, T_B, V_B)` for refits.
+    pub threads: (usize, usize, usize),
+    /// Engine name for refits (see [`by_name`]).
+    pub solver: String,
+    pub seed: u64,
+}
+
+impl Default for RefitConfig {
+    fn default() -> Self {
+        RefitConfig {
+            refit_every: 64,
+            refit_secs: 0.0,
+            budget: StopWhen::gap_below(1e-5).max_epochs(100).timeout_secs(10.0),
+            regress_tol: 0.10,
+            threads: (1, 2, 1),
+            solver: "hthc".into(),
+            seed: 42,
+        }
+    }
+}
+
+/// The publish rule, separated out so the rejection path is testable
+/// without running a diverged fit:
+///
+/// * a non-finite certificate never publishes (diverged refit);
+/// * a certificate within the convergence tolerance always publishes
+///   (the refit solved its problem — the old gap, measured on *fewer*
+///   examples, is not comparable beyond that);
+/// * otherwise publish only if the gap did not regress past
+///   `old_gap * (1 + regress_tol)`.
+pub fn publish_decision(old_gap: f64, new_gap: f64, gap_tol: f64, regress_tol: f64) -> bool {
+    if !new_gap.is_finite() {
+        return false;
+    }
+    new_gap <= gap_tol || new_gap <= old_gap * (1.0 + regress_tol)
+}
+
+/// What one refit attempt did.
+#[derive(Clone, Debug, PartialEq)]
+pub enum RefitOutcome {
+    /// New version live.
+    Published { version: u64, gap: f64 },
+    /// Certificate regressed (or went non-finite); old version keeps
+    /// serving.
+    Rejected { gap: f64, serving: u64 },
+    /// Dataset rebuild or model construction failed; old version keeps
+    /// serving, absorbed examples are retained for the next attempt.
+    Failed { error: String },
+    /// Nothing buffered — no attempt made.
+    NoData,
+}
+
+/// Owns the growing raw training set and runs warm-started refits
+/// against a [`ModelStore`] (see module docs).
+pub struct Refitter {
+    /// Raw-space training samples: the base set plus everything
+    /// absorbed by previous refits.
+    samples: Vec<Sample>,
+    family: Family,
+    normalize: bool,
+    center: bool,
+    model_name: String,
+    lam: f32,
+    cfg: RefitConfig,
+    last_refit: Instant,
+    absorbed_total: u64,
+}
+
+impl Refitter {
+    /// `base` is the initial training set in raw space (e.g.
+    /// [`Dataset::to_samples`] of what the live snapshot was trained
+    /// on); `normalize`/`center` must match the pipeline flags the base
+    /// model was built with, so refits preprocess consistently.
+    pub fn new(
+        base: Vec<Sample>,
+        model_name: &str,
+        lam: f32,
+        normalize: bool,
+        center: bool,
+        cfg: RefitConfig,
+    ) -> Self {
+        Refitter {
+            samples: base,
+            family: crate::glm::family_for(model_name),
+            normalize,
+            center,
+            model_name: model_name.to_string(),
+            lam,
+            cfg,
+            last_refit: Instant::now(),
+            absorbed_total: 0,
+        }
+    }
+
+    pub fn config(&self) -> &RefitConfig {
+        &self.cfg
+    }
+
+    /// Examples absorbed into the training set across all refits.
+    pub fn absorbed(&self) -> u64 {
+        self.absorbed_total
+    }
+
+    /// Current training-set size (base + absorbed).
+    pub fn sample_count(&self) -> usize {
+        self.samples.len()
+    }
+
+    /// Whether the cadence says a refit is due given `buffered` waiting
+    /// examples.
+    pub fn should_refit(&self, buffered: usize) -> bool {
+        if buffered == 0 {
+            return false;
+        }
+        (self.cfg.refit_every > 0 && buffered >= self.cfg.refit_every)
+            || (self.cfg.refit_secs > 0.0
+                && self.last_refit.elapsed().as_secs_f64() >= self.cfg.refit_secs)
+    }
+
+    fn rebuild(&self) -> crate::Result<Dataset> {
+        DatasetBuilder::libsvm_samples(self.samples.clone())
+            .family(self.family)
+            .normalize(self.normalize)
+            .center_targets(self.center)
+            .build()
+    }
+
+    /// Drain the buffer, rebuild, warm-start a fit from the live
+    /// snapshot, and publish or reject by certificate.  Counters land
+    /// in `stats`; the old version keeps serving on every non-publish
+    /// path.
+    pub fn refit_once(
+        &mut self,
+        store: &ModelStore,
+        buf: &IngestBuffer,
+        stats: &ServeStats,
+    ) -> RefitOutcome {
+        let fresh = buf.drain();
+        if fresh.is_empty() {
+            return RefitOutcome::NoData;
+        }
+        stats.refit_attempts.fetch_add(1, Relaxed);
+        self.absorbed_total += fresh.len() as u64;
+        self.samples.extend(fresh);
+        self.last_refit = Instant::now();
+
+        let outcome = self.train_and_decide(store);
+        match &outcome {
+            RefitOutcome::Published { .. } => stats.refit_published.fetch_add(1, Relaxed),
+            RefitOutcome::Rejected { .. } => stats.refit_rejected.fetch_add(1, Relaxed),
+            RefitOutcome::Failed { .. } => stats.refit_failed.fetch_add(1, Relaxed),
+            RefitOutcome::NoData => 0,
+        };
+        outcome
+    }
+
+    fn train_and_decide(&mut self, store: &ModelStore) -> RefitOutcome {
+        let ds = match self.rebuild() {
+            Ok(ds) => ds,
+            Err(e) => return RefitOutcome::Failed { error: format!("rebuild: {e}") },
+        };
+        let Some(mut model) = crate::glm::model_by_name(&self.model_name, self.lam, ds.n_cols())
+        else {
+            return RefitOutcome::Failed {
+                error: format!("unknown model {:?}", self.model_name),
+            };
+        };
+        let Some(engine) = by_name(&self.cfg.solver) else {
+            return RefitOutcome::Failed {
+                error: format!("unknown solver {:?}", self.cfg.solver),
+            };
+        };
+        let live = store.load();
+        let (t_a, t_b, v_b) = self.cfg.threads;
+        let mut trainer = Trainer::new()
+            .solver_boxed(engine)
+            .threads(t_a, t_b, v_b)
+            .stop_when(self.cfg.budget)
+            .seed(self.cfg.seed)
+            .warm_start_from(&live.iterate(), ds.n_cols());
+        let report = trainer.fit_with(model.as_mut(), &ds, &TierSim::default());
+        // engine-independent certificate: some engines' own traces carry
+        // NaN gaps (SGD), and publish decisions must be comparable
+        let cert = crate::glm::total_gap(
+            model.as_ref(),
+            ds.as_block_ops(),
+            &report.v,
+            ds.targets(),
+            &report.alpha,
+        );
+        if publish_decision(live.gap, cert, self.cfg.budget.gap_tol, self.cfg.regress_tol) {
+            let snap =
+                ModelSnapshot::from_fit(model.as_ref(), &ds, &report, cert, self.absorbed_total);
+            let version = store.publish(snap);
+            RefitOutcome::Published { version, gap: cert }
+        } else {
+            RefitOutcome::Rejected { gap: cert, serving: live.version }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::DatasetKind;
+    use crate::glm::Lasso;
+    use crate::solver::SeqThreshold;
+    use crate::util::Rng;
+
+    #[test]
+    fn buffer_push_drain_and_totals() {
+        let buf = IngestBuffer::new();
+        assert!(buf.is_empty());
+        buf.push(Sample { label: 1.0, features: vec![(0, 1.0)] });
+        buf.push_many(vec![
+            Sample { label: 2.0, features: vec![] },
+            Sample { label: 3.0, features: vec![] },
+        ]);
+        assert_eq!(buf.len(), 3);
+        assert_eq!(buf.total(), 3);
+        let drained = buf.drain();
+        assert_eq!(drained.len(), 3);
+        assert!(buf.is_empty());
+        assert_eq!(buf.total(), 3, "total survives the drain");
+    }
+
+    #[test]
+    fn publish_decision_rules() {
+        // converged outright: publish regardless of the old gap
+        assert!(publish_decision(1e-9, 5e-6, 1e-5, 0.1));
+        // mild regression within tolerance: publish
+        assert!(publish_decision(1.0, 1.05, 1e-5, 0.1));
+        // regression past tolerance: reject
+        assert!(!publish_decision(1.0, 1.2, 1e-5, 0.1));
+        // improvement always publishes
+        assert!(publish_decision(1.0, 0.5, 1e-5, 0.0));
+        // diverged certificates never publish
+        assert!(!publish_decision(1.0, f64::NAN, 1e-5, 10.0));
+        assert!(!publish_decision(1.0, f64::INFINITY, 1e-5, 10.0));
+    }
+
+    #[test]
+    fn should_refit_count_cadence() {
+        let r = Refitter::new(
+            vec![],
+            "lasso",
+            0.01,
+            true,
+            true,
+            RefitConfig { refit_every: 4, refit_secs: 0.0, ..Default::default() },
+        );
+        assert!(!r.should_refit(0));
+        assert!(!r.should_refit(3));
+        assert!(r.should_refit(4));
+        // both triggers disabled: never refit
+        let never = Refitter::new(
+            vec![],
+            "lasso",
+            0.01,
+            true,
+            true,
+            RefitConfig { refit_every: 0, refit_secs: 0.0, ..Default::default() },
+        );
+        assert!(!never.should_refit(1000));
+    }
+
+    /// Full flow: initial fit -> serve -> ingest perturbed examples ->
+    /// warm-started refit publishes version 2 with the absorbed count.
+    #[test]
+    fn refit_publishes_and_counts_absorbed() {
+        let ds = DatasetBuilder::generated(DatasetKind::Tiny, Family::Regression)
+            .seed(71)
+            .normalize(true)
+            .center_targets(true)
+            .build()
+            .unwrap();
+        let mut model = Lasso::new(0.01);
+        let mut trainer = Trainer::new()
+            .solver(SeqThreshold)
+            .stop_when(StopWhen::gap_below(1e-7).max_epochs(200));
+        let report = trainer.fit_with(&mut model, &ds, &Default::default());
+        let gap = crate::glm::total_gap(
+            &model,
+            ds.as_block_ops(),
+            &report.v,
+            ds.targets(),
+            &report.alpha,
+        );
+        let store = ModelStore::new(ModelSnapshot::from_fit(&model, &ds, &report, gap, 0));
+        let stats = ServeStats::new();
+        let base = ds.to_samples().unwrap();
+
+        let mut refitter = Refitter::new(
+            base.clone(),
+            "lasso",
+            0.01,
+            true,
+            true,
+            RefitConfig {
+                refit_every: 2,
+                solver: "st".into(),
+                budget: StopWhen::gap_below(1e-7).max_epochs(200),
+                ..Default::default()
+            },
+        );
+        let buf = IngestBuffer::new();
+        assert_eq!(refitter.refit_once(&store, &buf, &stats), RefitOutcome::NoData);
+
+        // stream slightly perturbed copies of real rows
+        let mut rng = Rng::new(72);
+        buf.push_many(
+            base.iter()
+                .take(3)
+                .map(|s| Sample {
+                    label: s.label + 0.01 * rng.normal(),
+                    features: s.features.clone(),
+                })
+                .collect(),
+        );
+        assert!(refitter.should_refit(buf.len()));
+        match refitter.refit_once(&store, &buf, &stats) {
+            RefitOutcome::Published { version, gap } => {
+                assert_eq!(version, 2);
+                assert!(gap.is_finite());
+            }
+            other => panic!("expected publish, got {other:?}"),
+        }
+        assert_eq!(store.version(), 2);
+        assert_eq!(stats.published(), 1);
+        let live = store.load();
+        assert_eq!(live.absorbed, 3);
+        assert_eq!(refitter.sample_count(), base.len() + 3);
+        assert_eq!(stats.attempts(), 1);
+        assert!(buf.is_empty());
+    }
+
+    #[test]
+    fn failed_rebuild_keeps_old_version() {
+        let ds = DatasetBuilder::generated(DatasetKind::Tiny, Family::Regression)
+            .seed(73)
+            .build()
+            .unwrap();
+        let mut model = Lasso::new(0.01);
+        let mut trainer =
+            Trainer::new().solver(SeqThreshold).stop_when(StopWhen::gap_below(1e-6));
+        let report = trainer.fit_with(&mut model, &ds, &Default::default());
+        let store = ModelStore::new(ModelSnapshot::from_fit(&model, &ds, &report, 0.1, 0));
+        let stats = ServeStats::new();
+        // unknown model name forces the failure path after absorption
+        let mut refitter = Refitter::new(
+            ds.to_samples().unwrap(),
+            "definitely-not-a-model",
+            0.01,
+            false,
+            false,
+            RefitConfig::default(),
+        );
+        let buf = IngestBuffer::new();
+        buf.push(Sample { label: 0.5, features: vec![(0, 1.0)] });
+        match refitter.refit_once(&store, &buf, &stats) {
+            RefitOutcome::Failed { error } => assert!(error.contains("unknown model")),
+            other => panic!("expected failure, got {other:?}"),
+        }
+        assert_eq!(store.version(), 1, "old version keeps serving");
+        assert_eq!(stats.failed(), 1);
+        assert_eq!(stats.attempts(), 1);
+    }
+}

@@ -1,0 +1,42 @@
+//! The always-on serving layer (`rust/DESIGN.md` §11).
+//!
+//! Training makes a model; this module keeps it *answering* while it
+//! keeps learning:
+//!
+//! * [`ModelStore`] — immutable versioned [`ModelSnapshot`]s behind an
+//!   atomic slot swap: readers never lock, writers never tear;
+//! * [`PredictEngine`] — batched raw-input prediction through the same
+//!   blocked kernels training uses, bitwise-identical to a direct
+//!   per-column evaluation, optionally parallel over a
+//!   [`WorkerPool`](crate::threadpool::WorkerPool);
+//! * [`IngestBuffer`] + [`Refitter`] — streaming examples absorbed on a
+//!   cadence by [`Trainer`](crate::solver::Trainer) warm starts, with a
+//!   duality-gap certificate gating every publish ([`publish_decision`]);
+//! * [`ServeStats`] — lock-free counters and fixed-bucket latency
+//!   quantiles for the `hthc serve` surface, driven by the bounded
+//!   in-process simulator in [`sim`].
+//!
+//! The staleness model follows HOGWILD! (Niu et al.): predictions may
+//! lag writes by a bounded amount — here, by at most one refit cadence
+//! plus one training budget — and each snapshot reports exactly how
+//! stale it is ([`ModelSnapshot::staleness_secs`] + absorbed counts).
+//! Warm-starting refits from the live iterate is licensed by Ioannou et
+//! al.'s warm-started local subproblems (PAPERS.md): convergence does
+//! not suffer, and the certificate gate catches the cases where it
+//! would.
+
+pub mod ingest;
+pub mod predict;
+pub mod sim;
+pub mod snapshot;
+pub mod stats;
+pub mod store;
+
+pub use ingest::{publish_decision, IngestBuffer, RefitConfig, RefitOutcome, Refitter};
+pub use predict::{
+    accuracy, accuracy_from_scores, decision_scores, mean_squared_error, PredictEngine,
+};
+pub use sim::{ServeConfig, ServeReport};
+pub use snapshot::ModelSnapshot;
+pub use stats::{LatencyHistogram, ServeStats};
+pub use store::ModelStore;

@@ -1,0 +1,341 @@
+//! [`PredictEngine`] — the crate's single prediction seam.
+//!
+//! Every prediction in the crate reduces to *dot a dense weight vector
+//! against columns of a matrix*, which is exactly the blocked-sweep
+//! kernel surface ([`BlockOps::dots_block`]).  This module owns that
+//! reduction once:
+//!
+//! * the free functions ([`decision_scores`], [`accuracy`],
+//!   [`mean_squared_error`]) are the consolidated replacements for the
+//!   ad-hoc predict loops that used to live in `glm::svm` (training
+//!   accuracy), `baselines::sgd` (row-cache MSE) and `main.rs`
+//!   (`evaluate`);
+//! * [`PredictEngine`] wraps the same tile sweep around a live
+//!   [`ModelStore`] snapshot for the serving layer — raw feature
+//!   vectors in (the snapshot's weights already fold the training
+//!   normalization, see [`super::ModelSnapshot`]), scores out, with
+//!   optional [`WorkerPool`] parallelism and latency recording.
+//!
+//! # Bitwise determinism
+//!
+//! The batch path tiles columns into fixed [`BLOCK_COLS`]-aligned
+//! blocks and evaluates each block with one `dots_block` call — the
+//! same call a direct kernel evaluation of that block makes.  Tile
+//! boundaries depend only on the column count, and each output element
+//! is written by exactly one tile, so the result is **bitwise
+//! identical** whether the tiles run serially or race across any
+//! number of pool workers (`rust/tests/serve_diff.rs` proves this per
+//! representation × backend).
+
+use super::{ModelSnapshot, ModelStore, ServeStats};
+use crate::data::{BlockOps, Matrix};
+use crate::kernels::BLOCK_COLS;
+use crate::threadpool::WorkerPool;
+use std::sync::atomic::{AtomicUsize, Ordering::Relaxed};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// `out[j] = <w, d_j>` for every column, through fixed
+/// [`BLOCK_COLS`]-aligned `dots_block` tiles (see module docs).
+pub fn scores_into(data: &dyn BlockOps, w: &[f32], out: &mut [f32]) {
+    assert_eq!(out.len(), data.n_cols());
+    let mut idx = [0usize; BLOCK_COLS];
+    for (tile, chunk) in out.chunks_mut(BLOCK_COLS).enumerate() {
+        let base = tile * BLOCK_COLS;
+        for (t, j) in idx.iter_mut().zip(base..base + chunk.len()) {
+            *t = j;
+        }
+        data.dots_block(&idx[..chunk.len()], w, chunk);
+    }
+}
+
+/// Column decision scores `<w, d_j>` (serial tile sweep).
+pub fn decision_scores(data: &dyn BlockOps, w: &[f32]) -> Vec<f32> {
+    let mut out = vec![0.0f32; data.n_cols()];
+    scores_into(data, w, &mut out);
+    out
+}
+
+/// Fraction of columns with a positive decision score.  With the
+/// classification orientation's label-scaled columns (`d_j = y_j x_j`)
+/// this *is* training/held-out accuracy: sample `j` is correct iff
+/// `<v, d_j> > 0`.
+pub fn accuracy_from_scores(scores: &[f32]) -> f64 {
+    if scores.is_empty() {
+        return f64::NAN;
+    }
+    scores.iter().filter(|&&s| s > 0.0).count() as f64 / scores.len() as f64
+}
+
+/// Classification accuracy of the shared vector `v` over label-scaled
+/// columns — the consolidated replacement for `SvmDual::accuracy`.
+pub fn accuracy(data: &dyn BlockOps, v: &[f32]) -> f64 {
+    accuracy_from_scores(&decision_scores(data, v))
+}
+
+/// Mean squared error between predictions and targets (f64-accumulated
+/// through the kernel layer) — the consolidated replacement for
+/// `RowCache::mean_squared_error` and `evaluate`'s inline loop.
+pub fn mean_squared_error(preds: &[f32], targets: &[f32]) -> f64 {
+    assert_eq!(preds.len(), targets.len());
+    crate::kernels::sq_err_f64(preds, targets) / preds.len().max(1) as f64
+}
+
+/// Disjoint-tile output pointer for the pooled sweep (each tile writes
+/// its own `out` range, claimed exactly once through an atomic cursor).
+struct TileOut(*mut f32);
+unsafe impl Send for TileOut {}
+unsafe impl Sync for TileOut {}
+
+/// Batched prediction over a live [`ModelStore`] snapshot.
+pub struct PredictEngine {
+    store: Arc<ModelStore>,
+    pool: Option<WorkerPool>,
+    stats: Option<Arc<ServeStats>>,
+}
+
+impl PredictEngine {
+    pub fn new(store: Arc<ModelStore>) -> Self {
+        PredictEngine { store, pool: None, stats: None }
+    }
+
+    /// Answer batches with `t` pool workers (`t <= 1` stays serial).
+    /// The tile decomposition — and therefore the result, bitwise — is
+    /// the same either way.
+    pub fn with_threads(mut self, t: usize) -> Self {
+        self.pool = (t > 1).then(|| WorkerPool::with_name(t, "serve-predict"));
+        self
+    }
+
+    /// Record request counts and latency into `stats`.
+    pub fn with_stats(mut self, stats: Arc<ServeStats>) -> Self {
+        self.stats = Some(stats);
+        self
+    }
+
+    /// The snapshot requests are currently answered from.
+    pub fn snapshot(&self) -> Arc<ModelSnapshot> {
+        self.store.load()
+    }
+
+    /// Score a batch given as matrix *columns* (each column one raw
+    /// input vector).  One snapshot load serves the whole batch, so a
+    /// concurrent publish never tears a batch across versions.
+    ///
+    /// Panics if the batch row count does not match the snapshot's
+    /// input dimension.
+    pub fn predict_batch(&self, batch: &dyn BlockOps) -> Vec<f32> {
+        let t0 = Instant::now();
+        let snap = self.store.load();
+        assert_eq!(
+            batch.n_rows(),
+            snap.input_dim(),
+            "batch rows must match the snapshot input dimension"
+        );
+        let n = batch.n_cols();
+        let mut out = vec![0.0f32; n];
+        match &self.pool {
+            None => scores_into(batch, &snap.weights, &mut out),
+            Some(pool) => {
+                let cursor = AtomicUsize::new(0);
+                let base_ptr = TileOut(out.as_mut_ptr());
+                let ptr = &base_ptr;
+                let w = &snap.weights;
+                pool.run(move |_worker| loop {
+                    let tile = cursor.fetch_add(1, Relaxed);
+                    let lo = tile * BLOCK_COLS;
+                    if lo >= n {
+                        break;
+                    }
+                    let m = BLOCK_COLS.min(n - lo);
+                    let mut idx = [0usize; BLOCK_COLS];
+                    for (t, j) in idx.iter_mut().zip(lo..lo + m) {
+                        *t = j;
+                    }
+                    // disjoint range: tile indices are claimed exactly
+                    // once, so no two workers write the same elements
+                    let chunk =
+                        unsafe { std::slice::from_raw_parts_mut(ptr.0.add(lo), m) };
+                    batch.dots_block(&idx[..m], w, chunk);
+                });
+            }
+        }
+        if snap.bias != 0.0 {
+            for o in out.iter_mut() {
+                *o += snap.bias;
+            }
+        }
+        if let Some(stats) = &self.stats {
+            stats.record_predict(n, t0.elapsed());
+        }
+        out
+    }
+
+    /// [`predict_batch`](Self::predict_batch) over a runtime-polymorphic
+    /// [`Matrix`].
+    pub fn predict_matrix(&self, batch: &Matrix) -> Vec<f32> {
+        self.predict_batch(batch.as_block_ops())
+    }
+
+    /// Score one dense raw input vector.
+    pub fn predict_one(&self, x: &[f32]) -> f32 {
+        let t0 = Instant::now();
+        let snap = self.store.load();
+        assert_eq!(x.len(), snap.input_dim(), "input length mismatch");
+        let s = crate::kernels::dot(x, &snap.weights) + snap.bias;
+        if let Some(stats) = &self.stats {
+            stats.record_predict(1, t0.elapsed());
+        }
+        s
+    }
+
+    /// Score one sparse raw input given as sorted `(feature, value)`
+    /// pairs.  Features beyond the snapshot's input dimension are
+    /// ignored (a streamed example may mention features the model was
+    /// never trained on).
+    pub fn predict_sparse_one(&self, features: &[(u32, f32)]) -> f32 {
+        let t0 = Instant::now();
+        let snap = self.store.load();
+        let dim = snap.input_dim() as u32;
+        let in_range = features.last().is_none_or(|&(i, _)| i < dim);
+        let s = if in_range {
+            crate::kernels::pair_dot(features, &snap.weights)
+        } else {
+            features
+                .iter()
+                .filter(|&&(i, _)| i < dim)
+                .map(|&(i, v)| snap.weights[i as usize] * v)
+                .sum()
+        } + snap.bias;
+        if let Some(stats) = &self.stats {
+            stats.record_predict(1, t0.elapsed());
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{DatasetBuilder, DatasetKind, DenseMatrix, Family, SparseMatrix};
+    use crate::glm::ModelKind;
+    use crate::util::Rng;
+    use std::time::Instant as StdInstant;
+
+    fn store_with(weights: Vec<f32>, bias: f32) -> Arc<ModelStore> {
+        let n = weights.len();
+        Arc::new(ModelStore::new(ModelSnapshot {
+            version: 0,
+            kind: ModelKind::Lasso { lam: 0.1, lip_b: 1.0 },
+            family: Family::Regression,
+            weights,
+            bias,
+            alpha: vec![0.0; n],
+            col_scales: None,
+            gap: 0.0,
+            trained_cols: n,
+            absorbed: 0,
+            published_at: StdInstant::now(),
+        }))
+    }
+
+    fn batch(d: usize, n: usize, seed: u64) -> DenseMatrix {
+        let mut rng = Rng::new(seed);
+        DenseMatrix::from_col_major(d, n, (0..d * n).map(|_| rng.normal()).collect())
+    }
+
+    #[test]
+    fn pooled_batch_is_bitwise_equal_to_serial() {
+        let d = 24;
+        let mut rng = Rng::new(5);
+        let w: Vec<f32> = (0..d).map(|_| rng.normal()).collect();
+        // n chosen to exercise a ragged final tile
+        for n in [1usize, 7, 8, 19, 64, 65] {
+            let m = batch(d, n, 100 + n as u64);
+            let serial = PredictEngine::new(store_with(w.clone(), 0.25));
+            let pooled =
+                PredictEngine::new(store_with(w.clone(), 0.25)).with_threads(3);
+            let a = serial.predict_batch(&m);
+            let b = pooled.predict_batch(&m);
+            assert_eq!(a.len(), n);
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.to_bits(), y.to_bits(), "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn single_and_sparse_paths_agree_with_batch() {
+        let d = 16;
+        let mut rng = Rng::new(6);
+        let w: Vec<f32> = (0..d).map(|_| rng.normal()).collect();
+        let engine = PredictEngine::new(store_with(w.clone(), 1.5));
+        let x: Vec<f32> = (0..d).map(|_| rng.normal()).collect();
+        let dense = engine.predict_one(&x);
+        let pairs: Vec<(u32, f32)> =
+            x.iter().enumerate().map(|(i, &v)| (i as u32, v)).collect();
+        let sparse = engine.predict_sparse_one(&pairs);
+        assert!((dense - sparse).abs() < 1e-4, "{dense} vs {sparse}");
+        // out-of-range features are dropped, not a panic
+        let oob = engine.predict_sparse_one(&[(0, 1.0), (999, 5.0)]);
+        assert!((oob - (w[0] + 1.5)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn stats_record_requests_and_rows() {
+        let stats = Arc::new(ServeStats::new());
+        let engine = PredictEngine::new(store_with(vec![1.0; 8], 0.0))
+            .with_stats(Arc::clone(&stats));
+        engine.predict_batch(&batch(8, 5, 9));
+        engine.predict_one(&[0.0; 8]);
+        assert_eq!(stats.requests(), 2);
+        assert_eq!(stats.rows(), 6);
+        assert_eq!(stats.latency.count(), 2);
+    }
+
+    #[test]
+    fn consolidated_accuracy_matches_per_column_rule() {
+        let ds = DatasetBuilder::generated(DatasetKind::Tiny, Family::Classification)
+            .seed(11)
+            .build()
+            .unwrap();
+        let mut rng = Rng::new(12);
+        let v: Vec<f32> = (0..ds.d()).map(|_| rng.normal()).collect();
+        let ops = ds.as_ops();
+        let want = (0..ds.n()).filter(|&j| ops.dot(j, &v) > 0.0).count() as f64
+            / ds.n() as f64;
+        assert_eq!(accuracy(ds.as_block_ops(), &v), want);
+    }
+
+    #[test]
+    fn mse_matches_inline_loop() {
+        let preds = vec![1.0f32, 2.0, 3.0];
+        let targets = vec![1.5f32, 2.0, 1.0];
+        let want = (0.25 + 0.0 + 4.0) / 3.0;
+        assert!((mean_squared_error(&preds, &targets) - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sparse_batch_matches_dense_batch() {
+        let d = 12;
+        let mut rng = Rng::new(13);
+        let w: Vec<f32> = (0..d).map(|_| rng.normal()).collect();
+        let dm = batch(d, 10, 14);
+        let cols: Vec<Vec<(u32, f32)>> = (0..10)
+            .map(|j| {
+                dm.col(j)
+                    .iter()
+                    .enumerate()
+                    .map(|(r, &x)| (r as u32, x))
+                    .collect()
+            })
+            .collect();
+        let sm = SparseMatrix::from_columns(d, cols);
+        let engine = PredictEngine::new(store_with(w, 0.0));
+        let a = engine.predict_batch(&dm);
+        let b = engine.predict_batch(&sm);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-4);
+        }
+    }
+}

@@ -1,0 +1,358 @@
+//! Bounded in-process serving run — the `hthc serve` engine room.
+//!
+//! No sockets (ROADMAP simulate-first sequencing): an in-process
+//! request generator drives [`PredictEngine`] with perturbed copies of
+//! real examples while a background thread runs the
+//! [`Refitter`] cadence over an [`IngestBuffer`] that the request loop
+//! feeds.  The run is wall-clock bounded and returns a [`ServeReport`]
+//! (throughput, latency quantiles, refit counters, final certificate)
+//! that the CLI renders and the serve benchmark records.
+
+use super::{
+    IngestBuffer, ModelSnapshot, ModelStore, PredictEngine, Refitter, RefitConfig, ServeStats,
+};
+use crate::data::{DatasetBuilder, Sample, SparseMatrix};
+use crate::memory::TierSim;
+use crate::solver::{by_name, Trainer};
+use crate::util::Rng;
+use crate::{bail, Result};
+use std::sync::atomic::{AtomicBool, Ordering::Relaxed};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Knobs for one bounded serving run.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Wall-clock budget for the request loop.
+    pub duration_secs: f64,
+    /// Rows per predict request.
+    pub batch: usize,
+    /// Predict-pool workers (1 = serial).
+    pub threads: usize,
+    /// Examples streamed into the ingest buffer per request round.
+    pub ingest_per_round: usize,
+    /// Refit cadence, budget and publish tolerance.
+    pub refit: RefitConfig,
+    /// Preprocessing flags shared by the initial fit and every refit.
+    pub normalize: bool,
+    pub center: bool,
+    /// Model name (see [`crate::glm::model_by_name`]).
+    pub model: String,
+    pub lam: f32,
+    pub seed: u64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            duration_secs: 5.0,
+            batch: 64,
+            threads: 2,
+            ingest_per_round: 4,
+            refit: RefitConfig::default(),
+            normalize: true,
+            center: true,
+            model: "lasso".into(),
+            lam: 1e-3,
+            seed: 42,
+        }
+    }
+}
+
+/// Outcome of a bounded serving run.
+#[derive(Clone, Debug)]
+pub struct ServeReport {
+    pub elapsed_secs: f64,
+    pub requests: u64,
+    pub rows: u64,
+    pub qps: f64,
+    pub rows_per_sec: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub published: u64,
+    pub rejected: u64,
+    pub failed: u64,
+    pub attempts: u64,
+    pub ingested: u64,
+    pub final_version: u64,
+    pub final_gap: f64,
+    pub staleness_secs: f64,
+    pub absorbed: u64,
+}
+
+impl ServeReport {
+    /// The serve-smoke gate: at least one refit published and requests
+    /// actually flowed.
+    pub fn healthy(&self) -> bool {
+        self.published >= 1 && self.rows > 0
+    }
+
+    pub fn render(&self) -> String {
+        format!(
+            "serve: {:.1}s, {} requests ({} rows) — {:.0} req/s, {:.0} rows/s\n\
+             latency: p50 {:.3} ms, p95 {:.3} ms, p99 {:.3} ms\n\
+             refits: {} published / {} rejected / {} failed ({} attempts), \
+             {} examples ingested\n\
+             live model: v{} gap {:.3e}, staleness {:.1}s, {} absorbed examples",
+            self.elapsed_secs,
+            self.requests,
+            self.rows,
+            self.qps,
+            self.rows_per_sec,
+            self.p50_ms,
+            self.p95_ms,
+            self.p99_ms,
+            self.published,
+            self.rejected,
+            self.failed,
+            self.attempts,
+            self.ingested,
+            self.final_version,
+            self.final_gap,
+            self.staleness_secs,
+            self.absorbed,
+        )
+    }
+}
+
+/// Perturb a base sample into a plausible fresh example: features
+/// jittered ~1%, label jittered likewise (regression) or kept
+/// (classification labels stay in the sign alphabet).
+fn perturb(base: &Sample, classification: bool, rng: &mut Rng) -> Sample {
+    Sample {
+        label: if classification {
+            base.label
+        } else {
+            base.label + 0.01 * rng.normal()
+        },
+        features: base
+            .features
+            .iter()
+            .map(|&(j, x)| (j, x * (1.0 + 0.01 * rng.normal())))
+            .collect(),
+    }
+}
+
+/// Build request batches from base samples: each batch is a sparse
+/// matrix whose columns are perturbed raw input vectors (features at or
+/// past `input_dim` dropped — the predict path ignores them anyway, but
+/// the matrix shape must stay within the snapshot's input space).
+fn request_batches(
+    base: &[Sample],
+    input_dim: usize,
+    batch: usize,
+    count: usize,
+    rng: &mut Rng,
+) -> Vec<SparseMatrix> {
+    (0..count)
+        .map(|b| {
+            let cols: Vec<Vec<(u32, f32)>> = (0..batch)
+                .map(|k| {
+                    let s = &base[(b * batch + k) % base.len()];
+                    s.features
+                        .iter()
+                        .filter(|&&(j, _)| (j as usize) < input_dim)
+                        .map(|&(j, x)| (j, x * (1.0 + 0.01 * rng.normal())))
+                        .collect()
+                })
+                .collect();
+            SparseMatrix::from_columns(input_dim, cols)
+        })
+        .collect()
+}
+
+/// Run the bounded serving simulation (see module docs): initial fit →
+/// serve + ingest until the deadline with the refit loop on its own
+/// thread → report.  If the bounded window closed before any publish
+/// (slow host, long refit), one synchronous refit runs after the loop
+/// so the warm-start path is always exercised.
+pub fn run(base: Vec<Sample>, cfg: &ServeConfig) -> Result<ServeReport> {
+    if base.is_empty() {
+        bail!("serve: no base samples");
+    }
+    if cfg.batch == 0 {
+        bail!("serve: batch must be positive");
+    }
+    let family = crate::glm::family_for(&cfg.model);
+    let classification = family == crate::data::Family::Classification;
+
+    // -- initial fit ---------------------------------------------------
+    let ds = DatasetBuilder::libsvm_samples(base.clone())
+        .family(family)
+        .normalize(cfg.normalize)
+        .center_targets(cfg.center && !classification)
+        .build()?;
+    let Some(mut model) = crate::glm::model_by_name(&cfg.model, cfg.lam, ds.n_cols()) else {
+        bail!("serve: unknown model {:?}", cfg.model);
+    };
+    let Some(engine) = by_name(&cfg.refit.solver) else {
+        bail!("serve: unknown solver {:?}", cfg.refit.solver);
+    };
+    let (t_a, t_b, v_b) = cfg.refit.threads;
+    let report = Trainer::new()
+        .solver_boxed(engine)
+        .threads(t_a, t_b, v_b)
+        .stop_when(cfg.refit.budget)
+        .seed(cfg.refit.seed)
+        .fit_with(model.as_mut(), &ds, &TierSim::default());
+    let gap = crate::glm::total_gap(
+        model.as_ref(),
+        ds.as_block_ops(),
+        &report.v,
+        ds.targets(),
+        &report.alpha,
+    );
+    let store = Arc::new(ModelStore::new(ModelSnapshot::from_fit(
+        model.as_ref(),
+        &ds,
+        &report,
+        gap,
+        0,
+    )));
+    drop(ds);
+
+    // -- serving loop --------------------------------------------------
+    let stats = Arc::new(ServeStats::new());
+    let predict = PredictEngine::new(Arc::clone(&store))
+        .with_threads(cfg.threads)
+        .with_stats(Arc::clone(&stats));
+    let mut rng = Rng::new(cfg.seed ^ 0x5e7e);
+    let input_dim = store.load().input_dim();
+    let batches = request_batches(&base, input_dim, cfg.batch, 8, &mut rng);
+
+    let buf = IngestBuffer::new();
+    let mut refitter = Refitter::new(
+        base.clone(),
+        &cfg.model,
+        cfg.lam,
+        cfg.normalize,
+        cfg.center && !classification,
+        cfg.refit.clone(),
+    );
+    let stop = AtomicBool::new(false);
+    let t0 = Instant::now();
+    let deadline = t0 + Duration::from_secs_f64(cfg.duration_secs);
+
+    std::thread::scope(|s| {
+        let refit_handle = s.spawn(|| {
+            while !stop.load(Relaxed) {
+                if refitter.should_refit(buf.len()) {
+                    refitter.refit_once(&store, &buf, &stats);
+                } else {
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+            }
+        });
+        let mut round = 0usize;
+        while Instant::now() < deadline {
+            predict.predict_batch(&batches[round % batches.len()]);
+            if cfg.ingest_per_round > 0 {
+                let fresh: Vec<Sample> = (0..cfg.ingest_per_round)
+                    .map(|k| {
+                        perturb(
+                            &base[(round * cfg.ingest_per_round + k) % base.len()],
+                            classification,
+                            &mut rng,
+                        )
+                    })
+                    .collect();
+                stats.ingested.fetch_add(fresh.len() as u64, Relaxed);
+                buf.push_many(fresh);
+            }
+            round += 1;
+        }
+        stop.store(true, Relaxed);
+        refit_handle.join().expect("refit thread panicked");
+    });
+
+    // the smoke gate needs at least one exercised refit: if the window
+    // closed before the cadence fired (or every attempt lost the race),
+    // run one synchronously on whatever is buffered
+    if stats.published() == 0 {
+        if buf.is_empty() {
+            let seeded: Vec<Sample> = base
+                .iter()
+                .take(4)
+                .map(|s| perturb(s, classification, &mut rng))
+                .collect();
+            stats.ingested.fetch_add(seeded.len() as u64, Relaxed);
+            buf.push_many(seeded);
+        }
+        refitter.refit_once(&store, &buf, &stats);
+    }
+
+    let elapsed = t0.elapsed().as_secs_f64().max(1e-9);
+    let live = store.load();
+    Ok(ServeReport {
+        elapsed_secs: elapsed,
+        requests: stats.requests(),
+        rows: stats.rows(),
+        qps: stats.requests() as f64 / elapsed,
+        rows_per_sec: stats.rows() as f64 / elapsed,
+        p50_ms: stats.latency.p50() * 1e3,
+        p95_ms: stats.latency.p95() * 1e3,
+        p99_ms: stats.latency.p99() * 1e3,
+        published: stats.published(),
+        rejected: stats.rejected(),
+        failed: stats.failed(),
+        attempts: stats.attempts(),
+        ingested: stats.ingested(),
+        final_version: live.version,
+        final_gap: live.gap,
+        staleness_secs: live.staleness_secs(),
+        absorbed: live.absorbed,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{DatasetKind, Family};
+    use crate::solver::StopWhen;
+
+    fn base_samples(seed: u64) -> Vec<Sample> {
+        DatasetBuilder::generated(DatasetKind::Tiny, Family::Regression)
+            .seed(seed)
+            .build()
+            .unwrap()
+            .to_samples()
+            .unwrap()
+    }
+
+    #[test]
+    fn bounded_run_serves_and_publishes() {
+        let cfg = ServeConfig {
+            duration_secs: 0.4,
+            batch: 16,
+            threads: 2,
+            ingest_per_round: 8,
+            refit: RefitConfig {
+                refit_every: 16,
+                solver: "st".into(),
+                budget: StopWhen::gap_below(1e-6).max_epochs(100).timeout_secs(5.0),
+                ..Default::default()
+            },
+            model: "lasso".into(),
+            lam: 1e-3,
+            ..Default::default()
+        };
+        let report = run(base_samples(81), &cfg).unwrap();
+        assert!(report.rows > 0, "no rows served: {report:?}");
+        assert!(report.requests > 0);
+        assert!(report.healthy(), "expected >=1 publish: {report:?}");
+        assert!(report.final_version >= 2, "{report:?}");
+        assert!(report.qps > 0.0);
+        assert!(report.p99_ms >= report.p50_ms);
+        let text = report.render();
+        assert!(text.contains("req/s"), "{text}");
+        assert!(text.contains("published"), "{text}");
+    }
+
+    #[test]
+    fn rejects_empty_base_and_zero_batch() {
+        assert!(run(vec![], &ServeConfig::default()).is_err());
+        let cfg = ServeConfig { batch: 0, ..Default::default() };
+        assert!(run(base_samples(82), &cfg).is_err());
+    }
+}

@@ -1,0 +1,172 @@
+//! [`ModelSnapshot`]: one immutable, versioned serving model.
+//!
+//! A snapshot folds everything prediction needs into raw-input space at
+//! publish time, so the per-request path touches no dataset metadata:
+//!
+//! * **Regression orientation** (rows = samples, coordinates =
+//!   features): the trained dual iterate `alpha` lives in the
+//!   *normalized* column space; the serving weights fold the recorded
+//!   column scales back in (`weights_j = alpha_j * col_scales_j`) and
+//!   the target-centering mean becomes the bias, so
+//!   `predict(x_raw) = <weights, x_raw> + bias`.
+//! * **Classification orientation** (columns = label-scaled samples
+//!   `d_j = y_j x_j`): the primal weight vector is proportional to the
+//!   shared vector `v = D alpha`, which already lives in raw feature
+//!   space (normalization scales columns, not feature rows), so
+//!   `weights = v`, bias 0, and `sign(<weights, x_raw>)` classifies.
+//!
+//! The snapshot also carries the warm-start seed (`alpha` in normalized
+//! training space), the duality-gap certificate of the fit that
+//! produced it, and staleness bookkeeping (publish instant + streamed
+//! examples absorbed into its training set).
+
+use crate::data::{Dataset, Family};
+use crate::glm::{GlmModel, ModelKind};
+use crate::solver::{FitReport, Iterate};
+use std::time::Instant;
+
+/// One immutable serving model version (see module docs).
+#[derive(Clone, Debug)]
+pub struct ModelSnapshot {
+    /// Assigned by [`super::ModelStore::publish`]; monotone from 1.
+    pub version: u64,
+    /// Scalar-math bundle of the model that produced this snapshot.
+    pub kind: ModelKind,
+    /// Orientation the model was trained in (decides the weight map).
+    pub family: Family,
+    /// Prediction weights in **raw input space** (see module docs).
+    pub weights: Vec<f32>,
+    /// Additive bias (`target_mean` of a centered regression fit).
+    pub bias: f32,
+    /// Dual iterate in normalized training space — the warm-start seed
+    /// for the next refit.
+    pub alpha: Vec<f32>,
+    /// Column scales the training pipeline applied (None = unnormalized).
+    pub col_scales: Option<Vec<f32>>,
+    /// Duality-gap certificate of the producing fit (the publish rule's
+    /// input, and the live freshness/quality metric per version).
+    pub gap: f64,
+    /// Columns (model coordinates) of the producing training set.
+    pub trained_cols: usize,
+    /// Streamed examples absorbed into the training set by refits.
+    pub absorbed: u64,
+    /// When this version went live.
+    pub published_at: Instant,
+}
+
+impl ModelSnapshot {
+    /// Build a snapshot from a finished fit on `data`.
+    ///
+    /// `gap` is the certificate to record (callers recompute it with
+    /// [`crate::glm::total_gap`] so every engine gets a comparable
+    /// certificate, including ones whose traces carry NaN gaps).
+    pub fn from_fit(
+        model: &dyn GlmModel,
+        data: &Dataset,
+        report: &FitReport,
+        gap: f64,
+        absorbed: u64,
+    ) -> Self {
+        let meta = data.meta();
+        let weights = match meta.family {
+            Family::Regression => match &meta.col_scales {
+                Some(scales) => report
+                    .alpha
+                    .iter()
+                    .zip(scales)
+                    .map(|(&a, &s)| a * s)
+                    .collect(),
+                None => report.alpha.clone(),
+            },
+            Family::Classification => report.v.clone(),
+        };
+        ModelSnapshot {
+            version: 0, // assigned at publish
+            kind: model.kind(),
+            family: meta.family,
+            weights,
+            bias: meta.target_mean.unwrap_or(0.0),
+            alpha: report.alpha.clone(),
+            col_scales: meta.col_scales.clone(),
+            gap,
+            trained_cols: data.n_cols(),
+            absorbed,
+            published_at: Instant::now(),
+        }
+    }
+
+    /// Length of a raw input vector this snapshot can score.
+    pub fn input_dim(&self) -> usize {
+        self.weights.len()
+    }
+
+    /// Seconds since this version went live.
+    pub fn staleness_secs(&self) -> f64 {
+        self.published_at.elapsed().as_secs_f64()
+    }
+
+    /// Export the training iterate (the `solver`-layer warm-start
+    /// currency: feed to [`crate::solver::Trainer::warm_start_from`]).
+    pub fn iterate(&self) -> Iterate {
+        Iterate {
+            alpha: self.alpha.clone(),
+            gap: Some(self.gap),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{DatasetBuilder, DatasetKind};
+    use crate::glm::Lasso;
+    use crate::solver::{SeqThreshold, StopWhen, Trainer};
+
+    #[test]
+    fn regression_snapshot_folds_scales_and_mean() {
+        let ds = DatasetBuilder::generated(DatasetKind::Tiny, Family::Regression)
+            .seed(41)
+            .normalize(true)
+            .center_targets(true)
+            .build()
+            .unwrap();
+        let mut model = Lasso::new(0.01);
+        let mut trainer = Trainer::new()
+            .solver(SeqThreshold)
+            .stop_when(StopWhen::gap_below(1e-6).max_epochs(50));
+        let report = trainer.fit_with(&mut model, &ds, &Default::default());
+        let gap = crate::glm::total_gap(
+            &model,
+            ds.as_block_ops(),
+            &report.v,
+            ds.targets(),
+            &report.alpha,
+        );
+        let snap = ModelSnapshot::from_fit(&model, &ds, &report, gap, 3);
+        let scales = ds.meta().col_scales.as_ref().unwrap();
+        for j in 0..ds.n_cols() {
+            assert_eq!(snap.weights[j], report.alpha[j] * scales[j]);
+        }
+        assert_eq!(snap.bias, ds.meta().target_mean.unwrap());
+        assert_eq!(snap.input_dim(), ds.n_cols());
+        assert_eq!(snap.absorbed, 3);
+        assert_eq!(snap.iterate().alpha, report.alpha);
+    }
+
+    #[test]
+    fn classification_snapshot_serves_v() {
+        let ds = DatasetBuilder::generated(DatasetKind::Tiny, Family::Classification)
+            .seed(42)
+            .build()
+            .unwrap();
+        let mut model = crate::glm::SvmDual::new(0.01, ds.n_cols());
+        let mut trainer = Trainer::new()
+            .solver(SeqThreshold)
+            .stop_when(StopWhen::gap_below(1e-6).max_epochs(50));
+        let report = trainer.fit_with(&mut model, &ds, &Default::default());
+        let snap = ModelSnapshot::from_fit(&model, &ds, &report, 0.0, 0);
+        assert_eq!(snap.weights, report.v, "classification serves v directly");
+        assert_eq!(snap.bias, 0.0);
+        assert_eq!(snap.input_dim(), ds.n_rows());
+    }
+}

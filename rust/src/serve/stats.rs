@@ -1,0 +1,218 @@
+//! Serving statistics: lock-free request/refit counters and a
+//! fixed-bucket predict-latency histogram.
+//!
+//! Everything here is plain atomics so the predict hot path never takes
+//! a lock to record a sample.  The histogram uses power-of-two
+//! nanosecond buckets (`[2^k, 2^(k+1))`), which makes recording one
+//! `leading_zeros` plus one relaxed `fetch_add`, and quantile lookup a
+//! walk over cumulative counts — the textbook fixed-bucket design (see
+//! `rust/DESIGN.md` §11 for the bucket layout rationale).
+
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+use std::time::Duration;
+
+/// Number of histogram buckets.  Bucket 0 holds everything below
+/// [`BASE_NS`]; bucket `i >= 1` holds `[BASE_NS << (i-1), BASE_NS << i)`;
+/// the last bucket additionally absorbs everything slower.  With a
+/// 256 ns base and 32 buckets the range tops out above 500 s — far past
+/// any sane predict latency.
+pub const BUCKETS: usize = 32;
+
+/// Lower edge of bucket 1 in nanoseconds (power of two).
+pub const BASE_NS: u64 = 256;
+
+/// Fixed-bucket latency histogram (power-of-two nanosecond buckets).
+#[derive(Default)]
+pub struct LatencyHistogram {
+    buckets: [AtomicU64; BUCKETS],
+    count: AtomicU64,
+    sum_ns: AtomicU64,
+}
+
+fn bucket_index(ns: u64) -> usize {
+    if ns < BASE_NS {
+        return 0;
+    }
+    // ns >= BASE_NS = 2^8, so ilog2 >= 8 and the subtraction is safe
+    let idx = (ns.ilog2() - BASE_NS.ilog2() + 1) as usize;
+    idx.min(BUCKETS - 1)
+}
+
+/// Upper edge of a bucket in nanoseconds (what a quantile reports — a
+/// conservative bound, never an underestimate except in the unbounded
+/// last bucket).
+fn bucket_upper_ns(idx: usize) -> u64 {
+    BASE_NS << idx
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&self, d: Duration) {
+        let ns = d.as_nanos().min(u64::MAX as u128) as u64;
+        self.buckets[bucket_index(ns)].fetch_add(1, Relaxed);
+        self.count.fetch_add(1, Relaxed);
+        self.sum_ns.fetch_add(ns, Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Relaxed)
+    }
+
+    pub fn mean_secs(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            return f64::NAN;
+        }
+        self.sum_ns.load(Relaxed) as f64 * 1e-9 / c as f64
+    }
+
+    /// Upper bound of the bucket containing the `q`-quantile sample
+    /// (seconds); NaN while empty.  `q` is clamped to `[0, 1]`.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return f64::NAN;
+        }
+        let target = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).max(1);
+        let mut cum = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            cum += b.load(Relaxed);
+            if cum >= target {
+                return bucket_upper_ns(i) as f64 * 1e-9;
+            }
+        }
+        bucket_upper_ns(BUCKETS - 1) as f64 * 1e-9
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.quantile(0.50)
+    }
+
+    pub fn p95(&self) -> f64 {
+        self.quantile(0.95)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.quantile(0.99)
+    }
+}
+
+/// The serving layer's counter surface.  One instance is shared by the
+/// predict engine (latency, request counts), the ingest/refit loop
+/// (absorption and publish/reject/fail counts) and the CLI reporter.
+#[derive(Default)]
+pub struct ServeStats {
+    /// Predict requests answered (one batch = one request).
+    pub requests: AtomicU64,
+    /// Rows scored across all requests.
+    pub rows: AtomicU64,
+    /// Streaming labeled examples accepted into the ingest buffer.
+    pub ingested: AtomicU64,
+    /// Refit attempts that drained at least one example.
+    pub refit_attempts: AtomicU64,
+    /// Refits whose certificate passed the publish rule.
+    pub refit_published: AtomicU64,
+    /// Refits rejected by the gap-regression rule (old version kept).
+    pub refit_rejected: AtomicU64,
+    /// Refits that errored before producing a certificate.
+    pub refit_failed: AtomicU64,
+    /// Per-request predict latency.
+    pub latency: LatencyHistogram,
+}
+
+impl ServeStats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one answered predict request of `rows` rows.
+    pub fn record_predict(&self, rows: usize, took: Duration) {
+        self.requests.fetch_add(1, Relaxed);
+        self.rows.fetch_add(rows as u64, Relaxed);
+        self.latency.record(took);
+    }
+
+    pub fn requests(&self) -> u64 {
+        self.requests.load(Relaxed)
+    }
+
+    pub fn rows(&self) -> u64 {
+        self.rows.load(Relaxed)
+    }
+
+    pub fn ingested(&self) -> u64 {
+        self.ingested.load(Relaxed)
+    }
+
+    pub fn published(&self) -> u64 {
+        self.refit_published.load(Relaxed)
+    }
+
+    pub fn rejected(&self) -> u64 {
+        self.refit_rejected.load(Relaxed)
+    }
+
+    pub fn failed(&self) -> u64 {
+        self.refit_failed.load(Relaxed)
+    }
+
+    pub fn attempts(&self) -> u64 {
+        self.refit_attempts.load(Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_edges() {
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(255), 0);
+        assert_eq!(bucket_index(256), 1);
+        assert_eq!(bucket_index(511), 1);
+        assert_eq!(bucket_index(512), 2);
+        assert_eq!(bucket_index(u64::MAX), BUCKETS - 1);
+    }
+
+    #[test]
+    fn quantiles_walk_cumulative_counts() {
+        let h = LatencyHistogram::new();
+        assert!(h.quantile(0.5).is_nan(), "empty histogram has no quantiles");
+        // 90 fast samples at ~1us, 10 slow at ~1ms
+        for _ in 0..90 {
+            h.record(Duration::from_micros(1));
+        }
+        for _ in 0..10 {
+            h.record(Duration::from_millis(1));
+        }
+        assert_eq!(h.count(), 100);
+        let p50 = h.quantile(0.5);
+        let p99 = h.quantile(0.99);
+        assert!(p50 < 5e-6, "p50 {p50} should sit in the ~1us bucket");
+        assert!(p99 > 5e-4, "p99 {p99} should sit in the ~1ms bucket");
+        assert!(h.p95() <= p99 + 1e-12, "quantiles are monotone");
+        assert!(h.mean_secs() > 0.0);
+    }
+
+    #[test]
+    fn quantile_is_conservative_upper_bound() {
+        let h = LatencyHistogram::new();
+        h.record(Duration::from_nanos(300)); // bucket [256, 512)
+        assert_eq!(h.quantile(1.0), 512e-9);
+        assert_eq!(h.quantile(0.0), 512e-9, "q clamps and still needs 1 sample");
+    }
+
+    #[test]
+    fn predict_counters_accumulate() {
+        let s = ServeStats::new();
+        s.record_predict(8, Duration::from_micros(3));
+        s.record_predict(16, Duration::from_micros(5));
+        assert_eq!(s.requests(), 2);
+        assert_eq!(s.rows(), 24);
+        assert_eq!(s.latency.count(), 2);
+    }
+}

@@ -34,7 +34,7 @@ pub mod trainer;
 pub use engines::{by_name, Hthc, Omp, Passcode, SeqThreshold, Sgd, DEFAULT_LAM};
 pub(crate) use problem::notify_epoch;
 pub use problem::{EpochEvent, OnEpoch, Problem};
-pub use report::{keys, Extras, FitReport, Stat};
+pub use report::{keys, Extras, FitReport, Iterate, Stat};
 pub use trainer::{StopWhen, Trainer};
 
 /// A training engine: consumes a [`Problem`], produces a [`FitReport`].

@@ -30,6 +30,9 @@ pub mod keys {
     pub const HELDOUT_ACCURACY: &str = "heldout_accuracy";
     /// `hthc train --split`: number of held-out columns (u64).
     pub const HELDOUT_COLS: &str = "heldout_cols";
+    /// `hthc train --heldout-every N`: how many in-run held-out
+    /// certificate evaluations the epoch observer performed (u64).
+    pub const HELDOUT_EVALS: &str = "heldout_evals";
     /// Autotune: task-A threads in effect at the end of the run (u64).
     pub const AUTOTUNE_T_A: &str = "autotune_t_a";
     /// Autotune: task-B parallel updates in effect at run end (u64).
@@ -89,6 +92,25 @@ impl Extras {
     }
 }
 
+/// A portable training iterate: everything a later fit needs to resume
+/// from where an earlier one stopped.  Exported by
+/// [`FitReport::iterate`], consumed by
+/// [`Trainer::warm_start_from`](super::Trainer::warm_start_from) — the
+/// warm-start currency between the solver layer and long-lived
+/// consumers like the serving layer's refit loop.
+///
+/// Only `alpha` is authoritative: the shared vector `v = D alpha` is
+/// re-derived exactly from the data at fit start, so an `Iterate` stays
+/// valid across dataset rebuilds that preserve column identities.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Iterate {
+    /// Dual iterate (SGD: primal weights) in normalized training space.
+    pub alpha: Vec<f32>,
+    /// Duality-gap certificate of the run that produced the iterate,
+    /// when one was computed.
+    pub gap: Option<f64>,
+}
+
 /// Outcome of a [`Solver::fit`](super::Solver::fit) run.
 pub struct FitReport {
     /// Engine name (matches the trace label).
@@ -119,6 +141,14 @@ impl FitReport {
 
     pub fn final_gap(&self) -> Option<f64> {
         self.trace.final_gap()
+    }
+
+    /// Export the final iterate for a later warm start.
+    pub fn iterate(&self) -> Iterate {
+        Iterate {
+            alpha: self.alpha.clone(),
+            gap: self.final_gap().filter(|g| g.is_finite()),
+        }
     }
 
     /// Task-A refreshes (0 for engines without a gap task).

@@ -199,6 +199,16 @@ impl<'b> Trainer<'b> {
         self
     }
 
+    /// [`warm_start`](Trainer::warm_start) from an exported
+    /// [`Iterate`](super::Iterate) (e.g. [`FitReport::iterate`]), resized
+    /// to `n_cols` with zeros for coordinates the iterate has not seen —
+    /// the refit path for a dataset that grew by appended columns.
+    pub fn warm_start_from(self, it: &super::Iterate, n_cols: usize) -> Self {
+        let mut alpha = it.alpha.clone();
+        alpha.resize(n_cols, 0.0);
+        self.warm_start(alpha)
+    }
+
     /// Observe every evaluation epoch; return `true` to stop the run
     /// (the report is then marked converged).
     pub fn on_epoch(mut self, cb: impl FnMut(&EpochEvent<'_>) -> bool + 'b) -> Self {

@@ -1,0 +1,255 @@
+//! Differential tests for the serving layer (ISSUE 7 satellite):
+//!
+//! * batched `PredictEngine` answers are **bitwise** equal to direct
+//!   per-tile kernel calls, across all three representations × every
+//!   available kernel backend × serial and pooled execution;
+//! * concurrent readers never observe a torn [`ModelSnapshot`] while a
+//!   writer republishes (the slot-ring protocol in `serve::store`);
+//! * a refit whose certificate regresses is rejected and the old
+//!   version keeps serving (graceful degradation).
+//!
+//! Backend flipping uses `kernels::set_backend`, which is process
+//! global — the backend-iterating test serializes on `KERNEL_LOCK` and
+//! restores the ambient dispatch, same discipline as `view_diff.rs`.
+
+use hthc::data::{
+    Dataset, DatasetBuilder, DatasetKind, Family, Represent, Sample,
+};
+use hthc::glm::ModelKind;
+use hthc::kernels::{self, Backend, BLOCK_COLS};
+use hthc::serve::{
+    IngestBuffer, ModelSnapshot, ModelStore, PredictEngine, RefitConfig, RefitOutcome,
+    Refitter, ServeStats,
+};
+use hthc::solver::StopWhen;
+use hthc::util::Rng;
+use std::sync::atomic::{AtomicBool, Ordering::Relaxed};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+static KERNEL_LOCK: Mutex<()> = Mutex::new(());
+
+fn snapshot_with(weights: Vec<f32>, bias: f32) -> ModelSnapshot {
+    let n = weights.len();
+    ModelSnapshot {
+        version: 0,
+        kind: ModelKind::Lasso { lam: 0.1, lip_b: 1.0 },
+        family: Family::Regression,
+        weights,
+        bias,
+        alpha: vec![0.0; n],
+        col_scales: None,
+        gap: 0.0,
+        trained_cols: n,
+        absorbed: 0,
+        published_at: Instant::now(),
+    }
+}
+
+/// The three representations over the same generated source (spans
+/// several BLOCK_COLS tiles plus a ragged tail).
+fn representations(seed: u64) -> Vec<(&'static str, Dataset)> {
+    let build = |r: Represent| {
+        DatasetBuilder::generated(DatasetKind::Tiny, Family::Regression)
+            .scale(2.0)
+            .seed(seed)
+            .represent(r)
+            .build()
+            .unwrap()
+    };
+    vec![
+        ("dense", build(Represent::Dense)),
+        ("sparse", build(Represent::Sparse)),
+        ("quantized", build(Represent::Quantized)),
+    ]
+}
+
+/// Direct kernel evaluation: the exact per-tile `dots_block` calls the
+/// engine's contract promises, plus the same post-hoc bias add.
+fn direct_scores(ds: &Dataset, w: &[f32], bias: f32) -> Vec<f32> {
+    let ops = ds.as_block_ops();
+    let n = ds.n_cols();
+    let mut out = vec![0.0f32; n];
+    let mut idx = [0usize; BLOCK_COLS];
+    for (tile, chunk) in out.chunks_mut(BLOCK_COLS).enumerate() {
+        let base = tile * BLOCK_COLS;
+        for (t, j) in idx.iter_mut().zip(base..base + chunk.len()) {
+            *t = j;
+        }
+        ops.dots_block(&idx[..chunk.len()], w, chunk);
+    }
+    if bias != 0.0 {
+        for o in out.iter_mut() {
+            *o += bias;
+        }
+    }
+    out
+}
+
+#[test]
+fn batch_predict_is_bitwise_direct_kernels_everywhere() {
+    let _l = KERNEL_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let ambient: Backend = kernels::backend();
+    for back in kernels::available_backends() {
+        kernels::set_backend(back);
+        for (repr, ds) in representations(21001) {
+            let d = ds.n_rows();
+            let mut rng = Rng::new(21002);
+            let w: Vec<f32> = (0..d).map(|_| rng.normal()).collect();
+            let bias = 0.25f32;
+            let want = direct_scores(&ds, &w, bias);
+            for threads in [1usize, 3] {
+                let engine =
+                    PredictEngine::new(Arc::new(ModelStore::new(snapshot_with(
+                        w.clone(),
+                        bias,
+                    ))))
+                    .with_threads(threads);
+                let got = engine.predict_batch(ds.as_block_ops());
+                assert_eq!(got.len(), want.len());
+                for (j, (a, b)) in got.iter().zip(&want).enumerate() {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "{repr}[{}] threads={threads} col {j}",
+                        back.name()
+                    );
+                }
+            }
+        }
+    }
+    kernels::set_backend(ambient);
+}
+
+/// Readers racing a republishing writer must always see an internally
+/// consistent snapshot: every field carries the same version tag.
+#[test]
+fn readers_never_observe_a_torn_snapshot() {
+    const DIM: usize = 16;
+    const PUBLISHES: u64 = 300;
+    let tagged = |tag: u64| {
+        let mut s = snapshot_with(vec![tag as f32; DIM], 0.0);
+        s.alpha = vec![tag as f32; DIM];
+        s.gap = tag as f64;
+        s
+    };
+    let store = Arc::new(ModelStore::new(tagged(1)));
+    let stop = AtomicBool::new(false);
+    std::thread::scope(|s| {
+        for _ in 0..3 {
+            s.spawn(|| {
+                let mut last_version = 0u64;
+                while !stop.load(Relaxed) {
+                    let snap = store.load();
+                    let tag = snap.weights[0];
+                    assert!(
+                        snap.weights.iter().all(|&x| x == tag),
+                        "torn weights: {:?}",
+                        &snap.weights[..4]
+                    );
+                    assert!(snap.alpha.iter().all(|&x| x == tag), "torn alpha");
+                    assert_eq!(snap.gap, tag as f64, "gap from a different publish");
+                    assert!(
+                        snap.version >= last_version,
+                        "version went backwards: {} -> {}",
+                        last_version,
+                        snap.version
+                    );
+                    last_version = snap.version;
+                }
+            });
+        }
+        for tag in 2..=PUBLISHES {
+            store.publish(tagged(tag));
+        }
+        stop.store(true, Relaxed);
+    });
+    assert_eq!(store.version(), PUBLISHES);
+}
+
+/// A refit whose certificate regresses past tolerance is rejected: the
+/// old version keeps serving and the rejection is counted.
+#[test]
+fn regressed_refit_is_rejected_and_old_version_serves() {
+    let ds = DatasetBuilder::generated(DatasetKind::Tiny, Family::Regression)
+        .seed(21003)
+        .normalize(true)
+        .center_targets(true)
+        .build()
+        .unwrap();
+    let mut model = hthc::glm::Lasso::new(0.01);
+    let mut trainer = hthc::solver::Trainer::new()
+        .solver(hthc::solver::SeqThreshold)
+        .stop_when(StopWhen::gap_below(1e-7).max_epochs(200));
+    let report = trainer.fit_with(&mut model, &ds, &Default::default());
+    let mut snap = ModelSnapshot::from_fit(&model, &ds, &report, 0.0, 0);
+    // pretend the live certificate is perfect: with regress_tol 0 and an
+    // unreachable convergence tolerance, any real refit must regress
+    snap.gap = 0.0;
+    let store = ModelStore::new(snap);
+    let base = ds.to_samples().unwrap();
+    let before = store.load();
+
+    let mut refitter = Refitter::new(
+        base.clone(),
+        "lasso",
+        0.01,
+        true,
+        true,
+        RefitConfig {
+            refit_every: 1,
+            solver: "st".into(),
+            regress_tol: 0.0,
+            budget: StopWhen::gap_below(1e-300).max_epochs(2),
+            ..Default::default()
+        },
+    );
+    let buf = IngestBuffer::new();
+    let stats = ServeStats::new();
+    buf.push(Sample { label: base[0].label, features: base[0].features.clone() });
+    match refitter.refit_once(&store, &buf, &stats) {
+        RefitOutcome::Rejected { gap, serving } => {
+            assert!(gap.is_finite() && gap > 0.0);
+            assert_eq!(serving, 1);
+        }
+        other => panic!("expected rejection, got {other:?}"),
+    }
+    assert_eq!(store.version(), 1, "old version keeps serving");
+    assert_eq!(stats.rejected(), 1);
+    assert_eq!(stats.published(), 0);
+    // and the serving snapshot is untouched — same weights, same gap
+    let after = store.load();
+    assert_eq!(after.version, before.version);
+    assert_eq!(after.weights, before.weights);
+    assert_eq!(after.gap, before.gap);
+}
+
+/// End-to-end: a short bounded run publishes at least one warm-start
+/// refit and serves rows (the same gate `hthc serve --assert-healthy`
+/// and the CI serve-smoke job apply).
+#[test]
+fn bounded_serve_run_is_healthy() {
+    let base = DatasetBuilder::generated(DatasetKind::Tiny, Family::Regression)
+        .seed(21004)
+        .build()
+        .unwrap()
+        .to_samples()
+        .unwrap();
+    let cfg = hthc::serve::ServeConfig {
+        duration_secs: 0.3,
+        batch: 16,
+        threads: 2,
+        ingest_per_round: 8,
+        refit: RefitConfig {
+            refit_every: 16,
+            solver: "st".into(),
+            budget: StopWhen::gap_below(1e-6).max_epochs(100).timeout_secs(5.0),
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let report = hthc::serve::sim::run(base, &cfg).unwrap();
+    assert!(report.healthy(), "{report:?}");
+    assert!(report.final_version >= 2, "{report:?}");
+    assert!(report.qps > 0.0);
+}

@@ -1,0 +1,99 @@
+#!/usr/bin/env python3
+"""Compare two perf_hotpath bench JSON snapshots kernel by kernel.
+
+Usage: bench_compare.py BASELINE.json CANDIDATE.json [--tolerance 0.25]
+
+For every kernel present in both files the *speedup* column
+(dispatched-vs-scalar throughput ratio) is compared; the run fails if
+any kernel's candidate speedup drops more than --tolerance (default
+25%) below the baseline.  Speedup ratios — not absolute GB/s — are
+compared on purpose: both columns of one snapshot come from the same
+host, so the ratio is stable across runner hardware generations while
+raw throughput is not.
+
+Kernels that appear only in one file are reported but never fail the
+run (new kernels land, old ones retire).  The optional "serve" section
+is printed for visibility only: QPS and latency quantiles are
+host-absolute, so they carry no portable pass/fail threshold.
+
+Exit status: 0 ok, 1 regression found, 2 bad input.
+"""
+
+import argparse
+import json
+import sys
+
+
+def load(path):
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, ValueError) as e:
+        sys.exit(f"bench_compare: cannot read {path}: {e}")
+    kernels = {r["kernel"]: r for r in doc.get("kernels", [])}
+    if not kernels:
+        sys.exit(f"bench_compare: {path} has no kernel records")
+    return doc, kernels
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("baseline")
+    ap.add_argument("candidate")
+    ap.add_argument(
+        "--tolerance",
+        type=float,
+        default=0.25,
+        help="max allowed fractional speedup drop per kernel (default 0.25)",
+    )
+    args = ap.parse_args()
+    if not 0.0 <= args.tolerance < 1.0:
+        sys.exit("bench_compare: --tolerance must be in [0, 1)")
+
+    base_doc, base = load(args.baseline)
+    cand_doc, cand = load(args.candidate)
+
+    width = max(len(k) for k in set(base) | set(cand))
+    failures = []
+    print(f"{'kernel':{width}}  baseline  candidate  ratio")
+    for name in sorted(set(base) | set(cand)):
+        if name not in base:
+            print(f"{name:{width}}  (new kernel, no baseline — skipped)")
+            continue
+        if name not in cand:
+            print(f"{name:{width}}  (retired: absent from candidate — skipped)")
+            continue
+        b, c = base[name].get("speedup"), cand[name].get("speedup")
+        if not b or not c or b <= 0:
+            print(f"{name:{width}}  (non-finite speedup — skipped)")
+            continue
+        ratio = c / b
+        mark = ""
+        if ratio < 1.0 - args.tolerance:
+            mark = "  << REGRESSION"
+            failures.append((name, b, c, ratio))
+        print(f"{name:{width}}  {b:8.3f}  {c:9.3f}  {ratio:5.2f}x{mark}")
+
+    for doc, label in ((base_doc, "baseline"), (cand_doc, "candidate")):
+        s = doc.get("serve")
+        if s:
+            print(
+                f"serve [{label}]: {s.get('qps', 0):.0f} req/s, "
+                f"p50 {s.get('p50_ms', 0):.3f} ms, p99 {s.get('p99_ms', 0):.3f} ms, "
+                f"{s.get('published', 0)} published / {s.get('rejected', 0)} rejected"
+                " (informational only)"
+            )
+
+    if failures:
+        print(
+            f"\nFAIL: {len(failures)} kernel(s) regressed more than "
+            f"{args.tolerance:.0%} vs {args.baseline}:"
+        )
+        for name, b, c, ratio in failures:
+            print(f"  {name}: {b:.3f} -> {c:.3f} ({ratio:.2f}x)")
+        sys.exit(1)
+    print(f"\nOK: no kernel speedup regressed more than {args.tolerance:.0%}")
+
+
+if __name__ == "__main__":
+    main()
