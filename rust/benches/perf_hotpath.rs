@@ -285,6 +285,9 @@ fn bench_serve_axis(json: &mut BenchJson) {
                 published: r.published,
                 rejected: r.rejected,
                 attempts: r.attempts,
+                ingest_dropped: r.ingest_dropped,
+                corpus_evicted: r.corpus_evicted,
+                corpus_peak: r.corpus_peak,
             });
             let mut t = Table::new(
                 "serving axis (bounded in-process run, batch = 64)",
@@ -296,6 +299,8 @@ fn bench_serve_axis(json: &mut BenchJson) {
                 format!("{:.3} / {:.3} / {:.3}", r.p50_ms, r.p95_ms, r.p99_ms)]);
             t.row(vec!["refits pub/rej".into(),
                 format!("{} / {}", r.published, r.rejected)]);
+            t.row(vec!["dropped / evicted / peak".into(),
+                format!("{} / {} / {}", r.ingest_dropped, r.corpus_evicted, r.corpus_peak)]);
             t.print();
             if !r.healthy() {
                 json.note(&format!(

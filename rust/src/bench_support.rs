@@ -132,6 +132,13 @@ pub struct ServeRecord {
     pub published: u64,
     pub rejected: u64,
     pub attempts: u64,
+    /// Examples the bounded ingest buffer dropped under backpressure
+    /// (ISSUE 8 memory counters — 0 in an uncapped run).
+    pub ingest_dropped: u64,
+    /// Samples the retention policy forgot from the training corpus.
+    pub corpus_evicted: u64,
+    /// High-water mark of the retained corpus size.
+    pub corpus_peak: u64,
 }
 
 /// Machine-readable bench output: per-kernel scalar-vs-dispatched
@@ -242,7 +249,9 @@ impl BenchJson {
             out.push_str(&format!(
                 "  \"serve\": {{\"qps\": {}, \"rows_per_sec\": {}, \
                  \"p50_ms\": {}, \"p95_ms\": {}, \"p99_ms\": {}, \
-                 \"published\": {}, \"rejected\": {}, \"attempts\": {}}},\n",
+                 \"published\": {}, \"rejected\": {}, \"attempts\": {}, \
+                 \"ingest_dropped\": {}, \"corpus_evicted\": {}, \
+                 \"corpus_peak\": {}}},\n",
                 json_num(s.qps),
                 json_num(s.rows_per_sec),
                 json_num(s.p50_ms),
@@ -251,6 +260,9 @@ impl BenchJson {
                 s.published,
                 s.rejected,
                 s.attempts,
+                s.ingest_dropped,
+                s.corpus_evicted,
+                s.corpus_peak,
             ));
         }
         out.push_str("  \"notes\": [");
@@ -313,10 +325,17 @@ mod tests {
             published: 3,
             rejected: 1,
             attempts: 4,
+            ingest_dropped: 7,
+            corpus_evicted: 12,
+            corpus_peak: 96,
         });
         let s = j.render();
         assert!(s.contains("\"serve\": {\"qps\": 1000.000000"), "{s}");
         assert!(s.contains("\"published\": 3, \"rejected\": 1, \"attempts\": 4"), "{s}");
+        assert!(
+            s.contains("\"ingest_dropped\": 7, \"corpus_evicted\": 12, \"corpus_peak\": 96"),
+            "{s}"
+        );
         assert_eq!(s.matches('{').count(), s.matches('}').count());
         assert_eq!(s.matches('[').count(), s.matches(']').count());
     }

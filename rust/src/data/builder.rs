@@ -86,6 +86,11 @@ enum Source {
     Generated(DatasetKind),
     Path(PathBuf),
     Samples(Vec<libsvm::Sample>),
+    /// Shared ownership of an already-parsed corpus: the pipeline only
+    /// borrows the samples, so a caller that rebuilds repeatedly from a
+    /// long-lived corpus (the streaming-refit loop) pays no per-build
+    /// copy of its history.
+    SharedSamples(std::sync::Arc<Vec<libsvm::Sample>>),
     InMemory { matrix: Matrix, targets: Vec<f32> },
 }
 
@@ -135,6 +140,18 @@ impl DatasetBuilder {
     /// [`family`](Self::family) at build time).
     pub fn libsvm_samples(samples: Vec<libsvm::Sample>) -> Self {
         Self::new(Source::Samples(samples), Family::Regression)
+    }
+
+    /// Like [`libsvm_samples`](Self::libsvm_samples) but *borrowing* a
+    /// shared corpus: the pipeline reads through the `Arc` and never
+    /// clones the sample vector, so repeated rebuilds from a growing
+    /// retained corpus (the serve-layer refit loop) cost O(matrix)
+    /// instead of O(history) extra allocation per build.  The `Arc` is
+    /// dropped when `build` returns — callers keep sole ownership
+    /// between builds and can mutate via [`std::sync::Arc::make_mut`]
+    /// without a copy.
+    pub fn libsvm_shared(samples: std::sync::Arc<Vec<libsvm::Sample>>) -> Self {
+        Self::new(Source::SharedSamples(samples), Family::Regression)
     }
 
     /// An existing matrix + targets (tests, harnesses, adversarial
@@ -235,6 +252,9 @@ impl DatasetBuilder {
                     base.extend(appended);
                     Source::Samples(base)
                 }
+                // appending would force a copy of the shared corpus —
+                // the whole point of the shared source is to avoid one;
+                // callers extend the corpus before sharing it instead
                 _ => bail!(
                     "append_samples requires a libsvm_samples source — raw \
                      samples cannot join an already-preprocessed matrix"
@@ -351,12 +371,13 @@ fn load_source(
             } else {
                 let samples =
                     libsvm::read(r).with_context(|| format!("parse {}", path.display()))?;
-                let (matrix, targets, mut meta) = orient(samples, family)?;
+                let (matrix, targets, mut meta) = orient(&samples, family)?;
                 meta.source = SourceInfo::Libsvm { path };
                 Ok((matrix, targets, meta))
             }
         }
-        Source::Samples(samples) => orient(samples, family),
+        Source::Samples(samples) => orient(&samples, family),
+        Source::SharedSamples(samples) => orient(&samples, family),
         Source::InMemory { matrix, targets } => {
             Ok((matrix, targets, blank_meta(SourceInfo::InMemory, family)))
         }
@@ -364,8 +385,9 @@ fn load_source(
 }
 
 /// LIBSVM samples into the family's matrix orientation (paper §II-A).
+/// Borrows the samples: shared-corpus sources orient without copying.
 fn orient(
-    samples: Vec<libsvm::Sample>,
+    samples: &[libsvm::Sample],
     family: Family,
 ) -> Result<(Matrix, Vec<f32>, DatasetMeta)> {
     if samples.is_empty() {
@@ -374,11 +396,11 @@ fn orient(
     let mut meta = blank_meta(SourceInfo::Samples, family);
     match family {
         Family::Regression => {
-            let (m, targets) = libsvm::to_regression(&samples);
+            let (m, targets) = libsvm::to_regression(samples);
             Ok((Matrix::Sparse(m), targets, meta))
         }
         Family::Classification => {
-            let (m, labels) = libsvm::to_classification(&samples);
+            let (m, labels) = libsvm::to_classification(samples);
             let d = m.n_rows();
             meta.labels = Some(labels);
             Ok((Matrix::Sparse(m), vec![0.0; d], meta))
@@ -749,6 +771,37 @@ mod tests {
         // regression orientation: rows = samples
         assert_eq!(ds.n_rows(), 3);
         assert_eq!(ds.targets(), &[1.0, -1.0, 2.0]);
+    }
+
+    #[test]
+    fn shared_samples_build_matches_owned_and_releases_the_arc() {
+        let base = vec![
+            libsvm::Sample { label: 1.0, features: vec![(0, 1.0), (2, 2.0)] },
+            libsvm::Sample { label: -1.0, features: vec![(1, 3.0)] },
+            libsvm::Sample { label: 0.5, features: vec![(0, -0.5), (1, 0.25)] },
+        ];
+        let shared = std::sync::Arc::new(base.clone());
+        let owned = DatasetBuilder::libsvm_samples(base)
+            .family(Family::Regression)
+            .normalize(true)
+            .center_targets(true)
+            .build()
+            .unwrap();
+        let via_arc = DatasetBuilder::libsvm_shared(std::sync::Arc::clone(&shared))
+            .family(Family::Regression)
+            .normalize(true)
+            .center_targets(true)
+            .build()
+            .unwrap();
+        assert_eq!(owned.targets(), via_arc.targets());
+        assert_eq!(owned.meta().col_scales, via_arc.meta().col_scales);
+        let ones = vec![1.0f32; owned.n_rows()];
+        for j in 0..owned.n_cols() {
+            assert_eq!(owned.as_ops().dot(j, &ones), via_arc.as_ops().dot(j, &ones));
+        }
+        // the pipeline dropped its clone: sole ownership is back, so
+        // Arc::make_mut between rebuilds never copies the corpus
+        assert_eq!(std::sync::Arc::strong_count(&shared), 1);
     }
 
     #[test]

@@ -17,7 +17,7 @@ use hthc::glm::{family_for, GlmModel};
 use hthc::memory::TierSim;
 use hthc::metrics::Table;
 use hthc::runtime::{GapService, XlaRuntime};
-use hthc::serve::{RefitConfig, ServeConfig};
+use hthc::serve::{RefitConfig, RetentionPolicy, ServeConfig};
 use hthc::solver::{self, keys, EpochEvent, Hthc, StopWhen, Trainer};
 use hthc::util::Args;
 
@@ -82,6 +82,14 @@ recovered via Dataset::to_samples)
   --batch        rows per predict request       (default 64)
   --threads      predict-pool workers           (default 2)
   --ingest       examples streamed per request round (default 4)
+  --ingest-cap   max buffered examples; past it the oldest buffered
+                 example is dropped and counted  (default 0 = unbounded)
+  --retention    keep-all|reservoir|window — what the retained training
+                 corpus forgets at --corpus-cap (default keep-all:
+                 nothing; reservoir = uniform sample of all history,
+                 window = most recent --corpus-cap examples)
+  --corpus-cap   retained-corpus cap for reservoir/window (required > 0
+                 for those policies)
   --refit-every  refit once this many examples are buffered (default 64)
   --refit-secs   ... or after this many seconds  (default 0 = off)
   --refit-epochs max training epochs per refit  (default 100)
@@ -476,16 +484,27 @@ fn cmd_serve(args: &Args) {
     let budget = StopWhen::gap_below(args.f64_or("tol", 1e-5))
         .max_epochs(args.usize_or("refit-epochs", 100))
         .timeout_secs(args.f64_or("refit-timeout", 10.0));
+    let retention_name = args.str_or("retention", "keep-all");
+    let corpus_cap = args.usize_or("corpus-cap", 0);
+    let Some(retention) = RetentionPolicy::parse(&retention_name, corpus_cap) else {
+        eprintln!(
+            "serve: bad --retention {retention_name:?} with --corpus-cap {corpus_cap} \
+             (want keep-all, or reservoir/window with a positive cap)"
+        );
+        std::process::exit(2);
+    };
     let cfg = ServeConfig {
         duration_secs: args.f64_or("duration", 5.0),
         batch: args.usize_or("batch", 64),
         threads: args.usize_or("threads", 2),
         ingest_per_round: args.usize_or("ingest", 4),
+        ingest_cap: args.usize_or("ingest-cap", 0),
         refit: RefitConfig {
             refit_every: args.usize_or("refit-every", 64),
             refit_secs: args.f64_or("refit-secs", 0.0),
             budget,
             regress_tol: args.f64_or("regress-tol", 0.10),
+            retention,
             threads: (
                 args.usize_or("t-a", 1),
                 args.usize_or("t-b", 2),

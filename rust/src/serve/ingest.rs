@@ -1,15 +1,27 @@
-//! Streaming ingest and the warm-start refit loop.
+//! Streaming ingest and the warm-start refit loop — every byte on this
+//! path is bounded and observable.
 //!
-//! [`IngestBuffer`] accumulates raw labeled examples; a [`Refitter`]
-//! drains it on a configurable cadence (example count or elapsed time),
-//! rebuilds the training set through the one [`DatasetBuilder`]
-//! pipeline (base samples + everything absorbed so far, re-normalized
-//! together), warm-starts a [`Trainer`] fit from the live snapshot's
-//! iterate, and publishes the result **only if the duality-gap
-//! certificate does not regress** beyond a tolerance
+//! [`IngestBuffer`] accumulates raw labeled examples behind a hard
+//! capacity with an explicit backpressure rule (drop-oldest, counted —
+//! never an unbounded queue); a [`Refitter`] drains it on a
+//! configurable cadence (example count or elapsed time), absorbs the
+//! fresh examples into a [`RetainedCorpus`] governed by a
+//! [`RetentionPolicy`] (keep-all, uniform reservoir sample, or sliding
+//! window — so the retained training set never grows past a configured
+//! cap), rebuilds the training set through the one [`DatasetBuilder`]
+//! pipeline *without copying the corpus* (shared `Arc` source,
+//! re-normalized together), warm-starts a [`Trainer`] fit from the live
+//! snapshot's iterate **remapped into the rebuild's column space**
+//! ([`ModelSnapshot::remapped_alpha`]), and publishes the result **only
+//! if the duality-gap certificate does not regress** beyond a tolerance
 //! ([`publish_decision`]).  A failed or diverged refit keeps the old
 //! version serving and is counted — graceful degradation, never a
 //! serving gap.
+//!
+//! Forgetting is safe *because* of the certificate gate: a refit on a
+//! reservoir- or window-thinned corpus still computes a fresh
+//! `total_gap` on the rebuilt problem, and only goes live if that
+//! certificate passes `publish_decision` against the serving gap.
 //!
 //! The refit budget is an ordinary [`StopWhen`], so count-based and
 //! wall-clock-bounded refits use the same stopping machinery as any
@@ -19,34 +31,248 @@ use super::{ModelSnapshot, ModelStore, ServeStats};
 use crate::data::{Dataset, DatasetBuilder, Family, Sample};
 use crate::memory::TierSim;
 use crate::solver::{by_name, StopWhen, Trainer};
+use crate::util::Rng;
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-/// Thread-safe accumulator for streamed raw examples.
+/// What the retained training corpus forgets once it hits its cap.
+///
+/// * [`KeepAll`](RetentionPolicy::KeepAll) — the PR-7 behavior: nothing
+///   is ever forgotten and memory grows with history (the default, so
+///   existing runs are behavior-identical).
+/// * [`Reservoir`](RetentionPolicy::Reservoir) — Vitter's Algorithm R:
+///   once `cap` samples are retained, each further offer replaces a
+///   uniformly random resident with probability `cap / seen`, so the
+///   corpus is always a uniform sample of *everything ever offered*
+///   (unbiased history; order not preserved).
+/// * [`SlidingWindow`](RetentionPolicy::SlidingWindow) — forget
+///   oldest-first: the corpus is always the most recent `cap` offers
+///   (biased toward the present; order preserved).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RetentionPolicy {
+    KeepAll,
+    Reservoir { cap: usize },
+    SlidingWindow { cap: usize },
+}
+
+impl RetentionPolicy {
+    /// CLI spelling → policy (`--retention` + `--corpus-cap`).  Capped
+    /// policies reject a zero cap rather than silently retaining
+    /// nothing.
+    pub fn parse(name: &str, cap: usize) -> Option<Self> {
+        match name {
+            "keep" | "keep-all" | "keepall" => Some(RetentionPolicy::KeepAll),
+            "reservoir" if cap > 0 => Some(RetentionPolicy::Reservoir { cap }),
+            "window" | "sliding-window" if cap > 0 => {
+                Some(RetentionPolicy::SlidingWindow { cap })
+            }
+            _ => None,
+        }
+    }
+
+    /// The retention cap, if this policy has one.
+    pub fn cap(&self) -> Option<usize> {
+        match *self {
+            RetentionPolicy::KeepAll => None,
+            RetentionPolicy::Reservoir { cap } | RetentionPolicy::SlidingWindow { cap } => {
+                Some(cap)
+            }
+        }
+    }
+}
+
+/// The retained raw-space training corpus: base samples plus everything
+/// absorbed by refits, bounded by a [`RetentionPolicy`].
+///
+/// The samples live behind an `Arc` so a rebuild
+/// ([`DatasetBuilder::libsvm_shared`]) borrows them without an
+/// O(history) copy; between rebuilds the corpus is the sole owner, so
+/// mutation through [`Arc::make_mut`] is copy-free.
+pub struct RetainedCorpus {
+    samples: Arc<Vec<Sample>>,
+    policy: RetentionPolicy,
+    /// Samples ever offered (base included) — the reservoir's `t`.
+    seen: u64,
+    /// Samples the policy removed (or refused entry) — every offer past
+    /// the cap evicts exactly one.
+    evicted: u64,
+    /// High-water mark of the retained count.
+    peak: usize,
+    rng: Rng,
+}
+
+impl RetainedCorpus {
+    /// A corpus seeded with `base` (the policy applies to the base too:
+    /// a base larger than the cap is thinned immediately).
+    pub fn new(base: Vec<Sample>, policy: RetentionPolicy, seed: u64) -> Self {
+        let mut corpus = RetainedCorpus {
+            samples: Arc::new(Vec::new()),
+            policy,
+            seen: 0,
+            evicted: 0,
+            peak: 0,
+            rng: Rng::new(seed ^ 0x5e7a_17ed),
+        };
+        corpus.offer_many(base);
+        corpus
+    }
+
+    /// Offer one sample to the policy.
+    pub fn offer(&mut self, s: Sample) {
+        self.offer_many(vec![s]);
+    }
+
+    /// Offer a batch; the policy decides what is retained.
+    pub fn offer_many(&mut self, batch: Vec<Sample>) {
+        if batch.is_empty() {
+            return;
+        }
+        // sole owner between rebuilds — no copy (see struct docs)
+        let samples = Arc::make_mut(&mut self.samples);
+        match self.policy {
+            RetentionPolicy::KeepAll => {
+                self.seen += batch.len() as u64;
+                samples.extend(batch);
+            }
+            RetentionPolicy::SlidingWindow { cap } => {
+                self.seen += batch.len() as u64;
+                samples.extend(batch);
+                if samples.len() > cap {
+                    let excess = samples.len() - cap;
+                    samples.drain(..excess);
+                    self.evicted += excess as u64;
+                }
+            }
+            RetentionPolicy::Reservoir { cap } => {
+                for s in batch {
+                    self.seen += 1;
+                    if samples.len() < cap {
+                        samples.push(s);
+                    } else {
+                        // Algorithm R: keep the incoming sample with
+                        // probability cap/seen, in a uniformly random
+                        // slot; either way exactly one sample is evicted
+                        let j = self.rng.below(self.seen as usize);
+                        if j < cap {
+                            samples[j] = s;
+                        }
+                        self.evicted += 1;
+                    }
+                }
+            }
+        }
+        self.peak = self.peak.max(samples.len());
+    }
+
+    /// Shared handle for a zero-copy rebuild (dropped when the build
+    /// returns, restoring sole ownership).
+    pub fn shared(&self) -> Arc<Vec<Sample>> {
+        Arc::clone(&self.samples)
+    }
+
+    /// Samples currently retained.
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    /// Samples ever offered (base included).
+    pub fn seen(&self) -> u64 {
+        self.seen
+    }
+
+    /// Samples the policy forgot.
+    pub fn evicted(&self) -> u64 {
+        self.evicted
+    }
+
+    /// Whether anything was ever forgotten (classification warm starts
+    /// key off this: coordinates are sample positions there, and
+    /// eviction invalidates them).
+    pub fn has_evicted(&self) -> bool {
+        self.evicted > 0
+    }
+
+    /// High-water mark of the retained count.
+    pub fn peak(&self) -> usize {
+        self.peak
+    }
+
+    pub fn policy(&self) -> RetentionPolicy {
+        self.policy
+    }
+}
+
+/// Thread-safe accumulator for streamed raw examples, with a hard
+/// capacity and a drop-oldest backpressure rule.
+///
+/// With a cap, a push past capacity evicts the *oldest* buffered
+/// example (the freshest data is the most valuable to a refit) and
+/// counts it in [`dropped`](IngestBuffer::dropped) — the buffer can
+/// never grow past `cap` no matter how far ingest outruns the refit
+/// cadence.  [`new`](IngestBuffer::new) keeps the unbounded PR-7
+/// behavior for existing callers.
 #[derive(Default)]
 pub struct IngestBuffer {
-    inner: Mutex<Vec<Sample>>,
-    /// Examples ever pushed (drains do not reset this).
+    inner: Mutex<VecDeque<Sample>>,
+    /// 0 = unbounded.
+    cap: usize,
+    /// Examples ever pushed (drains and drops do not reset this).
     total: AtomicU64,
+    /// Examples evicted by backpressure (never drained).
+    dropped: AtomicU64,
 }
 
 impl IngestBuffer {
+    /// Unbounded buffer (existing behavior; prefer
+    /// [`bounded`](IngestBuffer::bounded) for long-lived servers).
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Buffer that never holds more than `cap` examples (`cap == 0`
+    /// means unbounded, mirroring the CLI's `--ingest-cap 0`).
+    pub fn bounded(cap: usize) -> Self {
+        IngestBuffer { cap, ..Self::default() }
+    }
+
+    /// The configured capacity, if bounded.
+    pub fn capacity(&self) -> Option<usize> {
+        (self.cap > 0).then_some(self.cap)
+    }
+
+    fn enforce_cap(&self, q: &mut VecDeque<Sample>) {
+        if self.cap > 0 {
+            let mut evicted = 0u64;
+            while q.len() > self.cap {
+                q.pop_front();
+                evicted += 1;
+            }
+            if evicted > 0 {
+                self.dropped.fetch_add(evicted, Relaxed);
+            }
+        }
+    }
+
     pub fn push(&self, s: Sample) {
-        self.inner.lock().unwrap_or_else(|e| e.into_inner()).push(s);
+        let mut q = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        q.push_back(s);
+        self.enforce_cap(&mut q);
+        drop(q);
         self.total.fetch_add(1, Relaxed);
     }
 
     pub fn push_many(&self, batch: Vec<Sample>) {
         let n = batch.len() as u64;
-        self.inner
-            .lock()
-            .unwrap_or_else(|e| e.into_inner())
-            .extend(batch);
+        let mut q = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        q.extend(batch);
+        self.enforce_cap(&mut q);
+        drop(q);
         self.total.fetch_add(n, Relaxed);
     }
 
@@ -59,14 +285,19 @@ impl IngestBuffer {
         self.len() == 0
     }
 
-    /// Examples ever pushed.
+    /// Examples ever pushed (dropped ones included).
     pub fn total(&self) -> u64 {
         self.total.load(Relaxed)
     }
 
+    /// Examples evicted by backpressure (pushed but never drained).
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Relaxed)
+    }
+
     /// Take everything buffered.
     pub fn drain(&self) -> Vec<Sample> {
-        std::mem::take(&mut *self.inner.lock().unwrap_or_else(|e| e.into_inner()))
+        std::mem::take(&mut *self.inner.lock().unwrap_or_else(|e| e.into_inner())).into()
     }
 }
 
@@ -86,6 +317,9 @@ pub struct RefitConfig {
     /// `old_gap * (1 + regress_tol)` (and is not converged outright) is
     /// rejected.
     pub regress_tol: f64,
+    /// What the retained corpus forgets at its cap (default
+    /// [`RetentionPolicy::KeepAll`]: nothing, the PR-7 behavior).
+    pub retention: RetentionPolicy,
     /// Thread topology `(T_A, T_B, V_B)` for refits.
     pub threads: (usize, usize, usize),
     /// Engine name for refits (see [`by_name`]).
@@ -100,6 +334,7 @@ impl Default for RefitConfig {
             refit_secs: 0.0,
             budget: StopWhen::gap_below(1e-5).max_epochs(100).timeout_secs(10.0),
             regress_tol: 0.10,
+            retention: RetentionPolicy::KeepAll,
             threads: (1, 2, 1),
             solver: "hthc".into(),
             seed: 42,
@@ -138,12 +373,10 @@ pub enum RefitOutcome {
     NoData,
 }
 
-/// Owns the growing raw training set and runs warm-started refits
+/// Owns the bounded retained corpus and runs warm-started refits
 /// against a [`ModelStore`] (see module docs).
 pub struct Refitter {
-    /// Raw-space training samples: the base set plus everything
-    /// absorbed by previous refits.
-    samples: Vec<Sample>,
+    corpus: RetainedCorpus,
     family: Family,
     normalize: bool,
     center: bool,
@@ -158,7 +391,9 @@ impl Refitter {
     /// `base` is the initial training set in raw space (e.g.
     /// [`Dataset::to_samples`] of what the live snapshot was trained
     /// on); `normalize`/`center` must match the pipeline flags the base
-    /// model was built with, so refits preprocess consistently.
+    /// model was built with, so refits preprocess consistently.  The
+    /// retention policy in `cfg` applies from the start: a base corpus
+    /// above the cap is thinned before the first refit.
     pub fn new(
         base: Vec<Sample>,
         model_name: &str,
@@ -168,7 +403,7 @@ impl Refitter {
         cfg: RefitConfig,
     ) -> Self {
         Refitter {
-            samples: base,
+            corpus: RetainedCorpus::new(base, cfg.retention, cfg.seed),
             family: crate::glm::family_for(model_name),
             normalize,
             center,
@@ -184,14 +419,25 @@ impl Refitter {
         &self.cfg
     }
 
-    /// Examples absorbed into the training set across all refits.
+    /// Examples absorbed into the corpus across all refits (counted at
+    /// the drain — a sample later forgotten by the policy still counts).
     pub fn absorbed(&self) -> u64 {
         self.absorbed_total
     }
 
-    /// Current training-set size (base + absorbed).
+    /// Current retained training-set size.
     pub fn sample_count(&self) -> usize {
-        self.samples.len()
+        self.corpus.len()
+    }
+
+    /// Samples the retention policy forgot so far.
+    pub fn corpus_evicted(&self) -> u64 {
+        self.corpus.evicted()
+    }
+
+    /// High-water mark of the retained corpus.
+    pub fn corpus_peak(&self) -> usize {
+        self.corpus.peak()
     }
 
     /// Whether the cadence says a refit is due given `buffered` waiting
@@ -206,17 +452,35 @@ impl Refitter {
     }
 
     fn rebuild(&self) -> crate::Result<Dataset> {
-        DatasetBuilder::libsvm_samples(self.samples.clone())
+        // shared source: the pipeline borrows the corpus, so this costs
+        // O(matrix) regardless of how much history is retained
+        DatasetBuilder::libsvm_shared(self.corpus.shared())
             .family(self.family)
             .normalize(self.normalize)
             .center_targets(self.center)
             .build()
     }
 
-    /// Drain the buffer, rebuild, warm-start a fit from the live
-    /// snapshot, and publish or reject by certificate.  Counters land
-    /// in `stats`; the old version keeps serving on every non-publish
-    /// path.
+    /// The warm-start iterate for a fit on `ds`, or `None` when a warm
+    /// start would be unsound: classification coordinates are *sample
+    /// positions*, so once the retention policy has evicted anything
+    /// the live iterate's coordinates no longer name the same samples
+    /// and the refit must cold-start.  Regression coordinates are
+    /// features — stable under any retention policy — so the live
+    /// alpha is remapped into the rebuild's column space
+    /// ([`ModelSnapshot::remapped_alpha`]: old→new `col_scales` ratio,
+    /// zero-extended).
+    fn warm_alpha(&self, live: &ModelSnapshot, ds: &Dataset) -> Option<Vec<f32>> {
+        if self.family == Family::Classification && self.corpus.has_evicted() {
+            return None;
+        }
+        Some(live.remapped_alpha(ds.meta().col_scales.as_deref(), ds.n_cols()))
+    }
+
+    /// Drain the buffer, absorb under the retention policy, rebuild,
+    /// warm-start a fit from the live snapshot, and publish or reject
+    /// by certificate.  Counters land in `stats`; the old version keeps
+    /// serving on every non-publish path.
     pub fn refit_once(
         &mut self,
         store: &ModelStore,
@@ -224,12 +488,15 @@ impl Refitter {
         stats: &ServeStats,
     ) -> RefitOutcome {
         let fresh = buf.drain();
+        stats.ingest_dropped.store(buf.dropped(), Relaxed);
         if fresh.is_empty() {
             return RefitOutcome::NoData;
         }
         stats.refit_attempts.fetch_add(1, Relaxed);
         self.absorbed_total += fresh.len() as u64;
-        self.samples.extend(fresh);
+        self.corpus.offer_many(fresh);
+        stats.corpus_evicted.store(self.corpus.evicted(), Relaxed);
+        stats.corpus_peak.fetch_max(self.corpus.peak() as u64, Relaxed);
         self.last_refit = Instant::now();
 
         let outcome = self.train_and_decide(store);
@@ -264,8 +531,10 @@ impl Refitter {
             .solver_boxed(engine)
             .threads(t_a, t_b, v_b)
             .stop_when(self.cfg.budget)
-            .seed(self.cfg.seed)
-            .warm_start_from(&live.iterate(), ds.n_cols());
+            .seed(self.cfg.seed);
+        if let Some(alpha) = self.warm_alpha(&live, &ds) {
+            trainer = trainer.warm_start(alpha);
+        }
         let report = trainer.fit_with(model.as_mut(), &ds, &TierSim::default());
         // engine-independent certificate: some engines' own traces carry
         // NaN gaps (SGD), and publish decisions must be comparable
@@ -299,6 +568,7 @@ mod tests {
     fn buffer_push_drain_and_totals() {
         let buf = IngestBuffer::new();
         assert!(buf.is_empty());
+        assert_eq!(buf.capacity(), None);
         buf.push(Sample { label: 1.0, features: vec![(0, 1.0)] });
         buf.push_many(vec![
             Sample { label: 2.0, features: vec![] },
@@ -306,10 +576,144 @@ mod tests {
         ]);
         assert_eq!(buf.len(), 3);
         assert_eq!(buf.total(), 3);
+        assert_eq!(buf.dropped(), 0);
         let drained = buf.drain();
         assert_eq!(drained.len(), 3);
         assert!(buf.is_empty());
         assert_eq!(buf.total(), 3, "total survives the drain");
+    }
+
+    #[test]
+    fn bounded_buffer_drops_oldest_and_counts() {
+        let buf = IngestBuffer::bounded(4);
+        assert_eq!(buf.capacity(), Some(4));
+        for k in 0..6 {
+            buf.push(Sample { label: k as f32, features: vec![] });
+            assert!(buf.len() <= 4, "cap violated at push {k}");
+        }
+        assert_eq!(buf.len(), 4);
+        assert_eq!(buf.total(), 6, "total counts dropped pushes too");
+        assert_eq!(buf.dropped(), 2);
+        // drop-oldest: the survivors are the last four pushed
+        let labels: Vec<f32> = buf.drain().iter().map(|s| s.label).collect();
+        assert_eq!(labels, vec![2.0, 3.0, 4.0, 5.0]);
+        // a batch larger than the cap keeps its newest tail
+        buf.push_many((0..10).map(|k| Sample { label: k as f32, features: vec![] }).collect());
+        assert_eq!(buf.len(), 4);
+        assert_eq!(buf.dropped(), 8);
+        let labels: Vec<f32> = buf.drain().iter().map(|s| s.label).collect();
+        assert_eq!(labels, vec![6.0, 7.0, 8.0, 9.0]);
+    }
+
+    fn tagged(label: f32) -> Sample {
+        Sample { label, features: vec![(0, label)] }
+    }
+
+    #[test]
+    fn retention_parse_spellings() {
+        assert_eq!(RetentionPolicy::parse("keep-all", 0), Some(RetentionPolicy::KeepAll));
+        assert_eq!(RetentionPolicy::parse("keep", 7), Some(RetentionPolicy::KeepAll));
+        assert_eq!(
+            RetentionPolicy::parse("reservoir", 9),
+            Some(RetentionPolicy::Reservoir { cap: 9 })
+        );
+        assert_eq!(
+            RetentionPolicy::parse("window", 9),
+            Some(RetentionPolicy::SlidingWindow { cap: 9 })
+        );
+        assert_eq!(
+            RetentionPolicy::parse("sliding-window", 1),
+            Some(RetentionPolicy::SlidingWindow { cap: 1 })
+        );
+        assert_eq!(RetentionPolicy::parse("reservoir", 0), None, "capped policy needs a cap");
+        assert_eq!(RetentionPolicy::parse("window", 0), None);
+        assert_eq!(RetentionPolicy::parse("bogus", 5), None);
+        assert_eq!(RetentionPolicy::KeepAll.cap(), None);
+        assert_eq!(RetentionPolicy::Reservoir { cap: 3 }.cap(), Some(3));
+    }
+
+    #[test]
+    fn sliding_window_keeps_newest_in_order() {
+        let mut c = RetainedCorpus::new(
+            (0..3).map(|k| tagged(k as f32)).collect(),
+            RetentionPolicy::SlidingWindow { cap: 4 },
+            1,
+        );
+        assert_eq!(c.len(), 3);
+        assert_eq!(c.evicted(), 0);
+        c.offer_many((3..8).map(|k| tagged(k as f32)).collect());
+        assert_eq!(c.len(), 4);
+        assert_eq!(c.evicted(), 4);
+        assert_eq!(c.seen(), 8);
+        assert_eq!(c.peak(), 4, "peak never exceeds the cap on the window path");
+        let labels: Vec<f32> = c.shared().iter().map(|s| s.label).collect();
+        assert_eq!(labels, vec![4.0, 5.0, 6.0, 7.0], "most recent cap offers, in order");
+        assert!(c.has_evicted());
+    }
+
+    #[test]
+    fn reservoir_holds_exactly_cap_and_samples_uniformly() {
+        let cap = 50;
+        let mut c = RetainedCorpus::new(vec![], RetentionPolicy::Reservoir { cap }, 99);
+        for k in 0..cap {
+            c.offer(tagged(k as f32));
+            assert_eq!(c.len(), k + 1, "below cap nothing is forgotten");
+        }
+        assert_eq!(c.evicted(), 0);
+        let total = 2000usize;
+        c.offer_many((cap..total).map(|k| tagged(k as f32)).collect());
+        assert_eq!(c.len(), cap, "exactly cap once saturated");
+        assert_eq!(c.peak(), cap);
+        assert_eq!(c.seen(), total as u64);
+        assert_eq!(c.evicted(), (total - cap) as u64, "one eviction per offer past cap");
+        // unbiasedness smoke: the retained labels should span history,
+        // not cluster at either end (mean of uniform 0..2000 ≈ 1000;
+        // a sliding window would sit at ~1975, keep-first at ~25)
+        let mean: f32 =
+            c.shared().iter().map(|s| s.label).sum::<f32>() / cap as f32;
+        assert!(
+            (400.0..1600.0).contains(&mean),
+            "reservoir mean {mean} suggests a biased sample"
+        );
+    }
+
+    #[test]
+    fn keep_all_never_evicts() {
+        let mut c = RetainedCorpus::new(
+            (0..10).map(|k| tagged(k as f32)).collect(),
+            RetentionPolicy::KeepAll,
+            3,
+        );
+        c.offer_many((10..200).map(|k| tagged(k as f32)).collect());
+        assert_eq!(c.len(), 200);
+        assert_eq!(c.evicted(), 0);
+        assert_eq!(c.peak(), 200);
+        assert!(!c.has_evicted());
+    }
+
+    #[test]
+    fn corpus_rebuild_does_not_copy_history() {
+        let mut c = RetainedCorpus::new(
+            (0..8).map(|k| tagged(1.0 + k as f32)).collect(),
+            RetentionPolicy::KeepAll,
+            5,
+        );
+        {
+            let shared = c.shared();
+            let ds = DatasetBuilder::libsvm_shared(Arc::clone(&shared))
+                .family(Family::Regression)
+                .build()
+                .unwrap();
+            assert_eq!(ds.n_rows(), 8);
+            // builder dropped its handle after build; only the corpus
+            // and this test's clone remain
+            assert_eq!(Arc::strong_count(&shared), 2);
+        }
+        // sole owner again: the next absorb mutates in place via
+        // make_mut without cloning — sole ownership proves it
+        c.offer(tagged(99.0));
+        assert_eq!(c.len(), 9);
+        assert_eq!(Arc::strong_count(&c.shared()), 2); // corpus + this call's clone
     }
 
     #[test]
@@ -352,12 +756,9 @@ mod tests {
         assert!(!never.should_refit(1000));
     }
 
-    /// Full flow: initial fit -> serve -> ingest perturbed examples ->
-    /// warm-started refit publishes version 2 with the absorbed count.
-    #[test]
-    fn refit_publishes_and_counts_absorbed() {
+    fn fit_store(seed: u64) -> (Dataset, ModelStore, Vec<Sample>) {
         let ds = DatasetBuilder::generated(DatasetKind::Tiny, Family::Regression)
-            .seed(71)
+            .seed(seed)
             .normalize(true)
             .center_targets(true)
             .build()
@@ -375,8 +776,16 @@ mod tests {
             &report.alpha,
         );
         let store = ModelStore::new(ModelSnapshot::from_fit(&model, &ds, &report, gap, 0));
-        let stats = ServeStats::new();
         let base = ds.to_samples().unwrap();
+        (ds, store, base)
+    }
+
+    /// Full flow: initial fit -> serve -> ingest perturbed examples ->
+    /// warm-started refit publishes version 2 with the absorbed count.
+    #[test]
+    fn refit_publishes_and_counts_absorbed() {
+        let (_ds, store, base) = fit_store(71);
+        let stats = ServeStats::new();
 
         let mut refitter = Refitter::new(
             base.clone(),
@@ -418,8 +827,121 @@ mod tests {
         let live = store.load();
         assert_eq!(live.absorbed, 3);
         assert_eq!(refitter.sample_count(), base.len() + 3);
+        assert_eq!(refitter.corpus_evicted(), 0, "KeepAll forgets nothing");
         assert_eq!(stats.attempts(), 1);
         assert!(buf.is_empty());
+    }
+
+    /// Satellite regression test: across a refit the live iterate lives
+    /// in the *old* normalization's column space; feeding it through
+    /// `remapped_alpha` (old→new col_scales ratio, zero-extended) must
+    /// converge no slower than a cold start on the rebuilt problem —
+    /// the stale un-remapped iterate has no such guarantee.
+    #[test]
+    fn remapped_warm_start_no_slower_than_cold() {
+        let (_ds, store, base) = fit_store(77);
+        // fresh examples with rescaled features: column norms change, so
+        // the rebuild's col_scales differ materially from the old ones
+        let fresh: Vec<Sample> = base
+            .iter()
+            .take(6)
+            .map(|s| Sample {
+                label: s.label * 1.5,
+                features: s.features.iter().map(|&(j, x)| (j, x * 4.0)).collect(),
+            })
+            .collect();
+        let mut corpus = base.clone();
+        corpus.extend(fresh);
+        let rebuilt = DatasetBuilder::libsvm_samples(corpus)
+            .family(Family::Regression)
+            .normalize(true)
+            .center_targets(true)
+            .build()
+            .unwrap();
+        let live = store.load();
+        let old_scales = live.col_scales.clone().unwrap();
+        let new_scales = rebuilt.meta().col_scales.clone().unwrap();
+        assert!(
+            old_scales
+                .iter()
+                .zip(&new_scales)
+                .any(|(o, n)| (o / n - 1.0).abs() > 0.05),
+            "test premise: the rebuild must re-normalize differently"
+        );
+        let warm = live.remapped_alpha(rebuilt.meta().col_scales.as_deref(), rebuilt.n_cols());
+
+        let budget = StopWhen::gap_below(1e-7).max_epochs(500).eval_every(1);
+        let fit = |warm_alpha: Option<Vec<f32>>| {
+            let mut model = Lasso::new(0.01);
+            let mut trainer = Trainer::new().solver(SeqThreshold).stop_when(budget);
+            if let Some(a) = warm_alpha {
+                trainer = trainer.warm_start(a);
+            }
+            trainer.fit_with(&mut model, &rebuilt, &Default::default())
+        };
+        let warm_report = fit(Some(warm));
+        let cold_report = fit(None);
+        assert!(warm_report.converged, "warm start must reach the tolerance");
+        assert!(
+            warm_report.epochs <= cold_report.epochs,
+            "corrected warm start took {} epochs, cold start {}",
+            warm_report.epochs,
+            cold_report.epochs
+        );
+    }
+
+    /// Eviction-aware refit: under a sliding window the corpus stays at
+    /// its cap across refits and the certificate gate still governs the
+    /// publish.
+    #[test]
+    fn capped_refit_bounds_corpus_and_still_publishes() {
+        let (_ds, store, base) = fit_store(83);
+        let cap = base.len(); // forget exactly as much as arrives
+        let stats = ServeStats::new();
+        let mut refitter = Refitter::new(
+            base.clone(),
+            "lasso",
+            0.01,
+            true,
+            true,
+            RefitConfig {
+                refit_every: 2,
+                solver: "st".into(),
+                budget: StopWhen::gap_below(1e-7).max_epochs(300),
+                retention: RetentionPolicy::SlidingWindow { cap },
+                ..Default::default()
+            },
+        );
+        let buf = IngestBuffer::bounded(cap);
+        let mut rng = Rng::new(84);
+        for round in 0..3u64 {
+            buf.push_many(
+                base.iter()
+                    .take(4)
+                    .map(|s| Sample {
+                        label: s.label + 0.01 * rng.normal(),
+                        features: s.features.clone(),
+                    })
+                    .collect(),
+            );
+            let outcome = refitter.refit_once(&store, &buf, &stats);
+            assert!(
+                matches!(
+                    outcome,
+                    RefitOutcome::Published { .. } | RefitOutcome::Rejected { .. }
+                ),
+                "round {round}: {outcome:?}"
+            );
+            assert!(
+                refitter.sample_count() <= cap,
+                "corpus {} exceeded cap {cap}",
+                refitter.sample_count()
+            );
+        }
+        assert_eq!(refitter.corpus_evicted(), 12, "3 rounds x 4 absorbed = 12 forgotten");
+        assert_eq!(refitter.corpus_peak(), cap);
+        assert_eq!(stats.corpus_evicted.load(Relaxed), 12);
+        assert!(stats.attempts() >= 3);
     }
 
     #[test]

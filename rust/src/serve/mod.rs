@@ -12,6 +12,9 @@
 //! * [`IngestBuffer`] + [`Refitter`] — streaming examples absorbed on a
 //!   cadence by [`Trainer`](crate::solver::Trainer) warm starts, with a
 //!   duality-gap certificate gating every publish ([`publish_decision`]);
+//!   both ends are memory-bounded: the buffer by a hard capacity with
+//!   drop-oldest backpressure, the retained corpus by a
+//!   [`RetentionPolicy`] (keep-all / reservoir / sliding window);
 //! * [`ServeStats`] — lock-free counters and fixed-bucket latency
 //!   quantiles for the `hthc serve` surface, driven by the bounded
 //!   in-process simulator in [`sim`].
@@ -32,7 +35,10 @@ pub mod snapshot;
 pub mod stats;
 pub mod store;
 
-pub use ingest::{publish_decision, IngestBuffer, RefitConfig, RefitOutcome, Refitter};
+pub use ingest::{
+    publish_decision, IngestBuffer, RefitConfig, RefitOutcome, Refitter, RetainedCorpus,
+    RetentionPolicy,
+};
 pub use predict::{
     accuracy, accuracy_from_scores, decision_scores, mean_squared_error, PredictEngine,
 };

@@ -9,7 +9,8 @@
 //! that the CLI renders and the serve benchmark records.
 
 use super::{
-    IngestBuffer, ModelSnapshot, ModelStore, PredictEngine, Refitter, RefitConfig, ServeStats,
+    IngestBuffer, ModelSnapshot, ModelStore, PredictEngine, Refitter, RefitConfig,
+    RetentionPolicy, ServeStats,
 };
 use crate::data::{DatasetBuilder, Sample, SparseMatrix};
 use crate::memory::TierSim;
@@ -31,7 +32,11 @@ pub struct ServeConfig {
     pub threads: usize,
     /// Examples streamed into the ingest buffer per request round.
     pub ingest_per_round: usize,
-    /// Refit cadence, budget and publish tolerance.
+    /// Hard capacity of the ingest buffer (0 = unbounded); past it the
+    /// oldest buffered example is dropped and counted.
+    pub ingest_cap: usize,
+    /// Refit cadence, budget, publish tolerance and corpus retention
+    /// policy (`refit.retention`).
     pub refit: RefitConfig,
     /// Preprocessing flags shared by the initial fit and every refit.
     pub normalize: bool,
@@ -49,6 +54,7 @@ impl Default for ServeConfig {
             batch: 64,
             threads: 2,
             ingest_per_round: 4,
+            ingest_cap: 0,
             refit: RefitConfig::default(),
             normalize: true,
             center: true,
@@ -75,6 +81,14 @@ pub struct ServeReport {
     pub failed: u64,
     pub attempts: u64,
     pub ingested: u64,
+    /// Examples the bounded ingest buffer dropped under backpressure.
+    pub ingest_dropped: u64,
+    /// Samples the retention policy forgot from the training corpus.
+    pub corpus_evicted: u64,
+    /// High-water mark of the retained corpus.
+    pub corpus_peak: u64,
+    /// Retained corpus size at the end of the run.
+    pub corpus_size: u64,
     pub final_version: u64,
     pub final_gap: f64,
     pub staleness_secs: f64,
@@ -94,6 +108,8 @@ impl ServeReport {
              latency: p50 {:.3} ms, p95 {:.3} ms, p99 {:.3} ms\n\
              refits: {} published / {} rejected / {} failed ({} attempts), \
              {} examples ingested\n\
+             memory: {} ingest dropped, {} corpus evicted, \
+             corpus {} retained (peak {})\n\
              live model: v{} gap {:.3e}, staleness {:.1}s, {} absorbed examples",
             self.elapsed_secs,
             self.requests,
@@ -108,6 +124,10 @@ impl ServeReport {
             self.failed,
             self.attempts,
             self.ingested,
+            self.ingest_dropped,
+            self.corpus_evicted,
+            self.corpus_size,
+            self.corpus_peak,
             self.final_version,
             self.final_gap,
             self.staleness_secs,
@@ -221,7 +241,7 @@ pub fn run(base: Vec<Sample>, cfg: &ServeConfig) -> Result<ServeReport> {
     let input_dim = store.load().input_dim();
     let batches = request_batches(&base, input_dim, cfg.batch, 8, &mut rng);
 
-    let buf = IngestBuffer::new();
+    let buf = IngestBuffer::bounded(cfg.ingest_cap);
     let mut refitter = Refitter::new(
         base.clone(),
         &cfg.model,
@@ -298,6 +318,12 @@ pub fn run(base: Vec<Sample>, cfg: &ServeConfig) -> Result<ServeReport> {
         failed: stats.failed(),
         attempts: stats.attempts(),
         ingested: stats.ingested(),
+        // read the primary sources, not the stats mirrors — drops after
+        // the last refit drain must still be reported
+        ingest_dropped: buf.dropped(),
+        corpus_evicted: refitter.corpus_evicted(),
+        corpus_peak: refitter.corpus_peak() as u64,
+        corpus_size: refitter.sample_count() as u64,
         final_version: live.version,
         final_gap: live.gap,
         staleness_secs: live.staleness_secs(),
@@ -347,6 +373,48 @@ mod tests {
         let text = report.render();
         assert!(text.contains("req/s"), "{text}");
         assert!(text.contains("published"), "{text}");
+    }
+
+    /// Bounded run: small ingest cap + reservoir corpus cap, heavy
+    /// ingest.  Everything stays within its cap and the caps are
+    /// visible in the report.
+    #[test]
+    fn capped_run_bounds_buffer_and_corpus() {
+        let base = base_samples(91);
+        let cap = base.len(); // reservoir the corpus at its initial size
+        let cfg = ServeConfig {
+            duration_secs: 0.4,
+            batch: 16,
+            threads: 2,
+            ingest_per_round: 16, // outrun the refit cadence
+            ingest_cap: 32,
+            refit: RefitConfig {
+                refit_every: 16,
+                solver: "st".into(),
+                budget: StopWhen::gap_below(1e-6).max_epochs(100).timeout_secs(5.0),
+                retention: RetentionPolicy::Reservoir { cap },
+                ..Default::default()
+            },
+            model: "lasso".into(),
+            lam: 1e-3,
+            ..Default::default()
+        };
+        let report = run(base, &cfg).unwrap();
+        assert!(report.rows > 0, "{report:?}");
+        assert!(report.healthy(), "capped run must still publish: {report:?}");
+        assert!(
+            report.corpus_peak <= cap as u64,
+            "corpus peak {} exceeded cap {cap}",
+            report.corpus_peak
+        );
+        assert!(report.corpus_size <= cap as u64, "{report:?}");
+        assert!(
+            report.corpus_evicted > 0,
+            "heavy ingest over a full reservoir must evict: {report:?}"
+        );
+        let text = report.render();
+        assert!(text.contains("corpus"), "{text}");
+        assert!(text.contains("dropped"), "{text}");
     }
 
     #[test]

@@ -113,6 +113,35 @@ impl ModelSnapshot {
             gap: Some(self.gap),
         }
     }
+
+    /// Remap this snapshot's iterate into a rebuild's column space.
+    ///
+    /// `alpha` was recorded in the *old* normalization: coordinate `j`
+    /// multiplies a column that was scaled by `self.col_scales[j]`, so
+    /// the raw-space weight it encodes is `alpha_j * s_old_j`.  A
+    /// rebuild re-normalizes with its own `new_scales`, and preserving
+    /// the raw-space weight requires
+    /// `alpha_new_j = alpha_j * s_old_j / s_new_j` — feeding the stale
+    /// alpha through unchanged silently rescales every weight by
+    /// `s_new_j / s_old_j` and can start the fit *farther* from the
+    /// optimum than zero.  Columns new to the rebuild start at zero;
+    /// degenerate scales (zero/non-finite ratios) also fall back to
+    /// zero rather than poisoning the iterate.
+    pub fn remapped_alpha(&self, new_scales: Option<&[f32]>, n_cols: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; n_cols];
+        for (j, slot) in out.iter_mut().enumerate().take(self.alpha.len()) {
+            let a = self.alpha[j];
+            let s_old = self
+                .col_scales
+                .as_ref()
+                .and_then(|s| s.get(j).copied())
+                .unwrap_or(1.0);
+            let s_new = new_scales.and_then(|s| s.get(j).copied()).unwrap_or(1.0);
+            let remapped = a * s_old / s_new;
+            *slot = if remapped.is_finite() { remapped } else { 0.0 };
+        }
+        out
+    }
 }
 
 #[cfg(test)]
@@ -151,6 +180,43 @@ mod tests {
         assert_eq!(snap.input_dim(), ds.n_cols());
         assert_eq!(snap.absorbed, 3);
         assert_eq!(snap.iterate().alpha, report.alpha);
+    }
+
+    #[test]
+    fn remapped_alpha_preserves_raw_weights() {
+        let snap = ModelSnapshot {
+            version: 1,
+            kind: Lasso::new(0.01).kind(),
+            family: Family::Regression,
+            weights: vec![0.0; 3],
+            bias: 0.0,
+            alpha: vec![2.0, -4.0, 8.0],
+            col_scales: Some(vec![0.5, 0.25, 2.0]),
+            gap: 1e-6,
+            trained_cols: 3,
+            absorbed: 0,
+            published_at: std::time::Instant::now(),
+        };
+        // rebuild re-normalized differently and grew by two columns
+        let new_scales = [1.0f32, 0.5, 2.0, 4.0, 8.0];
+        let out = snap.remapped_alpha(Some(&new_scales), 5);
+        assert_eq!(out.len(), 5);
+        for j in 0..3 {
+            // raw-space weight must be invariant: a_new * s_new == a_old * s_old
+            assert!(
+                (out[j] * new_scales[j] - snap.alpha[j] * snap.col_scales.as_ref().unwrap()[j])
+                    .abs()
+                    < 1e-6
+            );
+        }
+        assert_eq!(&out[3..], &[0.0, 0.0], "new columns start cold");
+        // degenerate new scale (zeroed column) must not poison the iterate
+        let out = snap.remapped_alpha(Some(&[1.0, 0.0, 1.0]), 3);
+        assert_eq!(out[1], 0.0);
+        assert!(out.iter().all(|a| a.is_finite()));
+        // unnormalized rebuild: old scales fold in, new default to 1
+        let out = snap.remapped_alpha(None, 3);
+        assert_eq!(out, vec![1.0, -1.0, 16.0]);
     }
 
     #[test]

@@ -119,6 +119,14 @@ pub struct ServeStats {
     pub refit_rejected: AtomicU64,
     /// Refits that errored before producing a certificate.
     pub refit_failed: AtomicU64,
+    /// Examples the bounded ingest buffer dropped under backpressure
+    /// (pushed but never drained into a refit).
+    pub ingest_dropped: AtomicU64,
+    /// Samples the retention policy forgot from the training corpus.
+    pub corpus_evicted: AtomicU64,
+    /// High-water mark of the retained corpus size — with a cap
+    /// configured this must never exceed it.
+    pub corpus_peak: AtomicU64,
     /// Per-request predict latency.
     pub latency: LatencyHistogram,
 }
@@ -161,6 +169,18 @@ impl ServeStats {
 
     pub fn attempts(&self) -> u64 {
         self.refit_attempts.load(Relaxed)
+    }
+
+    pub fn ingest_dropped(&self) -> u64 {
+        self.ingest_dropped.load(Relaxed)
+    }
+
+    pub fn corpus_evicted(&self) -> u64 {
+        self.corpus_evicted.load(Relaxed)
+    }
+
+    pub fn corpus_peak(&self) -> u64 {
+        self.corpus_peak.load(Relaxed)
     }
 }
 

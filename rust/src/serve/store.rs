@@ -135,27 +135,36 @@ impl ModelStore {
         snap.version = version;
 
         let live = unpack(self.current.load(SeqCst)).1;
-        // victim: the non-live slot holding the oldest version (EMPTY
-        // slots are oldest of all) — stale readers are least likely to
-        // still pin it
+        // victim: prefer non-live slots with no pinned readers (a
+        // thread parked mid-pin — preempted, paused in a debugger —
+        // must not stall every future publish), oldest stamp first
+        // (EMPTY slots are oldest of all).  A pinned slot is chosen
+        // only when every non-live slot is pinned, which with SLOTS=4
+        // takes three simultaneously parked readers.
         let victim = (0..SLOTS)
             .filter(|&i| i != live)
             .min_by_key(|&i| {
+                let pinned = self.slots[i].readers.load(SeqCst) != 0;
                 let s = self.slots[i].stamp.load(SeqCst);
-                if s == EMPTY {
-                    0
-                } else {
-                    s + 1
-                }
+                (pinned, if s == EMPTY { 0 } else { s + 1 })
             })
             .expect("SLOTS > 1");
         let slot = &self.slots[victim];
         slot.stamp.store(EMPTY, SeqCst);
         // wait out readers that pinned the victim before the
         // invalidation; anyone pinning after it backs off at the stamp
-        // re-check without touching the cell
+        // re-check without touching the cell.  The window is a few
+        // instructions wide, so a short spin covers the healthy case —
+        // past the budget, yield so a preempted pinner can run and
+        // drop its pin (a pure spin deadlocks on one core).
+        let mut spins = 0u32;
         while slot.readers.load(SeqCst) != 0 {
-            std::hint::spin_loop();
+            if spins < 128 {
+                spins += 1;
+                std::hint::spin_loop();
+            } else {
+                std::thread::yield_now();
+            }
         }
         unsafe { *slot.snap.get() = Some(Arc::new(snap)) };
         slot.stamp.store(version, SeqCst);
@@ -217,6 +226,42 @@ mod tests {
         // the pinned Arc still reads version 1 coherently
         assert_eq!(pinned.version, 1);
         assert!(pinned.weights.iter().all(|&w| w == 1.0));
+    }
+
+    /// A reader parked mid-pin (preempted between `readers += 1` and
+    /// the stamp check) must not stall publishes: victim selection
+    /// routes around the pinned slot.  Before the fix this test hung —
+    /// once the pinned slot aged into the oldest non-live slot, publish
+    /// spun on its reader count forever.
+    #[test]
+    fn held_reader_pin_does_not_stall_publish() {
+        let store = ModelStore::new(snap(1.0));
+        store.publish(snap(2.0)); // some non-live slot now holds v1
+        // simulate the parked reader: pin the slot holding version 1
+        // and never release (exactly what load() does before its stamp
+        // check)
+        let pinned_idx = (0..SLOTS)
+            .find(|&i| store.slots[i].stamp.load(SeqCst) == 1)
+            .expect("version 1 still resident");
+        store.slots[pinned_idx].readers.fetch_add(1, SeqCst);
+        // far more publishes than slots: every remaining slot recycles
+        // many times, so the pinned one would be picked without the
+        // routing fix
+        for k in 3..=40u64 {
+            assert_eq!(store.publish(snap(k as f32)), k);
+            assert_eq!(store.load().bias, k as f32);
+        }
+        // the pinned slot was never recycled out from under its reader
+        assert_eq!(store.slots[pinned_idx].stamp.load(SeqCst), 1);
+        // once the reader resumes and unpins, the slot rejoins rotation
+        store.slots[pinned_idx].readers.fetch_sub(1, SeqCst);
+        for k in 41..=50u64 {
+            assert_eq!(store.publish(snap(k as f32)), k);
+        }
+        assert!(
+            store.slots[pinned_idx].stamp.load(SeqCst) > 1,
+            "released slot should be recycled again"
+        );
     }
 
     #[test]

@@ -83,6 +83,15 @@ def main():
                 f"{s.get('published', 0)} published / {s.get('rejected', 0)} rejected"
                 " (informational only)"
             )
+            # memory counters (ISSUE 8) — absent from pre-8 snapshots
+            if "ingest_dropped" in s or "corpus_peak" in s:
+                print(
+                    f"serve [{label}] memory: "
+                    f"{s.get('ingest_dropped', 0)} ingest dropped, "
+                    f"{s.get('corpus_evicted', 0)} corpus evicted, "
+                    f"corpus peak {s.get('corpus_peak', 0)}"
+                    " (informational only)"
+                )
 
     if failures:
         print(
