@@ -17,8 +17,8 @@ use crate::data::Matrix;
 use crate::glm;
 use crate::metrics::ConvergenceTrace;
 use crate::solver::{keys, notify_epoch, EpochEvent, Extras, FitReport, Problem};
+use crate::sync::{AtomicUsize, Ordering};
 use crate::util::{Rng, Timer};
-use std::sync::atomic::{AtomicUsize, Ordering};
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum OmpMode {
@@ -136,8 +136,9 @@ pub(crate) fn fit(p: &mut Problem<'_>, mode: OmpMode) -> FitReport {
         let a_now = alpha.snapshot();
         let sched =
             crate::sched::TileScheduler::new(n, cfg.t_a.max(1), crate::kernels::BLOCK_COLS);
-        let z_cell: Vec<std::sync::atomic::AtomicU32> =
-            (0..n).map(|_| std::sync::atomic::AtomicU32::new(0)).collect();
+        // data plane (sync::raw): f32 bit cells, disjoint per-tile writes
+        let z_cell: Vec<crate::sync::raw::AtomicU32> =
+            (0..n).map(|_| crate::sync::raw::AtomicU32::new(0)).collect();
         std::thread::scope(|s| {
             for tid in 0..cfg.t_a.max(1) {
                 let (sched, z_cell, w) = (&sched, &z_cell, &w);

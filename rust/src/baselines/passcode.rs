@@ -18,8 +18,8 @@ use crate::data::Matrix;
 use crate::glm;
 use crate::metrics::ConvergenceTrace;
 use crate::solver::{keys, notify_epoch, EpochEvent, Extras, FitReport, Problem};
+use crate::sync::{AtomicUsize, Ordering};
 use crate::util::{Rng, Timer};
-use std::sync::atomic::{AtomicUsize, Ordering};
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum PasscodeMode {

@@ -32,6 +32,8 @@ pub fn bench_dataset(kind: DatasetKind, family: Family, seed: u64) -> Dataset {
         .scale(base * bench_scale())
         .seed(seed)
         .build()
+        // PANIC-OK: bench harness setup; a bad generator config should
+        // abort the bench run loudly.
         .expect("bench dataset")
 }
 

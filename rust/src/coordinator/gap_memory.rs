@@ -19,7 +19,7 @@
 //! is still sufficient because no reader infers anything about *other*
 //! memory from a gap entry.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use crate::sync::{AtomicU64, Ordering};
 
 /// `(gap bits << 32) | epoch` — one atomic word per coordinate.
 #[inline(always)]
@@ -33,9 +33,13 @@ fn unpack(word: u64) -> (f32, u32) {
 }
 
 pub struct GapMemory {
-    /// Packed `(z_i, stamp_i)` pairs (see module docs).
+    /// Packed `(z_i, stamp_i)` pairs (see module docs).  Relaxed:
+    /// single-word last-writer-wins pairs; no reader infers anything
+    /// about other memory from an entry, so no publication edge is
+    /// needed (the packing is what rules out torn pairs).
     z: Vec<AtomicU64>,
-    /// Updates performed during the current epoch.
+    /// Updates performed during the current epoch.  Relaxed: a plain
+    /// statistics counter read at the epoch boundary.
     epoch_updates: AtomicU64,
 }
 
@@ -180,7 +184,7 @@ mod tests {
     fn value_and_stamp_are_never_torn() {
         let g = GapMemory::new(8);
         let f = |epoch: u32| epoch as f32 * 3.5 + 1.0;
-        let stop = std::sync::atomic::AtomicBool::new(false);
+        let stop = crate::sync::AtomicBool::new(false);
         std::thread::scope(|s| {
             for t in 0..2usize {
                 let (g, stop) = (&g, &stop);
@@ -189,14 +193,14 @@ mod tests {
                         let epoch = round % 997 + 1;
                         g.update((t * 3 + round as usize) % 8, f(epoch), epoch);
                     }
-                    stop.store(true, std::sync::atomic::Ordering::Relaxed);
+                    stop.store(true, Ordering::Relaxed);
                 });
             }
             for _ in 0..2 {
                 let (g, stop) = (&g, &stop);
                 s.spawn(move || {
                     let mut i = 0usize;
-                    while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                    while !stop.load(Ordering::Relaxed) {
                         let (gap, stamp) = g.read_entry(i % 8);
                         if stamp == 0 {
                             assert!(gap.is_infinite(), "untouched entry must still be +inf");

@@ -28,9 +28,9 @@ use crate::memory::Tier;
 use crate::metrics::{ConvergenceTrace, PhaseTimes, StalenessHistogram};
 use crate::sched::TileScheduler;
 use crate::solver::{keys, notify_epoch, EpochEvent, Extras, FitReport, Problem};
+use crate::sync::{AtomicBool, Ordering};
 use crate::threadpool::WorkerPool;
 use crate::util::{Rng, Timer};
-use std::sync::atomic::{AtomicBool, Ordering};
 
 /// Offload hook for task A's batched gap evaluation (PJRT runtime).
 pub trait GapBackend: Sync {
@@ -176,6 +176,8 @@ impl HthcSolver {
                     t_b, v_b, sim,
                 );
                 stop.store(true, Ordering::Relaxed);
+                // PANIC-OK: propagating a worker panic is the intended
+                // failure mode — the epoch result would be garbage.
                 (b_stats, a_handle.join().expect("task A panicked"))
             });
             let run_secs = tp.secs();
@@ -196,6 +198,7 @@ impl HthcSolver {
                 });
             }
             if tuner.as_ref().is_some_and(|t| t.ready()) {
+                // PANIC-OK: readiness was checked on the line above.
                 let t = tuner.take().expect("readiness was just checked");
                 let r_tilde = cfg.adaptive_r_tilde.unwrap_or(0.15);
                 let fracs = [0.02, 0.05, 0.08, 0.1, 0.15, 0.25];
@@ -323,6 +326,8 @@ fn run_a_offload(
     let n = data.n_cols();
     let block = backend.block_len().max(1);
     let mut updates = 0u64;
+    // SPIN-OK: work loop, not a spin — every iteration performs a full
+    // block of gap computations; the flag only bounds the epoch.
     while !stop.load(Ordering::Relaxed) {
         let start = rng.below(n);
         let coords: Vec<usize> = (0..block.min(n)).map(|k| (start + k) % n).collect();

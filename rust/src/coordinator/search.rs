@@ -133,7 +133,7 @@ pub fn grid_search(
         }
     }
     out.sort_by(|a, b| match (a.time_to_target, b.time_to_target) {
-        (Some(x), Some(y)) => x.partial_cmp(&y).unwrap(),
+        (Some(x), Some(y)) => x.total_cmp(&y),
         (Some(_), None) => std::cmp::Ordering::Less,
         (None, Some(_)) => std::cmp::Ordering::Greater,
         (None, None) => a.epochs.cmp(&b.epochs),

@@ -121,7 +121,7 @@ pub fn top_m(z: &[f32], m: usize) -> Vec<usize> {
         let v = if v.is_nan() { f32::NEG_INFINITY } else { v };
         if heap.len() < m {
             heap.push(Entry(v, i));
-        } else if v > heap.peek().unwrap().0 {
+        } else if heap.peek().is_some_and(|top| v > top.0) {
             heap.pop();
             heap.push(Entry(v, i));
         }

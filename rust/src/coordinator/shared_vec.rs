@@ -17,10 +17,16 @@
 //! discipline and hands the kernels the ranges each lock covers.
 
 use crate::kernels;
-use std::sync::atomic::{AtomicU32, Ordering};
-use std::sync::Mutex;
+// Data plane: the bit cells stay raw `std` atomics in every build —
+// their races are by-design HOGWILD word-atomic reads/writes (module
+// docs), and the atomic-slice kernels take `&[raw::AtomicU32]`.
+use crate::sync::raw::AtomicU32;
+use crate::sync::{Mutex, Ordering};
 
 pub struct SharedVector {
+    /// f32 bit cells.  Relaxed everywhere: stale reads are the
+    /// algorithm's contract (Hsieh et al.); lost *updates* are ruled
+    /// out by the chunk locks, not by ordering.
     bits: Vec<AtomicU32>,
     locks: Vec<Mutex<()>>,
     chunk: usize,
@@ -96,7 +102,7 @@ impl SharedVector {
             let chunk_end = ((chunk_id + 1) * self.chunk) as u32;
             // entries are row-sorted: the lock's segment is contiguous
             let seg = i + rows[i..].partition_point(|&r| r < chunk_end);
-            let _guard = self.locks[chunk_id].lock().unwrap();
+            let _guard = self.locks[chunk_id].lock().unwrap_or_else(|e| e.into_inner());
             kernels::sparse_axpy_atomic(&self.bits, &rows[i..seg], &vals[i..seg], delta);
             i = seg;
         }
@@ -110,7 +116,7 @@ impl SharedVector {
         while i < hi {
             let chunk_id = i / self.chunk;
             let chunk_end = ((chunk_id + 1) * self.chunk).min(hi);
-            let _guard = self.locks[chunk_id].lock().unwrap();
+            let _guard = self.locks[chunk_id].lock().unwrap_or_else(|e| e.into_inner());
             kernels::axpy_atomic(&self.bits, x, delta, i, chunk_end);
             i = chunk_end;
         }

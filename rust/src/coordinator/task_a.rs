@@ -32,8 +32,8 @@ use crate::glm::ModelKind;
 use crate::kernels;
 use crate::memory::{ReadBatcher, Tier, TierSim};
 use crate::sched::TileScheduler;
+use crate::sync::{AtomicBool, AtomicU64, Ordering};
 use crate::threadpool::WorkerPool;
-use std::sync::atomic::{AtomicBool, Ordering};
 
 /// Epoch-frozen inputs for task A.
 pub struct ASnapshot<'a> {
@@ -66,7 +66,9 @@ pub fn run_epoch(
     sched: &TileScheduler,
 ) -> u64 {
     let ops = data.as_block_ops();
-    let counter = std::sync::atomic::AtomicU64::new(0);
+    // Relaxed: per-thread totals folded in after `pool.run` returns;
+    // the pool's job handoff is the publication edge.
+    let counter = AtomicU64::new(0);
     pool.run(|tid| {
         let mut charges = ReadBatcher::new(sim, home);
         let mut local = 0u64;

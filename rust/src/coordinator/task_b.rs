@@ -28,8 +28,8 @@ use super::working_set::WorkingSet;
 use crate::glm::ModelKind;
 use crate::memory::{Tier, TierSim};
 use crate::sched::TileScheduler;
+use crate::sync::{AtomicU32, AtomicU64, Ordering};
 use crate::threadpool::{SpinBarrier, WorkerPool};
-use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
 
 /// Lane-0's published claim: `(lo << 32) | hi` over the item list, or
 /// [`SPAN_DONE`] when the scheduler is drained.  One word, so the
@@ -46,11 +46,22 @@ fn unpack_span(s: u64) -> (usize, usize) {
 }
 
 /// Per-group shared state for the V_B-lane update protocol.
+///
+/// Ordering contract: every field below is written Release and read
+/// Acquire, and each store→load pair additionally straddles a
+/// `barrier.wait()` — the barrier alone would suffice for visibility,
+/// but the explicit edges keep each word independently well-published
+/// (and keep TSan quiet about the f32-bits handoffs).
 struct Group {
     barrier: SpinBarrier,
-    partials: Vec<AtomicU32>, // f32 bits, one per lane
-    span: AtomicU64,          // packed claimed item range (pack_span)
-    delta: AtomicU32,         // f32 bits of the computed delta
+    /// f32 bits, one per lane; lane i Release-stores its partial before
+    /// the "partials complete" barrier, lane 0 Acquire-loads after it.
+    partials: Vec<AtomicU32>,
+    /// Packed claimed item range (pack_span); lane 0 Release-publishes,
+    /// others Acquire-read after the "tile published" barrier.
+    span: AtomicU64,
+    /// f32 bits of the computed delta; same lane-0-publish shape.
+    delta: AtomicU32,
 }
 
 /// Statistics from one epoch of task B.

@@ -50,6 +50,8 @@ pub fn read<R: BufRead>(r: R) -> Result<Vec<Sample>> {
         let mut toks = line.split_whitespace();
         let label: f32 = toks
             .next()
+            // PANIC-OK: the line was checked non-empty above, so
+            // split_whitespace yields at least one token.
             .unwrap()
             .parse()
             .with_context(|| format!("line {}: bad label", lineno + 1))?;

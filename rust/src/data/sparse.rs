@@ -226,6 +226,7 @@ impl ChunkPool {
         let mut sq = 0.0f32;
         for start in (0..rows.len()).step_by(self.chunk_len) {
             let end = (start + self.chunk_len).min(rows.len());
+            // PANIC-OK: `needed <= free.len()` was checked above.
             let id = self.free.pop().expect("checked above");
             let c = &mut self.chunks[id];
             let k = end - start;

@@ -44,7 +44,11 @@ mod avx2;
 
 pub use quant::QGROUP;
 
-use std::sync::atomic::{AtomicU32, AtomicU8, Ordering};
+// Data plane (`sync::raw` = std in every build): the atomic-slice
+// kernels are HOGWILD bit cells whose races are by-design, and the
+// BACKEND byte is a one-shot detection cache — neither is a protocol
+// the model checker should interleave.
+use crate::sync::raw::{AtomicU32, AtomicU8, Ordering};
 
 // ---------------------------------------------------------------------------
 // Backend selection

@@ -42,6 +42,10 @@
 //! * [`runtime`] — PJRT executor for the AOT-compiled JAX/Pallas
 //!   artifacts (`artifacts/*.hlo.txt`), Python never on the hot path;
 //! * [`metrics`] — convergence traces and table rendering;
+//! * [`sync`] — the concurrency shim every protocol atomic, mutex and
+//!   spin loop goes through: pure `std` re-exports normally, a
+//!   deterministic model-checking scheduler under
+//!   `--cfg pallas_model_check` (DESIGN.md §12);
 //! * [`util`] — PRNG, CLI parsing, timing, errors (no external deps).
 
 pub mod baselines;
@@ -56,6 +60,7 @@ pub mod runtime;
 pub mod sched;
 pub mod serve;
 pub mod solver;
+pub mod sync;
 pub mod threadpool;
 pub mod util;
 

@@ -245,7 +245,7 @@ fn cmd_train(args: &Args) {
     if heldout_every > 0 && val_cols.is_none() {
         eprintln!("--heldout-every needs --split; ignoring");
     }
-    let heldout_evals = std::sync::Arc::new(std::sync::atomic::AtomicU64::new(0));
+    let heldout_evals = std::sync::Arc::new(hthc::sync::AtomicU64::new(0));
     let heldout_cb: Option<Box<dyn FnMut(&EpochEvent<'_>) -> bool>> = match &val_cols {
         Some(cols) if heldout_every > 0 => {
             let val = dataset.col_subset(cols.clone()).materialize();
@@ -267,7 +267,7 @@ fn cmd_train(args: &Args) {
                     val.targets(),
                     &zeros,
                 );
-                evals.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                evals.fetch_add(1, hthc::sync::Ordering::Relaxed);
                 let mut line = format!("held-out[epoch {}]: gap {gap:.6e}", ev.epoch);
                 if classify {
                     let acc = hthc::serve::predict::accuracy(val.as_block_ops(), ev.v);
@@ -303,7 +303,7 @@ fn cmd_train(args: &Args) {
         }
         trainer.fit_with(model.as_mut(), train, &sim)
     };
-    let heldout_eval_count = heldout_evals.load(std::sync::atomic::Ordering::Relaxed);
+    let heldout_eval_count = heldout_evals.load(hthc::sync::Ordering::Relaxed);
     if heldout_eval_count > 0 {
         result.extras.set_u64(keys::HELDOUT_EVALS, heldout_eval_count);
     }

@@ -60,8 +60,12 @@ impl Arena {
         }
         self.used_bytes += (len as u64) * 4;
         self.allocations.push(vec![0.0f32; len].into_boxed_slice());
+        // PANIC-OK: the slab was pushed on the line above.
         let slab = self.allocations.last_mut().unwrap();
-        // Safe reborrow with arena lifetime.
+        // SAFETY: the boxed slab's storage address is stable (growing
+        // `allocations` moves the Box, not the heap slab), it lives
+        // until `reset`/drop, and each slab is handed out exactly once,
+        // so no aliasing `&mut` can exist.
         Some(unsafe { std::slice::from_raw_parts_mut(slab.as_mut_ptr(), len) })
     }
 

@@ -1,6 +1,6 @@
 //! Bandwidth accounting for the two KNL memory tiers.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use crate::sync::{AtomicU64, Ordering};
 
 /// Which memory a structure lives in (paper: DRAM vs MCDRAM flat mode).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -16,7 +16,8 @@ pub const SLOW_GBS: f64 = 80.0;
 pub const FAST_GBS: f64 = 440.0;
 pub const FAST_CAPACITY: u64 = 16 * (1 << 30);
 
-/// Per-tier traffic counters (thread-safe, relaxed: counters only).
+/// Per-tier traffic counters.  Relaxed throughout: pure statistics
+/// totals read at phase boundaries; no counter publishes other memory.
 #[derive(Default)]
 pub struct TierCounters {
     pub read_bytes: AtomicU64,

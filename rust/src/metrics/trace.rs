@@ -67,7 +67,7 @@ impl ConvergenceTrace {
         self.points
             .iter()
             .map(|p| p.objective)
-            .min_by(|a, b| a.partial_cmp(b).unwrap())
+            .min_by(|a, b| a.total_cmp(b))
     }
 
     /// Render as CSV (plots are produced offline from these).

@@ -194,6 +194,7 @@ fn run_one(
             .map_err(|e| err!("compile {name}: {e:?}"))?;
         compiled.insert(name.to_string(), exe);
     }
+    // PANIC-OK: the entry was inserted just above when absent.
     let exe = compiled.get(name).unwrap();
 
     let literals: Vec<xla::Literal> = args

@@ -35,7 +35,7 @@
 //! [`dots_block`]: crate::data::BlockOps::dots_block
 //! [`placement`]: crate::data::Dataset::placement
 
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use crate::sync::{AtomicU64, AtomicUsize, Ordering};
 
 /// One claimed unit of work: the half-open column range `[lo, hi)` and
 /// the shard it came from (for per-shard traffic attribution).
@@ -61,7 +61,12 @@ impl Tile {
 struct Shard {
     lo: usize,
     hi: usize,
+    /// Drain offset.  Relaxed: exactly-once handout rests on the
+    /// fetch_add's RMW atomicity alone — each claimer gets a distinct
+    /// offset; no other memory is published through this word.
     cursor: AtomicUsize,
+    /// Cyclic tile counter.  Relaxed: same RMW-uniqueness argument; the
+    /// modulo consumer tolerates any interleaving.
     wrap: AtomicUsize,
 }
 
@@ -94,6 +99,7 @@ pub struct TileScheduler {
     /// Shard indices with at least one column (cyclic redirect targets).
     nonempty: Vec<usize>,
     tile: usize,
+    /// Foreign-shard claims.  Relaxed: diagnostics counter only.
     steals: AtomicU64,
 }
 
@@ -254,8 +260,8 @@ mod tests {
     fn concurrent_drain_is_exactly_once() {
         let (len, workers) = (10_000, 8);
         let sched = TileScheduler::new(len, workers, 16);
-        let hits: Vec<std::sync::atomic::AtomicU32> =
-            (0..len).map(|_| std::sync::atomic::AtomicU32::new(0)).collect();
+        let hits: Vec<crate::sync::AtomicU32> =
+            (0..len).map(|_| crate::sync::AtomicU32::new(0)).collect();
         std::thread::scope(|s| {
             for w in 0..workers {
                 let (sched, hits) = (&sched, &hits);

@@ -32,9 +32,9 @@ use crate::data::{Dataset, DatasetBuilder, Family, Sample};
 use crate::memory::TierSim;
 use crate::solver::{by_name, StopWhen, Trainer};
 use crate::util::Rng;
+use crate::sync::{AtomicU64, Mutex, Ordering::Relaxed};
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::Instant;
 
 /// What the retained training corpus forgets once it hits its cap.
@@ -223,8 +223,10 @@ pub struct IngestBuffer {
     /// 0 = unbounded.
     cap: usize,
     /// Examples ever pushed (drains and drops do not reset this).
+    /// Relaxed: statistics counter; the queue itself is mutex-guarded.
     total: AtomicU64,
-    /// Examples evicted by backpressure (never drained).
+    /// Examples evicted by backpressure (never drained).  Relaxed:
+    /// statistics counter, written under the queue lock.
     dropped: AtomicU64,
 }
 

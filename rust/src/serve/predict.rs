@@ -30,8 +30,8 @@
 use super::{ModelSnapshot, ModelStore, ServeStats};
 use crate::data::{BlockOps, Matrix};
 use crate::kernels::BLOCK_COLS;
+use crate::sync::{AtomicUsize, Ordering::Relaxed};
 use crate::threadpool::WorkerPool;
-use std::sync::atomic::{AtomicUsize, Ordering::Relaxed};
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -84,7 +84,12 @@ pub fn mean_squared_error(preds: &[f32], targets: &[f32]) -> f64 {
 /// Disjoint-tile output pointer for the pooled sweep (each tile writes
 /// its own `out` range, claimed exactly once through an atomic cursor).
 struct TileOut(*mut f32);
+// SAFETY: the pointer names a buffer that outlives the pool sweep, and
+// every worker writes only the disjoint range of the tile it claimed
+// through the atomic cursor — no two threads touch the same elements.
 unsafe impl Send for TileOut {}
+// SAFETY: shared access is write-only into disjoint claimed ranges (see
+// above); the buffer is only read after `pool.run` returns.
 unsafe impl Sync for TileOut {}
 
 /// Batched prediction over a live [`ModelStore`] snapshot.
@@ -137,6 +142,9 @@ impl PredictEngine {
         match &self.pool {
             None => scores_into(batch, &snap.weights, &mut out),
             Some(pool) => {
+                // Relaxed: tile uniqueness comes from fetch_add's RMW
+                // atomicity alone; the pool's job handoff publishes the
+                // written tiles back to this thread.
                 let cursor = AtomicUsize::new(0);
                 let base_ptr = TileOut(out.as_mut_ptr());
                 let ptr = &base_ptr;
@@ -152,8 +160,10 @@ impl PredictEngine {
                     for (t, j) in idx.iter_mut().zip(lo..lo + m) {
                         *t = j;
                     }
-                    // disjoint range: tile indices are claimed exactly
-                    // once, so no two workers write the same elements
+                    // SAFETY: tile indices are claimed exactly once, so
+                    // no two workers write the same elements; `lo + m`
+                    // never exceeds `out.len()`, and `out` outlives the
+                    // sweep.
                     let chunk =
                         unsafe { std::slice::from_raw_parts_mut(ptr.0.add(lo), m) };
                     batch.dots_block(&idx[..m], w, chunk);

@@ -15,9 +15,9 @@ use super::{
 use crate::data::{DatasetBuilder, Sample, SparseMatrix};
 use crate::memory::TierSim;
 use crate::solver::{by_name, Trainer};
+use crate::sync::{AtomicBool, Ordering::Relaxed};
 use crate::util::Rng;
 use crate::{bail, Result};
-use std::sync::atomic::{AtomicBool, Ordering::Relaxed};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -283,6 +283,7 @@ pub fn run(base: Vec<Sample>, cfg: &ServeConfig) -> Result<ServeReport> {
             round += 1;
         }
         stop.store(true, Relaxed);
+        // PANIC-OK: a refit-thread panic must fail the run loudly.
         refit_handle.join().expect("refit thread panicked");
     });
 

@@ -8,7 +8,10 @@
 //! walk over cumulative counts — the textbook fixed-bucket design (see
 //! `rust/DESIGN.md` §11 for the bucket layout rationale).
 
-use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+// Relaxed throughout this module: every atomic here is a monotone
+// statistics counter read for reporting — no counter publishes other
+// memory, so no acquire/release edges are needed.
+use crate::sync::{AtomicU64, Ordering::Relaxed};
 use std::time::Duration;
 
 /// Number of histogram buckets.  Bucket 0 holds everything below

@@ -29,9 +29,10 @@
 //! to the predict matvec they guard.
 
 use super::ModelSnapshot;
+use crate::sync::spin::SpinWait;
+use crate::sync::{AtomicU64, AtomicUsize, Mutex, Ordering::SeqCst};
 use std::cell::UnsafeCell;
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering::SeqCst};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
 /// Ring size.  Two would suffice for one writer + fast readers; four
 /// gives stalled readers (e.g. a thread preempted mid-pin) more slack
@@ -43,7 +44,12 @@ const SLOTS: usize = 4;
 const EMPTY: u64 = u64::MAX;
 
 struct Slot {
+    /// Version resident in the slot, or [`EMPTY`] while a writer owns
+    /// it.  SeqCst: ordered against `readers` and `current` — the
+    /// stamp re-check while pinned is the reader's torn-read guard.
     stamp: AtomicU64,
+    /// Pin count.  SeqCst: a writer observing zero *after* stamping
+    /// EMPTY must also observe no reader between its own two steps.
     readers: AtomicUsize,
     snap: UnsafeCell<Option<Arc<ModelSnapshot>>>,
 }
@@ -61,16 +67,20 @@ impl Slot {
 /// Versioned snapshot store with lock-free readers (see module docs).
 pub struct ModelStore {
     slots: [Slot; SLOTS],
-    /// Packed `version * SLOTS + slot_index`.
+    /// Packed `version * SLOTS + slot_index`.  SeqCst: publishing this
+    /// word is the linearization point of a publish; it must order
+    /// after the victim slot's snapshot write and stamp restore.
     current: AtomicU64,
     /// Serializes writers; holds the next version to assign.
     publish_lock: Mutex<u64>,
 }
 
-// The UnsafeCell is only written while the slot's stamp is EMPTY and
-// its reader count has drained to zero, and only read while the reader
-// holds a pin that the writer waits out — see the module docs.
+// SAFETY: the UnsafeCell is only written while the slot's stamp is
+// EMPTY and its reader count has drained to zero, and only read while
+// the reader holds a pin that the writer waits out — see the module
+// docs.  All other fields are Sync atomics/locks.
 unsafe impl Sync for ModelStore {}
+// SAFETY: same argument as Sync; the cell's contents (Arc) are Send.
 unsafe impl Send for ModelStore {}
 
 fn pack(version: u64, slot: usize) -> u64 {
@@ -92,7 +102,8 @@ impl ModelStore {
             current: AtomicU64::new(pack(1, 0)),
             publish_lock: Mutex::new(2),
         };
-        // no concurrent access yet — plain initialization of slot 0
+        // SAFETY: no concurrent access yet — plain initialization of
+        // slot 0 before the store is shared.
         unsafe { *store.slots[0].snap.get() = Some(Arc::new(initial)) };
         store.slots[0].stamp.store(1, SeqCst);
         store
@@ -106,16 +117,18 @@ impl ModelStore {
             let slot = &self.slots[slot_idx];
             slot.readers.fetch_add(1, SeqCst);
             if slot.stamp.load(SeqCst) == version {
-                // the stamp matched *while pinned*: the writer cannot
-                // recycle the slot until the pin drops, so the Arc
-                // clone reads a fully-published snapshot
+                // SAFETY: the stamp matched *while pinned*: the writer
+                // cannot recycle the slot until the pin drops, so the
+                // Arc clone reads a fully-published snapshot.
+                // PANIC-OK: a real (non-EMPTY) stamp is only ever
+                // stored after the cell was filled.
                 let arc = unsafe { (*slot.snap.get()).as_ref().unwrap().clone() };
                 slot.readers.fetch_sub(1, SeqCst);
                 debug_assert_eq!(arc.version, version, "slot held a torn snapshot");
                 return arc;
             }
             slot.readers.fetch_sub(1, SeqCst);
-            std::hint::spin_loop();
+            crate::sync::spin::spin_loop();
         }
     }
 
@@ -148,24 +161,24 @@ impl ModelStore {
                 let s = self.slots[i].stamp.load(SeqCst);
                 (pinned, if s == EMPTY { 0 } else { s + 1 })
             })
+            // PANIC-OK: SLOTS > 1, so excluding the live slot leaves
+            // at least one candidate.
             .expect("SLOTS > 1");
         let slot = &self.slots[victim];
         slot.stamp.store(EMPTY, SeqCst);
         // wait out readers that pinned the victim before the
         // invalidation; anyone pinning after it backs off at the stamp
         // re-check without touching the cell.  The window is a few
-        // instructions wide, so a short spin covers the healthy case —
-        // past the budget, yield so a preempted pinner can run and
-        // drop its pin (a pure spin deadlocks on one core).
-        let mut spins = 0u32;
+        // instructions wide, so the SpinWait's spin budget covers the
+        // healthy case — past it, yield so a preempted pinner can run
+        // and drop its pin (a pure spin deadlocks on one core).
+        let mut sw = SpinWait::new();
         while slot.readers.load(SeqCst) != 0 {
-            if spins < 128 {
-                spins += 1;
-                std::hint::spin_loop();
-            } else {
-                std::thread::yield_now();
-            }
+            sw.spin();
         }
+        // SAFETY: the stamp is EMPTY (no new reader passes its
+        // re-check) and the pin count drained to zero, so this writer
+        // is the only thread touching the cell.
         unsafe { *slot.snap.get() = Some(Arc::new(snap)) };
         slot.stamp.store(version, SeqCst);
         self.current.store(pack(version, victim), SeqCst);
@@ -270,7 +283,7 @@ mod tests {
         // snapshot must be internally consistent (all fields carry the
         // version tag) and versions must be monotone per reader
         let store = Arc::new(ModelStore::new(snap(1.0)));
-        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let stop = Arc::new(crate::sync::AtomicBool::new(false));
         std::thread::scope(|s| {
             for _ in 0..3 {
                 let store = Arc::clone(&store);

@@ -22,6 +22,8 @@ pub fn config_from_args(args: &Args) -> HthcConfig {
         eval_every: args.usize_or("eval-every", 1),
         seed: args.u64_or("seed", 42),
         use_pjrt_gaps: args.bool_or("pjrt", false),
+        // PANIC-OK: CLI flag validation — a malformed value should
+        // abort with the flag name.
         adaptive_r_tilde: args.get("adaptive-r").map(|s| s.parse().expect("--adaptive-r")),
         autotune: args.bool_or("autotune", false),
         ..Default::default()

@@ -246,6 +246,8 @@ impl<'b> Trainer<'b> {
         let mut model = self
             .model
             .take()
+            // PANIC-OK: documented contract — `fit` panics without a
+            // model (see doc comment above).
             .expect("Trainer::fit: no model set — call .model(...) or use fit_with");
         let report = {
             let mut problem =

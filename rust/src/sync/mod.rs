@@ -1,0 +1,140 @@
+//! Concurrency shim: the one place the crate touches `std::sync`.
+//!
+//! Every protocol atomic, mutex and spin loop in the crate goes through
+//! this module instead of `std` directly (enforced by
+//! `tools/lint_invariants.py`).  In a normal build the module is a pure
+//! re-export — zero cost, byte-identical codegen.  Under
+//! `--cfg pallas_model_check` the same names resolve to instrumented
+//! versions from [`model`], driven by a deterministic scheduler that
+//! explores thread interleavings exhaustively (bounded DFS) or by
+//! seeded random sampling, and reports an operation trace when an
+//! invariant breaks.  See `rust/DESIGN.md` §12.
+//!
+//! # Usage rules
+//!
+//! * **Protocol state** — atomics and locks whose *ordering* encodes a
+//!   hand-shake (stamps, pin counts, cursors, generations, publish
+//!   words) — imports from `crate::sync::{...}` so the model checker
+//!   can interleave every access.
+//! * **Data-plane state** — bulk storage where atomics only provide
+//!   word-atomicity for HOGWILD arithmetic (`SharedVector` bits, the
+//!   kernel backend byte, baseline scratch cells) — imports from
+//!   [`raw`], which is always the `std` type.  This keeps the
+//!   `&[AtomicU32]` kernel signatures identical in both builds and
+//!   keeps the model's state space focused on control words.
+//! * **Spin/yield** — every busy-wait uses [`spin::SpinWait`] (or the
+//!   free functions) so the model can deprioritize spinners instead of
+//!   exploring unbounded spin interleavings, and so release builds
+//!   share one bounded spin-then-yield discipline.
+
+#[cfg(pallas_model_check)]
+pub mod model;
+
+#[cfg(not(pallas_model_check))]
+pub use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize};
+#[cfg(not(pallas_model_check))]
+pub use std::sync::{Condvar, Mutex, MutexGuard};
+
+#[cfg(pallas_model_check)]
+pub use model::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Condvar, Mutex, MutexGuard};
+
+pub use std::sync::atomic::Ordering;
+
+/// Always-`std` atomics for data-plane storage (see module docs): the
+/// shared model vector's `f32` bit cells, the kernel dispatch byte and
+/// baseline scratch arrays.  These stay uninstrumented even under the
+/// model checker — their races are benign-by-design HOGWILD arithmetic
+/// (word-atomic, last-writer-wins), not protocol hand-shakes, and the
+/// atomic-slice kernels keep one signature across both builds.
+pub mod raw {
+    pub use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicU8, AtomicUsize, Ordering};
+}
+
+/// Spin-wait discipline: bounded spin-then-yield, model-check aware.
+pub mod spin {
+    /// One polite busy-wait pause (a PAUSE-class hint).  Under the
+    /// model checker this is a scheduler yield point that marks the
+    /// thread as spinning, so exploration deprioritizes it until
+    /// another thread makes progress.
+    #[inline]
+    pub fn spin_loop() {
+        #[cfg(pallas_model_check)]
+        super::model::spin_yield();
+        #[cfg(not(pallas_model_check))]
+        std::hint::spin_loop();
+    }
+
+    /// Give up the rest of the timeslice (`std::thread::yield_now`).
+    /// Same model-check semantics as [`spin_loop`].
+    #[inline]
+    pub fn yield_now() {
+        #[cfg(pallas_model_check)]
+        super::model::spin_yield();
+        #[cfg(not(pallas_model_check))]
+        std::thread::yield_now();
+    }
+
+    /// How many [`spin_loop`] pauses a [`SpinWait`] issues before it
+    /// starts yielding the timeslice.  The spin window covers waits a
+    /// few instructions wide (a racing publish, a barrier straggler on
+    /// its way in); past it the waiter must yield so a preempted peer
+    /// can run — a pure spin deadlocks on one core.
+    pub const SPIN_BUDGET: u32 = 64;
+
+    /// Bounded spin-then-yield helper: `spin()` pauses for the first
+    /// [`SPIN_BUDGET`] calls, then yields the timeslice on every call
+    /// after that.  One `SpinWait` per wait loop; `reset()` re-arms the
+    /// budget when the same loop waits for logically distinct events.
+    #[derive(Default)]
+    pub struct SpinWait {
+        spins: u32,
+    }
+
+    impl SpinWait {
+        pub const fn new() -> Self {
+            SpinWait { spins: 0 }
+        }
+
+        /// One wait step: PAUSE while under budget, yield past it.
+        #[inline]
+        pub fn spin(&mut self) {
+            if self.spins < SPIN_BUDGET {
+                self.spins += 1;
+                spin_loop();
+            } else {
+                yield_now();
+            }
+        }
+
+        /// Re-arm the spin budget.
+        #[inline]
+        pub fn reset(&mut self) {
+            self.spins = 0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::spin::SpinWait;
+    use super::{AtomicU64, Ordering};
+
+    #[test]
+    fn shim_atomics_behave_like_std() {
+        let a = AtomicU64::new(3);
+        assert_eq!(a.fetch_add(4, Ordering::SeqCst), 3);
+        assert_eq!(a.load(Ordering::SeqCst), 7);
+        a.store(1, Ordering::Release);
+        assert_eq!(a.swap(9, Ordering::AcqRel), 1);
+    }
+
+    #[test]
+    fn spin_wait_crosses_its_budget() {
+        let mut sw = SpinWait::new();
+        for _ in 0..(super::spin::SPIN_BUDGET + 8) {
+            sw.spin();
+        }
+        sw.reset();
+        sw.spin();
+    }
+}

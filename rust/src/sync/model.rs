@@ -1,0 +1,1084 @@
+//! Deterministic interleaving explorer (a miniature loom) behind
+//! `--cfg pallas_model_check`.
+//!
+//! # How it works
+//!
+//! A *check* runs one scenario body many times.  Each run (an
+//! *execution*) creates threads via [`spawn`]; the scheduler holds a
+//! single run token, so exactly one thread executes at a time and every
+//! instrumented operation — atomic load/store/RMW, mutex lock/unlock,
+//! condvar wait/notify, spin yield — is a *scheduling point* where the
+//! token may move.  The choice of which thread runs next is what the
+//! explorer enumerates:
+//!
+//! * **DFS** (`max_executions` bound): replay the previous execution's
+//!   choice prefix, increment the deepest choice that still has an
+//!   untried alternative, run to completion.  When the prefix space is
+//!   exhausted the check is *complete* — every schedule of the scenario
+//!   (at sequential-consistency granularity) was seen.
+//! * **Random** (`random_executions`, seeded LCG): uniform choice at
+//!   every scheduling point; reproducible from the seed.
+//!
+//! Spin loops would make the schedule tree infinite, so [`spin_yield`]
+//! marks the caller *spinning*: a spinning thread is only scheduled
+//! when no non-spinning thread is runnable, and every state-changing
+//! operation re-arms all spinners.  A window where every live thread is
+//! spinning and nothing changes is reported as a livelock, as is
+//! exceeding the per-execution operation budget.  Blocked-thread cycles
+//! are reported as deadlocks.  Any panic in the scenario (a failed
+//! assertion, a torn read) aborts the execution and surfaces as
+//! [`Failure`] carrying the operation trace that led there.
+//!
+//! # Limitations
+//!
+//! Exploration is at sequential-consistency granularity: orderings are
+//! recorded in the trace but weaker-than-SeqCst effects (store
+//! buffering, reordering) are not simulated.  Torn *protocol* states —
+//! the bugs this crate has actually had — are visible at this
+//! granularity; weak-memory bugs are delegated to the TSan/Miri CI
+//! jobs.  Uninstrumented shared state (e.g. `Arc` refcounts,
+//! `sync::raw` atomics) does not create scheduling points.
+
+use std::cell::Cell;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Condvar as StdCondvar, LockResult, Mutex as StdMutex, OnceLock, PoisonError};
+
+// ---------------------------------------------------------------------------
+// Public check API
+// ---------------------------------------------------------------------------
+
+/// Exploration budget and strategy for one [`check`].
+#[derive(Clone, Debug)]
+pub struct Config {
+    /// DFS execution bound (0 skips the DFS phase).  If DFS finishes
+    /// the whole space under this bound the report says `complete` and
+    /// the random phase is skipped.
+    pub max_executions: usize,
+    /// Random-schedule executions appended after an incomplete DFS.
+    pub random_executions: usize,
+    /// Seed for the random phase (execution `i` uses `seed + i`).
+    pub seed: u64,
+    /// Per-execution scheduling-point budget; exceeding it fails the
+    /// check as a livelock with the trailing trace.
+    pub max_ops: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { max_executions: 2000, random_executions: 1000, seed: 0x5eed, max_ops: 50_000 }
+    }
+}
+
+/// What a successful [`check`] explored.
+#[derive(Clone, Debug)]
+pub struct Report {
+    /// Executions run across both phases.
+    pub executions: usize,
+    /// DFS exhausted the schedule space (every interleaving was seen).
+    pub complete: bool,
+}
+
+/// A failing interleaving: what broke and the schedule that got there.
+#[derive(Debug)]
+pub struct Failure {
+    /// Panic message, deadlock or livelock description.
+    pub message: String,
+    /// 1-based execution index that failed (reproducible: DFS is
+    /// deterministic and random execution `i` reseeds from the config).
+    pub execution: usize,
+    /// Most recent scheduling-point events, oldest first; entries are
+    /// `T<thread> <object>.<op>(<args>) [-> <result>]`.
+    pub trace: Vec<String>,
+}
+
+impl std::fmt::Display for Failure {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(f, "model check failed on execution {}: {}", self.execution, self.message)?;
+        writeln!(f, "interleaving trace ({} events):", self.trace.len())?;
+        for line in &self.trace {
+            writeln!(f, "  {line}")?;
+        }
+        Ok(())
+    }
+}
+
+/// Explore interleavings of `body` under `cfg`.  The body runs once per
+/// execution on the calling thread (model thread `T0`), spawning peers
+/// with [`spawn`]; it must create all shared state fresh inside the
+/// closure so every execution starts identical.  Returns the first
+/// failing interleaving, or a report of how much was explored.
+///
+/// Checks are serialized process-wide (one exploration at a time), so
+/// `cargo test` concurrency cannot interleave two schedulers.
+pub fn check<F>(cfg: &Config, body: F) -> Result<Report, Box<Failure>>
+where
+    F: Fn() + Send + Sync,
+{
+    static RUN_LOCK: StdMutex<()> = StdMutex::new(());
+    let _serial = RUN_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let sched = sched();
+
+    let mut executions = 0usize;
+    let mut complete = false;
+    let mut replay: Vec<u32> = Vec::new();
+
+    for _ in 0..cfg.max_executions {
+        executions += 1;
+        let taken = run_one(sched, cfg, executions, Mode::Dfs, &replay, &body)?;
+        match next_prefix(&taken) {
+            Some(p) => replay = p,
+            None => {
+                complete = true;
+                break;
+            }
+        }
+    }
+
+    if !complete {
+        for i in 0..cfg.random_executions {
+            executions += 1;
+            let seed = cfg.seed.wrapping_add(i as u64);
+            run_one(sched, cfg, executions, Mode::Random { seed }, &[], &body)?;
+        }
+    }
+
+    Ok(Report { executions, complete })
+}
+
+/// Smallest DFS prefix lexicographically after `taken`, or `None` when
+/// every alternative at every depth has been tried.
+fn next_prefix(taken: &[(u32, u32)]) -> Option<Vec<u32>> {
+    for depth in (0..taken.len()).rev() {
+        let (chosen, options) = taken[depth];
+        if chosen + 1 < options {
+            let mut p: Vec<u32> = taken[..depth].iter().map(|&(c, _)| c).collect();
+            p.push(chosen + 1);
+            return Some(p);
+        }
+    }
+    None
+}
+
+fn run_one<F>(
+    sched: &'static Sched,
+    cfg: &Config,
+    execution: usize,
+    mode: Mode,
+    replay: &[u32],
+    body: &F,
+) -> Result<Vec<(u32, u32)>, Box<Failure>>
+where
+    F: Fn() + Send + Sync,
+{
+    sched.reset(cfg, mode, replay);
+    CUR_TID.with(|t| t.set(Some(0)));
+    let res = catch_unwind(AssertUnwindSafe(|| {
+        body();
+        sched.drain_controller();
+    }));
+    CUR_TID.with(|t| t.set(None));
+    if let Err(payload) = res {
+        if !payload.is::<ModelAbort>() {
+            sched.fail_external(payload_message(&payload));
+        }
+    }
+    // Every spawned OS thread exits promptly once a failure is set (all
+    // scheduling points abort); join them so executions never overlap.
+    for h in sched.take_handles() {
+        let _ = h.join();
+    }
+    sched.outcome(execution)
+}
+
+fn payload_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "panic with non-string payload".to_string()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scheduler
+// ---------------------------------------------------------------------------
+
+/// Panic payload used to unwind model threads once a failure is
+/// recorded; recognized (and swallowed) by the spawn wrapper and the
+/// check driver.
+struct ModelAbort;
+
+thread_local! {
+    static CUR_TID: Cell<Option<usize>> = const { Cell::new(None) };
+}
+
+fn cur_tid() -> Option<usize> {
+    CUR_TID.with(|t| t.get())
+}
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum Block {
+    Mutex(usize),
+    Cond(usize),
+    Join(usize),
+}
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum TState {
+    Runnable,
+    /// In a spin loop: schedulable only when nothing else is runnable.
+    Spinning,
+    Blocked(Block),
+    Finished,
+}
+
+#[derive(Clone, Copy, Debug)]
+enum Mode {
+    Dfs,
+    Random { seed: u64 },
+}
+
+/// Trace entries kept after truncation (recent events matter most).
+const TRACE_KEEP: usize = 256;
+
+struct SchedState {
+    threads: Vec<TState>,
+    active: Option<usize>,
+    mutex_held: Vec<Option<usize>>,
+    next_obj: usize,
+    ops: u64,
+    max_ops: u64,
+    /// Consecutive schedules granted from an all-spinning candidate set
+    /// with no state-changing operation in between.
+    stall_rounds: u32,
+    mode: Mode,
+    rng: u64,
+    replay: Vec<u32>,
+    pos: usize,
+    taken: Vec<(u32, u32)>,
+    trace: Vec<String>,
+    dropped_events: usize,
+    failure: Option<(String, Vec<String>)>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl SchedState {
+    fn record(&mut self, tid: usize, msg: String) {
+        if self.failure.is_some() {
+            return;
+        }
+        if self.trace.len() >= 2 * TRACE_KEEP {
+            self.dropped_events += self.trace.len() - TRACE_KEEP;
+            self.trace.drain(..self.trace.len() - TRACE_KEEP);
+        }
+        self.trace.push(format!("T{tid} {msg}"));
+    }
+
+    fn fail(&mut self, message: String) {
+        if self.failure.is_some() {
+            return;
+        }
+        let mut trace = Vec::with_capacity(self.trace.len() + 1);
+        if self.dropped_events > 0 {
+            trace.push(format!("... {} earlier events dropped ...", self.dropped_events));
+        }
+        trace.append(&mut self.trace);
+        self.failure = Some((message, trace));
+    }
+
+    /// A state-changing operation executed: spinners may observe new
+    /// state, so they all become schedulable again.
+    fn progress(&mut self) {
+        self.stall_rounds = 0;
+        for t in &mut self.threads {
+            if *t == TState::Spinning {
+                *t = TState::Runnable;
+            }
+        }
+    }
+
+    /// Pick the next thread to hold the token, or `None` when no live
+    /// thread can run (deadlock — unless everything is finished).
+    fn choose(&mut self) -> Option<usize> {
+        let mut cands: Vec<usize> = (0..self.threads.len())
+            .filter(|&i| self.threads[i] == TState::Runnable)
+            .collect();
+        let all_spinning = cands.is_empty();
+        if all_spinning {
+            cands = (0..self.threads.len())
+                .filter(|&i| self.threads[i] == TState::Spinning)
+                .collect();
+            self.stall_rounds += 1;
+            let limit = 4 * self.threads.len() as u32 + 16;
+            if self.stall_rounds > limit && !cands.is_empty() {
+                self.fail(format!(
+                    "livelock: every live thread spun {} consecutive rounds with no progress",
+                    self.stall_rounds
+                ));
+                return None;
+            }
+        }
+        if cands.is_empty() {
+            return None;
+        }
+        let n = cands.len() as u32;
+        let idx = if n == 1 {
+            0
+        } else {
+            match self.mode {
+                Mode::Dfs => {
+                    let i = if self.pos < self.replay.len() { self.replay[self.pos] } else { 0 };
+                    self.taken.push((i, n));
+                    self.pos += 1;
+                    i.min(n - 1)
+                }
+                Mode::Random { .. } => {
+                    self.rng = self
+                        .rng
+                        .wrapping_mul(6364136223846793005)
+                        .wrapping_add(1442695040888963407);
+                    ((self.rng >> 33) % n as u64) as u32
+                }
+            }
+        };
+        Some(cands[idx as usize])
+    }
+}
+
+struct Sched {
+    m: StdMutex<SchedState>,
+    cv: StdCondvar,
+}
+
+fn sched() -> &'static Sched {
+    static SCHED: OnceLock<Sched> = OnceLock::new();
+    SCHED.get_or_init(|| Sched {
+        m: StdMutex::new(SchedState {
+            threads: Vec::new(),
+            active: None,
+            mutex_held: Vec::new(),
+            next_obj: 0,
+            ops: 0,
+            max_ops: 0,
+            stall_rounds: 0,
+            mode: Mode::Dfs,
+            rng: 0,
+            replay: Vec::new(),
+            pos: 0,
+            taken: Vec::new(),
+            trace: Vec::new(),
+            dropped_events: 0,
+            failure: None,
+            handles: Vec::new(),
+        }),
+        cv: StdCondvar::new(),
+    })
+}
+
+type Guarded<'a> = std::sync::MutexGuard<'a, SchedState>;
+
+impl Sched {
+    fn lock(&self) -> Guarded<'_> {
+        self.m.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    fn reset(&self, cfg: &Config, mode: Mode, replay: &[u32]) {
+        let mut st = self.lock();
+        st.threads = vec![TState::Runnable];
+        st.active = Some(0);
+        st.mutex_held.clear();
+        st.next_obj = 0;
+        st.ops = 0;
+        st.max_ops = cfg.max_ops;
+        st.stall_rounds = 0;
+        st.mode = mode;
+        st.rng = match mode {
+            Mode::Random { seed } => seed | 1,
+            Mode::Dfs => 0,
+        };
+        st.replay = replay.to_vec();
+        st.pos = 0;
+        st.taken.clear();
+        st.trace.clear();
+        st.dropped_events = 0;
+        st.failure = None;
+        debug_assert!(st.handles.is_empty(), "executions overlapped");
+    }
+
+    fn take_handles(&self) -> Vec<std::thread::JoinHandle<()>> {
+        std::mem::take(&mut self.lock().handles)
+    }
+
+    fn outcome(&self, execution: usize) -> Result<Vec<(u32, u32)>, Box<Failure>> {
+        let mut st = self.lock();
+        match st.failure.take() {
+            Some((message, trace)) => Err(Box::new(Failure { message, execution, trace })),
+            None => Ok(std::mem::take(&mut st.taken)),
+        }
+    }
+
+    /// Record `message` as the failure from outside the scheduler (a
+    /// controller panic) and wake everything so it aborts.
+    fn fail_external(&self, message: String) {
+        let mut st = self.lock();
+        st.fail(message);
+        self.cv.notify_all();
+    }
+
+    fn abort(&self, st: Guarded<'_>) -> ! {
+        drop(st);
+        self.cv.notify_all();
+        std::panic::panic_any(ModelAbort);
+    }
+
+    fn check_abort(&self, st: &Guarded<'_>) -> bool {
+        st.failure.is_some()
+    }
+
+    /// Move the token to `next` (or park it when `next` is `None`) and
+    /// wait until this thread is granted again.
+    fn hand_off_and_wait(&self, mut st: Guarded<'_>, tid: usize, next: Option<usize>) {
+        st.active = next;
+        self.cv.notify_all();
+        while st.active != Some(tid) {
+            if self.check_abort(&st) {
+                self.abort(st);
+            }
+            st = self.cv.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
+        if st.threads[tid] == TState::Spinning {
+            st.threads[tid] = TState::Runnable;
+        }
+    }
+
+    /// One scheduling point: charge the op budget, let the explorer
+    /// pick who runs next, and return once this thread holds the token
+    /// again.  `write` marks state-changing operations (they re-arm
+    /// spinners once the operation executes).
+    fn grant(&self, tid: usize, write: bool) {
+        let mut st = self.lock();
+        if self.check_abort(&st) {
+            self.abort(st);
+        }
+        st.ops += 1;
+        if st.ops > st.max_ops {
+            let budget = st.max_ops;
+            st.fail(format!("operation budget ({budget}) exceeded: livelock or runaway loop"));
+            self.abort(st);
+        }
+        match st.choose() {
+            Some(next) => self.hand_off_and_wait(st, tid, next),
+            None => self.abort(st),
+        }
+        // Token regained: the operation executes now, before any other
+        // thread can be scheduled.
+        if write {
+            let mut st = self.lock();
+            st.progress();
+        }
+    }
+
+    /// Record a completed operation in the trace.
+    fn note(&self, tid: usize, msg: String) {
+        let mut st = self.lock();
+        st.record(tid, msg);
+    }
+
+    /// Spin-loop yield point: deprioritize this thread until progress.
+    fn yield_spin(&self, tid: usize) {
+        let mut st = self.lock();
+        if self.check_abort(&st) {
+            self.abort(st);
+        }
+        st.ops += 1;
+        if st.ops > st.max_ops {
+            st.fail(format!("operation budget ({}) exceeded while spinning", st.max_ops));
+            self.abort(st);
+        }
+        st.threads[tid] = TState::Spinning;
+        match st.choose() {
+            Some(next) => self.hand_off_and_wait(st, tid, next),
+            None => {
+                st.fail("deadlock: every live thread is blocked or spinning".to_string());
+                self.abort(st)
+            }
+        }
+    }
+
+    /// Block on `why` until woken, then return with the token held.
+    fn block_on(&self, mut st: Guarded<'_>, tid: usize, why: Block) {
+        st.threads[tid] = TState::Blocked(why);
+        match st.choose() {
+            Some(next) => self.hand_off_and_wait(st, tid, next),
+            None => {
+                let blocked: Vec<String> = st
+                    .threads
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, s)| matches!(s, TState::Blocked(_)))
+                    .map(|(i, s)| format!("T{i} {s:?}"))
+                    .collect();
+                st.fail(format!("deadlock: all live threads blocked [{}]", blocked.join(", ")));
+                self.abort(st)
+            }
+        }
+    }
+
+    fn wake(st: &mut SchedState, pred: impl Fn(Block) -> bool) {
+        for t in st.threads.iter_mut() {
+            if let TState::Blocked(b) = *t {
+                if pred(b) {
+                    *t = TState::Runnable;
+                }
+            }
+        }
+    }
+
+    fn fresh_obj(&self) -> usize {
+        let mut st = self.lock();
+        let id = st.next_obj;
+        st.next_obj += 1;
+        id
+    }
+
+    // -- threads ----------------------------------------------------------
+
+    fn register_thread(&self, parent: usize) -> usize {
+        let mut st = self.lock();
+        let tid = st.threads.len();
+        st.threads.push(TState::Runnable);
+        st.record(parent, format!("spawned T{tid}"));
+        tid
+    }
+
+    fn startup_wait(&self, tid: usize) {
+        let mut st = self.lock();
+        while st.active != Some(tid) {
+            if self.check_abort(&st) {
+                self.abort(st);
+            }
+            st = self.cv.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+
+    fn finish(&self, tid: usize, panic_msg: Option<String>) {
+        let mut st = self.lock();
+        if let Some(msg) = panic_msg {
+            st.record(tid, format!("panicked: {msg}"));
+            st.fail(format!("thread T{tid} panicked: {msg}"));
+            st.threads[tid] = TState::Finished;
+            drop(st);
+            self.cv.notify_all();
+            return;
+        }
+        st.record(tid, "finished".to_string());
+        st.threads[tid] = TState::Finished;
+        Self::wake(&mut st, |b| b == Block::Join(tid));
+        st.progress();
+        st.active = st.choose();
+        if st.active.is_none() && st.threads.iter().any(|t| !matches!(t, TState::Finished)) {
+            // Nobody left to run but live threads remain: a blocked
+            // cycle nothing will ever wake (e.g. a lost notify).
+            st.fail("deadlock: finishing thread leaves only blocked threads".to_string());
+        }
+        drop(st);
+        self.cv.notify_all();
+    }
+
+    fn finish_aborted(&self, tid: usize) {
+        let mut st = self.lock();
+        st.threads[tid] = TState::Finished;
+        drop(st);
+        self.cv.notify_all();
+    }
+
+    fn join_wait(&self, tid: usize, target: usize) {
+        loop {
+            let st = self.lock();
+            if self.check_abort(&st) {
+                self.abort(st);
+            }
+            if st.threads[target] == TState::Finished {
+                return;
+            }
+            self.block_on(st, tid, Block::Join(target));
+        }
+    }
+
+    /// Controller tail: wait (as a polite spinner) for every spawned
+    /// thread to finish, so executions never leak threads.
+    fn drain_controller(&self) {
+        loop {
+            {
+                let st = self.lock();
+                if self.check_abort(&st) {
+                    self.abort(st);
+                }
+                if st.threads[1..].iter().all(|t| *t == TState::Finished) {
+                    return;
+                }
+            }
+            self.yield_spin(0);
+        }
+    }
+
+    // -- mutexes ----------------------------------------------------------
+
+    fn acquire_mutex(&self, tid: usize, mid: usize) {
+        self.grant(tid, true);
+        loop {
+            let mut st = self.lock();
+            if self.check_abort(&st) {
+                self.abort(st);
+            }
+            if st.mutex_held.len() <= mid {
+                st.mutex_held.resize(mid + 1, None);
+            }
+            if st.mutex_held[mid].is_none() {
+                st.mutex_held[mid] = Some(tid);
+                st.record(tid, format!("m{mid}.lock"));
+                return;
+            }
+            self.block_on(st, tid, Block::Mutex(mid));
+        }
+    }
+
+    fn release_mutex(&self, tid: usize, mid: usize) {
+        let mut st = self.lock();
+        if st.mutex_held.len() > mid {
+            st.mutex_held[mid] = None;
+        }
+        Self::wake(&mut st, |b| b == Block::Mutex(mid));
+        st.progress();
+        st.record(tid, format!("m{mid}.unlock"));
+        drop(st);
+        self.cv.notify_all();
+    }
+
+    // -- condvars ---------------------------------------------------------
+
+    /// Atomically release `mid` and sleep on `cid` (the caller has
+    /// already dropped the real guard); returns once notified and
+    /// scheduled, with the mutex *not yet* reacquired.
+    fn cv_wait(&self, tid: usize, cid: usize, mid: usize) {
+        let mut st = self.lock();
+        if self.check_abort(&st) {
+            self.abort(st);
+        }
+        if st.mutex_held.len() > mid {
+            st.mutex_held[mid] = None;
+        }
+        Self::wake(&mut st, |b| b == Block::Mutex(mid));
+        st.progress();
+        st.record(tid, format!("c{cid}.wait (released m{mid})"));
+        self.block_on(st, tid, Block::Cond(cid));
+    }
+
+    fn cv_notify(&self, tid: usize, cid: usize, all: bool) {
+        let mut st = self.lock();
+        if all {
+            Self::wake(&mut st, |b| b == Block::Cond(cid));
+        } else {
+            let waiter = Block::Cond(cid);
+            if let Some(one) = st.threads.iter().position(|t| *t == TState::Blocked(waiter)) {
+                st.threads[one] = TState::Runnable;
+            }
+        }
+        st.progress();
+        st.record(tid, format!("c{cid}.notify_{}", if all { "all" } else { "one" }));
+        drop(st);
+        self.cv.notify_all();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Model threads
+// ---------------------------------------------------------------------------
+
+/// Handle to a thread spawned inside a model execution.
+pub struct JoinHandle<T> {
+    tid: usize,
+    slot: Arc<StdMutex<Option<T>>>,
+}
+
+impl<T> JoinHandle<T> {
+    /// Wait (as a scheduling point) for the thread to finish and return
+    /// its result.  A panicked thread aborts the execution instead.
+    pub fn join(self) -> T {
+        let s = sched();
+        // PANIC-OK: API misuse — join() is only callable from inside a
+        // check body, where the TLS tid is always set.
+        let tid = cur_tid().expect("model join outside a check");
+        s.join_wait(tid, self.tid);
+        match self.slot.lock().unwrap_or_else(|e| e.into_inner()).take() {
+            Some(v) => v,
+            // The target panicked: its failure is already recorded.
+            None => std::panic::panic_any(ModelAbort),
+        }
+    }
+}
+
+/// Spawn a model thread inside a [`check`] execution.  It starts
+/// suspended and runs only when the explorer schedules it.
+pub fn spawn<T, F>(f: F) -> JoinHandle<T>
+where
+    T: Send + 'static,
+    F: FnOnce() -> T + Send + 'static,
+{
+    // PANIC-OK: API misuse — spawn() requires an enclosing check body.
+    let parent = cur_tid().expect("model::spawn outside a check body");
+    let s = sched();
+    let tid = s.register_thread(parent);
+    let slot: Arc<StdMutex<Option<T>>> = Arc::new(StdMutex::new(None));
+    let out = Arc::clone(&slot);
+    let handle = std::thread::Builder::new()
+        .name(format!("model-T{tid}"))
+        .spawn(move || {
+            CUR_TID.with(|t| t.set(Some(tid)));
+            let res = catch_unwind(AssertUnwindSafe(|| {
+                s.startup_wait(tid);
+                f()
+            }));
+            match res {
+                Ok(v) => {
+                    *out.lock().unwrap_or_else(|e| e.into_inner()) = Some(v);
+                    s.finish(tid, None);
+                }
+                Err(payload) => {
+                    if payload.is::<ModelAbort>() {
+                        s.finish_aborted(tid);
+                    } else {
+                        s.finish(tid, Some(payload_message(&payload)));
+                    }
+                }
+            }
+        })
+        // PANIC-OK: OS thread exhaustion during a test harness run is
+        // unrecoverable; fail the check loudly.
+        .expect("spawn model thread");
+    sched().lock().handles.push(handle);
+    JoinHandle { tid, slot }
+}
+
+/// Spin-loop yield point (`sync::spin::{spin_loop, yield_now}` route
+/// here under the model).  Outside a model thread it degrades to a real
+/// OS yield.
+pub fn spin_yield() {
+    match cur_tid() {
+        Some(tid) => sched().yield_spin(tid),
+        None => std::thread::yield_now(),
+    }
+}
+
+/// Run `f` as one instrumented operation: schedule, execute with the
+/// token held, trace.  Passthrough when the calling thread is not part
+/// of a model execution (ordinary tests under this cfg).
+fn op<T>(write: bool, f: impl FnOnce() -> T, desc: impl FnOnce(&T) -> String) -> T {
+    match cur_tid() {
+        None => f(),
+        Some(tid) => {
+            let s = sched();
+            s.grant(tid, write);
+            let v = f();
+            let msg = desc(&v);
+            s.note(tid, msg);
+            v
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Instrumented atomics
+// ---------------------------------------------------------------------------
+
+fn obj_id(slot: &OnceLock<usize>) -> usize {
+    *slot.get_or_init(|| sched().fresh_obj())
+}
+
+macro_rules! model_atomic {
+    ($name:ident, $std:ty, $val:ty) => {
+        /// Instrumented atomic: every access is a scheduling point of
+        /// the model explorer; identical API to the `std` type.
+        pub struct $name {
+            id: OnceLock<usize>,
+            inner: $std,
+        }
+
+        impl $name {
+            pub const fn new(v: $val) -> Self {
+                $name { id: OnceLock::new(), inner: <$std>::new(v) }
+            }
+
+            fn tag(&self) -> usize {
+                obj_id(&self.id)
+            }
+
+            pub fn load(&self, o: Ordering) -> $val {
+                let t = &self.inner;
+                op(false, || t.load(o), |v| format!("a{}.load({o:?}) -> {v:?}", self.tag()))
+            }
+
+            pub fn store(&self, v: $val, o: Ordering) {
+                let t = &self.inner;
+                op(true, || t.store(v, o), |_| format!("a{}.store({v:?}, {o:?})", self.tag()))
+            }
+
+            pub fn swap(&self, v: $val, o: Ordering) -> $val {
+                let t = &self.inner;
+                op(
+                    true,
+                    || t.swap(v, o),
+                    |p| format!("a{}.swap({v:?}, {o:?}) -> {p:?}", self.tag()),
+                )
+            }
+
+            pub fn compare_exchange(
+                &self,
+                cur: $val,
+                new: $val,
+                ok: Ordering,
+                err: Ordering,
+            ) -> Result<$val, $val> {
+                let t = &self.inner;
+                op(
+                    true,
+                    || t.compare_exchange(cur, new, ok, err),
+                    |r| format!("a{}.compare_exchange({cur:?}, {new:?}) -> {r:?}", self.tag()),
+                )
+            }
+
+            pub fn compare_exchange_weak(
+                &self,
+                cur: $val,
+                new: $val,
+                ok: Ordering,
+                err: Ordering,
+            ) -> Result<$val, $val> {
+                // Never fails spuriously under the model: spurious
+                // failure adds schedules without adding reachable
+                // protocol states.
+                self.compare_exchange(cur, new, ok, err)
+            }
+        }
+
+        impl Default for $name {
+            fn default() -> Self {
+                Self::new(Default::default())
+            }
+        }
+
+        impl std::fmt::Debug for $name {
+            fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+                // Diagnostic read: not a scheduling point.
+                write!(f, "{:?}", self.inner)
+            }
+        }
+    };
+}
+
+macro_rules! model_atomic_arith {
+    ($name:ident, $val:ty) => {
+        impl $name {
+            pub fn fetch_add(&self, v: $val, o: Ordering) -> $val {
+                let t = &self.inner;
+                op(
+                    true,
+                    || t.fetch_add(v, o),
+                    |p| format!("a{}.fetch_add({v}, {o:?}) -> {p}", self.tag()),
+                )
+            }
+
+            pub fn fetch_sub(&self, v: $val, o: Ordering) -> $val {
+                let t = &self.inner;
+                op(
+                    true,
+                    || t.fetch_sub(v, o),
+                    |p| format!("a{}.fetch_sub({v}, {o:?}) -> {p}", self.tag()),
+                )
+            }
+
+            pub fn fetch_max(&self, v: $val, o: Ordering) -> $val {
+                let t = &self.inner;
+                op(
+                    true,
+                    || t.fetch_max(v, o),
+                    |p| format!("a{}.fetch_max({v}, {o:?}) -> {p}", self.tag()),
+                )
+            }
+        }
+    };
+}
+
+model_atomic!(AtomicU64, std::sync::atomic::AtomicU64, u64);
+model_atomic!(AtomicU32, std::sync::atomic::AtomicU32, u32);
+model_atomic!(AtomicUsize, std::sync::atomic::AtomicUsize, usize);
+model_atomic!(AtomicBool, std::sync::atomic::AtomicBool, bool);
+model_atomic_arith!(AtomicU64, u64);
+model_atomic_arith!(AtomicU32, u32);
+model_atomic_arith!(AtomicUsize, usize);
+
+// ---------------------------------------------------------------------------
+// Instrumented Mutex / Condvar
+// ---------------------------------------------------------------------------
+
+/// Instrumented mutex: lock/unlock are scheduling points; contention
+/// blocks in the model scheduler, never in the OS.  API-compatible with
+/// `std::sync::Mutex` for the crate's usage (`lock` + poison recovery).
+pub struct Mutex<T: ?Sized> {
+    id: OnceLock<usize>,
+    inner: StdMutex<T>,
+}
+
+impl<T> Mutex<T> {
+    pub const fn new(t: T) -> Self {
+        Mutex { id: OnceLock::new(), inner: StdMutex::new(t) }
+    }
+}
+
+impl<T: ?Sized> Mutex<T> {
+    fn tag(&self) -> usize {
+        obj_id(&self.id)
+    }
+
+    pub fn lock(&self) -> LockResult<MutexGuard<'_, T>> {
+        let model = match cur_tid() {
+            Some(tid) => {
+                sched().acquire_mutex(tid, self.tag());
+                true
+            }
+            None => false,
+        };
+        // With the model bookkeeping holding this mutex for us, the
+        // inner lock is uncontended among model threads; unregistered
+        // threads must not share a model-checked structure mid-check.
+        match self.inner.lock() {
+            Ok(g) => Ok(MutexGuard { lock: self, inner: Some(g), model }),
+            Err(p) => Err(PoisonError::new(MutexGuard {
+                lock: self,
+                inner: Some(p.into_inner()),
+                model,
+            })),
+        }
+    }
+}
+
+impl<T: ?Sized> std::fmt::Debug for Mutex<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "model::Mutex")
+    }
+}
+
+/// Guard for [`Mutex`]; drops the real guard first, then releases the
+/// model bookkeeping (a non-transferring operation: the token stays
+/// with the unlocking thread until its next scheduling point).
+pub struct MutexGuard<'a, T: ?Sized> {
+    lock: &'a Mutex<T>,
+    inner: Option<std::sync::MutexGuard<'a, T>>,
+    model: bool,
+}
+
+impl<T: ?Sized> std::ops::Deref for MutexGuard<'_, T> {
+    type Target = T;
+
+    fn deref(&self) -> &T {
+        // PANIC-OK: `inner` is only None transiently inside drop/wait.
+        self.inner.as_ref().expect("guard still holds the lock")
+    }
+}
+
+impl<T: ?Sized> std::ops::DerefMut for MutexGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        // PANIC-OK: `inner` is only None transiently inside drop/wait.
+        self.inner.as_mut().expect("guard still holds the lock")
+    }
+}
+
+impl<T: ?Sized> Drop for MutexGuard<'_, T> {
+    fn drop(&mut self) {
+        self.inner = None;
+        if self.model {
+            if let Some(tid) = cur_tid() {
+                sched().release_mutex(tid, self.lock.tag());
+            }
+        }
+    }
+}
+
+/// Instrumented condvar: waits park in the model scheduler (modeling
+/// lost wakeups faithfully — a notify with no waiter wakes nobody).
+pub struct Condvar {
+    id: OnceLock<usize>,
+    inner: StdCondvar,
+}
+
+impl Default for Condvar {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Condvar {
+    pub const fn new() -> Self {
+        Condvar { id: OnceLock::new(), inner: StdCondvar::new() }
+    }
+
+    fn tag(&self) -> usize {
+        obj_id(&self.id)
+    }
+
+    pub fn wait<'a, T>(&self, mut guard: MutexGuard<'a, T>) -> LockResult<MutexGuard<'a, T>> {
+        let lock = guard.lock;
+        match cur_tid() {
+            None => {
+                // PANIC-OK: a live guard always holds its std guard.
+                let std_guard = guard.inner.take().expect("guard still holds the lock");
+                guard.model = false;
+                drop(guard);
+                match self.inner.wait(std_guard) {
+                    Ok(g) => Ok(MutexGuard { lock, inner: Some(g), model: false }),
+                    Err(p) => Err(PoisonError::new(MutexGuard {
+                        lock,
+                        inner: Some(p.into_inner()),
+                        model: false,
+                    })),
+                }
+            }
+            Some(tid) => {
+                let s = sched();
+                let mid = lock.tag();
+                // Drop the real guard without releasing the model
+                // bookkeeping; cv_wait hands both over atomically.
+                guard.inner = None;
+                guard.model = false;
+                drop(guard);
+                s.cv_wait(tid, self.tag(), mid);
+                // Notified and scheduled: contend for the mutex again.
+                s.acquire_mutex(tid, mid);
+                match lock.inner.lock() {
+                    Ok(g) => Ok(MutexGuard { lock, inner: Some(g), model: true }),
+                    Err(p) => Err(PoisonError::new(MutexGuard {
+                        lock,
+                        inner: Some(p.into_inner()),
+                        model: true,
+                    })),
+                }
+            }
+        }
+    }
+
+    pub fn notify_all(&self) {
+        self.inner.notify_all();
+        if let Some(tid) = cur_tid() {
+            sched().cv_notify(tid, self.tag(), true);
+        }
+    }
+
+    pub fn notify_one(&self) {
+        self.inner.notify_one();
+        if let Some(tid) = cur_tid() {
+            sched().cv_notify(tid, self.tag(), false);
+        }
+    }
+}

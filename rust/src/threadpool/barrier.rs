@@ -7,8 +7,8 @@
 //! B's per-update synchronization, where the expected wait is far below
 //! a scheduler quantum.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Condvar, Mutex};
+use crate::sync::spin::SpinWait;
+use crate::sync::{AtomicUsize, Condvar, Mutex, Ordering};
 
 /// Sense-reversing barrier on a mutex-protected counter.
 pub struct CounterBarrier {
@@ -24,9 +24,12 @@ impl CounterBarrier {
     }
 
     /// Block until all `n` participants arrive.  Returns true for
-    /// exactly one "leader" per round (the last arriver).
+    /// exactly one "leader" per round (the last arriver).  A poisoned
+    /// lock (a participant panicked mid-round) is recovered: the
+    /// counter state itself is never left torn by a panic, so the
+    /// surviving participants keep synchronizing.
     pub fn wait(&self) -> bool {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
         let gen = st.1;
         st.0 += 1;
         if st.0 == self.n {
@@ -36,7 +39,7 @@ impl CounterBarrier {
             true
         } else {
             while st.1 == gen {
-                st = self.cv.wait(st).unwrap();
+                st = self.cv.wait(st).unwrap_or_else(|e| e.into_inner());
             }
             false
         }
@@ -51,7 +54,15 @@ impl CounterBarrier {
 /// dominate.
 pub struct SpinBarrier {
     n: usize,
+    /// Arrivals this round.  AcqRel on the increment: the last arriver
+    /// must observe every earlier participant's pre-barrier writes
+    /// before it opens the next generation.  The reset store is
+    /// Relaxed: it is ordered for waiters by the `generation` Release
+    /// below (no waiter reads `arrived` before passing the generation
+    /// Acquire).
     arrived: AtomicUsize,
+    /// Round counter.  Release on open / Acquire on the spin-read:
+    /// *this* edge publishes all pre-barrier writes to every waiter.
     generation: AtomicUsize,
 }
 
@@ -69,16 +80,13 @@ impl SpinBarrier {
             self.generation.store(gen.wrapping_add(1), Ordering::Release);
             true
         } else {
-            let mut spins = 0u32;
+            // Bounded spin-then-yield (sync::spin::SpinWait): short
+            // waits stay on the PAUSE fast path, stragglers yield so
+            // the remaining participants can actually run on an
+            // oversubscribed or single-core host.
+            let mut sw = SpinWait::new();
             while self.generation.load(Ordering::Acquire) == gen {
-                spins += 1;
-                if spins < 64 {
-                    std::hint::spin_loop();
-                } else {
-                    // Single-core friendliness: yield so the remaining
-                    // participants can actually run.
-                    std::thread::yield_now();
-                }
+                sw.spin();
             }
             false
         }
@@ -88,7 +96,7 @@ impl SpinBarrier {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::atomic::{AtomicUsize, Ordering};
+    use crate::sync::{AtomicUsize, Ordering};
     use std::sync::Arc;
 
     fn exercise_barrier(wait: impl Fn() -> bool + Sync, n: usize, rounds: usize) {

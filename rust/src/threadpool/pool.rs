@@ -21,11 +21,14 @@
 //! job/remaining handoff is single-publisher by construction, not by a
 //! `debug_assert!` that vanishes in release builds.
 
-use std::sync::{Condvar, Mutex};
+use crate::sync::{Condvar, Mutex};
 
 type Job = *const (dyn Fn(usize) + Sync);
 
 struct Shared {
+    /// Single-publisher handoff state: `job`/`generation`/`remaining`
+    /// move together under this one lock — the mutex (not atomic
+    /// ordering) is the publication edge for everything in [`State`].
     state: Mutex<State>,
     start_cv: Condvar,
     done_cv: Condvar,
@@ -43,6 +46,9 @@ struct State {
 
 /// Raw job pointer made Send; validity is guaranteed by `run`'s joining.
 struct SendJob(Job);
+// SAFETY: the pointee is `Sync` (so &-calls from any thread are fine)
+// and outlives every dereference — `run` publishes the pointer, then
+// blocks until all workers report done before the borrow ends.
 unsafe impl Send for SendJob {}
 impl Clone for SendJob {
     fn clone(&self) -> Self {
@@ -90,6 +96,8 @@ impl WorkerPool {
                 std::thread::Builder::new()
                     .name(format!("{name}-{id}"))
                     .spawn(move || worker_loop(id, &shared))
+                    // PANIC-OK: a host that cannot spawn threads cannot
+                    // run the solver at all; surface it at pool setup.
                     .expect("spawn worker")
             })
             .collect::<Vec<_>>();
@@ -180,6 +188,9 @@ fn worker_loop(id: usize, shared: &Shared) {
                 }
                 if st.generation != seen_gen {
                     seen_gen = st.generation;
+                    // PANIC-OK: the publisher stores `job` and bumps
+                    // `generation` under the same lock; a fresh
+                    // generation with no job is unreachable.
                     break st.job.clone().expect("job set with generation");
                 }
                 st = shared.start_cv.wait(st).unwrap_or_else(|e| e.into_inner());
@@ -218,7 +229,7 @@ impl Drop for WorkerPool {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::atomic::{AtomicUsize, Ordering};
+    use crate::sync::{AtomicUsize, Ordering};
 
     #[test]
     fn all_workers_run_each_job() {

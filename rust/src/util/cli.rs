@@ -32,6 +32,7 @@ impl Args {
                     // `--key value` unless the next token is another flag
                     match it.peek() {
                         Some(nxt) if !nxt.starts_with("--") => {
+                            // PANIC-OK: peek() just returned Some.
                             let v = it.next().unwrap();
                             out.flags.insert(stripped.to_string(), v);
                         }

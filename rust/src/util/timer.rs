@@ -54,7 +54,7 @@ pub fn bench_median<F: FnMut()>(mut f: F, min_secs: f64, max_reps: usize) -> (f6
             break;
         }
     }
-    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    times.sort_by(|a, b| a.total_cmp(b));
     (times[times.len() / 2], times.len())
 }
 

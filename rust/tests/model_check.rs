@@ -1,0 +1,505 @@
+//! Deterministic model checking of the crate's concurrency protocols.
+//!
+//! The whole file compiles only under `--cfg pallas_model_check`, which
+//! swaps `hthc::sync` onto the instrumented scheduler in
+//! `hthc::sync::model` (see `rust/DESIGN.md` §12):
+//!
+//! ```text
+//! RUSTFLAGS="--cfg pallas_model_check" cargo test --test model_check
+//! ```
+//!
+//! Each test wraps a small scenario in `model::check`, which reruns it
+//! under every schedule a bounded DFS can reach, plus a seeded random
+//! phase when the space exceeds the budget, and returns the failing
+//! interleaving trace when an invariant breaks.  CI runs the default
+//! budgets (deterministic, well under a minute).  For a deeper local
+//! soak, `PALLAS_MC_EXHAUSTIVE` multiplies every budget ~200x:
+//!
+//! ```text
+//! PALLAS_MC_EXHAUSTIVE=1 RUSTFLAGS="--cfg pallas_model_check" \
+//!     cargo test --release --test model_check -- --test-threads=1
+//! ```
+#![cfg(pallas_model_check)]
+
+use hthc::coordinator::GapMemory;
+use hthc::data::Family;
+use hthc::glm::ModelKind;
+use hthc::sched::TileScheduler;
+use hthc::serve::{ModelSnapshot, ModelStore};
+use hthc::sync::model::{check, spawn, Config, Failure, Report};
+use hthc::sync::Ordering::{Relaxed, SeqCst};
+use hthc::sync::{AtomicU32, AtomicUsize, Condvar, Mutex};
+use hthc::threadpool::{CounterBarrier, SpinBarrier};
+use std::panic::catch_unwind;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Exploration budget: the given DFS/random split by default, both
+/// multiplied ~200x when `PALLAS_MC_EXHAUSTIVE` is set (local soak
+/// mode; CI sticks to the deterministic defaults).
+fn budget(dfs: usize, random: usize) -> Config {
+    let exhaustive = std::env::var_os("PALLAS_MC_EXHAUSTIVE").is_some();
+    Config {
+        max_executions: if exhaustive { dfs * 200 } else { dfs },
+        random_executions: if exhaustive { random * 200 } else { random },
+        ..Config::default()
+    }
+}
+
+/// Unwrap a check result, printing the full interleaving trace of a
+/// failure instead of the opaque `Err(..)` Debug form.
+fn must_pass(res: Result<Report, Box<Failure>>) -> Report {
+    match res {
+        Ok(r) => r,
+        Err(f) => panic!("{f}"),
+    }
+}
+
+/// Tests that *simulate* panics (a panicking job, an injected bug) mark
+/// their payloads with `[mc]`; this hook keeps those expected panics —
+/// and the scheduler's internal non-string abort payloads — out of the
+/// test output while real failures stay loud.
+fn quiet_expected_panics() {
+    use std::sync::Once;
+    static ONCE: Once = Once::new();
+    ONCE.call_once(|| {
+        let default = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            let payload = info.payload();
+            let msg = if let Some(s) = payload.downcast_ref::<&str>() {
+                (*s).to_string()
+            } else if let Some(s) = payload.downcast_ref::<String>() {
+                s.clone()
+            } else {
+                // Non-string payloads here are the model scheduler's
+                // abort token unwinding threads after a failure was
+                // already recorded.
+                String::new()
+            };
+            if !(msg.is_empty() || msg.contains("[mc]")) {
+                default(info);
+            }
+        }));
+    });
+}
+
+fn snap(tag: f32) -> ModelSnapshot {
+    ModelSnapshot {
+        version: 0,
+        kind: ModelKind::Lasso { lam: 0.1, lip_b: 1.0 },
+        family: Family::Regression,
+        weights: vec![tag; 4],
+        bias: tag,
+        alpha: vec![tag; 4],
+        col_scales: None,
+        gap: tag as f64,
+        trained_cols: 4,
+        absorbed: 0,
+        published_at: Instant::now(),
+    }
+}
+
+/// Invariant the gap-memory writers maintain: the value is a function
+/// of the stamp, so any observed pair that violates it is torn.
+fn fval(epoch: u32) -> f32 {
+    epoch as f32 * 3.5 + 1.0
+}
+
+/// ModelStore: two readers loading concurrently with a writer that
+/// republishes twice must never pin a torn or reclaimed snapshot, and
+/// per-reader versions must stay monotone.
+#[test]
+fn model_store_readers_never_observe_torn_snapshots() {
+    let res = check(&budget(1200, 600), || {
+        let store = Arc::new(ModelStore::new(snap(1.0)));
+        let writer = {
+            let store = Arc::clone(&store);
+            spawn(move || {
+                store.publish(snap(2.0));
+                store.publish(snap(3.0));
+            })
+        };
+        let readers: Vec<_> = (0..2)
+            .map(|_| {
+                let store = Arc::clone(&store);
+                spawn(move || {
+                    let mut last = 0u64;
+                    for _ in 0..2 {
+                        let s = store.load();
+                        assert!(s.version >= last, "versions went backwards");
+                        last = s.version;
+                        assert!(
+                            s.weights.iter().all(|&w| w == s.bias),
+                            "torn snapshot: weights do not match the bias tag"
+                        );
+                        assert!(s.gap == s.bias as f64, "torn snapshot: gap/bias mismatch");
+                    }
+                })
+            })
+            .collect();
+        writer.join();
+        for r in readers {
+            r.join();
+        }
+        assert_eq!(store.version(), 3);
+    });
+    let report = must_pass(res);
+    assert!(
+        report.executions > 1000,
+        "expected >1000 interleavings, explored {}",
+        report.executions
+    );
+}
+
+/// GapMemory: with the packed single-word layout, no reader may ever
+/// observe a stamp paired with another epoch's value, and the update
+/// counter must count every write exactly once.
+#[test]
+fn gap_memory_value_and_stamp_never_tear() {
+    let res = check(&budget(2000, 1000), || {
+        let g = Arc::new(GapMemory::new(4));
+        let writers: Vec<_> = (0..2usize)
+            .map(|t| {
+                let g = Arc::clone(&g);
+                spawn(move || {
+                    for r in 0..3u32 {
+                        let epoch = t as u32 * 3 + r + 1;
+                        g.update((t + r as usize) % 4, fval(epoch), epoch);
+                    }
+                })
+            })
+            .collect();
+        let readers: Vec<_> = (0..2usize)
+            .map(|t| {
+                let g = Arc::clone(&g);
+                spawn(move || {
+                    for i in 0..2usize {
+                        let (gap, stamp) = g.read_entry((t + i) % 4);
+                        if stamp == 0 {
+                            assert!(gap.is_infinite(), "untouched entry must stay +inf");
+                        } else {
+                            assert!(gap == fval(stamp), "torn pair: stamp {stamp} gap {gap}");
+                        }
+                    }
+                })
+            })
+            .collect();
+        for h in writers {
+            h.join();
+        }
+        for h in readers {
+            h.join();
+        }
+        let (updates, _frac) = g.refresh_stats(1);
+        assert_eq!(updates, 6, "every update counted exactly once");
+    });
+    let report = must_pass(res);
+    assert!(
+        report.executions > 1000,
+        "expected >1000 interleavings, explored {}",
+        report.executions
+    );
+}
+
+/// TileScheduler drain mode: two workers racing `claim` (including
+/// steals once a worker's own shard drains) must hand out every column
+/// exactly once.
+#[test]
+fn tile_scheduler_drain_claims_every_tile_exactly_once() {
+    let len = 6usize;
+    let res = check(&budget(2000, 1000), move || {
+        let sched = Arc::new(TileScheduler::new(len, 2, 2));
+        let workers: Vec<_> = (0..2usize)
+            .map(|w| {
+                let sched = Arc::clone(&sched);
+                spawn(move || {
+                    let mut mine = Vec::new();
+                    while let Some(t) = sched.claim(w) {
+                        mine.push(t);
+                    }
+                    mine
+                })
+            })
+            .collect();
+        let mut seen = vec![0u32; len];
+        for h in workers {
+            for t in h.join() {
+                for c in t.lo..t.hi {
+                    seen[c] += 1;
+                }
+            }
+        }
+        assert!(seen.iter().all(|&c| c == 1), "drain not exactly-once: {seen:?}");
+        assert_eq!(sched.remaining(), 0);
+    });
+    let report = must_pass(res);
+    assert!(
+        report.executions > 1000,
+        "expected >1000 interleavings, explored {}",
+        report.executions
+    );
+}
+
+/// Mirror of `WorkerPool`'s generation-stamped job handoff, built from
+/// the same shim primitives (`sync::Mutex` + `sync::Condvar`).  The
+/// real pool spawns its OS workers in `new()`, outside the model's
+/// reach; what the model explores here is the protocol itself —
+/// publish-under-lock, the generation stamp, the DoneGuard drain and
+/// the panic capture path, shaped exactly like `threadpool/pool.rs`.
+struct PoolMirror {
+    state: Mutex<MirrorState>,
+    start: Condvar,
+    done: Condvar,
+}
+
+struct MirrorState {
+    job: u64,
+    generation: u64,
+    remaining: usize,
+    shutdown: bool,
+    panics: usize,
+}
+
+/// Decrements `remaining` on every exit path, like the pool's guard.
+struct DoneGuard<'a>(&'a PoolMirror);
+
+impl Drop for DoneGuard<'_> {
+    fn drop(&mut self) {
+        let mut st = self.0.state.lock().unwrap_or_else(|e| e.into_inner());
+        st.remaining -= 1;
+        if st.remaining == 0 {
+            self.0.done.notify_all();
+        }
+    }
+}
+
+fn mirror_worker(shared: Arc<PoolMirror>, id: usize) -> Vec<u64> {
+    let mut seen_gen = 0u64;
+    let mut seen = Vec::new();
+    loop {
+        let job = {
+            let mut st = shared.state.lock().unwrap_or_else(|e| e.into_inner());
+            loop {
+                if st.shutdown {
+                    return seen;
+                }
+                if st.generation != seen_gen {
+                    seen_gen = st.generation;
+                    break st.job;
+                }
+                st = shared.start.wait(st).unwrap_or_else(|e| e.into_inner());
+            }
+        };
+        seen.push(job);
+        let _done = DoneGuard(shared.as_ref());
+        let result = catch_unwind(|| {
+            if id == 1 && job == 2 {
+                panic!("[mc] simulated job panic");
+            }
+        });
+        if result.is_err() {
+            let mut st = shared.state.lock().unwrap_or_else(|e| e.into_inner());
+            st.panics += 1;
+        }
+    }
+}
+
+/// WorkerPool handoff: the publisher must never lose a job (a worker
+/// missing a generation) or double-publish (a worker running one job
+/// twice), and a panicking job must neither hang the publisher's drain
+/// nor kill its worker.
+#[test]
+fn worker_pool_handoff_never_loses_or_double_runs_a_job() {
+    quiet_expected_panics();
+    let res = check(&budget(1200, 600), || {
+        let shared = Arc::new(PoolMirror {
+            state: Mutex::new(MirrorState {
+                job: 0,
+                generation: 0,
+                remaining: 0,
+                shutdown: false,
+                panics: 0,
+            }),
+            start: Condvar::new(),
+            done: Condvar::new(),
+        });
+        let workers: Vec<_> = (0..2usize)
+            .map(|id| {
+                let shared = Arc::clone(&shared);
+                spawn(move || mirror_worker(shared, id))
+            })
+            .collect();
+        for job in 1..=2u64 {
+            let mut st = shared.state.lock().unwrap_or_else(|e| e.into_inner());
+            st.job = job;
+            st.generation = st.generation.wrapping_add(1);
+            st.remaining = 2;
+            shared.start.notify_all();
+            while st.remaining > 0 {
+                st = shared.done.wait(st).unwrap_or_else(|e| e.into_inner());
+            }
+        }
+        {
+            let mut st = shared.state.lock().unwrap_or_else(|e| e.into_inner());
+            st.shutdown = true;
+            shared.start.notify_all();
+        }
+        for h in workers {
+            assert_eq!(h.join(), vec![1, 2], "worker lost or re-ran a job");
+        }
+        let st = shared.state.lock().unwrap_or_else(|e| e.into_inner());
+        assert_eq!(st.panics, 1, "the simulated job panic is captured exactly once");
+    });
+    let report = must_pass(res);
+    assert!(
+        report.executions > 1000,
+        "expected >1000 interleavings, explored {}",
+        report.executions
+    );
+}
+
+/// CounterBarrier: generations keep advancing — no deadlock in any
+/// interleaving — even when one participant's per-round work panics
+/// (caught, as WorkerPool jobs are) before it reaches the barrier.
+#[test]
+fn counter_barrier_generations_survive_a_panicking_participant() {
+    quiet_expected_panics();
+    let res = check(&budget(1200, 600), || {
+        let bar = Arc::new(CounterBarrier::new(2));
+        let parts: Vec<_> = (0..2usize)
+            .map(|id| {
+                let bar = Arc::clone(&bar);
+                spawn(move || {
+                    let mut leads = 0usize;
+                    for round in 0..3u32 {
+                        let _ = catch_unwind(|| {
+                            if id == 1 && round == 1 {
+                                panic!("[mc] simulated participant panic");
+                            }
+                        });
+                        if bar.wait() {
+                            leads += 1;
+                        }
+                    }
+                    leads
+                })
+            })
+            .collect();
+        let total: usize = parts.into_iter().map(|h| h.join()).sum();
+        assert_eq!(total, 3, "exactly one leader per round");
+    });
+    let report = must_pass(res);
+    assert!(
+        report.executions > 1000,
+        "expected >1000 interleavings, explored {}",
+        report.executions
+    );
+}
+
+/// SpinBarrier: no thread escapes into round `r + 1` before every
+/// participant finished round `r`, under every schedule.
+#[test]
+fn spin_barrier_rounds_stay_in_lockstep() {
+    let res = check(&budget(2000, 1000), || {
+        let bar = Arc::new(SpinBarrier::new(2));
+        let phase = Arc::new(AtomicUsize::new(0));
+        let parts: Vec<_> = (0..2usize)
+            .map(|_| {
+                let bar = Arc::clone(&bar);
+                let phase = Arc::clone(&phase);
+                spawn(move || {
+                    for round in 0..2usize {
+                        assert_eq!(
+                            phase.load(SeqCst) / 2,
+                            round,
+                            "a thread escaped the barrier early"
+                        );
+                        phase.fetch_add(1, SeqCst);
+                        bar.wait();
+                    }
+                })
+            })
+            .collect();
+        for h in parts {
+            h.join();
+        }
+        assert_eq!(phase.load(SeqCst), 4);
+    });
+    let report = must_pass(res);
+    assert!(
+        report.executions > 1000,
+        "expected >1000 interleavings, explored {}",
+        report.executions
+    );
+}
+
+/// The bug the packed-word GapMemory fixed (and the reason this harness
+/// exists): value and stamp as two independent atomics.
+struct TornPair {
+    value: AtomicU32,
+    stamp: AtomicU32,
+}
+
+/// Injected ordering bug: publishing the pair as two separate stores
+/// must be caught by the explorer, with a failure a human can act on —
+/// the message names the torn pair and the trace lists the schedule.
+#[test]
+fn injected_split_publication_bug_yields_a_readable_trace() {
+    quiet_expected_panics();
+    let failure = check(&budget(2000, 1000), || {
+        let p = Arc::new(TornPair {
+            value: AtomicU32::new(fval(0).to_bits()),
+            stamp: AtomicU32::new(0),
+        });
+        let writer = {
+            let p = Arc::clone(&p);
+            spawn(move || {
+                // BUG under test: two stores instead of one packed word.
+                p.value.store(fval(1).to_bits(), Relaxed);
+                p.stamp.store(1, Relaxed);
+            })
+        };
+        let reader = {
+            let p = Arc::clone(&p);
+            spawn(move || {
+                let gap = f32::from_bits(p.value.load(Relaxed));
+                let stamp = p.stamp.load(Relaxed);
+                if stamp != 0 {
+                    assert!(gap == fval(stamp), "[mc] torn pair: stamp {stamp} gap {gap}");
+                }
+            })
+        };
+        writer.join();
+        reader.join();
+    })
+    .expect_err("split publication must produce a torn pair");
+    assert!(failure.message.contains("torn pair"), "got: {}", failure.message);
+    let shown = failure.to_string();
+    assert!(shown.contains("interleaving trace"), "got: {shown}");
+    assert!(
+        failure.trace.iter().any(|line| line.contains(".store")),
+        "trace must record the stores that led to the tear: {:?}",
+        failure.trace
+    );
+}
+
+/// Explorer self-test: a two-thread, one-op-each scenario is small
+/// enough that the DFS must exhaust its whole schedule space.
+#[test]
+fn tiny_scenario_is_explored_to_completion() {
+    let res = check(&Config::default(), || {
+        let c = Arc::new(AtomicUsize::new(0));
+        let hs: Vec<_> = (0..2)
+            .map(|_| {
+                let c = Arc::clone(&c);
+                spawn(move || c.fetch_add(1, SeqCst))
+            })
+            .collect();
+        let sum: usize = hs.into_iter().map(|h| h.join()).sum();
+        assert_eq!(sum, 1, "fetch_add must return 0 and 1 in some order");
+        assert_eq!(c.load(SeqCst), 2);
+    });
+    let report = must_pass(res);
+    assert!(report.complete, "tiny scenario must exhaust its schedule space");
+    assert!(report.executions >= 2, "at least two distinct schedules exist");
+}

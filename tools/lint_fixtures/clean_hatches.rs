@@ -1,0 +1,51 @@
+//! Positive fixture: every escape hatch and exemption in one file —
+//! the lint must report nothing here.
+
+use crate::sync::spin::SpinWait;
+use crate::sync::{AtomicBool, Ordering};
+
+/// A justified spin loop (discipline marker inside the body).
+pub fn bounded_drain(flag: &AtomicBool) {
+    let mut sw = SpinWait::new();
+    while flag.load(Ordering::Acquire) {
+        sw.spin();
+    }
+}
+
+pub fn hatched_drain(flag: &AtomicBool) {
+    // SPIN-OK: debug-only drain, bounded by the caller's timeout.
+    while flag.load(Ordering::Acquire) {}
+}
+
+pub fn justified_unsafe(ptr: *const f32) -> f32 {
+    // SAFETY: the caller guarantees `ptr` points at a live f32 for the
+    // duration of this call.
+    unsafe { *ptr }
+}
+
+/// Reads the head element.
+///
+/// # Safety
+///
+/// `xs` must be non-empty.
+pub unsafe fn doc_justified_head(xs: &[u32]) -> u32 {
+    // SAFETY: non-empty per this function's contract.
+    unsafe { *xs.get_unchecked(0) }
+}
+
+pub fn justified_panic(xs: &[u32]) -> u32 {
+    // PANIC-OK: the caller validated `xs` is non-empty one line up.
+    let first = xs.first().unwrap();
+    *first
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn tests_may_unwrap_freely() {
+        let v = vec![1u32];
+        assert_eq!(*v.first().unwrap(), 1);
+        let x: Result<u32, ()> = Ok(3);
+        assert_eq!(x.unwrap(), 3);
+    }
+}

@@ -1,0 +1,8 @@
+//! Negative fixture: R1 must fire on a direct std atomic import in
+//! library code (protocol atomics belong behind crate::sync).
+
+use std::sync::atomic::AtomicU64;
+
+pub fn counter() -> AtomicU64 {
+    AtomicU64::new(0)
+}

@@ -1,0 +1,8 @@
+//! Negative fixture: R2 must fire on a busy-wait poll loop with no
+//! spin/yield/sleep/wait discipline and no SPIN-OK justification.
+
+use crate::sync::{AtomicBool, Ordering};
+
+pub fn drain(flag: &AtomicBool) {
+    while flag.load(Ordering::Acquire) {}
+}

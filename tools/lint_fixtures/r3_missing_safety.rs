@@ -1,0 +1,20 @@
+//! Negative fixture: R3 must fire on an unsafe block with no SAFETY
+//! comment in reach.
+
+pub fn first(ptr: *const f32) -> f32 {
+    let a = 1.0f32;
+    let b = 2.0f32;
+    let c = 3.0f32;
+    let d = 4.0f32;
+    let e = 5.0f32;
+    let f = 6.0f32;
+    let g = 7.0f32;
+    let h = 8.0f32;
+    let i = 9.0f32;
+    let j = 10.0f32;
+    let k = 11.0f32;
+    let l = 12.0f32;
+    let pad = a + b + c + d + e + f + g + h + i + j + k + l;
+    let v = unsafe { *ptr };
+    v + pad
+}

@@ -1,0 +1,11 @@
+//! Negative fixture: R4 must fire on a hand-rolled multiply-accumulate
+//! loop outside kernels/ (the dispatched dot/axpy kernels exist so the
+//! scalar fallback lives in exactly one place).
+
+pub fn dot(xs: &[f32], ys: &[f32]) -> f32 {
+    let mut acc = 0.0f32;
+    for i in 0..xs.len().min(ys.len()) {
+        acc += xs[i] * ys[i];
+    }
+    acc
+}

@@ -1,0 +1,7 @@
+//! Negative fixture: R5 must fire on an unjustified unwrap/expect in
+//! library code.
+
+pub fn head(xs: &[u32]) -> u32 {
+    let first = xs.first().unwrap();
+    *first
+}

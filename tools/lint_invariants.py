@@ -1,0 +1,277 @@
+#!/usr/bin/env python3
+"""Enforce the repo's concurrency/robustness invariants over rust/src.
+
+Usage: lint_invariants.py [--root DIR] [--self-test]
+
+Rules (see rust/DESIGN.md §12 for the rationale behind each):
+
+  R1  no `std::sync::atomic` reference outside the `sync` shim
+      (rust/src/sync/) and the CAS-loop kernels
+      (rust/src/kernels/atomic_impl.rs) — protocol atomics must route
+      through `crate::sync` so the model checker can interleave them;
+      data-plane sites use `crate::sync::raw`, which is fine.
+  R2  no unbounded spin loop: a `while` whose condition polls `.load(`
+      must spin/yield/sleep/wait, or break/return, inside its body
+      (escape hatch: `// SPIN-OK: <why>` on or above the loop).
+  R3  every `unsafe` is justified: a `// SAFETY:` comment (or a
+      `/// # Safety` doc section) in the contiguous comment block above
+      it or within the 12 preceding lines.
+  R4  no raw dot/axpy multiply-accumulate loop outside rust/src/kernels/
+      — scalar fallbacks belong next to the SIMD dispatch they shadow.
+  R5  no `.unwrap()` / `.expect(` in library code (tests, benches and
+      the `main.rs` binary are exempt) — recover or return `Result`
+      (escape hatch: `// PANIC-OK: <why>` on or above the call).
+
+Lines that are comments are never matched; `#[cfg(test)]` items are
+skipped by brace matching (block comments `/* */` are not tracked —
+the crate uses line comments only).
+
+`--self-test` runs every rule against the negative fixtures in
+tools/lint_fixtures/ and fails unless each fixture trips exactly the
+rule its filename names (and the `clean_` fixture trips none).
+
+Exit status: 0 clean, 1 findings (or self-test failure), 2 bad input.
+"""
+
+import argparse
+import re
+import sys
+from pathlib import Path
+
+ATOMIC_ALLOW = ("rust/src/sync/", "rust/src/kernels/atomic_impl.rs")
+KERNEL_DIR = "rust/src/kernels/"
+R5_EXEMPT = ("rust/src/main.rs",)
+
+SPIN_MARKERS = re.compile(r"\b(spin|yield|wait|sleep|park|break|return)\b")
+RAW_MAC_PATTERNS = (
+    re.compile(r"\+=\s*\w+\[\w+\]\s*\*\s*\w+\[\w+\]"),
+    re.compile(r"\[\w+\]\s*\+=\s*\w+\s*\*\s*\w+\[\w+\]"),
+)
+UNWRAP = re.compile(r"\.unwrap\(\)")
+EXPECT = re.compile(r"\.expect\(")
+UNSAFE = re.compile(r"\bunsafe\b")
+WHILE_LOAD = re.compile(r"^\s*(?:\}\s*)?while\b.*\.load\(")
+
+
+def is_comment(line):
+    return line.lstrip().startswith(("//", "//!", "///"))
+
+
+def is_attr(line):
+    return line.lstrip().startswith("#[") or line.lstrip().startswith("#![")
+
+
+def strip_trailing_comment(line):
+    """Drop a trailing line comment.  Only `//` preceded by whitespace
+    counts, so `https://` inside a string survives."""
+    idx = line.find(" //")
+    if idx >= 0:
+        return line[:idx]
+    if line.lstrip().startswith("//"):
+        return ""
+    return line
+
+
+def code_of(line):
+    """The matchable code portion of a raw source line."""
+    if is_comment(line):
+        return ""
+    return strip_trailing_comment(line)
+
+
+def test_region_lines(lines):
+    """0-based indices of lines inside `#[cfg(test)]`-gated items."""
+    skip = set()
+    i = 0
+    n = len(lines)
+    while i < n:
+        if "#[cfg(test)]" in lines[i] and not is_comment(lines[i]):
+            depth = 0
+            j = i
+            opened = False
+            while j < n:
+                skip.add(j)
+                code = code_of(lines[j])
+                depth += code.count("{") - code.count("}")
+                if code.count("{"):
+                    opened = True
+                if opened and depth <= 0:
+                    break
+                j += 1
+            i = j + 1
+        else:
+            i += 1
+    return skip
+
+
+def comment_block_above(lines, i):
+    """The contiguous run of comment/attribute/blank lines above line i."""
+    block = []
+    j = i - 1
+    while j >= 0 and (is_comment(lines[j]) or is_attr(lines[j]) or not lines[j].strip()):
+        block.append(lines[j])
+        j -= 1
+    return block
+
+
+def has_hatch(lines, i, token):
+    """`token` on line i (raw, so trailing comments count) or anywhere
+    in the contiguous comment block above it."""
+    if token in lines[i]:
+        return True
+    return any(token in l for l in comment_block_above(lines, i))
+
+
+def while_body(lines, i):
+    """Text of the while-loop body starting at line i (brace-matched);
+    falls back to the next 30 lines when no opening brace is found."""
+    depth = 0
+    opened = False
+    body = []
+    j = i
+    while j < len(lines):
+        code = code_of(lines[j])
+        if opened:
+            body.append(code)
+        depth += code.count("{") - code.count("}")
+        if not opened and "{" in code:
+            opened = True
+            body.append(code[code.index("{"):])
+        if opened and depth <= 0:
+            return "\n".join(body)
+        j += 1
+        if j - i > 400:
+            break
+    if not opened:
+        return "\n".join(code_of(l) for l in lines[i:i + 30])
+    return "\n".join(body)
+
+
+def check_file(path, rel, lines=None):
+    """All findings for one file, as (rule, 1-based line, message)."""
+    if lines is None:
+        try:
+            lines = path.read_text().splitlines()
+        except (OSError, UnicodeDecodeError) as e:
+            sys.exit(f"lint_invariants: cannot read {path}: {e}")
+    findings = []
+    in_tests = test_region_lines(lines)
+    allow_atomics = any(rel.startswith(p) or rel == p for p in ATOMIC_ALLOW)
+    in_kernels = rel.startswith(KERNEL_DIR)
+    r5_exempt = rel in R5_EXEMPT
+
+    for i, raw in enumerate(lines):
+        if i in in_tests:
+            continue
+        code = code_of(raw)
+        if not code.strip():
+            continue
+
+        if not allow_atomics and "std::sync::atomic" in code:
+            findings.append((
+                "R1", i + 1,
+                "std::sync::atomic outside the sync shim — route protocol "
+                "atomics through crate::sync (data plane: crate::sync::raw)",
+            ))
+
+        if WHILE_LOAD.search(code) and not has_hatch(lines, i, "SPIN-OK"):
+            body = while_body(lines, i)
+            if not SPIN_MARKERS.search(body):
+                findings.append((
+                    "R2", i + 1,
+                    "unbounded spin loop: poll loops must spin/yield/sleep/"
+                    "wait or break (sync::spin::SpinWait), or carry "
+                    "// SPIN-OK: <why>",
+                ))
+
+        if UNSAFE.search(code):
+            window = comment_block_above(lines, i) + lines[max(0, i - 12):i]
+            justified = ("SAFETY:" in raw or "# Safety" in raw
+                         or any("SAFETY:" in l or "# Safety" in l for l in window))
+            if not justified:
+                findings.append((
+                    "R3", i + 1,
+                    "unsafe without a // SAFETY: comment (or /// # Safety "
+                    "doc) justifying it",
+                ))
+
+        if not in_kernels and any(p.search(code) for p in RAW_MAC_PATTERNS):
+            findings.append((
+                "R4", i + 1,
+                "raw multiply-accumulate loop outside kernels/ — call the "
+                "dispatched kernels (dot/axpy/sq_norm) instead",
+            ))
+
+        if not r5_exempt and (UNWRAP.search(code) or EXPECT.search(code)):
+            if not has_hatch(lines, i, "PANIC-OK"):
+                findings.append((
+                    "R5", i + 1,
+                    "unwrap()/expect() in library code — recover, return "
+                    "Result, or justify with // PANIC-OK: <why>",
+                ))
+
+    return findings
+
+
+def lint_repo(root):
+    src = root / "rust" / "src"
+    if not src.is_dir():
+        sys.exit(f"lint_invariants: no rust/src under {root}")
+    total = 0
+    for path in sorted(src.rglob("*.rs")):
+        rel = path.relative_to(root).as_posix()
+        for rule, line, msg in check_file(path, rel):
+            total += 1
+            print(f"{rel}:{line}: {rule}: {msg}")
+    if total:
+        print(f"\nFAIL: {total} invariant violation(s)")
+        return 1
+    print("OK: rust/src holds all lint invariants (R1-R5)")
+    return 0
+
+
+def self_test(root):
+    fixtures = root / "tools" / "lint_fixtures"
+    files = sorted(fixtures.glob("*.rs"))
+    if not files:
+        sys.exit(f"lint_invariants: no fixtures under {fixtures}")
+    failed = 0
+    for path in files:
+        # fixture files are linted as if they lived in library code
+        rel = "rust/src/" + path.name
+        found = {rule for rule, _, _ in check_file(path, rel)}
+        name = path.stem
+        expect = {name.split("_")[0].upper()} if name.startswith("r") else set()
+        status = "ok"
+        if found != expect:
+            failed += 1
+            status = f"FAIL (expected {sorted(expect)}, got {sorted(found)})"
+        print(f"self-test {path.name}: fires {sorted(found)} ... {status}")
+    if failed:
+        print(f"\nFAIL: {failed} fixture(s) did not trip their rule")
+        return 1
+    print(f"\nOK: all {len(files)} fixtures behave ({len(files) - 1} negative + clean)")
+    return 0
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument(
+        "--root",
+        type=Path,
+        default=Path(__file__).resolve().parent.parent,
+        help="repository root (default: the parent of tools/)",
+    )
+    ap.add_argument(
+        "--self-test",
+        action="store_true",
+        help="verify every rule fires on its negative fixture",
+    )
+    args = ap.parse_args()
+    if args.self_test:
+        sys.exit(self_test(args.root))
+    sys.exit(lint_repo(args.root))
+
+
+if __name__ == "__main__":
+    main()
