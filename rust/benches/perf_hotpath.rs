@@ -6,7 +6,7 @@
 //! native loop.  Before/after numbers from this harness are recorded in
 //! EXPERIMENTS.md §Perf.
 
-use hthc::bench_support::{BenchJson, ServeRecord};
+use hthc::bench_support::{BenchJson, ConvergenceRecord, ServeRecord};
 use hthc::coordinator::{selection, SharedVector};
 use hthc::data::{ColumnOps, DenseMatrix, QuantizedMatrix, SparseMatrix};
 use hthc::kernels::{self, Backend, QGROUP};
@@ -313,6 +313,78 @@ fn bench_serve_axis(json: &mut BenchJson) {
     }
 }
 
+/// Convergence-speed benchmark axis (ISSUE 10): epochs (cluster:
+/// rounds) to a fixed relative duality-gap certificate per engine, on
+/// the same seeded tiny Lasso problem.  Epoch counts are seed-
+/// deterministic properties of the algorithm — unlike wall seconds —
+/// so `tools/bench_compare.py` gates on them across snapshots.
+fn bench_convergence_axis(json: &mut BenchJson) {
+    use hthc::bench_support::{bench_cfg, bench_dataset, bench_model, obj0, run_solver};
+    use hthc::cluster::{run_cluster, ClusterConfig};
+    use hthc::data::{DatasetKind, Family};
+
+    let g = bench_dataset(DatasetKind::Tiny, Family::Regression, 4242);
+    let target = 1e-3 * obj0(bench_model("lasso", g.n()).as_ref(), &g);
+    let mut t = Table::new(
+        "convergence axis (tiny lasso, gap <= 1e-3 * obj0)",
+        &["engine", "epochs to target", "epochs run", "final gap"],
+    );
+    let mut push = |json: &mut BenchJson, engine: &str, rec: ConvergenceRecord| {
+        t.row(vec![
+            engine.to_string(),
+            rec.epochs_to_target.map_or("-".into(), |e| e.to_string()),
+            rec.epochs_run.to_string(),
+            format!("{:.3e}", rec.final_gap),
+        ]);
+        json.add_convergence(rec);
+    };
+
+    for engine in ["ST", "A+B"] {
+        let mut m = bench_model("lasso", g.n());
+        let mut cfg = bench_cfg(target, 60.0);
+        cfg.eval_every = 1;
+        cfg.max_epochs = 500;
+        let r = run_solver(engine, m.as_mut(), &g, &cfg);
+        push(
+            json,
+            engine,
+            ConvergenceRecord {
+                engine: engine.to_string(),
+                dataset: "tiny-lasso".into(),
+                gap_target: target,
+                epochs_to_target: r.trace.epoch_to_gap(target).map(|e| e as u64),
+                final_gap: r.final_gap().unwrap_or(f64::NAN),
+                epochs_run: r.epochs as u64,
+            },
+        );
+    }
+    for k in [2usize, 4] {
+        let engine = format!("cluster-k{k}");
+        let cfg = ClusterConfig {
+            nodes: k,
+            gap_tol: target,
+            max_rounds: 500,
+            ..Default::default()
+        };
+        match run_cluster(&g, &|| bench_model("lasso", g.n()), &cfg) {
+            Ok(rep) => push(
+                json,
+                &engine,
+                ConvergenceRecord {
+                    engine: engine.clone(),
+                    dataset: "tiny-lasso".into(),
+                    gap_target: target,
+                    epochs_to_target: rep.fit.trace.epoch_to_gap(target).map(|e| e as u64),
+                    final_gap: rep.fit.final_gap().unwrap_or(f64::NAN),
+                    epochs_run: rep.fit.epochs as u64,
+                },
+            ),
+            Err(e) => json.note(&format!("convergence axis: {engine} skipped: {e}")),
+        }
+    }
+    t.print();
+}
+
 /// Serial-vs-scheduled sweep under a fixed wall-clock budget: a
 /// single-thread per-column dot sweep against the shard-pinned
 /// [`TileScheduler`] driving a [`WorkerPool`] with blocked tile dots —
@@ -442,6 +514,8 @@ fn main() {
     }
     // ---- serving layer: latency axis ------------------------------------
     bench_serve_axis(&mut json);
+    // ---- solver layer: convergence-speed axis ----------------------------
+    bench_convergence_axis(&mut json);
     match json.save() {
         Ok(path) => println!("bench JSON -> {}\n", path.display()),
         Err(e) => println!("(bench JSON not written: {e})\n"),

@@ -143,6 +143,23 @@ pub struct ServeRecord {
     pub corpus_peak: u64,
 }
 
+/// One engine's epochs-to-certificate measurement: the convergence-
+/// speed benchmark axis (ISSUE 10).  Epoch counts — not wall seconds —
+/// are compared across snapshots on purpose: they are a property of
+/// the algorithm and the seed, not of the runner hardware, so
+/// `tools/bench_compare.py` can gate on them portably.
+pub struct ConvergenceRecord {
+    pub engine: String,
+    pub dataset: String,
+    /// Absolute duality-gap target the epochs count down to.
+    pub gap_target: f64,
+    /// First evaluated epoch (cluster: round) at gap <= target, if
+    /// reached.
+    pub epochs_to_target: Option<u64>,
+    pub final_gap: f64,
+    pub epochs_run: u64,
+}
+
 /// Machine-readable bench output: per-kernel scalar-vs-dispatched
 /// throughput plus free-form notes (e.g. "host lacks AVX2").  Written
 /// as JSON with a hand-rolled renderer — the crate is dependency-free.
@@ -151,6 +168,7 @@ pub struct BenchJson {
     backend: String,
     records: Vec<KernelRecord>,
     serve: Option<ServeRecord>,
+    convergence: Vec<ConvergenceRecord>,
     notes: Vec<String>,
 }
 
@@ -178,6 +196,16 @@ fn json_num(x: f64) -> String {
     }
 }
 
+/// Scientific spelling for quantities spanning many decades (duality
+/// gaps) — still a valid JSON number.
+fn json_num_e(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x:e}")
+    } else {
+        "null".to_string()
+    }
+}
+
 impl BenchJson {
     pub fn new(bench: &str) -> Self {
         BenchJson {
@@ -185,6 +213,7 @@ impl BenchJson {
             backend: crate::kernels::backend().name().to_string(),
             records: Vec::new(),
             serve: None,
+            convergence: Vec::new(),
             notes: Vec::new(),
         }
     }
@@ -197,6 +226,15 @@ impl BenchJson {
 
     pub fn serve(&self) -> Option<&ServeRecord> {
         self.serve.as_ref()
+    }
+
+    /// Record one engine's epochs-to-certificate measurement.
+    pub fn add_convergence(&mut self, rec: ConvergenceRecord) {
+        self.convergence.push(rec);
+    }
+
+    pub fn convergence(&self) -> &[ConvergenceRecord] {
+        &self.convergence
     }
 
     /// Record one kernel's scalar-vs-dispatched timing.
@@ -266,6 +304,28 @@ impl BenchJson {
                 s.corpus_evicted,
                 s.corpus_peak,
             ));
+        }
+        if !self.convergence.is_empty() {
+            out.push_str("  \"convergence\": [\n");
+            for (i, r) in self.convergence.iter().enumerate() {
+                let epochs = match r.epochs_to_target {
+                    Some(e) => e.to_string(),
+                    None => "null".to_string(),
+                };
+                out.push_str(&format!(
+                    "    {{\"engine\": \"{}\", \"dataset\": \"{}\", \
+                     \"gap_target\": {}, \"epochs_to_target\": {}, \
+                     \"final_gap\": {}, \"epochs_run\": {}}}{}\n",
+                    json_escape(&r.engine),
+                    json_escape(&r.dataset),
+                    json_num_e(r.gap_target),
+                    epochs,
+                    json_num_e(r.final_gap),
+                    r.epochs_run,
+                    if i + 1 < self.convergence.len() { "," } else { "" },
+                ));
+            }
+            out.push_str("  ],\n");
         }
         out.push_str("  \"notes\": [");
         for (i, n) in self.notes.iter().enumerate() {
@@ -338,6 +398,31 @@ mod tests {
             s.contains("\"ingest_dropped\": 7, \"corpus_evicted\": 12, \"corpus_peak\": 96"),
             "{s}"
         );
+        assert_eq!(s.matches('{').count(), s.matches('}').count());
+        assert_eq!(s.matches('[').count(), s.matches(']').count());
+
+        j.add_convergence(ConvergenceRecord {
+            engine: "st".into(),
+            dataset: "tiny-lasso".into(),
+            gap_target: 1.5e-3,
+            epochs_to_target: Some(12),
+            final_gap: 4.2e-4,
+            epochs_run: 12,
+        });
+        j.add_convergence(ConvergenceRecord {
+            engine: "cluster-k4".into(),
+            dataset: "tiny-lasso".into(),
+            gap_target: 1.5e-3,
+            epochs_to_target: None,
+            final_gap: f64::NAN,
+            epochs_run: 500,
+        });
+        let s = j.render();
+        assert!(s.contains("\"convergence\": ["), "{s}");
+        assert!(s.contains("\"epochs_to_target\": 12"), "{s}");
+        assert!(s.contains("\"epochs_to_target\": null"), "{s}");
+        assert!(s.contains("\"gap_target\": 1.5e-3"), "{s}");
+        assert!(s.contains("\"final_gap\": null"), "{s}");
         assert_eq!(s.matches('{').count(), s.matches('}').count());
         assert_eq!(s.matches('[').count(), s.matches(']').count());
     }

@@ -1,0 +1,387 @@
+//! The cluster wire protocol and the coordinator's (leader's) state.
+//!
+//! # Protocol
+//!
+//! Training proceeds in **strictly sequential rounds** (the CoCoA
+//! outer iteration).  The leader unicasts `Round { term, round, sigma,
+//! v, shards }` to every node it believes live; the per-recipient
+//! `shards` payload carries the *authoritative* dual variables for the
+//! shards that node currently owns (empty for idle nodes — the Round
+//! then just serves as a heartbeat).  A worker replaces its local
+//! state with the payload, runs `local_passes` sigma-scaled coordinate
+//! descent sweeps over its shard views starting from the broadcast
+//! `v`, and replies `Delta { term, round, shards }` with the updated
+//! duals.  The leader folds each Delta into its cache and the global
+//! `v` (one `axpy` per moved coordinate), and only when **every**
+//! waited-on owner has reported does it evaluate (re-anchor
+//! `v = D alpha`, exact duality gap over the full dataset) and start
+//! the next round.  Because the leader never starts round `r+1` before
+//! folding all of round `r`, the invariant *broadcast `v` is exactly
+//! `D` times the broadcast duals* holds on every round — every
+//! reachable state is a valid primal-dual pair, so the certificate is
+//! always sound no matter which failures occurred.
+//!
+//! `sigma` is the number of shard-owning nodes: scaling the curvature
+//! term by `sigma` makes the "adding" aggregation safe (Ioannou et
+//! al.), and degenerates to exact sequential CD at one owner.
+//!
+//! # Failure handling
+//!
+//! *Worker death*: if a round stalls past `worker_timeout`, the leader
+//! declares the missing owners dead, hands their shards (with the
+//! cached duals — no progress is lost) to responsive nodes, and starts
+//! a fresh round.  Late Deltas for the abandoned round are ignored;
+//! the next Round payload overwrites any diverged worker copy.
+//!
+//! *Leader death*: followers that stop hearing Rounds time out into a
+//! bully election ([`super::node`]): `Election` goes to higher ids,
+//! any of them answers `Alive`, an unanswered candidate becomes leader
+//! and broadcasts `Coordinator { term }`.  Nodes adopt the leader with
+//! the highest `(term, id)`, and reply `State` with their owned duals
+//! (plus, for deposed leaders, their whole cache).  The new leader
+//! collects States until `state_timeout`, resolves ownership (owned
+//! claims beat cached copies beat zeros), re-anchors `v = D alpha`,
+//! and resumes rounds.  Split-brain during a partition is tolerated:
+//! both sides keep certified training, and on heal the higher
+//! `(term, id)` leader wins while the other steps down and resyncs.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::{shard_cols, NodeId, Tick};
+use crate::data::{ColumnOps, Dataset};
+use crate::glm::{self, GlmModel};
+use crate::metrics::ConvergenceTrace;
+
+/// Application-layer messages (carried by [`super::net::Packet::Data`]).
+#[derive(Clone, Debug)]
+pub enum Message {
+    /// Leader -> node: start round `round`; `shards` are the duals the
+    /// recipient owns (authoritative), `v` the shared vector they are
+    /// consistent with, `sigma` the curvature scale.
+    Round { term: u64, round: u64, sigma: f32, v: Vec<f32>, shards: Vec<(usize, Vec<f32>)> },
+    /// Node -> leader: the updated duals after the local passes.
+    Delta { term: u64, round: u64, shards: Vec<(usize, Vec<f32>)> },
+    /// Leader -> all: training is over (converged or round budget hit).
+    Stop { term: u64, round: u64, gap: f64, converged: bool },
+    /// Bully election probe, sent to higher ids only.
+    Election { term: u64 },
+    /// "I outrank you and I'm alive" — demotes the probing candidate.
+    Alive { term: u64 },
+    /// New-leader announcement; doubles as a state request.
+    Coordinator { term: u64 },
+    /// Reply to `Coordinator`: `owned` are the sender's live shards,
+    /// `cached` a deposed leader's full cache (lower priority).
+    State { term: u64, owned: Vec<(usize, Vec<f32>)>, cached: Vec<(usize, Vec<f32>)> },
+}
+
+/// Post-election resync: States collected until the deadline.
+#[derive(Debug)]
+pub struct Collect {
+    pub deadline: Tick,
+    pub reported: BTreeSet<NodeId>,
+    owned: BTreeMap<usize, (NodeId, Vec<f32>)>,
+    cached: BTreeMap<usize, (NodeId, Vec<f32>)>,
+}
+
+/// Everything the current leader tracks: the dual cache (one entry per
+/// shard), the shared vector consistent with it, shard ownership,
+/// round bookkeeping, and the convergence trace whose gap column *is*
+/// the certificate.
+#[derive(Debug)]
+pub struct LeaderState {
+    pub term: u64,
+    /// Rounds completed or in flight under this leader (1-based).
+    pub round: u64,
+    /// `owners[s]` = node currently responsible for shard `s`.
+    pub owners: Vec<NodeId>,
+    /// Authoritative duals per shard; `v` is always `D` times their
+    /// concatenation (exactly at eval rounds, to fp32 drift between).
+    pub alpha: Vec<Vec<f32>>,
+    pub v: Vec<f32>,
+    /// Owners the current round still waits on.
+    pub waiting: BTreeSet<NodeId>,
+    /// Nodes that answered under this leader (reassignment targets).
+    pub responsive: BTreeSet<NodeId>,
+    /// Nodes declared dead (no Rounds sent; a State/Delta revives).
+    pub dead: BTreeSet<NodeId>,
+    pub round_started: Tick,
+    pub collect: Option<Collect>,
+    pub trace: ConvergenceTrace,
+    pub gap: f64,
+    pub converged: bool,
+}
+
+impl LeaderState {
+    /// The initial coordinator: identity ownership, zero duals.
+    pub fn bootstrap(leader: NodeId, k: usize, n_cols: usize, n_rows: usize) -> Self {
+        let alpha = (0..k)
+            .map(|s| {
+                let (lo, hi) = shard_cols(n_cols, k, s);
+                vec![0.0f32; hi - lo]
+            })
+            .collect();
+        LeaderState {
+            term: 0,
+            round: 0,
+            owners: (0..k).collect(),
+            alpha,
+            v: vec![0.0f32; n_rows],
+            waiting: BTreeSet::new(),
+            responsive: (0..k).collect(),
+            dead: BTreeSet::new(),
+            round_started: 0,
+            collect: None,
+            trace: ConvergenceTrace::new(format!("cluster-leader-{leader}")),
+            gap: f64::INFINITY,
+            converged: false,
+        }
+    }
+
+    /// A freshly elected leader, waiting for States until `deadline`.
+    pub fn collecting(leader: NodeId, term: u64, k: usize, deadline: Tick) -> Self {
+        LeaderState {
+            term,
+            round: 0,
+            owners: vec![leader; k],
+            alpha: vec![Vec::new(); k],
+            v: Vec::new(),
+            waiting: BTreeSet::new(),
+            responsive: BTreeSet::from([leader]),
+            dead: BTreeSet::new(),
+            round_started: 0,
+            collect: Some(Collect {
+                deadline,
+                reported: BTreeSet::new(),
+                owned: BTreeMap::new(),
+                cached: BTreeMap::new(),
+            }),
+            trace: ConvergenceTrace::new(format!("cluster-leader-{leader}")),
+            gap: f64::INFINITY,
+            converged: false,
+        }
+    }
+
+    /// Record one node's State during collect.  Conflicting claims for
+    /// a shard (possible after split-brain) resolve to the highest
+    /// claimant id, deterministically.
+    pub fn offer(
+        &mut self,
+        src: NodeId,
+        owned: Vec<(usize, Vec<f32>)>,
+        cached: Vec<(usize, Vec<f32>)>,
+    ) {
+        let k = self.owners.len();
+        if let Some(c) = &mut self.collect {
+            c.reported.insert(src);
+            for (s, a) in owned {
+                let better = match c.owned.get(&s) {
+                    Some((id, _)) => src > *id,
+                    None => true,
+                };
+                if s < k && better {
+                    c.owned.insert(s, (src, a));
+                }
+            }
+            for (s, a) in cached {
+                let better = match c.cached.get(&s) {
+                    Some((id, _)) => src > *id,
+                    None => true,
+                };
+                if s < k && better {
+                    c.cached.insert(s, (src, a));
+                }
+            }
+        }
+        self.responsive.insert(src);
+        self.dead.remove(&src);
+    }
+
+    /// Close the collect phase: resolve shard ownership and duals
+    /// (owned claim > deposed-leader cache > zeros), rebuild the
+    /// shared vector exactly, and leave the state ready for
+    /// `start_round`.  Shards nobody reported are assigned round-robin
+    /// over the responsive nodes.
+    pub fn finish_collect(&mut self, data: &Dataset) {
+        let k = self.owners.len();
+        let n = data.n_cols();
+        let Some(collect) = self.collect.take() else {
+            return;
+        };
+        let live: Vec<NodeId> = self.responsive.iter().copied().collect();
+        let mut spill = 0usize;
+        for s in 0..k {
+            let (lo, hi) = shard_cols(n, k, s);
+            let want = hi - lo;
+            let fit = |a: &Vec<f32>| a.len() == want;
+            if let Some((id, a)) = collect.owned.get(&s).filter(|(_, a)| fit(a)) {
+                self.owners[s] = *id;
+                self.alpha[s] = a.clone();
+            } else {
+                self.owners[s] = live[spill % live.len()];
+                spill += 1;
+                self.alpha[s] = match collect.cached.get(&s).filter(|(_, a)| fit(a)) {
+                    Some((_, a)) => a.clone(),
+                    None => vec![0.0f32; want],
+                };
+            }
+        }
+        self.v = data.matvec_alpha(&self.flat_alpha());
+    }
+
+    /// The full dual vector: shards are contiguous column ranges in
+    /// shard order, so concatenation is the global layout.
+    pub fn flat_alpha(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.alpha.iter().map(Vec::len).sum());
+        for a in &self.alpha {
+            out.extend_from_slice(a);
+        }
+        out
+    }
+
+    /// Shard payloads owned by `node`, cloned from the cache.
+    pub fn shards_of(&self, node: NodeId) -> Vec<(usize, Vec<f32>)> {
+        self.owners
+            .iter()
+            .enumerate()
+            .filter(|&(_, o)| *o == node)
+            .map(|(s, _)| (s, self.alpha[s].clone()))
+            .collect()
+    }
+
+    /// Number of distinct shard-owning nodes — the curvature scale
+    /// `sigma` for the next round's local subproblems.
+    pub fn sigma(&self) -> f32 {
+        self.owners.iter().collect::<BTreeSet<_>>().len() as f32
+    }
+
+    /// Fold one node's Delta into the cache and the shared vector:
+    /// per moved coordinate, one `axpy` of the dual difference.  Only
+    /// shards the sender actually owns are accepted.
+    pub fn apply_delta(&mut self, data: &Dataset, src: NodeId, shards: Vec<(usize, Vec<f32>)>) {
+        let k = self.owners.len();
+        let n = data.n_cols();
+        let ops = data.as_ops();
+        for (s, new_alpha) in shards {
+            if s >= k || self.owners[s] != src {
+                continue;
+            }
+            let (lo, hi) = shard_cols(n, k, s);
+            if new_alpha.len() != hi - lo {
+                continue;
+            }
+            for (off, &na) in new_alpha.iter().enumerate() {
+                let ca = self.alpha[s][off];
+                let diff = na - ca;
+                if diff != 0.0 {
+                    ops.axpy(lo + off, diff, &mut self.v);
+                    self.alpha[s][off] = na;
+                }
+            }
+        }
+        self.responsive.insert(src);
+        self.dead.remove(&src);
+    }
+
+    /// Evaluate the certificate: re-anchor `v = D alpha` exactly (fp32
+    /// drift from incremental folding would otherwise floor the gap,
+    /// same as every single-node engine), refresh the model, and push
+    /// the exact duality gap on the trace.  Returns the gap.
+    pub fn eval(&mut self, data: &Dataset, model: &mut dyn GlmModel, now: Tick) -> f64 {
+        let alpha = self.flat_alpha();
+        self.v = data.matvec_alpha(&alpha);
+        model.epoch_refresh(&alpha);
+        let y = data.targets();
+        let obj = model.objective(&self.v, y, &alpha);
+        let gap = glm::total_gap(model, data.as_block_ops(), &self.v, y, &alpha);
+        // trace time column is virtual ticks: deterministic, seed-pure.
+        self.trace.push(now as f64, self.round as usize, obj, gap);
+        self.gap = gap;
+        gap
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{DatasetKind, Family};
+    use crate::glm::Lasso;
+
+    fn tiny() -> Dataset {
+        Dataset::generated(DatasetKind::Tiny, Family::Regression, 1.0, 11)
+    }
+
+    #[test]
+    fn bootstrap_partitions_all_columns() {
+        let g = tiny();
+        let ls = LeaderState::bootstrap(0, 4, g.n(), g.d());
+        assert_eq!(ls.flat_alpha().len(), g.n());
+        assert_eq!(ls.owners, vec![0, 1, 2, 3]);
+        assert_eq!(ls.sigma(), 4.0);
+    }
+
+    #[test]
+    fn apply_delta_keeps_v_consistent() {
+        let g = tiny();
+        let mut ls = LeaderState::bootstrap(0, 2, g.n(), g.d());
+        // node 1 moves two coordinates of its shard
+        let mut shard1 = ls.alpha[1].clone();
+        shard1[0] = 0.5;
+        shard1[1] = -0.25;
+        ls.apply_delta(&g, 1, vec![(1, shard1)]);
+        let exact = g.matvec_alpha(&ls.flat_alpha());
+        for (a, b) in ls.v.iter().zip(&exact) {
+            assert!((a - b).abs() < 1e-5, "incremental v diverged: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn delta_from_non_owner_is_ignored() {
+        let g = tiny();
+        let mut ls = LeaderState::bootstrap(0, 2, g.n(), g.d());
+        let forged = vec![(0usize, vec![1.0f32; ls.alpha[0].len()])];
+        ls.apply_delta(&g, 1, forged); // node 1 does not own shard 0
+        assert!(ls.alpha[0].iter().all(|&a| a == 0.0));
+        assert!(ls.v.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn collect_prefers_owned_claims_then_cache_then_zeros() {
+        let g = tiny();
+        let k = 3;
+        let mut ls = LeaderState::collecting(2, 5, k, 100);
+        let (lo0, hi0) = crate::cluster::shard_cols(g.n(), k, 0);
+        let (lo1, hi1) = crate::cluster::shard_cols(g.n(), k, 1);
+        let (lo2, hi2) = crate::cluster::shard_cols(g.n(), k, 2);
+        // node 0 owns shard 0; node 1 died but the old leader cached
+        // shard 1; nobody knows shard 2.
+        ls.offer(0, vec![(0, vec![0.5; hi0 - lo0])], Vec::new());
+        ls.offer(1, Vec::new(), vec![(1, vec![0.25; hi1 - lo1]), (0, vec![9.0; hi0 - lo0])]);
+        ls.finish_collect(&g);
+        assert_eq!(ls.owners[0], 0);
+        assert!(ls.alpha[0].iter().all(|&a| a == 0.5), "owned claim wins over cache");
+        assert!(ls.alpha[1].iter().all(|&a| a == 0.25), "cache fills dead shards");
+        assert!(ls.alpha[2].iter().all(|&a| a == 0.0), "unknown shards reset");
+        assert_eq!(ls.alpha[2].len(), hi2 - lo2);
+        // v rebuilt exactly
+        let exact = g.matvec_alpha(&ls.flat_alpha());
+        assert_eq!(ls.v, exact);
+    }
+
+    #[test]
+    fn eval_reports_the_exact_certificate() {
+        let g = tiny();
+        let mut model = Lasso::new(0.3);
+        let mut ls = LeaderState::bootstrap(0, 2, g.n(), g.d());
+        ls.round = 1;
+        let gap = ls.eval(&g, &mut model, 10);
+        // at alpha = 0 the gap equals the gap of the zero state,
+        // recomputed independently:
+        let zeros = vec![0.0f32; g.n()];
+        let v0 = vec![0.0f32; g.d()];
+        let mut fresh = Lasso::new(0.3);
+        fresh.epoch_refresh(&zeros);
+        let expect = glm::total_gap(&fresh, g.as_block_ops(), &v0, g.targets(), &zeros);
+        assert!((gap - expect).abs() < 1e-9 * expect.abs().max(1.0));
+        assert_eq!(ls.trace.points.len(), 1);
+    }
+}

@@ -1,0 +1,98 @@
+//! Multi-node sharded training with a failure-tolerant coordinator.
+//!
+//! HTHC parallelizes within one manycore socket; this layer scales the
+//! same duality-gap-certified training *across* nodes following the
+//! CoCoA-style local-subproblem scheme of Ioannou et al. ("Parallel
+//! training of linear models without compromising convergence",
+//! PAPERS.md): each node owns a contiguous column shard of `D` (a
+//! [`crate::data::DatasetView`]), runs local coordinate descent against
+//! a broadcast copy of the shared vector `v`, and ships back only its
+//! dual variables for the shard.  The coordinator aggregates the
+//! implied `v` deltas, re-anchors `v = D alpha` at eval rounds, and
+//! certifies convergence with the exact duality gap over the full
+//! dataset — the same certificate every single-node engine reports, so
+//! cluster runs are directly comparable to `hthc train`.
+//!
+//! **Simulate-first.**  The whole cluster runs in-process on one real
+//! thread, driven by a virtual-tick event scheduler ([`net::Network`])
+//! with a seeded [`net::FaultPlan`] that can drop, delay, duplicate
+//! messages, partition node sets and kill nodes at fixed ticks.  A run
+//! is a pure function of `(dataset, model, ClusterConfig)`: every
+//! failover, retransmission and election is reproducible from the
+//! seed, which makes the failure machinery testable in CI the way a
+//! real socket transport never is.  The mailbox handoff itself routes
+//! through [`crate::sync`], so the mini-loom model checker explores
+//! its interleavings too (rust/tests/model_check.rs).
+//!
+//! Layout:
+//! - [`net`] — virtual-time transport: mailboxes, fault injection, and
+//!   reliable-link semantics (retransmit + dedup) over the lossy wire.
+//! - [`node`] — the per-node state machine: local solver passes over
+//!   the owned shard views, plus the bully-election follower side.
+//! - [`coordinator`] — the wire protocol and the leader's round/
+//!   aggregation/certificate state.
+//! - [`run`] — [`run::ClusterConfig`] / [`run::ClusterReport`] facade
+//!   and the tick loop behind `hthc cluster --nodes K`.
+
+pub mod coordinator;
+pub mod net;
+pub mod node;
+pub mod run;
+
+pub use coordinator::{LeaderState, Message};
+pub use net::{DedupFilter, Envelope, FaultPlan, Mailbox, NetStats, Network, Packet, ReliableLink};
+pub use node::{Node, Role};
+pub use run::{run_cluster, ClusterConfig, ClusterReport, Timing};
+
+/// Node identifier: nodes are `0..k`, and bully elections prefer the
+/// highest live id.
+pub type NodeId = usize;
+
+/// Virtual time. One tick is one scheduler step; base message latency
+/// is one tick, fault plans add more.
+pub type Tick = u64;
+
+/// Column range `[lo, hi)` of shard `s` out of `k` near-equal
+/// contiguous shards over `n_cols` columns.  Matches
+/// [`crate::data::DatasetView::shards`] so shard `s` of the full view
+/// is exactly `data.col_range(lo, hi)`.
+pub(crate) fn shard_cols(n_cols: usize, k: usize, s: usize) -> (usize, usize) {
+    let base = n_cols / k;
+    let rem = n_cols % k;
+    let lo = s * base + s.min(rem);
+    let hi = lo + base + usize::from(s < rem);
+    (lo, hi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::shard_cols;
+
+    #[test]
+    fn shard_cols_partition_the_columns() {
+        for &(n, k) in &[(10usize, 3usize), (7, 7), (5, 1), (16, 4), (3, 2)] {
+            let mut covered = 0;
+            for s in 0..k {
+                let (lo, hi) = shard_cols(n, k, s);
+                assert_eq!(lo, covered, "shard {s} of ({n},{k}) not contiguous");
+                assert!(hi >= lo);
+                covered = hi;
+            }
+            assert_eq!(covered, n, "shards of ({n},{k}) do not cover");
+        }
+    }
+
+    #[test]
+    fn shard_cols_matches_dataset_view_shards() {
+        use crate::data::{Dataset, DatasetKind, Family};
+        let g = Dataset::generated(DatasetKind::Tiny, Family::Regression, 1.0, 7);
+        let full = g.view();
+        for k in [1usize, 2, 3, 4] {
+            let views = full.shards(k);
+            for (s, view) in views.iter().enumerate() {
+                let (lo, hi) = shard_cols(g.n(), k, s);
+                assert_eq!(view.parent_cols(), (lo..hi).collect::<Vec<_>>());
+            }
+        }
+    }
+}

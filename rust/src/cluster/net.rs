@@ -1,0 +1,508 @@
+//! Virtual-time in-process transport with fault injection.
+//!
+//! The wire is *lossy by construction*: a [`FaultPlan`] decides, from a
+//! seeded [`crate::util::Rng`], whether each unicast is dropped,
+//! duplicated or delayed, and whether a partition currently severs the
+//! pair.  On top of that raw wire, [`ReliableLink`] implements the
+//! classic reliable-channel construction — per-source sequence
+//! numbers, acks, retransmission with exponential backoff, and
+//! receiver-side dedup ([`DedupFilter`]) — so the application layer
+//! (the cluster protocol in [`super::coordinator`]) sees exactly-once
+//! delivery as long as source and destination are eventually connected.
+//!
+//! Determinism: delivery order is a pure function of (send order, fault
+//! seed).  In-flight messages live in a binary heap keyed by
+//! `(due_tick, send_counter)`, so ties break by submission order, and
+//! the only randomness is the fault plan's.  [`Mailbox`] is the one
+//! concurrency-facing piece — the simulation itself is single-threaded,
+//! but the mailbox handoff is the seam a real socket transport would
+//! replace, so it locks through [`crate::sync`] and is exercised by the
+//! model checker (rust/tests/model_check.rs).
+
+use std::collections::{BTreeSet, BinaryHeap, VecDeque};
+
+use super::coordinator::Message;
+use super::{NodeId, Tick};
+use crate::sync::Mutex;
+use crate::util::Rng;
+
+/// Retransmission backoff cap: a pending message to an unreachable
+/// node is retried forever (that is what lets a healed partition
+/// reconverge) but at most once per this many ticks, so dead peers do
+/// not flood the scheduler.
+const RTO_CAP: Tick = 128;
+
+/// A unicast in flight or in a mailbox.
+#[derive(Clone, Debug)]
+pub struct Envelope {
+    pub src: NodeId,
+    pub dst: NodeId,
+    pub packet: Packet,
+}
+
+/// Wire packets: payloads carry a per-source sequence number; acks
+/// confirm one.  Acks ride the same lossy wire (an ack loss just costs
+/// one redundant retransmission, which the receiver dedups).
+#[derive(Clone, Debug)]
+pub enum Packet {
+    Data { seq: u64, msg: Message },
+    Ack { seq: u64 },
+}
+
+/// Per-node inbound queue.  Locked through [`crate::sync`] so the
+/// push/drain handoff is model-checkable; everything else in the
+/// simulation is single-threaded.
+#[derive(Debug)]
+pub struct Mailbox {
+    queue: Mutex<VecDeque<Envelope>>,
+}
+
+impl Default for Mailbox {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Mailbox {
+    pub fn new() -> Self {
+        Mailbox { queue: Mutex::new(VecDeque::new()) }
+    }
+
+    pub fn push(&self, env: Envelope) {
+        let mut q = self.queue.lock().unwrap_or_else(|e| e.into_inner());
+        q.push_back(env);
+    }
+
+    /// Take everything queued, preserving arrival order.
+    pub fn drain(&self) -> Vec<Envelope> {
+        let mut q = self.queue.lock().unwrap_or_else(|e| e.into_inner());
+        std::mem::take(&mut *q).into()
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.lock().unwrap_or_else(|e| e.into_inner()).len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Receiver-side duplicate suppression: remembers every `(src, seq)`
+/// already delivered to the application layer.
+#[derive(Debug, Default)]
+pub struct DedupFilter {
+    seen: Vec<BTreeSet<u64>>,
+}
+
+impl DedupFilter {
+    pub fn new(n_nodes: usize) -> Self {
+        DedupFilter { seen: vec![BTreeSet::new(); n_nodes] }
+    }
+
+    /// True exactly once per `(src, seq)`; false for every replay.
+    pub fn accept(&mut self, src: NodeId, seq: u64) -> bool {
+        if src >= self.seen.len() {
+            self.seen.resize_with(src + 1, BTreeSet::new);
+        }
+        self.seen[src].insert(seq)
+    }
+}
+
+/// A scheduled interval `[from, to)` during which `island` is cut off
+/// from the rest of the cluster (messages crossing the boundary are
+/// dropped at delivery time, in either direction).
+#[derive(Clone, Debug)]
+pub struct Partition {
+    pub from: Tick,
+    pub to: Tick,
+    pub island: Vec<NodeId>,
+}
+
+/// Deterministic failure script for one run.
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    /// Probability a unicast is silently dropped.
+    pub drop_prob: f64,
+    /// Probability a unicast is delivered twice.
+    pub dup_prob: f64,
+    /// Extra delivery delay, uniform in `0..=delay_max` ticks.
+    pub delay_max: Tick,
+    /// `(tick, node)` pairs: the node is dead from that tick on.
+    pub kills: Vec<(Tick, NodeId)>,
+    /// Scheduled partitions.
+    pub partitions: Vec<Partition>,
+}
+
+impl FaultPlan {
+    /// A lossy wire with no scripted kills or partitions.
+    pub fn lossy(drop_prob: f64, dup_prob: f64, delay_max: Tick) -> Self {
+        FaultPlan { drop_prob, dup_prob, delay_max, ..Default::default() }
+    }
+
+    /// Schedule `node` to die at `tick`.
+    pub fn kill(mut self, tick: Tick, node: NodeId) -> Self {
+        self.kills.push((tick, node));
+        self
+    }
+
+    /// Schedule `island` to be cut off during `[from, to)`.
+    pub fn partition(mut self, from: Tick, to: Tick, island: Vec<NodeId>) -> Self {
+        self.partitions.push(Partition { from, to, island });
+        self
+    }
+
+    /// Is the `(a, b)` pair severed by an active partition at `now`?
+    fn severed(&self, now: Tick, a: NodeId, b: NodeId) -> bool {
+        self.partitions.iter().any(|p| {
+            now >= p.from
+                && now < p.to
+                && (p.island.contains(&a) != p.island.contains(&b))
+        })
+    }
+}
+
+/// Wire-level counters for the whole run.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NetStats {
+    pub sent: u64,
+    pub delivered: u64,
+    pub dropped: u64,
+    pub duplicated: u64,
+    /// Aggregated from the per-node links by [`super::run`].
+    pub retransmits: u64,
+    /// Aggregated from the per-node links by [`super::run`].
+    pub dedup_dropped: u64,
+}
+
+/// An envelope scheduled for delivery.  Ordered by `(due, order)`
+/// *reversed*, so the std max-heap pops the earliest delivery first.
+#[derive(Debug)]
+struct Flight {
+    due: Tick,
+    order: u64,
+    env: Envelope,
+}
+
+impl PartialEq for Flight {
+    fn eq(&self, other: &Self) -> bool {
+        (self.due, self.order) == (other.due, other.order)
+    }
+}
+impl Eq for Flight {}
+impl PartialOrd for Flight {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Flight {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        (other.due, other.order).cmp(&(self.due, self.order))
+    }
+}
+
+/// The virtual-time event scheduler: mailboxes + in-flight heap +
+/// fault plan + liveness.
+pub struct Network {
+    now: Tick,
+    rng: Rng,
+    fault: FaultPlan,
+    mailboxes: Vec<Mailbox>,
+    in_flight: BinaryHeap<Flight>,
+    next_order: u64,
+    alive: Vec<bool>,
+    pub stats: NetStats,
+}
+
+impl Network {
+    pub fn new(n_nodes: usize, fault: FaultPlan, seed: u64) -> Self {
+        Network {
+            now: 0,
+            rng: Rng::new(seed).fork(0xC1A5),
+            fault,
+            mailboxes: (0..n_nodes).map(|_| Mailbox::new()).collect(),
+            in_flight: BinaryHeap::new(),
+            next_order: 0,
+            alive: vec![true; n_nodes],
+            stats: NetStats::default(),
+        }
+    }
+
+    pub fn now(&self) -> Tick {
+        self.now
+    }
+
+    pub fn is_alive(&self, id: NodeId) -> bool {
+        self.alive.get(id).copied().unwrap_or(false)
+    }
+
+    /// Submit a unicast.  Self-sends are delivered immediately and
+    /// bypass the fault plan (a node never loses messages to itself);
+    /// everything else takes >= 1 tick and is subject to drop /
+    /// duplicate / delay decisions made here, plus the partition check
+    /// at delivery time.
+    pub fn send(&mut self, env: Envelope) {
+        if env.src == env.dst {
+            self.mailboxes[env.dst].push(env);
+            return;
+        }
+        self.stats.sent += 1;
+        if self.fault.drop_prob > 0.0 && self.rng.f64() < self.fault.drop_prob {
+            self.stats.dropped += 1;
+            return;
+        }
+        let copies = if self.fault.dup_prob > 0.0 && self.rng.f64() < self.fault.dup_prob {
+            self.stats.duplicated += 1;
+            2
+        } else {
+            1
+        };
+        for _ in 0..copies {
+            let extra = if self.fault.delay_max > 0 {
+                self.rng.below(self.fault.delay_max as usize + 1) as Tick
+            } else {
+                0
+            };
+            let due = self.now + 1 + extra;
+            let order = self.next_order;
+            self.next_order += 1;
+            self.in_flight.push(Flight { due, order, env: env.clone() });
+        }
+    }
+
+    /// Advance one tick: apply scripted kills, then move every due
+    /// in-flight envelope into its destination mailbox (or drop it if
+    /// the destination is dead or the pair is currently partitioned).
+    pub fn step(&mut self) {
+        self.now += 1;
+        for &(tick, node) in &self.fault.kills {
+            if tick == self.now && node < self.alive.len() {
+                self.alive[node] = false;
+            }
+        }
+        while let Some(top) = self.in_flight.peek() {
+            if top.due > self.now {
+                break;
+            }
+            // PANIC-OK: peek() just proved the heap is non-empty.
+            let flight = self.in_flight.pop().expect("heap non-empty after peek");
+            let env = flight.env;
+            if !self.is_alive(env.dst) || self.fault.severed(self.now, env.src, env.dst) {
+                self.stats.dropped += 1;
+                continue;
+            }
+            self.stats.delivered += 1;
+            self.mailboxes[env.dst].push(env);
+        }
+    }
+
+    /// Drain node `id`'s mailbox.
+    pub fn drain(&mut self, id: NodeId) -> Vec<Envelope> {
+        self.mailboxes[id].drain()
+    }
+}
+
+/// One unacked payload awaiting retransmission.
+#[derive(Clone, Debug)]
+struct Pending {
+    seq: u64,
+    dst: NodeId,
+    msg: Message,
+    next_at: Tick,
+    interval: Tick,
+}
+
+/// Per-node reliable-channel endpoint: sequences outbound payloads,
+/// retransmits until acked (with exponential backoff capped at
+/// [`RTO_CAP`]), acks and dedups inbound ones.
+pub struct ReliableLink {
+    id: NodeId,
+    rto: Tick,
+    next_seq: u64,
+    pending: Vec<Pending>,
+    dedup: DedupFilter,
+    pub retransmits: u64,
+    pub dedup_dropped: u64,
+}
+
+impl ReliableLink {
+    pub fn new(id: NodeId, n_nodes: usize, rto: Tick) -> Self {
+        ReliableLink {
+            id,
+            rto: rto.max(1),
+            next_seq: 0,
+            pending: Vec::new(),
+            dedup: DedupFilter::new(n_nodes),
+            retransmits: 0,
+            dedup_dropped: 0,
+        }
+    }
+
+    /// Send `msg` reliably: it will be retransmitted until acked.
+    pub fn send(&mut self, net: &mut Network, dst: NodeId, msg: Message) {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.pending.push(Pending {
+            seq,
+            dst,
+            msg: msg.clone(),
+            next_at: net.now() + self.rto,
+            interval: self.rto,
+        });
+        net.send(Envelope { src: self.id, dst, packet: Packet::Data { seq, msg } });
+    }
+
+    /// Drain the mailbox: consume acks, ack + dedup payloads, and
+    /// return the application messages in arrival order (each exactly
+    /// once).
+    pub fn poll(&mut self, net: &mut Network) -> Vec<(NodeId, Message)> {
+        let mut out = Vec::new();
+        for env in net.drain(self.id) {
+            match env.packet {
+                Packet::Ack { seq } => {
+                    self.pending.retain(|p| !(p.dst == env.src && p.seq == seq));
+                }
+                Packet::Data { seq, msg } => {
+                    net.send(Envelope {
+                        src: self.id,
+                        dst: env.src,
+                        packet: Packet::Ack { seq },
+                    });
+                    if self.dedup.accept(env.src, seq) {
+                        out.push((env.src, msg));
+                    } else {
+                        self.dedup_dropped += 1;
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Retransmit every overdue pending payload.
+    pub fn flush(&mut self, net: &mut Network) {
+        let now = net.now();
+        let mut resend = Vec::new();
+        for p in &mut self.pending {
+            if now >= p.next_at {
+                p.interval = (p.interval * 2).min(RTO_CAP);
+                p.next_at = now + p.interval;
+                resend.push((p.dst, p.seq, p.msg.clone()));
+            }
+        }
+        for (dst, seq, msg) in resend {
+            self.retransmits += 1;
+            net.send(Envelope { src: self.id, dst, packet: Packet::Data { seq, msg } });
+        }
+    }
+
+    /// Unacked payloads still awaiting an ack (test observability).
+    pub fn pending_len(&self) -> usize {
+        self.pending.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn msg(term: u64) -> Message {
+        Message::Alive { term }
+    }
+
+    fn term_of(m: &Message) -> u64 {
+        match m {
+            Message::Alive { term } => *term,
+            _ => u64::MAX,
+        }
+    }
+
+    #[test]
+    fn clean_wire_delivers_in_order() {
+        let mut net = Network::new(2, FaultPlan::default(), 1);
+        let mut a = ReliableLink::new(0, 2, 4);
+        let mut b = ReliableLink::new(1, 2, 4);
+        for t in 0..5 {
+            a.send(&mut net, 1, msg(t));
+        }
+        let mut got = Vec::new();
+        for _ in 0..10 {
+            net.step();
+            got.extend(b.poll(&mut net).into_iter().map(|(_, m)| term_of(&m)));
+            a.flush(&mut net);
+            let _ = a.poll(&mut net); // consume acks
+        }
+        assert_eq!(got, vec![0, 1, 2, 3, 4]);
+        assert_eq!(a.pending_len(), 0, "all payloads acked");
+    }
+
+    #[test]
+    fn lossy_wire_still_delivers_exactly_once() {
+        // Heavy loss + duplication + jitter: the reliable link must get
+        // every message through exactly once, in some order.
+        let mut net = Network::new(2, FaultPlan::lossy(0.4, 0.3, 3), 99);
+        let mut a = ReliableLink::new(0, 2, 4);
+        let mut b = ReliableLink::new(1, 2, 4);
+        let n_msgs = 20u64;
+        for t in 0..n_msgs {
+            a.send(&mut net, 1, msg(t));
+        }
+        let mut got = Vec::new();
+        for _ in 0..2000 {
+            net.step();
+            got.extend(b.poll(&mut net).into_iter().map(|(_, m)| term_of(&m)));
+            a.flush(&mut net);
+            let _ = a.poll(&mut net);
+            if got.len() == n_msgs as usize && a.pending_len() == 0 {
+                break;
+            }
+        }
+        let mut sorted = got.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted, (0..n_msgs).collect::<Vec<_>>(), "got {got:?}");
+        assert!(net.stats.dropped > 0, "fault plan never bit");
+        assert!(a.retransmits > 0, "loss must force retransmission");
+    }
+
+    #[test]
+    fn partition_cuts_and_heals() {
+        let plan = FaultPlan::default().partition(2, 50, vec![1]);
+        let mut net = Network::new(2, plan, 7);
+        let mut a = ReliableLink::new(0, 2, 4);
+        let mut b = ReliableLink::new(1, 2, 4);
+        net.step(); // now = 1: send before the partition opens at 2
+        a.send(&mut net, 1, msg(42));
+        let mut seen_at = None;
+        for _ in 0..300 {
+            net.step();
+            if let Some((_, m)) = b.poll(&mut net).into_iter().next() {
+                seen_at = Some((net.now(), term_of(&m)));
+                break;
+            }
+            a.flush(&mut net);
+            let _ = a.poll(&mut net);
+        }
+        let (tick, t) = seen_at.unwrap_or((0, 0));
+        assert_eq!(t, 42);
+        assert!(tick >= 50, "delivery at {tick} should wait for the heal");
+    }
+
+    #[test]
+    fn kills_silence_a_node() {
+        let plan = FaultPlan::default().kill(3, 1);
+        let mut net = Network::new(2, plan, 7);
+        let mut a = ReliableLink::new(0, 2, 4);
+        for _ in 0..10 {
+            net.step();
+        }
+        assert!(!net.is_alive(1));
+        a.send(&mut net, 1, msg(1));
+        for _ in 0..20 {
+            net.step();
+            a.flush(&mut net);
+        }
+        assert!(a.pending_len() > 0, "no ack can ever come back");
+        assert!(net.stats.dropped > 0);
+    }
+}

@@ -1,0 +1,661 @@
+//! The per-node state machine: worker, candidate, or leader.
+//!
+//! Every node runs the same code; the coordinator is just the node
+//! currently in [`Role::Leader`].  Workers own shards as
+//! [`crate::data::DatasetView`]s over contiguous column ranges and run
+//! local sigma-scaled coordinate-descent passes that mirror
+//! [`crate::glm::solve_reference`] exactly — at one shard-owning node
+//! the cluster degenerates to the exact sequential oracle, which is
+//! what the k=1 parity test in rust/tests/cluster_sim.rs pins down.
+//!
+//! Failure detection is timeout-based over virtual time: a follower
+//! that stops hearing leader traffic for `election_timeout` (plus a
+//! deterministic per-id stagger) starts a bully election; a leader
+//! that waits longer than `worker_timeout` on a round declares the
+//! silent owners dead and reassigns their shards.  See
+//! [`super::coordinator`] for the protocol-level picture.
+
+use std::collections::BTreeMap;
+
+use super::coordinator::{LeaderState, Message};
+use super::net::{Network, ReliableLink};
+use super::run::{ClusterConfig, Timing};
+use super::{shard_cols, NodeId, Tick};
+use crate::data::{ColumnOps, Dataset};
+use crate::glm::{self, GlmModel, ModelKind};
+
+/// Bully-election role.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Role {
+    Follower,
+    /// Sent `Election` to the higher ids; waiting for an `Alive`.
+    Candidate { since: Tick },
+    Leader,
+}
+
+/// One simulated node.
+pub struct Node<'a> {
+    pub id: NodeId,
+    k: usize,
+    data: &'a Dataset,
+    model: Box<dyn GlmModel>,
+    pub link: ReliableLink,
+    timing: Timing,
+    local_passes: usize,
+    gap_tol: f64,
+    max_rounds: u64,
+    eval_every: u64,
+
+    pub role: Role,
+    pub term: u64,
+    /// Highest-authority leader this node currently follows.
+    pub leader: NodeId,
+    last_heard: Tick,
+    /// Highest `(term, round)` already processed (replay guard).
+    last_round: (u64, u64),
+    /// Leader-side state; `Some` iff `role == Leader`.
+    pub lead: Option<LeaderState>,
+    /// Owned shards: shard index -> local duals (worker side).
+    shards: BTreeMap<usize, Vec<f32>>,
+    /// A deposed leader's cache, offered at the next collect.
+    cached: BTreeMap<usize, Vec<f32>>,
+
+    pub finished: bool,
+    pub converged: bool,
+    pub final_gap: f64,
+    pub elections: u64,
+    pub failovers: u64,
+}
+
+impl<'a> Node<'a> {
+    pub fn new(
+        id: NodeId,
+        data: &'a Dataset,
+        model: Box<dyn GlmModel>,
+        cfg: &ClusterConfig,
+    ) -> Self {
+        Node {
+            id,
+            k: cfg.nodes,
+            data,
+            model,
+            link: ReliableLink::new(id, cfg.nodes, cfg.timing.rto),
+            timing: cfg.timing,
+            local_passes: cfg.local_passes.max(1),
+            gap_tol: cfg.gap_tol,
+            max_rounds: cfg.max_rounds.max(1),
+            eval_every: cfg.eval_every.max(1),
+            role: Role::Follower,
+            term: 0,
+            leader: cfg.initial_leader,
+            last_heard: 0,
+            last_round: (0, 0),
+            lead: None,
+            shards: BTreeMap::new(),
+            cached: BTreeMap::new(),
+            finished: false,
+            converged: false,
+            final_gap: f64::INFINITY,
+            elections: 0,
+            failovers: 0,
+        }
+    }
+
+    /// Make this node the initial coordinator (before the first tick).
+    pub fn bootstrap_leader(&mut self) {
+        self.role = Role::Leader;
+        self.leader = self.id;
+        self.lead = Some(LeaderState::bootstrap(
+            self.id,
+            self.k,
+            self.data.n_cols(),
+            self.data.n_rows(),
+        ));
+    }
+
+    pub fn is_leader(&self) -> bool {
+        self.role == Role::Leader
+    }
+
+    pub fn is_finished_leader(&self) -> bool {
+        self.is_leader() && self.finished
+    }
+
+    /// One scheduler step: consume messages, run timers, retransmit.
+    pub fn step(&mut self, net: &mut Network) {
+        for (src, msg) in self.link.poll(net) {
+            self.handle(net, src, msg);
+        }
+        self.tick_timers(net);
+        self.link.flush(net);
+    }
+
+    fn handle(&mut self, net: &mut Network, src: NodeId, msg: Message) {
+        match msg {
+            m @ Message::Round { .. } => self.on_round(net, src, m),
+            Message::Delta { term, round, shards } => {
+                self.leader_on_delta(net, src, term, round, shards)
+            }
+            Message::Stop { term, round, gap, converged } => {
+                self.on_stop(net, src, term, round, gap, converged)
+            }
+            Message::Election { term } => self.on_election(net, src, term),
+            Message::Alive { term } => self.on_alive(net, term),
+            Message::Coordinator { term } => self.on_coordinator(net, src, term),
+            Message::State { term, owned, cached } => {
+                self.leader_on_state(net, src, term, owned, cached)
+            }
+        }
+    }
+
+    /// Leader-authority messages are ordered by `(term, sender id)`;
+    /// anything not outranking the current belief is stale.
+    fn accepts_leader(&self, term: u64, src: NodeId) -> bool {
+        (term, src) >= (self.term, self.leader)
+    }
+
+    /// Adopt `src` as leader at `term` (pre-checked by
+    /// `accepts_leader`).  A deposed leader stashes its cache so the
+    /// duals it tracked for dead nodes survive into the next collect.
+    fn adopt_leader(&mut self, net: &Network, term: u64, src: NodeId) {
+        if self.is_leader() {
+            if let Some(ls) = self.lead.take() {
+                for (s, a) in ls.alpha.into_iter().enumerate() {
+                    if !a.is_empty() {
+                        self.cached.insert(s, a);
+                    }
+                }
+            }
+        }
+        self.role = Role::Follower;
+        self.term = term;
+        self.leader = src;
+        self.last_heard = net.now();
+    }
+
+    fn snapshot(map: &BTreeMap<usize, Vec<f32>>) -> Vec<(usize, Vec<f32>)> {
+        map.iter().map(|(s, a)| (*s, a.clone())).collect()
+    }
+
+    // ------------------------------------------------------- worker --
+
+    fn on_round(&mut self, net: &mut Network, src: NodeId, msg: Message) {
+        let Message::Round { term, round, sigma, v, shards } = msg else {
+            return;
+        };
+        if !self.accepts_leader(term, src) {
+            if self.is_leader() {
+                let t = self.term;
+                self.link.send(net, src, Message::Coordinator { term: t });
+            }
+            return;
+        }
+        self.adopt_leader(net, term, src);
+        if (term, round) <= self.last_round {
+            return; // replayed or out-of-order older round
+        }
+        self.last_round = (term, round);
+        // a higher-authority leader still training overrides an
+        // earlier Stop (split-brain heal): participate again.
+        self.finished = false;
+        self.converged = false;
+        self.shards = shards.into_iter().collect();
+        let mut vloc = v;
+        if !self.shards.is_empty() {
+            self.local_pass(&mut vloc, sigma);
+        }
+        let reply = Self::snapshot(&self.shards);
+        self.link.send(net, src, Message::Delta { term, round, shards: reply });
+    }
+
+    fn on_stop(
+        &mut self,
+        net: &mut Network,
+        src: NodeId,
+        term: u64,
+        round: u64,
+        gap: f64,
+        converged: bool,
+    ) {
+        if !self.accepts_leader(term, src) {
+            return;
+        }
+        self.adopt_leader(net, term, src);
+        if (term, round) > self.last_round {
+            self.last_round = (term, round);
+        }
+        self.finished = true;
+        self.converged = converged;
+        self.final_gap = gap;
+    }
+
+    // ----------------------------------------------------- election --
+
+    fn on_election(&mut self, net: &mut Network, src: NodeId, term: u64) {
+        if term > self.term {
+            self.term = term;
+            if let Some(ls) = &mut self.lead {
+                ls.term = term;
+            }
+        }
+        let t = self.term;
+        self.link.send(net, src, Message::Alive { term: t });
+        if self.is_leader() {
+            if self.finished {
+                let (round, gap, converged) = self.stop_payload();
+                self.link.send(net, src, Message::Stop { term: t, round, gap, converged });
+            } else {
+                // reassert so the doubter resyncs instead of electing
+                self.link.send(net, src, Message::Coordinator { term: t });
+            }
+        } else if self.role == Role::Follower && !self.finished {
+            // we outrank the prober: contend ourselves
+            self.start_election(net);
+        }
+    }
+
+    fn on_alive(&mut self, net: &Network, term: u64) {
+        if let Role::Candidate { .. } = self.role {
+            self.role = Role::Follower;
+            self.term = self.term.max(term);
+            self.last_heard = net.now();
+        }
+    }
+
+    fn on_coordinator(&mut self, net: &mut Network, src: NodeId, term: u64) {
+        if !self.accepts_leader(term, src) {
+            if self.is_leader() {
+                let t = self.term;
+                self.link.send(net, src, Message::Coordinator { term: t });
+            }
+            return;
+        }
+        self.adopt_leader(net, term, src);
+        let owned = Self::snapshot(&self.shards);
+        let cached = Self::snapshot(&self.cached);
+        self.link.send(net, src, Message::State { term, owned, cached });
+    }
+
+    fn start_election(&mut self, net: &mut Network) {
+        self.elections += 1;
+        self.term += 1;
+        self.leader = self.id;
+        let term = self.term;
+        if self.id + 1 >= self.k {
+            // highest id: nobody can veto
+            self.become_leader(net);
+            return;
+        }
+        for higher in self.id + 1..self.k {
+            self.link.send(net, higher, Message::Election { term });
+        }
+        self.role = Role::Candidate { since: net.now() };
+    }
+
+    fn become_leader(&mut self, net: &mut Network) {
+        self.failovers += 1;
+        self.role = Role::Leader;
+        self.leader = self.id;
+        let term = self.term;
+        for node in 0..self.k {
+            if node != self.id {
+                self.link.send(net, node, Message::Coordinator { term });
+            }
+        }
+        let deadline = net.now() + self.timing.state_timeout;
+        let mut ls = LeaderState::collecting(self.id, term, self.k, deadline);
+        ls.offer(self.id, Self::snapshot(&self.shards), Self::snapshot(&self.cached));
+        self.lead = Some(ls);
+        self.maybe_finish_collect(net); // k == 1 resolves immediately
+        self.leader_advance(net);
+    }
+
+    // ------------------------------------------------------- leader --
+
+    fn stop_payload(&self) -> (u64, f64, bool) {
+        match &self.lead {
+            Some(ls) => (ls.round, ls.gap, ls.converged),
+            None => (self.last_round.1, self.final_gap, self.converged),
+        }
+    }
+
+    fn leader_on_delta(
+        &mut self,
+        net: &mut Network,
+        src: NodeId,
+        term: u64,
+        round: u64,
+        shards: Vec<(usize, Vec<f32>)>,
+    ) {
+        if !self.is_leader() || term != self.term {
+            return;
+        }
+        if self.finished {
+            let (r, gap, converged) = self.stop_payload();
+            self.link.send(net, src, Message::Stop { term, round: r, gap, converged });
+            return;
+        }
+        let Some(mut ls) = self.lead.take() else {
+            return;
+        };
+        if ls.collect.is_none() && round == ls.round {
+            ls.apply_delta(self.data, src, shards);
+            ls.waiting.remove(&src);
+        } else {
+            // stale round (or mid-collect): proof of life only
+            ls.responsive.insert(src);
+            ls.dead.remove(&src);
+        }
+        self.lead = Some(ls);
+        self.leader_advance(net);
+    }
+
+    fn leader_on_state(
+        &mut self,
+        net: &mut Network,
+        src: NodeId,
+        term: u64,
+        owned: Vec<(usize, Vec<f32>)>,
+        cached: Vec<(usize, Vec<f32>)>,
+    ) {
+        if !self.is_leader() || term != self.term {
+            return;
+        }
+        if self.finished {
+            let (r, gap, converged) = self.stop_payload();
+            self.link.send(net, src, Message::Stop { term, round: r, gap, converged });
+            return;
+        }
+        if let Some(ls) = &mut self.lead {
+            // outside a collect this only revives the reporter (its
+            // shards were reassigned; it re-enters via empty Rounds)
+            ls.offer(src, owned, cached);
+        }
+        self.maybe_finish_collect(net);
+        self.leader_advance(net);
+    }
+
+    fn maybe_finish_collect(&mut self, net: &Network) {
+        let now = net.now();
+        let due = match &self.lead {
+            Some(ls) => match &ls.collect {
+                Some(c) => now >= c.deadline || c.reported.len() >= self.k,
+                None => false,
+            },
+            None => false,
+        };
+        if due {
+            if let Some(ls) = &mut self.lead {
+                ls.finish_collect(self.data);
+            }
+        }
+    }
+
+    /// Worker-death detection: a round stalled past `worker_timeout`
+    /// declares the silent owners dead and hands their shards (cached
+    /// duals included — no progress lost) to responsive nodes.
+    fn maybe_reassign(&mut self, net: &Network) {
+        let now = net.now();
+        let stalled = matches!(
+            &self.lead,
+            Some(ls) if ls.collect.is_none()
+                && ls.round > 0
+                && !ls.waiting.is_empty()
+                && now.saturating_sub(ls.round_started) >= self.timing.worker_timeout
+        );
+        if !stalled {
+            return;
+        }
+        let me = self.id;
+        let Some(ls) = &mut self.lead else {
+            return;
+        };
+        let newly_dead: Vec<NodeId> = ls.waiting.iter().copied().collect();
+        for nd in &newly_dead {
+            ls.dead.insert(*nd);
+            ls.responsive.remove(nd);
+        }
+        ls.waiting.clear();
+        ls.responsive.insert(me);
+        let live: Vec<NodeId> = ls.responsive.iter().copied().collect();
+        let mut spill = 0usize;
+        for owner in ls.owners.iter_mut() {
+            if ls.dead.contains(owner) {
+                *owner = live[spill % live.len()];
+                spill += 1;
+            }
+        }
+        // cache + v stayed consistent (deltas fold on arrival), so the
+        // abandoned round counts as complete; leader_advance moves on.
+    }
+
+    /// Drive the round state machine as far as it can go without
+    /// waiting on the network.  Iterative on purpose: at k=1 the whole
+    /// training run resolves in this loop (one round per iteration)
+    /// and recursion would overflow on long runs.
+    fn leader_advance(&mut self, net: &mut Network) {
+        loop {
+            if !self.is_leader() || self.finished {
+                return;
+            }
+            let ready = matches!(
+                &self.lead,
+                Some(ls) if ls.collect.is_none() && ls.waiting.is_empty()
+            );
+            if !ready {
+                return;
+            }
+            let Some(mut ls) = self.lead.take() else {
+                return;
+            };
+            if ls.round > 0 {
+                // the current round is complete: certify if due
+                let due = ls.round % self.eval_every == 0 || ls.round >= self.max_rounds;
+                if due {
+                    let gap = ls.eval(self.data, &mut *self.model, net.now());
+                    if gap <= self.gap_tol {
+                        ls.converged = true;
+                        self.lead = Some(ls);
+                        self.finish_leader(net, true);
+                        return;
+                    }
+                }
+                if ls.round >= self.max_rounds {
+                    self.lead = Some(ls);
+                    self.finish_leader(net, false);
+                    return;
+                }
+            }
+            // start the next round
+            ls.round += 1;
+            ls.round_started = net.now();
+            let sigma = ls.sigma();
+            let term = self.term;
+            let round = ls.round;
+            for node in 0..self.k {
+                if node == self.id || ls.dead.contains(&node) {
+                    continue;
+                }
+                let payload = ls.shards_of(node);
+                if !payload.is_empty() {
+                    ls.waiting.insert(node);
+                }
+                self.link.send(
+                    net,
+                    node,
+                    Message::Round { term, round, sigma, v: ls.v.clone(), shards: payload },
+                );
+            }
+            // the leader's own shards run inline, same code as workers
+            let mine = ls.shards_of(self.id);
+            if !mine.is_empty() {
+                self.shards = mine.into_iter().collect();
+                let mut vloc = ls.v.clone();
+                self.local_pass(&mut vloc, sigma);
+                let updated = Self::snapshot(&self.shards);
+                ls.apply_delta(self.data, self.id, updated);
+            }
+            self.lead = Some(ls);
+            // loop: with no remote owners the round is already done
+        }
+    }
+
+    fn finish_leader(&mut self, net: &mut Network, converged: bool) {
+        self.finished = true;
+        self.converged = converged;
+        let (round, gap, _) = self.stop_payload();
+        self.final_gap = gap;
+        let term = self.term;
+        for node in 0..self.k {
+            if node != self.id {
+                // dead nodes included: retransmission reaches a healed
+                // partition eventually, so everyone can stop.
+                self.link.send(net, node, Message::Stop { term, round, gap, converged });
+            }
+        }
+    }
+
+    // -------------------------------------------------------- timers --
+
+    fn tick_timers(&mut self, net: &mut Network) {
+        let now = net.now();
+        match self.role {
+            Role::Leader => {
+                if !self.finished {
+                    self.maybe_finish_collect(net);
+                    self.maybe_reassign(net);
+                    self.leader_advance(net);
+                }
+            }
+            Role::Candidate { since } => {
+                if now.saturating_sub(since) >= self.timing.alive_timeout {
+                    self.become_leader(net);
+                }
+            }
+            Role::Follower => {
+                // deterministic per-id stagger so timeouts don't fire
+                // in lockstep across the cluster
+                let deadline = self.timing.election_timeout + 7 * self.id as Tick;
+                if !self.finished && now.saturating_sub(self.last_heard) >= deadline {
+                    self.start_election(net);
+                }
+            }
+        }
+    }
+
+    // -------------------------------------------------- local solver --
+
+    /// `local_passes` coordinate-descent sweeps over the owned shard
+    /// views, starting from the broadcast shared vector.  Mirrors
+    /// [`glm::solve_reference`] exactly — same per-epoch model refresh,
+    /// same incremental-`w` discipline — except the curvature term is
+    /// scaled by `sigma` (the shard-owner count), which is what makes
+    /// the coordinator's "adding" aggregation safe.  At `sigma == 1`
+    /// this *is* the sequential oracle.
+    fn local_pass(&mut self, vloc: &mut [f32], sigma: f32) {
+        let data = self.data;
+        let y = data.targets();
+        let n = data.n_cols();
+        let k = self.k;
+        let passes = self.local_passes;
+        let model = &mut *self.model;
+        let shards = &mut self.shards;
+        let mut w = vec![0.0f32; data.n_rows()];
+        for _ in 0..passes {
+            let flat: Vec<f32> = shards.values().flat_map(|a| a.iter().copied()).collect();
+            model.epoch_refresh(&flat);
+            // dw/dv where the dual map is affine; None -> re-map on
+            // change (same table as glm::solve_reference)
+            let w_slope = match model.kind() {
+                ModelKind::Lasso { .. }
+                | ModelKind::Ridge { .. }
+                | ModelKind::ElasticNet { .. } => Some(1.0f32),
+                ModelKind::Svm { inv_scale, .. } | ModelKind::SvmL2 { inv_scale, .. } => {
+                    Some(inv_scale)
+                }
+                ModelKind::Huber { .. } | ModelKind::Logistic { .. } => None,
+            };
+            glm::w_from_v(model, vloc, y, &mut w);
+            let mut w_stale = false;
+            for (&s, alpha) in shards.iter_mut() {
+                let (lo, hi) = shard_cols(n, k, s);
+                if alpha.len() != hi - lo {
+                    continue; // malformed payload; leader re-sends next round
+                }
+                let view = data.col_range(lo, hi);
+                for (jj, a) in alpha.iter_mut().enumerate() {
+                    if w_stale {
+                        glm::w_from_v(model, vloc, y, &mut w);
+                        w_stale = false;
+                    }
+                    let u = view.dot(jj, &w);
+                    let delta = model.delta(u, *a, view.sq_norm(jj) * sigma);
+                    if delta != 0.0 {
+                        *a += delta;
+                        view.axpy(jj, delta, vloc);
+                        match w_slope {
+                            Some(slope) => view.axpy(jj, delta * slope, &mut w),
+                            None => w_stale = true,
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::net::FaultPlan;
+    use crate::data::{DatasetKind, Family};
+    use crate::glm::Lasso;
+
+    fn tiny() -> Dataset {
+        Dataset::generated(DatasetKind::Tiny, Family::Regression, 1.0, 31)
+    }
+
+    fn cfg(k: usize) -> ClusterConfig {
+        ClusterConfig { nodes: k, ..Default::default() }
+    }
+
+    #[test]
+    fn bully_highest_id_wins_without_traffic() {
+        let g = tiny();
+        let c = cfg(3);
+        let mut net = Network::new(3, FaultPlan::default(), 5);
+        let mut nodes: Vec<Node> = (0..3)
+            .map(|i| Node::new(i, &g, Box::new(Lasso::new(0.3)), &c))
+            .collect();
+        // no bootstrap leader at all: the cluster must elect one
+        for _ in 0..(c.timing.election_timeout * 4) {
+            net.step();
+            for n in nodes.iter_mut() {
+                n.step(&mut net);
+            }
+            if nodes.iter().any(|n| n.is_leader()) && nodes.iter().all(|n| n.leader == 2) {
+                break;
+            }
+        }
+        assert!(nodes[2].is_leader(), "highest id should win the bully election");
+        assert!(nodes.iter().all(|n| n.leader == 2));
+    }
+
+    #[test]
+    fn local_pass_at_sigma_one_matches_solve_reference() {
+        let g = tiny();
+        let c = cfg(1);
+        let mut node = Node::new(0, &g, Box::new(Lasso::new(0.3)), &c);
+        node.shards.insert(0, vec![0.0f32; g.n()]);
+        let mut v_node = vec![0.0f32; g.d()];
+        node.local_pass(&mut v_node, 1.0);
+
+        let mut model = Lasso::new(0.3);
+        let mut alpha = vec![0.0f32; g.n()];
+        let mut v = vec![0.0f32; g.d()];
+        glm::solve_reference(&mut model, g.as_ops(), g.targets(), &mut alpha, &mut v, 1);
+
+        assert_eq!(node.shards[&0], alpha, "one local pass == one reference epoch");
+        assert_eq!(v_node, v);
+    }
+}

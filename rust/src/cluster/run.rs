@@ -1,0 +1,289 @@
+//! The cluster facade: configuration, the tick loop, and the report.
+//!
+//! [`run_cluster`] is a pure function of `(dataset, model factory,
+//! ClusterConfig)` — one real thread steps the virtual network and the
+//! nodes in id order, so every run is reproducible from the seed.  The
+//! result wraps a standard [`FitReport`] (solver `"cluster"`, the
+//! leader's certified trace, `cluster_*` extras) so downstream tooling
+//! — `report.summary()`, `epoch_to_gap`, the bench convergence axis —
+//! treats cluster runs like any single-node engine.
+
+use super::net::{FaultPlan, NetStats, Network};
+use super::node::Node;
+use super::NodeId;
+use crate::bail;
+use crate::data::Dataset;
+use crate::glm::GlmModel;
+use crate::solver::{keys, Extras, FitReport};
+use crate::util::Timer;
+
+/// Protocol timeouts, in virtual ticks.  Defaults keep the implied
+/// ordering the protocol relies on: base latency (1) < rto <
+/// state/worker timeouts < election timeout, with headroom for fault
+/// delays in between.
+#[derive(Clone, Copy, Debug)]
+pub struct Timing {
+    /// Reliable-link retransmission interval (doubles up to a cap).
+    pub rto: u64,
+    /// Follower silence before it starts an election (per-id stagger
+    /// of `7 * id` ticks is added on top).
+    pub election_timeout: u64,
+    /// How long a candidate waits for an `Alive` veto.
+    pub alive_timeout: u64,
+    /// Leader round stall before silent owners are declared dead.
+    pub worker_timeout: u64,
+    /// How long a fresh leader collects `State` replies.
+    pub state_timeout: u64,
+    /// Grace ticks after the leader finishes, so `Stop` reaches the
+    /// other nodes before the loop exits.
+    pub drain_ticks: u64,
+}
+
+impl Default for Timing {
+    fn default() -> Self {
+        Timing {
+            rto: 8,
+            election_timeout: 80,
+            alive_timeout: 20,
+            worker_timeout: 40,
+            state_timeout: 30,
+            drain_ticks: 200,
+        }
+    }
+}
+
+/// Configuration for one simulated cluster run.
+#[derive(Clone, Debug)]
+pub struct ClusterConfig {
+    /// Node (and shard) count `K`.
+    pub nodes: usize,
+    /// Local CD sweeps per round (CoCoA inner iterations).
+    pub local_passes: usize,
+    /// Stop once the exact duality gap falls below this.
+    pub gap_tol: f64,
+    /// Round budget per leader term.
+    pub max_rounds: u64,
+    /// Certificate cadence, in rounds.
+    pub eval_every: u64,
+    /// Seed for the fault plan's randomness (the only randomness).
+    pub seed: u64,
+    /// Hard virtual-time budget for the whole run.
+    pub max_ticks: u64,
+    /// Which node boots as coordinator.
+    pub initial_leader: NodeId,
+    pub fault: FaultPlan,
+    pub timing: Timing,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            nodes: 4,
+            local_passes: 1,
+            gap_tol: 1e-5,
+            max_rounds: 200,
+            eval_every: 1,
+            seed: 42,
+            max_ticks: 100_000,
+            initial_leader: 0,
+            fault: FaultPlan::default(),
+            timing: Timing::default(),
+        }
+    }
+}
+
+/// Outcome of a cluster run.
+pub struct ClusterReport {
+    /// Standard fit report from the final leader: `alpha`, `v`, the
+    /// certified trace (time column = virtual ticks), `cluster_*`
+    /// extras.
+    pub fit: FitReport,
+    pub nodes: usize,
+    pub final_leader: NodeId,
+    /// Virtual ticks the run took.
+    pub ticks: u64,
+    /// Election attempts across all nodes.
+    pub elections: u64,
+    /// Leadership takeovers (0 when the bootstrap leader survives).
+    pub failovers: u64,
+    pub stats: NetStats,
+}
+
+impl ClusterReport {
+    pub fn summary(&self) -> String {
+        format!(
+            "{} | nodes {} leader {} ticks {} elections {} failovers {} \
+             sent {} dropped {} retx {}",
+            self.fit.summary(),
+            self.nodes,
+            self.final_leader,
+            self.ticks,
+            self.elections,
+            self.failovers,
+            self.stats.sent,
+            self.stats.dropped,
+            self.stats.retransmits,
+        )
+    }
+}
+
+/// Run the simulated cluster to completion (convergence, round budget,
+/// or tick budget).  `make_model` is called once per node plus once
+/// for the certificate model, so every node owns identical model
+/// state.
+pub fn run_cluster(
+    data: &Dataset,
+    make_model: &dyn Fn() -> Box<dyn GlmModel>,
+    cfg: &ClusterConfig,
+) -> crate::Result<ClusterReport> {
+    let k = cfg.nodes;
+    if k == 0 {
+        bail!("cluster: --nodes must be >= 1");
+    }
+    if cfg.initial_leader >= k {
+        bail!("cluster: initial leader {} out of range (nodes {k})", cfg.initial_leader);
+    }
+    if data.n_cols() < k {
+        bail!("cluster: {} nodes but only {} columns to shard", k, data.n_cols());
+    }
+    let timer = Timer::start();
+    let mut net = Network::new(k, cfg.fault.clone(), cfg.seed);
+    let mut nodes: Vec<Node<'_>> = (0..k).map(|i| Node::new(i, data, make_model(), cfg)).collect();
+    nodes[cfg.initial_leader].bootstrap_leader();
+
+    let mut drain_left: Option<u64> = None;
+    loop {
+        net.step();
+        for i in 0..k {
+            if net.is_alive(i) {
+                nodes[i].step(&mut net);
+            }
+        }
+        let any_finished_leader = nodes.iter().any(|n| n.is_finished_leader());
+        if drain_left.is_none() && any_finished_leader {
+            drain_left = Some(cfg.timing.drain_ticks);
+        }
+        if !any_finished_leader {
+            // A split-brain heal can resume a "finished" half: the solo
+            // leader that converged behind the partition gets deposed
+            // by the higher-term survivor and rejoins as a worker.  The
+            // drain must not time out mid-resumed-training.
+            drain_left = None;
+        }
+        if let Some(left) = &mut drain_left {
+            let all_done = (0..k).all(|i| !net.is_alive(i) || nodes[i].finished);
+            if all_done || *left == 0 {
+                break;
+            }
+            *left -= 1;
+        }
+        if net.now() >= cfg.max_ticks {
+            break;
+        }
+    }
+
+    // Report from the highest-authority leader (prefer finished ones).
+    let pick = |finished_only: bool| -> Option<usize> {
+        nodes
+            .iter()
+            .enumerate()
+            .filter(|(i, n)| {
+                n.is_leader()
+                    && n.lead.is_some()
+                    && (!finished_only || (n.finished && net.is_alive(*i)))
+            })
+            .max_by_key(|(i, n)| (n.term, *i))
+            .map(|(i, _)| i)
+    };
+    let Some(leader_id) = pick(true).or_else(|| pick(false)) else {
+        bail!("cluster: no surviving leader to report (all nodes dead?)");
+    };
+
+    let elections: u64 = nodes.iter().map(|n| n.elections).sum();
+    let failovers: u64 = nodes.iter().map(|n| n.failovers).sum();
+    let mut stats = net.stats;
+    for n in &nodes {
+        stats.retransmits += n.link.retransmits;
+        stats.dedup_dropped += n.link.dedup_dropped;
+    }
+    let ticks = net.now();
+
+    let leader = &nodes[leader_id];
+    // PANIC-OK: pick() only returned nodes with lead.is_some().
+    let ls = leader.lead.as_ref().expect("picked leader has state");
+    let mut extras = Extras::default();
+    extras.set_u64(keys::CLUSTER_NODES, k as u64);
+    extras.set_u64(keys::CLUSTER_ROUNDS, ls.round);
+    extras.set_u64(keys::CLUSTER_TICKS, ticks);
+    extras.set_u64(keys::CLUSTER_ELECTIONS, elections);
+    extras.set_u64(keys::CLUSTER_FAILOVERS, failovers);
+    extras.set_u64(keys::CLUSTER_FINAL_LEADER, leader_id as u64);
+    extras.set_u64(keys::CLUSTER_MSGS_SENT, stats.sent);
+    extras.set_u64(keys::CLUSTER_MSGS_DROPPED, stats.dropped);
+    extras.set_u64(keys::CLUSTER_MSGS_DUPLICATED, stats.duplicated);
+    extras.set_u64(keys::CLUSTER_RETRANSMITS, stats.retransmits);
+    extras.set_u64(keys::CLUSTER_DEDUP_DROPPED, stats.dedup_dropped);
+
+    let fit = FitReport {
+        solver: "cluster",
+        alpha: ls.flat_alpha(),
+        v: ls.v.clone(),
+        trace: ls.trace.clone(),
+        epochs: ls.round as usize,
+        converged: leader.converged,
+        wall_secs: timer.secs(),
+        phase_times: Default::default(),
+        staleness: Default::default(),
+        extras,
+    };
+    Ok(ClusterReport {
+        fit,
+        nodes: k,
+        final_leader: leader_id,
+        ticks,
+        elections,
+        failovers,
+        stats,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{DatasetKind, Family};
+    use crate::glm::Lasso;
+
+    fn tiny() -> Dataset {
+        Dataset::generated(DatasetKind::Tiny, Family::Regression, 1.0, 77)
+    }
+
+    fn lasso() -> Box<dyn GlmModel> {
+        Box::new(Lasso::new(0.3))
+    }
+
+    #[test]
+    fn rejects_degenerate_configs() {
+        let g = tiny();
+        let bad = ClusterConfig { nodes: 0, ..Default::default() };
+        assert!(run_cluster(&g, &lasso, &bad).is_err());
+        let bad = ClusterConfig { nodes: 2, initial_leader: 2, ..Default::default() };
+        assert!(run_cluster(&g, &lasso, &bad).is_err());
+        let bad = ClusterConfig { nodes: g.n() + 1, ..Default::default() };
+        assert!(run_cluster(&g, &lasso, &bad).is_err());
+    }
+
+    #[test]
+    fn clean_two_node_run_converges_and_is_deterministic() {
+        let g = tiny();
+        let cfg = ClusterConfig { nodes: 2, gap_tol: 1e-3, max_rounds: 500, ..Default::default() };
+        let a = run_cluster(&g, &lasso, &cfg).unwrap();
+        let b = run_cluster(&g, &lasso, &cfg).unwrap();
+        assert!(a.fit.converged, "{}", a.summary());
+        assert_eq!(a.ticks, b.ticks);
+        assert_eq!(a.fit.final_gap(), b.fit.final_gap());
+        assert_eq!(a.fit.alpha, b.fit.alpha);
+        assert_eq!(a.failovers, 0);
+        assert_eq!(a.final_leader, 0);
+        assert_eq!(a.fit.extras.u64(keys::CLUSTER_NODES), Some(2));
+    }
+}

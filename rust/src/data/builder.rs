@@ -106,6 +106,7 @@ pub struct DatasetBuilder {
     represent: Represent,
     density_threshold: f64,
     placement: Tier,
+    validate: bool,
 }
 
 impl DatasetBuilder {
@@ -121,6 +122,7 @@ impl DatasetBuilder {
             represent: Represent::Keep,
             density_threshold: DENSE_DENSITY_THRESHOLD,
             placement: Tier::Slow,
+            validate: true,
         }
     }
 
@@ -220,6 +222,18 @@ impl DatasetBuilder {
         self
     }
 
+    /// Reject non-finite features and targets at build time (default
+    /// `true`).  A single `nan`/`inf` entry poisons every norm, dot
+    /// and duality gap downstream into a silent non-converging run, so
+    /// the pipeline refuses it up front — with the offending line
+    /// number for LIBSVM text sources, the coordinate otherwise.
+    /// `validate(false)` is the escape hatch for callers that clean
+    /// the data themselves.
+    pub fn validate(mut self, yes: bool) -> Self {
+        self.validate = yes;
+        self
+    }
+
     /// Record the memory tier the matrix lives in (default
     /// [`Tier::Slow`] — the full dataset belongs in DRAM; task B copies
     /// its working set into the fast tier separately).  Capacity is not
@@ -242,6 +256,7 @@ impl DatasetBuilder {
             represent,
             density_threshold,
             placement,
+            validate,
         } = self;
 
         let source = if appended.is_empty() {
@@ -263,7 +278,8 @@ impl DatasetBuilder {
         };
 
         // -- 1. load + orient ------------------------------------------
-        let (mut matrix, mut targets, mut meta) = load_source(source, family, scale, seed)?;
+        let (mut matrix, mut targets, mut meta) =
+            load_source(source, family, scale, seed, validate)?;
         if matrix.n_cols() == 0 || matrix.n_rows() == 0 {
             bail!("{}: empty dataset", meta.source.describe());
         }
@@ -274,6 +290,9 @@ impl DatasetBuilder {
                 targets.len(),
                 matrix.n_rows()
             );
+        }
+        if validate {
+            reject_nonfinite(&matrix, &targets, &meta)?;
         }
 
         // -- 2. preprocess ---------------------------------------------
@@ -349,6 +368,7 @@ fn load_source(
     family: Family,
     scale: f64,
     seed: u64,
+    validate: bool,
 ) -> Result<(Matrix, Vec<f32>, DatasetMeta)> {
     match source {
         Source::Generated(kind) => {
@@ -369,8 +389,11 @@ fn load_source(
                 let meta = blank_meta(SourceInfo::Binary { path }, family);
                 Ok((matrix, targets, meta))
             } else {
-                let samples =
-                    libsvm::read(r).with_context(|| format!("parse {}", path.display()))?;
+                // parse-time rejection carries the offending line
+                // number; the post-orient scan is the backstop for the
+                // other source kinds
+                let samples = libsvm::read_with(r, validate)
+                    .with_context(|| format!("parse {}", path.display()))?;
                 let (matrix, targets, mut meta) = orient(&samples, family)?;
                 meta.source = SourceInfo::Libsvm { path };
                 Ok((matrix, targets, meta))
@@ -382,6 +405,57 @@ fn load_source(
             Ok((matrix, targets, blank_meta(SourceInfo::InMemory, family)))
         }
     }
+}
+
+/// Build-time finiteness gate (`validate(true)`, the default): one
+/// `nan`/`inf` feature or target survives every kernel (dots, norms,
+/// axpys all propagate it) and surfaces only as a run that never
+/// converges, so the pipeline names the first offending coordinate and
+/// refuses.  LIBSVM text sources are additionally checked at parse
+/// time, where the line number is still known.
+fn reject_nonfinite(matrix: &Matrix, targets: &[f32], meta: &DatasetMeta) -> Result<()> {
+    let src = meta.source.describe();
+    if let Some(i) = targets.iter().position(|t| !t.is_finite()) {
+        bail!("{src}: non-finite target at row {i}: {}", targets[i]);
+    }
+    match matrix {
+        Matrix::Dense(dm) => {
+            let d = dm.n_rows();
+            if let Some(i) = dm.raw().iter().position(|x| !x.is_finite()) {
+                bail!(
+                    "{src}: non-finite feature at column {}, row {}: {}",
+                    i / d,
+                    i % d,
+                    dm.raw()[i]
+                );
+            }
+        }
+        Matrix::Sparse(sm) => {
+            for j in 0..sm.n_cols() {
+                let (rows, vals) = sm.col(j);
+                if let Some(k) = vals.iter().position(|x| !x.is_finite()) {
+                    bail!(
+                        "{src}: non-finite feature at column {j}, row {}: {}",
+                        rows[k],
+                        vals[k]
+                    );
+                }
+            }
+        }
+        Matrix::Quantized(qm) => {
+            // the 4-bit codes are finite by construction; a non-finite
+            // source value lands in the per-group scale
+            for j in 0..qm.n_cols() {
+                let (_, scales) = qm.col_packed(j);
+                if let Some(g) = scales.iter().position(|s| !s.is_finite()) {
+                    bail!(
+                        "{src}: non-finite quantization scale at column {j}, group {g}"
+                    );
+                }
+            }
+        }
+    }
+    Ok(())
 }
 
 /// LIBSVM samples into the family's matrix orientation (paper §II-A).
@@ -811,6 +885,43 @@ mod tests {
             .build()
             .unwrap_err();
         assert!(format!("{err}").contains("libsvm_samples"), "{err}");
+    }
+
+    #[test]
+    fn nonfinite_features_rejected_at_build() {
+        let m = Matrix::Dense(DenseMatrix::from_col_major(
+            2,
+            2,
+            vec![1.0, 2.0, f32::NAN, 4.0],
+        ));
+        let err = DatasetBuilder::in_memory(m, vec![0.0; 2]).build().unwrap_err();
+        assert!(format!("{err}").contains("column 1, row 0"), "{err}");
+        let s = Matrix::Sparse(SparseMatrix::from_columns(3, vec![vec![(1, f32::INFINITY)]]));
+        let err = DatasetBuilder::in_memory(s, vec![0.0; 3]).build().unwrap_err();
+        assert!(format!("{err}").contains("column 0, row 1"), "{err}");
+    }
+
+    #[test]
+    fn nonfinite_targets_rejected_at_build() {
+        let m = Matrix::Dense(DenseMatrix::from_col_major(2, 1, vec![1.0, 2.0]));
+        let err = DatasetBuilder::in_memory(m, vec![0.0, f32::NAN])
+            .build()
+            .unwrap_err();
+        assert!(format!("{err}").contains("target at row 1"), "{err}");
+    }
+
+    #[test]
+    fn validate_false_is_the_escape_hatch() {
+        let m = Matrix::Dense(DenseMatrix::from_col_major(
+            2,
+            2,
+            vec![1.0, 2.0, f32::NAN, 4.0],
+        ));
+        let ds = DatasetBuilder::in_memory(m, vec![0.0; 2])
+            .validate(false)
+            .build()
+            .unwrap();
+        assert!(ds.as_ops().dot(1, &[1.0, 1.0]).is_nan());
     }
 
     #[test]

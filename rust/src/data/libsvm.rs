@@ -37,9 +37,22 @@ pub fn read_file(path: &Path) -> Result<Vec<Sample>> {
 /// Tolerated: `#` comments, blank lines, leading/trailing whitespace
 /// (and CRLF endings), out-of-order feature indices (sorted on
 /// ingest).  Rejected with a line number: malformed pairs, non-numeric
-/// labels/indices/values, 0-based indices, and duplicate feature
-/// indices within one sample.
+/// labels/indices/values, non-finite labels/values (`nan`/`inf` parse
+/// as floats but poison every norm and dot downstream), 0-based
+/// indices, and duplicate feature indices within one sample.
+///
+/// Use [`read_with`] to opt out of the finiteness check when a
+/// downstream stage cleans the data itself.
 pub fn read<R: BufRead>(r: R) -> Result<Vec<Sample>> {
+    read_with(r, true)
+}
+
+/// [`read`] with the non-finite rejection made explicit:
+/// `reject_nonfinite = false` lets `nan`/`inf` labels and values
+/// through (they are valid f32 spellings) for callers that scrub or
+/// tolerate them — the `DatasetBuilder`'s `validate(false)` escape
+/// hatch routes here.
+pub fn read_with<R: BufRead>(r: R, reject_nonfinite: bool) -> Result<Vec<Sample>> {
     let mut out = Vec::new();
     for (lineno, line) in r.lines().enumerate() {
         let line = line?;
@@ -55,6 +68,9 @@ pub fn read<R: BufRead>(r: R) -> Result<Vec<Sample>> {
             .unwrap()
             .parse()
             .with_context(|| format!("line {}: bad label", lineno + 1))?;
+        if reject_nonfinite && !label.is_finite() {
+            bail!("line {}: non-finite label {label}", lineno + 1);
+        }
         let mut features = Vec::new();
         for t in toks {
             let (i, v) = t
@@ -69,6 +85,9 @@ pub fn read<R: BufRead>(r: R) -> Result<Vec<Sample>> {
             let v: f32 = v
                 .parse()
                 .with_context(|| format!("line {}: bad value {v:?}", lineno + 1))?;
+            if reject_nonfinite && !v.is_finite() {
+                bail!("line {}: non-finite value for feature {i}: {v}", lineno + 1);
+            }
             features.push((i - 1, v));
         }
         // out-of-order indices are tolerated (sorted); duplicates are a
@@ -171,6 +190,22 @@ mod tests {
     fn bad_pair_rejected() {
         assert!(read("+1 abc".as_bytes()).is_err());
         assert!(read("+1 2:xyz".as_bytes()).is_err());
+    }
+
+    #[test]
+    fn nonfinite_rejected_with_line_number() {
+        let err = read("+1 1:0.5\n+1 2:nan".as_bytes()).unwrap_err();
+        assert!(format!("{err}").contains("line 2"), "{err}");
+        let err = read("inf 1:0.5".as_bytes()).unwrap_err();
+        assert!(format!("{err}").contains("line 1"), "{err}");
+        assert!(read("+1 1:-inf".as_bytes()).is_err());
+    }
+
+    #[test]
+    fn read_with_escape_hatch_admits_nonfinite() {
+        let s = read_with("nan 1:inf".as_bytes(), false).unwrap();
+        assert!(s[0].label.is_nan());
+        assert_eq!(s[0].features[0].1, f32::INFINITY);
     }
 
     #[test]

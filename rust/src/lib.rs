@@ -32,6 +32,11 @@
 //! * [`coordinator`] — the HTHC scheme itself plus the §IV-F
 //!   performance model;
 //! * [`baselines`] — ST, OMP, OMP-WILD, PASSCoDe, SGD comparators;
+//! * [`cluster`] — simulate-first multi-node sharded training: column
+//!   shards as dataset views, CoCoA-style local subproblems, an
+//!   epoch-barrier coordinator with duality-gap certificates, bully
+//!   leader election, and a deterministic lossy-network simulator with
+//!   reliable-link delivery (`hthc cluster`);
 //! * [`solver`] — the engine-agnostic training API: [`solver::Trainer`]
 //!   builds a [`solver::Problem`] and runs any [`solver::Solver`]
 //!   (HTHC or baseline) to a unified [`solver::FitReport`];
@@ -50,6 +55,7 @@
 
 pub mod baselines;
 pub mod bench_support;
+pub mod cluster;
 pub mod coordinator;
 pub mod data;
 pub mod glm;

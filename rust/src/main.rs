@@ -35,6 +35,10 @@ COMMANDS
   serve       bounded always-on serving run: batched predict from a
               versioned snapshot store, streaming ingest, warm-start
               refits gated by the duality-gap certificate
+  cluster     simulated multi-node sharded training: K nodes solve
+              CoCoA-style local subproblems on column shards under a
+              failure-tolerant coordinator (deterministic virtual
+              network with scriptable faults)
   datasets    print the Table-I-style inventory of synthetic datasets
   artifacts   check the PJRT artifacts load and execute
   help        this text
@@ -98,6 +102,22 @@ recovered via Dataset::to_samples)
                  old_gap * (1 + tol)            (default 0.10)
   --assert-healthy  exit 1 unless >=1 refit published and rows served
 
+CLUSTER FLAGS (plus the dataset + --model/--lam flags above; --tol,
+--epochs (= rounds), --eval-every and --seed mean what they do for
+train)
+  --nodes        node (and shard) count K        (default 4)
+  --local-passes CD sweeps per node per round    (default 1)
+  --leader       bootstrap coordinator node id   (default 0)
+  --max-ticks    virtual-time budget             (default 100000)
+  --drop         P(unicast silently dropped)     (default 0)
+  --dup          P(unicast delivered twice)      (default 0)
+  --delay        max extra delivery delay, ticks (default 0)
+  --kill         NODE@TICK[,NODE@TICK..] scripted node deaths
+  --partition    FROM:TO:ID[+ID..][,..] cut the id island off
+                 during the tick window [FROM, TO)
+  --csv          dump the leader's certified trace as CSV
+  --assert-converged  exit 1 unless the run converged to --tol
+
 GLOBAL FLAGS
   --kernels   scalar|simd|portable|avx2 — inner-loop backend for every
               hot dot/axpy kernel (default: best SIMD the host supports;
@@ -129,6 +149,7 @@ fn main() {
         "perfmodel" => cmd_perfmodel(&args),
         "evaluate" => cmd_evaluate(&args),
         "serve" => cmd_serve(&args),
+        "cluster" => cmd_cluster(&args),
         "datasets" => cmd_datasets(&args),
         "artifacts" => cmd_artifacts(&args),
         _ => print!("{HELP}"),
@@ -533,6 +554,47 @@ fn cmd_serve(args: &Args) {
         }
         Err(e) => {
             eprintln!("serve: {e}");
+            std::process::exit(1);
+        }
+    }
+}
+
+/// `hthc cluster` — run the simulated multi-node trainer
+/// (`cluster::run_cluster`) on the dataset flags and report the final
+/// leader's certified fit.
+fn cmd_cluster(args: &Args) {
+    let model_name = args.str_or("model", "lasso");
+    let family = family_for(&model_name);
+    let dataset = build_dataset(args, family);
+    println!("dataset: {}", dataset.describe());
+    let cfg = solver::cli::cluster_config_from_args(args).unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(2);
+    });
+    let lam = args.f32_or("lam", solver::DEFAULT_LAM);
+    let n = dataset.n_cols();
+    let name = model_name.clone();
+    let make = move || build_model(&name, lam, n);
+    match hthc::cluster::run_cluster(&dataset, &make, &cfg) {
+        Ok(report) => {
+            println!("cluster: {}", report.summary());
+            if args.bool_or("csv", false) {
+                print!("{}", report.fit.trace.to_csv());
+            }
+            if args.bool_or("assert-converged", false) && !report.fit.converged {
+                eprintln!(
+                    "cluster: NOT CONVERGED — gap {:.3e} after {} rounds / {} ticks \
+                     (tol {:.3e})",
+                    report.fit.final_gap().unwrap_or(f64::NAN),
+                    report.fit.epochs,
+                    report.ticks,
+                    cfg.gap_tol,
+                );
+                std::process::exit(1);
+            }
+        }
+        Err(e) => {
+            eprintln!("cluster: {e}");
             std::process::exit(1);
         }
     }

@@ -3,6 +3,7 @@
 //! flags become a training configuration.
 
 use super::{by_name, Sgd, Solver, Trainer, DEFAULT_LAM};
+use crate::cluster::{ClusterConfig, FaultPlan};
 use crate::coordinator::{HthcConfig, Selection};
 use crate::util::Args;
 
@@ -28,6 +29,81 @@ pub fn config_from_args(args: &Args) -> HthcConfig {
         autotune: args.bool_or("autotune", false),
         ..Default::default()
     }
+}
+
+/// Parse an `hthc cluster` fault script: `--kill NODE@TICK[,..]` and
+/// `--partition FROM:TO:ID[+ID..][,..]` on top of the probabilistic
+/// `--drop/--dup/--delay` wire faults.
+fn fault_plan_from_args(args: &Args) -> crate::Result<FaultPlan> {
+    let mut plan = FaultPlan::lossy(
+        args.f64_or("drop", 0.0),
+        args.f64_or("dup", 0.0),
+        args.u64_or("delay", 0),
+    );
+    if !(0.0..1.0).contains(&plan.drop_prob) || !(0.0..1.0).contains(&plan.dup_prob) {
+        crate::bail!("cluster: --drop/--dup must be probabilities in [0, 1)");
+    }
+    if let Some(spec) = args.get("kill") {
+        for part in spec.split(',') {
+            let Some((node, tick)) = part.split_once('@') else {
+                crate::bail!("cluster: --kill wants NODE@TICK, got {part:?}");
+            };
+            let node: usize = node
+                .trim()
+                .parse()
+                .map_err(|_| crate::err!("cluster: bad --kill node {node:?}"))?;
+            let tick: u64 = tick
+                .trim()
+                .parse()
+                .map_err(|_| crate::err!("cluster: bad --kill tick {tick:?}"))?;
+            plan = plan.kill(tick, node);
+        }
+    }
+    if let Some(spec) = args.get("partition") {
+        for part in spec.split(',') {
+            let fields: Vec<&str> = part.split(':').collect();
+            let [from, to, ids] = fields[..] else {
+                crate::bail!("cluster: --partition wants FROM:TO:ID[+ID..], got {part:?}");
+            };
+            let from: u64 = from
+                .trim()
+                .parse()
+                .map_err(|_| crate::err!("cluster: bad --partition start {from:?}"))?;
+            let to: u64 = to
+                .trim()
+                .parse()
+                .map_err(|_| crate::err!("cluster: bad --partition end {to:?}"))?;
+            let island = ids
+                .split('+')
+                .map(|id| {
+                    id.trim()
+                        .parse::<usize>()
+                        .map_err(|_| crate::err!("cluster: bad --partition node {id:?}"))
+                })
+                .collect::<crate::Result<Vec<usize>>>()?;
+            plan = plan.partition(from, to, island);
+        }
+    }
+    Ok(plan)
+}
+
+/// Build a [`ClusterConfig`] from `hthc cluster`-style flags.  Shares
+/// the `--tol/--epochs/--eval-every/--seed` spellings with `hthc
+/// train` (rounds play the role of epochs); the fault script comes
+/// from [`fault_plan_from_args`].
+pub fn cluster_config_from_args(args: &Args) -> crate::Result<ClusterConfig> {
+    Ok(ClusterConfig {
+        nodes: args.usize_or("nodes", 4),
+        local_passes: args.usize_or("local-passes", 1),
+        gap_tol: args.f64_or("tol", 1e-5),
+        max_rounds: args.u64_or("epochs", 200),
+        eval_every: args.u64_or("eval-every", 1).max(1),
+        seed: args.u64_or("seed", 42),
+        max_ticks: args.u64_or("max-ticks", 100_000),
+        initial_leader: args.usize_or("leader", 0),
+        fault: fault_plan_from_args(args)?,
+        ..Default::default()
+    })
 }
 
 /// Build the full [`Trainer`] (engine + configuration) from the flags.
@@ -90,5 +166,44 @@ mod tests {
     #[test]
     fn unknown_solver_is_an_error_not_an_exit() {
         assert!(trainer_from_args(&parse("--solver bogus")).is_err());
+    }
+
+    #[test]
+    fn cluster_defaults_match_help_text() {
+        let cfg = cluster_config_from_args(&parse("")).unwrap();
+        assert_eq!(cfg.nodes, 4);
+        assert_eq!(cfg.local_passes, 1);
+        assert_eq!(cfg.gap_tol, 1e-5);
+        assert_eq!(cfg.max_rounds, 200);
+        assert_eq!(cfg.initial_leader, 0);
+        assert_eq!(cfg.fault.drop_prob, 0.0);
+        assert!(cfg.fault.kills.is_empty());
+        assert!(cfg.fault.partitions.is_empty());
+    }
+
+    #[test]
+    fn cluster_fault_script_parses() {
+        let cfg = cluster_config_from_args(&parse(
+            "--nodes 3 --drop 0.1 --dup 0.05 --delay 4 \
+             --kill 0@20,2@50 --partition 5:150:0+1",
+        ))
+        .unwrap();
+        assert_eq!(cfg.nodes, 3);
+        assert_eq!(cfg.fault.drop_prob, 0.1);
+        assert_eq!(cfg.fault.delay_max, 4);
+        assert_eq!(cfg.fault.kills, vec![(20, 0), (50, 2)]);
+        assert_eq!(cfg.fault.partitions.len(), 1);
+        assert_eq!(cfg.fault.partitions[0].from, 5);
+        assert_eq!(cfg.fault.partitions[0].to, 150);
+        assert_eq!(cfg.fault.partitions[0].island, vec![0, 1]);
+    }
+
+    #[test]
+    fn cluster_bad_fault_scripts_are_errors() {
+        assert!(cluster_config_from_args(&parse("--kill 0-20")).is_err());
+        assert!(cluster_config_from_args(&parse("--kill x@20")).is_err());
+        assert!(cluster_config_from_args(&parse("--partition 5:150")).is_err());
+        assert!(cluster_config_from_args(&parse("--partition a:b:0")).is_err());
+        assert!(cluster_config_from_args(&parse("--drop 1.5")).is_err());
     }
 }

@@ -43,6 +43,28 @@ pub mod keys {
     pub const AUTOTUNE_M: &str = "autotune_m";
     /// Autotune: task-A scheduler tile granularity at run end (u64).
     pub const AUTOTUNE_TILE_COLS: &str = "autotune_tile_cols";
+    /// Cluster: node count `K` of the simulated run (u64).
+    pub const CLUSTER_NODES: &str = "cluster_nodes";
+    /// Cluster: rounds completed under the final leader's term (u64).
+    pub const CLUSTER_ROUNDS: &str = "cluster_rounds";
+    /// Cluster: virtual ticks the run took (u64).
+    pub const CLUSTER_TICKS: &str = "cluster_ticks";
+    /// Cluster: election attempts across all nodes (u64).
+    pub const CLUSTER_ELECTIONS: &str = "cluster_elections";
+    /// Cluster: leadership takeovers after bootstrap (u64).
+    pub const CLUSTER_FAILOVERS: &str = "cluster_failovers";
+    /// Cluster: id of the leader that produced the report (u64).
+    pub const CLUSTER_FINAL_LEADER: &str = "cluster_final_leader";
+    /// Cluster: unicasts submitted to the wire (u64).
+    pub const CLUSTER_MSGS_SENT: &str = "cluster_msgs_sent";
+    /// Cluster: messages lost to faults, partitions or death (u64).
+    pub const CLUSTER_MSGS_DROPPED: &str = "cluster_msgs_dropped";
+    /// Cluster: messages the fault plan duplicated (u64).
+    pub const CLUSTER_MSGS_DUPLICATED: &str = "cluster_msgs_duplicated";
+    /// Cluster: reliable-link retransmissions (u64).
+    pub const CLUSTER_RETRANSMITS: &str = "cluster_retransmits";
+    /// Cluster: duplicate deliveries suppressed at receivers (u64).
+    pub const CLUSTER_DEDUP_DROPPED: &str = "cluster_dedup_dropped";
 }
 
 /// One solver-specific statistic.

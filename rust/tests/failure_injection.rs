@@ -51,12 +51,23 @@ fn libsvm_fuzz_never_panics() {
 }
 
 #[test]
-fn libsvm_nan_inf_values_parse_as_floats() {
-    // rust f32 parses "nan"/"inf"; downstream validation is the
-    // trainer's job — verify the parser is at least consistent.
-    let s = libsvm::read("+1 1:inf 2:nan".as_bytes()).unwrap();
+fn libsvm_nan_inf_values_are_rejected_with_the_line() {
+    // rust f32 happily parses "nan"/"inf", but one such entry poisons
+    // every downstream norm and dot — the strict parser names the line.
+    let err = libsvm::read("+1 1:0.5\n+1 1:inf 2:nan".as_bytes()).unwrap_err();
+    assert!(format!("{err}").contains("line 2"), "{err}");
+    let err = libsvm::read("nan 1:0.5".as_bytes()).unwrap_err();
+    assert!(format!("{err}").contains("line 1"), "{err}");
+    // the escape hatch still parses them as plain floats
+    let s = libsvm::read_with("+1 1:inf 2:nan".as_bytes(), false).unwrap();
     assert!(s[0].features[0].1.is_infinite());
     assert!(s[0].features[1].1.is_nan());
+    // and the builder pipeline has the same gate + hatch for parsed
+    // samples (coordinate-attributed, since line numbers are gone)
+    let bad = vec![libsvm::Sample { label: 1.0, features: vec![(0, f32::NAN)] }];
+    let err = DatasetBuilder::libsvm_samples(bad.clone()).build().unwrap_err();
+    assert!(format!("{err}").contains("non-finite"), "{err}");
+    assert!(DatasetBuilder::libsvm_samples(bad).validate(false).build().is_ok());
 }
 
 // ---------------------------------------------------------------------------

@@ -21,6 +21,7 @@
 //! ```
 #![cfg(pallas_model_check)]
 
+use hthc::cluster::{DedupFilter, Envelope, Mailbox, Message, Packet};
 use hthc::coordinator::GapMemory;
 use hthc::data::Family;
 use hthc::glm::ModelKind;
@@ -231,6 +232,85 @@ fn tile_scheduler_drain_claims_every_tile_exactly_once() {
         }
         assert!(seen.iter().all(|&c| c == 1), "drain not exactly-once: {seen:?}");
         assert_eq!(sched.remaining(), 0);
+    });
+    let report = must_pass(res);
+    assert!(
+        report.executions > 1000,
+        "expected >1000 interleavings, explored {}",
+        report.executions
+    );
+}
+
+fn data_env(src: usize, seq: u64) -> Envelope {
+    Envelope { src, dst: 2, packet: Packet::Data { seq, msg: Message::Alive { term: seq } } }
+}
+
+/// Cluster mailbox + dedup handoff (`cluster::net`): the mailbox is the
+/// seam a real socket transport would replace, so its push/drain locking
+/// is explored here with two concurrent senders — one of which replays a
+/// sequence number, exactly what the lossy wire's duplicates and the
+/// reliable link's retransmissions produce — racing a draining receiver.
+/// No envelope may be lost, the `DedupFilter` must pass each `(src,
+/// seq)` to the application exactly once, and per-source arrival order
+/// must survive the concurrent drains.
+#[test]
+fn cluster_mailbox_reliable_link_delivers_exactly_once() {
+    let res = check(&budget(1200, 600), || {
+        let mbox = Arc::new(Mailbox::new());
+        let senders: Vec<_> = (0..2usize)
+            .map(|src| {
+                let mbox = Arc::clone(&mbox);
+                spawn(move || {
+                    for seq in 0..2u64 {
+                        mbox.push(data_env(src, seq));
+                    }
+                    if src == 1 {
+                        // wire-level duplicate of an already-sent packet
+                        mbox.push(data_env(src, 0));
+                    }
+                })
+            })
+            .collect();
+        let receiver = {
+            let mbox = Arc::clone(&mbox);
+            // bounded drains racing the pushes; leftovers are swept
+            // below once every sender joined
+            spawn(move || {
+                let mut got = Vec::new();
+                for _ in 0..4 {
+                    got.extend(mbox.drain());
+                }
+                got
+            })
+        };
+        for s in senders {
+            s.join();
+        }
+        let mut got = receiver.join();
+        got.extend(mbox.drain());
+        assert!(mbox.is_empty(), "everything pushed must be drained");
+        assert_eq!(got.len(), 5, "no envelope may be lost: {}", got.len());
+
+        // receiver-side dedup, as ReliableLink::poll applies it
+        let mut dedup = DedupFilter::new(2);
+        let mut accepted = Vec::new();
+        let mut replays = 0usize;
+        for env in &got {
+            let Packet::Data { seq, .. } = &env.packet else {
+                panic!("only data packets were sent");
+            };
+            if dedup.accept(env.src, *seq) {
+                accepted.push((env.src, *seq));
+            } else {
+                replays += 1;
+            }
+        }
+        assert_eq!(replays, 1, "exactly the one replayed packet is filtered");
+        for src in 0..2usize {
+            let seqs: Vec<u64> =
+                accepted.iter().filter(|(s, _)| *s == src).map(|&(_, q)| q).collect();
+            assert_eq!(seqs, vec![0, 1], "src {src}: per-source order lost: {accepted:?}");
+        }
     });
     let report = must_pass(res);
     assert!(

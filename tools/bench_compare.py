@@ -16,6 +16,14 @@ run (new kernels land, old ones retire).  The optional "serve" section
 is printed for visibility only: QPS and latency quantiles are
 host-absolute, so they carry no portable pass/fail threshold.
 
+The optional "convergence" section (epochs to a duality-gap target per
+engine) IS gated: epoch counts are seed-deterministic algorithm
+properties, not host measurements, so the run fails if an engine that
+reached the target in the baseline no longer does, or needs more than
+1.5x + 2 of the baseline's epochs.  Engines present in only one file
+are reported but never fail the run; snapshots written before the
+section existed skip the gate entirely.
+
 Exit status: 0 ok, 1 regression found, 2 bad input.
 """
 
@@ -34,6 +42,60 @@ def load(path):
     if not kernels:
         sys.exit(f"bench_compare: {path} has no kernel records")
     return doc, kernels
+
+
+def compare_convergence(base_doc, cand_doc):
+    """Gate the epochs-to-gap-target convergence records.
+
+    Returns (name, base, cand, ratio) failure tuples compatible with
+    the kernel failure report.  An engine regresses when it no longer
+    reaches the gap target the baseline reached, or needs more than
+    1.5 * baseline + 2 epochs (the +2 absorbs eval-cadence
+    quantization on fast-converging engines).
+    """
+    base = {
+        (r.get("engine"), r.get("dataset")): r
+        for r in base_doc.get("convergence", [])
+    }
+    cand = {
+        (r.get("engine"), r.get("dataset")): r
+        for r in cand_doc.get("convergence", [])
+    }
+    if not base or not cand:
+        if base or cand:
+            print("\nconvergence: section present in only one snapshot — gate skipped")
+        return []
+
+    failures = []
+    width = max(len(f"{e} [{d}]") for e, d in set(base) | set(cand))
+    print(f"\n{'engine':{width}}  base epochs  cand epochs")
+    for key in sorted(set(base) | set(cand)):
+        name = f"{key[0]} [{key[1]}]"
+        if key not in base:
+            print(f"{name:{width}}  (new engine, no baseline — skipped)")
+            continue
+        if key not in cand:
+            print(f"{name:{width}}  (retired: absent from candidate — skipped)")
+            continue
+        b = base[key].get("epochs_to_target")
+        c = cand[key].get("epochs_to_target")
+        if b is None:
+            # baseline never reached the target: nothing to hold the
+            # candidate to (it can only improve)
+            status = "ok" if c is not None else "(target unreached in both)"
+            print(f"{name:{width}}  {'-':>11}  {c if c is not None else '-':>11}  {status}")
+            continue
+        if c is None:
+            failures.append((name, float(b), float("inf"), float("inf")))
+            print(f"{name:{width}}  {b:11d}  {'-':>11}  << REGRESSION (target no longer reached)")
+            continue
+        limit = 1.5 * b + 2
+        mark = ""
+        if c > limit:
+            mark = f"  << REGRESSION (limit {limit:.0f})"
+            failures.append((name, float(b), float(c), c / max(b, 1)))
+        print(f"{name:{width}}  {b:11d}  {c:11d}{mark}")
+    return failures
 
 
 def main():
@@ -74,6 +136,9 @@ def main():
             failures.append((name, b, c, ratio))
         print(f"{name:{width}}  {b:8.3f}  {c:9.3f}  {ratio:5.2f}x{mark}")
 
+    conv_failures = compare_convergence(base_doc, cand_doc)
+    failures.extend(conv_failures)
+
     for doc, label in ((base_doc, "baseline"), (cand_doc, "candidate")):
         s = doc.get("serve")
         if s:
@@ -94,14 +159,14 @@ def main():
                 )
 
     if failures:
-        print(
-            f"\nFAIL: {len(failures)} kernel(s) regressed more than "
-            f"{args.tolerance:.0%} vs {args.baseline}:"
-        )
+        print(f"\nFAIL: {len(failures)} entr(y/ies) regressed vs {args.baseline}:")
         for name, b, c, ratio in failures:
             print(f"  {name}: {b:.3f} -> {c:.3f} ({ratio:.2f}x)")
         sys.exit(1)
-    print(f"\nOK: no kernel speedup regressed more than {args.tolerance:.0%}")
+    print(
+        f"\nOK: no kernel speedup regressed more than {args.tolerance:.0%} "
+        "and no engine lost convergence speed"
+    )
 
 
 if __name__ == "__main__":
